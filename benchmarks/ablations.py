@@ -1,0 +1,30 @@
+"""Paper Fig. 6 / Table 3: MANTIS component ablations."""
+
+from __future__ import annotations
+
+from repro.core.schedule import summarize
+
+from .common import Timer, csv_line, get_logs, write_output
+
+ABLATION_NAMES = ("mantis", "mntis_noA", "manis_noT", "manti_noS",
+                  "mantis_noXmem")
+
+
+def run() -> str:
+    out = {}
+    with Timer() as t:
+        # configurations where orchestration matters (paper Sec. 6.1.2):
+        # the weakest tier (with DSL) + the strongest tier
+        for cap in ("mini", "max"):
+            tier = {}
+            for name in ABLATION_NAMES:
+                s = summarize(get_logs(name, cap, ablation=True))
+                tier[name] = {"geomean": round(s["geomean"], 3),
+                              "median": round(s["median"], 3)}
+            out[cap] = tier
+    full = out["mini"]["mantis"]["geomean"]
+    worst = min(v["geomean"] for k, v in out["mini"].items()
+                if k != "mantis")
+    write_output("fig6_ablations", out)
+    return csv_line("fig6_ablations", t.us / 10,
+                    f"mini_full={full}x;mini_worst_ablation={worst}x")

@@ -1,0 +1,53 @@
+"""Paper Fig. 14 analogue: muPallas+SOL variants vs an evolutionary-archive
+baseline (the Sakana AI CUDA Engineer role), with the same integrity-filter-
+then-fallback review the paper applies to the archive (Sec. 5.9).
+
+The archive analogue: a large pool of independently-sampled raw-code
+candidates (evolutionary search without SOL guidance or the DSL), reviewed
+best-first with fallback to the next-fastest accepted kernel per problem.
+"""
+
+from __future__ import annotations
+
+from repro.core.agent import VARIANTS, best_steering_variant, run_variant
+from repro.core.integrity import review_logs
+from repro.core.problems import all_problems, problem_ids
+from repro.core.schedule import fastp, geomean
+
+from .common import Timer, csv_line, get_logs, write_output
+
+
+def _archive_best(seeds=(11, 12, 13)) -> list:
+    """Fastest ACCEPTED kernel per problem across a multi-seed raw archive
+    (review-with-fallback: rejected candidates fall through)."""
+    probs = [all_problems()[p] for p in problem_ids()]
+    per_problem = [0.0] * len(probs)
+    for seed in seeds:
+        logs = run_variant(VARIANTS["mi_raw"], probs, capability="mid",
+                           seed=seed)
+        review_logs(logs)
+        for i, log in enumerate(logs):
+            per_problem[i] = max(per_problem[i],
+                                 log.best_speedup(accepted_only=True))
+    return per_problem
+
+
+def run() -> str:
+    with Timer() as t:
+        archive = _archive_best()
+        ours = {}
+        for cap in ("mini", "mid", "max"):
+            logs = get_logs(best_steering_variant(cap), cap)
+            ours[cap] = [l.best_speedup(accepted_only=True) for l in logs]
+    out = {
+        "archive_geomean": round(geomean(archive), 3),
+        "archive_pct_over_2x": round(100 * fastp(archive, 2.0), 1),
+        "ours": {cap: {"geomean": round(geomean(sp), 3),
+                       "pct_over_2x": round(100 * fastp(sp, 2.0), 1)}
+                 for cap, sp in ours.items()},
+    }
+    write_output("fig14_archive_comparison", out)
+    return csv_line(
+        "fig14_archive_comparison", t.us / 4,
+        f"archive={out['archive_geomean']}x_vs_ours_mini="
+        f"{out['ours']['mini']['geomean']}x")

@@ -1,0 +1,67 @@
+"""Shared benchmark infrastructure: cached agent runs + output helpers."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.agent import (ABLATIONS, VARIANTS, RunLog, load_runlogs,
+                              run_variant, save_runlogs)
+from repro.core.integrity import review_logs
+from repro.core.problems import all_problems, problem_ids
+
+RUNS_DIR = os.environ.get("REPRO_RUNS_DIR", "runs")
+AGENT_DIR = os.path.join(RUNS_DIR, "agent")
+BENCH_DIR = os.path.join(RUNS_DIR, "bench")
+
+CAPABILITIES = ("mini", "mid", "max")
+
+
+def problems():
+    probs = all_problems()
+    return [probs[pid] for pid in problem_ids()]
+
+
+def get_logs(variant: str, capability: str, seed: int = 0,
+             ablation: bool = False, force: bool = False) -> List[RunLog]:
+    """Run (or load cached) one agent variant over all 59 problems, with
+    integrity labels applied."""
+    os.makedirs(AGENT_DIR, exist_ok=True)
+    path = os.path.join(AGENT_DIR, f"{variant}__{capability}__s{seed}.json")
+    if os.path.exists(path) and not force:
+        logs = load_runlogs(path)
+    else:
+        cfg = (ABLATIONS if ablation else VARIANTS)[variant]
+        logs = run_variant(cfg, problems(), capability=capability, seed=seed)
+        review_logs(logs)
+        save_runlogs(logs, path)
+    # labels are persisted; re-apply for robustness
+    review_logs(logs)
+    return logs
+
+
+def write_output(name: str, payload: Dict) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.seconds * 1e6

@@ -1,0 +1,34 @@
+"""Paper Fig. 9: best (epsilon, w) policy per variant under >=95% geomean
+retention; efficiency gain = speedup-per-token vs fixed allocation."""
+
+from __future__ import annotations
+
+from repro.core.agent import best_steering_variant
+from repro.core.schedule import best_policy, sweep
+
+from .common import CAPABILITIES, Timer, csv_line, get_logs, write_output
+
+
+def run() -> str:
+    out = {}
+    with Timer() as t:
+        for cap in CAPABILITIES:
+            for variant in ("mi_dsl", best_steering_variant(cap)):
+                logs = get_logs(variant, cap)
+                bp = best_policy(sweep(logs), min_retention=0.95)
+                if bp is None:
+                    out[f"{cap}/{variant}"] = None
+                    continue
+                out[f"{cap}/{variant}"] = {
+                    "policy": bp.policy.name,
+                    "token_savings": round(bp.token_savings, 4),
+                    "geomean_retention": round(bp.geomean_retention, 4),
+                    "efficiency_gain": round(bp.efficiency_gain(), 3),
+                }
+    gains = [v["efficiency_gain"] for v in out.values() if v]
+    savs = [v["token_savings"] for v in out.values() if v]
+    write_output("fig9_efficiency_gain", out)
+    return csv_line(
+        "fig9_efficiency_gain", t.us / max(len(out), 1),
+        f"best_gain={max(gains):.2f}x;savings_range="
+        f"{min(savs):.0%}-{max(savs):.0%}")

@@ -1,0 +1,36 @@
+"""Paper Fig. 4: Fast-p curves + Attempt-Fast-p(2) per capability tier."""
+
+from __future__ import annotations
+
+from repro.core.agent import best_steering_variant
+from repro.core.schedule import attempt_fastp, best_speedups, fastp_curve
+
+from .common import CAPABILITIES, Timer, csv_line, get_logs, write_output
+
+RS = [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0]
+
+
+def run() -> str:
+    out = {}
+    with Timer() as t:
+        for cap in CAPABILITIES:
+            tier = {}
+            for label, variant in (("MI", "mi_raw"),
+                                   ("MI+uPallas", "mi_dsl"),
+                                   ("uPallas+SOL",
+                                    best_steering_variant(cap))):
+                logs = get_logs(variant, cap)
+                sp = best_speedups(logs)
+                tier[label] = {
+                    "fastp": fastp_curve(sp, RS),
+                    "attempt_fastp_2x": attempt_fastp(logs, 2.0, 40),
+                }
+            out[cap] = tier
+    # derived: attempts for the combo to reach its 2x plateau on mini
+    curve = out["mini"]["uPallas+SOL"]["attempt_fastp_2x"]
+    plateau = curve[-1][1]
+    reach = next((a for a, v in curve if v >= 0.9 * plateau), 40)
+    write_output("fig4_fastp_curves", out)
+    return csv_line("fig4_fastp_curves", t.us / 9,
+                    f"mini_combo_2x_plateau@{reach}attempts"
+                    f"_of_{plateau:.0%}")

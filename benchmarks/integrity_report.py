@@ -1,0 +1,34 @@
+"""Paper Figs. 10-12: review outcome composition, gaming category
+breakdown, and speedup inflation without the integrity pipeline."""
+
+from __future__ import annotations
+
+from repro.core.agent import best_steering_variant
+from repro.core.integrity import category_breakdown, inflation, review_logs
+
+from .common import CAPABILITIES, Timer, csv_line, get_logs, write_output
+
+
+def run() -> str:
+    out = {"outcomes": {}, "categories": {}, "inflation": {}}
+    max_inf = 0.0
+    with Timer() as t:
+        for cap in CAPABILITIES:
+            for variant in ("mi_raw", "mi_dsl", best_steering_variant(cap)):
+                key = f"{cap}/{variant}"
+                logs = get_logs(variant, cap)
+                out["outcomes"][key] = review_logs(logs)
+                out["categories"][key] = category_breakdown(logs)
+                inf = inflation(logs)
+                out["inflation"][key] = {
+                    "filtered": round(inf.filtered_geomean, 3),
+                    "allow_pytorch_only": round(inf.allow_pytorch_only, 3),
+                    "allow_gaming": round(inf.allow_gaming, 3),
+                    "unfiltered": round(inf.unfiltered, 3),
+                    "max_inflation": round(inf.max_inflation, 2),
+                }
+                max_inf = max(max_inf, inf.allow_gaming
+                              / max(inf.filtered_geomean, 1e-9))
+    write_output("fig10_12_integrity", out)
+    return csv_line("fig10_12_integrity", t.us / 9,
+                    f"gaming_inflation_up_to={max_inf:.2f}x")

@@ -1,0 +1,87 @@
+"""SS Roofline: the 40-cell (arch x shape) table from the dry-run artifacts.
+
+Reads runs/dryrun/*.json (single-pod mesh for the table, per the brief),
+emits a markdown table + JSON with the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line lever per cell.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, cells
+
+from .common import BENCH_DIR, RUNS_DIR, Timer, csv_line, write_output
+
+DRYRUN_DIR = os.path.join(RUNS_DIR, "dryrun")
+
+LEVER_BY_BOTTLENECK = {
+    "compute": "cut recompute (remat policy) / raise MXU utilization "
+               "(larger fused matmul tiles)",
+    "memory": "fuse elementwise chains & cast activations bf16 to cut HBM "
+              "round-trips",
+    "collective": "reshard to cut all-gathers (FSDP prefetch overlap) or "
+                  "widen per-replica batch",
+}
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single"):
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run() -> str:
+    rows = []
+    n_ok = n_missing = 0
+    with Timer() as t:
+        for arch, shape in cells():
+            rec = load_cell(arch, shape)
+            if rec is None or not rec.get("ok"):
+                n_missing += 1
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "missing" if rec is None
+                             else f"failed: {rec.get('error', '?')[:80]}"})
+                continue
+            n_ok += 1
+            rl = rec["roofline"]
+            ratio = rec.get("useful_flops_ratio")
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "t_compute_s": rl["t_compute_s"],
+                "t_memory_s": rl["t_memory_s"],
+                "t_collective_s": rl["t_collective_s"],
+                "t_sol_s": rl["t_sol_s"],
+                "bottleneck": rl["bottleneck"],
+                "model_flops": rec.get("model_flops"),
+                "hlo_flops": rec["summary"]["total_flops"],
+                "useful_flops_ratio": ratio,
+                "lever": LEVER_BY_BOTTLENECK[rl["bottleneck"]],
+            })
+    # markdown table
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | useful/HLO flops |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"{r['status']} | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['bottleneck']} | "
+            f"{(r['useful_flops_ratio'] or 0):.2f} |")
+    with open(os.path.join(BENCH_DIR, "roofline_table.md"), "w") as f:
+        f.write("\n".join(lines))
+    write_output("roofline_table", {"rows": rows})
+    bn = {}
+    for r in rows:
+        if r["status"] == "ok":
+            bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    return csv_line("roofline_table", t.us / max(len(rows), 1),
+                    f"{n_ok}ok_{n_missing}missing;bottlenecks={bn}")

@@ -1,0 +1,54 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [names...]``.
+
+Each module reproduces one paper table/figure (see DESIGN.md Sec. 7) and
+prints a ``name,us_per_call,derived`` CSV line; detailed artifacts land in
+runs/bench/.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (ablations, archive_comparison, dsl_coverage,
+                   efficiency_gain, fastp_curves, integrity_report,
+                   roofline_table, scheduler_pareto, scheduler_sweep,
+                   sol_report_example, stability, steering_forms,
+                   variants_geomean)
+
+    modules = [
+        ("tab1_dsl_coverage", dsl_coverage),
+        ("a2_sol_report", sol_report_example),
+        ("fig3_variants_geomean", variants_geomean),
+        ("fig4_fastp_curves", fastp_curves),
+        ("fig5_steering_forms", steering_forms),
+        ("fig6_ablations", ablations),
+        ("fig7_scheduler_sweep", scheduler_sweep),
+        ("fig8_scheduler_pareto", scheduler_pareto),
+        ("fig9_efficiency_gain", efficiency_gain),
+        ("fig10_12_integrity", integrity_report),
+        ("fig13_stability", stability),
+        ("fig14_archive_comparison", archive_comparison),
+        ("roofline_table", roofline_table),
+    ]
+    only = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if only and name not in only:
+            continue
+        try:
+            print(mod.run(), flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

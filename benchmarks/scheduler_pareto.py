@@ -1,0 +1,34 @@
+"""Paper Fig. 8: (epsilon, w) Pareto frontiers of normalized dollar cost vs
+geomean speedup across variants and tiers."""
+
+from __future__ import annotations
+
+from repro.core.agent import best_steering_variant
+from repro.core.schedule import (dollar_cost, geomean, pareto_frontier,
+                                 sweep)
+
+from .common import CAPABILITIES, Timer, csv_line, get_logs, write_output
+
+
+def run() -> str:
+    out = {}
+    max_cost = 0.0
+    with Timer() as t:
+        frontiers = {}
+        for cap in CAPABILITIES:
+            for variant in ("mi_dsl", best_steering_variant(cap)):
+                logs = get_logs(variant, cap)
+                results = sweep(logs)
+                frontier = pareto_frontier(results, cap)
+                frontiers[f"{cap}/{variant}"] = frontier
+                full_cost = dollar_cost(sum(l.total_tokens for l in logs),
+                                        cap)
+                max_cost = max(max_cost, full_cost)
+        for key, frontier in frontiers.items():
+            out[key] = [{"norm_cost": round(c / max_cost, 4),
+                         "geomean": round(g, 3),
+                         "policy": p.name} for c, g, p in frontier]
+    n_points = sum(len(v) for v in out.values())
+    write_output("fig8_scheduler_pareto", out)
+    return csv_line("fig8_scheduler_pareto", t.us / max(n_points, 1),
+                    f"{len(out)}_frontiers_{n_points}_points")

@@ -1,0 +1,37 @@
+"""Paper Fig. 7: independent epsilon / window sweeps on the strongest
+uPallas+SOL variant."""
+
+from __future__ import annotations
+
+from repro.core.agent import best_steering_variant
+from repro.core.schedule import SchedulePolicy, replay, EPSILONS, WINDOWS
+
+from .common import Timer, csv_line, get_logs, write_output
+
+
+def run() -> str:
+    logs = get_logs(best_steering_variant("max"), "max")
+    out = {"epsilon_sweep": [], "window_sweep": []}
+    with Timer() as t:
+        for eps in EPSILONS:
+            r = replay(logs, SchedulePolicy(eps, 0))
+            out["epsilon_sweep"].append({
+                "epsilon": eps,
+                "token_savings": round(r.token_savings, 4),
+                "attempt_savings": round(r.attempt_savings, 4),
+                "geomean_retention": round(r.geomean_retention, 4),
+                "median_retention": round(r.median_retention, 4),
+            })
+        for w in WINDOWS:
+            r = replay(logs, SchedulePolicy(1.0, w))
+            out["window_sweep"].append({
+                "window": w, "epsilon": 1.0,
+                "token_savings": round(r.token_savings, 4),
+                "geomean_retention": round(r.geomean_retention, 4),
+            })
+    first = out["epsilon_sweep"][0]
+    write_output("fig7_scheduler_sweep", out)
+    return csv_line(
+        "fig7_scheduler_sweep", t.us / (len(EPSILONS) + len(WINDOWS)),
+        f"eps0.25_saves={first['token_savings']:.0%}"
+        f"@retention={first['geomean_retention']:.0%}")

@@ -1,0 +1,34 @@
+"""Paper Appendix A.2: the SOL report for KernelBench problem 001
+(4096^3 GEMM) on both the paper's H100 and the target TPU v5e."""
+
+from __future__ import annotations
+
+import os
+
+from repro.core.problems import get_problem
+from repro.core.sol import get_chip, make_report
+
+from .common import BENCH_DIR, Timer, csv_line, write_output
+
+
+def run() -> str:
+    p = get_problem("L1/1")
+    ch = p.characterization()
+    with Timer() as t:
+        rep_tpu = make_report(p.pid, ch)
+        rep_h100 = make_report(p.pid, ch, chip=get_chip("h100"))
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "sol_report_L1_1.md"), "w") as f:
+        f.write("# TPU v5e (target hardware)\n\n")
+        f.write(rep_tpu.to_markdown())
+        f.write("\n\n# H100 (paper's hardware, for A.2 comparison)\n\n")
+        f.write(rep_h100.to_markdown())
+    write_output("a2_sol_report", {
+        "tpu_v5e": rep_tpu.to_json(),
+        "h100": rep_h100.to_json(),
+    })
+    # the paper reports 0.367 ms on H100 TF32
+    h100_ms = rep_h100.steering.t_sol * 1e3
+    return csv_line("a2_sol_report", t.us / 2,
+                    f"h100_t_sol={h100_ms:.3f}ms(paper:0.367)"
+                    f";v5e_t_sol={rep_tpu.steering.t_sol*1e3:.3f}ms")

@@ -1,0 +1,36 @@
+"""Paper Fig. 13 / Sec 6.4: run-to-run variation across seeds; CV per tier."""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.core.agent import best_steering_variant
+from repro.core.schedule import summarize
+
+from .common import Timer, csv_line, get_logs, write_output
+
+SEEDS = (0, 1, 2)
+
+
+def run() -> str:
+    out = {}
+    with Timer() as t:
+        for cap in ("mini", "max"):
+            variant = best_steering_variant(cap)
+            geos = []
+            for seed in SEEDS:
+                s = summarize(get_logs(variant, cap, seed=seed))
+                geos.append(s["geomean"])
+            mu = statistics.fmean(geos)
+            sd = statistics.pstdev(geos)
+            out[cap] = {
+                "variant": variant,
+                "geomeans": [round(g, 3) for g in geos],
+                "mean": round(mu, 3),
+                "cv": round(sd / mu, 4) if mu else None,
+            }
+    # paper claim: variation decreases with model capability
+    write_output("fig13_stability", out)
+    return csv_line(
+        "fig13_stability", t.us / (2 * len(SEEDS)),
+        f"cv_mini={out['mini']['cv']};cv_max={out['max']['cv']}")

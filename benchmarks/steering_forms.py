@@ -1,0 +1,26 @@
+"""Paper Fig. 5: orchestrated vs in-prompt SOL guidance, signed areas."""
+
+from __future__ import annotations
+
+from repro.core.schedule import best_speedups, signed_area
+
+from .common import CAPABILITIES, Timer, csv_line, get_logs, write_output
+
+
+def run() -> str:
+    out = {}
+    with Timer() as t:
+        for cap in CAPABILITIES:
+            for rep in ("raw", "dsl"):
+                orch = best_speedups(get_logs(f"orch_{rep}", cap))
+                inpr = best_speedups(get_logs(f"inprompt_{rep}", cap))
+                out[f"{cap}/{rep}"] = {
+                    "signed_area_orch_minus_inprompt":
+                        round(signed_area(orch, inpr), 3),
+                }
+    # paper's reversal: for the strongest tier with the DSL, in-prompt wins
+    rev = out["max/dsl"]["signed_area_orch_minus_inprompt"]
+    weak = out["mini/raw"]["signed_area_orch_minus_inprompt"]
+    write_output("fig5_steering_forms", out)
+    return csv_line("fig5_steering_forms", t.us / 6,
+                    f"max_dsl_area={rev}(neg=reversal);mini_raw={weak}")

@@ -1,0 +1,40 @@
+"""MANTIS in action: SOL-guided optimization of one KernelBench problem,
+with the full attempt trace, integrity review, and SOL-gap readout.
+
+    PYTHONPATH=src python examples/optimize_kernel.py [problem_id]
+"""
+
+import sys
+
+from repro.core.agent import Agent, AgentConfig, CostModel
+from repro.core.integrity import review_log
+from repro.core.problems import get_problem
+
+pid = sys.argv[1] if len(sys.argv) > 1 else "L2/76"
+problem = get_problem(pid)
+print(f"problem {pid}: {problem.name} — {problem.rationale}")
+print(f"segments: {[s.name for s in problem.segments]}")
+
+agent = Agent(AgentConfig(representation="dsl", steering="orchestrated",
+                          capability="mid", budget_attempts=40))
+log = agent.optimize(problem)
+review_log(log)
+
+print(f"\nbaseline t_ref      = {log.t_ref*1e3:8.3f} ms")
+print(f"SOL (fp32 steering) = {log.t_sol*1e3:8.3f} ms")
+print(f"SOL (bf16 ceiling)  = {log.t_sol_ceiling*1e3:8.3f} ms\n")
+
+best = 0.0
+for a in log.attempts:
+    mark = ""
+    if a.ok and a.speedup > best and a.label in ("no_issues", "minor"):
+        best = a.speedup
+        mark = "  <-- new best"
+    status = f"{a.speedup:6.2f}x" if a.ok else "  FAIL "
+    print(f"  [{a.index:2d}] {status} [{a.label:12s}] "
+          f"{a.description[:60]}{mark}")
+
+t_best = log.t_ref / best
+print(f"\nbest accepted speedup: {best:.2f}x "
+      f"(gap to bf16 SOL ceiling: {t_best / log.t_sol_ceiling:.2f}x)")
+print(f"tokens spent: {log.total_tokens:,}")

@@ -1,0 +1,56 @@
+"""Quickstart: compile a muPallas kernel, check it against the reference,
+and read its SOL report.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.dsl import compile_dsl, validate_dsl
+from repro.core.problems import get_problem
+from repro.core.sol import make_report
+
+# ---------------------------------------------------------------------------
+# 1. Write a muPallas program: a bf16 GEMM with a fused bias+GELU epilogue.
+# ---------------------------------------------------------------------------
+SRC = """
+gemm().with_dtype(input=fp32, acc=fp32, output=fp32)
+  .with_arch(tpu_v5e)
+  .with_tile(m=128, n=256, k=512)
+  .with_stages(2)
+  >> bias() >> gelu()
+"""
+
+# Static validation is free — the agent runs this before burning a
+# compile/run/profile attempt.
+diags = validate_dsl(SRC)
+assert not diags, diags
+print("validation: OK")
+
+# ---------------------------------------------------------------------------
+# 2. Compile to a Pallas TPU kernel (interpret mode on CPU) and to the
+#    pure-jnp XLA reference; check they agree.
+# ---------------------------------------------------------------------------
+kernel = compile_dsl(SRC, backend="pallas")
+oracle = compile_dsl(SRC, backend="xla")
+print(f"compiled into namespace {kernel.namespace}")
+print(f"inputs: {kernel.input_names} + aux {kernel.aux_names}")
+
+rng = np.random.default_rng(0)
+a = rng.standard_normal((300, 512)).astype(np.float32)
+b = rng.standard_normal((512, 256)).astype(np.float32)
+bias = rng.standard_normal((256,)).astype(np.float32)
+
+out = np.asarray(kernel(a, b, bias))
+want = np.asarray(oracle(a, b, bias))
+err = np.abs(out - want).max()
+print(f"pallas-vs-xla max err: {err:.2e}")
+assert err < 1e-3
+
+# ---------------------------------------------------------------------------
+# 3. SOL analysis: how fast could this possibly go on a TPU v5e?
+# ---------------------------------------------------------------------------
+problem = get_problem("L1/1")          # the 4096^3 GEMM benchmark problem
+report = make_report(problem.pid, problem.characterization())
+print()
+print(report.to_markdown().split("# Structured JSON")[0])

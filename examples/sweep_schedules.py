@@ -1,0 +1,30 @@
+"""SOL-guided budget scheduling: replay a full run under (epsilon, w)
+policies and print the savings/retention frontier (paper Sec. 6.2).
+
+    PYTHONPATH=src python examples/sweep_schedules.py
+"""
+
+from repro.core.agent import VARIANTS, run_variant
+from repro.core.integrity import review_logs
+from repro.core.problems import all_problems, problem_ids
+from repro.core.schedule import (SchedulePolicy, best_policy, geomean,
+                                 replay, sweep)
+
+probs = [all_problems()[p] for p in problem_ids()[:20]]
+print(f"running uPallas+SOL agent on {len(probs)} problems ...")
+logs = run_variant(VARIANTS["orch_dsl"], probs, capability="mid")
+review_logs(logs)
+full_g = geomean([l.best_speedup() for l in logs])
+print(f"fixed-allocation geomean: {full_g:.2f}x, "
+      f"{sum(l.total_tokens for l in logs)/1e6:.2f}M tokens\n")
+
+print(f"{'policy':>18s} {'tok saved':>10s} {'retention':>10s} {'gain':>6s}")
+for eps in (0.25, 1.0, 2.0):
+    for w in (0, 8, 16):
+        r = replay(logs, SchedulePolicy(eps, w))
+        print(f"{r.policy.name:>18s} {r.token_savings:>9.0%} "
+              f"{r.geomean_retention:>9.0%} {r.efficiency_gain():>6.2f}")
+
+bp = best_policy(sweep(logs), min_retention=0.95)
+print(f"\nbest policy under >=95% retention: {bp.policy.name} "
+      f"-> {bp.token_savings:.0%} saved, gain {bp.efficiency_gain():.2f}x")

@@ -1,0 +1,42 @@
+"""End-to-end training driver: a reduced qwen2-class model for a few hundred
+steps on CPU with checkpoint/restart — the per-host body of the pod
+launcher.
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps N]
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig
+from repro.ft.supervisor import Supervisor
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+cfg = get_arch("qwen2-0.5b").reduced()
+model = build_model(cfg)
+data = DataConfig(global_batch=8, seq_len=64, vocab_size=cfg.vocab_size,
+                  kind="structured")
+sup = Supervisor(num_workers=1)
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+try:
+    out = train(
+        model, data,
+        TrainLoopConfig(steps=args.steps, ckpt_every=50,
+                        ckpt_dir=ckpt_dir, log_every=20),
+        AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        supervisor=sup)
+    first, last = out["losses"][0], out["final_loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'learning' if last < first else 'NOT learning'})")
+    print(f"supervisor: {sup.decide().kind} "
+          f"(last committed step {sup.last_committed_step})")
+finally:
+    shutil.rmtree(ckpt_dir, ignore_errors=True)

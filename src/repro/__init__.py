@@ -1,0 +1,2 @@
+"""repro: muPallas + SOL-guidance TPU kernel-optimization framework."""
+__version__ = "0.1.0"

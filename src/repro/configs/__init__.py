@@ -1,0 +1,55 @@
+"""Assigned architecture registry: 10 configs x 4 input shapes."""
+
+from typing import Dict, List
+
+from .base import ModelConfig, ShapeConfig, SHAPES, SMOKE_SHAPES, pad_vocab
+from .mistral_nemo_12b import CONFIG as MISTRAL_NEMO_12B
+from .qwen15_4b import CONFIG as QWEN15_4B
+from .command_r_plus_104b import CONFIG as COMMAND_R_PLUS_104B
+from .qwen2_05b import CONFIG as QWEN2_05B
+from .granite_moe_1b import CONFIG as GRANITE_MOE_1B
+from .mixtral_8x7b import CONFIG as MIXTRAL_8X7B
+from .zamba2_27b import CONFIG as ZAMBA2_27B
+from .whisper_tiny import CONFIG as WHISPER_TINY
+from .mamba2_13b import CONFIG as MAMBA2_13B
+from .llama32_vision_90b import CONFIG as LLAMA32_VISION_90B
+
+ARCHS: Dict[str, ModelConfig] = {
+    "mistral-nemo-12b": MISTRAL_NEMO_12B,
+    "qwen1.5-4b": QWEN15_4B,
+    "command-r-plus-104b": COMMAND_R_PLUS_104B,
+    "qwen2-0.5b": QWEN2_05B,
+    "granite-moe-1b-a400m": GRANITE_MOE_1B,
+    "mixtral-8x7b": MIXTRAL_8X7B,
+    "zamba2-2.7b": ZAMBA2_27B,
+    "whisper-tiny": WHISPER_TINY,
+    "mamba2-1.3b": MAMBA2_13B,
+    "llama-3.2-vision-90b": LLAMA32_VISION_90B,
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def arch_names() -> List[str]:
+    return list(ARCHS.keys())
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; long_500k only for sub-quadratic
+    archs unless include_skipped."""
+    out = []
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            if shape.kind == "long_decode" and not cfg.sub_quadratic \
+                    and not include_skipped:
+                continue
+            out.append((aname, sname))
+    return out
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "SMOKE_SHAPES",
+           "pad_vocab", "ARCHS", "get_arch", "arch_names", "cells"]

@@ -1,0 +1,226 @@
+"""Model configuration schema for the assigned architecture pool.
+
+One frozen dataclass covers all six families (dense / moe / hybrid / audio /
+ssm / vlm); family-specific fields default to "off".  ``reduced()`` returns
+the structurally-identical smoke-test configuration (small widths/depths,
+same family features) used by tests; the FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+VOCAB_PAD = 256     # embedding tables padded so vocab TP always divides
+
+
+def pad_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | audio | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free (ssm)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int = 0          # 0 = full attention
+    max_position: int = 131072
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    # hybrid (Zamba-2): one shared full-attention block every k SSM layers
+    shared_attn_every: int = 0
+    # encoder-decoder (Whisper): encoder frames come pre-embedded (stub)
+    encoder_layers: int = 0
+    encoder_seq: int = 0
+    # VLM: every k-th decoder layer cross-attends to patch embeddings (stub)
+    cross_attn_every: int = 0
+    vision_patches: int = 0
+    # misc
+    act: str = "swiglu"              # swiglu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    notes: str = ""
+    # ---- performance knobs (SS Perf hillclimb levers) -------------------
+    remat_policy: str = "full"       # full | dots | none
+    ssd_chunk: int = 256             # Mamba-2 SSD chunk length
+    ssd_impl: str = "parallel"       # parallel (all-chunks materialized) |
+    #                                  scan (chunk-at-a-time, VMEM-like)
+    attn_chunk_kv: int = 512         # flash-attention KV chunk (XLA path)
+    cast_params_once: bool = False   # bf16-cast params before use (halves
+    #                                  FSDP all-gather bytes)
+    prefill_last_only: bool = False  # prefill emits last-position logits
+    #                                  only (serving semantics) instead of
+    #                                  the full (B,S,V) tensor
+
+    # ---- derived -------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (linear-cost decode over context)."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window > 0)
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.num_heads > 0
+
+    # ---- parameter counting (for MODEL_FLOPS = 6*N*D) -------------------
+    def _attn_params(self) -> int:
+        hd = self.resolved_head_dim
+        q = self.d_model * self.num_heads * hd
+        kv = 2 * self.d_model * self.num_kv_heads * hd
+        o = self.num_heads * hd * self.d_model
+        b = (self.num_heads * hd + 2 * self.num_kv_heads * hd
+             if self.qkv_bias else 0)
+        return q + kv + o + b
+
+    def _mlp_params(self, d_ff: Optional[int] = None) -> int:
+        ff = d_ff or self.d_ff
+        mult = 3 if self.act == "swiglu" else 2
+        return mult * self.d_model * ff
+
+    def _ssm_params(self) -> int:
+        di, n, h = self.d_inner, self.ssm_state, self.ssm_heads
+        in_proj = self.d_model * (2 * di + 2 * n + h)
+        conv = self.conv_kernel * (di + 2 * n)
+        out_proj = di * self.d_model
+        extra = h + h + di            # A, dt bias, gate norm
+        return in_proj + conv + out_proj + extra
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count (embeddings included once)."""
+        n = self.padded_vocab * self.d_model     # embed
+        if not self.tie_embeddings:
+            n += self.padded_vocab * self.d_model  # lm head
+        per_layer_norms = 2 * self.d_model
+
+        if self.family in ("dense", "vlm", "audio"):
+            layer = self._attn_params() + self._mlp_params() + per_layer_norms
+            n += self.num_layers * layer
+            if self.family == "vlm" and self.cross_attn_every:
+                n_cross = self.num_layers // self.cross_attn_every
+                n += n_cross * (self._attn_params() + self.d_model)
+            if self.family == "audio":
+                n += self.encoder_layers * (self._attn_params()
+                                            + self._mlp_params()
+                                            + per_layer_norms)
+                n += self.num_layers * self._attn_params()  # cross attn
+        elif self.family == "moe":
+            experts = (self.num_experts_per_tok if active_only
+                       else self.num_experts)
+            layer = (self._attn_params() + per_layer_norms
+                     + self.d_model * self.num_experts          # router
+                     + experts * self._mlp_params())
+            n += self.num_layers * layer
+        elif self.family == "ssm":
+            n += self.num_layers * (self._ssm_params() + per_layer_norms)
+        elif self.family == "hybrid":
+            n += self.num_layers * (self._ssm_params() + per_layer_norms)
+            n += self._attn_params() + self._mlp_params() + per_layer_norms
+        return n
+
+    # ---- smoke-scale variant ---------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        heads = min(self.num_heads, 4) if self.num_heads else 0
+        kv = min(self.num_kv_heads, max(heads // 2, 1)) if heads else 0
+        layers = {
+            0: 0, 1: 2,
+        }.get(min(self.num_layers, 1), max(2, min(4, self.num_layers)))
+        if self.shared_attn_every:
+            layers = 4
+        if self.cross_attn_every:
+            layers = 4
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=layers,
+            d_model=64,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=16 if heads else 0,
+            d_ff=128,
+            vocab_size=512,
+            max_position=512,
+            sliding_window=min(self.sliding_window, 64)
+            if self.sliding_window else 0,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2)
+            if self.num_experts_per_tok else 0,
+            # smoke tests check decode==forward: avoid capacity drops at
+            # tiny token counts (drop behaviour is tested separately)
+            capacity_factor=4.0 if self.num_experts else 1.25,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=32 if self.encoder_seq else 0,
+            cross_attn_every=2 if self.cross_attn_every else 0,
+            vision_patches=16 if self.vision_patches else 0,
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode | long_decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind in ("decode", "long_decode")
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "long_decode"),
+}
+
+# Reduced shapes for smoke tests (same kinds, tiny dims).
+SMOKE_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 64, 2, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 64, 2, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 64, 2, "decode"),
+    "long_500k": ShapeConfig("long_500k", 128, 1, "long_decode"),
+}

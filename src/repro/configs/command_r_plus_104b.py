@@ -1,0 +1,11 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000, no bias. [hf:CohereForAI/c4ai-command-r-plus]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    num_layers=64, d_model=12288, num_heads=96, num_kv_heads=8,
+    head_dim=128, d_ff=33792, vocab_size=256000,
+    rope_theta=75e6, max_position=131072, tie_embeddings=True,
+    notes="largest dense arch in the pool; FSDP+TP stress test",
+)

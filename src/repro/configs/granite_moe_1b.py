@@ -1,0 +1,12 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    num_experts=32, num_experts_per_tok=8,
+    rope_theta=1e4, max_position=4096, tie_embeddings=True,
+    notes="fine-grained MoE: 32 experts, top-8, tiny expert d_ff",
+)

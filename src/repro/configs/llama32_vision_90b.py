@@ -1,0 +1,15 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256, cross-attention image layers every 5th layer; vision frontend
+STUB (precomputed patch embeddings). [hf:meta-llama/Llama-3.2-90B-Vision]
+
+Full attention -> long_500k skipped."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_heads=64, num_kv_heads=8,
+    head_dim=128, d_ff=28672, vocab_size=128256,
+    cross_attn_every=5, vision_patches=1024,
+    rope_theta=5e5, max_position=131072,
+    notes="decoder w/ interleaved cross-attention to patch embeddings",
+)

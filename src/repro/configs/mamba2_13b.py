@@ -1,0 +1,14 @@
+"""mamba2-1.3b [ssm] — 48L d_model=2048 attention-free, ssm_state=128,
+vocab=50280, SSD (state-space duality). [arXiv:2405.21060]
+
+Attention-free -> long_500k runs."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+    max_position=1048576, tie_embeddings=True,
+    notes="pure Mamba-2 SSD stack",
+)

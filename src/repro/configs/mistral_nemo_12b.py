@@ -1,0 +1,15 @@
+"""mistral-nemo-12b [dense] — 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072, 128k ctx. [hf:mistralai/Mistral-Nemo-Base-2407]
+
+Full attention at 128k context: quadratic, so long_500k is skipped
+(DESIGN.md SS Arch-applicability)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b", family="dense",
+    num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+    head_dim=128,                      # Nemo uses 128 (not d_model/heads=160)
+    d_ff=14336, vocab_size=131072,
+    rope_theta=1e6, max_position=131072,
+    notes="128k-context dense GQA model",
+)

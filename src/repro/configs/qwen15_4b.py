@@ -1,0 +1,11 @@
+"""qwen1.5-4b [dense] — 40L d_model=2560 20H (GQA kv=20) d_ff=6912
+vocab=151936, QKV bias. [hf:Qwen/Qwen1.5-4B]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b", family="dense",
+    num_layers=40, d_model=2560, num_heads=20, num_kv_heads=20,
+    d_ff=6912, vocab_size=151936,
+    qkv_bias=True, rope_theta=5e6, max_position=32768,
+    notes="MHA (kv == q heads) with QKV bias",
+)

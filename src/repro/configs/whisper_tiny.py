@@ -1,0 +1,15 @@
+"""whisper-tiny [audio] — 4L enc + 4L dec, d_model=384 6H d_ff=1536
+vocab=51865, enc-dec with conv frontend STUB (input_specs provides
+precomputed frame embeddings). [arXiv:2212.04356]
+
+Full attention -> long_500k skipped."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+    d_ff=1536, vocab_size=51865,
+    encoder_layers=4, encoder_seq=1500,
+    act="gelu", rope_theta=0.0, max_position=2048, tie_embeddings=True,
+    notes="enc-dec backbone; audio frontend stubbed to frame embeddings",
+)

@@ -1,0 +1,16 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 Mamba-2 backbone with ONE shared
+full-attention block (32H, d_ff=10240) applied every 6 layers, ssm_state=64,
+vocab=32000. [arXiv:2411.15242]
+
+Linear-cost SSM backbone -> long_500k runs."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    head_dim=80, d_ff=10240, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+    shared_attn_every=6, rope_theta=1e4, max_position=4096,
+    tie_embeddings=True,
+    notes="Mamba-2 layers + one weight-shared attention block",
+)

@@ -1,0 +1,1 @@
+"""Core: the paper's contribution — muPallas DSL + SOL guidance stack."""

@@ -1,0 +1,20 @@
+"""MANTIS agent stack: policies, cost model, controllers, memory, logs."""
+
+from .costmodel import CostModel, Measurement, SegmentCost
+from .mantis import Agent, AgentConfig
+from .memory import CrossProblemMemory
+from .policies import (BasePolicy, DSLPolicy, Hypothesis, RawPolicy,
+                       SOLGuidedPolicy, make_policy, PRICE_PER_MTOK,
+                       CAPABILITIES)
+from .roi import roi, triage
+from .runlog import Attempt, RunLog, load_runlogs, save_runlogs
+from .variants import ABLATIONS, VARIANTS, run_variant, best_steering_variant
+
+__all__ = [
+    "CostModel", "Measurement", "SegmentCost", "Agent", "AgentConfig",
+    "CrossProblemMemory", "BasePolicy", "DSLPolicy", "Hypothesis",
+    "RawPolicy", "SOLGuidedPolicy", "make_policy", "PRICE_PER_MTOK",
+    "CAPABILITIES", "roi", "triage", "Attempt", "RunLog", "load_runlogs",
+    "save_runlogs", "ABLATIONS", "VARIANTS", "run_variant",
+    "best_steering_variant",
+]

@@ -1,0 +1,377 @@
+"""Analytic TPU v5e performance model — the deterministic "profiler".
+
+This container has no TPU, so candidate kernels are "measured" against a
+first-principles model of the chip (the paper's NCU role).  The model is
+deliberately structural: every term comes from the hardware spec and the
+kernel configuration, so the optimization landscape has real, explainable
+optima the agents can climb toward:
+
+  * tile quantization waste          (padded M/N/K)
+  * MXU alignment efficiency         (tiles vs the 128x128 systolic array)
+  * HBM re-read amplification        (A re-read N/bn times, B re-read M/bm —
+                                      the classic tile-size trade-off)
+  * compute/DMA overlap              (max + min/stages pipelining)
+  * small-grid utilization           (too few tiles to fill the pipeline;
+                                      split-K parallel buys it back for
+                                      skinny shapes at extra reduce traffic)
+  * epilogue fusion                  (fused elementwise tails are free;
+                                      unfused ones pay a full HBM round trip)
+  * full-row-tile norm fusion        (a norm after a GEMM fuses only when
+                                      tile n spans the whole row)
+  * dtype                            (bf16 2x storage & 4x fp32 MXU rate)
+
+The same model also produces the baseline runtime ``t_ref``: the reference
+framework executes every segment separately, in fp32, with library-default
+tiles, and materializes attention scores — the TPU analogue of the paper's
+eager-PyTorch baseline.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..dsl.compiler import lower_dsl
+from ..dsl.errors import DSLError
+from ..dsl.ir import KernelIR, PipelineIR
+from ..problems.base import Problem, Segment, Solution
+from ..sol.hardware import ChipSpec, TPU_V5E, dtype_bytes
+
+LAUNCH_OVERHEAD = 5e-6        # per optimized-kernel launch
+BASELINE_OVERHEAD = 12e-6     # per baseline framework op dispatch
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _align_eff(x: int, native: int = 128) -> float:
+    """Fraction of the systolic array doing useful work for dim size x."""
+    if x <= 0:
+        return 1e-3
+    return x / _ceil_to(x, native)
+
+
+def _grid_util(tiles: float) -> float:
+    """Launch too few tiles and the HBM->VMEM pipeline never fills."""
+    return tiles / (tiles + 2.0)
+
+
+@dataclass
+class SegmentCost:
+    name: str
+    t_compute: float
+    t_memory: float
+    t_total: float
+    fused: bool = False
+    note: str = ""
+
+
+@dataclass
+class Measurement:
+    """One candidate's 'profile' (the NCU-report analogue)."""
+
+    runtime_s: float
+    ok: bool
+    error: str = ""
+    segments: List[SegmentCost] = field(default_factory=list)
+
+    @property
+    def breakdown(self) -> Dict[str, float]:
+        return {s.name: s.t_total for s in self.segments}
+
+
+class CostModel:
+    def __init__(self, chip: ChipSpec = TPU_V5E):
+        self.chip = chip
+
+    # ------------------------------------------------------------------
+    def _peak(self, dtype: str) -> float:
+        try:
+            return self.chip.peak(dtype)
+        except KeyError:
+            return self.chip.peak("fp32")
+
+    def _combine(self, tc: float, tm: float, stages: int,
+                 tiles: float) -> float:
+        overlap = max(tc, tm) + min(tc, tm) / max(stages, 1)
+        return overlap / _grid_util(tiles) + LAUNCH_OVERHEAD
+
+    # ------------------------------------------------------------------
+    # NOTE on dtypes: the problem's tensors are fp32 *as allocated* (the
+    # KernelBench convention the paper follows) — reduced-precision kernels
+    # cast on-chip, so HBM traffic stays fp32 and only the compute peak
+    # changes (paper Sec. 4.1, "FP16 augmentation").  All byte terms below
+    # therefore use 4 B/elem regardless of the kernel's compute dtype.
+    _IO_BYTES = 4
+
+    def matmul_cost(self, segment: Segment, *, bm: int, bn: int, bk: int,
+                    in_dtype: str, out_dtype: str, stages: int,
+                    split_k: int = 1, fused_eltwise_flops: float = 0.0,
+                    extra_full_aux: int = 0,
+                    operands_preconverted: bool = False) -> SegmentCost:
+        d = dict(segment.dims)
+        m, n, k = d["m"], d["n"], d["k"]
+        batch = d.get("batch", 1)
+        b_in = b_out = self._IO_BYTES
+        conversion_bytes = 0.0
+        if operands_preconverted and in_dtype in ("bf16", "fp16"):
+            # pipeline(transpose(..., fp32, bf16), gemm...): one-time
+            # fp32->bf16 scratch conversion, then 2 B/elem operand re-reads
+            b_in = dtype_bytes(in_dtype)
+            conversion_bytes = batch * (m * k + k * n) * (4 + b_in)
+        mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+        flops = 2.0 * batch * mp * np_ * kp
+        eff = _align_eff(min(bm, mp)) * _align_eff(min(bn, np_))
+        t_c = flops / (self._peak(in_dtype) * eff)
+
+        n_i, n_j = mp // bm, np_ // bn
+        a_bytes = batch * mp * kp * b_in * n_j
+        b_bytes = batch * kp * np_ * b_in * n_i
+        c_bytes = batch * mp * np_ * b_out
+        aux_bytes = extra_full_aux * batch * mp * np_ * b_in
+        t_m = (a_bytes + b_bytes + c_bytes + aux_bytes + conversion_bytes) \
+            / self.chip.hbm_bandwidth
+
+        tiles = batch * n_i * n_j * max(split_k, 1)
+        t = self._combine(t_c, t_m, stages, tiles)
+        if split_k > 1:
+            # partial accumulator writes + final reduction pass
+            red = (split_k * batch * mp * np_ * 4 * 2) / self.chip.hbm_bandwidth
+            t += red
+        return SegmentCost(segment.name, t_c, t_m, t)
+
+    def attention_cost(self, segment: Segment, *, bq: int, bkv: int,
+                       in_dtype: str, stages: int = 2,
+                       materialize_scores: bool = False) -> SegmentCost:
+        d = dict(segment.dims)
+        b, h, sq, skv, hd = d["b"], d["h"], d["sq"], d["skv"], d["d"]
+        h_kv = d.get("h_kv", h)
+        causal = bool(d.get("causal", False))
+        b_in = self._IO_BYTES
+        sqp, skvp = _ceil_to(sq, bq), _ceil_to(skv, bkv)
+        eff_causal = 0.55 if causal else 1.0
+        flops = (4.0 * b * h * sqp * skvp * hd + 5.0 * b * h * sqp * skvp) \
+            * eff_causal
+        eff = (_align_eff(min(bq, sqp)) * _align_eff(min(bkv, skvp))
+               * _align_eff(hd))
+        t_c = flops / (self._peak(in_dtype) * eff)
+
+        if materialize_scores:
+            # baseline: scores written + read twice (softmax) in fp32
+            sc = b * h * sq * skv * 4
+            io = (b * sq * h * hd * 2 + 2 * b * skv * h_kv * hd) * b_in \
+                + 4 * sc
+        else:
+            n_qb = sqp // bq
+            io = (b * sq * h * hd * 2 * b_in
+                  + 2 * b * skvp * h_kv * hd * b_in * n_qb)
+        t_m = io / self.chip.hbm_bandwidth
+        tiles = b * h * (sqp // bq)
+        t = self._combine(t_c, t_m, stages, tiles)
+        return SegmentCost(segment.name, t_c, t_m, t)
+
+    def ssd_cost(self, segment: Segment, *, chunk: int, in_dtype: str,
+                 stages: int = 2) -> SegmentCost:
+        d = dict(segment.dims)
+        b, t_len, h, p, n = d["b"], d["t"], d["h"], d["p"], d["n"]
+        b_in = self._IO_BYTES
+        c = max(chunk, 8)
+        tp = _ceil_to(t_len, c)
+        # per-token matmul work: intra-chunk quadratic + state update
+        flops = b * h * tp * (2.0 * c * (n + p) + 6.0 * n * p)
+        eff = (_align_eff(min(c, 128)) * _align_eff(n) * _align_eff(p))
+        t_c = flops / (self._peak(in_dtype) * eff)
+        io = (b * h * tp * (p + 1) + 2 * b * h * tp * n) * b_in \
+            + b * h * tp * p * b_in
+        t_m = io / self.chip.hbm_bandwidth
+        tiles = b * h          # chunk loop is sequential per (b, h)
+        t = self._combine(t_c, t_m, stages, tiles)
+        # sequential chunk-to-chunk dependency latency
+        t += (tp / c) * 1e-7
+        return SegmentCost(segment.name, t_c, t_m, t)
+
+    def memory_bound_cost(self, segment: Segment, *, in_dtype: str,
+                          out_dtype: str, overhead: float = LAUNCH_OVERHEAD,
+                          rw_factor: float = 1.0) -> SegmentCost:
+        inb, outb = segment.io_bytes(self._IO_BYTES, self._IO_BYTES)
+        t_m = (inb + outb) * rw_factor / self.chip.hbm_bandwidth
+        t_c = segment.flops() / self._peak("fp32")
+        t = max(t_m, t_c) + overhead
+        return SegmentCost(segment.name, t_c, t_m, t)
+
+    # ------------------------------------------------------------------
+    def baseline(self, problem: Problem) -> Measurement:
+        """t_ref: unfused fp32 library execution (the PyTorch analogue)."""
+        segs: List[SegmentCost] = []
+        for s in problem.segments:
+            if s.kind == "matmul":
+                c = self.matmul_cost(s, bm=512, bn=512, bk=512,
+                                     in_dtype="fp32", out_dtype="fp32",
+                                     stages=2)
+            elif s.kind == "attention":
+                c = self.attention_cost(s, bq=512, bkv=512, in_dtype="fp32",
+                                        materialize_scores=True)
+            elif s.kind == "ssd":
+                # baseline: sequential scan, no chunking (tiny matmuls)
+                c = self.ssd_cost(s, chunk=16, in_dtype="fp32")
+                c = SegmentCost(c.name, c.t_compute, c.t_memory,
+                                c.t_total * 1.5, note="sequential scan")
+            elif s.kind == "scan":
+                c = self.memory_bound_cost(s, in_dtype="fp32",
+                                           out_dtype="fp32", rw_factor=1.15,
+                                           overhead=BASELINE_OVERHEAD)
+            elif s.kind == "norm":
+                # eager normalization = multiple HBM passes (max/sub-exp-sum/
+                # div for softmax; stats + normalize for LN) vs one fused pass
+                c = self.memory_bound_cost(s, in_dtype="fp32",
+                                           out_dtype="fp32", rw_factor=2.2,
+                                           overhead=BASELINE_OVERHEAD)
+            else:
+                c = self.memory_bound_cost(s, in_dtype="fp32",
+                                           out_dtype="fp32",
+                                           overhead=BASELINE_OVERHEAD)
+            segs.append(SegmentCost(c.name, c.t_compute, c.t_memory,
+                                    c.t_total + BASELINE_OVERHEAD
+                                    - LAUNCH_OVERHEAD, note=c.note))
+        return Measurement(runtime_s=sum(c.t_total for c in segs), ok=True,
+                           segments=segs)
+
+    # ------------------------------------------------------------------
+    def evaluate(self, problem: Problem, solution: Solution) -> Measurement:
+        """Profile a candidate solution (the compile+run+profile analogue)."""
+        # Gaming shortcuts: fast, but usually NOT fast enough to beat the
+        # physical bound — most are caught by the game detector rather than
+        # the SOL-ceiling detector (paper Sec. 6.3).  The exploit's speed is
+        # a deterministic function of (problem, exploit) so inherited
+        # attempts reproduce it exactly.
+        def _u(lo: float, hi: float) -> float:
+            import zlib
+            key = f"{problem.pid}|{sorted(solution.flags)}|{solution.note}"
+            h = zlib.crc32(key.encode()) & 0xFFFF
+            return lo + (hi - lo) * (h / 0xFFFF)
+
+        from ..sol.report import make_report
+        if "constant_output" in solution.flags or \
+                any(f.startswith("skip:") for f in solution.flags):
+            ceil = make_report(problem.pid,
+                               problem.characterization()).t_sol_ceiling
+            t = max(ceil * _u(0.5, 3.0), LAUNCH_OVERHEAD)
+            return Measurement(runtime_s=t, ok=True,
+                               segments=[SegmentCost("shortcut", 0, t, t)])
+        if "input_exploit" in solution.flags:
+            ceil = make_report(problem.pid,
+                               problem.characterization()).t_sol_ceiling
+            t = max(ceil * _u(0.2, 1.0), LAUNCH_OVERHEAD)
+            return Measurement(runtime_s=t, ok=True,
+                               segments=[SegmentCost("exploit", 0, 0, t)])
+        if solution.is_passthrough():
+            # compiled library composition: op fusion beats the eager
+            # baseline without any agent-authored kernel
+            m = self.baseline(problem)
+            t = m.runtime_s * _u(0.35, 0.8)
+            return Measurement(runtime_s=t, ok=True, segments=m.segments)
+
+        segs: List[SegmentCost] = []
+        prev_matmul: Optional[Tuple[Segment, KernelIR]] = None
+        for s in problem.segments:
+            fused = solution.fused.get(s.name, False)
+            plan_src = solution.plans.get(s.name)
+            ir: Optional[KernelIR] = None
+            preconverted = False
+            if plan_src is not None:
+                try:
+                    ir_prog, _ = lower_dsl(plan_src)
+                except DSLError as e:
+                    return Measurement(runtime_s=float("inf"), ok=False,
+                                       error=f"{s.name}: {e}")
+                if isinstance(ir_prog, PipelineIR):
+                    ir = ir_prog.kernel_stages[0]
+                    preconverted = any(
+                        getattr(st, "dst_dtype", None) in ("bf16", "fp16")
+                        for st in ir_prog.stages)
+                else:
+                    ir = ir_prog
+
+            if s.kind in ("matmul",):
+                if ir is None:
+                    return Measurement(runtime_s=float("inf"), ok=False,
+                                       error=f"{s.name}: missing plan")
+                tile = ir.tile
+                bm, bn, bk = ((tile.m, tile.n, tile.k) if tile
+                              else (256, 256, 512))
+                n_full_aux = sum(1 for ep in ir.epilogues
+                                 if ep.name in ("residual_add",)
+                                 or (ep.name == "custom" and any(
+                                     k == "full" for _, k in ep.inputs)))
+                fused_fl = sum(t.flops() for t in problem.segments
+                               if t.fusable and
+                               solution.fused.get(t.name, False))
+                slices = (ir.split_k.slices
+                          if ir.split_k.mode == "parallel" else 1)
+                c = self.matmul_cost(
+                    s, bm=bm, bn=bn, bk=bk, in_dtype=ir.dtypes.input,
+                    out_dtype=ir.dtypes.output, stages=ir.stages,
+                    split_k=slices, fused_eltwise_flops=fused_fl,
+                    extra_full_aux=n_full_aux,
+                    operands_preconverted=preconverted)
+                prev_matmul = (s, ir)
+            elif s.kind == "attention":
+                if ir is None:
+                    return Measurement(runtime_s=float("inf"), ok=False,
+                                       error=f"{s.name}: missing plan")
+                bq, bkv = ((ir.block.q, ir.block.kv) if ir.block
+                           else (128, 128))
+                c = self.attention_cost(s, bq=bq, bkv=bkv,
+                                        in_dtype=ir.dtypes.input,
+                                        stages=ir.stages)
+                prev_matmul = (s, ir)
+            elif s.kind == "ssd":
+                if ir is None:
+                    return Measurement(runtime_s=float("inf"), ok=False,
+                                       error=f"{s.name}: missing plan")
+                c = self.ssd_cost(s, chunk=ir.chunk or 128,
+                                  in_dtype=ir.dtypes.input,
+                                  stages=ir.stages)
+                prev_matmul = None
+            elif s.kind == "eltwise":
+                if fused and s.fusable and prev_matmul is not None:
+                    segs.append(SegmentCost(s.name, 0.0, 0.0, 0.0,
+                                            fused=True, note="epilogue"))
+                    continue
+                dt_in = ir.dtypes.input if ir else "fp32"
+                dt_out = ir.dtypes.output if ir else "fp32"
+                c = self.memory_bound_cost(s, in_dtype=dt_in,
+                                           out_dtype=dt_out)
+                prev_matmul = None
+            elif s.kind == "norm":
+                # full-row-tile fusion: free only if the previous matmul's
+                # tile n covered the whole row
+                if fused and prev_matmul is not None:
+                    pseg, pir = prev_matmul
+                    row = dict(s.dims)["d"]
+                    tile_n = pir.tile.n if pir.tile else 256
+                    if pseg.kind == "matmul" and tile_n >= row:
+                        segs.append(SegmentCost(s.name, 0.0, 0.0, 0.0,
+                                                fused=True,
+                                                note="full-row tile"))
+                        continue
+                dt_in = ir.dtypes.input if ir else "fp32"
+                dt_out = ir.dtypes.output if ir else "fp32"
+                c = self.memory_bound_cost(s, in_dtype=dt_in,
+                                           out_dtype=dt_out)
+                prev_matmul = None
+            elif s.kind == "scan":
+                dt_in = ir.dtypes.input if ir else "fp32"
+                c = self.memory_bound_cost(s, in_dtype=dt_in,
+                                           out_dtype=dt_in, rw_factor=1.15)
+                prev_matmul = None
+            else:
+                dt_in = ir.dtypes.input if ir else "fp32"
+                c = self.memory_bound_cost(s, in_dtype=dt_in,
+                                           out_dtype="fp32")
+                prev_matmul = None
+            segs.append(c)
+        runtime = sum(c.t_total for c in segs) * max(solution.quality, 1e-3)
+        return Measurement(runtime_s=runtime, ok=True, segments=segs)

@@ -1,0 +1,314 @@
+"""MANTIS controllers (paper Sec. 4.2 / 5.5).
+
+Three controller shapes under a matched per-problem attempt budget:
+
+  * MI            — flat Measure-Implement loop (Generate-Compile-Test-Profile
+                    per attempt), with either the raw or the DSL
+                    representation.
+  * in-prompt     — the same flat loop, but the policy follows the MANTIS
+                    methodology described "in its prompt": every attempt sees
+                    the SOL report, nominates a few hypotheses, ROI-picks one.
+  * orchestrated  — explicit multi-phase pipeline with structured artifacts:
+                    iterations x (Measure, Analyze, Nominate, Triage,
+                    Implement xattempts, Summarize).
+
+Component ablations (Table 3) switch off Analyze / Triage / Summarize /
+cross-problem memory.  Gaming inheritance is modeled here: once an exploit
+becomes the best-so-far, later attempts tend to carry it forward (Sec. 6.3).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+from ..problems.base import Problem, Solution
+from ..sol.report import SOLReport, make_report
+from .costmodel import CostModel, Measurement
+from .memory import CrossProblemMemory
+from .policies import (DSLPolicy, Hypothesis, P_ADHERE_INPROMPT,
+                       P_RAW_INVALID, RawPolicy, SOLGuidedPolicy,
+                       TOKENS_INPROMPT_OVERHEAD, TOKENS_NOMINATE,
+                       TOKENS_PER_SEGMENT_RAW, TOKENS_RAW,
+                       TOKENS_SOL_ANALYSIS, TOKENS_SUMMARIZE, TOKENS_TRIAGE,
+                       sample_raw_quality)
+from .roi import triage
+from .runlog import Attempt, RunLog
+
+P_INHERIT_GAME = 0.5
+
+
+@dataclass
+class AgentConfig:
+    representation: str = "dsl"          # raw | dsl
+    steering: Optional[str] = None       # None | in_prompt | orchestrated
+    capability: str = "mid"              # mini | mid | max
+    budget_attempts: int = 40
+    iterations: int = 5                  # orchestrated outer passes
+    hyps_per_iter: int = 2
+    attempts_per_hyp: int = 4
+    components: Set[str] = field(
+        default_factory=lambda: {"M", "A", "N", "T", "I", "S"})
+    cross_problem_memory: bool = True
+    seed: int = 0
+
+    @property
+    def variant_name(self) -> str:
+        rep = "+uPallas" if self.representation == "dsl" else ""
+        if self.steering is None:
+            return f"MI{rep}"
+        return f"{self.steering}{rep}"
+
+
+class Agent:
+    def __init__(self, cfg: AgentConfig, cost_model: Optional[CostModel] = None,
+                 memory: Optional[CrossProblemMemory] = None):
+        self.cfg = cfg
+        self.cost = cost_model or CostModel()
+        self.memory = memory if memory is not None else CrossProblemMemory()
+        if cfg.steering is not None:
+            self.policy = SOLGuidedPolicy(cfg.capability, cfg.seed)
+        elif cfg.representation == "dsl":
+            self.policy = DSLPolicy(cfg.capability, cfg.seed)
+        else:
+            self.policy = RawPolicy(cfg.capability, cfg.seed)
+
+    # ------------------------------------------------------------------
+    def optimize(self, problem: Problem) -> RunLog:
+        base = self.cost.baseline(problem)
+        report = make_report(problem.pid, problem.characterization())
+        log = RunLog(
+            problem_id=problem.pid,
+            variant=self.cfg.variant_name,
+            capability=self.cfg.capability,
+            seed=self.cfg.seed,
+            t_ref=base.runtime_s,
+            t_sol=report.t_sol,
+            t_sol_ceiling=report.t_sol_ceiling,
+        )
+        import zlib
+        key = f"agent|{self.cfg.capability}|{self.cfg.seed}|{problem.pid}"
+        rng = random.Random(zlib.crc32(key.encode()))
+        state = _SearchState(problem=problem, report=report,
+                             t_ref=base.runtime_s)
+        if self.cfg.steering == "orchestrated":
+            self._run_orchestrated(problem, log, state, rng)
+        else:
+            self._run_flat(problem, log, state, rng)
+        # Summarize: persist cross-problem lessons (legitimate kernels only)
+        if "S" in self.cfg.components and self.cfg.cross_problem_memory \
+                and state.best_legit_solution is not None:
+            legit_speedup = base.runtime_s / state.best_legit_runtime
+            if legit_speedup > 1.0:
+                cfg_hint = SOLGuidedPolicy(self.cfg.capability)._config_of(
+                    state.best_legit_solution, problem)
+                self.memory.record(problem, cfg_hint, legit_speedup,
+                                   summary=f"best {legit_speedup:.2f}x")
+        return log
+
+    # ------------------------------------------------------------------
+    def _ctx(self, state: "_SearchState", attempt_idx: int) -> Dict:
+        use_sol = self.cfg.steering is not None and \
+            "A" in self.cfg.components
+        return {
+            "attempt": attempt_idx,
+            "sol_report": state.report if use_sol else None,
+            # hypotheses build on the best *legitimate* kernel — a gaming
+            # shortcut has no configuration to improve on
+            "best_solution": state.best_legit_solution,
+            "best_runtime": state.best_legit_runtime,
+            "t_ref": state.t_ref,
+            "profile": state.best_profile,
+            "memory": (self.memory if (self.cfg.cross_problem_memory and
+                                       "S" in self.cfg.components) else None),
+        }
+
+    def _tokens_for(self, problem: Problem, extra: int = 0) -> int:
+        if self.cfg.representation == "raw":
+            base = TOKENS_RAW + TOKENS_PER_SEGMENT_RAW * len(problem.segments)
+        else:
+            base = self.policy.tokens_per_attempt(problem)
+        return base + extra
+
+    def _execute(self, problem: Problem, hyp: Hypothesis,
+                 state: "_SearchState", log: RunLog, rng: random.Random,
+                 phase: str, extra_tokens: int = 0) -> None:
+        """One Generate-Compile-Test-Profile attempt."""
+        idx = len(log.attempts)
+        tokens = self._tokens_for(problem, extra_tokens)
+
+        # gaming inheritance: once the best is an exploit, carry it forward
+        inherited = False
+        sol = hyp.solution
+        if state.best_is_gaming and not sol.is_gaming() \
+                and rng.random() < P_INHERIT_GAME:
+            sol = state.best_solution
+            inherited = True
+
+        # raw representation: toolchain failures burn the attempt, and the
+        # surviving hand-written kernels carry a code-quality penalty the
+        # DSL compiler would have eliminated
+        toolchain_error = hyp.toolchain_error
+        if self.cfg.representation == "raw" and self.cfg.steering is not None:
+            if toolchain_error is None and \
+                    rng.random() < 0.8 * P_RAW_INVALID[self.cfg.capability]:
+                toolchain_error = "low-level implementation error"
+            if toolchain_error is None and sol.quality == 1.0 \
+                    and not sol.is_gaming() and not sol.is_passthrough():
+                import dataclasses as _dc
+                sol = _dc.replace(sol, quality=sample_raw_quality(
+                    self.cfg.capability, rng))
+
+        if toolchain_error is not None:
+            log.attempts.append(Attempt(
+                index=idx, phase=phase, description=hyp.description,
+                tokens=tokens, ok=False, runtime_s=float("inf"), speedup=0.0,
+                error=toolchain_error, hypothesis=hyp.description))
+            return
+
+        m = self.cost.evaluate(problem, sol)
+        if not m.ok:
+            log.attempts.append(Attempt(
+                index=idx, phase=phase, description=hyp.description,
+                tokens=tokens, ok=False, runtime_s=float("inf"), speedup=0.0,
+                error=m.error, hypothesis=hyp.description))
+            return
+        speedup = state.t_ref / m.runtime_s
+        flags = sorted(sol.flags)
+        if any("bf16" in src or "fp16" in src
+               for src in sol.plans.values()):
+            # reduced-precision compute on an fp32-specified problem: the
+            # LGD labels this a Minor Issue (math approximation), not gaming
+            flags.append("reduced_precision")
+        log.attempts.append(Attempt(
+            index=idx, phase=phase, description=hyp.description,
+            tokens=tokens, ok=True, runtime_s=m.runtime_s, speedup=speedup,
+            flags=flags, inherited=inherited,
+            hypothesis=hyp.description))
+        if m.runtime_s < state.best_runtime:
+            state.best_runtime = m.runtime_s
+            state.best_speedup = speedup
+            state.best_solution = sol
+            state.best_is_gaming = sol.is_gaming()
+        if not sol.is_gaming() and not sol.is_passthrough() \
+                and m.runtime_s < state.best_legit_runtime:
+            state.best_legit_runtime = m.runtime_s
+            state.best_legit_solution = sol
+            state.best_speedup = max(state.best_speedup, speedup)
+            state.best_profile = m
+
+    # ------------------------------------------------------------------
+    def _run_flat(self, problem: Problem, log: RunLog,
+                  state: "_SearchState", rng: random.Random) -> None:
+        extra = (TOKENS_INPROMPT_OVERHEAD
+                 if self.cfg.steering == "in_prompt" else 0)
+        fallback = DSLPolicy(self.cfg.capability, self.cfg.seed + 77)
+        while len(log.attempts) < self.cfg.budget_attempts:
+            ctx = self._ctx(state, len(log.attempts))
+            if self.cfg.steering == "in_prompt":
+                # weaker models drift off the in-prompt methodology
+                if rng.random() < P_ADHERE_INPROMPT[self.cfg.capability]:
+                    hyps = self.policy.nominate(problem, ctx, n=3)
+                    gap = state.gap()
+                    if "T" in self.cfg.components:
+                        hyps = triage(hyps, gap, 1)
+                    hyp = hyps[0]
+                elif rng.random() < 0.5 and state.best_legit_solution \
+                        is not None:
+                    # off-script drift: re-submits a variation of the
+                    # current best with no new idea (wasted attempt)
+                    hyp = Hypothesis(state.best_legit_solution,
+                                     "off-script repeat",
+                                     tokens=self.policy.tokens_per_attempt(
+                                         problem))
+                else:
+                    hyp = fallback.propose(problem, ctx)
+            else:
+                hyp = self.policy.propose(problem, ctx)
+            self._execute(problem, hyp, state, log, rng, "implement", extra)
+
+    def _run_orchestrated(self, problem: Problem, log: RunLog,
+                          state: "_SearchState", rng: random.Random) -> None:
+        cfg = self.cfg
+        for it in range(cfg.iterations):
+            if len(log.attempts) >= cfg.budget_attempts:
+                break
+            phase_tokens = 0
+            # Measure + Analyze (structured artifacts)
+            if "A" in cfg.components:
+                phase_tokens += TOKENS_SOL_ANALYSIS if it == 0 else 150
+            # Nominate
+            ctx = self._ctx(state, len(log.attempts))
+            hyps = self.policy.nominate(problem, ctx,
+                                        n=2 * cfg.hyps_per_iter)
+            phase_tokens += TOKENS_NOMINATE
+            # Triage
+            gap = state.gap()
+            if "T" in cfg.components:
+                hyps = triage(hyps, gap, cfg.hyps_per_iter)
+                phase_tokens += TOKENS_TRIAGE
+            else:
+                rng.shuffle(hyps)
+                hyps = hyps[:cfg.hyps_per_iter]
+            # Implement: fixed attempt budget per hypothesis
+            for h_i, hyp in enumerate(hyps):
+                variants = [hyp]
+                # local jitter around the hypothesis for the extra attempts
+                for v in range(cfg.attempts_per_hyp - 1):
+                    variants.append(self._jitter(problem, hyp, rng, v))
+                for v, hv in enumerate(variants):
+                    if len(log.attempts) >= cfg.budget_attempts:
+                        break
+                    extra = phase_tokens if (h_i == 0 and v == 0) else 0
+                    self._execute(problem, hv, state, log, rng,
+                                  f"iter{it}", extra)
+            # Summarize
+            if "S" in cfg.components:
+                # token cost only; lessons persisted at the end of optimize()
+                if log.attempts:
+                    log.attempts[-1].tokens += TOKENS_SUMMARIZE
+
+    def _jitter(self, problem: Problem, hyp: Hypothesis,
+                rng: random.Random, v: int) -> Hypothesis:
+        """Local exploration inside a hypothesis' attempt budget."""
+        if not isinstance(self.policy, SOLGuidedPolicy) \
+                or hyp.solution.is_gaming() or hyp.solution.is_passthrough():
+            return hyp
+        cfg = self.policy._config_of(hyp.solution, problem)
+        which = rng.choice(["stages", "tile_k", "tile_m"])
+        if which == "stages":
+            cfg["stages"] = max(1, min(4, cfg["stages"] + rng.choice([-1, 1])))
+        elif which == "tile_k" and cfg["tiles"]:
+            cfg["tiles"] = {k: (t[0], t[1],
+                                max(128, min(1024, t[2] * rng.choice([1, 2]))))
+                            for k, t in cfg["tiles"].items()}
+        elif cfg["tiles"]:
+            cfg["tiles"] = {k: (max(64, min(512, t[0] * rng.choice([1, 2]))),
+                                t[1], t[2])
+                            for k, t in cfg["tiles"].items()}
+        sol = self.policy._rebuild(problem, cfg)
+        return Hypothesis(sol, hyp.description + f" (variant {v + 1})",
+                          est_speedup=hyp.est_speedup,
+                          risk_impl=hyp.risk_impl, risk_perf=hyp.risk_perf,
+                          tokens=hyp.tokens)
+
+
+@dataclass
+class _SearchState:
+    problem: Problem
+    report: SOLReport
+    t_ref: float
+    best_runtime: float = float("inf")
+    best_speedup: float = 0.0
+    best_solution: Optional[Solution] = None
+    best_legit_runtime: float = float("inf")
+    best_legit_solution: Optional[Solution] = None
+    best_profile: Optional[Measurement] = None
+    best_is_gaming: bool = False
+
+    def gap(self) -> float:
+        if not math.isfinite(self.best_legit_runtime):
+            return 100.0
+        return self.best_legit_runtime / max(self.report.t_sol, 1e-12)

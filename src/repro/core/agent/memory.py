@@ -1,0 +1,55 @@
+"""Cross-problem memory (paper Sec. 4.2, Summarize phase).
+
+Distilled lessons from evaluated hypotheses are persisted keyed by a
+problem-family signature, so the Nominate phase of later problems can
+warm-start from concise, reusable optimization patterns.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..problems.base import Problem
+
+
+def family_signature(problem: Problem) -> Tuple[str, ...]:
+    kinds = sorted({s.kind for s in problem.segments})
+    has_fusable = any(s.fusable for s in problem.segments)
+    return tuple(kinds) + (("fusable",) if has_fusable else ())
+
+
+@dataclass
+class Lesson:
+    signature: Tuple[str, ...]
+    config_hint: Dict
+    speedup: float
+    summary: str = ""
+
+
+@dataclass
+class CrossProblemMemory:
+    lessons: List[Lesson] = field(default_factory=list)
+
+    def record(self, problem: Problem, config_hint: Dict, speedup: float,
+               summary: str = "") -> None:
+        # keep only portable keys (no per-segment names)
+        portable = {
+            "dtype": config_hint.get("dtype", "fp32"),
+            "stages": config_hint.get("stages", 2),
+            "fuse": config_hint.get("fuse", False),
+        }
+        self.lessons.append(Lesson(family_signature(problem), portable,
+                                   speedup, summary))
+
+    def lookup(self, problem: Problem) -> Optional[Dict]:
+        sig = family_signature(problem)
+        candidates = [l for l in self.lessons if l.signature == sig]
+        if not candidates:
+            # fall back: same dominant kind
+            dom = max(problem.segments, key=lambda s: s.flops()).kind
+            candidates = [l for l in self.lessons if dom in l.signature]
+        if not candidates:
+            return None
+        best = max(candidates, key=lambda l: l.speedup)
+        return dict(best.config_hint)

@@ -1,0 +1,25 @@
+"""Gap-aware ROI triage (paper Sec. 4.2, Triage phase).
+
+    ROI(h) = S_hat(h)^(1 + max(0, log10(g/5))) / (R_impl(h) * R_perf(h))
+
+The gap exponent amplifies ambition when far from SOL and encourages
+incremental gains when close to it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence
+
+from .policies import Hypothesis
+
+
+def roi(h: Hypothesis, gap: float) -> float:
+    s = max(h.est_speedup, 1e-6)
+    exponent = 1.0 + max(0.0, math.log10(max(gap, 1e-9) / 5.0))
+    return (s ** exponent) / (h.risk_impl * h.risk_perf)
+
+
+def triage(hypotheses: Sequence[Hypothesis], gap: float,
+           top_n: int) -> List[Hypothesis]:
+    return sorted(hypotheses, key=lambda h: roi(h, gap), reverse=True)[:top_n]

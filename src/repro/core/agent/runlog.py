@@ -1,0 +1,97 @@
+"""Attempt traces — the artifact the scheduler replays and the integrity
+pipeline audits (paper Sec. 5.7: "offline replay of existing run logs")."""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Attempt:
+    index: int
+    phase: str                   # measure|implement|...
+    description: str
+    tokens: int
+    ok: bool                     # toolchain succeeded (compile+run)
+    runtime_s: float             # inf when failed
+    speedup: float               # t_ref / runtime (0 when failed)
+    flags: List[str] = field(default_factory=list)
+    inherited: bool = False      # inherited a prior attempt's exploit
+    error: str = ""
+    # filled by the integrity pipeline:
+    label: str = ""              # no_issues|minor|sol_ceiling|pytorch_only|
+    #                              original_gaming|inherited_gaming
+    hypothesis: str = ""
+
+
+@dataclass
+class RunLog:
+    problem_id: str
+    variant: str
+    capability: str
+    seed: int
+    t_ref: float
+    t_sol: float                 # steering bound (fp32 formulation)
+    t_sol_ceiling: float         # bf16 ceiling (scheduling/integrity)
+    attempts: List[Attempt] = field(default_factory=list)
+
+    # ---- summaries --------------------------------------------------------
+    def best_speedup(self, upto: Optional[int] = None,
+                     accepted_only: bool = False) -> float:
+        best = 0.0
+        for a in self.attempts[:upto]:
+            if not a.ok or not math.isfinite(a.runtime_s):
+                continue
+            if accepted_only and a.label not in ("", "no_issues", "minor"):
+                continue
+            best = max(best, a.speedup)
+        return best
+
+    def best_runtime(self, upto: Optional[int] = None,
+                     accepted_only: bool = False) -> float:
+        s = self.best_speedup(upto, accepted_only)
+        return self.t_ref / s if s > 0 else float("inf")
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(a.tokens for a in self.attempts)
+
+    def tokens_upto(self, upto: int) -> int:
+        return sum(a.tokens for a in self.attempts[:upto])
+
+    @property
+    def n_attempts(self) -> int:
+        return len(self.attempts)
+
+    # ---- serialization -------------------------------------------------
+    def to_json(self) -> Dict:
+        d = asdict(self)
+        for a in d["attempts"]:
+            if not math.isfinite(a["runtime_s"]):
+                a["runtime_s"] = None
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "RunLog":
+        attempts = []
+        for a in d["attempts"]:
+            a = dict(a)
+            if a["runtime_s"] is None:
+                a["runtime_s"] = float("inf")
+            attempts.append(Attempt(**a))
+        d = dict(d)
+        d["attempts"] = attempts
+        return cls(**d)
+
+
+def save_runlogs(logs: List[RunLog], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([l.to_json() for l in logs], f)
+
+
+def load_runlogs(path: str) -> List[RunLog]:
+    with open(path) as f:
+        return [RunLog.from_json(d) for d in json.load(f)]

@@ -1,0 +1,52 @@
+"""The experimental variant matrix (paper Table 2 + Table 3 ablations)."""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict, Iterable, List, Optional
+
+from .mantis import Agent, AgentConfig
+from .memory import CrossProblemMemory
+from .costmodel import CostModel
+from .runlog import RunLog
+
+# Table 2: three controllers x with/without the DSL, matched 40 attempts.
+VARIANTS: Dict[str, AgentConfig] = {
+    "mi_raw": AgentConfig(representation="raw", steering=None),
+    "mi_dsl": AgentConfig(representation="dsl", steering=None),
+    "inprompt_raw": AgentConfig(representation="raw", steering="in_prompt"),
+    "inprompt_dsl": AgentConfig(representation="dsl", steering="in_prompt"),
+    "orch_raw": AgentConfig(representation="raw", steering="orchestrated"),
+    "orch_dsl": AgentConfig(representation="dsl", steering="orchestrated"),
+}
+
+# Table 3: component ablations of orchestrated MANTIS (+DSL).
+ABLATIONS: Dict[str, AgentConfig] = {
+    "mantis": AgentConfig(representation="dsl", steering="orchestrated"),
+    "mntis_noA": AgentConfig(representation="dsl", steering="orchestrated",
+                             components={"M", "N", "T", "I", "S"}),
+    "manis_noT": AgentConfig(representation="dsl", steering="orchestrated",
+                             components={"M", "A", "N", "I", "S"}),
+    "manti_noS": AgentConfig(representation="dsl", steering="orchestrated",
+                             components={"M", "A", "N", "T", "I"},
+                             cross_problem_memory=False),
+    "mantis_noXmem": AgentConfig(representation="dsl",
+                                 steering="orchestrated",
+                                 cross_problem_memory=False),
+}
+
+
+def run_variant(cfg: AgentConfig, problems: Iterable, *,
+                capability: str = "mid", seed: int = 0,
+                cost_model: Optional[CostModel] = None) -> List[RunLog]:
+    """Run one agent variant over a problem list with shared memory."""
+    cfg = replace(cfg, capability=capability, seed=seed)
+    memory = CrossProblemMemory()
+    agent = Agent(cfg, cost_model=cost_model, memory=memory)
+    return [agent.optimize(p) for p in problems]
+
+
+def best_steering_variant(capability: str) -> str:
+    """Paper Sec. 6.1.1: orchestrated wins except GPT-5.2 (+DSL) where
+    in-prompt is ahead — mirrored on our capability tiers."""
+    return "inprompt_dsl" if capability == "max" else "orch_dsl"

@@ -1,0 +1,1 @@
+"""Code-generation backends: Pallas TPU kernels and pure-jnp (XLA)."""

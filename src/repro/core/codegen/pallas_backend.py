@@ -1,0 +1,188 @@
+"""Pallas code-generation backend for muPallas.
+
+Routes each operator family to the hand-tuned Pallas TPU kernels in
+``repro.kernels`` with the IR's configuration (tiles, blocks, stages,
+dimension semantics) applied.  Families where XLA's native TPU lowering is
+already at the roofline (pure reductions, scans over tiny states,
+cross-entropy) fall back to the XLA emitter — the routing table below is the
+TPU analogue of the paper's "CollectiveBuilder on SM90 / cutlass_cppgen on
+SM70-89" backend split, and is documented per-op in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..dsl.ir import KernelIR
+from . import xla_backend
+from .common import JNP_DTYPE, aux_plan, emit_custom_bindings, emit_epilogue_fn, input_names
+
+# Ops with a dedicated Pallas kernel; everything else routes to XLA codegen.
+PALLAS_ROUTED = {
+    "gemm", "batched_gemm", "grouped_gemm", "conv1d", "conv2d",
+    "attention", "eltwise", "rmsnorm", "layernorm", "softmax", "ssd_scan",
+}
+XLA_ROUTED = {
+    "depthwise_conv1d", "reduce", "cumsum", "cumprod", "cross_entropy",
+}
+
+
+def _tile(ir: KernelIR):
+    if ir.tile is not None:
+        return (ir.tile.m, ir.tile.n, ir.tile.k)
+    return (256, 256, 512) if ir.op_name == "gemm" else (128, 128, 256)
+
+
+def _block(ir: KernelIR):
+    if ir.block is not None:
+        return (ir.block.q, ir.block.kv)
+    return (128, 128)
+
+
+def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
+    op = ir.op_name
+    if op in XLA_ROUTED:
+        return xla_backend.generate_kernel_source(ir, fn_name)
+    if op not in PALLAS_ROUTED:
+        raise KeyError(f"pallas backend: no route for op {op!r}")
+
+    in_dt = JNP_DTYPE[ir.dtypes.input]
+    out_dt = JNP_DTYPE[ir.dtypes.output]
+    prim = input_names(ir)
+    plan = aux_plan(ir)
+    aux_names = [name for name, _ in plan]
+    aux_kinds = tuple(kind for _, kind in plan)
+    sig = ", ".join(list(prim) + aux_names)
+
+    pre: List[str] = [
+        "from repro.kernels import ops as _kops",
+        emit_custom_bindings(ir),
+    ]
+    ep_fn = f"_epilogue_{fn_name}"
+    has_ep = bool(ir.epilogues)
+    if has_ep:
+        pre.append(emit_epilogue_fn(ir, ep_fn))
+    ep_arg = ep_fn if has_ep else "None"
+
+    body: List[str] = [f"def {fn_name}({sig}):"]
+
+    if op in ("gemm", "batched_gemm", "grouped_gemm"):
+        tile = _tile(ir)
+        kop = "gemm" if op == "gemm" else "batched_gemm"
+        cast_aux = "".join(f", {n}" for n in aux_names)
+        swap = ", swap=True" if (ir.swap and op == "gemm") else ""
+        dims = ""
+        if op == "gemm" and ir.dimension_semantics is not None:
+            dims = f", dimension_semantics={ir.dimension_semantics!r}"
+        body += [
+            f"    a = a.astype({in_dt}); b = b.astype({in_dt})",
+            f"    return _kops.{kop}(a, b{cast_aux}, tile={tile},",
+            f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+            f"        out_dtype={out_dt}{swap}{dims})",
+        ]
+    elif op in ("conv1d", "conv2d"):
+        # im2col unfold + Pallas GEMM (the TPU-idiomatic conv lowering)
+        tile = _tile(ir)
+        cast_aux = "".join(f", {n}.astype({in_dt})" for n in aux_names)
+        aux_args = "".join(f", {n}" for n in aux_names)
+        if op == "conv1d":
+            kw = int(ir.op_param("kernel_w"))
+            stride = int(ir.op_param("stride", 1))
+            body += [
+                f"    bsz, l, cin = x.shape",
+                f"    cout = w.shape[-1]",
+                f"    pad = {kw // 2}",
+                "    xp = jnp.pad(x, ((0, 0), (pad, pad), (0, 0)))",
+                f"    lo = (l + 2 * pad - {kw}) // {stride} + 1",
+                f"    idx = jnp.arange(lo)[:, None] * {stride}"
+                f" + jnp.arange({kw})[None, :]",
+                "    patches = xp[:, idx, :].reshape(bsz * lo, -1)",
+                f"    wf = w.reshape(-1, cout)",
+                f"    y = _kops.gemm(patches.astype({in_dt}),"
+                f" wf.astype({in_dt}){aux_args}, tile={tile},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},"
+                f" out_dtype={out_dt})",
+                "    return y.reshape(bsz, lo, cout)",
+            ]
+        else:
+            kh = int(ir.op_param("kernel_h"))
+            kw = int(ir.op_param("kernel_w"))
+            stride = int(ir.op_param("stride", 1))
+            body += [
+                "    bsz, h, wd, cin = x.shape",
+                "    cout = w.shape[-1]",
+                f"    ph, pw = {kh // 2}, {kw // 2}",
+                "    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))",
+                f"    ho = (h + 2 * ph - {kh}) // {stride} + 1",
+                f"    wo = (wd + 2 * pw - {kw}) // {stride} + 1",
+                f"    ih = jnp.arange(ho)[:, None] * {stride}"
+                f" + jnp.arange({kh})[None, :]",
+                f"    iw = jnp.arange(wo)[:, None] * {stride}"
+                f" + jnp.arange({kw})[None, :]",
+                "    patches = xp[:, ih[:, None, :, None],"
+                " iw[None, :, None, :], :]",
+                "    patches = patches.reshape(bsz * ho * wo,"
+                f" {kh} * {kw} * cin)",
+                "    wf = w.reshape(-1, cout)",
+                f"    y = _kops.gemm(patches.astype({in_dt}),"
+                f" wf.astype({in_dt}){aux_args}, tile={tile},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},"
+                f" out_dtype={out_dt})",
+                "    return y.reshape(bsz, ho, wo, cout)",
+            ]
+    elif op == "attention":
+        bq, bkv = _block(ir)
+        causal = bool(ir.op_param("causal", False))
+        window = int(ir.op_param("window", 0))
+        body += [
+            f"    q = q.astype({in_dt}); k = k.astype({in_dt});"
+            f" v = v.astype({in_dt})",
+            f"    x = _kops.attention(q, k, v, causal={causal},"
+            f" window={window},",
+            f"        block_q={bq}, block_kv={bkv})",
+        ]
+        if has_ep:
+            body.append(f"    x = {ep_fn}(x.astype(jnp.float32))")
+        body.append(f"    return x.astype({out_dt})")
+    elif op == "eltwise":
+        # the epilogue chain *is* the function, applied in-kernel
+        fn = ep_fn if has_ep else "(lambda x: x)"
+        body += [
+            f"    return _kops.eltwise(x.astype({in_dt}), {fn})"
+            f".astype({out_dt})",
+        ]
+        return ("\n".join(p for p in pre if p) + "\n\n"
+                + "\n".join(body) + "\n")
+    elif op == "rmsnorm":
+        eps = float(ir.op_param("eps", 1e-6))
+        body += [
+            f"    x = _kops.rmsnorm(x.astype({in_dt}), gamma, eps={eps})",
+        ]
+        if has_ep:
+            body.append(f"    x = {ep_fn}(x.astype(jnp.float32))")
+        body.append(f"    return x.astype({out_dt})")
+    elif op == "layernorm":
+        eps = float(ir.op_param("eps", 1e-5))
+        body += [
+            f"    x = _kops.layernorm(x.astype({in_dt}), gamma, beta,"
+            f" eps={eps})",
+        ]
+        if has_ep:
+            body.append(f"    x = {ep_fn}(x.astype(jnp.float32))")
+        body.append(f"    return x.astype({out_dt})")
+    elif op == "softmax":
+        body += [f"    x = _kops.softmax(x.astype({in_dt}))"]
+        if has_ep:
+            body.append(f"    x = {ep_fn}(x.astype(jnp.float32))")
+        body.append(f"    return x.astype({out_dt})")
+    elif op == "ssd_scan":
+        chunk = ir.chunk or 128
+        body += [
+            f"    x = _kops.ssd(x.astype({in_dt}), dt, a, b, c,"
+            f" chunk={chunk})",
+        ]
+        if has_ep:
+            body.append(f"    x = {ep_fn}(x.astype(jnp.float32))")
+        body.append(f"    return x.astype({out_dt})")
+
+    return "\n".join(p for p in pre if p) + "\n\n" + "\n".join(body) + "\n"

@@ -1,0 +1,94 @@
+"""Multi-stage pipeline codegen: transform stages + kernel stages.
+
+``pipeline(...)`` programs compile to drivers that run explicit transform
+stages (layout transposes with *fused* dtype conversion), then kernel stages,
+then optional transforms back — exactly the paper's pattern for kernels that
+expect a different layout/dtype than the surrounding model.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from ..dsl.ir import KernelIR, PipelineIR, TransformIR
+from . import pallas_backend, xla_backend
+from .common import aux_plan, input_names
+
+_PERMS = {
+    ("NCL", "NLC"): (0, 2, 1),
+    ("NLC", "NCL"): (0, 2, 1),
+    ("NCHW", "NHWC"): (0, 2, 3, 1),
+    ("NHWC", "NCHW"): (0, 3, 1, 2),
+}
+
+
+def _transform_expr(t: TransformIR, var: str) -> str:
+    perm = _PERMS.get((t.src_layout, t.dst_layout))
+    expr = var
+    if perm is not None:
+        expr = f"jnp.transpose({expr}, {perm})"
+    if t.dst_dtype is not None:
+        from .common import JNP_DTYPE
+        expr = f"{expr}.astype({JNP_DTYPE[t.dst_dtype]})"
+    return expr
+
+
+def generate_pipeline_source(ir: PipelineIR, backend: str) -> Tuple[str, Tuple[str, ...], Tuple[str, ...]]:
+    """Returns (source, primary_input_names, aux_input_names).
+
+    Dataflow: the first kernel stage receives the (possibly transformed)
+    driver inputs; each subsequent kernel stage receives the previous stage's
+    output as its first input plus its own remaining inputs, which are
+    appended to the driver signature with a stage suffix.
+    """
+    gen = (pallas_backend if backend == "pallas" else xla_backend)
+    pieces: List[str] = []
+    kernel_idx = 0
+    stage_fns: List[Tuple[str, KernelIR]] = []
+    for st in ir.stages:
+        if isinstance(st, KernelIR):
+            fn_name = f"_stage{kernel_idx}_fn"
+            pieces.append(gen.generate_kernel_source(st, fn_name))
+            stage_fns.append((fn_name, st))
+            kernel_idx += 1
+
+    # Build driver signature.
+    prim: List[str] = []
+    aux: List[str] = []
+    call_args: List[List[str]] = []
+    for i, (fn_name, st) in enumerate(stage_fns):
+        names = list(input_names(st))
+        aux_names = [name for name, _ in aux_plan(st)]
+        if i == 0:
+            stage_prims = [f"{n}" for n in names]
+            prim.extend(stage_prims)
+        else:
+            # first input is the previous stage's output
+            stage_prims = ["_y"] + [f"{n}_s{i}" for n in names[1:]]
+            prim.extend(f"{n}_s{i}" for n in names[1:])
+        stage_aux = [f"{n}_s{i}" if i else n for n in aux_names]
+        aux.extend(a for a in stage_aux)
+        call_args.append(stage_prims + stage_aux)
+
+    sig = ", ".join(prim + aux)
+    body: List[str] = [f"def kernel_fn({sig}):"]
+
+    ki = 0
+    first_var = prim[0] if prim else "_y"
+    cur = first_var
+    for st in ir.stages:
+        if isinstance(st, TransformIR):
+            if st.target == "input":
+                body.append(f"    {cur} = {_transform_expr(st, cur)}")
+            else:
+                body.append(f"    _y = {_transform_expr(st, '_y')}")
+        else:
+            args = list(call_args[ki])
+            if ki == 0:
+                args[0] = cur
+            body.append(f"    _y = _stage{ki}_fn({', '.join(args)})")
+            cur = "_y"
+            ki += 1
+    body.append("    return _y")
+    src = "\n\n".join(pieces) + "\n\n" + "\n".join(body) + "\n"
+    return src, tuple(prim), tuple(aux)

@@ -1,0 +1,223 @@
+"""XLA (pure-jnp) code-generation backend for muPallas.
+
+The reference path: every DSL program lowers to straightforward jnp code.
+Used (a) as the per-program oracle for the Pallas backend, (b) as the
+"library composition" baseline the integrity pipeline detects, and (c) for
+op families where XLA's native lowering is already optimal on TPU
+(pure reductions / scans), which the table in DESIGN.md documents.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..dsl.ir import KernelIR
+from .common import JNP_DTYPE, aux_plan, emit_custom_bindings, emit_epilogue_fn, input_names
+
+
+def _epilogue_call(ir: KernelIR, x_var: str = "x") -> List[str]:
+    plan = aux_plan(ir)
+    if not ir.epilogues:
+        return []
+    args = [x_var] + [
+        f"_bc({kind!r}, {name}.astype(jnp.float32), {x_var}.ndim)"
+        for name, kind in plan
+    ]
+    return [f"    {x_var} = _epilogue({', '.join(args)})"]
+
+
+def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
+    """Emit module-level source defining ``fn_name`` implementing ``ir``."""
+    f32 = "jnp.float32"
+    out_dt = JNP_DTYPE[ir.dtypes.output]
+    prec = (", precision=jax.lax.Precision.HIGHEST"
+            if ir.precision == "highest" else "")
+    prim = input_names(ir)
+    aux = [name for name, _ in aux_plan(ir)]
+    sig = ", ".join(list(prim) + aux)
+    pre: List[str] = [emit_custom_bindings(ir),
+                      emit_epilogue_fn(ir, f"_epilogue_{fn_name}")]
+    body: List[str] = [f"def {fn_name}({sig}):"]
+
+    def ep_lines():
+        lines = _epilogue_call(ir)
+        return [ln.replace("_epilogue(", f"_epilogue_{fn_name}(")
+                for ln in lines]
+
+    op = ir.op_name
+    if op == "gemm":
+        body += [
+            f"    x = jnp.dot(a.astype({f32}), b.astype({f32}){prec})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op in ("batched_gemm", "grouped_gemm"):
+        body += [
+            f"    x = jnp.einsum('gmk,gkn->gmn', a.astype({f32}),"
+            f" b.astype({f32}))",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "conv1d":
+        stride = ir.op_param("stride", 1)
+        body += [
+            f"    x = jax.lax.conv_general_dilated(",
+            f"        x.astype({f32}), w.astype({f32}),",
+            f"        window_strides=({stride},), padding='SAME',",
+            "        dimension_numbers=('NWC', 'WIO', 'NWC'))",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "depthwise_conv1d":
+        causal = bool(ir.op_param("causal", False))
+        kw = int(ir.op_param("kernel_w"))
+        pad = (f"padding=(({kw - 1}, 0),)" if causal
+               else "padding='SAME'")
+        body += [
+            "    c = x.shape[-1]",
+            f"    x = jax.lax.conv_general_dilated(",
+            f"        x.astype({f32}), w.astype({f32})[:, None, :],",
+            f"        window_strides=(1,), {pad},",
+            "        dimension_numbers=('NWC', 'WIO', 'NWC'),",
+            "        feature_group_count=c)",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "conv2d":
+        stride = ir.op_param("stride", 1)
+        body += [
+            f"    x = jax.lax.conv_general_dilated(",
+            f"        x.astype({f32}), w.astype({f32}),",
+            f"        window_strides=({stride}, {stride}), padding='SAME',",
+            "        dimension_numbers=('NHWC', 'HWIO', 'NHWC'))",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "attention":
+        causal = bool(ir.op_param("causal", False))
+        window = int(ir.op_param("window", 0))
+        body += [
+            "    b_, sq, hq, d = q.shape",
+            "    skv, hkv = k.shape[1], k.shape[2]",
+            "    if hkv != hq:",
+            "        k = jnp.repeat(k, hq // hkv, axis=2)",
+            "        v = jnp.repeat(v, hq // hkv, axis=2)",
+            f"    s = jnp.einsum('bqhd,bkhd->bhqk', q.astype({f32}),"
+            f" k.astype({f32})) / (d ** 0.5)",
+            "    q_pos = jnp.arange(sq)[:, None]",
+            "    kv_pos = jnp.arange(skv)[None, :]",
+            "    mask = jnp.ones((sq, skv), dtype=bool)",
+        ]
+        if causal:
+            body.append("    mask = mask & (kv_pos <= q_pos)")
+        if window:
+            body.append(f"    mask = mask & (kv_pos > q_pos - {window})")
+        body += [
+            "    s = jnp.where(mask[None, None], s, -1e30)",
+            "    p = jax.nn.softmax(s, axis=-1)",
+            f"    x = jnp.einsum('bhqk,bkhd->bqhd', p, v.astype({f32}))",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "eltwise":
+        body += [
+            f"    x = x.astype({f32})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "rmsnorm":
+        eps = float(ir.op_param("eps", 1e-6))
+        body += [
+            f"    xf = x.astype({f32})",
+            "    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)",
+            f"    x = xf * jax.lax.rsqrt(ms + {eps}) * gamma.astype({f32})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "layernorm":
+        eps = float(ir.op_param("eps", 1e-5))
+        body += [
+            f"    xf = x.astype({f32})",
+            "    mu = jnp.mean(xf, axis=-1, keepdims=True)",
+            "    var = jnp.var(xf, axis=-1, keepdims=True)",
+            f"    x = (xf - mu) * jax.lax.rsqrt(var + {eps})"
+            f" * gamma.astype({f32}) + beta.astype({f32})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "softmax":
+        axis = int(ir.op_param("axis", -1))
+        body += [
+            f"    x = jax.nn.softmax(x.astype({f32}), axis={axis})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "reduce":
+        red = str(ir.op_param("op"))
+        axis = int(ir.op_param("axis", -1))
+        jnp_fn = {"sum": "sum", "max": "max", "mean": "mean",
+                  "min": "min"}[red]
+        body += [
+            f"    x = jnp.{jnp_fn}(x.astype({f32}), axis={axis})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "cumsum":
+        axis = int(ir.op_param("axis", -1))
+        reverse = bool(ir.op_param("reverse", False))
+        exclusive = bool(ir.op_param("exclusive", False))
+        body.append(f"    xf = x.astype({f32})")
+        if reverse:
+            body.append(f"    xf = jnp.flip(xf, axis={axis})")
+        body.append(f"    x = jnp.cumsum(xf, axis={axis})")
+        if exclusive:
+            body.append(
+                f"    x = jnp.concatenate([jnp.zeros_like("
+                f"jnp.take(x, jnp.array([0]), axis={axis})),"
+                f" jnp.take(x, jnp.arange(x.shape[{axis}] - 1),"
+                f" axis={axis})], axis={axis})")
+        if reverse:
+            body.append(f"    x = jnp.flip(x, axis={axis})")
+        body += [*ep_lines(), f"    return x.astype({out_dt})"]
+    elif op == "cumprod":
+        axis = int(ir.op_param("axis", -1))
+        body += [
+            f"    x = jnp.cumprod(x.astype({f32}), axis={axis})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "cross_entropy":
+        reduction = str(ir.op_param("reduction", "mean"))
+        body += [
+            f"    lf = logits.astype({f32})",
+            "    lse = jax.scipy.special.logsumexp(lf, axis=-1)",
+            "    nll = lse - jnp.take_along_axis("
+            "lf, labels[:, None], axis=-1)[:, 0]",
+        ]
+        if reduction == "mean":
+            body.append("    x = jnp.mean(nll)")
+        elif reduction == "sum":
+            body.append("    x = jnp.sum(nll)")
+        else:
+            body.append("    x = nll")
+        body += [*ep_lines(), f"    return x.astype({out_dt})"]
+    elif op == "ssd_scan":
+        body += [
+            "    from repro.kernels.ref import ssd_scan_ref as _ssd_ref",
+            "    bsz, t, h, p = x.shape",
+            "    n = b.shape[-1]",
+            f"    xbar = (x * dt[..., None]).astype({f32})",
+            "    da = dt * a[None, None, :]",
+            "    xf = jnp.swapaxes(xbar, 1, 2).reshape(bsz * h, t, p)",
+            "    daf = jnp.swapaxes(da, 1, 2).reshape(bsz * h, t)",
+            "    bf = jnp.repeat(b[:, None], h, axis=1).reshape(bsz * h, t, n)",
+            "    cf = jnp.repeat(c[:, None], h, axis=1).reshape(bsz * h, t, n)",
+            "    y = _ssd_ref(xf, daf, bf, cf)",
+            "    x = jnp.swapaxes(y.reshape(bsz, h, t, p), 1, 2)",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    else:
+        raise KeyError(f"xla backend: no emitter for op {op!r}")
+
+    return "\n".join(p for p in pre if p) + "\n\n" + "\n".join(body) + "\n"

@@ -1,0 +1,20 @@
+"""muPallas: a compact, statically-validated DSL for TPU Pallas kernels."""
+
+from .compiler import (CompiledKernel, compile_dsl, validate_dsl, lower_dsl,
+                       clear_cache, BACKENDS)
+from .errors import Diagnostic, DSLError, DSLSyntaxError, DSLValidationError
+from .grammar import grammar_text, prompt_spec, grammar_stats
+from .ir import (AttnBlock, DTypes, EpilogueIR, KernelIR, Layout, PipelineIR,
+                 SplitK, Tile, TransformIR, namespace_of)
+from .parser import parse
+from .stdlib import CONFIGS, EPILOGUES, OPS
+
+__all__ = [
+    "CompiledKernel", "compile_dsl", "validate_dsl", "lower_dsl",
+    "clear_cache", "BACKENDS",
+    "Diagnostic", "DSLError", "DSLSyntaxError", "DSLValidationError",
+    "grammar_text", "prompt_spec", "grammar_stats",
+    "AttnBlock", "DTypes", "EpilogueIR", "KernelIR", "Layout", "PipelineIR",
+    "SplitK", "Tile", "TransformIR", "namespace_of",
+    "parse", "CONFIGS", "EPILOGUES", "OPS",
+]

@@ -1,0 +1,54 @@
+"""AST for the muPallas DSL (untyped parse tree; the typed form is ir.py)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
+
+Value = Union[int, float, str, bool, Dict[str, str]]
+
+
+@dataclass
+class Call:
+    """A generic ``name(arg, kw=value, ...)`` call."""
+
+    name: str
+    args: List[Value] = field(default_factory=list)
+    kwargs: Dict[str, Value] = field(default_factory=dict)
+    line: int = 0
+
+    def __str__(self) -> str:
+        parts = [repr(a) if isinstance(a, str) else str(a) for a in self.args]
+        parts += [f"{k}={v}" for k, v in self.kwargs.items()]
+        return f"{self.name}({', '.join(parts)})"
+
+
+@dataclass
+class KernelNode:
+    """operation { .with_* } { >> epilogue }"""
+
+    op: Call
+    configs: List[Call] = field(default_factory=list)
+    epilogues: List[Call] = field(default_factory=list)
+    line: int = 0
+
+
+@dataclass
+class TransformNode:
+    """transpose(target, src_layout, dst_layout [, src_dtype, dst_dtype])"""
+
+    target: str          # "input" | "output"
+    src_layout: str
+    dst_layout: str
+    src_dtype: Optional[str] = None
+    dst_dtype: Optional[str] = None
+    line: int = 0
+
+
+@dataclass
+class PipelineNode:
+    stages: List[Union[KernelNode, TransformNode]] = field(default_factory=list)
+    line: int = 0
+
+
+Program = Union[KernelNode, PipelineNode]

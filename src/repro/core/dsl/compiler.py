@@ -1,0 +1,130 @@
+"""The muPallas compiler driver.
+
+parse -> lower to typed ConfigIR -> validate constraints -> emit Python
+source for the chosen backend -> exec into a callable.  Each compilation
+lands in a deterministic namespace derived from a hash of the configuration
+(``upallas_<hash>``); the original DSL source is embedded as a comment for
+traceability; results are cached so repeated attempts with identical
+configurations are free (paper Sec. 3, "Compilation").
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..codegen import pallas_backend, pipeline as pipeline_gen, xla_backend
+from ..codegen.common import aux_plan, full_signature, header
+from .errors import Diagnostic, DSLError, DSLSyntaxError, DSLValidationError
+from .ir import KernelIR, PipelineIR, ProgramIR, namespace_of
+from .parser import parse
+from .validator import lower_and_validate
+
+BACKENDS = ("pallas", "xla")
+
+
+@dataclass
+class CompiledKernel:
+    namespace: str
+    backend: str
+    ir: ProgramIR
+    source: str
+    fn: Callable
+    input_names: Tuple[str, ...]
+    aux_names: Tuple[str, ...]
+    warnings: List[Diagnostic] = field(default_factory=list)
+    dsl_source: str = ""
+    compile_seconds: float = 0.0
+
+    @property
+    def all_input_names(self) -> Tuple[str, ...]:
+        return self.input_names + self.aux_names
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+_CACHE: Dict[Tuple[str, str], CompiledKernel] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def validate_dsl(src: str) -> List[Diagnostic]:
+    """Static validation only: returns diagnostics (empty list == valid).
+
+    This is the cheap pre-attempt check the paper's agents run before
+    triggering the compile/run/profile toolchain.
+    """
+    try:
+        ast = parse(src)
+    except DSLSyntaxError as e:
+        return [e.diagnostic]
+    try:
+        lower_and_validate(ast)
+    except DSLValidationError as e:
+        return e.diagnostics
+    return []
+
+
+def lower_dsl(src: str) -> Tuple[ProgramIR, List[Diagnostic]]:
+    """Parse + lower + validate; raises DSLError on failure."""
+    ast = parse(src)
+    return lower_and_validate(ast)
+
+
+def compile_dsl(src: str, backend: str = "pallas", *,
+                build_dir: Optional[str] = None,
+                use_cache: bool = True) -> CompiledKernel:
+    """Compile a muPallas program into a callable kernel."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    t0 = time.perf_counter()
+    ir, warnings = lower_dsl(src)
+    namespace = namespace_of(ir)
+    cache_key = (namespace, backend)
+    if use_cache and cache_key in _CACHE:
+        return _CACHE[cache_key]
+
+    if isinstance(ir, PipelineIR):
+        body, prim, aux = pipeline_gen.generate_pipeline_source(ir, backend)
+    else:
+        gen = pallas_backend if backend == "pallas" else xla_backend
+        body = gen.generate_kernel_source(ir, "kernel_fn")
+        prim, aux = full_signature(ir)
+
+    source = header(namespace, src, backend) + "\n" + body
+
+    scope: Dict[str, object] = {}
+    try:
+        exec(compile(source, f"<{namespace}>", "exec"), scope)  # noqa: S102
+    except Exception as e:  # codegen bug — surface with full context
+        raise DSLError(
+            f"internal codegen error for {namespace}: {e}\n"
+            f"--- generated source ---\n{source}") from e
+    fn = scope["kernel_fn"]
+
+    if build_dir:
+        os.makedirs(build_dir, exist_ok=True)
+        with open(os.path.join(build_dir, f"{namespace}_{backend}.py"),
+                  "w") as f:
+            f.write(source)
+
+    result = CompiledKernel(
+        namespace=namespace,
+        backend=backend,
+        ir=ir,
+        source=source,
+        fn=fn,
+        input_names=prim,
+        aux_names=aux,
+        warnings=warnings,
+        dsl_source=src,
+        compile_seconds=time.perf_counter() - t0,
+    )
+    if use_cache:
+        _CACHE[cache_key] = result
+    return result

@@ -1,0 +1,46 @@
+"""Diagnostics for the muPallas DSL.
+
+The paper (Sec. 3, "Compilation"): "When validation fails, we try to explain
+what went wrong and why, so the model can often fix the specification before
+triggering a compile/run/profile attempt."  Every diagnostic therefore carries
+a machine-readable code, a human message, and a *hint* explaining the fix.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    code: str          # e.g. "E_TILE_ALIGN"
+    message: str       # what went wrong
+    hint: str = ""     # why / how to fix
+    line: Optional[int] = None
+    col: Optional[int] = None
+
+    def __str__(self) -> str:
+        loc = f" (line {self.line})" if self.line is not None else ""
+        hint = f"\n    hint: {self.hint}" if self.hint else ""
+        return f"[{self.code}]{loc} {self.message}{hint}"
+
+
+class DSLError(Exception):
+    """Base class for all muPallas front-end errors."""
+
+
+class DSLSyntaxError(DSLError):
+    def __init__(self, message: str, line: int = 0, col: int = 0,
+                 hint: str = ""):
+        self.diagnostic = Diagnostic("E_SYNTAX", message, hint, line, col)
+        super().__init__(str(self.diagnostic))
+
+
+class DSLValidationError(DSLError):
+    def __init__(self, diagnostics: List[Diagnostic]):
+        self.diagnostics = list(diagnostics)
+        super().__init__(
+            "muPallas validation failed:\n" +
+            "\n".join(f"  {d}" for d in self.diagnostics)
+        )

@@ -1,0 +1,203 @@
+'''The muPallas grammar — the compact, in-context-learnable specification.
+
+This is the TPU adaptation of the paper's ~170-line muCUTLASS EBNF
+(Appendix A.1), including the compiler-enforced constraint annotations.
+``grammar_text()`` returns the EBNF; ``prompt_spec()`` returns the short
+in-context prompt (grammar + examples) an agent would be given — the paper's
+"learnable entirely in context" requirement is measured against this string.
+'''
+
+EBNF = r"""
+(* muPallas DSL Grammar (EBNF) — TPU/Pallas adaptation of muCUTLASS *)
+(* Clean, unquoted syntax — no string quotes except custom expressions *)
+
+(* TOP-LEVEL *)
+start   = kernel | pipeline ;
+kernel  = operation , { configuration } , { epilogue } ;
+
+(* PIPELINES *)
+pipeline        = "pipeline(" , stage , { "," , stage } , ")" ;
+stage           = transform_stage | kernel_stage ;
+kernel_stage    = operation , { configuration } , { epilogue } ;
+transform_stage = transpose_op ;
+
+(* Transpose with optional FUSED dtype conversion:
+ *   transpose(input, NCL, NLC)               — same dtype
+ *   transpose(input, NCL, NLC, fp32, bf16)   — fp32 -> bf16 conversion
+ *   transpose(output, NLC, NCL, bf16, fp32)  — back-conversion
+ * Dtype conversion is fused with the transpose (essentially free).
+ *)
+transpose_op = "transpose(" , ("input"|"output") , "," , LAYOUT_3D , ","
+             , LAYOUT_3D , [ "," , DTYPE , "," , DTYPE ] , ")" ;
+LAYOUT_3D    = "NCL" | "NLC" | "NCHW" | "NHWC" ;
+
+(* OPERATIONS *)
+operation = gemm_op | batched_gemm_op | grouped_gemm_op
+          | conv1d_op | depthwise_conv1d_op | conv2d_op
+          | attention_op | rmsnorm_op | layernorm_op | softmax_op
+          | reduce_op | cumsum_op | cumprod_op | cross_entropy_op
+          | ssd_scan_op ;
+
+gemm_op            = "gemm()" ;
+batched_gemm_op    = "batched_gemm()" ;
+grouped_gemm_op    = "grouped_gemm(" , "expert_count=" , INTEGER , ")" ;
+conv1d_op          = "conv1d(" , "kernel_w=" , INTEGER
+                   , [ "," , "stride=" , INTEGER ] , ")" ;
+depthwise_conv1d_op= "depthwise_conv1d(" , "kernel_w=" , INTEGER
+                   , [ "," , "causal=" , BOOL ] , ")" ;
+conv2d_op          = "conv2d(" , "kernel_h=" , INTEGER , ","
+                   , "kernel_w=" , INTEGER , [ "," , "stride=" , INTEGER ] , ")" ;
+attention_op       = "attention(" , [ "causal=" , BOOL ]
+                   , [ "," , "window=" , INTEGER ] , ")" ;
+rmsnorm_op         = "rmsnorm(" , [ "eps=" , FLOAT ] , ")" ;
+layernorm_op       = "layernorm(" , [ "eps=" , FLOAT ] , ")" ;
+softmax_op         = "softmax(" , [ "axis=" , INTEGER ] , ")" ;
+reduce_op          = "reduce(" , "op=" , REDUCE_KIND
+                   , [ "," , "axis=" , INTEGER ] , ")" ;
+cumsum_op          = "cumsum(" , [ "axis=" , INTEGER ]
+                   , [ "," , "reverse=" , BOOL ]
+                   , [ "," , "exclusive=" , BOOL ] , ")" ;
+cumprod_op         = "cumprod(" , [ "axis=" , INTEGER ] , ")" ;
+cross_entropy_op   = "cross_entropy(" , [ "reduction=" , RED_MODE ] , ")" ;
+ssd_scan_op        = "ssd_scan(" , "d_state=" , INTEGER , ")" ;
+
+(* CONFIGURATION — all explicit and named; no hidden defaults to guess *)
+configuration = dtype_config | arch_config | tile_config | block_config
+              | chunk_config | layout_config | stages_config
+              | split_k_config | swap_config | vmem_config
+              | dimsem_config | precision_config ;
+
+dtype_config   = ".with_dtype(" , "input=" , DTYPE , "," , "acc=" , DTYPE
+               , "," , "output=" , DTYPE , ")" ;
+arch_config    = ".with_arch(" , ARCH , ")" ;
+tile_config    = ".with_tile(" , "m=" , INTEGER , "," , "n=" , INTEGER
+               , "," , "k=" , INTEGER , ")" ;
+block_config   = ".with_block(" , "q=" , INTEGER , "," , "kv=" , INTEGER , ")" ;
+chunk_config   = ".with_chunk(" , INTEGER , ")" ;
+layout_config  = ".with_layout(" , "A=" , MM_LAYOUT , "," , "B=" , MM_LAYOUT
+               , "," , "C=" , MM_LAYOUT , ")" ;
+stages_config  = ".with_stages(" , INTEGER , ")" ;
+split_k_config = ".with_split_k(" , "mode=" , SPLIT_K , ","
+               , "slices=" , INTEGER , ")" ;
+swap_config    = ".with_swap(" , BOOL , ")" ;
+vmem_config    = ".with_vmem_limit(" , INTEGER , ")" ;   (* MiB *)
+dimsem_config  = ".with_dimension_semantics(" , DIMSEM , { "," , DIMSEM } , ")" ;
+precision_config = ".with_precision(" , ("default"|"highest") , ")" ;
+
+(* EPILOGUE *)
+epilogue    = ">>" , epilogue_op ;
+epilogue_op = simple_act | param_act | broadcast_op | fusion_op | custom_op ;
+simple_act  = "relu()" | "gelu()" | "silu()" | "sigmoid()" | "tanh()"
+            | "mish()" | "hardswish()" ;
+param_act   = "leaky_relu(" , [ "alpha=" , FLOAT ] , ")"
+            | "elu(" , [ "alpha=" , FLOAT ] , ")"
+            | "clip(" , "min=" , FLOAT , "," , "max=" , FLOAT , ")"
+            | "clamp(" , "min=" , FLOAT , "," , "max=" , FLOAT , ")"
+            | "scale(" , "value=" , FLOAT , ")" ;
+broadcast_op= "bias()" | "per_channel_scale()" | "per_row_scale()"
+            | "per_col_scale()" ;
+fusion_op   = "residual_add()" ;
+custom_op   = "custom(" , STRING , [ "," , "inputs=" , input_dict ] , ")" ;
+input_dict  = "{" , STRING , ":" , STRING , { "," , STRING , ":" , STRING } , "}" ;
+(* custom input specs: 'col_vector' | 'row_vector' | 'full' *)
+
+(* TERMINALS *)
+DTYPE       = "fp32" | "float32" | "bf16" | "bfloat16" | "fp16" | "float16"
+            | "fp8_e4m3" | "e4m3" | "fp8_e5m2" | "e5m2"
+            | "int8" | "s8" | "int16" | "int32" ;
+ARCH        = "tpu_v4" | "tpu_v5e" | "tpu_v5p" ;
+MM_LAYOUT   = "RowMajor" | "ColumnMajor" ;
+REDUCE_KIND = "sum" | "max" | "mean" | "min" ;
+RED_MODE    = "mean" | "sum" | "none" ;
+SPLIT_K     = "none" | "serial" | "parallel" ;
+DIMSEM      = "parallel" | "arbitrary" ;
+BOOL        = "true" | "false" ;
+INTEGER     = DIGIT , { DIGIT } ;
+FLOAT       = [ "-" ] , INTEGER , [ "." , INTEGER ] ;
+STRING      = "'" , { ANY_CHAR - "'" } , "'" ;
+
+(* CONSTRAINTS (compiler-enforced — TPU analogues of the SM90 rules):
+ *
+ * REQUIRED: .with_dtype().  .with_arch() defaults to tpu_v5e.
+ *
+ * ARCH-GATED:
+ *   fp8_e4m3 / fp8_e5m2 inputs: tpu_v5p only
+ *   custom() epilogues: tpu_v5+ (like paper's SM90a gating)
+ *
+ * TPU LAYOUT RULES (lane/sublane packing):
+ *   1. tile n and k must be multiples of 128 (VMEM lane count)
+ *   2. tile m must be a multiple of the sublane packing:
+ *        fp32 -> 8, bf16/fp16 -> 16, int8/fp8 -> 32
+ *   3. attention blocks: q %% sublane, kv %% 128
+ *   4. scan chunk %% sublane
+ *
+ * VMEM CAPACITY (explicit math in the error message):
+ *   stages*(m*k + k*n)*sizeof(input) + m*n*4 (fp32 accumulator)
+ *     + epilogue aux tiles  <=  VMEM budget (64 MiB on tpu_v5e)
+ *
+ * ACCUMULATOR: acc=fp32 for float inputs, acc=int32 for int8 inputs
+ *   (the MXU accumulates fp32/int32 — narrower acc is rejected).
+ *
+ * .with_swap(true): fp32 GEMM only benefit; REQUIRES square output
+ *   (M == N) — runtime-checked, like the paper's operand-swap rule.
+ *
+ * .with_dimension_semantics: reduction grid dims must be 'arbitrary'
+ *   (sequential); independent dims may be 'parallel' (Megacore).
+ *
+ * TEMPLATE (bf16 GEMM + fused bias/gelu epilogue):
+ *   gemm().with_dtype(input=bf16, acc=fp32, output=bf16)
+ *     .with_arch(tpu_v5e).with_tile(m=256, n=256, k=512)
+ *     .with_stages(2) >> bias() >> gelu()
+ *
+ * TEMPLATE (fp32 square GEMM with operand swap):
+ *   gemm().with_dtype(input=fp32, acc=fp32, output=fp32)
+ *     .with_tile(m=128, n=128, k=256).with_swap(true)
+ *
+ * TEMPLATE (pipeline with layout/dtype transform):
+ *   pipeline(transpose(input, NCL, NLC, fp32, bf16),
+ *            conv1d(kernel_w=4).with_dtype(input=bf16, acc=fp32, output=bf16),
+ *            transpose(output, NLC, NCL, bf16, fp32))
+ *)
+"""
+
+EXAMPLES = """
+# GEMM with fused epilogue chain (one HBM round-trip)
+gemm().with_dtype(input=bf16, acc=fp32, output=bf16)
+  .with_arch(tpu_v5e).with_tile(m=256, n=256, k=512).with_stages(2)
+  >> bias() >> gelu()
+
+# Causal sliding-window attention, blocked for VMEM
+attention(causal=true, window=4096)
+  .with_dtype(input=bf16, acc=fp32, output=bf16)
+  .with_block(q=128, kv=512)
+
+# MoE expert GEMM (8 experts) with SwiGLU-style custom epilogue
+grouped_gemm(expert_count=8)
+  .with_dtype(input=bf16, acc=fp32, output=bf16)
+  .with_tile(m=128, n=128, k=256)
+  >> custom('x * sigmoid(g)', inputs={'g': 'full'})
+
+# Mamba-2 SSD scan, 128-token chunks
+ssd_scan(d_state=128).with_dtype(input=fp32, acc=fp32, output=fp32)
+  .with_chunk(128)
+"""
+
+
+def grammar_text() -> str:
+    return EBNF
+
+
+def prompt_spec() -> str:
+    """The complete in-context learning artifact (grammar + examples)."""
+    return EBNF + "\n(* EXAMPLES *)\n" + EXAMPLES
+
+
+def grammar_stats() -> dict:
+    lines = [ln for ln in EBNF.strip().splitlines()]
+    return {
+        "ebnf_lines": len(lines),
+        "ebnf_chars": len(EBNF),
+        "prompt_chars": len(prompt_spec()),
+        # ~4 chars/token heuristic: fits comfortably in a short prompt
+        "approx_prompt_tokens": len(prompt_spec()) // 4,
+    }

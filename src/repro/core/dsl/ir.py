@@ -1,0 +1,150 @@
+"""Typed configuration IR for muPallas.
+
+The compiler lowers the AST to this IR, validates it, and hands it to a
+code-generation backend.  IR nodes are frozen/hashable; ``canonical()`` gives
+a stable serialization whose hash provides the deterministic namespace
+(``upallas_<hash>``) used for caching and cross-attempt comparison — the same
+mechanism the paper uses for generated CUTLASS headers.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+
+@dataclass(frozen=True)
+class DTypes:
+    input: str = "bf16"
+    acc: str = "fp32"
+    output: str = "bf16"
+
+
+@dataclass(frozen=True)
+class Tile:
+    m: int
+    n: int
+    k: int
+
+
+@dataclass(frozen=True)
+class AttnBlock:
+    q: int
+    kv: int
+
+
+@dataclass(frozen=True)
+class Layout:
+    a: str = "RowMajor"
+    b: str = "RowMajor"
+    c: str = "RowMajor"
+
+
+@dataclass(frozen=True)
+class SplitK:
+    mode: str = "none"      # none | serial | parallel
+    slices: int = 1
+
+
+@dataclass(frozen=True)
+class EpilogueIR:
+    name: str
+    params: Tuple[Tuple[str, Union[int, float, bool, str]], ...] = ()
+    expr: Optional[str] = None                    # custom('expr', ...)
+    inputs: Tuple[Tuple[str, str], ...] = ()      # custom inputs dict
+
+    def param(self, key: str, default=None):
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+
+@dataclass(frozen=True)
+class KernelIR:
+    op_name: str
+    op_params: Tuple[Tuple[str, Union[int, float, bool, str]], ...] = ()
+    arch: str = "tpu_v5e"
+    dtypes: DTypes = field(default_factory=DTypes)
+    layout: Layout = field(default_factory=Layout)
+    tile: Optional[Tile] = None
+    block: Optional[AttnBlock] = None
+    chunk: Optional[int] = None
+    stages: int = 2
+    split_k: SplitK = field(default_factory=SplitK)
+    swap: bool = False
+    vmem_limit_mb: Optional[int] = None
+    dimension_semantics: Optional[Tuple[str, ...]] = None
+    precision: str = "default"   # default | highest (fp32 multi-pass on MXU)
+    epilogues: Tuple[EpilogueIR, ...] = ()
+
+    def op_param(self, key: str, default=None):
+        for k, v in self.op_params:
+            if k == key:
+                return v
+        return default
+
+    def canonical(self) -> str:
+        parts = [f"op={self.op_name}"]
+        parts += [f"{k}={v}" for k, v in sorted(self.op_params)]
+        parts.append(f"arch={self.arch}")
+        parts.append(f"dt={self.dtypes.input}/{self.dtypes.acc}/{self.dtypes.output}")
+        parts.append(f"layout={self.layout.a},{self.layout.b},{self.layout.c}")
+        if self.tile:
+            parts.append(f"tile={self.tile.m}x{self.tile.n}x{self.tile.k}")
+        if self.block:
+            parts.append(f"block={self.block.q}x{self.block.kv}")
+        if self.chunk:
+            parts.append(f"chunk={self.chunk}")
+        parts.append(f"stages={self.stages}")
+        if self.split_k.mode != "none":
+            parts.append(f"splitk={self.split_k.mode}:{self.split_k.slices}")
+        if self.swap:
+            parts.append("swap=1")
+        if self.vmem_limit_mb:
+            parts.append(f"vmem={self.vmem_limit_mb}")
+        if self.dimension_semantics:
+            parts.append(f"dims={','.join(self.dimension_semantics)}")
+        if self.precision != "default":
+            parts.append(f"prec={self.precision}")
+        for ep in self.epilogues:
+            p = ",".join(f"{k}:{v}" for k, v in sorted(ep.params))
+            e = f"|{ep.expr}|{sorted(ep.inputs)}" if ep.expr else ""
+            parts.append(f"ep={ep.name}({p}){e}")
+        return ";".join(parts)
+
+
+@dataclass(frozen=True)
+class TransformIR:
+    target: str              # input | output
+    src_layout: str
+    dst_layout: str
+    src_dtype: Optional[str] = None
+    dst_dtype: Optional[str] = None
+
+    def canonical(self) -> str:
+        d = (f",{self.src_dtype}->{self.dst_dtype}"
+             if self.src_dtype else "")
+        return f"transpose({self.target},{self.src_layout}->{self.dst_layout}{d})"
+
+
+@dataclass(frozen=True)
+class PipelineIR:
+    stages: Tuple[Union[KernelIR, TransformIR], ...] = ()
+
+    def canonical(self) -> str:
+        return "pipeline[" + "||".join(s.canonical() for s in self.stages) + "]"
+
+    @property
+    def kernel_stages(self) -> Tuple[KernelIR, ...]:
+        return tuple(s for s in self.stages if isinstance(s, KernelIR))
+
+
+ProgramIR = Union[KernelIR, PipelineIR]
+
+
+def namespace_of(ir: ProgramIR) -> str:
+    """Deterministic namespace derived from a hash of the configuration."""
+    digest = hashlib.sha1(ir.canonical().encode()).hexdigest()[:12]
+    return f"upallas_{digest}"

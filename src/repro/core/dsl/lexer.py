@@ -1,0 +1,68 @@
+"""Tokenizer for the muPallas DSL.
+
+Clean, unquoted syntax like the paper's muCUTLASS grammar (Appendix A.1):
+identifiers are bare words; strings (single-quoted) appear only inside
+``custom('expr', inputs={...})``; ``#`` starts a comment to end of line.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Iterator, List
+
+from .errors import DSLSyntaxError
+
+
+@dataclass(frozen=True)
+class Token:
+    kind: str       # IDENT NUMBER STRING LPAREN RPAREN COMMA EQ DOT CHAIN LBRACE RBRACE COLON EOF
+    value: str
+    line: int
+    col: int
+
+
+_TOKEN_SPEC = [
+    ("COMMENT", r"#[^\n]*"),
+    ("CHAIN",   r">>"),
+    ("NUMBER",  r"-?\d+\.\d+|-?\d+"),
+    ("IDENT",   r"[A-Za-z_][A-Za-z0-9_]*"),
+    ("STRING",  r"'(?:[^'\\]|\\.)*'"),
+    ("LPAREN",  r"\("),
+    ("RPAREN",  r"\)"),
+    ("LBRACE",  r"\{"),
+    ("RBRACE",  r"\}"),
+    ("COLON",   r":"),
+    ("COMMA",   r","),
+    ("EQ",      r"="),
+    ("DOT",     r"\."),
+    ("WS",      r"[ \t\r\n]+"),
+]
+_MASTER = re.compile("|".join(f"(?P<{k}>{p})" for k, p in _TOKEN_SPEC))
+
+
+def tokenize(src: str) -> List[Token]:
+    tokens: List[Token] = []
+    line, line_start = 1, 0
+    pos = 0
+    while pos < len(src):
+        m = _MASTER.match(src, pos)
+        if m is None:
+            col = pos - line_start + 1
+            raise DSLSyntaxError(
+                f"unexpected character {src[pos]!r}", line, col,
+                hint="muPallas uses unquoted identifiers; strings are only "
+                     "allowed inside custom('...') expressions")
+        kind = m.lastgroup
+        text = m.group()
+        col = pos - line_start + 1
+        if kind == "WS" or kind == "COMMENT":
+            nl = text.count("\n")
+            if nl:
+                line += nl
+                line_start = pos + text.rfind("\n") + 1
+        else:
+            tokens.append(Token(kind, text, line, col))
+        pos = m.end()
+    tokens.append(Token("EOF", "", line, 0))
+    return tokens

@@ -1,0 +1,217 @@
+"""Recursive-descent parser for the muPallas DSL.
+
+Grammar (TPU adaptation of paper Appendix A.1; see grammar.py for the full
+EBNF):
+
+    start        = kernel | pipeline ;
+    pipeline     = "pipeline(" stage {"," stage} ")" ;
+    stage        = transform | kernel ;
+    transform    = "transpose(" IDENT "," IDENT "," IDENT
+                               ["," IDENT "," IDENT] ")" ;
+    kernel       = operation {configuration} {epilogue} ;
+    operation    = IDENT "(" [arglist] ")" ;
+    configuration= "." IDENT "(" [arglist] ")" ;
+    epilogue     = ">>" IDENT "(" [arglist] ")" ;
+    arglist      = arg {"," arg} ;
+    arg          = value | IDENT "=" value ;
+    value        = NUMBER | STRING | IDENT | dict ;
+    dict         = "{" STRING ":" STRING {"," STRING ":" STRING} "}" ;
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+from .ast_nodes import Call, KernelNode, PipelineNode, Program, TransformNode, Value
+from .errors import DSLSyntaxError
+from .lexer import Token, tokenize
+
+
+class Parser:
+    def __init__(self, tokens: List[Token]):
+        self.tokens = tokens
+        self.pos = 0
+
+    # -- token helpers -------------------------------------------------
+    def peek(self, offset: int = 0) -> Token:
+        return self.tokens[min(self.pos + offset, len(self.tokens) - 1)]
+
+    def advance(self) -> Token:
+        tok = self.tokens[self.pos]
+        if tok.kind != "EOF":
+            self.pos += 1
+        return tok
+
+    def expect(self, kind: str, what: str = "") -> Token:
+        tok = self.peek()
+        if tok.kind != kind:
+            raise DSLSyntaxError(
+                f"expected {what or kind} but found {tok.value!r}",
+                tok.line, tok.col)
+        return self.advance()
+
+    # -- grammar -------------------------------------------------------
+    def parse_program(self) -> Program:
+        tok = self.peek()
+        if tok.kind != "IDENT":
+            raise DSLSyntaxError(
+                f"a muPallas program starts with an operation name or "
+                f"'pipeline', found {tok.value!r}", tok.line, tok.col,
+                hint="e.g. gemm().with_dtype(input=bf16, acc=fp32, output=bf16)")
+        if tok.value == "pipeline":
+            node = self.parse_pipeline()
+        else:
+            node = self.parse_kernel()
+        end = self.peek()
+        if end.kind != "EOF":
+            raise DSLSyntaxError(
+                f"unexpected trailing input starting at {end.value!r}",
+                end.line, end.col,
+                hint="one program per compilation unit; use pipeline(...) to "
+                     "compose multiple stages")
+        return node
+
+    def parse_pipeline(self) -> PipelineNode:
+        head = self.expect("IDENT")
+        self.expect("LPAREN", "'(' after pipeline")
+        stages: List[Union[KernelNode, TransformNode]] = []
+        while True:
+            stages.append(self.parse_stage())
+            tok = self.peek()
+            if tok.kind == "COMMA":
+                self.advance()
+                continue
+            break
+        self.expect("RPAREN", "')' closing pipeline")
+        if not stages:
+            raise DSLSyntaxError("pipeline(...) needs at least one stage",
+                                 head.line, head.col)
+        return PipelineNode(stages=stages, line=head.line)
+
+    def parse_stage(self) -> Union[KernelNode, TransformNode]:
+        tok = self.peek()
+        if tok.kind != "IDENT":
+            raise DSLSyntaxError(
+                f"expected a pipeline stage, found {tok.value!r}",
+                tok.line, tok.col)
+        if tok.value == "transpose":
+            return self.parse_transform()
+        return self.parse_kernel()
+
+    def parse_transform(self) -> TransformNode:
+        head = self.expect("IDENT")
+        self.expect("LPAREN", "'(' after transpose")
+        parts: List[str] = []
+        while True:
+            t = self.expect("IDENT", "transpose argument")
+            parts.append(t.value)
+            if self.peek().kind == "COMMA":
+                # stop if the comma belongs to the enclosing pipeline:
+                # transpose has at most 5 comma-separated idents.
+                if len(parts) >= 5:
+                    break
+                # Lookahead: next stage begins with IDENT '(' — but transpose
+                # args are bare idents, so an IDENT followed by LPAREN after
+                # the comma means the comma separates pipeline stages.
+                nxt, nxt2 = self.peek(1), self.peek(2)
+                if nxt.kind == "IDENT" and nxt2.kind == "LPAREN":
+                    break
+                self.advance()
+                continue
+            break
+        self.expect("RPAREN", "')' closing transpose")
+        if len(parts) not in (3, 5):
+            raise DSLSyntaxError(
+                f"transpose takes 3 or 5 arguments, got {len(parts)}",
+                head.line, head.col,
+                hint="transpose(input, NCL, NLC) or "
+                     "transpose(input, NCL, NLC, fp32, bf16) to fuse a dtype "
+                     "conversion with the layout change")
+        return TransformNode(
+            target=parts[0], src_layout=parts[1], dst_layout=parts[2],
+            src_dtype=parts[3] if len(parts) == 5 else None,
+            dst_dtype=parts[4] if len(parts) == 5 else None,
+            line=head.line)
+
+    def parse_kernel(self) -> KernelNode:
+        op = self.parse_call()
+        node = KernelNode(op=op, line=op.line)
+        while self.peek().kind == "DOT":
+            self.advance()
+            cfg = self.parse_call()
+            if not cfg.name.startswith("with_"):
+                raise DSLSyntaxError(
+                    f"configuration must be a .with_* binding, found "
+                    f".{cfg.name}(...)", cfg.line, 0,
+                    hint="e.g. .with_tile(m=256, n=256, k=512)")
+            node.configs.append(cfg)
+        while self.peek().kind == "CHAIN":
+            self.advance()
+            node.epilogues.append(self.parse_call())
+        return node
+
+    def parse_call(self) -> Call:
+        name_tok = self.expect("IDENT", "a call name")
+        self.expect("LPAREN", f"'(' after {name_tok.value}")
+        call = Call(name=name_tok.value, line=name_tok.line)
+        if self.peek().kind != "RPAREN":
+            while True:
+                self.parse_arg(call)
+                if self.peek().kind == "COMMA":
+                    self.advance()
+                    continue
+                break
+        self.expect("RPAREN", f"')' closing {name_tok.value}(...)")
+        return call
+
+    def parse_arg(self, call: Call) -> None:
+        tok = self.peek()
+        if tok.kind == "IDENT" and self.peek(1).kind == "EQ":
+            key = self.advance().value
+            self.advance()  # '='
+            call.kwargs[key] = self.parse_value()
+        else:
+            call.args.append(self.parse_value())
+
+    def parse_value(self) -> Value:
+        tok = self.peek()
+        if tok.kind == "NUMBER":
+            self.advance()
+            return float(tok.value) if "." in tok.value else int(tok.value)
+        if tok.kind == "STRING":
+            self.advance()
+            return tok.value[1:-1].replace("\\'", "'")
+        if tok.kind == "IDENT":
+            self.advance()
+            if tok.value == "true":
+                return True
+            if tok.value == "false":
+                return False
+            return tok.value
+        if tok.kind == "LBRACE":
+            return self.parse_dict()
+        raise DSLSyntaxError(
+            f"expected a value, found {tok.value!r}", tok.line, tok.col,
+            hint="values are integers, floats, bare identifiers, "
+                 "'quoted strings' (custom exprs only), or "
+                 "{'name': 'spec'} dicts")
+
+    def parse_dict(self) -> Dict[str, str]:
+        self.expect("LBRACE")
+        out: Dict[str, str] = {}
+        if self.peek().kind != "RBRACE":
+            while True:
+                k = self.expect("STRING", "a quoted dict key").value[1:-1]
+                self.expect("COLON", "':' in dict")
+                v = self.expect("STRING", "a quoted dict value").value[1:-1]
+                out[k] = v
+                if self.peek().kind == "COMMA":
+                    self.advance()
+                    continue
+                break
+        self.expect("RBRACE", "'}' closing dict")
+        return out
+
+
+def parse(src: str) -> Program:
+    return Parser(tokenize(src)).parse_program()

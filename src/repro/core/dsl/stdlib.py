@@ -1,0 +1,322 @@
+"""Operator / configuration / epilogue registries for muPallas.
+
+This is the DSL's "standard library": the operator families (paper Table 1a
+adapted to the TPU op set), the feature-binding table (Table 1b), and the
+epilogue vocabulary (Table 1c).  The registries drive both the validator
+(schemas, arch gating) and the code-generation backends (callables).
+
+It also contains the safe ``custom('expr')`` expression compiler: a
+whitelisted Python-AST evaluator producing a jnp lambda (the TPU analogue of
+the paper's EVT ``custom`` epilogue on SM90a).
+"""
+
+from __future__ import annotations
+
+import ast as py_ast
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Operator registry (paper Table 1a — TPU operator families)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    type: type
+    required: bool = False
+    default: object = None
+    choices: Optional[Tuple[object, ...]] = None
+
+
+@dataclass(frozen=True)
+class OpDef:
+    name: str
+    family: str                    # matmul | conv | attention | norm | reduce | scan | ssm
+    params: Tuple[ParamSpec, ...] = ()
+    uses_tile: bool = False        # accepts .with_tile
+    uses_block: bool = False       # accepts .with_block (attention)
+    uses_chunk: bool = False       # accepts .with_chunk (scans)
+    uses_layout: bool = False
+    min_generation: int = 4        # TPU arch gating (>= tpu_v4)
+    notes: str = ""
+
+
+OPS: Dict[str, OpDef] = {}
+
+
+def _op(defn: OpDef) -> None:
+    OPS[defn.name] = defn
+
+
+_op(OpDef("gemm", "matmul", uses_tile=True, uses_layout=True))
+_op(OpDef("batched_gemm", "matmul", uses_tile=True, uses_layout=True))
+_op(OpDef("grouped_gemm", "matmul",
+          params=(ParamSpec("expert_count", int, required=True),),
+          uses_tile=True, uses_layout=True,
+          notes="MoE expert GEMM; expert_count groups share one launch"))
+_op(OpDef("conv1d", "conv",
+          params=(ParamSpec("kernel_w", int, required=True),
+                  ParamSpec("stride", int, default=1),
+                  ParamSpec("groups", int, default=1)),
+          uses_tile=True,
+          notes="lowered to GEMM via im2col unfold (TPU-idiomatic)"))
+_op(OpDef("depthwise_conv1d", "conv",
+          params=(ParamSpec("kernel_w", int, required=True),
+                  ParamSpec("causal", bool, default=False)),
+          notes="channel-parallel short conv (Mamba/SSM frontends)"))
+_op(OpDef("conv2d", "conv",
+          params=(ParamSpec("kernel_h", int, required=True),
+                  ParamSpec("kernel_w", int, required=True),
+                  ParamSpec("stride", int, default=1)),
+          uses_tile=True,
+          notes="NHWC; lowered to GEMM via im2col"))
+_op(OpDef("attention", "attention",
+          params=(ParamSpec("causal", bool, default=False),
+                  ParamSpec("window", int, default=0),),
+          uses_block=True,
+          notes="fused blockwise flash attention; window>0 = sliding window"))
+_op(OpDef("eltwise", "eltwise",
+          notes="bare elementwise map; the function is the epilogue chain"))
+_op(OpDef("rmsnorm", "norm",
+          params=(ParamSpec("eps", float, default=1e-6),)))
+_op(OpDef("layernorm", "norm",
+          params=(ParamSpec("eps", float, default=1e-5),)))
+_op(OpDef("softmax", "norm",
+          params=(ParamSpec("axis", int, default=-1),)))
+_op(OpDef("reduce", "reduce",
+          params=(ParamSpec("op", str, required=True,
+                            choices=("sum", "max", "mean", "min")),
+                  ParamSpec("axis", int, default=-1))))
+_op(OpDef("cumsum", "scan",
+          params=(ParamSpec("axis", int, default=-1),
+                  ParamSpec("reverse", bool, default=False),
+                  ParamSpec("exclusive", bool, default=False))))
+_op(OpDef("cumprod", "scan",
+          params=(ParamSpec("axis", int, default=-1),)))
+_op(OpDef("ssd_scan", "ssm",
+          params=(ParamSpec("d_state", int, required=True),),
+          uses_chunk=True,
+          notes="Mamba-2 SSD chunked scan (state-space duality)"))
+_op(OpDef("cross_entropy", "reduce",
+          params=(ParamSpec("reduction", str, default="mean",
+                            choices=("mean", "sum", "none")),)))
+
+
+# ---------------------------------------------------------------------------
+# Configuration bindings (paper Table 1b — TPU feature support)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConfigDef:
+    name: str
+    params: Tuple[ParamSpec, ...] = ()
+    families: Optional[Tuple[str, ...]] = None  # None = any family
+    min_generation: int = 4
+
+
+CONFIGS: Dict[str, ConfigDef] = {}
+
+
+def _cfg(defn: ConfigDef) -> None:
+    CONFIGS[defn.name] = defn
+
+
+_cfg(ConfigDef("with_dtype",
+               (ParamSpec("input", str, required=True),
+                ParamSpec("acc", str, required=True),
+                ParamSpec("output", str, required=True))))
+_cfg(ConfigDef("with_arch", (ParamSpec("arch", str, required=True),)))
+_cfg(ConfigDef("with_tile",
+               (ParamSpec("m", int, required=True),
+                ParamSpec("n", int, required=True),
+                ParamSpec("k", int, required=True)),
+               families=("matmul", "conv")))
+_cfg(ConfigDef("with_block",
+               (ParamSpec("q", int, required=True),
+                ParamSpec("kv", int, required=True)),
+               families=("attention",)))
+_cfg(ConfigDef("with_chunk", (ParamSpec("size", int, required=True),),
+               families=("ssm", "scan")))
+_cfg(ConfigDef("with_layout",
+               (ParamSpec("A", str, default="RowMajor",
+                          choices=("RowMajor", "ColumnMajor")),
+                ParamSpec("B", str, default="RowMajor",
+                          choices=("RowMajor", "ColumnMajor")),
+                ParamSpec("C", str, default="RowMajor",
+                          choices=("RowMajor", "ColumnMajor"))),
+               families=("matmul", "conv")))
+_cfg(ConfigDef("with_stages", (ParamSpec("stages", int, required=True),)))
+_cfg(ConfigDef("with_split_k",
+               (ParamSpec("mode", str, required=True,
+                          choices=("none", "serial", "parallel")),
+                ParamSpec("slices", int, default=1)),
+               families=("matmul", "conv")))
+_cfg(ConfigDef("with_swap", (ParamSpec("enabled", bool, required=True),),
+               families=("matmul",)))
+_cfg(ConfigDef("with_vmem_limit", (ParamSpec("mb", int, required=True),)))
+_cfg(ConfigDef("with_dimension_semantics", ()))  # variadic idents
+_cfg(ConfigDef("with_precision",
+               (ParamSpec("precision", str, required=True,
+                          choices=("default", "highest")),)))
+
+
+# ---------------------------------------------------------------------------
+# Epilogue registry (paper Table 1c)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EpilogueDef:
+    name: str
+    params: Tuple[ParamSpec, ...] = ()
+    aux_input: Optional[str] = None     # name of a runtime side input
+    aux_kind: Optional[str] = None      # "col_vector" | "row_vector" | "full"
+    families: Optional[Tuple[str, ...]] = None
+    min_generation: int = 4
+
+
+EPILOGUES: Dict[str, EpilogueDef] = {}
+
+
+def _ep(defn: EpilogueDef) -> None:
+    EPILOGUES[defn.name] = defn
+
+
+for _name in ("relu", "gelu", "silu", "sigmoid", "tanh", "mish", "hardswish"):
+    _ep(EpilogueDef(_name))
+_ep(EpilogueDef("leaky_relu", (ParamSpec("alpha", float, default=0.01),)))
+_ep(EpilogueDef("elu", (ParamSpec("alpha", float, default=1.0),)))
+_ep(EpilogueDef("clip", (ParamSpec("min", float, required=True),
+                         ParamSpec("max", float, required=True))))
+_ep(EpilogueDef("clamp", (ParamSpec("min", float, required=True),
+                          ParamSpec("max", float, required=True))))
+_ep(EpilogueDef("scale", (ParamSpec("value", float, required=True),)))
+_ep(EpilogueDef("bias", aux_input="bias", aux_kind="col_vector",
+                families=("matmul", "conv")))
+_ep(EpilogueDef("per_channel_scale", aux_input="channel_scale",
+                aux_kind="col_vector", families=("matmul", "conv")))
+_ep(EpilogueDef("per_row_scale", aux_input="row_scale",
+                aux_kind="row_vector", families=("matmul", "conv")))
+_ep(EpilogueDef("per_col_scale", aux_input="col_scale",
+                aux_kind="col_vector", families=("matmul", "conv")))
+_ep(EpilogueDef("residual_add", aux_input="residual", aux_kind="full",
+                families=("matmul", "conv")))
+_ep(EpilogueDef("custom", (ParamSpec("expr", str, required=True),),
+                min_generation=5))   # like paper: custom() gated to newest arch
+
+
+# ---------------------------------------------------------------------------
+# Safe custom-expression compiler
+# ---------------------------------------------------------------------------
+
+_ALLOWED_FUNCS = ("exp", "log", "tanh", "sigmoid", "relu", "abs", "sqrt",
+                  "erf", "minimum", "maximum", "where", "square", "rsqrt")
+_ALLOWED_NODES = (
+    py_ast.Expression, py_ast.BinOp, py_ast.UnaryOp, py_ast.Call,
+    py_ast.Name, py_ast.Load, py_ast.Constant, py_ast.Add, py_ast.Sub,
+    py_ast.Mult, py_ast.Div, py_ast.Pow, py_ast.USub, py_ast.UAdd,
+    py_ast.Compare, py_ast.Gt, py_ast.Lt, py_ast.GtE, py_ast.LtE,
+    py_ast.IfExp, py_ast.Mod,
+)
+
+
+class CustomExprError(ValueError):
+    pass
+
+
+def check_custom_expr(expr: str, input_names: Sequence[str]) -> None:
+    """Validate a custom epilogue expression without evaluating it."""
+    try:
+        tree = py_ast.parse(expr, mode="eval")
+    except SyntaxError as e:
+        raise CustomExprError(f"expression does not parse: {e.msg}") from e
+    allowed_names = set(input_names) | {"x"} | set(_ALLOWED_FUNCS)
+    for node in py_ast.walk(tree):
+        if not isinstance(node, _ALLOWED_NODES):
+            raise CustomExprError(
+                f"disallowed syntax {type(node).__name__!r}; custom exprs "
+                f"allow arithmetic, comparisons, and {_ALLOWED_FUNCS}")
+        if isinstance(node, py_ast.Name) and node.id not in allowed_names:
+            raise CustomExprError(
+                f"unknown name {node.id!r}; declare it in inputs={{...}} or "
+                f"use 'x' for the accumulator")
+        if isinstance(node, py_ast.Call):
+            if not isinstance(node.func, py_ast.Name) or \
+                    node.func.id not in _ALLOWED_FUNCS:
+                raise CustomExprError(
+                    "only whitelisted functions callable in custom exprs: "
+                    + ", ".join(_ALLOWED_FUNCS))
+
+
+def compile_custom_expr(expr: str, input_names: Sequence[str]) -> Callable:
+    """Compile a validated expression into fn(x, **inputs) using jnp."""
+    check_custom_expr(expr, input_names)
+    import jax
+    import jax.numpy as jnp
+
+    env = {
+        "exp": jnp.exp, "log": jnp.log, "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid, "relu": jax.nn.relu, "abs": jnp.abs,
+        "sqrt": jnp.sqrt, "erf": jax.scipy.special.erf,
+        "minimum": jnp.minimum, "maximum": jnp.maximum,
+        "where": jnp.where, "square": jnp.square,
+        "rsqrt": jax.lax.rsqrt,
+    }
+    code = compile(py_ast.parse(expr, mode="eval"), "<custom_epilogue>", "eval")
+
+    def fn(x, **inputs):
+        scope = dict(env)
+        scope["x"] = x
+        scope.update(inputs)
+        return eval(code, {"__builtins__": {}}, scope)  # noqa: S307 whitelisted AST
+
+    return fn
+
+
+def broadcast_aux(kind: str, arr, rank: int):
+    """Broadcast an epilogue aux array against a rank-``rank`` output.
+
+    col_vector broadcasts along the last (N) axis; row_vector along the
+    second-to-last (M) axis; full is elementwise.
+    """
+    if kind == "row_vector":
+        arr = arr[..., None]
+    if kind in ("col_vector", "row_vector"):
+        while arr.ndim < rank:
+            arr = arr[None]
+    return arr
+
+
+def activation_fn(name: str, params: Dict[str, object]) -> Callable:
+    """jnp implementation of a parameter-only epilogue op."""
+    import jax
+    import jax.numpy as jnp
+
+    if name == "relu":
+        return lambda x: jnp.maximum(x, 0)
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "silu":
+        return lambda x: x * jax.nn.sigmoid(x)
+    if name == "sigmoid":
+        return jax.nn.sigmoid
+    if name == "tanh":
+        return jnp.tanh
+    if name == "mish":
+        return lambda x: x * jnp.tanh(jax.nn.softplus(x))
+    if name == "hardswish":
+        return lambda x: x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+    if name == "leaky_relu":
+        alpha = float(params.get("alpha", 0.01))
+        return lambda x: jnp.where(x >= 0, x, alpha * x)
+    if name == "elu":
+        alpha = float(params.get("alpha", 1.0))
+        return lambda x: jnp.where(x >= 0, x, alpha * (jnp.exp(x) - 1.0))
+    if name in ("clip", "clamp"):
+        lo, hi = float(params["min"]), float(params["max"])
+        return lambda x: jnp.clip(x, lo, hi)
+    if name == "scale":
+        value = float(params["value"])
+        return lambda x: x * value
+    raise KeyError(f"no activation implementation for {name!r}")

@@ -1,0 +1,496 @@
+"""AST → typed IR lowering + static validation for muPallas.
+
+The validator is the DSL's core value proposition (paper Sec. 3): it rejects
+invalid configurations *before* the expensive compile/run/profile toolchain,
+with diagnostics that explain what went wrong and why.  Constraint families
+(TPU analogues of the paper's SM90 rules):
+
+  * architecture gating      (dtype support per TPU generation)
+  * lane/sublane alignment   (minor dim % 128; second-minor % dtype packing)
+  * VMEM capacity            (tile working set vs per-core VMEM, explicit math)
+  * accumulator rules        (MXU accumulates fp32 / int32)
+  * family gating            (.with_tile on matmul/conv, .with_block on attention, ...)
+  * epilogue composition     (vector aux epilogues need an N axis; custom expr
+                              whitelist; arch-gated custom())
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from ..sol.hardware import (LANE_MULTIPLE, SUBLANE_MULTIPLE, canon_dtype,
+                            dtype_bytes, get_chip)
+from .ast_nodes import Call, KernelNode, PipelineNode, Program, TransformNode
+from .errors import Diagnostic, DSLValidationError
+from .ir import (AttnBlock, DTypes, EpilogueIR, KernelIR, Layout, PipelineIR,
+                 ProgramIR, SplitK, Tile, TransformIR)
+from .stdlib import (CONFIGS, EPILOGUES, OPS, CustomExprError, OpDef,
+                     ParamSpec, check_custom_expr)
+
+_VALID_LAYOUT_NAMES = ("NCL", "NLC", "NCHW", "NHWC")
+_VALID_TRANSPOSE_TARGETS = ("input", "output")
+
+
+class _Ctx:
+    def __init__(self) -> None:
+        self.errors: List[Diagnostic] = []
+        self.warnings: List[Diagnostic] = []
+
+    def error(self, code: str, message: str, hint: str = "",
+              line: Optional[int] = None) -> None:
+        self.errors.append(Diagnostic(code, message, hint, line))
+
+    def warn(self, code: str, message: str, hint: str = "",
+             line: Optional[int] = None) -> None:
+        self.warnings.append(Diagnostic(code, message, hint, line))
+
+
+def _check_params(ctx: _Ctx, call: Call, schema: Tuple[ParamSpec, ...],
+                  what: str) -> Dict[str, object]:
+    """Bind call args/kwargs against a parameter schema."""
+    out: Dict[str, object] = {}
+    specs = {p.name: p for p in schema}
+    # positional args map onto schema order
+    for i, val in enumerate(call.args):
+        if i >= len(schema):
+            ctx.error("E_PARAM_EXTRA",
+                      f"{what} takes at most {len(schema)} arguments, "
+                      f"got extra {val!r}",
+                      hint=f"signature: {call.name}"
+                           f"({', '.join(p.name for p in schema)})",
+                      line=call.line)
+            continue
+        out[schema[i].name] = val
+    for key, val in call.kwargs.items():
+        if key not in specs:
+            ctx.error("E_PARAM_UNKNOWN",
+                      f"{what} has no parameter {key!r}",
+                      hint=f"known parameters: "
+                           f"{', '.join(p.name for p in schema) or '(none)'}",
+                      line=call.line)
+            continue
+        if key in out:
+            ctx.error("E_PARAM_DUP", f"{what}: parameter {key!r} given twice",
+                      line=call.line)
+        out[key] = val
+    for p in schema:
+        if p.name not in out:
+            if p.required:
+                ctx.error("E_PARAM_MISSING",
+                          f"{what} requires parameter {p.name!r}",
+                          hint=f"e.g. {call.name}({p.name}=...)",
+                          line=call.line)
+            elif p.default is not None:
+                out[p.name] = p.default
+        else:
+            val = out[p.name]
+            if p.type is int and isinstance(val, bool):
+                ctx.error("E_PARAM_TYPE",
+                          f"{what}: {p.name} expects int, got bool",
+                          line=call.line)
+            elif p.type is int and isinstance(val, float):
+                if val.is_integer():
+                    out[p.name] = int(val)
+                else:
+                    ctx.error("E_PARAM_TYPE",
+                              f"{what}: {p.name} expects int, got {val}",
+                              line=call.line)
+            elif p.type is float and isinstance(val, int) \
+                    and not isinstance(val, bool):
+                out[p.name] = float(val)
+            elif not isinstance(val, p.type):
+                ctx.error("E_PARAM_TYPE",
+                          f"{what}: {p.name} expects {p.type.__name__}, "
+                          f"got {type(val).__name__} ({val!r})",
+                          line=call.line)
+            if p.choices and out.get(p.name) not in p.choices:
+                ctx.error("E_PARAM_CHOICE",
+                          f"{what}: {p.name}={out.get(p.name)!r} not in "
+                          f"{p.choices}",
+                          line=call.line)
+    return out
+
+
+def _canon_dtype_or_err(ctx: _Ctx, name: object, where: str,
+                        line: int) -> Optional[str]:
+    try:
+        return canon_dtype(str(name))
+    except KeyError:
+        ctx.error("E_DTYPE_UNKNOWN", f"{where}: unknown dtype {name!r}",
+                  hint="supported: fp32, bf16, fp16, fp8_e4m3, fp8_e5m2, "
+                       "int8, int16, int32",
+                  line=line)
+        return None
+
+
+def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
+    # ---- operation -----------------------------------------------------
+    op_def = OPS.get(node.op.name)
+    if op_def is None:
+        ctx.error("E_OP_UNKNOWN", f"unknown operation {node.op.name!r}",
+                  hint=f"operations: {', '.join(sorted(OPS))}",
+                  line=node.op.line)
+        return None
+    op_params = _check_params(ctx, node.op, op_def.params,
+                              f"operation {node.op.name}")
+
+    # ---- configurations --------------------------------------------------
+    seen_cfgs: Dict[str, Call] = {}
+    arch = "tpu_v5e"
+    dtypes: Optional[DTypes] = None
+    layout = Layout()
+    tile: Optional[Tile] = None
+    block: Optional[AttnBlock] = None
+    chunk: Optional[int] = None
+    stages = 2
+    split_k = SplitK()
+    swap = False
+    vmem_limit_mb: Optional[int] = None
+    dim_semantics: Optional[Tuple[str, ...]] = None
+    precision = "default"
+
+    for cfg in node.configs:
+        cdef = CONFIGS.get(cfg.name)
+        if cdef is None:
+            ctx.error("E_CFG_UNKNOWN", f"unknown configuration .{cfg.name}()",
+                      hint=f"bindings: {', '.join(sorted(CONFIGS))}",
+                      line=cfg.line)
+            continue
+        if cfg.name in seen_cfgs:
+            ctx.error("E_CFG_DUP", f".{cfg.name}() given more than once",
+                      line=cfg.line)
+            continue
+        seen_cfgs[cfg.name] = cfg
+        if cdef.families and op_def.family not in cdef.families:
+            ctx.error("E_CFG_FAMILY",
+                      f".{cfg.name}() does not apply to "
+                      f"{op_def.family} operations",
+                      hint=f".{cfg.name} is valid for: "
+                           f"{', '.join(cdef.families)}."
+                           + (" Attention kernels tile with .with_block"
+                              "(q=..., kv=...)" if cfg.name == "with_tile"
+                              and op_def.family == "attention" else ""),
+                      line=cfg.line)
+            continue
+
+        if cfg.name == "with_dimension_semantics":
+            sems = tuple(str(a) for a in cfg.args)
+            bad = [s for s in sems if s not in ("parallel", "arbitrary")]
+            if bad:
+                ctx.error("E_DIM_SEMANTICS",
+                          f"dimension semantics must be parallel|arbitrary, "
+                          f"got {bad}",
+                          hint="reduction grid dims (e.g. the K loop) must be "
+                               "'arbitrary'; independent dims may be "
+                               "'parallel' (Megacore partitioning)",
+                          line=cfg.line)
+            dim_semantics = sems
+            continue
+
+        params = _check_params(ctx, cfg, cdef.params, f".{cfg.name}")
+        if cfg.name == "with_dtype":
+            di = _canon_dtype_or_err(ctx, params.get("input"), "with_dtype input", cfg.line)
+            da = _canon_dtype_or_err(ctx, params.get("acc"), "with_dtype acc", cfg.line)
+            do = _canon_dtype_or_err(ctx, params.get("output"), "with_dtype output", cfg.line)
+            if di and da and do:
+                dtypes = DTypes(di, da, do)
+        elif cfg.name == "with_arch":
+            arch = str(params.get("arch", arch))
+            try:
+                get_chip(arch)
+            except KeyError:
+                ctx.error("E_ARCH_UNKNOWN", f"unknown arch {arch!r}",
+                          hint="archs: tpu_v4, tpu_v5e, tpu_v5p",
+                          line=cfg.line)
+                arch = "tpu_v5e"
+        elif cfg.name == "with_tile":
+            if all(k in params for k in ("m", "n", "k")):
+                tile = Tile(int(params["m"]), int(params["n"]), int(params["k"]))
+        elif cfg.name == "with_block":
+            if all(k in params for k in ("q", "kv")):
+                block = AttnBlock(int(params["q"]), int(params["kv"]))
+        elif cfg.name == "with_chunk":
+            chunk = int(params.get("size", 0)) or None
+        elif cfg.name == "with_layout":
+            layout = Layout(str(params.get("A", "RowMajor")),
+                            str(params.get("B", "RowMajor")),
+                            str(params.get("C", "RowMajor")))
+        elif cfg.name == "with_stages":
+            stages = int(params.get("stages", 2))
+        elif cfg.name == "with_split_k":
+            split_k = SplitK(str(params.get("mode", "none")),
+                             int(params.get("slices", 1)))
+        elif cfg.name == "with_swap":
+            swap = bool(params.get("enabled", False))
+        elif cfg.name == "with_vmem_limit":
+            vmem_limit_mb = int(params.get("mb", 0)) or None
+        elif cfg.name == "with_precision":
+            precision = str(params.get("precision", "default"))
+
+    # ---- required bindings ------------------------------------------------
+    if dtypes is None:
+        ctx.error("E_DTYPE_REQUIRED",
+                  "missing required .with_dtype(input=..., acc=..., output=...)",
+                  hint="all choices in muPallas are explicit and named; "
+                       "e.g. .with_dtype(input=bf16, acc=fp32, output=bf16)",
+                  line=node.line)
+        dtypes = DTypes()
+
+    chip = get_chip(arch)
+
+    # ---- dtype gating -------------------------------------------------
+    for role, d in (("input", dtypes.input), ("output", dtypes.output)):
+        if d.startswith("fp8") and d not in chip.peak_flops:
+            ctx.error("E_DTYPE_ARCH",
+                      f"{d} {role} requires tpu_v5p+ (arch is {arch})",
+                      hint="fp8 matmul is gated to newer TPU generations, "
+                           "like the paper gates fp8 to SM90+",
+                      line=node.line)
+    if dtypes.acc not in ("fp32", "int32"):
+        ctx.error("E_ACC_DTYPE",
+                  f"accumulator dtype {dtypes.acc} unsupported",
+                  hint="the TPU MXU accumulates in fp32 (float inputs) or "
+                       "int32 (int8 inputs); set acc=fp32 or acc=int32",
+                  line=node.line)
+    if dtypes.input in ("int8", "uint8") and dtypes.acc != "int32":
+        ctx.error("E_ACC_DTYPE",
+                  "int8 inputs require acc=int32", line=node.line)
+
+    # ---- stages ------------------------------------------------------
+    if not (1 <= stages <= 8):
+        ctx.error("E_STAGES", f"stages={stages} out of range [1, 8]",
+                  hint="stages is the HBM->VMEM pipeline lookahead depth; "
+                       "2 (double-buffering) is typical",
+                  line=node.line)
+
+    # ---- tile alignment + VMEM ----------------------------------------
+    sub = SUBLANE_MULTIPLE.get(dtypes.input, 8)
+    vmem_budget = (vmem_limit_mb * 2**20 if vmem_limit_mb
+                   else chip.vmem_bytes)
+    if tile is not None:
+        for dim_name, val in (("m", tile.m), ("n", tile.n), ("k", tile.k)):
+            if val <= 0:
+                ctx.error("E_TILE_POSITIVE",
+                          f"tile {dim_name}={val} must be positive",
+                          line=node.line)
+        if tile.n % LANE_MULTIPLE:
+            ctx.error("E_TILE_LANE",
+                      f"tile n={tile.n} must be a multiple of "
+                      f"{LANE_MULTIPLE}",
+                      hint="the minor VMEM dimension maps onto 128 vector "
+                           "lanes; n is the output tile's minor dim",
+                      line=node.line)
+        if tile.k % LANE_MULTIPLE:
+            ctx.error("E_TILE_LANE",
+                      f"tile k={tile.k} must be a multiple of "
+                      f"{LANE_MULTIPLE}",
+                      hint="k is the A-tile's minor dim (RowMajor A); 128 "
+                           "lanes per VMEM word",
+                      line=node.line)
+        if tile.m % sub:
+            ctx.error("E_TILE_SUBLANE",
+                      f"tile m={tile.m} must be a multiple of {sub} for "
+                      f"{dtypes.input} inputs",
+                      hint=f"second-minor VMEM dim packs {sub} sublanes per "
+                           f"word at this dtype ({dtype_bytes(dtypes.input)}B"
+                           " elements)",
+                      line=node.line)
+        if tile.m > 0 and tile.n > 0 and tile.k > 0 \
+                and not ctx.errors:
+            in_b = dtype_bytes(dtypes.input)
+            acc_b = 4
+            a_tile = tile.m * tile.k * in_b
+            b_tile = tile.k * tile.n * in_b
+            acc_tile = tile.m * tile.n * acc_b
+            aux = 0
+            for ep in node.epilogues:
+                edef = EPILOGUES.get(ep.name)
+                if edef and edef.aux_kind == "full":
+                    aux += tile.m * tile.n * in_b
+                elif edef and edef.aux_kind in ("col_vector", "row_vector"):
+                    aux += max(tile.m, tile.n) * 4
+            total = stages * (a_tile + b_tile) + acc_tile + aux
+            if total > vmem_budget:
+                ctx.error(
+                    "E_TILE_VMEM",
+                    f"tile working set {total/2**20:.2f} MiB exceeds VMEM "
+                    f"budget {vmem_budget/2**20:.0f} MiB: "
+                    f"stages({stages})x(A {a_tile/2**10:.0f}KiB + "
+                    f"B {b_tile/2**10:.0f}KiB) + acc {acc_tile/2**10:.0f}KiB"
+                    f" + epilogue aux {aux/2**10:.0f}KiB",
+                    hint="shrink the tile, reduce stages, or use a narrower "
+                         "input dtype; the fp32 accumulator tile lives in "
+                         "VMEM for the whole K loop",
+                    line=node.line)
+        if tile.m % chip.mxu_size and tile.m >= chip.mxu_size:
+            ctx.warn("W_TILE_MXU",
+                     f"tile m={tile.m} not a multiple of the "
+                     f"{chip.mxu_size}x{chip.mxu_size} MXU; expect padding "
+                     "waste", line=node.line)
+
+    # ---- attention block ----------------------------------------------
+    if block is not None:
+        if block.q % sub:
+            ctx.error("E_BLOCK_SUBLANE",
+                      f"attention q block {block.q} must be a multiple of "
+                      f"{sub} for {dtypes.input}",
+                      line=node.line)
+        if block.kv % LANE_MULTIPLE:
+            ctx.error("E_BLOCK_LANE",
+                      f"attention kv block {block.kv} must be a multiple of "
+                      f"{LANE_MULTIPLE}",
+                      hint="scores tile (q_block, kv_block) has kv as minor "
+                           "dim -> 128 lanes",
+                      line=node.line)
+        window = op_params.get("window", 0)
+        if isinstance(window, int) and window and block.kv > window:
+            ctx.error("E_BLOCK_WINDOW",
+                      f"kv block {block.kv} larger than sliding window "
+                      f"{window}",
+                      line=node.line)
+
+    # ---- chunk ---------------------------------------------------------
+    if chunk is not None and chunk % sub:
+        ctx.error("E_CHUNK_ALIGN",
+                  f"scan chunk {chunk} must be a multiple of {sub} for "
+                  f"{dtypes.input}", line=node.line)
+
+    # ---- split-k / swap -------------------------------------------------
+    if split_k.mode != "none" and split_k.slices < 2:
+        ctx.error("E_SPLITK",
+                  f"split_k mode={split_k.mode} needs slices>=2, got "
+                  f"{split_k.slices}", line=node.line)
+    if swap and dtypes.input != "fp32":
+        ctx.warn("W_SWAP_DTYPE",
+                 "with_swap(true) is an fp32-specific optimization (paper: "
+                 "FP32 GEMM operand swap); it is a no-op benefit for "
+                 f"{dtypes.input}", line=node.line)
+
+    # ---- epilogues -----------------------------------------------------
+    epilogues: List[EpilogueIR] = []
+    for ep in node.epilogues:
+        edef = EPILOGUES.get(ep.name)
+        if edef is None:
+            ctx.error("E_EPILOGUE_UNKNOWN", f"unknown epilogue {ep.name!r}",
+                      hint=f"epilogues: {', '.join(sorted(EPILOGUES))}",
+                      line=ep.line)
+            continue
+        if edef.families and op_def.family not in edef.families:
+            ctx.error("E_EPILOGUE_FAMILY",
+                      f">> {ep.name}() applies to "
+                      f"{'/'.join(edef.families)} operations, not "
+                      f"{op_def.family}",
+                      hint="vector-aux epilogues (bias, scales, residual) "
+                           "need an output N axis to broadcast along",
+                      line=ep.line)
+            continue
+        if ep.name == "custom":
+            if chip.generation < edef.min_generation:
+                ctx.error("E_EPILOGUE_ARCH",
+                          f"custom() epilogues require TPU v5+ (arch {arch})",
+                          line=ep.line)
+            expr = ep.kwargs.get("expr") or (ep.args[0] if ep.args else None)
+            inputs = ep.kwargs.get("inputs", {})
+            if not isinstance(expr, str):
+                ctx.error("E_CUSTOM_EXPR",
+                          "custom() needs a quoted expression, e.g. "
+                          "custom('x * sigmoid(x)')", line=ep.line)
+                continue
+            if not isinstance(inputs, dict):
+                ctx.error("E_CUSTOM_INPUT",
+                          "custom inputs must be a {'name': 'spec'} dict",
+                          line=ep.line)
+                inputs = {}
+            try:
+                check_custom_expr(expr, list(inputs))
+            except CustomExprError as e:
+                ctx.error("E_CUSTOM_EXPR", f"custom expression invalid: {e}",
+                          line=ep.line)
+                continue
+            epilogues.append(EpilogueIR(
+                name="custom", params=(("expr", expr),), expr=expr,
+                inputs=tuple(sorted(inputs.items()))))
+        else:
+            params = _check_params(ctx, ep, edef.params, f">> {ep.name}")
+            epilogues.append(EpilogueIR(
+                name=ep.name,
+                params=tuple(sorted(params.items()))))
+
+    return KernelIR(
+        op_name=node.op.name,
+        op_params=tuple(sorted(op_params.items())),
+        arch=arch,
+        dtypes=dtypes,
+        layout=layout,
+        tile=tile,
+        block=block,
+        chunk=chunk,
+        stages=stages,
+        split_k=split_k,
+        swap=swap,
+        vmem_limit_mb=vmem_limit_mb,
+        dimension_semantics=dim_semantics,
+        precision=precision,
+        epilogues=tuple(epilogues),
+    )
+
+
+def _lower_transform(ctx: _Ctx, node: TransformNode) -> Optional[TransformIR]:
+    if node.target not in _VALID_TRANSPOSE_TARGETS:
+        ctx.error("E_TRANSPOSE_TARGET",
+                  f"transpose target must be input|output, got "
+                  f"{node.target!r}", line=node.line)
+    for lay in (node.src_layout, node.dst_layout):
+        if lay not in _VALID_LAYOUT_NAMES:
+            ctx.error("E_TRANSPOSE_LAYOUT",
+                      f"unknown layout {lay!r}",
+                      hint=f"layouts: {', '.join(_VALID_LAYOUT_NAMES)}",
+                      line=node.line)
+    if node.src_layout == node.dst_layout and node.src_dtype is None:
+        ctx.error("E_TRANSPOSE_NOOP",
+                  "transpose with identical layouts and no dtype conversion "
+                  "is a no-op", line=node.line)
+    sd = dd = None
+    if node.src_dtype is not None:
+        sd = _canon_dtype_or_err(ctx, node.src_dtype, "transpose src dtype",
+                                 node.line)
+        dd = _canon_dtype_or_err(ctx, node.dst_dtype, "transpose dst dtype",
+                                 node.line)
+    if ctx.errors:
+        return None
+    return TransformIR(node.target, node.src_layout, node.dst_layout, sd, dd)
+
+
+def lower_and_validate(program: Program):
+    """Lower a parsed AST to IR, raising DSLValidationError on any error.
+
+    Returns (ir, warnings).
+    """
+    ctx = _Ctx()
+    ir: Optional[ProgramIR]
+    if isinstance(program, PipelineNode):
+        stages = []
+        n_kernels = 0
+        for st in program.stages:
+            if isinstance(st, TransformNode):
+                t = _lower_transform(ctx, st)
+                if t is not None:
+                    stages.append(t)
+            else:
+                k = _lower_kernel(ctx, st)
+                if k is not None:
+                    stages.append(k)
+                    n_kernels += 1
+        if n_kernels == 0:
+            ctx.error("E_PIPELINE_EMPTY",
+                      "pipeline(...) needs at least one kernel stage",
+                      hint="transform-only pipelines do no compute; add a "
+                           "gemm()/attention()/... stage")
+        ir = PipelineIR(stages=tuple(stages))
+    else:
+        ir = _lower_kernel(ctx, program)
+
+    if ctx.errors:
+        raise DSLValidationError(ctx.errors)
+    assert ir is not None
+    return ir, ctx.warnings

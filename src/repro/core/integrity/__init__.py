@@ -1,0 +1,9 @@
+"""SOL-guided integrity checking pipeline."""
+
+from .pipeline import (ACCEPTED, GAMING_LABELS, SOL_CEILING_SLACK,
+                       AttemptReview, InflationReport, category_breakdown,
+                       inflation, review_attempt, review_log, review_logs)
+
+__all__ = ["ACCEPTED", "GAMING_LABELS", "SOL_CEILING_SLACK", "AttemptReview",
+           "InflationReport", "category_breakdown", "inflation",
+           "review_attempt", "review_log", "review_logs"]

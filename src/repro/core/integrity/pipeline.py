@@ -1,0 +1,156 @@
+"""SOL-guided integrity checking (paper Sec. 4.4 / 5.8 / 6.3).
+
+Three detectors, applied offline to every attempt in a run log:
+
+  1. SOL-ceiling detector — measured runtime more than 10% below the
+     reduced-precision (bf16) SOL bound is physically implausible.
+  2. Game detector (the LGD analogue) — rule-based review of the candidate
+     against the problem spec; labels No Issues / Minor Issues / Gaming,
+     with Gaming split into Original vs Inherited and subcategorized
+     (constant output, skipped step, input exploitation).
+  3. Library-only detector — candidates that merely compose framework
+     library calls without any agent-authored kernel (the paper's
+     PyTorch-only detector parsing NCU launch signatures; here the
+     passthrough marker plays that role).
+
+Label precedence (paper: mutually exclusive, PyTorch-only wins over LGD
+gaming): library_only > sol_ceiling > gaming > minor > no_issues.
+Accepted labels: no_issues, minor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from ..agent.runlog import Attempt, RunLog
+
+SOL_CEILING_SLACK = 0.90      # flag when runtime < 0.9 * t_sol_ceiling
+
+ACCEPTED = ("no_issues", "minor")
+GAMING_LABELS = ("original_gaming", "inherited_gaming")
+
+
+@dataclass
+class AttemptReview:
+    label: str                     # no_issues|minor|sol_ceiling|
+    #                                pytorch_only|original_gaming|
+    #                                inherited_gaming
+    category: str = ""             # sub-category for Fig-11-style breakdown
+    reasons: List[str] = field(default_factory=list)
+
+
+def review_attempt(attempt: Attempt, log: RunLog) -> AttemptReview:
+    if not attempt.ok:
+        return AttemptReview(label="failed")
+
+    flags = set(attempt.flags)
+
+    # 3) library-only static detector (mutually exclusive winner)
+    if "passthrough" in flags:
+        return AttemptReview(label="pytorch_only",
+                             category="library_composition",
+                             reasons=["no agent-authored kernel in profile"])
+
+    # 1) SOL-ceiling detector
+    if attempt.runtime_s < SOL_CEILING_SLACK * log.t_sol_ceiling:
+        cat = "constant_or_skipped"
+        if "input_exploit" in flags:
+            cat = "benchmark_input_exploitation"
+        return AttemptReview(
+            label="sol_ceiling", category=cat,
+            reasons=[f"runtime {attempt.runtime_s:.3e}s beats the bf16 SOL "
+                     f"ceiling {log.t_sol_ceiling:.3e}s by more than 10%"])
+
+    # 2) game detector
+    gaming_cat = None
+    if "constant_output" in flags:
+        gaming_cat = "constant_or_hardcoded_output"
+    elif any(f.startswith("skip:") for f in flags):
+        gaming_cat = "skipped_computation_step"
+    elif "input_exploit" in flags:
+        gaming_cat = "benchmark_input_exploitation"
+    if gaming_cat is not None:
+        label = "inherited_gaming" if attempt.inherited else "original_gaming"
+        return AttemptReview(label=label, category=gaming_cat,
+                             reasons=[f"LGD: {gaming_cat}"])
+
+    # minor issues
+    if "reduced_precision" in flags:
+        return AttemptReview(
+            label="minor", category="minor_math_approximation",
+            reasons=["bf16 compute on an fp32-specified problem (passes "
+                     "tolerance; performance effect immaterial)"])
+    return AttemptReview(label="no_issues")
+
+
+def review_log(log: RunLog) -> Dict[str, int]:
+    """Label every attempt in place; return label counts."""
+    counts: Dict[str, int] = {}
+    for a in log.attempts:
+        r = review_attempt(a, log)
+        a.label = r.label
+        counts[r.label] = counts.get(r.label, 0) + 1
+    return counts
+
+
+def review_logs(logs: Sequence[RunLog]) -> Dict[str, int]:
+    total: Dict[str, int] = {}
+    for log in logs:
+        for k, v in review_log(log).items():
+            total[k] = total.get(k, 0) + v
+    return total
+
+
+def category_breakdown(logs: Sequence[RunLog]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for log in logs:
+        for a in log.attempts:
+            r = review_attempt(a, log)
+            if r.category:
+                out[r.category] = out.get(r.category, 0) + 1
+    return out
+
+
+@dataclass
+class InflationReport:
+    """Speedup inflation without the integrity pipeline (paper Fig. 12)."""
+
+    filtered_geomean: float
+    allow_pytorch_only: float
+    allow_gaming: float
+    unfiltered: float
+
+    @property
+    def max_inflation(self) -> float:
+        if self.filtered_geomean <= 0:
+            return 0.0
+        return self.unfiltered / self.filtered_geomean
+
+
+def inflation(logs: Sequence[RunLog]) -> InflationReport:
+    from ..schedule.metrics import geomean
+
+    def best_with(allowed: Sequence[str]) -> List[float]:
+        out = []
+        for log in logs:
+            best = 0.0
+            for a in log.attempts:
+                if a.ok and a.label in allowed:
+                    best = max(best, a.speedup)
+            out.append(best)
+        return out
+
+    for log in logs:
+        review_log(log)
+    accepted = list(ACCEPTED)
+    return InflationReport(
+        filtered_geomean=geomean(best_with(accepted)),
+        allow_pytorch_only=geomean(best_with(accepted + ["pytorch_only"])),
+        allow_gaming=geomean(best_with(
+            accepted + ["pytorch_only", "original_gaming",
+                        "inherited_gaming"])),
+        unfiltered=geomean(best_with(
+            accepted + ["pytorch_only", "original_gaming",
+                        "inherited_gaming", "sol_ceiling"])),
+    )

@@ -1,0 +1,8 @@
+"""KernelBench-JAX problem suite."""
+
+from .base import Problem, Segment, Solution, seg
+from .suite import (all_problems, get_problem, problem_ids,
+                    degenerate_problem)
+
+__all__ = ["Problem", "Segment", "Solution", "seg", "all_problems",
+           "get_problem", "problem_ids", "degenerate_problem"]

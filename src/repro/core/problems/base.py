@@ -1,0 +1,175 @@
+"""Problem / segment / solution datamodel for the KernelBench-JAX suite.
+
+A *problem* is a reference computation (paper: a KernelBench task) described
+two ways:
+  * ``segments`` — the full-scale operator graph the SOL analysis and the
+    analytic TPU cost model consume (no allocation; dims can be huge), and
+  * ``reference`` + ``make_inputs`` — a reduced-scale executable jnp
+    reference for real correctness checking on CPU.
+
+A *solution* (candidate) is what an agent emits: one muPallas program per
+segment plus fusion decisions.  Gaming candidates carry explicit flags the
+integrity pipeline must catch (the deterministic analogue of the paper's
+LLM exploits).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..sol.characterize import (Characterization, OpSpec, TensorSpec,
+                                attention_flops, conv1d_flops, gemm_flops,
+                                ssd_scan_flops)
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One DSL-addressable operator at full (paper) scale."""
+
+    name: str
+    kind: str          # matmul|attention|eltwise|norm|reduce|scan|ssd|xent
+    dims: Tuple[Tuple[str, object], ...]   # sorted (key, value) pairs
+    # eltwise segments directly after a matmul/conv can fold into its epilogue
+    fusable: bool = False
+    # epilogue op name when fused (for plan generation)
+    epilogue_op: Optional[str] = None
+
+    def dim(self, key: str, default=None):
+        for k, v in self.dims:
+            if k == key:
+                return v
+        return default
+
+    # ---- characterization ------------------------------------------------
+    def flops(self) -> float:
+        d = dict(self.dims)
+        if self.kind == "matmul":
+            return gemm_flops(d["m"], d["n"], d["k"], d.get("batch", 1))
+        if self.kind == "attention":
+            return attention_flops(d["b"], d["sq"], d["skv"], d["h"],
+                                   d["d"], d.get("causal", False))
+        if self.kind == "eltwise":
+            return float(d.get("flops_per_elem", 1.0)) * d["numel"]
+        if self.kind == "norm":
+            per = {"rmsnorm": 4.0, "layernorm": 6.0, "softmax": 5.0}[d["norm"]]
+            return per * d["rows"] * d["d"]
+        if self.kind == "reduce":
+            return float(d["numel"])
+        if self.kind == "scan":
+            return float(d["numel"])
+        if self.kind == "ssd":
+            return ssd_scan_flops(d["b"], d["t"], d["h"], d["p"], d["n"])
+        if self.kind == "xent":
+            return 5.0 * d["rows"] * d["vocab"]
+        raise KeyError(self.kind)
+
+    def io_bytes(self, in_bytes: int = 4, out_bytes: int = 4) -> Tuple[float, float]:
+        """(input_bytes, output_bytes) — unique external tensors only."""
+        d = dict(self.dims)
+        if self.kind == "matmul":
+            batch = d.get("batch", 1)
+            return (batch * (d["m"] * d["k"] + d["k"] * d["n"]) * in_bytes,
+                    batch * d["m"] * d["n"] * out_bytes)
+        if self.kind == "attention":
+            q = d["b"] * d["sq"] * d["h"] * d["d"]
+            kv = 2 * d["b"] * d["skv"] * d.get("h_kv", d["h"]) * d["d"]
+            return ((q + kv) * in_bytes, q * out_bytes)
+        if self.kind == "eltwise":
+            return (d["numel"] * in_bytes, d["numel"] * out_bytes)
+        if self.kind == "norm":
+            n = d["rows"] * d["d"]
+            return (n * in_bytes, n * out_bytes)
+        if self.kind in ("reduce",):
+            return (d["numel"] * in_bytes,
+                    d["numel"] / max(d.get("axis_len", 1), 1) * out_bytes)
+        if self.kind == "scan":
+            return (d["numel"] * in_bytes, d["numel"] * out_bytes)
+        if self.kind == "ssd":
+            x = d["b"] * d["t"] * d["h"] * d["p"]
+            bc = 2 * d["b"] * d["t"] * d["n"]
+            dt = d["b"] * d["t"] * d["h"]
+            return ((x + bc + dt) * in_bytes, x * out_bytes)
+        if self.kind == "xent":
+            return (d["rows"] * d["vocab"] * in_bytes, d["rows"] * out_bytes)
+        raise KeyError(self.kind)
+
+
+def seg(name: str, kind: str, fusable: bool = False,
+        epilogue_op: Optional[str] = None, **dims) -> Segment:
+    return Segment(name=name, kind=kind,
+                   dims=tuple(sorted(dims.items())),
+                   fusable=fusable, epilogue_op=epilogue_op)
+
+
+@dataclass
+class Problem:
+    pid: str                     # e.g. "L1/23"
+    level: int
+    name: str
+    rationale: str               # why it's in the LLM-relevant subset
+    segments: List[Segment]
+    # reduced-scale executable pieces
+    make_inputs: Optional[Callable] = None     # rng -> tuple of arrays
+    reference: Optional[Callable] = None       # jnp reference
+    # a known-valid DSL plan (segment name -> DSL source); used by tests and
+    # as the seed of the DSL-aware policies
+    dsl_template: Dict[str, str] = field(default_factory=dict)
+    # problems whose spec admits an algebraic shortcut (paper Sec. 4.4)
+    degenerate: bool = False
+
+    # ---- SOL characterization (fused best case, fp32 boundaries) ---------
+    def characterization(self) -> Characterization:
+        ops: List[OpSpec] = []
+        for i, s in enumerate(self.segments):
+            inb, outb = s.io_bytes()
+            reads = [TensorSpec((int(inb // 4),), "fp32", f"{s.name}_in")]
+            writes = [TensorSpec((int(outb // 4),), "fp32", f"{s.name}_out")]
+            if i > 0:
+                # chain: this segment's first input is the previous output
+                prev = ops[-1].writes[0]
+                extra = max(int(inb // 4) - prev.size, 0)
+                reads = [prev] + ([TensorSpec((extra,), "fp32",
+                                              f"{s.name}_extra")]
+                                  if extra else [])
+            ops.append(OpSpec(name=s.name, flops=s.flops(),
+                              reads=reads, writes=writes))
+        return Characterization(problem=self.pid, ops=ops, fused=True)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(s.flops() for s in self.segments)
+
+    @property
+    def matmul_segments(self) -> List[Segment]:
+        return [s for s in self.segments
+                if s.kind in ("matmul", "attention", "ssd")]
+
+
+@dataclass
+class Solution:
+    """A candidate: per-segment DSL programs + fusion decisions + flags.
+
+    ``flags`` model agent behaviours the integrity pipeline must catch:
+      skip:<segment>   — the plan omits a required segment (gaming)
+      constant_output  — returns a cached/precomputed tensor (gaming)
+      passthrough      — delegates to the library reference (library-only)
+      input_exploit    — shape-calibrated shortcut (gaming)
+    """
+
+    plans: Dict[str, str] = field(default_factory=dict)
+    fused: Dict[str, bool] = field(default_factory=dict)
+    flags: frozenset = frozenset()
+    note: str = ""
+    # hand-written low-level code carries an implementation-quality factor
+    # (>= 1.0 multiplies runtime); compiler-generated muPallas code is 1.0 —
+    # this is the paper's central representation claim made explicit.
+    quality: float = 1.0
+
+    def is_gaming(self) -> bool:
+        return any(f.startswith("skip:") or f in
+                   ("constant_output", "input_exploit") for f in self.flags)
+
+    def is_passthrough(self) -> bool:
+        return "passthrough" in self.flags

@@ -1,0 +1,269 @@
+"""Level 1 — isolated single-operator problems (31 of the paper's subset).
+
+Full-scale dims drive SOL + the cost model; ``make_inputs``/``reference``
+are reduced-scale executable versions for CPU correctness checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Problem, seg
+
+_DT = "  .with_dtype(input=bf16, acc=fp32, output=bf16)"
+_GEMM_TPL = ("gemm()\n" + _DT +
+             "\n  .with_tile(m=256, n=256, k=512).with_stages(2)")
+_EW = 2**26          # elementwise tensor numel (64 Mi)
+_ROWS, _D = 16384, 4096
+
+
+def _g(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def _gemm_problem(pid, name, rationale, m, n, k, *, ta=False, tb=False,
+                  batch=1, rm=96, rn=80, rk=64):
+    segs = [seg("gemm", "matmul", m=m, n=n, k=k, batch=batch)]
+
+    def make_inputs(rng):
+        if batch > 1:
+            a = _g(rng, batch if batch <= 4 else 4, rm, rk)
+            b = _g(rng, batch if batch <= 4 else 4, rk, rn)
+            return (a, b)
+        a = _g(rng, *( (rk, rm) if ta else (rm, rk) ))
+        b = _g(rng, *( (rn, rk) if tb else (rk, rn) ))
+        return (a, b)
+
+    def reference(a, b):
+        if batch > 1:
+            return jnp.einsum("gmk,gkn->gmn", a, b)
+        if ta:
+            a = a.T
+        if tb:
+            b = b.T
+        return jnp.dot(a, b)
+
+    tpl = ("batched_gemm()\n" + _DT +
+           "\n  .with_tile(m=128, n=128, k=256)") if batch > 1 else _GEMM_TPL
+    return Problem(pid=pid, level=1, name=name, rationale=rationale,
+                   segments=segs, make_inputs=make_inputs,
+                   reference=reference, dsl_template={"gemm": tpl})
+
+
+def _eltwise_problem(pid, name, rationale, fn, flops_per_elem, dsl_op=None):
+    op = dsl_op or name
+    segs = [seg("act", "eltwise", numel=_EW, flops_per_elem=flops_per_elem,
+                fusable=True, epilogue_op=op)]
+
+    def make_inputs(rng):
+        return (_g(rng, 64, 512),)
+
+    tpl = ("eltwise().with_dtype(input=fp32, acc=fp32, output=fp32)"
+           f" >> {op}()")
+    return Problem(pid=pid, level=1, name=name, rationale=rationale,
+                   segments=segs, make_inputs=make_inputs, reference=fn,
+                   dsl_template={"act": tpl})
+
+
+def _norm_problem(pid, name, rationale, kind):
+    segs = [seg("norm", "norm", rows=_ROWS, d=_D, norm=kind)]
+
+    def make_inputs(rng):
+        if kind == "softmax":
+            return (_g(rng, 64, 512),)
+        if kind == "rmsnorm":
+            return (_g(rng, 64, 512), _g(rng, 512))
+        return (_g(rng, 64, 512), _g(rng, 512), _g(rng, 512))
+
+    if kind == "softmax":
+        ref = lambda x: jax.nn.softmax(x, axis=-1)
+        tpl = "softmax(axis=-1).with_dtype(input=fp32, acc=fp32, output=fp32)"
+    elif kind == "rmsnorm":
+        def ref(x, g):
+            ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+            return x * jax.lax.rsqrt(ms + 1e-6) * g
+        tpl = "rmsnorm(eps=0.000001).with_dtype(input=fp32, acc=fp32, output=fp32)"
+    else:
+        def ref(x, g, b):
+            mu = jnp.mean(x, axis=-1, keepdims=True)
+            v = jnp.var(x, axis=-1, keepdims=True)
+            return (x - mu) * jax.lax.rsqrt(v + 1e-5) * g + b
+        tpl = "layernorm(eps=0.00001).with_dtype(input=fp32, acc=fp32, output=fp32)"
+    return Problem(pid=pid, level=1, name=name, rationale=rationale,
+                   segments=segs, make_inputs=make_inputs, reference=ref,
+                   dsl_template={"norm": tpl})
+
+
+def build() -> list:
+    P = []
+    # --- GEMM family ---------------------------------------------------
+    P.append(_gemm_problem("L1/1", "square_gemm", "Basic GEMM baseline.",
+                           4096, 4096, 4096))
+    P.append(_gemm_problem("L1/2", "llm_gemm",
+                           "LLM-like GEMM shapes (M=2048,K=8192,N=4096).",
+                           2048, 4096, 8192))
+    P.append(_gemm_problem("L1/3", "bmm_attention",
+                           "Batched matmul used in attention score/value.",
+                           1024, 1024, 128, batch=64))
+    P.append(_gemm_problem("L1/4", "matvec_decode",
+                           "Matrix-vector multiply (single-token decode).",
+                           16384, 128, 16384, rn=16))
+    P.append(_gemm_problem("L1/6", "large_k_gemm",
+                           "Matmul with large K (MLP projections).",
+                           1024, 1024, 32768))
+    P.append(_gemm_problem("L1/7", "small_k_gemm",
+                           "Matmul with small K (attention head dim).",
+                           4096, 4096, 128))
+    P.append(_gemm_problem("L1/8", "irregular_gemm",
+                           "Non-power-of-2 shapes that occur in practice.",
+                           3000, 3000, 3000))
+    P.append(_gemm_problem("L1/9", "tall_skinny_gemm",
+                           "Tall-skinny matmul (long-sequence prefill).",
+                           65536, 2048, 2048))
+    P.append(_gemm_problem("L1/16", "gemm_at", "Transposed-A layout variant.",
+                           4096, 4096, 4096, ta=True))
+    P.append(_gemm_problem("L1/17", "gemm_bt",
+                           "Transposed-B layout (weight matrices).",
+                           4096, 4096, 4096, tb=True))
+    P.append(_gemm_problem("L1/18", "gemm_atbt", "Both operands transposed.",
+                           4096, 4096, 4096, ta=True, tb=True))
+    # --- activations ------------------------------------------------------
+    P.append(_eltwise_problem("L1/21", "sigmoid", "Gating patterns (GLU).",
+                              jax.nn.sigmoid, 4, "sigmoid"))
+    P.append(_eltwise_problem("L1/22", "tanh", "Gating/activation variants.",
+                              jnp.tanh, 4, "tanh"))
+    P.append(_norm_problem("L1/23", "softmax", "Core attention primitive.",
+                           "softmax"))
+    P.append(_eltwise_problem("L1/25", "silu", "Dominant MLP activation.",
+                              lambda x: x * jax.nn.sigmoid(x), 5, "silu"))
+    P.append(_eltwise_problem("L1/26", "gelu", "GPT-2/BERT activation.",
+                              lambda x: jax.nn.gelu(x, approximate=True),
+                              8, "gelu"))
+    P.append(_norm_problem("L1/36", "rmsnorm",
+                           "Dominant normalization in decoder LLMs.",
+                           "rmsnorm"))
+    P.append(_norm_problem("L1/40", "layernorm",
+                           "Used in many transformer variants.", "layernorm"))
+    # --- reductions ---------------------------------------------------
+    for pid, nm, rat, red in (("L1/47", "sum_reduce",
+                               "Sum inside normalization/statistics.", "sum"),
+                              ("L1/48", "mean_reduce",
+                               "Mean inside LayerNorm/statistics.", "mean")):
+        segs = [seg("reduce", "reduce", numel=_EW, axis_len=_D)]
+        fn = jnp.sum if red == "sum" else jnp.mean
+        P.append(Problem(
+            pid=pid, level=1, name=nm, rationale=rat, segments=segs,
+            make_inputs=lambda rng: (_g(rng, 64, 512),),
+            reference=(lambda f: (lambda x: f(x, axis=-1)))(fn),
+            dsl_template={"reduce": f"reduce(op={red}, axis=-1)"
+                          ".with_dtype(input=fp32, acc=fp32, output=fp32)"}))
+    # --- convs --------------------------------------------------------
+    def conv_problem(pid, nm, rat, stride):
+        b, l, cin, cout, kw = 16, 4096, 1024, 1024, 4
+        segs = [seg("conv", "matmul", m=b * l // stride, n=cout, k=kw * cin)]
+
+        def make_inputs(rng):
+            return (_g(rng, 2, 128, 32), _g(rng, 4, 32, 24))
+
+        def ref(x, w):
+            return jax.lax.conv_general_dilated(
+                x, w, window_strides=(stride,), padding="SAME",
+                dimension_numbers=("NWC", "WIO", "NWC"))
+
+        tpl = (f"conv1d(kernel_w=4, stride={stride})\n" + _DT +
+               "\n  .with_tile(m=256, n=256, k=512)")
+        return Problem(pid=pid, level=1, name=nm, rationale=rat,
+                       segments=segs, make_inputs=make_inputs, reference=ref,
+                       dsl_template={"conv": tpl})
+
+    P.append(conv_problem("L1/67", "conv1d_ssm",
+                          "1D convolution in SSM/long-conv text models.", 1))
+    P.append(conv_problem("L1/76", "strided_conv1d",
+                          "Strided conv variant (hierarchical SSM).", 2))
+
+    # depthwise-separable = depthwise (memory-bound) + pointwise matmul
+    b, l, c = 16, 16384, 1024
+    P.append(Problem(
+        pid="L1/86", name="depthwise_separable",
+        rationale="Depthwise-separable conv (channel-wise processing).",
+        level=1,
+        segments=[seg("dw", "eltwise", numel=b * l * c, flops_per_elem=8),
+                  seg("pw", "matmul", m=b * l, n=c, k=c)],
+        make_inputs=lambda rng: (_g(rng, 2, 64, 32), _g(rng, 4, 32),
+                                 _g(rng, 32, 24)),
+        reference=lambda x, wd, wp: jnp.einsum(
+            "blc,cn->bln",
+            jax.lax.conv_general_dilated(
+                x, wd[:, None, :], window_strides=(1,), padding="SAME",
+                dimension_numbers=("NWC", "WIO", "NWC"),
+                feature_group_count=x.shape[-1]), wp),
+        dsl_template={"pw": _GEMM_TPL}))
+    P.append(_gemm_problem("L1/87", "pointwise_conv",
+                           "Pointwise 1x1 conv (channel mixing).",
+                           65536, 1024, 1024))
+    P.append(_eltwise_problem("L1/88", "fast_gelu",
+                              "Fast GELU approximation.",
+                              lambda x: jax.nn.gelu(x, approximate=True),
+                              8, "gelu"))
+    # --- scans ----------------------------------------------------------
+    def scan_problem(pid, nm, rat, fn, tpl, bounded=False):
+        segs = [seg("scan", "scan", numel=_EW, axis_len=16384)]
+        mk = (lambda rng: (rng.uniform(-0.9, 0.9, (32, 256))
+                           .astype(np.float32),)) if bounded else \
+             (lambda rng: (_g(rng, 32, 256),))
+        return Problem(pid=pid, level=1, name=nm, rationale=rat,
+                       segments=segs, make_inputs=mk,
+                       reference=fn, dsl_template={"scan": tpl})
+
+    _dt32 = ".with_dtype(input=fp32, acc=fp32, output=fp32)"
+    P.append(scan_problem("L1/89", "cumsum",
+                          "Prefix scan in SSM/linear-attention recurrences.",
+                          lambda x: jnp.cumsum(x, axis=-1),
+                          "cumsum(axis=-1)" + _dt32))
+    P.append(scan_problem("L1/90", "cumprod", "State-space dynamics.",
+                          lambda x: jnp.cumprod(x, axis=-1),
+                          "cumprod(axis=-1)" + _dt32, bounded=True))
+    P.append(scan_problem("L1/91", "exclusive_cumsum", "Scan coverage.",
+                          lambda x: jnp.pad(
+                              jnp.cumsum(x, axis=-1)[..., :-1],
+                              ((0, 0), (1, 0))),
+                          "cumsum(axis=-1, exclusive=true)" + _dt32))
+    P.append(scan_problem("L1/92", "reverse_cumsum",
+                          "Reverse-time scan coverage.",
+                          lambda x: jnp.flip(
+                              jnp.cumsum(jnp.flip(x, -1), axis=-1), -1),
+                          "cumsum(axis=-1, reverse=true)" + _dt32))
+    # --- losses / attention ------------------------------------------
+    P.append(Problem(
+        pid="L1/95", name="cross_entropy",
+        rationale="Standard LLM training objective.", level=1,
+        segments=[seg("xent", "xent", rows=8192, vocab=131072)],
+        make_inputs=lambda rng: (
+            _g(rng, 64, 1000),
+            rng.integers(0, 1000, (64,)).astype(np.int32)),
+        reference=lambda lg, lb: jnp.mean(
+            jax.scipy.special.logsumexp(lg, axis=-1)
+            - jnp.take_along_axis(lg, lb[:, None], axis=-1)[:, 0]),
+        dsl_template={"xent": "cross_entropy(reduction=mean)" + _dt32}))
+
+    def sdpa_ref(q, k, v):
+        b_, s, h, d = q.shape
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (d ** 0.5)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), v)
+
+    P.append(Problem(
+        pid="L1/97", name="sdpa",
+        rationale="Scaled dot-product attention (FlashAttention).", level=1,
+        segments=[seg("attn", "attention", b=16, h=32, h_kv=32, sq=4096,
+                      skv=4096, d=128, causal=True)],
+        make_inputs=lambda rng: (_g(rng, 2, 128, 4, 64),
+                                 _g(rng, 2, 128, 4, 64),
+                                 _g(rng, 2, 128, 4, 64)),
+        reference=sdpa_ref,
+        dsl_template={"attn": "attention(causal=true)\n" + _DT +
+                      "\n  .with_block(q=128, kv=256)"}))
+    return P

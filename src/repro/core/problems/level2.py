@@ -1,0 +1,300 @@
+"""Level 2 — fused multi-operator problems (20 of the paper's subset).
+
+Each problem is a GEMM/BMM plus an elementwise/normalization tail; the whole
+point of this level is that a good agent folds the tail into the kernel
+epilogue (one HBM round-trip) while the baseline pays a pass per op.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Problem, seg
+
+_DT = "  .with_dtype(input=bf16, acc=fp32, output=bf16)"
+M, N, K = 4096, 4096, 4096
+_NUMEL = M * N
+
+
+def _g(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def _fusion_problem(pid, name, rationale, tail, reference, make_inputs,
+                    dsl, m=M, n=N, k=K, extra_segments=()):
+    """tail: list of (seg_name, epilogue_op, flops_per_elem, fusable)."""
+    segs = [seg("gemm", "matmul", m=m, n=n, k=k)]
+    for tname, ep_op, fpe, fusable in tail:
+        segs.append(seg(tname, "eltwise", numel=m * n, flops_per_elem=fpe,
+                        fusable=fusable, epilogue_op=ep_op))
+    segs.extend(extra_segments)
+    return Problem(pid=pid, level=2, name=name, rationale=rationale,
+                   segments=segs, make_inputs=make_inputs,
+                   reference=reference, dsl_template=dsl)
+
+
+def build() -> list:
+    P = []
+    rm, rn, rk = 96, 80, 64
+
+    def mk_ab(rng):
+        return (_g(rng, rm, rk), _g(rng, rk, rn))
+
+    def mk_ab_bias(rng):
+        return (_g(rng, rm, rk), _g(rng, rk, rn), _g(rng, rn))
+
+    gemm_tpl = ("gemm()\n" + _DT +
+                "\n  .with_tile(m=256, n=256, k=512).with_stages(2)")
+
+    # L2/9: fused matmul + elementwise
+    P.append(_fusion_problem(
+        "L2/9", "gemm_gelu", "Proxy for epilogue and MLP fusions.",
+        [("act", "gelu", 8, True)],
+        lambda a, b: jax.nn.gelu(a @ b, approximate=True), mk_ab,
+        {"gemm": gemm_tpl + " >> gelu()"}))
+
+    # L2/28: BMM fusion representative of MHA dataflow
+    bh, s, d = 64, 1024, 128
+    P.append(Problem(
+        pid="L2/28", name="bmm_softmax_bmm",
+        rationale="BMM fusion representative of multi-head attention.",
+        level=2,
+        segments=[seg("scores", "matmul", m=s, n=s, k=d, batch=bh),
+                  seg("softmax", "norm", rows=bh * s, d=s, norm="softmax"),
+                  seg("pv", "matmul", m=s, n=d, k=s, batch=bh)],
+        make_inputs=lambda rng: (_g(rng, 2, 64, 32), _g(rng, 2, 64, 32),
+                                 _g(rng, 2, 64, 32)),
+        reference=lambda q, k, v: jnp.einsum(
+            "bqk,bkd->bqd",
+            jax.nn.softmax(jnp.einsum("bqd,bkd->bqk", q, k)
+                           / (q.shape[-1] ** 0.5), -1), v),
+        dsl_template={"scores": "attention(causal=false)\n" + _DT +
+                      "\n  .with_block(q=128, kv=256)"}))
+
+    # L2/29: fused linear + activation
+    P.append(_fusion_problem(
+        "L2/29", "linear_silu", "MLP fusion pattern.",
+        [("act", "silu", 5, True)],
+        lambda a, b: (lambda x: x * jax.nn.sigmoid(x))(a @ b), mk_ab,
+        {"gemm": gemm_tpl + " >> silu()"}, m=8192, n=8192, k=2048))
+
+    # L2/37: fused linear + normalization
+    P.append(Problem(
+        pid="L2/37", name="linear_rmsnorm",
+        rationale="Proxy for norm-adjacent fusions.", level=2,
+        segments=[seg("gemm", "matmul", m=M, n=N, k=K),
+                  seg("norm", "norm", rows=M, d=N, norm="rmsnorm")],
+        make_inputs=lambda rng: (_g(rng, rm, rk), _g(rng, rk, rn),
+                                 _g(rng, rn)),
+        reference=lambda a, b, g: (lambda x: x * jax.lax.rsqrt(
+            jnp.mean(jnp.square(x), -1, keepdims=True) + 1e-6) * g)(a @ b),
+        dsl_template={"gemm": gemm_tpl,
+                      "norm": "rmsnorm(eps=0.000001)"
+                      ".with_dtype(input=bf16, acc=fp32, output=bf16)"}))
+
+    # L2/40: fused linear + residual add
+    P.append(_fusion_problem(
+        "L2/40", "linear_residual", "Transformer block core pattern.",
+        [("res", "residual_add", 1, True)],
+        lambda a, b, r: a @ b + r,
+        lambda rng: (_g(rng, rm, rk), _g(rng, rk, rn), _g(rng, rm, rn)),
+        {"gemm": gemm_tpl + " >> residual_add()"}))
+
+    # L2/41: GEMM + multi-activation fusion
+    P.append(_fusion_problem(
+        "L2/41", "gemm_multi_act", "MLP epilogue diversity.",
+        [("act1", "gelu", 8, True), ("act2", "tanh", 4, True)],
+        lambda a, b: jnp.tanh(jax.nn.gelu(a @ b, approximate=True)), mk_ab,
+        {"gemm": gemm_tpl + " >> gelu() >> tanh()"}))
+
+    # L2/53: GEMM + activation (+ scaling)
+    P.append(_fusion_problem(
+        "L2/53", "gemm_relu_scale", "Activation/scaling variants.",
+        [("act", "relu", 1, True), ("sc", "scale", 1, True)],
+        lambda a, b: jnp.maximum(a @ b, 0) * 0.5, mk_ab,
+        {"gemm": gemm_tpl + " >> relu() >> scale(value=0.5)"}))
+
+    # L2/56: matmul + gating + reduction
+    P.append(Problem(
+        pid="L2/56", name="gemm_gate_reduce",
+        rationale="Proxy for gated aggregation patterns.", level=2,
+        segments=[seg("gemm", "matmul", m=M, n=N, k=K),
+                  seg("gate", "eltwise", numel=_NUMEL, flops_per_elem=4,
+                      fusable=True, epilogue_op="sigmoid"),
+                  seg("reduce", "reduce", numel=_NUMEL, axis_len=N)],
+        make_inputs=mk_ab,
+        reference=lambda a, b: jnp.sum(jax.nn.sigmoid(a @ b), axis=-1),
+        dsl_template={"gemm": gemm_tpl + " >> sigmoid()",
+                      "reduce": "reduce(op=sum, axis=-1)"
+                      ".with_dtype(input=bf16, acc=fp32, output=fp32)"}))
+
+    # L2/59: matmul + swish + scaling
+    P.append(_fusion_problem(
+        "L2/59", "gemm_swish_scale", "Common MLP fusion.",
+        [("act", "silu", 5, True), ("sc", "scale", 1, True)],
+        lambda a, b: (lambda x: x * jax.nn.sigmoid(x))(a @ b) * 2.0, mk_ab,
+        {"gemm": gemm_tpl + " >> silu() >> scale(value=2.0)"}))
+
+    # L2/62: matmul + normalization + activation
+    P.append(Problem(
+        pid="L2/62", name="gemm_norm_act",
+        rationale="Fused post-linear processing.", level=2,
+        segments=[seg("gemm", "matmul", m=M, n=N, k=K),
+                  seg("norm", "norm", rows=M, d=N, norm="layernorm"),
+                  seg("act", "eltwise", numel=_NUMEL, flops_per_elem=8,
+                      fusable=False, epilogue_op="gelu")],
+        make_inputs=lambda rng: (_g(rng, rm, rk), _g(rng, rk, rn),
+                                 _g(rng, rn), _g(rng, rn)),
+        reference=lambda a, b, g, be: jax.nn.gelu(
+            (lambda x: (x - jnp.mean(x, -1, keepdims=True))
+             * jax.lax.rsqrt(jnp.var(x, -1, keepdims=True) + 1e-5)
+             * g + be)(a @ b), approximate=True),
+        dsl_template={"gemm": gemm_tpl,
+                      "norm": "layernorm(eps=0.00001)"
+                      ".with_dtype(input=bf16, acc=fp32, output=bf16)"
+                      " >> gelu()"}))
+
+    # L2/63: GEMM + ReLU + divide
+    P.append(_fusion_problem(
+        "L2/63", "gemm_relu_div", "Activation + scaling fusion.",
+        [("act", "relu", 1, True), ("div", "scale", 1, True)],
+        lambda a, b: jnp.maximum(a @ b, 0) / 8.0, mk_ab,
+        {"gemm": gemm_tpl + " >> relu() >> scale(value=0.125)"}))
+
+    # L2/66: attention-like fusion with dropout (training pattern)
+    P.append(Problem(
+        pid="L2/66", name="attention_dropout",
+        rationale="Training attention pattern with dropout.", level=2,
+        segments=[seg("scores", "matmul", m=1024, n=1024, k=128, batch=64),
+                  seg("softmax", "norm", rows=64 * 1024, d=1024,
+                      norm="softmax"),
+                  seg("drop", "eltwise", numel=64 * 1024 * 1024,
+                      flops_per_elem=2, fusable=True, epilogue_op="scale"),
+                  seg("pv", "matmul", m=1024, n=128, k=1024, batch=64)],
+        make_inputs=lambda rng: (_g(rng, 2, 64, 32), _g(rng, 2, 64, 32),
+                                 _g(rng, 2, 64, 32)),
+        # deterministic "inference-mode" dropout: scale by keep prob
+        reference=lambda q, k, v: jnp.einsum(
+            "bqk,bkd->bqd",
+            jax.nn.softmax(jnp.einsum("bqd,bkd->bqk", q, k)
+                           / (q.shape[-1] ** 0.5), -1) * 0.9, v),
+        dsl_template={"scores": "attention(causal=false)\n" + _DT +
+                      "\n  .with_block(q=128, kv=256)"}))
+
+    # L2/70: GEMM + sigmoid gate + residual add (SwiGLU-like)
+    P.append(_fusion_problem(
+        "L2/70", "gemm_gate_residual", "SwiGLU-like gating proxy.",
+        [("gate", "custom", 5, True), ("res", "residual_add", 1, True)],
+        lambda a, b, r: (lambda x: x * jax.nn.sigmoid(x))(a @ b) + r,
+        lambda rng: (_g(rng, rm, rk), _g(rng, rk, rn), _g(rng, rm, rn)),
+        {"gemm": gemm_tpl + " >> custom('x * sigmoid(x)') >> residual_add()"}))
+
+    # L2/76: GEMM + bias add + ReLU (classic epilogue fusion)
+    P.append(_fusion_problem(
+        "L2/76", "gemm_bias_relu", "Classic epilogue fusion.",
+        [("bias", "bias", 1, True), ("act", "relu", 1, True)],
+        lambda a, b, bi: jnp.maximum(a @ b + bi[None, :], 0), mk_ab_bias,
+        {"gemm": gemm_tpl + " >> bias() >> relu()"}))
+
+    # L2/81: complex epilogue fusion with Swish
+    P.append(_fusion_problem(
+        "L2/81", "gemm_bias_swish_clamp", "Stress fused elementwise.",
+        [("bias", "bias", 1, True), ("act", "silu", 5, True),
+         ("cl", "clamp", 2, True)],
+        lambda a, b, bi: jnp.clip(
+            (lambda x: x * jax.nn.sigmoid(x))(a @ b + bi[None, :]),
+            -1.0, 1.0),
+        mk_ab_bias,
+        {"gemm": gemm_tpl +
+         " >> bias() >> silu() >> clamp(min=-1.0, max=1.0)"}))
+
+    # L2/86: matmul + divide + GELU
+    P.append(_fusion_problem(
+        "L2/86", "gemm_div_gelu", "MLP fusion with scaling.",
+        [("div", "scale", 1, True), ("act", "gelu", 8, True)],
+        lambda a, b: jax.nn.gelu((a @ b) * 0.25, approximate=True), mk_ab,
+        {"gemm": gemm_tpl + " >> scale(value=0.25) >> gelu()"}))
+
+    # L2/88: SwiGLU-like gated fusion (two GEMMs + gate + down proj)
+    dff = 14336
+    P.append(Problem(
+        pid="L2/88", name="swiglu_mlp",
+        rationale="Common LLM MLP pattern proxy.", level=2,
+        segments=[seg("up", "matmul", m=M, n=dff, k=K),
+                  seg("gatep", "matmul", m=M, n=dff, k=K),
+                  seg("gate", "eltwise", numel=M * dff, flops_per_elem=5,
+                      fusable=True, epilogue_op="custom"),
+                  seg("down", "matmul", m=M, n=K, k=dff)],
+        make_inputs=lambda rng: (_g(rng, rm, rk), _g(rng, rk, rn),
+                                 _g(rng, rk, rn), _g(rng, rn, rk)),
+        reference=lambda x, wu, wg, wd:
+            ((x @ wu) * (lambda z: z * jax.nn.sigmoid(z))(x @ wg)) @ wd,
+        dsl_template={
+            "up": gemm_tpl,
+            "gatep": gemm_tpl +
+            " >> custom('(x * sigmoid(x)) * u', inputs={'u': 'full'})",
+            "down": gemm_tpl}))
+
+    # L2/94: expert MLP proxy: grouped GEMM + bias/activation + norm
+    experts = 8
+    P.append(Problem(
+        pid="L2/94", name="expert_mlp",
+        rationale="Expert MLP: grouped GEMM + bias/act + normalization.",
+        level=2,
+        segments=[seg("egemm", "matmul", m=M // experts, n=dff, k=K,
+                      batch=experts),
+                  seg("bias", "eltwise", numel=M * dff, flops_per_elem=1,
+                      fusable=True, epilogue_op="bias"),
+                  seg("act", "eltwise", numel=M * dff, flops_per_elem=8,
+                      fusable=True, epilogue_op="gelu"),
+                  seg("norm", "norm", rows=M, d=dff, norm="rmsnorm")],
+        make_inputs=lambda rng: (_g(rng, 4, 64, 32), _g(rng, 4, 32, 48),
+                                 _g(rng, 4, 48), _g(rng, 48)),
+        reference=lambda x, w, bi, g: (lambda y: y * jax.lax.rsqrt(
+            jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6) * g)(
+                jax.nn.gelu(jnp.einsum("gmk,gkn->gmn", x, w)
+                            + bi[:, None, :], approximate=True)),
+        dsl_template={
+            "egemm": f"grouped_gemm(expert_count={experts})\n" + _DT +
+            "\n  .with_tile(m=128, n=128, k=256) >> bias() >> gelu()",
+            "norm": "rmsnorm(eps=0.000001)"
+            ".with_dtype(input=bf16, acc=fp32, output=bf16)"}))
+
+    # L2/97: matmul + bias + norm + swish
+    P.append(Problem(
+        pid="L2/97", name="gemm_bias_norm_swish",
+        rationale="Fused post-linear processing.", level=2,
+        segments=[seg("gemm", "matmul", m=M, n=N, k=K),
+                  seg("bias", "eltwise", numel=_NUMEL, flops_per_elem=1,
+                      fusable=True, epilogue_op="bias"),
+                  seg("norm", "norm", rows=M, d=N, norm="layernorm"),
+                  seg("act", "eltwise", numel=_NUMEL, flops_per_elem=5,
+                      fusable=False, epilogue_op="silu")],
+        make_inputs=lambda rng: (_g(rng, rm, rk), _g(rng, rk, rn),
+                                 _g(rng, rn), _g(rng, rn), _g(rng, rn)),
+        reference=lambda a, b, bi, g, be: (lambda y: y * jax.nn.sigmoid(y))(
+            (lambda x: (x - jnp.mean(x, -1, keepdims=True))
+             * jax.lax.rsqrt(jnp.var(x, -1, keepdims=True) + 1e-5)
+             * g + be)(a @ b + bi[None, :])),
+        dsl_template={"gemm": gemm_tpl + " >> bias()",
+                      "norm": "layernorm(eps=0.00001)"
+                      ".with_dtype(input=bf16, acc=fp32, output=bf16)"
+                      " >> silu()"}))
+
+    # L2/99: attention-like fusion (matmul + GELU + softmax)
+    P.append(Problem(
+        pid="L2/99", name="gemm_gelu_softmax",
+        rationale="Attention-like fusion.", level=2,
+        segments=[seg("gemm", "matmul", m=M, n=N, k=K),
+                  seg("act", "eltwise", numel=_NUMEL, flops_per_elem=8,
+                      fusable=True, epilogue_op="gelu"),
+                  seg("softmax", "norm", rows=M, d=N, norm="softmax")],
+        make_inputs=mk_ab,
+        reference=lambda a, b: jax.nn.softmax(
+            jax.nn.gelu(a @ b, approximate=True), -1),
+        dsl_template={"gemm": gemm_tpl + " >> gelu()",
+                      "softmax": "softmax(axis=-1)"
+                      ".with_dtype(input=bf16, acc=fp32, output=bf16)"}))
+    return P

@@ -1,0 +1,51 @@
+"""The KernelBench-JAX suite registry: 59 problems (paper Appendix A.3).
+
+L1: 1,2,3,4,6,7,8,9,16,17,18,21,22,23,25,26,36,40,47,48,67,76,86,87,88,
+    89,90,91,92,95,97                                             (31)
+L2: 9,28,29,37,40,41,53,56,59,62,63,66,70,76,81,86,88,94,97,99     (20)
+L3: 1,2,3,43,44,48,49,50                                            (8)
+
+The degenerate L2/80 (Gemm_Max_Subtract_GELU) is available separately via
+``degenerate_problem()`` — excluded from the suite, like the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from . import level1, level2, level3
+from .base import Problem
+
+_SUITE: Optional[Dict[str, Problem]] = None
+
+
+def _build() -> Dict[str, Problem]:
+    problems: List[Problem] = []
+    problems += level1.build()
+    problems += level2.build()
+    problems += level3.build()
+    out = {}
+    for p in problems:
+        assert p.pid not in out, f"duplicate problem id {p.pid}"
+        out[p.pid] = p
+    return out
+
+
+def all_problems() -> Dict[str, Problem]:
+    global _SUITE
+    if _SUITE is None:
+        _SUITE = _build()
+    return _SUITE
+
+
+def get_problem(pid: str) -> Problem:
+    return all_problems()[pid]
+
+
+def problem_ids() -> List[str]:
+    return sorted(all_problems().keys(),
+                  key=lambda s: (int(s[1]), int(s.split("/")[1])))
+
+
+def degenerate_problem() -> Problem:
+    return level3.build_degenerate()

@@ -1,0 +1,17 @@
+"""SOL-guided budget scheduling + evaluation metrics."""
+
+from .metrics import (attempt_fastp, best_speedups, efficiency_gain, fastp,
+                      fastp_curve, geomean, median, signed_area,
+                      speedup_retention, summarize, UNSOLVED_FLOOR)
+from .scheduler import (EPSILONS, WINDOWS, ProblemReplay, ReplayResult,
+                        SchedulePolicy, best_policy, dollar_cost,
+                        pareto_frontier, replay, replay_problem, sweep)
+
+__all__ = [
+    "attempt_fastp", "best_speedups", "efficiency_gain", "fastp",
+    "fastp_curve", "geomean", "median", "signed_area", "speedup_retention",
+    "summarize", "UNSOLVED_FLOOR",
+    "EPSILONS", "WINDOWS", "ProblemReplay", "ReplayResult", "SchedulePolicy",
+    "best_policy", "dollar_cost", "pareto_frontier", "replay",
+    "replay_problem", "sweep",
+]

@@ -1,0 +1,97 @@
+"""Evaluation metrics (paper Sec. 5.6): Fast-p, Attempt-Fast-p, signed area,
+geomean/median speedups, speedup retention, efficiency gain."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ..agent.runlog import RunLog
+
+# problems with no accepted kernel get this floor so geomeans stay finite
+# (the paper assigns them "speedup zero, counting against" the variant)
+UNSOLVED_FLOOR = 0.01
+
+
+def best_speedups(logs: Sequence[RunLog], *, upto: Optional[int] = None,
+                  accepted_only: bool = True) -> List[float]:
+    return [l.best_speedup(upto=upto, accepted_only=accepted_only)
+            for l in logs]
+
+
+def geomean(values: Iterable[float], floor: float = UNSOLVED_FLOOR) -> float:
+    vals = [max(v, floor) for v in values]
+    if not vals:
+        return 0.0
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def median(values: Sequence[float]) -> float:
+    vals = sorted(values)
+    if not vals:
+        return 0.0
+    n = len(vals)
+    return (vals[n // 2] if n % 2 else
+            0.5 * (vals[n // 2 - 1] + vals[n // 2]))
+
+
+def fastp(speedups: Sequence[float], r: float) -> float:
+    """Fraction of problems whose best speedup is >= r."""
+    if not speedups:
+        return 0.0
+    return sum(1 for s in speedups if s >= r) / len(speedups)
+
+
+def fastp_curve(speedups: Sequence[float],
+                rs: Sequence[float]) -> List[Tuple[float, float]]:
+    return [(r, fastp(speedups, r)) for r in rs]
+
+
+def signed_area(speedups_a: Sequence[float], speedups_b: Sequence[float],
+                r_max: float = 16.0) -> float:
+    """∫ [P_A(r) − P_B(r)] dr over r ∈ [0, r_max].
+
+    Since Fast-p is a complementary CDF, this equals the difference in
+    arithmetic-mean speedups (clipped at r_max).
+    """
+    mean_a = sum(min(s, r_max) for s in speedups_a) / max(len(speedups_a), 1)
+    mean_b = sum(min(s, r_max) for s in speedups_b) / max(len(speedups_b), 1)
+    return mean_a - mean_b
+
+
+def attempt_fastp(logs: Sequence[RunLog], r: float, max_attempts: int,
+                  accepted_only: bool = True) -> List[Tuple[int, float]]:
+    """Attempt-Fast-p(r): %% of problems at speedup >= r after a attempts."""
+    out = []
+    for a in range(1, max_attempts + 1):
+        sp = best_speedups(logs, upto=a, accepted_only=accepted_only)
+        out.append((a, fastp(sp, r)))
+    return out
+
+
+def speedup_retention(policy_speedups: Sequence[float],
+                      fixed_speedups: Sequence[float],
+                      agg=geomean) -> float:
+    g_fixed = agg(fixed_speedups)
+    return agg(policy_speedups) / g_fixed if g_fixed else 0.0
+
+
+def efficiency_gain(g_policy: float, g_fixed: float,
+                    tok_policy: float, tok_fixed: float) -> float:
+    """gain = (g_policy / g_fixed) * (tau_fixed / tau_policy)."""
+    if g_fixed <= 0 or tok_policy <= 0:
+        return 0.0
+    return (g_policy / g_fixed) * (tok_fixed / tok_policy)
+
+
+def summarize(logs: Sequence[RunLog], accepted_only: bool = True) -> Dict:
+    sp = best_speedups(logs, accepted_only=accepted_only)
+    return {
+        "n_problems": len(logs),
+        "geomean": geomean(sp),
+        "median": median(sp),
+        "pct_over_1x": 100.0 * fastp(sp, 1.0),
+        "pct_over_2x": 100.0 * fastp(sp, 2.0),
+        "pct_over_4x": 100.0 * fastp(sp, 4.0),
+        "total_tokens": sum(l.total_tokens for l in logs),
+    }

@@ -1,0 +1,178 @@
+"""SOL-guided budget scheduling (paper Sec. 4.3 / 5.7 / 6.2).
+
+Offline replay of run logs under a round-robin policy with two stopping
+criteria:
+  * SOL-headroom threshold ε: a problem becomes ineligible once its best
+    kernel beats the baseline and  t_best <= (1 + ε) * t_SOL_ceiling
+    (the tighter bf16 ceiling, per the paper's corrected FP16 SOL), and
+  * no-progress window w: ineligible after w consecutive attempts without
+    best-speedup improvement while already ahead of the baseline.
+
+A problem always remains eligible while it is still behind the baseline.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..agent.policies import PRICE_PER_MTOK
+from ..agent.runlog import RunLog
+from .metrics import best_speedups, efficiency_gain, geomean, median
+
+EPSILONS = (0.25, 0.50, 0.75, 1.00, 1.50, 2.00, 2.50, 3.00)
+WINDOWS = (0, 4, 8, 12, 16, 20)
+
+
+@dataclass(frozen=True)
+class SchedulePolicy:
+    epsilon: Optional[float] = None     # None = criterion off
+    window: int = 0                     # 0 = criterion off
+
+    @property
+    def name(self) -> str:
+        eps = f"eps={self.epsilon:.2f}" if self.epsilon is not None else "eps=off"
+        return f"{eps},w={self.window}"
+
+
+@dataclass
+class ProblemReplay:
+    problem_id: str
+    stop_attempt: int            # attempts actually consumed
+    total_attempts: int
+    tokens_used: int
+    tokens_full: int
+    best_speedup: float          # at stop (accepted attempts only)
+    best_speedup_full: float
+    stop_reason: str
+
+
+@dataclass
+class ReplayResult:
+    policy: SchedulePolicy
+    problems: List[ProblemReplay] = field(default_factory=list)
+
+    @property
+    def tokens_used(self) -> int:
+        return sum(p.tokens_used for p in self.problems)
+
+    @property
+    def tokens_full(self) -> int:
+        return sum(p.tokens_full for p in self.problems)
+
+    @property
+    def token_savings(self) -> float:
+        full = self.tokens_full
+        return 1.0 - self.tokens_used / full if full else 0.0
+
+    @property
+    def attempt_savings(self) -> float:
+        full = sum(p.total_attempts for p in self.problems)
+        used = sum(p.stop_attempt for p in self.problems)
+        return 1.0 - used / full if full else 0.0
+
+    def speedups(self) -> List[float]:
+        return [p.best_speedup for p in self.problems]
+
+    def speedups_full(self) -> List[float]:
+        return [p.best_speedup_full for p in self.problems]
+
+    @property
+    def geomean_retention(self) -> float:
+        g_full = geomean(self.speedups_full())
+        return geomean(self.speedups()) / g_full if g_full else 0.0
+
+    @property
+    def median_retention(self) -> float:
+        m_full = median(self.speedups_full())
+        return median(self.speedups()) / m_full if m_full else 1.0
+
+    def efficiency_gain(self) -> float:
+        return efficiency_gain(
+            geomean(self.speedups()), geomean(self.speedups_full()),
+            max(self.tokens_used, 1), max(self.tokens_full, 1))
+
+
+def replay_problem(log: RunLog, policy: SchedulePolicy,
+                   accepted_only: bool = True) -> ProblemReplay:
+    best = 0.0
+    no_progress = 0
+    stop_at = log.n_attempts
+    reason = "budget"
+    for i, a in enumerate(log.attempts, start=1):
+        accepted = a.ok and (not accepted_only or
+                             a.label in ("", "no_issues", "minor"))
+        improved = False
+        if accepted and a.speedup > best:
+            best = a.speedup
+            improved = True
+        ahead = best > 1.0
+        no_progress = 0 if improved else no_progress + 1
+        if ahead and policy.epsilon is not None and best > 0:
+            t_best = log.t_ref / best
+            if t_best <= (1.0 + policy.epsilon) * log.t_sol_ceiling:
+                stop_at, reason = i, "sol_headroom"
+                break
+        if ahead and policy.window and no_progress >= policy.window:
+            stop_at, reason = i, "no_progress"
+            break
+    return ProblemReplay(
+        problem_id=log.problem_id,
+        stop_attempt=stop_at,
+        total_attempts=log.n_attempts,
+        tokens_used=log.tokens_upto(stop_at),
+        tokens_full=log.total_tokens,
+        best_speedup=log.best_speedup(upto=stop_at,
+                                      accepted_only=accepted_only),
+        best_speedup_full=log.best_speedup(accepted_only=accepted_only),
+        stop_reason=reason,
+    )
+
+
+def replay(logs: Sequence[RunLog], policy: SchedulePolicy,
+           accepted_only: bool = True) -> ReplayResult:
+    res = ReplayResult(policy=policy)
+    for log in logs:
+        res.problems.append(replay_problem(log, policy, accepted_only))
+    return res
+
+
+def sweep(logs: Sequence[RunLog],
+          epsilons: Sequence[Optional[float]] = EPSILONS,
+          windows: Sequence[int] = WINDOWS,
+          accepted_only: bool = True) -> List[ReplayResult]:
+    out = []
+    for eps, w in itertools.product(epsilons, windows):
+        out.append(replay(logs, SchedulePolicy(eps, w), accepted_only))
+    return out
+
+
+def dollar_cost(tokens: int, capability: str) -> float:
+    return tokens / 1e6 * PRICE_PER_MTOK[capability]
+
+
+def pareto_frontier(results: Sequence[ReplayResult], capability: str
+                    ) -> List[Tuple[float, float, SchedulePolicy]]:
+    """(normalized cost, geomean speedup) upper-left frontier."""
+    pts = [(dollar_cost(r.tokens_used, capability),
+            geomean(r.speedups()), r.policy) for r in results]
+    pts.sort(key=lambda p: (p[0], p[1]))
+    frontier: List[Tuple[float, float, SchedulePolicy]] = []
+    best = -1.0
+    for cost, g, pol in pts:
+        if g > best:
+            frontier.append((cost, g, pol))
+            best = g
+    return frontier
+
+
+def best_policy(results: Sequence[ReplayResult],
+                min_retention: float = 0.95) -> Optional[ReplayResult]:
+    """Max efficiency gain subject to >= min_retention geomean retention."""
+    ok = [r for r in results if r.geomean_retention >= min_retention
+          and (r.policy.epsilon is not None or r.policy.window)]
+    if not ok:
+        return None
+    return max(ok, key=lambda r: r.efficiency_gain())

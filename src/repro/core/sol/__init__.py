@@ -1,0 +1,30 @@
+"""Speed-of-Light analysis: hardware registry, characterization, roofline,
+HLO-derived summaries, structured reports."""
+
+from .hardware import (ChipSpec, SystemSpec, get_chip, canon_dtype,
+                       dtype_bytes, DEFAULT_CHIP, TPU_V5E, TPU_V5P, TPU_V4,
+                       H100, LANE_MULTIPLE, SUBLANE_MULTIPLE)
+from .characterize import (TensorSpec, OpSpec, Characterization, gemm_flops,
+                           gemm_op, elementwise_op, reduction_op, softmax_op,
+                           norm_op, attention_flops, attention_op,
+                           conv1d_flops, conv1d_op, conv2d_flops,
+                           ssd_scan_flops, moe_ffn_flops)
+from .roofline import RooflineResult, roofline
+from .hlo_analysis import (CollectiveStats, CompiledSummary,
+                           parse_collective_bytes, summarize_compiled,
+                           count_recompute_ops)
+from .report import SOLReport, make_report
+
+__all__ = [
+    "ChipSpec", "SystemSpec", "get_chip", "canon_dtype", "dtype_bytes",
+    "DEFAULT_CHIP", "TPU_V5E", "TPU_V5P", "TPU_V4", "H100",
+    "LANE_MULTIPLE", "SUBLANE_MULTIPLE",
+    "TensorSpec", "OpSpec", "Characterization", "gemm_flops", "gemm_op",
+    "elementwise_op", "reduction_op", "softmax_op", "norm_op",
+    "attention_flops", "attention_op", "conv1d_flops", "conv1d_op",
+    "conv2d_flops", "ssd_scan_flops", "moe_ffn_flops",
+    "RooflineResult", "roofline",
+    "CollectiveStats", "CompiledSummary", "parse_collective_bytes",
+    "summarize_compiled", "count_recompute_ops",
+    "SOLReport", "make_report",
+]

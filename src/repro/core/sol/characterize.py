@@ -1,0 +1,248 @@
+"""Problem characterization: first step of SOL analysis (paper Sec. 4.1).
+
+"Problem characterization identifies the operators, their dimensions, and data
+types, and estimates total FLOPs and best-case DRAM bytes, assuming each unique
+input element is read once and each output is written once, with fusion of
+intermediates where feasible."
+
+This module is purely analytic — no JAX required — so it can characterize
+problems far larger than the container could allocate.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .hardware import dtype_bytes
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """Shape/dtype stand-in for characterization (mirrors ShapeDtypeStruct)."""
+
+    shape: Tuple[int, ...]
+    dtype: str = "fp32"
+    name: str = ""
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * dtype_bytes(self.dtype)
+
+
+@dataclass
+class OpSpec:
+    """One operator in the reference computation graph."""
+
+    name: str
+    flops: float
+    reads: List[TensorSpec] = field(default_factory=list)
+    writes: List[TensorSpec] = field(default_factory=list)
+    # Intermediates produced AND consumed inside the op when fused.
+    intermediates: List[TensorSpec] = field(default_factory=list)
+
+
+@dataclass
+class Characterization:
+    """Aggregate FLOPs / best-case bytes for a (possibly multi-op) problem."""
+
+    problem: str
+    ops: List[OpSpec]
+    fused: bool = True
+
+    @property
+    def total_flops(self) -> float:
+        return float(sum(op.flops for op in self.ops))
+
+    @property
+    def best_case_bytes(self) -> int:
+        """Unique external inputs read once + final outputs written once.
+
+        With ``fused=True`` (the paper's best-case assumption) intermediates
+        cost nothing; with ``fused=False`` every op's reads/writes hit DRAM.
+        """
+        if not self.fused:
+            total = 0
+            for op in self.ops:
+                total += sum(t.nbytes for t in op.reads)
+                total += sum(t.nbytes for t in op.writes)
+                total += 2 * sum(t.nbytes for t in op.intermediates)
+            return total
+        seen: Dict[Tuple, int] = {}
+        produced = set()
+        total = 0
+        for op in self.ops:
+            for t in op.writes:
+                produced.add((t.name, t.shape, t.dtype))
+        for op in self.ops:
+            for t in op.reads:
+                key = (t.name, t.shape, t.dtype)
+                if key in produced:
+                    continue  # intermediate of an earlier op: fused away
+                if key not in seen:
+                    seen[key] = t.nbytes
+        total = sum(seen.values())
+        # Final outputs: tensors written but never consumed downstream.
+        consumed = set()
+        for op in self.ops:
+            for t in op.reads:
+                consumed.add((t.name, t.shape, t.dtype))
+        for op in self.ops:
+            for t in op.writes:
+                key = (t.name, t.shape, t.dtype)
+                if key not in consumed:
+                    total += t.nbytes
+        return total
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        b = self.best_case_bytes
+        return self.total_flops / b if b else float("inf")
+
+    @property
+    def dominant_op(self) -> str:
+        if not self.ops:
+            return "none"
+        return max(self.ops, key=lambda op: op.flops).name
+
+
+# ---------------------------------------------------------------------------
+# FLOP/byte helpers for the operator families the suite uses.
+# Convention: 2 FLOPs per MAC (paper Sec. 4.1 / A.2).
+# ---------------------------------------------------------------------------
+
+def gemm_flops(m: int, n: int, k: int, batch: int = 1) -> float:
+    return 2.0 * batch * m * n * k
+
+
+def gemm_op(m: int, n: int, k: int, batch: int = 1, dtype: str = "fp32",
+            name: str = "gemm", a_name: str = "A", b_name: str = "B",
+            c_name: str = "C") -> OpSpec:
+    pre = (batch,) if batch > 1 else ()
+    return OpSpec(
+        name=name,
+        flops=gemm_flops(m, n, k, batch),
+        reads=[TensorSpec(pre + (m, k), dtype, a_name),
+               TensorSpec(pre + (k, n), dtype, b_name)],
+        writes=[TensorSpec(pre + (m, n), dtype, c_name)],
+    )
+
+
+def elementwise_op(shape: Sequence[int], dtype: str = "fp32",
+                   flops_per_elem: float = 1.0, name: str = "eltwise",
+                   in_name: str = "x", out_name: str = "y",
+                   extra_reads: Iterable[TensorSpec] = ()) -> OpSpec:
+    t_in = TensorSpec(tuple(shape), dtype, in_name)
+    t_out = TensorSpec(tuple(shape), dtype, out_name)
+    return OpSpec(
+        name=name,
+        flops=flops_per_elem * t_in.size,
+        reads=[t_in, *extra_reads],
+        writes=[t_out],
+    )
+
+
+def reduction_op(shape: Sequence[int], axis: int, dtype: str = "fp32",
+                 flops_per_elem: float = 1.0, name: str = "reduce",
+                 in_name: str = "x", out_name: str = "y") -> OpSpec:
+    t_in = TensorSpec(tuple(shape), dtype, in_name)
+    out_shape = tuple(s for i, s in enumerate(shape) if i != axis % len(shape))
+    return OpSpec(
+        name=name,
+        flops=flops_per_elem * t_in.size,
+        reads=[t_in],
+        writes=[TensorSpec(out_shape, dtype, out_name)],
+    )
+
+
+def softmax_op(shape: Sequence[int], dtype: str = "fp32",
+               name: str = "softmax") -> OpSpec:
+    # max + sub + exp + sum + div ~ 5 flops/elem
+    t = TensorSpec(tuple(shape), dtype, "softmax_in")
+    return OpSpec(name=name, flops=5.0 * t.size, reads=[t],
+                  writes=[TensorSpec(tuple(shape), dtype, "softmax_out")])
+
+
+def norm_op(shape: Sequence[int], dtype: str = "fp32", kind: str = "rmsnorm",
+            name: Optional[str] = None) -> OpSpec:
+    # rmsnorm: sq + mean + rsqrt + mul + scale ~ 4/elem; layernorm ~ 6/elem
+    per = 4.0 if kind == "rmsnorm" else 6.0
+    t = TensorSpec(tuple(shape), dtype, f"{kind}_in")
+    d = shape[-1]
+    return OpSpec(
+        name=name or kind,
+        flops=per * t.size,
+        reads=[t, TensorSpec((d,), dtype, f"{kind}_gamma")],
+        writes=[TensorSpec(tuple(shape), dtype, f"{kind}_out")],
+    )
+
+
+def attention_flops(batch: int, q_len: int, kv_len: int, n_q_heads: int,
+                    head_dim: int, causal: bool = False) -> float:
+    """QK^T + softmax + PV for one attention call (all q heads)."""
+    eff = 0.5 if causal and q_len == kv_len else 1.0
+    qk = 2.0 * batch * n_q_heads * q_len * kv_len * head_dim * eff
+    pv = 2.0 * batch * n_q_heads * q_len * kv_len * head_dim * eff
+    sm = 5.0 * batch * n_q_heads * q_len * kv_len * eff
+    return qk + pv + sm
+
+
+def attention_op(batch: int, q_len: int, kv_len: int, n_q_heads: int,
+                 n_kv_heads: int, head_dim: int, dtype: str = "fp32",
+                 causal: bool = False, name: str = "attention") -> OpSpec:
+    q = TensorSpec((batch, q_len, n_q_heads, head_dim), dtype, "Q")
+    k = TensorSpec((batch, kv_len, n_kv_heads, head_dim), dtype, "K")
+    v = TensorSpec((batch, kv_len, n_kv_heads, head_dim), dtype, "V")
+    o = TensorSpec((batch, q_len, n_q_heads, head_dim), dtype, "O")
+    scores = TensorSpec((batch, n_q_heads, q_len, kv_len), dtype, "S")
+    return OpSpec(
+        name=name,
+        flops=attention_flops(batch, q_len, kv_len, n_q_heads, head_dim, causal),
+        reads=[q, k, v],
+        writes=[o],
+        intermediates=[scores],
+    )
+
+
+def conv1d_flops(batch: int, length: int, c_in: int, c_out: int,
+                 kernel: int, groups: int = 1) -> float:
+    return 2.0 * batch * length * (c_in // groups) * c_out * kernel
+
+
+def conv1d_op(batch: int, length: int, c_in: int, c_out: int, kernel: int,
+              groups: int = 1, dtype: str = "fp32",
+              name: str = "conv1d") -> OpSpec:
+    return OpSpec(
+        name=name,
+        flops=conv1d_flops(batch, length, c_in, c_out, kernel, groups),
+        reads=[TensorSpec((batch, length, c_in), dtype, "conv_in"),
+               TensorSpec((kernel, c_in // groups, c_out), dtype, "conv_w")],
+        writes=[TensorSpec((batch, length, c_out), dtype, "conv_out")],
+    )
+
+
+def conv2d_flops(batch: int, h: int, w: int, c_in: int, c_out: int,
+                 kh: int, kw: int, groups: int = 1) -> float:
+    return 2.0 * batch * h * w * (c_in // groups) * c_out * kh * kw
+
+
+def ssd_scan_flops(batch: int, seq: int, heads: int, head_dim: int,
+                   d_state: int) -> float:
+    """Mamba-2 SSD: state update + output per token (linear in seq)."""
+    return 6.0 * batch * seq * heads * head_dim * d_state
+
+
+def moe_ffn_flops(tokens: int, d_model: int, d_ff: int, top_k: int,
+                  gated: bool = True) -> float:
+    mults = 3 if gated else 2
+    return 2.0 * tokens * top_k * d_model * d_ff * mults
+
+
+def model_flops_per_token(n_params_active: float) -> float:
+    """MODEL_FLOPS/token = 6*N (fwd+bwd) for training; 2*N for inference."""
+    return 6.0 * n_params_active

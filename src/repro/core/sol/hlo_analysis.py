@@ -1,0 +1,452 @@
+"""Derive roofline inputs from compiled XLA artifacts (dry-run profiling).
+
+``compiled.cost_analysis()`` gives HLO FLOPs and bytes **per device** (the
+post-SPMD partitioned module).  Collective bytes are NOT in cost_analysis, so
+we parse ``compiled.as_text()`` (post-optimization HLO) and sum operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op, resolving operand shapes through an instruction symbol
+table.  Async pairs (``all-gather-start``/``-done``) are counted once.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# HLO primitive-type byte widths.
+_HLO_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e4m3": 1, "f8e8m0fnu": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# Collective opcodes we account against the ICI/DCN roofline term.
+COLLECTIVE_OPCODES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\("
+)
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _strip_comments(line: str) -> str:
+    """HLO tuple types carry /*index=N*/ comments whose '=' breaks parsing."""
+    return _COMMENT_RE.sub("", line) if "/*" in line else line
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        width = _HLO_DTYPE_BYTES.get(dtype)
+        if width is None:
+            continue
+        if dims.strip() == "":
+            size = 1
+        else:
+            size = 1
+            for d in dims.split(","):
+                size *= int(d)
+        total += size * width
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Per-opcode byte totals plus the overall sum (per device)."""
+
+    bytes_by_opcode: Dict[str, float] = field(default_factory=dict)
+    count_by_opcode: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_opcode.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count_by_opcode.values()))
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "bytes_by_opcode": dict(self.bytes_by_opcode),
+            "count_by_opcode": dict(self.count_by_opcode),
+        }
+
+
+def _first_paren_group(s: str) -> str:
+    start = s.find("(")
+    if start < 0:
+        return ""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[start + 1:i]
+    return s[start + 1:]
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in post-optimization HLO."""
+    # Pass 1: symbol table instruction-name -> result-type bytes.
+    result_bytes: Dict[str, int] = {}
+    lines = [_strip_comments(l) for l in hlo_text.splitlines()]
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, _op = m.groups()
+            result_bytes[name] = _shape_bytes(type_str)
+
+    stats = CollectiveStats()
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        base = opcode
+        if base.endswith("-start"):
+            base = base[: -len("-start")]
+        elif base.endswith("-done"):
+            continue  # counted at -start
+        if base not in COLLECTIVE_OPCODES:
+            continue
+        # Operand sizes: resolve referenced instruction result types.
+        body = _first_paren_group(line[line.find(opcode) :])
+        operand_names = re.findall(r"%([\w.\-]+)", body)
+        op_bytes = sum(result_bytes.get(n, 0) for n in operand_names)
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(type_str)  # fallback: result size
+        stats.bytes_by_opcode[base] = stats.bytes_by_opcode.get(base, 0.0) + op_bytes
+        stats.count_by_opcode[base] = stats.count_by_opcode.get(base, 0) + 1
+    return stats
+
+
+@dataclass
+class CompiledSummary:
+    """Everything §Roofline needs, extracted from one compiled executable.
+
+    ``gamma`` is the loop-trip correction: XLA aggregates count while bodies
+    once, so module FLOPs/bytes are scaled by gamma (derived from per-dot
+    accounting) and collective bytes are re-accumulated with multipliers.
+    """
+
+    per_device_flops: float
+    per_device_hbm_bytes: float
+    per_device_collective_bytes: float
+    collectives: CollectiveStats
+    num_devices: int
+    gamma: float = 1.0
+    dot_flops_scaled: float = 0.0
+    traffic_bytes_scaled: float = 0.0
+    # memory_analysis (per device), when the backend provides it
+    argument_bytes: Optional[int] = None
+    output_bytes: Optional[int] = None
+    temp_bytes: Optional[int] = None
+    generated_code_bytes: Optional[int] = None
+
+    @property
+    def per_device_flops_scaled(self) -> float:
+        return max(self.per_device_flops * self.gamma, self.dot_flops_scaled)
+
+    @property
+    def per_device_hbm_bytes_scaled(self) -> float:
+        if self.traffic_bytes_scaled > 0:
+            return self.traffic_bytes_scaled
+        return self.per_device_hbm_bytes * self.gamma
+
+    @property
+    def total_flops(self) -> float:
+        return self.per_device_flops_scaled * self.num_devices
+
+    @property
+    def total_hbm_bytes(self) -> float:
+        return self.per_device_hbm_bytes_scaled * self.num_devices
+
+    @property
+    def peak_device_bytes(self) -> Optional[int]:
+        if self.argument_bytes is None:
+            return None
+        return int(self.argument_bytes + (self.output_bytes or 0)
+                   + (self.temp_bytes or 0))
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "per_device_flops": self.per_device_flops,
+            "per_device_hbm_bytes": self.per_device_hbm_bytes,
+            "per_device_collective_bytes": self.per_device_collective_bytes,
+            "gamma_loop_correction": self.gamma,
+            "per_device_flops_scaled": self.per_device_flops_scaled,
+            "per_device_hbm_bytes_scaled": self.per_device_hbm_bytes_scaled,
+            "total_flops": self.total_flops,
+            "total_hbm_bytes": self.total_hbm_bytes,
+            "num_devices": self.num_devices,
+            "collectives": self.collectives.as_dict(),
+            "argument_bytes": self.argument_bytes,
+            "output_bytes": self.output_bytes,
+            "temp_bytes": self.temp_bytes,
+        }
+
+
+def summarize_compiled(compiled, num_devices: int) -> CompiledSummary:
+    """Extract roofline terms from a ``jax`` compiled executable."""
+    cost = {}
+    try:
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else {}
+    except Exception:
+        cost = {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = parse_collective_bytes(text) if text else CollectiveStats()
+    scaled = loop_scaled_cost(text) if text else LoopScaledCost(0, 0, 0, 1.0)
+
+    arg_b = out_b = tmp_b = code_b = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            arg_b = int(getattr(ma, "argument_size_in_bytes", 0))
+            out_b = int(getattr(ma, "output_size_in_bytes", 0))
+            tmp_b = int(getattr(ma, "temp_size_in_bytes", 0))
+            code_b = int(getattr(ma, "generated_code_size_in_bytes", 0))
+    except Exception:
+        pass
+
+    return CompiledSummary(
+        per_device_flops=flops,
+        per_device_hbm_bytes=hbm,
+        per_device_collective_bytes=max(coll.total_bytes,
+                                        scaled.collective_bytes_scaled),
+        collectives=coll,
+        num_devices=num_devices,
+        gamma=scaled.gamma,
+        dot_flops_scaled=scaled.dot_flops_scaled,
+        traffic_bytes_scaled=scaled.traffic_bytes_scaled,
+        argument_bytes=arg_b,
+        output_bytes=out_b,
+        temp_bytes=tmp_b,
+        generated_code_bytes=code_b,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware cost scaling
+#
+# XLA's cost_analysis() counts a `while` body exactly ONCE regardless of trip
+# count, so scan-over-layers models under-report FLOPs/bytes/collectives by
+# ~num_layers.  We recover the true totals by parsing the HLO computation
+# graph: extract each while loop's trip count from its condition, walk the
+# call graph multiplying nested trips, and scale per-computation costs.
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_CALL_REF_RE = re.compile(
+    r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        line = _strip_comments(line)
+        stripped = line.rstrip()
+        if stripped.endswith("{") and ("->" in stripped
+                                       or stripped.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count of a scan-style while: the max integer constant compared
+    against the induction variable in the condition computation."""
+    consts = []
+    for line in cond_lines:
+        m = _CONST_RE.search(line)
+        if m:
+            consts.append(int(m.group(1)))
+    if not consts:
+        return 1
+    return max(1, min(max(consts), 1_000_000))
+
+
+def _dot_flops(line: str, result_bytes: Dict[str, int],
+               result_types: Dict[str, str]) -> float:
+    """FLOPs of one dot instruction: 2 * numel(result) * K."""
+    m = _INSTR_RE.match(line)
+    if not m:
+        return 0.0
+    _name, type_str, _op = m.groups()
+    # numel(result)
+    numel = 0
+    elem_bytes = 1
+    sm = _SHAPE_RE.search(type_str)
+    if sm:
+        dims = sm.group(2)
+        numel = 1
+        for d in dims.split(","):
+            if d:
+                numel *= int(d)
+        elem_bytes = _HLO_DTYPE_BYTES.get(sm.group(1), 4) or 4
+    # contraction size from the lhs operand's type
+    body = _first_paren_group(line[line.find(_op := m.group(3)):])
+    operands = re.findall(r"%([\w.\-]+)", body)
+    k = 1
+    cm = _DOT_CONTRACT_RE.search(line)
+    if operands and cm is not None:
+        lhs_type = result_types.get(operands[0], "")
+        tm = _SHAPE_RE.search(lhs_type)
+        if tm and tm.group(2):
+            lhs_dims = [int(d) for d in tm.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    k *= lhs_dims[int(ci)]
+    return 2.0 * numel * max(k, 1)
+
+
+@dataclass
+class LoopScaledCost:
+    """Loop-corrected per-device cost derived from the HLO text."""
+
+    dot_flops_scaled: float
+    dot_flops_unscaled: float
+    collective_bytes_scaled: float
+    gamma: float              # scaling factor applied to module aggregates
+    # instruction-level traffic: sum of result bytes x loop multiplier x 2
+    # (write + subsequent read) over non-fusion-internal instructions —
+    # resolves per-loop tensor traffic that gamma-uniform scaling cannot
+    traffic_bytes_scaled: float = 0.0
+
+    @property
+    def flops_correction(self) -> float:
+        return self.gamma
+
+
+# opcodes that don't materialize HBM traffic of their own
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "transpose",
+}
+
+
+def loop_scaled_cost(hlo_text: str) -> LoopScaledCost:
+    comps = _split_computations(hlo_text)
+    # result-type symbol table across the whole module
+    result_types: Dict[str, str] = {}
+    result_bytes: Dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                result_types[m.group(1)] = m.group(2)
+                result_bytes[m.group(1)] = _shape_bytes(m.group(2))
+
+    # find the entry computation (ENTRY marker lost in split; re-scan)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None or entry not in comps:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return LoopScaledCost(0, 0, 0, 1.0)
+
+    dot_scaled = dot_unscaled = 0.0
+    coll_scaled = 0.0
+    traffic = 0.0
+
+    def walk(comp: str, mult: float, in_fusion: bool) -> None:
+        if comp not in comps:
+            return
+        # accumulate, don't dedupe (computations are usually unique per site)
+        nonlocal dot_scaled, dot_unscaled, coll_scaled, traffic
+        for line in comps[comp]:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode = m.groups()
+            if opcode == "dot":
+                f = _dot_flops(line, result_bytes, result_types)
+                dot_scaled += f * mult
+                dot_unscaled += f
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base in COLLECTIVE_OPCODES and not opcode.endswith("-done"):
+                body = _first_paren_group(line[line.find(opcode):])
+                ops_ = re.findall(r"%([\w.\-]+)", body)
+                b = sum(result_bytes.get(n, 0) for n in ops_) or \
+                    _shape_bytes(type_str)
+                coll_scaled += b * mult
+            # instruction-level traffic (fusion internals stay in registers)
+            if not in_fusion and opcode not in _NO_TRAFFIC_OPS \
+                    and not opcode.endswith("-done"):
+                traffic += 2.0 * result_bytes.get(name, 0) * mult
+            if opcode == "while":
+                refs = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                       line))
+                trip = _trip_count(comps.get(refs.get("condition", ""), []))
+                if refs.get("body"):
+                    walk(refs["body"], mult * trip, in_fusion)
+            else:
+                child_fusion = in_fusion or opcode == "fusion" \
+                    or opcode.endswith("reduce") or opcode == "map" \
+                    or opcode == "scatter" or opcode == "sort"
+                for ref in _CALL_REF_RE.findall(line):
+                    if ref in comps and ref != comp:
+                        walk(ref, mult, child_fusion)
+
+    walk(entry, 1.0, False)
+    gamma = (dot_scaled / dot_unscaled) if dot_unscaled else 1.0
+    return LoopScaledCost(dot_scaled, dot_unscaled, coll_scaled,
+                          max(gamma, 1.0), traffic)
+
+
+def count_recompute_ops(hlo_text: str) -> Dict[str, int]:
+    """Count duplicate expensive-op provenance — a remat/redundancy signal.
+
+    The perf-loop hint: "remat-inserted recompute (count duplicate op names)".
+    We count dot/convolution ops grouped by their source ``op_name`` metadata.
+    """
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if " dot(" not in line and " convolution(" not in line:
+            continue
+        m = re.search(r'op_name="([^"]+)"', line)
+        key = m.group(1) if m else "<no-metadata>"
+        counts[key] = counts.get(key, 0) + 1
+    return {k: v for k, v in counts.items() if v > 1}

@@ -1,0 +1,152 @@
+"""Structured SOL reports (paper Sec. 4.1 + Appendix A.2), TPU-native.
+
+The paper generates the report with an LLM; here it is produced analytically
+(the paper itself notes "It can also be produced by an analytical system such
+as Orojenesis or SOLAR" — this module is that analytical system).
+
+Precision policy mirrors the paper:
+  * steering bound  — fp32 problem formulation (TPU: fp32-on-MXU peak,
+    the analogue of the paper's FP32-with-TF32 assumption),
+  * ceiling bound   — bf16 (the analogue of the paper's FP16 bound, used for
+    budget scheduling and integrity checking; inputs/outputs stay fp32 in DRAM).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from .characterize import Characterization
+from .hardware import ChipSpec, DEFAULT_CHIP
+from .roofline import RooflineResult, roofline
+
+
+@dataclass
+class SOLReport:
+    problem_id: str
+    characterization: Characterization
+    chip: ChipSpec = field(default_factory=lambda: DEFAULT_CHIP)
+    num_chips: int = 1
+    steering_dtype: str = "fp32"
+    ceiling_dtype: str = "bf16"
+
+    # ------------------------------------------------------------------
+    @property
+    def steering(self) -> RooflineResult:
+        """FP32-formulation bound used to steer optimization (paper Sec 4.1)."""
+        return roofline(
+            self.characterization.total_flops,
+            self.characterization.best_case_bytes,
+            num_chips=self.num_chips,
+            dtype=self.steering_dtype,
+            chip=self.chip,
+        )
+
+    @property
+    def ceiling(self) -> RooflineResult:
+        """Reduced-precision bound (tighter ceiling) for scheduling/integrity.
+
+        Compute peak switches to bf16; memory traffic is unchanged because
+        inputs/outputs remain fp32 at the DRAM boundary (paper Sec. 4.1).
+        """
+        return roofline(
+            self.characterization.total_flops,
+            self.characterization.best_case_bytes,
+            num_chips=self.num_chips,
+            dtype=self.ceiling_dtype,
+            chip=self.chip,
+        )
+
+    @property
+    def t_sol(self) -> float:
+        return self.steering.t_sol
+
+    @property
+    def t_sol_ceiling(self) -> float:
+        return self.ceiling.t_sol
+
+    def gap(self, t_best: float) -> float:
+        """g = t_best / t_SOL (paper Sec. 4.2)."""
+        return self.steering.gap(t_best)
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> Dict[str, object]:
+        st, ce = self.steering, self.ceiling
+        return {
+            "problem_id": self.problem_id,
+            "total_flops": self.characterization.total_flops,
+            "total_bytes": self.characterization.best_case_bytes,
+            "arithmetic_intensity": self.characterization.arithmetic_intensity,
+            "dominant_op": self.characterization.dominant_op,
+            "chip": self.chip.name,
+            "num_chips": self.num_chips,
+            "peak_type": f"{self.steering_dtype} MXU (dense)",
+            "peak_flops_effective": self.chip.peak(self.steering_dtype),
+            "theoretical_runtime_s": st.t_sol,
+            "bottleneck": st.bottleneck,
+            "ceiling_peak_type": f"{self.ceiling_dtype} MXU (dense)",
+            "ceiling_peak_flops_effective": self.chip.peak(self.ceiling_dtype),
+            "theoretical_runtime_s_ceiling": ce.t_sol,
+            "ceiling_note": (
+                f"{self.ceiling_dtype} compute (higher MXU throughput), "
+                f"fp32 memory (inputs/outputs stay fp32 at the HBM boundary)"
+            ),
+        }
+
+    def to_markdown(self) -> str:
+        ch = self.characterization
+        st, ce = self.steering, self.ceiling
+        chip = self.chip
+        lines = [
+            "# Speed-of-Light (SOL) Analysis",
+            "",
+            "## 1. Problem Characterization",
+            f"Problem: {self.problem_id}",
+            f"Dominant operator: {ch.dominant_op}",
+            f"Total FLOPs = {ch.total_flops:.4e}",
+            f"Best-case HBM bytes = {ch.best_case_bytes:.4e}"
+            f" (each unique input read once, outputs written once, fused intermediates free)",
+            f"Arithmetic intensity = {ch.arithmetic_intensity:.1f} FLOPs/byte",
+            "",
+            "## 2. Hardware Limits",
+            f"Chip: {chip.name} x {self.num_chips}",
+            f"Peak {self.steering_dtype}: {chip.peak(self.steering_dtype)/1e12:.2f} TFLOP/s"
+            f" | Peak {self.ceiling_dtype}: {chip.peak(self.ceiling_dtype)/1e12:.2f} TFLOP/s",
+            f"HBM bandwidth: {chip.hbm_bandwidth/1e9:.0f} GB/s"
+            f" | ICI: {chip.ici_bandwidth/1e9:.0f} GB/s/link x {chip.ici_links}",
+            f"Clock scale: {chip.clock_scale:.4f} (fixed-clock TPU)",
+            "",
+            f"## 3. Theoretical Minimum Time ({self.steering_dtype} steering bound)",
+            f"T_compute = {st.t_compute*1e3:.4f} ms",
+            f"T_mem     = {st.t_memory*1e3:.4f} ms",
+            f"t_SOL     = max(T_compute, T_mem) = {st.t_sol*1e3:.4f} ms",
+            f"Primary bottleneck: {st.bottleneck}-bound",
+            "",
+            "## 4. Roofline Analysis",
+            f"Ridge point = {st.ridge_point:.1f} FLOPs/byte",
+            f"Kernel AI {'>=' if st.compute_bound else '<'} ridge =>"
+            f" {'compute' if st.compute_bound else 'memory'}-bound region",
+            "",
+            f"# {self.ceiling_dtype} Augmentation (ceiling bound for scheduling/integrity)",
+            f"Peak: {chip.peak(self.ceiling_dtype)/1e12:.2f} TFLOP/s"
+            f" | T_compute = {ce.t_compute*1e3:.4f} ms | T_mem = {ce.t_memory*1e3:.4f} ms",
+            f"t_SOL_ceiling = {ce.t_sol*1e3:.4f} ms | bottleneck: {ce.bottleneck}",
+            "",
+            "# Structured JSON Output",
+            "```json",
+            json.dumps(self.to_json(), indent=2, default=float),
+            "```",
+        ]
+        return "\n".join(lines)
+
+
+def make_report(problem_id: str, characterization: Characterization, *,
+                chip: Optional[ChipSpec] = None, num_chips: int = 1) -> SOLReport:
+    return SOLReport(
+        problem_id=problem_id,
+        characterization=characterization,
+        chip=chip or DEFAULT_CHIP,
+        num_chips=num_chips,
+    )

@@ -1,0 +1,110 @@
+"""Deterministic sharded data pipeline.
+
+Synthetic-token generator with real multi-host semantics: each host produces
+only its shard of the global batch (host_id/num_hosts slicing), batches are
+reproducible from (seed, step) alone — which is what makes checkpoint/restart
+and straggler re-balancing deterministic — and a background-prefetch iterator
+hides host latency.
+
+A real deployment would swap ``TokenSource`` for a tokenized corpus reader;
+everything downstream (sharding, restart semantics) is source-agnostic.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+    # "random" tokens are incompressible (loss floor = ln(vocab));
+    # "structured" emits learnable arithmetic token sequences so training
+    # demos can show the loss actually falling.
+    kind: str = "random"
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0, (
+            f"global batch {self.global_batch} must divide over "
+            f"{self.num_hosts} hosts")
+        return self.global_batch // self.num_hosts
+
+
+class TokenSource:
+    """Reproducible synthetic LM batches: batch(step) is a pure function."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        # independent stream per (seed, step, host)
+        rng = np.random.Generator(np.random.Philox(
+            key=cfg.seed, counter=[0, 0, step, cfg.host_id]))
+        if cfg.kind == "structured":
+            # learnable arithmetic sequences: t_{i+1} = t_i + stride (mod V)
+            start = rng.integers(0, cfg.vocab_size, (cfg.host_batch, 1))
+            stride = rng.integers(1, 8, (cfg.host_batch, 1))
+            idx = np.arange(cfg.seq_len + 1)[None, :]
+            tokens = ((start + stride * idx) % cfg.vocab_size).astype(
+                np.int32)
+        else:
+            tokens = rng.integers(0, cfg.vocab_size,
+                                  (cfg.host_batch, cfg.seq_len + 1),
+                                  dtype=np.int32)
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def global_batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """All hosts' shards concatenated (single-process testing)."""
+        import dataclasses
+        parts = []
+        for h in range(self.cfg.num_hosts):
+            src = TokenSource(dataclasses.replace(self.cfg, host_id=h))
+            parts.append(src.batch_at(step))
+        return {k: np.concatenate([p[k] for p in parts], axis=0)
+                for k in parts[0]}
+
+
+class PrefetchIterator:
+    """Background-thread prefetch over a TokenSource, restartable at a step."""
+
+    def __init__(self, source: TokenSource, start_step: int = 0,
+                 prefetch: int = 2):
+        self.source = source
+        self.step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(step)
+            try:
+                self._q.put((step, batch), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self.step = step + 1
+        return step, batch
+
+    def close(self):
+        self._stop.set()

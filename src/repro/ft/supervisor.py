@@ -1,0 +1,151 @@
+"""Fault-tolerance control plane: heartbeats, failure detection, elastic
+restart decisions, straggler mitigation.
+
+Hardware-independent by design: the supervisor consumes *events* (heartbeats
+with step + step-duration per worker) and emits *actions* (restart from
+checkpoint, shrink/expand the mesh, re-balance data shards).  On a real
+cluster the events come from the pod runtime; in tests they are simulated —
+which is exactly how the policy logic should be validated anyway.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Tuple
+
+
+class WorkerState(str, Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"
+    DEAD = "dead"
+
+
+@dataclass
+class WorkerStatus:
+    worker_id: int
+    last_heartbeat: float = 0.0
+    last_step: int = -1
+    step_seconds: List[float] = field(default_factory=list)
+    state: WorkerState = WorkerState.HEALTHY
+
+    def mean_step_time(self) -> Optional[float]:
+        if not self.step_seconds:
+            return None
+        return statistics.fmean(self.step_seconds[-16:])
+
+
+@dataclass(frozen=True)
+class Action:
+    kind: str          # restart | remesh | rebalance | none
+    detail: str = ""
+    restore_step: Optional[int] = None
+    new_num_workers: Optional[int] = None
+    slow_workers: Tuple[int, ...] = ()
+
+
+@dataclass
+class SupervisorConfig:
+    heartbeat_timeout_s: float = 60.0
+    suspect_after_s: float = 20.0
+    straggler_ratio: float = 1.5     # >1.5x median step time => straggler
+    min_workers: int = 1
+
+
+class Supervisor:
+    """Tracks worker health; decides restart/remesh/rebalance actions."""
+
+    def __init__(self, num_workers: int, cfg: SupervisorConfig = SupervisorConfig(),
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.workers: Dict[int, WorkerStatus] = {
+            i: WorkerStatus(i, last_heartbeat=clock())
+            for i in range(num_workers)
+        }
+        self.last_committed_step: int = -1
+
+    # ---- event ingestion ---------------------------------------------
+    def heartbeat(self, worker_id: int, step: int,
+                  step_seconds: Optional[float] = None) -> None:
+        w = self.workers[worker_id]
+        w.last_heartbeat = self.clock()
+        w.last_step = max(w.last_step, step)
+        if step_seconds is not None:
+            w.step_seconds.append(step_seconds)
+        if w.state is not WorkerState.DEAD:
+            w.state = WorkerState.HEALTHY
+
+    def checkpoint_committed(self, step: int) -> None:
+        self.last_committed_step = max(self.last_committed_step, step)
+
+    # ---- policy ---------------------------------------------------------
+    def _refresh_states(self) -> None:
+        now = self.clock()
+        for w in self.workers.values():
+            if w.state is WorkerState.DEAD:
+                continue
+            idle = now - w.last_heartbeat
+            if idle > self.cfg.heartbeat_timeout_s:
+                w.state = WorkerState.DEAD
+            elif idle > self.cfg.suspect_after_s:
+                w.state = WorkerState.SUSPECT
+
+    def healthy_workers(self) -> List[int]:
+        self._refresh_states()
+        return [i for i, w in self.workers.items()
+                if w.state is WorkerState.HEALTHY]
+
+    def stragglers(self) -> List[int]:
+        """Workers whose recent step time exceeds straggler_ratio x median."""
+        times = {i: w.mean_step_time() for i, w in self.workers.items()
+                 if w.state is WorkerState.HEALTHY and w.mean_step_time()}
+        if len(times) < 3:
+            return []
+        med = statistics.median(times.values())
+        return [i for i, t in times.items()
+                if t > self.cfg.straggler_ratio * med]
+
+    def decide(self) -> Action:
+        """The control loop body: failure > straggler > steady state."""
+        self._refresh_states()
+        dead = [i for i, w in self.workers.items()
+                if w.state is WorkerState.DEAD]
+        if dead:
+            alive = len(self.workers) - len(dead)
+            if alive < self.cfg.min_workers:
+                return Action("none",
+                              detail=f"{len(dead)} dead, below min_workers; "
+                                     "waiting for replacements")
+            # elastic shrink: restart the remaining workers from the last
+            # committed checkpoint on a smaller mesh
+            return Action(
+                "remesh",
+                detail=f"workers {dead} failed; shrink to {alive} and "
+                       f"restart from step {self.last_committed_step}",
+                restore_step=self.last_committed_step,
+                new_num_workers=alive)
+        slow = self.stragglers()
+        if slow:
+            # deterministic mitigation: shift data shards away from the
+            # slow hosts (the pipeline re-slices by host_id -> no state to
+            # migrate because batches are pure functions of (seed, step))
+            return Action("rebalance",
+                          detail=f"stragglers {slow}: shrink their data "
+                                 "shard by half",
+                          slow_workers=tuple(slow))
+        return Action("none", detail="steady state")
+
+    # ---- elastic data re-balance ---------------------------------------
+    @staticmethod
+    def rebalanced_shares(num_workers: int, slow: Tuple[int, ...],
+                          slow_factor: float = 0.5) -> List[float]:
+        """Per-worker batch shares after slowing workers are down-weighted;
+        shares sum to 1 and fast workers absorb the remainder evenly."""
+        shares = [1.0] * num_workers
+        for i in slow:
+            shares[i] = slow_factor
+        total = sum(shares)
+        return [s / total for s in shares]

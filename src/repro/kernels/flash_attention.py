@@ -1,0 +1,133 @@
+"""Blockwise fused attention (FlashAttention) for TPU via Pallas.
+
+Online-softmax attention with the KV loop as the innermost (sequential) grid
+dimension; running max / denominator / output accumulator live in VMEM
+scratch.  Supports causal masking and sliding-window attention (the Mistral /
+Mixtral SWA pattern) via block-level masks.
+
+TPU adaptation notes: there is no warp-level softmax reduction — row max/sum
+are plain VREG reductions over the (q_block, kv_block) scores tile; block
+shapes obey lane/sublane packing ((q %% sublane, kv %% 128)).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int,
+                 bq: int, bkv: int, n_kv_steps: int, kv_len: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].reshape(bq, q_ref.shape[-1]).astype(jnp.float32)
+    k = k_ref[...].reshape(bkv, k_ref.shape[-1]).astype(jnp.float32)
+    v = v_ref[...].reshape(bkv, v_ref.shape[-1]).astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (bq, bkv)
+
+    padded_kv = kv_len % bkv != 0 or kv_len < n_kv_steps * bkv
+    if causal or window or padded_kv:
+        q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 0)
+        kv_pos = kv_i * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), dtype=jnp.bool_)
+        if causal:
+            mask = mask & (kv_pos <= q_pos)
+        if window:
+            mask = mask & (kv_pos > q_pos - window)
+        if padded_kv:
+            mask = mask & (kv_pos < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: keep exp well-defined
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.exp(m_prev - m_new)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv_steps - 1)
+    def _writeback():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o = (acc_ref[...] / denom).astype(o_ref.dtype)
+        o_ref[...] = o.reshape(o_ref.shape)
+
+
+def flash_attention(
+    q: jax.Array,      # (B*H, Sq, D)
+    k: jax.Array,      # (B*H, Skv, D)
+    v: jax.Array,      # (B*H, Skv, D)
+    *,
+    causal: bool = False,
+    window: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    kv_len: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused attention over flattened (batch*heads) leading dim.
+
+    GQA is handled by the wrapper (K/V repeated to the q-head count or the
+    q-heads grouped per kv head before flattening).  Sq/Skv must be padded to
+    block multiples by the wrapper; ``kv_len`` is the true (unpadded) KV
+    length so padded keys are masked out.
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % block_q == 0 and skv % block_kv == 0, (
+        f"(Sq={sq}, Skv={skv}) must be padded to blocks "
+        f"({block_q}, {block_kv})")
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    n_kv_steps = skv // block_kv
+    grid = (bh, sq // block_q, n_kv_steps)
+    kv_len = skv if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=block_q, bkv=block_kv, n_kv_steps=n_kv_steps, kv_len=kv_len)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,229 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+The wrappers own everything the kernels assume away: padding to tile/block
+multiples (and un-padding the result), GQA head expansion, dtype plumbing,
+and the interpret-mode switch (interpret=True on CPU; on a real TPU runtime
+set REPRO_PALLAS_INTERPRET=0 or pass interpret=False).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gemm_epilogue as _ge
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, multiple - rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "tile", "epilogue", "aux_kinds", "out_dtype", "interpret", "swap",
+    "dimension_semantics"))
+def gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+         tile: Tuple[int, int, int] = (256, 256, 512),
+         epilogue: Optional[Callable] = None,
+         aux_kinds: Sequence[str] = (),
+         out_dtype=None, swap: bool = False,
+         dimension_semantics: Tuple[str, str, str] = ("parallel", "parallel",
+                                                      "arbitrary"),
+         interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue(A @ B); arbitrary (M,K)x(K,N), padded internally."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    k2, n = b.shape
+    if swap:
+        # operand-swap analog (paper: (A@B)^T = B^T A^T, requires M == N).
+        if m != n:
+            raise ValueError(
+                f"with_swap(true) requires a square output (M == N), got "
+                f"M={m}, N={n} — the layout-reinterpretation identity "
+                "(A@B)^T = B^T@A^T only holds then")
+        return gemm(b.T, a.T, *aux, tile=tile, epilogue=epilogue,
+                    aux_kinds=aux_kinds, out_dtype=out_dtype, swap=False,
+                    dimension_semantics=dimension_semantics,
+                    interpret=interpret).T
+    bm, bn, bk = tile
+    ap = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    bp = _pad_to(_pad_to(b, 0, bk), 1, bn)
+    aux_p = []
+    for kind, arr in zip(aux_kinds, aux):
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 0, bn))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 0, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 0, bm), 1, bn))
+    out = _ge.gemm_epilogue(ap, bp, *aux_p, tile=tile, epilogue=epilogue,
+                            aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+                            dimension_semantics=dimension_semantics,
+                            interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "tile", "epilogue", "aux_kinds", "out_dtype", "interpret"))
+def batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+                 tile: Tuple[int, int, int] = (128, 128, 256),
+                 epilogue: Optional[Callable] = None,
+                 aux_kinds: Sequence[str] = (),
+                 out_dtype=None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    g, m, k = a.shape
+    _, _, n = b.shape
+    bm, bn, bk = tile
+    ap = _pad_to(_pad_to(a, 1, bm), 2, bk)
+    bp = _pad_to(_pad_to(b, 1, bk), 2, bn)
+    aux_p = []
+    for kind, arr in zip(aux_kinds, aux):
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 1, bn))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 1, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 1, bm), 2, bn))
+    out = _ge.batched_gemm_epilogue(
+        ap, bp, *aux_p, tile=tile, epilogue=epilogue,
+        aux_kinds=tuple(aux_kinds), out_dtype=out_dtype, interpret=interpret)
+    return out[:, :m, :n]
+
+
+# Grouped (MoE expert) GEMM shares the batched kernel: G = experts, fixed
+# per-expert capacity rows (dispatch/permutation handled by the MoE layer).
+grouped_gemm = batched_gemm
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_kv", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = False, window: int = 0,
+              scale: Optional[float] = None,
+              block_q: int = 128, block_kv: int = 128,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """(B, S, H, D) GQA attention; kv heads broadcast to q heads."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if hkv != hq:
+        assert hq % hkv == 0, f"GQA needs q_heads % kv_heads == 0 ({hq}/{hkv})"
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = jnp.swapaxes(q, 1, 2).reshape(b * hq, sq, d)
+    kf = jnp.swapaxes(k, 1, 2).reshape(b * hq, skv, d)
+    vf = jnp.swapaxes(v, 1, 2).reshape(b * hq, skv, d)
+    qf = _pad_to(qf, 1, block_q)
+    kf = _pad_to(kf, 1, block_kv)
+    vf = _pad_to(vf, 1, block_kv)
+    out = _fa.flash_attention(
+        qf, kf, vf, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv, kv_len=skv, interpret=interpret)
+    out = out[:, :sq]
+    return jnp.swapaxes(out.reshape(b, hq, sq, d), 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    d = shape[-1]
+    rows = int(x.size // d)
+    x2 = x.reshape(rows, d)
+    block = min(block_rows, rows) if rows % block_rows else block_rows
+    x2 = _pad_to(x2, 0, block)
+    out = _rn.rmsnorm(x2, gamma, eps=eps, block_rows=block,
+                      interpret=interpret)
+    return out[:rows].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, block_rows: int = 256,
+              interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    d = shape[-1]
+    rows = int(x.size // d)
+    x2 = _pad_to(x.reshape(rows, d), 0, block_rows)
+    out = _rn.layernorm(x2, gamma, beta, eps=eps, block_rows=block_rows,
+                        interpret=interpret)
+    return out[:rows].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "block_rows", "interpret"))
+def eltwise(x: jax.Array, fn, *, block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    d = shape[-1] if x.ndim > 1 else x.shape[0]
+    rows = int(x.size // d)
+    x2 = _pad_to(x.reshape(rows, d), 0, block_rows)
+    out = _rn.row_map(x2, fn, block_rows=block_rows, interpret=interpret)
+    return out[:rows].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax(x: jax.Array, *, block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    d = shape[-1]
+    rows = int(x.size // d)
+    x2 = _pad_to(x.reshape(rows, d), 0, block_rows)
+    out = _rn.row_softmax(x2, block_rows=block_rows, interpret=interpret)
+    return out[:rows].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: int = 128,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Mamba-2 SSD over (B, T, H, P) inputs with shared B/C (n_groups=1).
+
+    x: (B,T,H,P)  dt: (B,T,H) (positive)  a: (H,) (negative)
+    b, c: (B,T,N) shared across heads  ->  y: (B,T,H,P)
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    xbar = (x * dt[..., None]).astype(jnp.float32)
+    da = dt * a[None, None, :]
+    # flatten heads; broadcast shared B/C per head
+    xbar_f = jnp.swapaxes(xbar, 1, 2).reshape(bsz * h, t, p)
+    da_f = jnp.swapaxes(da, 1, 2).reshape(bsz * h, t)
+    b_f = jnp.repeat(b[:, None], h, axis=1).reshape(bsz * h, t, n)
+    c_f = jnp.repeat(c[:, None], h, axis=1).reshape(bsz * h, t, n)
+    tp = -t % chunk
+    if tp:
+        xbar_f = _pad_to(xbar_f, 1, chunk)
+        da_f = _pad_to(da_f, 1, chunk)
+        b_f = _pad_to(b_f, 1, chunk)
+        c_f = _pad_to(c_f, 1, chunk)
+    y = _ssd.ssd_scan(xbar_f, da_f, b_f, c_f, chunk=chunk,
+                      interpret=interpret)
+    y = y[:, :t]
+    return jnp.swapaxes(y.reshape(bsz, h, t, p), 1, 2).astype(x.dtype)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are intentionally written with the most literal formulation available
+(sequential ``lax.scan`` for the SSD recurrence, dense softmax for attention)
+so kernel tests compare an optimized blocked algorithm against an independent
+simple one.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, *aux, epilogue: Optional[Callable] = None,
+             aux_kinds: Sequence[str] = (), out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    x = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    if epilogue is not None:
+        blocks = []
+        for kind, arr in zip(aux_kinds, aux):
+            arr = arr.astype(jnp.float32)
+            if kind == "col_vector":
+                blocks.append(arr[None, :])
+            elif kind == "row_vector":
+                blocks.append(arr[:, None])
+            else:
+                blocks.append(arr)
+        x = epilogue(x, *blocks)
+    return x.astype(out_dtype)
+
+
+def batched_gemm_ref(a, b, *aux, epilogue: Optional[Callable] = None,
+                     aux_kinds: Sequence[str] = (), out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    x = jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
+                   b.astype(jnp.float32))
+    if epilogue is not None:
+        blocks = []
+        for kind, arr in zip(aux_kinds, aux):
+            arr = arr.astype(jnp.float32)
+            if kind == "col_vector":
+                blocks.append(arr[:, None, :])
+            elif kind == "row_vector":
+                blocks.append(arr[:, :, None])
+            else:
+                blocks.append(arr)
+        x = epilogue(x, *blocks)
+    return x.astype(out_dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = False, window: int = 0,
+                  scale: Optional[float] = None):
+    """q,k,v: (BH, S, D) — dense softmax attention."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal or window:
+        q_pos = jnp.arange(sq)[:, None]
+        kv_pos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), dtype=bool)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, gamma, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_ref(x, gamma, beta, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def softmax_ref(x):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def ssd_scan_ref(xbar, da, b, c):
+    """Literal sequential linear recurrence (the SSD semantics).
+
+    s_t = exp(da_t) * s_{t-1} + B_t^T xbar_t ;  y_t = C_t s_t
+    xbar: (BH,T,P)  da: (BH,T)  b,c: (BH,T,N)  ->  y: (BH,T,P)
+    """
+    bh, t, p = xbar.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        xb, a, bb, cc = inp
+        s = jnp.exp(a)[:, None, None] * s + jnp.einsum("bn,bp->bnp", bb, xb)
+        y = jnp.einsum("bn,bnp->bp", cc, s)
+        return s, y
+
+    s0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (jnp.swapaxes(xbar, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(da, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(b, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(c, 0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(xbar.dtype)

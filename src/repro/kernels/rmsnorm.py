@@ -1,0 +1,113 @@
+"""Row-blocked fused normalization kernels (RMSNorm / LayerNorm / softmax).
+
+One HBM round-trip per row block: statistics are computed in fp32 in VREGs
+over the feature (lane) axis, then scale/shift applied before writeback.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * g_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32)[None, :] \
+        + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (R, D) pre-padded so R %% block_rows == 0; gamma: (D,)."""
+    r, d = x.shape
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, gamma)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, block_rows: int = 256,
+              interpret: bool = True) -> jax.Array:
+    r, d = x.shape
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def row_map(x: jax.Array, fn, *, block_rows: int = 256,
+            interpret: bool = True) -> jax.Array:
+    """Apply an elementwise fp32 function one VMEM row-block at a time."""
+    r, d = x.shape
+    assert r % block_rows == 0
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = fn(x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+
+
+def row_softmax(x: jax.Array, *, block_rows: int = 256,
+                interpret: bool = True) -> jax.Array:
+    r, d = x.shape
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)

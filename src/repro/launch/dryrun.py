@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without hardware:
+``.lower().compile()`` must succeed on the 16x16 single-pod mesh AND the
+2x16x16 multi-pod mesh for every cell; ``memory_analysis()`` proves it fits,
+``cost_analysis()`` + HLO collective parsing feed SS Roofline.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init.  Run as:
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out runs/dryrun] [--force]
+"""
+
+import argparse        # noqa: E402
+import functools       # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cells, get_arch            # noqa: E402
+from repro.core.sol.hardware import TPU_V5E                         # noqa: E402
+from repro.core.sol.hlo_analysis import summarize_compiled          # noqa: E402
+from repro.core.sol.roofline import roofline                        # noqa: E402
+from repro.launch.mesh import make_production_mesh                  # noqa: E402
+from repro.launch.specs import input_specs                          # noqa: E402
+from repro.models.model import build_model                          # noqa: E402
+from repro.optim.adamw import AdamWState, adamw_init                # noqa: E402
+from repro.sharding.rules import (batch_shardings, cache_shardings,  # noqa: E402
+                                  params_shardings, replicated)
+from repro.train.step import (TrainState, init_state,               # noqa: E402
+                              make_decode_step, make_prefill_step,
+                              make_train_step)
+
+
+def _apply_overrides(cfg, overrides):
+    """--set key=value config overrides (SS Perf hillclimb variants)."""
+    import dataclasses
+    if not overrides:
+        return cfg
+    kw = {}
+    for ov in overrides:
+        key, _, val = ov.partition("=")
+        cur = getattr(cfg, key)   # raises on unknown key
+        if isinstance(cur, bool):
+            kw[key] = val.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            kw[key] = int(val)
+        elif isinstance(cur, float):
+            kw[key] = float(val)
+        else:
+            kw[key] = val
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides=()):
+    """Returns (lowered, num_devices, model_flops)."""
+    cfg = _apply_overrides(get_arch(arch), overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        state_abs = jax.eval_shape(lambda: init_state(model, rng))
+        state_sh = TrainState(
+            params=params_shardings(state_abs.params, mesh),
+            opt=AdamWState(
+                step=replicated(mesh),
+                mu=params_shardings(state_abs.opt.mu, mesh),
+                nu=params_shardings(state_abs.opt.nu, mesh)))
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = batch_shardings(batch_abs, mesh)
+        step = make_train_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(state_abs, batch_abs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.param_count(active_only=True) * tokens
+    elif shape.kind == "prefill":
+        params_abs = jax.eval_shape(lambda: model.init(rng))
+        params_sh = params_shardings(params_abs, mesh)
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = batch_shardings(batch_abs, mesh)
+        step = make_prefill_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, batch_sh),
+                out_shardings=None,
+            ).lower(params_abs, batch_abs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.param_count(active_only=True) * tokens
+    else:  # decode / long_decode
+        params_abs = jax.eval_shape(lambda: model.init(rng))
+        params_sh = params_shardings(params_abs, mesh)
+        cache_abs = jax.eval_shape(functools.partial(
+            model.init_cache, shape.global_batch, shape.seq_len))
+        cache_sh = cache_shardings(cache_abs, mesh)
+        batch_abs = input_specs(cfg, shape)
+        tok_sh = batch_shardings(batch_abs, mesh)["tokens"]
+        step = make_decode_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(params_abs, cache_abs, batch_abs["tokens"])
+        tokens = shape.global_batch
+        model_flops = 2.0 * cfg.param_count(active_only=True) * tokens
+    return lowered, n_dev, model_flops
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, overrides=(), suffix: str = "") -> dict:
+    tag = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{suffix}" if suffix
+                                                  else "")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "overrides": list(overrides)}
+    try:
+        lowered, n_dev, model_flops = lower_cell(
+            arch, shape_name, multi_pod=(mesh_kind == "multi"),
+            overrides=overrides)
+        compiled = lowered.compile()
+        summ = summarize_compiled(compiled, n_dev)
+        rl = roofline(
+            summ.total_flops, summ.total_hbm_bytes,
+            collective_bytes=summ.per_device_collective_bytes * n_dev,
+            num_chips=n_dev, dtype="bf16", chip=TPU_V5E)
+        record.update({
+            "ok": True,
+            "num_devices": n_dev,
+            "compile_seconds": time.time() - t0,
+            "model_flops": model_flops,
+            "useful_flops_ratio": (model_flops / summ.total_flops
+                                   if summ.total_flops else None),
+            "summary": summ.as_dict(),
+            "roofline": rl.as_dict(),
+        })
+        try:
+            ma = compiled.memory_analysis()
+            print(f"{tag}: memory_analysis: {ma}")
+        except Exception:
+            pass
+        ca = compiled.cost_analysis()
+        print(f"{tag}: flops/device={summ.per_device_flops:.3e} "
+              f"bytes/device={summ.per_device_hbm_bytes:.3e} "
+              f"collective/device={summ.per_device_collective_bytes:.3e} "
+              f"t_sol={rl.t_sol:.4f}s bottleneck={rl.bottleneck} "
+              f"({time.time() - t0:.0f}s)")
+        del ca
+    except Exception as e:
+        record.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:],
+                       "compile_seconds": time.time() - t0})
+        print(f"{tag}: FAILED {type(e).__name__}: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="config override, e.g. --set remat_policy=dots")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for override variants")
+    args = ap.parse_args()
+
+    todo = cells()
+    if args.arch:
+        todo = [(a, s) for a, s in todo if a == args.arch]
+    if args.shape:
+        todo = [(a, s) for a, s in todo if s == args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for mesh_kind in meshes:
+        for arch, shape_name in todo:
+            rec = run_cell(arch, shape_name, mesh_kind, args.out, args.force,
+                           overrides=tuple(args.overrides), suffix=args.tag)
+            if rec.get("ok"):
+                n_ok += 1
+            else:
+                n_fail += 1
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch qwen2-0.5b --smoke``."""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_batch=4, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.integers(0, cfg.vocab_size, 5)),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    done = engine.run(reqs)
+    for r in done:
+        print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
+    print("metrics:", engine.metrics)
+
+
+if __name__ == "__main__":
+    main()

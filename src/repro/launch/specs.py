@@ -1,0 +1,37 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Batch specs for the step the shape's kind lowers.
+
+    train   -> {tokens, labels [, frames | image_embeds]}
+    prefill -> {tokens [, frames | image_embeds]}
+    decode  -> {tokens: (B, 1)}  (the cache is built separately)
+    """
+    b = shape.global_batch
+    s = shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), tok),
+                 "labels": jax.ShapeDtypeStruct((b, s), tok)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+    else:  # decode / long_decode: one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,52 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen2-0.5b``.
+
+CPU-scale driver over the same model/step/data/checkpoint stack the
+multi-pod dry-run lowers.  On a real pod this process runs once per host
+(jax.distributed.initialize + the production mesh); flags for the
+latency-hiding scheduler and async collectives are set here so
+compute/communication overlap is on by default.
+"""
+
+import os
+
+# XLA flags a real TPU launch would set (harmless on CPU):
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_overlap_compute_collective_tc=true")
+
+import argparse        # noqa: E402
+
+from repro.configs import get_arch                     # noqa: E402
+from repro.data.pipeline import DataConfig             # noqa: E402
+from repro.models.model import build_model             # noqa: E402
+from repro.optim.adamw import AdamWConfig              # noqa: E402
+from repro.train.loop import TrainLoopConfig, train    # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    data_cfg = DataConfig(global_batch=args.batch, seq_len=args.seq,
+                          vocab_size=cfg.vocab_size)
+    out = train(model, data_cfg,
+                TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir),
+                AdamWConfig(total_steps=args.steps, warmup_steps=5))
+    print(f"done: final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

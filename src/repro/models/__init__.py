@@ -1,0 +1,2 @@
+"""Model zoo: dense GQA / MoE / SSM / hybrid / enc-dec / VLM, pure JAX."""
+from .model import Model, build_model

@@ -1,0 +1,332 @@
+"""Core layers: norms, rotary embeddings, attention (dense / flash-style
+chunked / sliding-window / cross / decode-with-cache), MLPs.
+
+Pure-jnp, param-pytree style (no flax): every layer is (init_fn, apply_fn)
+with explicit dict params, so the whole model is a pytree that pjit/shard_map
+can shard by path rules.  Compute runs in bf16 with fp32 accumulation and
+fp32 softmax; params are stored fp32 (optimizer master copy).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+def _dense_init(rng, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Dict:
+    return {"gamma": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * params["gamma"]).astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset=0, kv_len: Optional[jax.Array] = None):
+    """q: (B,Sq,H,D)  k,v: (B,Skv,H,D) — materializes scores (small Sq)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    kv_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    mask = mask[None, None]
+    if kv_len is not None:
+        mask = mask & (kv_pos[None, None] < kv_len)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def flash_attention_xla(q, k, v, *, causal: bool, chunk_kv: int = 1024):
+    """Online-softmax scan over KV chunks (the XLA 'flash' formulation).
+
+    Memory stays O(Sq x chunk) instead of O(Sq x Skv) — required for the
+    32k-prefill shapes where dense scores would not fit HBM.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    n_chunks = -(-skv // chunk_kv)
+    pad = n_chunks * chunk_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk_kv, h, d)
+    vc = v.reshape(b, n_chunks, chunk_kv, h, d)
+    scale = 1.0 / math.sqrt(d)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kv_pos = idx * chunk_kv + jnp.arange(chunk_kv)
+        mask = kv_pos[None, :] < skv
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        acc_new = corr[..., None] * acc + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    idxs = jnp.arange(n_chunks)
+    # remat the chunk body: the (B,H,Sq,chunk) probability tile is
+    # recomputed in backward instead of being saved per chunk
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0),
+        (idxs, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.einsum("bhqd->bqhd", out).astype(q.dtype)
+
+
+def windowed_attention_xla(q, k, v, *, window: int, chunk_q: int = 1024):
+    """Sliding-window attention with per-q-block KV slices of STATIC size
+    (window + chunk_q): total FLOPs scale with S x window, not S^2."""
+    b, sq, h, d = q.shape
+    n_blocks = -(-sq // chunk_q)
+    pad = n_blocks * chunk_q - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # left-pad K/V by window so every slice is in range
+    kp = jnp.pad(k, ((0, 0), (window, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, n_blocks, chunk_q, h, d)
+    span = window + chunk_q
+    scale = 1.0 / math.sqrt(d)
+
+    def block(carry, inp):
+        i, qblk = inp
+        start = i * chunk_q          # in padded coords == q_start
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kb,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = i * chunk_q + jnp.arange(chunk_q)
+        kv_pos = start - window + jnp.arange(span)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) \
+            & (kv_pos[None, :] > q_pos[:, None] - window) \
+            & (kv_pos[None, :] >= 0) & (q_pos[:, None] < sq) \
+            & (kv_pos[None, :] < sq)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+        return carry, o.astype(qblk.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(block), None,
+                           (jnp.arange(n_blocks), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_blocks * chunk_q, h, d)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + core + cache handling)
+# ---------------------------------------------------------------------------
+
+def attention_init(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool = False) -> Dict:
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads * head_dim)),
+        "wk": _dense_init(ks[1], (d_model, n_kv * head_dim)),
+        "wv": _dense_init(ks[2], (d_model, n_kv * head_dim)),
+        "wo": _dense_init(ks[3], (n_heads * head_dim, d_model)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), jnp.float32)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("bsd,df->bsf", x, w.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return y.astype(COMPUTE_DTYPE)
+
+
+def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
+                    head_dim: int, causal: bool = True, window: int = 0,
+                    rope_theta: float = 1e4,
+                    positions: Optional[jax.Array] = None,
+                    kv_cache: Optional[Dict] = None,
+                    xattn_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    flash_threshold: int = 2048, chunk_kv: int = 512):
+    """Self- or cross-attention with optional KV cache.
+
+    kv_cache: {"k": (B, Smax, n_kv, D), "v": ..., "pos": scalar} for decode.
+    xattn_kv: precomputed (k, v) from an encoder (cross-attention).
+    Returns (out, new_cache).
+    """
+    b, sq, _ = x.shape
+    q = _proj(x, params["wq"], params.get("bq")).reshape(
+        b, sq, n_heads, head_dim)
+    if xattn_kv is not None:
+        k, v = xattn_kv
+    else:
+        k = _proj(x, params["wk"], params.get("bk")).reshape(
+            b, sq, n_kv, head_dim)
+        v = _proj(x, params["wv"], params.get("bv")).reshape(
+            b, sq, n_kv, head_dim)
+
+    new_cache = None
+    if xattn_kv is not None:
+        out = dense_attention(q, _repeat_kv(k, n_heads // k.shape[2]),
+                              _repeat_kv(v, n_heads // v.shape[2]),
+                              causal=False)
+    elif kv_cache is not None:
+        pos = kv_cache["pos"]                   # (B,) per-slot positions
+        if pos.ndim == 0:
+            pos = jnp.full((b,), pos)
+        if positions is None:
+            positions = pos[:, None] + jnp.arange(sq)[None, :]
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+        s_max = kv_cache["k"].shape[1]
+        b_idx = jnp.arange(b)[:, None]
+        if window:
+            # rolling window cache: write at pos % window, per slot
+            idx = (pos[:, None] + jnp.arange(sq)[None, :]) % s_max
+            ck = kv_cache["k"].at[b_idx, idx].set(
+                k.astype(kv_cache["k"].dtype))
+            cv = kv_cache["v"].at[b_idx, idx].set(
+                v.astype(kv_cache["v"].dtype))
+            p_ = pos[:, None]
+            slot_pos = jnp.arange(s_max)[None, :]
+            kv_pos_abs = jnp.where(
+                slot_pos <= (p_ % s_max),
+                p_ - (p_ % s_max) + slot_pos,
+                p_ - (p_ % s_max) - s_max + slot_pos)       # (B, s_max)
+            valid = (kv_pos_abs >= 0) & (kv_pos_abs <= p_) \
+                & (kv_pos_abs > p_ - window)
+        else:
+            idx = pos[:, None] + jnp.arange(sq)[None, :]
+            ck = kv_cache["k"].at[b_idx, idx].set(
+                k.astype(kv_cache["k"].dtype))
+            cv = kv_cache["v"].at[b_idx, idx].set(
+                v.astype(kv_cache["v"].dtype))
+            valid = jnp.arange(s_max)[None, :] <= pos[:, None]  # (B, s_max)
+        kk = _repeat_kv(ck.astype(COMPUTE_DTYPE), n_heads // n_kv)
+        vv = _repeat_kv(cv.astype(COMPUTE_DTYPE), n_heads // n_kv)
+        scale = 1.0 / math.sqrt(head_dim)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p, vv,
+                         preferred_element_type=jnp.float32).astype(q.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": pos + sq}
+    else:
+        if positions is None:
+            positions = jnp.arange(sq)
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+        kk = _repeat_kv(k, n_heads // n_kv)
+        vv = _repeat_kv(v, n_heads // n_kv)
+        if window and sq > window:
+            out = windowed_attention_xla(q, kk, vv, window=window,
+                                         chunk_q=min(1024, sq))
+        elif sq > flash_threshold:
+            out = flash_attention_xla(q, kk, vv, causal=causal,
+                                      chunk_kv=min(chunk_kv, sq))
+        else:
+            out = dense_attention(q, kk, vv, causal=causal, window=window)
+
+    out = out.reshape(b, sq, n_heads * head_dim)
+    y = jnp.einsum("bsf,fd->bsd", out, params["wo"].astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int, act: str = "swiglu") -> Dict:
+    ks = jax.random.split(rng, 3)
+    if act == "swiglu":
+        return {"w_gate": _dense_init(ks[0], (d_model, d_ff)),
+                "w_up": _dense_init(ks[1], (d_model, d_ff)),
+                "w_down": _dense_init(ks[2], (d_ff, d_model))}
+    return {"w_in": _dense_init(ks[0], (d_model, d_ff)),
+            "w_out": _dense_init(ks[1], (d_ff, d_model))}
+
+
+def mlp_apply(params: Dict, x: jax.Array, act: str = "swiglu") -> jax.Array:
+    if act == "swiglu":
+        g = _proj(x, params["w_gate"])
+        u = _proj(x, params["w_up"])
+        h = (g * jax.nn.sigmoid(g.astype(jnp.float32)).astype(g.dtype)) * u
+        return _proj(h, params["w_down"])
+    h = _proj(x, params["w_in"])
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(h.dtype)
+    return _proj(h, params["w_out"])

@@ -1,0 +1,432 @@
+"""Model assembly for all six architecture families.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  init(rng)                          -> params pytree (layers scan-stacked)
+  forward(params, batch)             -> logits (train/prefill forward)
+  init_cache(batch, max_len)         -> decode cache pytree
+  prefill(params, batch, max_len)    -> (last_logits, cache)
+  decode_step(params, cache, tokens) -> (logits, cache)
+
+Layer stacks are jax.lax.scan over stacked params (O(1) compile size in
+depth) with configurable remat.  Heterogeneous stacks (Zamba-2 hybrid,
+Llama-vision) scan over groups: e.g. 54 Mamba layers + one weight-SHARED
+attention block applied every 6 layers == scan over 9 groups of (6-layer
+inner scan + shared block).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (COMPUTE_DTYPE, attention_apply, attention_init,
+                     mlp_apply, mlp_init, rmsnorm, rmsnorm_init, _dense_init,
+                     _proj)
+from .moe import moe_apply, moe_init
+from .ssm import mamba2_apply, mamba2_init, mamba2_init_state
+
+
+# ---------------------------------------------------------------------------
+# per-family layer init / apply
+# ---------------------------------------------------------------------------
+
+def _tf_layer_init(rng, cfg: ModelConfig, cross: bool = False) -> Dict:
+    ks = jax.random.split(rng, 4)
+    p = {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "attn": attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.resolved_head_dim,
+                               cfg.qkv_bias),
+        "norm2": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "moe" and not cross:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            cfg.act)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _tf_layer_apply(params, x, cfg: ModelConfig, *, causal=True,
+                    kv_cache=None, xattn_kv=None, positions=None):
+    aux = jnp.zeros((), jnp.float32)
+    h, new_cache = attention_apply(
+        params["attn"], rmsnorm(params["norm1"], x, cfg.norm_eps),
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, causal=causal,
+        window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+        kv_cache=kv_cache, xattn_kv=xattn_kv, positions=positions,
+        chunk_kv=cfg.attn_chunk_kv)
+    x = x + h
+    z = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if "moe" in params:
+        m, aux = moe_apply(params["moe"], z,
+                           top_k=cfg.num_experts_per_tok,
+                           capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        m = mlp_apply(params["mlp"], z, cfg.act)
+    return x + m, new_cache, aux
+
+
+def _ssm_layer_init(rng, cfg: ModelConfig) -> Dict:
+    return {
+        "norm": rmsnorm_init(cfg.d_model),
+        "mamba": mamba2_init(rng, cfg.d_model, d_inner=cfg.d_inner,
+                             d_state=cfg.ssm_state,
+                             head_dim=cfg.ssm_head_dim,
+                             conv_kernel=cfg.conv_kernel),
+    }
+
+
+def _ssm_layer_apply(params, x, cfg: ModelConfig, state=None):
+    h, new_state = mamba2_apply(
+        params["mamba"], rmsnorm(params["norm"], x, cfg.norm_eps),
+        d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel,
+        chunk=cfg.ssd_chunk, impl=cfg.ssd_impl, state=state)
+    return x + h, new_state
+
+
+def _stack_init(rng, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, body):
+    """Wrap a scan body per the config's remat policy (SS Perf lever)."""
+    if cfg.remat_policy == "none":
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init -------------------------------------------------
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 8)
+        params: Dict[str, Any] = {
+            "embed": _dense_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                 scale=0.02),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _dense_init(
+                ks[1], (cfg.d_model, cfg.padded_vocab))
+
+        if cfg.family in ("dense", "moe"):
+            params["layers"] = _stack_init(
+                ks[2], cfg.num_layers, lambda r: _tf_layer_init(r, cfg))
+        elif cfg.family == "ssm":
+            params["layers"] = _stack_init(
+                ks[2], cfg.num_layers, lambda r: _ssm_layer_init(r, cfg))
+        elif cfg.family == "hybrid":
+            g = cfg.num_layers // cfg.shared_attn_every
+            per = cfg.shared_attn_every
+            flat = _stack_init(ks[2], cfg.num_layers,
+                               lambda r: _ssm_layer_init(r, cfg))
+            params["ssm_layers"] = jax.tree.map(
+                lambda a: a.reshape((g, per) + a.shape[1:]), flat)
+            params["shared_attn"] = _tf_layer_init(ks[3], cfg)
+        elif cfg.family == "audio":
+            params["enc_layers"] = _stack_init(
+                ks[2], cfg.encoder_layers, lambda r: _tf_layer_init(r, cfg))
+            params["dec_layers"] = _stack_init(
+                ks[3], cfg.num_layers, lambda r: _tf_layer_init(r, cfg))
+            params["dec_xattn"] = _stack_init(
+                ks[4], cfg.num_layers,
+                lambda r: {"norm": rmsnorm_init(cfg.d_model),
+                           "attn": attention_init(
+                               r, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.resolved_head_dim)})
+            params["enc_norm"] = rmsnorm_init(cfg.d_model)
+        elif cfg.family == "vlm":
+            g = cfg.num_layers // cfg.cross_attn_every
+            per = cfg.cross_attn_every - 1
+            flat = _stack_init(ks[2], g * per,
+                               lambda r: _tf_layer_init(r, cfg))
+            params["self_layers"] = jax.tree.map(
+                lambda a: a.reshape((g, per) + a.shape[1:]), flat)
+            params["cross_layers"] = _stack_init(
+                ks[3], g, lambda r: _tf_layer_init(r, cfg))
+        else:
+            raise KeyError(cfg.family)
+        return params
+
+    # ---------------- forward (train / prefill) ----------------------------
+    def forward_hidden(self, params: Dict, batch: Dict):
+        """Backbone only: returns (final_norm(x), moe_aux_loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe"):
+            def body(carry, layer_p):
+                x, aux = carry
+                x, _, a = _tf_layer_apply(layer_p, x, cfg, causal=True)
+                return (x, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(
+                _remat(cfg, body), (x, aux_total), params["layers"])
+        elif cfg.family == "ssm":
+            def body(x, layer_p):
+                x, _ = _ssm_layer_apply(layer_p, x, cfg)
+                return x, None
+            x, _ = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def group(x, group_p):
+                def inner(x, lp):
+                    x, _ = _ssm_layer_apply(lp, x, cfg)
+                    return x, None
+                x, _ = jax.lax.scan(inner, x, group_p)
+                x, _, _ = _tf_layer_apply(shared, x, cfg, causal=True)
+                return x, None
+            x, _ = jax.lax.scan(_remat(cfg, group), x,
+                                params["ssm_layers"])
+        elif cfg.family == "audio":
+            enc = batch["frames"].astype(COMPUTE_DTYPE)
+
+            def enc_body(h, lp):
+                h, _, _ = _tf_layer_apply(lp, h, cfg, causal=False)
+                return h, None
+            enc, _ = jax.lax.scan(_remat(cfg, enc_body), enc,
+                                  params["enc_layers"])
+            enc = rmsnorm(params["enc_norm"], enc, cfg.norm_eps)
+
+            def dec_body(carry, lps):
+                x, aux = carry
+                lp, xp = lps
+                x, _, a = _tf_layer_apply(lp, x, cfg, causal=True)
+                kx = _proj(enc, xp["attn"]["wk"]).reshape(
+                    b, -1, cfg.num_kv_heads, cfg.resolved_head_dim)
+                vx = _proj(enc, xp["attn"]["wv"]).reshape(
+                    b, -1, cfg.num_kv_heads, cfg.resolved_head_dim)
+                h, _ = attention_apply(
+                    xp["attn"], rmsnorm(xp["norm"], x, cfg.norm_eps),
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, xattn_kv=(kx, vx))
+                return (x + h, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(
+                _remat(cfg, dec_body), (x, aux_total),
+                (params["dec_layers"], params["dec_xattn"]))
+        elif cfg.family == "vlm":
+            img = batch["image_embeds"].astype(COMPUTE_DTYPE)
+
+            def group(x, lps):
+                self_p, cross_p = lps
+
+                def inner(x, lp):
+                    x, _, _ = _tf_layer_apply(lp, x, cfg, causal=True)
+                    return x, None
+                x, _ = jax.lax.scan(inner, x, self_p)
+                kx = _proj(img, cross_p["attn"]["wk"]).reshape(
+                    b, -1, cfg.num_kv_heads, cfg.resolved_head_dim)
+                vx = _proj(img, cross_p["attn"]["wv"]).reshape(
+                    b, -1, cfg.num_kv_heads, cfg.resolved_head_dim)
+                h, _ = attention_apply(
+                    cross_p["attn"],
+                    rmsnorm(cross_p["norm1"], x, cfg.norm_eps),
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, xattn_kv=(kx, vx))
+                x = x + h
+                x = x + mlp_apply(cross_p["mlp"],
+                                  rmsnorm(cross_p["norm2"], x, cfg.norm_eps),
+                                  cfg.act)
+                return x, None
+            x, _ = jax.lax.scan(
+                _remat(cfg, group), x,
+                (params["self_layers"], params["cross_layers"]))
+        else:
+            raise KeyError(cfg.family)
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux_total
+
+    def lm_head_matrix(self, params: Dict) -> jax.Array:
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    def logits_of(self, params: Dict, x: jax.Array) -> jax.Array:
+        head = self.lm_head_matrix(params)
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(COMPUTE_DTYPE),
+                            preferred_element_type=jnp.float32)
+        try:  # keep the vocab dim model-sharded (needs an active mesh)
+            logits = jax.lax.with_sharding_constraint(
+                logits, jax.sharding.PartitionSpec(None, None, "model"))
+        except Exception:
+            pass
+        return logits
+
+    def forward(self, params: Dict, batch: Dict):
+        x, aux = self.forward_hidden(params, batch)
+        return self.logits_of(params, x), aux
+
+    # ---------------- decode cache -----------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+        s_max = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+            else max_len
+
+        def kv_cache(n):
+            return {
+                "k": jnp.zeros((n, batch, s_max, kv, hd), COMPUTE_DTYPE),
+                "v": jnp.zeros((n, batch, s_max, kv, hd), COMPUTE_DTYPE),
+                "pos": jnp.zeros((n, batch), jnp.int32),  # per-slot positions
+            }
+
+        if cfg.family in ("dense", "moe"):
+            return {"layers": kv_cache(cfg.num_layers)}
+        if cfg.family == "ssm":
+            states = [mamba2_init_state(
+                batch, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel)
+                for _ in range(cfg.num_layers)]
+            return {"layers": jax.tree.map(
+                lambda *xs: jnp.stack(xs), *states)}
+        if cfg.family == "hybrid":
+            g = cfg.num_layers // cfg.shared_attn_every
+            states = [mamba2_init_state(
+                batch, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel)
+                for _ in range(cfg.num_layers)]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+            stacked = jax.tree.map(
+                lambda a: a.reshape((g, cfg.shared_attn_every) + a.shape[1:]),
+                stacked)
+            return {"ssm": stacked, "shared": kv_cache(g)}
+        if cfg.family == "audio":
+            return {
+                "layers": kv_cache(cfg.num_layers),
+                "cross_k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                      kv, hd), COMPUTE_DTYPE),
+                "cross_v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                                      kv, hd), COMPUTE_DTYPE),
+            }
+        if cfg.family == "vlm":
+            g = cfg.num_layers // cfg.cross_attn_every
+            per = cfg.cross_attn_every - 1
+            c = kv_cache(g * per)
+            c = {"self": jax.tree.map(
+                lambda a: a.reshape((g, per) + a.shape[1:]), c)}
+            c["cross_k"] = jnp.zeros((g, batch, cfg.vision_patches, kv, hd),
+                                     COMPUTE_DTYPE)
+            c["cross_v"] = jnp.zeros((g, batch, cfg.vision_patches, kv, hd),
+                                     COMPUTE_DTYPE)
+            return c
+        raise KeyError(cfg.family)
+
+    # ---------------- decode step -----------------------------------------
+    def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array,
+                    extras: Optional[Dict] = None):
+        """tokens: (B, 1) — one new token against the cache."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+
+        if cfg.family in ("dense", "moe"):
+            def body(x, xs):
+                lp, lc = xs
+                y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                           kv_cache=lc)
+                return y, nc
+            x, new_layer_cache = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": new_layer_cache}
+        elif cfg.family == "ssm":
+            def body(x, xs):
+                lp, st = xs
+                y, ns = _ssm_layer_apply(lp, x, cfg, state=st)
+                return y, ns
+            x, new_states = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": new_states}
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def group(x, xs):
+                gp, gstate, gkv = xs
+
+                def inner(x, ys):
+                    lp, st = ys
+                    y, ns = _ssm_layer_apply(lp, x, cfg, state=st)
+                    return y, ns
+                x, new_gstate = jax.lax.scan(inner, x, (gp, gstate))
+                y, nkv, _ = _tf_layer_apply(shared, x, cfg, causal=True,
+                                            kv_cache=gkv)
+                return y, (new_gstate, nkv)
+            x, (new_ssm, new_shared) = jax.lax.scan(
+                group, x, (params["ssm_layers"], cache["ssm"],
+                           cache["shared"]))
+            new_cache = {"ssm": new_ssm, "shared": new_shared}
+        elif cfg.family == "audio":
+            def body(x, xs):
+                lp, xp, lc, ck, cv = xs
+                y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                           kv_cache=lc)
+                h, _ = attention_apply(
+                    xp["attn"], rmsnorm(xp["norm"], y, cfg.norm_eps),
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, xattn_kv=(ck, cv))
+                return y + h, nc
+            x, new_layer_cache = jax.lax.scan(
+                body, x, (params["dec_layers"], params["dec_xattn"],
+                          cache["layers"], cache["cross_k"],
+                          cache["cross_v"]))
+            new_cache = dict(cache)
+            new_cache["layers"] = new_layer_cache
+        elif cfg.family == "vlm":
+            def group(x, xs):
+                sp, cp, sc, ck, cv = xs
+
+                def inner(x, ys):
+                    lp, lc = ys
+                    y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                               kv_cache=lc)
+                    return y, nc
+                x, new_sc = jax.lax.scan(inner, x, (sp, sc))
+                h, _ = attention_apply(
+                    cp["attn"], rmsnorm(cp["norm1"], x, cfg.norm_eps),
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, xattn_kv=(ck, cv))
+                x = x + h
+                x = x + mlp_apply(cp["mlp"],
+                                  rmsnorm(cp["norm2"], x, cfg.norm_eps),
+                                  cfg.act)
+                return x, new_sc
+            x, new_self = jax.lax.scan(
+                group, x, (params["self_layers"], params["cross_layers"],
+                           cache["self"], cache["cross_k"],
+                           cache["cross_v"]))
+            new_cache = dict(cache)
+            new_cache["self"] = new_self
+        else:
+            raise KeyError(cfg.family)
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.logits_of(params, x), new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

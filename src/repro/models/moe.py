@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch is gather/scatter (zero extra matmul FLOPs — the MegaBlocks-style
+permutation, not the GShard one-hot einsum) with a static per-expert
+capacity, so shapes stay fixed for pjit and the expert dimension shards over
+the model axis (expert parallelism).  Overflowing tokens are dropped
+(capacity_factor controls slack); dropped tokens pass through the residual.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, _dense_init
+
+
+def moe_init(rng, d_model: int, d_ff: int, n_experts: int,
+             act: str = "swiglu") -> Dict:
+    ks = jax.random.split(rng, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {"router": _dense_init(ks[0], (d_model, n_experts))}
+    if act == "swiglu":
+        p["w_gate"] = jax.random.normal(
+            ks[1], (n_experts, d_model, d_ff), jnp.float32) * scale
+        p["w_up"] = jax.random.normal(
+            ks[2], (n_experts, d_model, d_ff), jnp.float32) * scale
+        p["w_down"] = jax.random.normal(
+            ks[3], (n_experts, d_ff, d_model), jnp.float32) / math.sqrt(d_ff)
+    else:
+        p["w_in"] = jax.random.normal(
+            ks[1], (n_experts, d_model, d_ff), jnp.float32) * scale
+        p["w_out"] = jax.random.normal(
+            ks[2], (n_experts, d_ff, d_model), jnp.float32) / math.sqrt(d_ff)
+    return p
+
+
+def moe_apply(params: Dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25,
+              act: str = "swiglu") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)      # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch with static capacity ------------------------
+    cap = int(capacity_factor * t * top_k / e)
+    cap = max(-(-cap // 8) * 8, 8)                           # pad to sublane
+    flat_expert = expert_idx.reshape(-1)                     # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                         # stable
+    sorted_e = flat_expert[order]
+    sorted_tok = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # position within each expert's group
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    pos_in_e = jnp.arange(t * top_k) - group_start[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # overflow bin
+
+    # gather tokens into (E*cap, D) expert buffers (one dummy overflow row)
+    buf = jnp.zeros((e * cap + 1, d), COMPUTE_DTYPE)
+    buf = buf.at[slot].set(xf.astype(COMPUTE_DTYPE)[sorted_tok])
+    expert_in = buf[:-1].reshape(e, cap, d)
+
+    # ---- expert FFNs (grouped GEMMs over the expert dim) ------------------
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", expert_in,
+                       params["w_gate"].astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("ecd,edf->ecf", expert_in,
+                       params["w_up"].astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32)
+        h = (g * jax.nn.sigmoid(g)) * u
+        out = jnp.einsum("ecf,efd->ecd", h.astype(COMPUTE_DTYPE),
+                         params["w_down"].astype(COMPUTE_DTYPE),
+                         preferred_element_type=jnp.float32)
+    else:
+        h = jnp.einsum("ecd,edf->ecf", expert_in,
+                       params["w_in"].astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(h, approximate=True)
+        out = jnp.einsum("ecf,efd->ecd", h.astype(COMPUTE_DTYPE),
+                         params["w_out"].astype(COMPUTE_DTYPE),
+                         preferred_element_type=jnp.float32)
+    out = out.reshape(e * cap, d)
+
+    # ---- combine: scatter-add back to tokens, weighted by gates -----------
+    combined = jnp.zeros((t, d), jnp.float32)
+    contrib = jnp.where(keep[:, None], out[jnp.minimum(slot, e * cap - 1)]
+                        * sorted_gate[:, None], 0.0)
+    combined = combined.at[sorted_tok].add(contrib)
+    return combined.reshape(b, s, d).astype(COMPUTE_DTYPE), aux_loss

@@ -1,0 +1,226 @@
+"""Mamba-2 (SSD) block: chunked parallel form for train/prefill, recurrent
+form for decode.  Mirrors the math of kernels/ssd_scan.py in pure jnp so the
+distributed model and the Pallas kernel share one oracle."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import COMPUTE_DTYPE, _dense_init, rmsnorm, rmsnorm_init
+
+
+def mamba2_init(rng, d_model: int, *, d_inner: int, d_state: int,
+                head_dim: int, conv_kernel: int = 4) -> Dict:
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(rng, 5)
+    # in_proj emits [x (d_inner), z (d_inner), B (n), C (n), dt (heads)]
+    out_dim = 2 * d_inner + 2 * d_state + n_heads
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, out_dim)),
+        "conv_w": jax.random.normal(
+            ks[1], (conv_kernel, d_inner + 2 * d_state), jnp.float32) * 0.2,
+        "A_log": jnp.log(jnp.linspace(1.0, 8.0, n_heads)
+                         .astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": _dense_init(ks[2], (d_inner, d_model)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """x: (B, S, C); w: (K, C) depthwise causal. state: (B, K-1, C)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out.astype(COMPUTE_DTYPE), new_state
+
+
+def _ssd_chunked(xbar, da, bmat, cmat, chunk: int, decay_dtype=jnp.float32):
+    """Chunked SSD (see kernels/ssd_scan.py for the derivation).
+
+    xbar: (B,S,H,P)  da: (B,S,H)  bmat,cmat: (B,S,N)  ->  y: (B,S,H,P)
+
+    ``decay_dtype=bf16`` halves the dominant HBM traffic (the
+    (B,nc,chunk,chunk,H) decay tensors) at ~1e-3 relative error — the
+    SS Perf ``ssd_impl=parallel_bf16`` lever.
+    """
+    b, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    xc = xbar.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dac = da.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)                       # (b,nc,c,h)
+    total = cum[:, :, -1]                               # (b,nc,h)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,ci,cj,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None],
+                      jnp.exp(jnp.where(tri[None, None, :, :, None], li, 0.0)),
+                      0.0).astype(decay_dtype)
+    scores = jnp.einsum("bgin,bgjn->bgij", cc, bc)      # (b,nc,ci,cj)
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp",
+                         scores.astype(decay_dtype), decay,
+                         xc.astype(decay_dtype)).astype(jnp.float32)
+
+    # chunk state: S_g = sum_j B_j (xbar_j * decay_to_end_j)   (b,nc,h,n,p)
+    d2e = jnp.exp(total[:, :, None, :] - cum)           # (b,nc,c,h)
+    states = jnp.einsum("bgjn,bgjh,bgjhp->bghnp", bc, d2e, xc)
+
+    # scan over chunks: s' = exp(total) s + state
+    def step(s_prev, inp):
+        tot_g, st_g = inp                               # (b,h), (b,h,n,p)
+        s_new = jnp.exp(tot_g)[:, :, None, None] * s_prev + st_g
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(states, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)               # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp",
+                         cc, jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)
+    return y[:, :s].astype(COMPUTE_DTYPE)
+
+
+def _ssd_chunk_scan(xbar, da, bmat, cmat, chunk: int):
+    """Sequential-chunk SSD: one chunk's decay tile lives at a time.
+
+    Identical math to ``_ssd_chunked`` but the (chunk, chunk, heads) decay
+    tensor exists for ONE chunk only (a lax.scan over chunks) instead of for
+    all S/chunk chunks at once — the XLA analogue of the Pallas kernel's
+    VMEM-resident decay tile.  This is the SS Perf `ssd_impl=scan` lever.
+    """
+    b, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    xc = jnp.moveaxis(xbar.reshape(b, nc, chunk, h, p), 1, 0)
+    dac = jnp.moveaxis(da.reshape(b, nc, chunk, h), 1, 0)
+    bc = jnp.moveaxis(bmat.reshape(b, nc, chunk, n), 1, 0)
+    cc = jnp.moveaxis(cmat.reshape(b, nc, chunk, n), 1, 0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(s_prev, inp):
+        xg, dag, bg, cg = (t.astype(jnp.float32) for t in inp)
+        cum = jnp.cumsum(dag, axis=1)                   # (b,c,h)
+        total = cum[:, -1]                              # (b,h)
+        li = cum[:, :, None, :] - cum[:, None, :, :]    # (b,ci,cj,h)
+        decay = jnp.where(tri[None, :, :, None],
+                          jnp.exp(jnp.where(tri[None, :, :, None], li, 0.0)),
+                          0.0).astype(COMPUTE_DTYPE)
+        scores = jnp.einsum("bin,bjn->bij", cg, bg)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp",
+                             scores.astype(COMPUTE_DTYPE), decay,
+                             xg.astype(COMPUTE_DTYPE))
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp",
+                             cg, jnp.exp(cum), s_prev)
+        d2e = jnp.exp(total[:, None, :] - cum)          # (b,c,h)
+        s_new = jnp.exp(total)[:, :, None, None] * s_prev \
+            + jnp.einsum("bjn,bjh,bjhp->bhnp", bg, d2e, xg)
+        return s_new, (y_intra.astype(jnp.float32) + y_inter)
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (xc, dac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, p)
+    return y[:, :s].astype(COMPUTE_DTYPE)
+
+
+def mamba2_apply(params: Dict, x: jax.Array, *, d_inner: int, d_state: int,
+                 head_dim: int, conv_kernel: int = 4, chunk: int = 256,
+                 impl: str = "parallel",
+                 state: Optional[Dict] = None):
+    """x: (B, S, D) -> (y, new_state).
+
+    state (decode): {"conv": (B, K-1, C), "ssd": (B, H, N, P)}.
+    """
+    b, s, d = x.shape
+    h = d_inner // head_dim
+    n = d_state
+    proj = jnp.einsum("bsd,df->bsf", x.astype(COMPUTE_DTYPE),
+                      params["in_proj"].astype(COMPUTE_DTYPE),
+                      preferred_element_type=jnp.float32)
+    xi = proj[..., :d_inner]
+    z = proj[..., d_inner:2 * d_inner]
+    bc = proj[..., 2 * d_inner:2 * d_inner + 2 * n]
+    dt_raw = proj[..., 2 * d_inner + 2 * n:]
+
+    conv_in = jnp.concatenate([xi, bc], axis=-1).astype(COMPUTE_DTYPE)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32))
+    xi = conv_out[..., :d_inner]
+    bmat = conv_out[..., d_inner:d_inner + n]
+    cmat = conv_out[..., d_inner + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])          # (b,s,h)
+    a = -jnp.exp(params["A_log"])                      # (h,)
+    da = dt * a[None, None, :]
+    xh = xi.reshape(b, s, h, head_dim)
+    xbar = xh * dt[..., None]
+
+    if state is None:
+        if impl == "scan":
+            y = _ssd_chunk_scan(xbar, da, bmat, cmat, chunk)
+        elif impl == "parallel_bf16":
+            y = _ssd_chunked(xbar, da, bmat, cmat, chunk,
+                             decay_dtype=COMPUTE_DTYPE)
+        else:
+            y = _ssd_chunked(xbar, da, bmat, cmat, chunk)
+        new_ssd = None
+    else:
+        # recurrent decode step (s == 1)
+        s_prev = state["ssd"]                          # (b,h,n,p)
+        s_new = (jnp.exp(da[:, 0])[:, :, None, None] * s_prev
+                 + jnp.einsum("bn,bhp->bhnp", bmat[:, 0], xbar[:, 0]))
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], s_new)[:, None]
+        y = y.reshape(b, 1, h, head_dim)
+        new_ssd = s_new
+
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["norm"], y)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bsf,fd->bsd", y,
+                     params["out_proj"].astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssd": new_ssd}
+    return out, new_state
+
+
+def mamba2_init_state(cfg_b: int, *, d_inner: int, d_state: int,
+                      head_dim: int, conv_kernel: int) -> Dict:
+    h = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((cfg_b, conv_kernel - 1, d_inner + 2 * d_state),
+                          COMPUTE_DTYPE),
+        "ssd": jnp.zeros((cfg_b, h, d_state, head_dim), jnp.float32),
+    }

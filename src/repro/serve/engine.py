@@ -1,0 +1,135 @@
+"""Batched serving engine: continuous batching over the jit decode step.
+
+Production-shaped, CPU-scale:
+  * one shared KV cache with static shapes and *per-slot* positions — the
+    same decode cell the multi-pod dry-run lowers,
+  * continuous batching: every decode step advances all active slots; a new
+    request takes a free slot, streams its prompt (teacher-forced prefill),
+    then samples; finished requests release their slot immediately,
+  * slot reset = zeroing that slot's cache positions (old entries are
+    masked out by the validity mask, so no cache clearing is needed),
+  * greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class _Slot:
+    req: Request
+    feed: List[int]              # prompt tokens not yet consumed
+    started: bool = False        # past prefill
+
+
+def _reset_slot_positions(cache, slot: int):
+    """Zero every per-slot position entry for ``slot`` in the cache pytree."""
+    def reset(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "pos":
+            return leaf.at[..., slot].set(0)
+        if name in ("ssd", "conv"):
+            # recurrent state: batch dim right after the stack dims
+            b_ax = leaf.ndim - (3 if name == "conv" else 4)
+            idx = [slice(None)] * leaf.ndim
+            idx[b_ax] = slot
+            return leaf.at[tuple(idx)].set(0)
+        return leaf
+    return jax.tree_util.tree_map_with_path(reset, cache)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = model.init_cache(max_batch, max_len)
+        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self._rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+        self.metrics = {"steps": 0, "tokens_generated": 0,
+                        "prefill_tokens": 0, "requests_done": 0}
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def add_request(self, req: Request) -> bool:
+        i = self._free_slot()
+        if i is None:
+            return False
+        self.cache = _reset_slot_positions(self.cache, i)
+        self.slots[i] = _Slot(req=req, feed=list(req.prompt))
+        self.metrics["prefill_tokens"] += len(req.prompt)
+        return True
+
+    def _sample(self, logits_row: jax.Array, temperature: float) -> int:
+        vocab = self.model.cfg.vocab_size
+        row = logits_row[:vocab]
+        if temperature <= 0:
+            return int(jnp.argmax(row))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(k, row / temperature))
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One decode step over all slots (idle slots feed a pad token)."""
+        if not any(self.slots):
+            return
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            if s.feed:
+                tokens[i, 0] = s.feed.pop(0)
+                s.started = not s.feed     # last prompt token => sample next
+            else:
+                tokens[i, 0] = s.req.out_tokens[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        self.metrics["steps"] += 1
+        for i, s in enumerate(self.slots):
+            if s is None or not s.started:
+                continue
+            nxt = self._sample(logits[i, -1], s.req.temperature)
+            s.req.out_tokens.append(nxt)
+            self.metrics["tokens_generated"] += 1
+            if len(s.req.out_tokens) >= s.req.max_new_tokens:
+                s.req.done = True
+                self.slots[i] = None        # release slot immediately
+                self.metrics["requests_done"] += 1
+
+    def run(self, requests: List[Request], max_steps: int = 10000
+            ) -> List[Request]:
+        pending = list(requests)
+        steps = 0
+        while (pending or any(self.slots)) and steps < max_steps:
+            while pending and self._free_slot() is not None:
+                self.add_request(pending.pop(0))
+            self.step()
+            steps += 1
+        return requests

@@ -1,0 +1,185 @@
+"""Logical sharding rules: param/activation pytrees -> NamedShardings.
+
+Scheme (DESIGN.md Sec. 5):
+  * batch dims  -> ('pod', 'data')  (pod = outer DP axis on the 2-pod mesh)
+  * weights     -> largest dim over 'model' (TP), next largest divisible dim
+                   over 'data' (FSDP/ZeRO-style) when the tensor is large
+  * per-tensor divisibility fallbacks: a dim is only sharded if it divides
+    the axis size; otherwise the next candidate dim is tried, else replicate.
+  * scan-stacked layer params have leading layer dims excluded from sharding.
+
+These rules are deliberately conservative but *total*: every leaf gets a
+valid NamedSharding for any mesh, which is what the 40-cell dry-run needs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# params smaller than this stay replicated over 'data' (FSDP threshold)
+FSDP_MIN_SIZE = 1 << 20
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch axes: ('pod', 'data') when the pod axis exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _n_stack_dims(path: str, ndim: int, shape) -> int:
+    """Leading scan-stack dims to leave unsharded (layer / group dims)."""
+    stacked = 0
+    for marker in ("layers", "ssm_layers", "self_layers", "cross_layers",
+                   "enc_layers", "dec_layers", "dec_xattn"):
+        if marker in path:
+            stacked = 1
+            if marker in ("ssm_layers", "self_layers") and ndim >= 3:
+                stacked = 2          # (groups, per_group, ...)
+            break
+    return min(stacked, max(ndim - 1, 0))
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool = True) -> P:
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    model_n = _axis_size(mesh, "model")
+    data_n = _axis_size(mesh, "data")
+    spec = [None] * ndim
+    start = _n_stack_dims(path, ndim, shape)
+    body = list(range(start, ndim))
+    if not body:
+        return P(*spec)
+
+    # 'model' (TP): largest shardable body dim, ties -> last
+    cand = sorted(body, key=lambda i: (shape[i], i), reverse=True)
+    model_dim = None
+    if model_n > 1:
+        for i in cand:
+            if shape[i] % model_n == 0 and shape[i] >= model_n:
+                model_dim = i
+                spec[i] = "model"
+                break
+
+    # 'data' (FSDP): next largest shardable dim on big tensors.
+    # Embedding/LM-head tables are vocab(model)-sharded only: FSDP on their
+    # d_model dim conflicts with the batch-data sharding of the logits
+    # einsum and forces expensive reshards.
+    size = int(np.prod(shape))
+    is_embed = "embed" in path or "lm_head" in path
+    if fsdp and data_n > 1 and size >= FSDP_MIN_SIZE and not is_embed:
+        for i in cand:
+            if i == model_dim:
+                continue
+            if shape[i] % data_n == 0 and shape[i] >= data_n:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def params_shardings(params, mesh: Mesh, fsdp: bool = True):
+    """Map a (possibly abstract) param pytree to NamedShardings by path."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, "key", k)) for k in path)
+        spec = param_spec(path_str, leaf.shape, mesh, fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard dim0 (batch) over the data axes when divisible."""
+    da = data_axes(mesh)
+    if not da or not shape:
+        return P()
+    n = 1
+    for a in da:
+        n *= _axis_size(mesh, a)
+    if shape[0] % n == 0 and shape[0] >= n:
+        return P(da, *([None] * (len(shape) - 1)))
+    # try 'data' alone
+    if "data" in da and shape[0] % _axis_size(mesh, "data") == 0 \
+            and shape[0] >= _axis_size(mesh, "data"):
+        return P("data", *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf.shape, mesh)), batch)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode caches: batch dim over data axes; long seq over 'data' when
+    batch can't shard; heads/feature dims over 'model' when divisible."""
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    spec = [None] * ndim
+    da = data_axes(mesh)
+    data_total = 1
+    for a in da:
+        data_total *= _axis_size(mesh, a)
+    model_n = _axis_size(mesh, "model")
+
+    # locate the batch dim from the leaf's name (cache layouts are known):
+    #   k/v/cross_k/cross_v: (..., B, S, H, D)   -> batch at ndim-4
+    #   ssd state:           (..., B, H, N, P)   -> batch at ndim-4
+    #   conv state:          (..., B, K-1, C)    -> batch at ndim-3
+    #   pos:                 (L,)                -> replicated
+    leaf_name = path.rsplit("/", 1)[-1]
+    if leaf_name == "pos":
+        return P(*spec)
+    b_dim: Optional[int] = None
+    if leaf_name == "conv":
+        b_dim = ndim - 3
+    elif ndim >= 4:
+        b_dim = ndim - 4
+    elif ndim == 3:
+        b_dim = 1
+    if b_dim is not None and 0 <= b_dim < ndim:
+        b = shape[b_dim]
+        if b % data_total == 0 and b >= data_total and da:
+            spec[b_dim] = da if len(da) > 1 else da[0]
+        elif "data" in da and b % _axis_size(mesh, "data") == 0 \
+                and b >= _axis_size(mesh, "data"):
+            spec[b_dim] = "data"
+        elif ndim >= 4 and leaf_name != "conv" and b_dim + 1 < ndim:
+            # batch too small (long-context single stream): shard the long
+            # sequence dim over 'data' instead (sequence parallelism)
+            s_dim = b_dim + 1
+            if shape[s_dim] % _axis_size(mesh, "data") == 0 \
+                    and shape[s_dim] >= _axis_size(mesh, "data") \
+                    and "data" in da:
+                spec[s_dim] = "data"
+    # model axis on the trailing head/state dims
+    if model_n > 1 and ndim >= 2:
+        for i in range(ndim - 1, max(ndim - 3, 0), -1):
+            if spec[i] is None and shape[i] % model_n == 0 \
+                    and shape[i] >= model_n:
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(k, "key", k)) for k in path)
+        out.append(NamedSharding(mesh, cache_spec(path_str, leaf.shape,
+                                                  mesh)))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

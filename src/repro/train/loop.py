@@ -1,0 +1,73 @@
+"""Training driver: data -> step -> checkpoint -> supervisor heartbeats.
+
+Restartable: ``train(...)`` resumes from the latest committed checkpoint
+(params, optimizer state, AND the data-stream step, since batches are pure
+functions of (seed, step)).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.ckpt import (AsyncCheckpointer, latest_step,
+                               restore_checkpoint)
+from ..data.pipeline import DataConfig, TokenSource
+from ..ft.supervisor import Supervisor
+from ..models.model import Model
+from ..optim.adamw import AdamWConfig
+from .step import TrainState, init_state, make_train_step
+
+
+@dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    seed: int = 0
+
+
+def train(model: Model, data_cfg: DataConfig,
+          loop_cfg: TrainLoopConfig = TrainLoopConfig(),
+          opt_cfg: Optional[AdamWConfig] = None,
+          supervisor: Optional[Supervisor] = None,
+          log_fn: Callable[[str], None] = print) -> Dict:
+    """Single-host training loop (the per-host body of the pod launcher)."""
+    rng = jax.random.PRNGKey(loop_cfg.seed)
+    state = init_state(model, rng)
+    start_step = 0
+    ckpt = AsyncCheckpointer()
+    if loop_cfg.ckpt_dir and latest_step(loop_cfg.ckpt_dir) is not None:
+        state, restored = restore_checkpoint(state, loop_cfg.ckpt_dir)
+        start_step = restored + 1
+        log_fn(f"restored checkpoint at step {restored}; resuming")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    source = TokenSource(data_cfg)
+    losses = []
+    for step in range(start_step, loop_cfg.steps):
+        t0 = time.perf_counter()
+        batch = {k: jnp.asarray(v)
+                 for k, v in source.global_batch_at(step).items()}
+        state, metrics = step_fn(state, batch)
+        dt = time.perf_counter() - t0
+        losses.append(float(metrics["loss"]))
+        if supervisor is not None:
+            supervisor.heartbeat(data_cfg.host_id, step, dt)
+        if loop_cfg.log_every and step % loop_cfg.log_every == 0:
+            log_fn(f"step {step}: loss={losses[-1]:.4f} "
+                   f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
+            ckpt.save(state, loop_cfg.ckpt_dir, step)
+            if supervisor is not None:
+                ckpt.wait()
+                supervisor.checkpoint_committed(step)
+    ckpt.wait()
+    return {"final_loss": losses[-1] if losses else None,
+            "losses": losses, "last_step": loop_cfg.steps - 1}

@@ -1,0 +1,184 @@
+"""muPallas front-end: lexer/parser/validator/compiler unit tests."""
+
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.core.dsl import (DSLSyntaxError, DSLValidationError, compile_dsl,
+                            grammar_stats, lower_dsl, namespace_of, parse,
+                            validate_dsl)
+from repro.core.dsl.ir import KernelIR, PipelineIR
+
+GEMM = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+        ".with_tile(m=128, n=128, k=256).with_stages(2)")
+
+
+class TestParser:
+    def test_basic_kernel(self):
+        ast = parse(GEMM + " >> bias() >> gelu()")
+        assert ast.op.name == "gemm"
+        assert [c.name for c in ast.configs] == ["with_dtype", "with_tile",
+                                                 "with_stages"]
+        assert [e.name for e in ast.epilogues] == ["bias", "gelu"]
+
+    def test_kwargs_and_values(self):
+        ast = parse("attention(causal=true, window=4096)"
+                    ".with_dtype(input=bf16, acc=fp32, output=bf16)")
+        assert ast.op.kwargs == {"causal": True, "window": 4096}
+
+    def test_custom_string_and_dict(self):
+        ast = parse(GEMM + " >> custom('x * sigmoid(g)',"
+                    " inputs={'g': 'full'})")
+        ep = ast.epilogues[0]
+        assert ep.args[0] == "x * sigmoid(g)"
+        assert ep.kwargs["inputs"] == {"g": "full"}
+
+    def test_pipeline(self):
+        ast = parse("pipeline(transpose(input, NCL, NLC, fp32, bf16), "
+                    + GEMM + ")")
+        assert len(ast.stages) == 2
+
+    def test_syntax_error_has_location(self):
+        with pytest.raises(DSLSyntaxError) as e:
+            parse("gemm(.with_dtype(input=fp32)")
+        assert "E_SYNTAX" in str(e.value)
+
+    def test_trailing_garbage_rejected(self):
+        with pytest.raises(DSLSyntaxError):
+            parse(GEMM + " gemm()")
+
+
+class TestValidator:
+    def _codes(self, src):
+        return {d.code for d in validate_dsl(src)}
+
+    def test_valid_program_no_diagnostics(self):
+        assert validate_dsl(GEMM) == []
+
+    def test_missing_dtype_required(self):
+        assert "E_DTYPE_REQUIRED" in self._codes("gemm()")
+
+    def test_tile_lane_alignment(self):
+        src = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_tile(m=128, n=100, k=256)")
+        assert "E_TILE_LANE" in self._codes(src)
+
+    def test_tile_sublane_for_bf16(self):
+        src = ("gemm().with_dtype(input=bf16, acc=fp32, output=bf16)"
+               ".with_tile(m=8, n=128, k=128)")
+        assert "E_TILE_SUBLANE" in self._codes(src)
+
+    def test_vmem_overflow_explained(self):
+        src = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_tile(m=4096, n=4096, k=4096).with_stages(4)")
+        diags = validate_dsl(src)
+        codes = {d.code for d in diags}
+        assert "E_TILE_VMEM" in codes
+        msg = next(d for d in diags if d.code == "E_TILE_VMEM").message
+        assert "MiB" in msg  # explanatory: shows the actual math
+
+    def test_acc_dtype_rule(self):
+        src = ("gemm().with_dtype(input=bf16, acc=bf16, output=bf16)"
+               ".with_tile(m=128, n=128, k=128)")
+        assert "E_ACC_DTYPE" in self._codes(src)
+
+    def test_int8_needs_int32_acc(self):
+        src = "gemm().with_dtype(input=int8, acc=fp32, output=int8)"
+        assert "E_ACC_DTYPE" in self._codes(src)
+
+    def test_fp8_arch_gating(self):
+        src = ("gemm().with_dtype(input=fp8_e4m3, acc=fp32, output=bf16)"
+               ".with_arch(tpu_v5e)")
+        assert "E_DTYPE_ARCH" in self._codes(src)
+        src_ok = ("gemm().with_dtype(input=fp8_e4m3, acc=fp32, output=bf16)"
+                  ".with_arch(tpu_v5p)")
+        assert "E_DTYPE_ARCH" not in self._codes(src_ok)
+
+    def test_block_on_non_attention_rejected(self):
+        src = GEMM + ".with_block(q=128, kv=128)"
+        assert "E_CFG_FAMILY" in self._codes(src)
+
+    def test_epilogue_family_gating(self):
+        src = ("softmax(axis=-1).with_dtype(input=fp32, acc=fp32,"
+               " output=fp32) >> bias()")
+        assert "E_EPILOGUE_FAMILY" in self._codes(src)
+
+    def test_custom_expr_whitelist(self):
+        src = GEMM + " >> custom('__import__(\"os\")')"
+        assert "E_CUSTOM_EXPR" in self._codes(src)
+
+    def test_custom_unknown_name(self):
+        src = GEMM + " >> custom('x * y')"
+        assert "E_CUSTOM_EXPR" in self._codes(src)
+
+    def test_unknown_op_lists_alternatives(self):
+        diags = validate_dsl("jemm().with_dtype(input=fp32, acc=fp32,"
+                             " output=fp32)")
+        assert diags[0].code == "E_OP_UNKNOWN"
+        assert "gemm" in diags[0].hint
+
+    def test_stage_range(self):
+        assert "E_STAGES" in self._codes(GEMM.replace(
+            ".with_stages(2)", ".with_stages(99)"))
+
+    def test_warnings_do_not_fail(self):
+        src = ("gemm().with_dtype(input=bf16, acc=fp32, output=bf16)"
+               ".with_tile(m=144, n=128, k=128).with_swap(true)")
+        ir, warnings = lower_dsl(src)
+        assert {w.code for w in warnings} >= {"W_TILE_MXU", "W_SWAP_DTYPE"}
+
+
+class TestCompiler:
+    def test_backends_agree(self):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((100, 96)).astype(np.float32)
+        b = rng.standard_normal((96, 64)).astype(np.float32)
+        kp = compile_dsl(GEMM + " >> gelu()", "pallas")
+        kx = compile_dsl(GEMM + " >> gelu()", "xla")
+        np.testing.assert_allclose(np.asarray(kp(a, b)),
+                                   np.asarray(kx(a, b)),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_namespace_deterministic_and_config_sensitive(self):
+        ir1, _ = lower_dsl(GEMM)
+        ir2, _ = lower_dsl(GEMM)
+        ir3, _ = lower_dsl(GEMM.replace("m=128", "m=256"))
+        assert namespace_of(ir1) == namespace_of(ir2)
+        assert namespace_of(ir1) != namespace_of(ir3)
+
+    def test_source_embeds_dsl(self):
+        k = compile_dsl(GEMM, "xla", use_cache=False)
+        assert "gemm()" in k.source            # traceability comment
+        assert k.namespace.startswith("upallas_")
+
+    def test_cache_hit(self):
+        k1 = compile_dsl(GEMM, "pallas")
+        k2 = compile_dsl(GEMM, "pallas")
+        assert k1 is k2
+
+    def test_swap_requires_square(self):
+        src = GEMM + ".with_swap(true)"
+        k = compile_dsl(src, "pallas", use_cache=False)
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError, match="square"):
+            k(rng.standard_normal((64, 32)).astype(np.float32),
+              rng.standard_normal((32, 48)).astype(np.float32))
+
+    def test_pipeline_transform_fused_dtype(self):
+        src = ("pipeline(transpose(input, NCL, NLC, fp32, bf16), "
+               "conv1d(kernel_w=3).with_dtype(input=bf16, acc=fp32,"
+               " output=bf16).with_tile(m=128, n=128, k=128), "
+               "transpose(output, NLC, NCL, bf16, fp32))")
+        k = compile_dsl(src, "pallas", use_cache=False)
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((2, 8, 32)).astype(np.float32)   # NCL
+        w = rng.standard_normal((3, 8, 16)).astype(np.float32)
+        out = np.asarray(k(x, w))
+        assert out.shape == (2, 16, 32)
+        assert out.dtype == np.float32
+
+    def test_grammar_fits_in_context(self):
+        stats = grammar_stats()
+        assert stats["ebnf_lines"] <= 200      # compact like the paper's 170
+        assert stats["approx_prompt_tokens"] < 4000

@@ -1,0 +1,140 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == np.float32 and False else \
+        (dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16
+         else dict(rtol=2e-4, atol=2e-4))
+
+
+@pytest.mark.parametrize("m,n,k", [(64, 64, 64), (100, 80, 60),
+                                   (256, 128, 512), (33, 257, 129)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gemm_shapes_dtypes(m, n, k, dtype):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype=dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype=dtype)
+    out = ops.gemm(a, b, tile=(64, 128, 128), out_dtype=jnp.float32,
+                   interpret=True)
+    want = ref.gemm_ref(a, b, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **_tol(dtype))
+
+
+def test_gemm_epilogue_chain():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((96, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 64)).astype(np.float32)
+    bias = rng.standard_normal((64,)).astype(np.float32)
+    res = rng.standard_normal((96, 64)).astype(np.float32)
+    ep = lambda x, bb, rr: jnp.maximum(x + bb, 0.0) + rr
+    kinds = ("col_vector", "full")
+    out = ops.gemm(a, b, bias, res, tile=(64, 64, 128), epilogue=ep,
+                   aux_kinds=kinds, interpret=True)
+    want = ref.gemm_ref(a, b, bias, res, epilogue=ep, aux_kinds=kinds)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("g,m,n,k", [(2, 64, 64, 64), (5, 40, 72, 96)])
+def test_batched_gemm(g, m, n, k):
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((g, m, k)).astype(np.float32)
+    b = rng.standard_normal((g, k, n)).astype(np.float32)
+    out = ops.batched_gemm(a, b, tile=(64, 64, 64), interpret=True)
+    want = ref.batched_gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("sq,skv", [(128, 128), (100, 200), (64, 300)])
+def test_flash_attention(causal, sq, skv):
+    if causal and sq != skv:
+        pytest.skip("causal requires square")
+    rng = np.random.default_rng(3)
+    q = rng.standard_normal((2, sq, 4, 32)).astype(np.float32)
+    k = rng.standard_normal((2, skv, 2, 32)).astype(np.float32)
+    v = rng.standard_normal((2, skv, 2, 32)).astype(np.float32)
+    out = ops.attention(q, k, v, causal=causal, block_q=64, block_kv=128,
+                        interpret=True)
+    kr = np.repeat(k, 2, axis=2)
+    vr = np.repeat(v, 2, axis=2)
+    qf = np.swapaxes(q, 1, 2).reshape(8, sq, 32)
+    kf = np.swapaxes(kr, 1, 2).reshape(8, skv, 32)
+    vf = np.swapaxes(vr, 1, 2).reshape(8, skv, 32)
+    want = ref.attention_ref(jnp.asarray(qf), jnp.asarray(kf),
+                             jnp.asarray(vf), causal=causal)
+    want = np.swapaxes(np.asarray(want).reshape(2, 4, sq, 32), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_attention():
+    rng = np.random.default_rng(4)
+    q = rng.standard_normal((1, 256, 2, 32)).astype(np.float32)
+    k = rng.standard_normal((1, 256, 2, 32)).astype(np.float32)
+    v = rng.standard_normal((1, 256, 2, 32)).astype(np.float32)
+    out = ops.attention(q, k, v, causal=True, window=64, interpret=True)
+    qf = np.swapaxes(q, 1, 2).reshape(2, 256, 32)
+    kf = np.swapaxes(k, 1, 2).reshape(2, 256, 32)
+    vf = np.swapaxes(v, 1, 2).reshape(2, 256, 32)
+    want = ref.attention_ref(jnp.asarray(qf), jnp.asarray(kf),
+                             jnp.asarray(vf), causal=True, window=64)
+    want = np.swapaxes(np.asarray(want).reshape(1, 2, 256, 32), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("rows,d", [(64, 128), (100, 512), (300, 256)])
+def test_rmsnorm_layernorm_softmax(rows, d):
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((rows, d)).astype(np.float32)
+    g = rng.standard_normal((d,)).astype(np.float32)
+    b = rng.standard_normal((d,)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.rmsnorm(x, g, block_rows=64, interpret=True)),
+        np.asarray(ref.rmsnorm_ref(x, g)), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.layernorm(x, g, b, block_rows=64, interpret=True)),
+        np.asarray(ref.layernorm_ref(x, g, b)), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.softmax(x, block_rows=64, interpret=True)),
+        np.asarray(ref.softmax_ref(x)), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+@pytest.mark.parametrize("t", [128, 200])
+def test_ssd_scan_vs_sequential(chunk, t):
+    rng = np.random.default_rng(6)
+    B, H, P, N = 2, 2, 16, 16
+    x = (rng.standard_normal((B, t, H, P)) * 0.4).astype(np.float32)
+    dt = rng.uniform(0.001, 0.1, (B, t, H)).astype(np.float32)
+    a = (-rng.uniform(0.5, 2.0, (H,))).astype(np.float32)
+    bm = (rng.standard_normal((B, t, N)) * 0.3).astype(np.float32)
+    cm = (rng.standard_normal((B, t, N)) * 0.3).astype(np.float32)
+    y = ops.ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    xbar = x * dt[..., None]
+    da = dt * a[None, None]
+    xf = np.swapaxes(xbar, 1, 2).reshape(B * H, t, P)
+    daf = np.swapaxes(da, 1, 2).reshape(B * H, t)
+    bf = np.repeat(bm[:, None], H, 1).reshape(B * H, t, N)
+    cf = np.repeat(cm[:, None], H, 1).reshape(B * H, t, N)
+    want = ref.ssd_scan_ref(jnp.asarray(xf), jnp.asarray(daf),
+                            jnp.asarray(bf), jnp.asarray(cf))
+    want = np.swapaxes(np.asarray(want).reshape(B, H, t, P), 1, 2)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-3, atol=1e-4)
+
+
+def test_eltwise_row_map():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((100, 64)).astype(np.float32)
+    out = ops.eltwise(x, jnp.tanh, block_rows=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.tanh(x),
+                               rtol=1e-5, atol=1e-5)

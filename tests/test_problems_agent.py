@@ -1,0 +1,170 @@
+"""Problem suite + MANTIS agent + integrity + scheduler integration tests."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.agent import (Agent, AgentConfig, CostModel, RunLog,
+                              VARIANTS, run_variant, roi, triage)
+from repro.core.agent.policies import Hypothesis
+from repro.core.dsl import compile_dsl, validate_dsl
+from repro.core.integrity import inflation, review_logs
+from repro.core.problems import (Solution, all_problems, degenerate_problem,
+                                 get_problem, problem_ids)
+from repro.core.schedule import (SchedulePolicy, best_policy, geomean, replay,
+                                 summarize, sweep)
+
+PROBS = all_problems()
+
+
+class TestSuite:
+    def test_59_problems_match_paper_ids(self):
+        ids = problem_ids()
+        assert len(ids) == 59
+        assert sum(1 for i in ids if i.startswith("L1")) == 31
+        assert sum(1 for i in ids if i.startswith("L2")) == 20
+        assert sum(1 for i in ids if i.startswith("L3")) == 8
+
+    def test_references_execute_and_finite(self):
+        rng = np.random.default_rng(0)
+        for pid in ("L1/1", "L1/23", "L2/76", "L2/88", "L3/44", "L3/48"):
+            p = PROBS[pid]
+            out = p.reference(*p.make_inputs(rng))
+            assert np.all(np.isfinite(np.asarray(out, dtype=np.float32)))
+
+    def test_degenerate_problem_is_identically_zero(self):
+        p = degenerate_problem()
+        rng = np.random.default_rng(1)
+        out = np.asarray(p.reference(*p.make_inputs(rng)))
+        assert np.allclose(out, 0.0)
+        assert p.degenerate
+
+    def test_all_templates_validate(self):
+        for pid, p in PROBS.items():
+            for seg, src in p.dsl_template.items():
+                assert validate_dsl(src) == [], (pid, seg)
+
+    def test_template_kernels_match_reference(self):
+        """Compile the known-good DSL plan and execute it vs the problem
+        reference at reduced scale (real end-to-end correctness)."""
+        rng = np.random.default_rng(2)
+        # L1/36 rmsnorm
+        p = PROBS["L1/36"]
+        x, g = p.make_inputs(rng)
+        k = compile_dsl(p.dsl_template["norm"], "pallas")
+        np.testing.assert_allclose(np.asarray(k(x, g)),
+                                   np.asarray(p.reference(x, g)),
+                                   rtol=1e-4, atol=1e-4)
+        # L2/76 gemm+bias+relu (single fused kernel)
+        p = PROBS["L2/76"]
+        a, b, bias = p.make_inputs(rng)
+        k = compile_dsl(p.dsl_template["gemm"], "pallas")
+        out = np.asarray(k(a, b, bias), dtype=np.float32)
+        want = np.asarray(p.reference(a, b, bias))
+        np.testing.assert_allclose(out, want, rtol=5e-2, atol=5e-2)
+
+
+class TestAgent:
+    def test_deterministic_runs(self):
+        p = get_problem("L2/76")
+        l1 = run_variant(VARIANTS["orch_dsl"], [p], capability="mid", seed=3)
+        l2 = run_variant(VARIANTS["orch_dsl"], [p], capability="mid", seed=3)
+        assert [a.speedup for a in l1[0].attempts] == \
+            [a.speedup for a in l2[0].attempts]
+
+    def test_budget_respected(self):
+        p = get_problem("L1/1")
+        for v in VARIANTS.values():
+            logs = run_variant(v, [p], capability="mini", seed=0)
+            assert logs[0].n_attempts <= 40
+
+    def test_dsl_beats_raw_filtered(self):
+        probs = [PROBS[p] for p in ("L1/1", "L1/9", "L2/76", "L2/29",
+                                    "L3/44")]
+        raw = run_variant(VARIANTS["mi_raw"], probs, capability="mini")
+        dsl = run_variant(VARIANTS["mi_dsl"], probs, capability="mini")
+        review_logs(raw)
+        review_logs(dsl)
+        g_raw = summarize(raw)["geomean"]
+        g_dsl = summarize(dsl)["geomean"]
+        assert g_dsl > g_raw * 1.5
+
+    def test_sol_guided_beats_unguided_dsl(self):
+        probs = [PROBS[p] for p in ("L1/1", "L1/97", "L2/88", "L3/48",
+                                    "L2/37")]
+        mi = run_variant(VARIANTS["mi_dsl"], probs, capability="mini")
+        orch = run_variant(VARIANTS["orch_dsl"], probs, capability="mini")
+        review_logs(mi)
+        review_logs(orch)
+        assert summarize(orch)["geomean"] >= summarize(mi)["geomean"] * 0.95
+
+    def test_legit_solutions_respect_sol_ceiling(self):
+        p = get_problem("L1/1")
+        logs = run_variant(VARIANTS["orch_dsl"], [p], capability="max")
+        for a in logs[0].attempts:
+            if a.ok and not a.flags or (a.ok and a.flags ==
+                                        ["reduced_precision"]):
+                assert a.runtime_s >= 0.9 * logs[0].t_sol_ceiling
+
+    def test_roi_gap_exponent(self):
+        h_ambitious = Hypothesis(Solution(), "big", est_speedup=3.0,
+                                 risk_impl=2.0, risk_perf=2.0)
+        h_safe = Hypothesis(Solution(), "small", est_speedup=1.2,
+                            risk_impl=1.0, risk_perf=1.0)
+        # near SOL (g=1): safe wins; far from SOL (g=500): ambitious wins
+        near = triage([h_ambitious, h_safe], gap=1.0, top_n=1)[0]
+        far = triage([h_ambitious, h_safe], gap=500.0, top_n=1)[0]
+        assert near.description == "small"
+        assert far.description == "big"
+
+
+class TestIntegrity:
+    def _logs(self, cap="max"):
+        probs = [PROBS[p] for p in ("L1/1", "L1/9", "L2/76", "L2/29",
+                                    "L2/88", "L3/44")]
+        return run_variant(VARIANTS["mi_dsl"], probs, capability=cap, seed=1)
+
+    def test_labels_partition_attempts(self):
+        logs = self._logs()
+        counts = review_logs(logs)
+        total = sum(counts.values())
+        assert total == sum(l.n_attempts for l in logs)
+
+    def test_inflation_monotone(self):
+        logs = self._logs()
+        inf = inflation(logs)
+        assert inf.filtered_geomean <= inf.allow_pytorch_only + 1e-9
+        assert inf.allow_pytorch_only <= inf.allow_gaming + 1e-9
+        assert inf.allow_gaming <= inf.unfiltered + 1e-9
+
+    def test_gaming_attempts_never_accepted(self):
+        logs = self._logs()
+        review_logs(logs)
+        for log in logs:
+            for a in log.attempts:
+                if a.flags and any(f.startswith("skip:") or f in
+                                   ("constant_output", "input_exploit")
+                                   for f in a.flags):
+                    assert a.label not in ("no_issues", "minor")
+
+
+class TestScheduler:
+    def test_sweep_and_best_policy(self):
+        probs = [PROBS[p] for p in problem_ids()[:12]]
+        logs = run_variant(VARIANTS["orch_dsl"], probs, capability="mid")
+        review_logs(logs)
+        results = sweep(logs)
+        bp = best_policy(results, min_retention=0.9)
+        assert bp is not None
+        assert bp.token_savings > 0
+        assert bp.geomean_retention >= 0.9
+
+    def test_savings_increase_with_aggressiveness(self):
+        probs = [PROBS[p] for p in problem_ids()[:8]]
+        logs = run_variant(VARIANTS["orch_dsl"], probs, capability="mid")
+        review_logs(logs)
+        tight = replay(logs, SchedulePolicy(0.25, 0))
+        loose = replay(logs, SchedulePolicy(3.0, 4))
+        assert loose.token_savings >= tight.token_savings - 1e-9

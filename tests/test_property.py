@@ -1,0 +1,156 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsl import compile_dsl, lower_dsl, namespace_of, validate_dsl
+from repro.core.schedule import (SchedulePolicy, UNSOLVED_FLOOR, fastp,
+                                 geomean, replay_problem)
+from repro.core.agent.runlog import Attempt, RunLog
+from repro.core.sol.hardware import SUBLANE_MULTIPLE, TPU_V5E
+from repro.core.sol.roofline import roofline
+
+# ---------------------------------------------------------------------------
+# DSL: every config sampled from the valid grammar space validates + lowers
+# ---------------------------------------------------------------------------
+
+valid_m = st.sampled_from([16, 32, 64, 128, 256, 512])
+valid_nk = st.sampled_from([128, 256, 512, 1024])
+dtypes = st.sampled_from(["fp32", "bf16"])
+acts = st.sampled_from(["relu", "gelu", "silu", "tanh", "sigmoid"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=valid_m, n=valid_nk, k=valid_nk, dt=dtypes, stages=st.integers(1, 4),
+       act=acts)
+def test_valid_gemm_space_always_validates(m, n, k, dt, stages, act):
+    sub = SUBLANE_MULTIPLE[dt]
+    m = max(m, sub) // sub * sub
+    src = (f"gemm().with_dtype(input={dt}, acc=fp32, output={dt})"
+           f".with_tile(m={m}, n={n}, k={k}).with_stages({stages})"
+           f" >> {act}()")
+    diags = validate_dsl(src)
+    vmem = [d for d in diags if d.code == "E_TILE_VMEM"]
+    others = [d for d in diags if d.code != "E_TILE_VMEM"]
+    assert not others, others
+    if not vmem:
+        ir, _ = lower_dsl(src)
+        assert namespace_of(ir).startswith("upallas_")
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2048))
+def test_misaligned_lane_always_caught(n):
+    src = (f"gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+           f".with_tile(m=64, n={n}, k=128)")
+    diags = validate_dsl(src)
+    if n % 128 == 0:
+        assert not any(d.code == "E_TILE_LANE" for d in diags)
+    else:
+        assert any(d.code == "E_TILE_LANE" for d in diags)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dt=dtypes, m=valid_m, n=valid_nk, k=valid_nk)
+def test_namespace_is_pure_function_of_config(dt, m, n, k):
+    sub = SUBLANE_MULTIPLE[dt]
+    m = max(m, sub) // sub * sub
+    src = (f"gemm().with_dtype(input={dt}, acc=fp32, output={dt})"
+           f".with_tile(m={m}, n={n}, k={k})")
+    if validate_dsl(src):
+        return
+    ir1, _ = lower_dsl(src)
+    ir2, _ = lower_dsl(src + "  # comment\n")
+    assert namespace_of(ir1) == namespace_of(ir2)
+
+
+# ---------------------------------------------------------------------------
+# Roofline invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(flops=st.floats(1e6, 1e18), bytes_=st.floats(1e3, 1e15),
+       coll=st.floats(0, 1e14), chips=st.sampled_from([1, 8, 256, 512]))
+def test_roofline_terms_positive_and_sol_is_max(flops, bytes_, coll, chips):
+    r = roofline(flops, bytes_, collective_bytes=coll, num_chips=chips)
+    assert r.t_compute > 0 and r.t_memory > 0 and r.t_collective >= 0
+    assert math.isclose(r.t_sol,
+                        max(r.t_compute, r.t_memory, r.t_collective))
+    assert r.bottleneck in ("compute", "memory", "collective")
+    # more chips never increases any term
+    r2 = roofline(flops, bytes_, collective_bytes=coll, num_chips=chips * 2)
+    assert r2.t_sol <= r.t_sol + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(flops=st.floats(1e6, 1e15), bytes_=st.floats(1e3, 1e12))
+def test_gap_and_fraction_are_inverse(flops, bytes_):
+    r = roofline(flops, bytes_)
+    t = r.t_sol * 3.7
+    assert math.isclose(r.gap(t) * r.fraction_of_roofline(t), 1.0,
+                        rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Metrics invariants
+# ---------------------------------------------------------------------------
+
+speedups = st.lists(st.floats(0, 32, allow_nan=False), min_size=1,
+                    max_size=59)
+
+
+@settings(max_examples=50, deadline=None)
+@given(sp=speedups)
+def test_fastp_monotone_decreasing_in_r(sp):
+    rs = [0.5, 1.0, 2.0, 4.0, 8.0]
+    vals = [fastp(sp, r) for r in rs]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    assert all(0.0 <= v <= 1.0 for v in vals)
+
+
+@settings(max_examples=50, deadline=None)
+@given(sp=speedups)
+def test_geomean_bounds(sp):
+    g = geomean(sp)
+    hi = max(max(sp), UNSOLVED_FLOOR)
+    assert UNSOLVED_FLOOR - 1e-12 <= g <= hi + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Scheduler replay invariants
+# ---------------------------------------------------------------------------
+
+def _mk_log(speedups, t_ref=1.0, t_sol=0.2):
+    attempts = [
+        Attempt(index=i, phase="implement", description="", tokens=1000,
+                ok=True, runtime_s=t_ref / s if s > 0 else float("inf"),
+                speedup=s, label="no_issues")
+        for i, s in enumerate(speedups)
+    ]
+    return RunLog(problem_id="p", variant="v", capability="mid", seed=0,
+                  t_ref=t_ref, t_sol=t_sol, t_sol_ceiling=t_sol,
+                  attempts=attempts)
+
+
+@settings(max_examples=60, deadline=None)
+@given(sp=st.lists(st.floats(0.1, 10), min_size=1, max_size=40),
+       eps=st.one_of(st.none(), st.floats(0.1, 3.0)),
+       w=st.sampled_from([0, 2, 4, 8]))
+def test_replay_never_exceeds_budget_and_retention_le_1(sp, eps, w):
+    log = _mk_log(sp)
+    r = replay_problem(log, SchedulePolicy(eps, w))
+    assert 1 <= r.stop_attempt <= r.total_attempts
+    assert r.tokens_used <= r.tokens_full
+    assert r.best_speedup <= r.best_speedup_full + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(sp=st.lists(st.floats(0.1, 10), min_size=1, max_size=40))
+def test_replay_no_policy_is_identity(sp):
+    log = _mk_log(sp)
+    r = replay_problem(log, SchedulePolicy(None, 0))
+    assert r.stop_attempt == r.total_attempts
+    assert r.tokens_used == r.tokens_full
+    assert r.best_speedup == r.best_speedup_full

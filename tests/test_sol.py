@@ -1,0 +1,121 @@
+"""SOL engine: characterization, roofline, HLO analysis, reports."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.sol import (Characterization, attention_flops, gemm_flops,
+                            gemm_op, get_chip, make_report,
+                            parse_collective_bytes, roofline,
+                            summarize_compiled, TPU_V5E)
+from repro.core.sol.characterize import TensorSpec
+
+
+def test_gemm_characterization_matches_paper_example():
+    """Paper A.2: 4096^3 fp32 GEMM -> 1.374e11 FLOPs, 2.013e8 bytes."""
+    ch = Characterization("L1/1", [gemm_op(4096, 4096, 4096)])
+    assert np.isclose(ch.total_flops, 1.374e11, rtol=1e-3)
+    assert np.isclose(ch.best_case_bytes, 2.013e8, rtol=1e-3)
+    assert np.isclose(ch.arithmetic_intensity, 682.6, rtol=1e-2)
+
+
+def test_h100_report_matches_paper_numbers():
+    """Paper A.2 on H100: t_SOL ~ 0.367 ms TF32, ~0.183 ms FP16."""
+    ch = Characterization("L1/1", [gemm_op(4096, 4096, 4096)])
+    rep = make_report("L1/1", ch, chip=get_chip("h100"))
+    assert np.isclose(rep.steering.t_compute, 0.367e-3, rtol=2e-2)
+    assert np.isclose(rep.ceiling.t_compute, 0.1834e-3, rtol=2e-2)
+    assert rep.steering.bottleneck == "compute"
+
+
+def test_v5e_ridge_point():
+    chip = TPU_V5E
+    assert np.isclose(chip.ridge_point, 197e12 / 819e9, rtol=1e-6)
+
+
+def test_causal_attention_half_flops():
+    full = attention_flops(1, 1024, 1024, 8, 64, causal=False)
+    causal = attention_flops(1, 1024, 1024, 8, 64, causal=True)
+    assert np.isclose(causal, full / 2, rtol=1e-6)
+
+
+def test_fused_bytes_less_than_unfused():
+    ops = [gemm_op(512, 512, 512)]
+    fused = Characterization("p", ops, fused=True)
+    unfused = Characterization("p", ops, fused=False)
+    assert fused.best_case_bytes <= unfused.best_case_bytes
+
+
+def test_report_markdown_structure():
+    ch = Characterization("demo", [gemm_op(1024, 1024, 1024)])
+    md = make_report("demo", ch).to_markdown()
+    for section in ("Problem Characterization", "Hardware Limits",
+                    "Theoretical Minimum Time", "Roofline Analysis",
+                    "Structured JSON Output"):
+        assert section in md
+    js = make_report("demo", ch).to_json()
+    assert js["theoretical_runtime_s_ceiling"] <= js["theoretical_runtime_s"]
+
+
+def test_parse_collective_bytes_from_real_hlo():
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(a):
+        return a.sum()
+
+    lowered = jax.jit(
+        f, in_shardings=NamedSharding(mesh, P("x")),
+        out_shardings=NamedSharding(mesh, P())).lower(
+            jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    compiled = lowered.compile()
+    stats = parse_collective_bytes(compiled.as_text())
+    # single-device: no collectives; parser must return cleanly
+    assert stats.total_bytes >= 0
+
+
+def test_parse_collective_bytes_synthetic():
+    hlo = """
+  %param.1 = f32[1024,512]{1,0} parameter(0)
+  %all-reduce.3 = f32[1024,512]{1,0} all-reduce(%param.1), channel_id=1
+  %ag = bf16[2048,512]{1,0} all-gather(%param.1), dimensions={0}
+  %done = f32[8]{0} all-reduce-done(%all-reduce.3)
+"""
+    stats = parse_collective_bytes(hlo)
+    assert stats.count_by_opcode["all-reduce"] == 1
+    assert stats.count_by_opcode["all-gather"] == 1
+    # operand sizes: both consume %param.1 = 1024*512*4 bytes
+    assert stats.bytes_by_opcode["all-reduce"] == 1024 * 512 * 4
+    assert stats.bytes_by_opcode["all-gather"] == 1024 * 512 * 4
+
+
+def test_summarize_compiled_on_cpu():
+    def f(a, b):
+        return jnp.dot(a, b)
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32))
+    summ = summarize_compiled(lowered.compile(), num_devices=1)
+    assert summ.per_device_flops >= 2 * 256 ** 3 * 0.99
+    assert summ.total_flops == summ.per_device_flops
+
+
+def test_loop_scaled_cost_scan():
+    """XLA counts while bodies once; the loop-aware parser must scale."""
+    from repro.core.sol.hlo_analysis import loop_scaled_cost
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w), None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+
+    compiled = jax.jit(scanned).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)).compile()
+    sc = loop_scaled_cost(compiled.as_text())
+    assert np.isclose(sc.gamma, 12.0, rtol=0.05)
+    assert np.isclose(sc.dot_flops_scaled, 12 * 2 * 128 ** 3, rtol=0.05)

@@ -1,0 +1,193 @@
+"""Checkpointing (incl. corruption + elastic restore), training loop
+restart, supervisor policy, serving engine, sharding rules."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,  # noqa: E402
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs import get_arch  # noqa: E402
+from repro.data.pipeline import DataConfig  # noqa: E402
+from repro.ft.supervisor import (Action, Supervisor,  # noqa: E402
+                                 SupervisorConfig, WorkerState)
+from repro.launch.mesh import make_smoke_mesh  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve.engine import Request, ServeEngine  # noqa: E402
+from repro.sharding.rules import (batch_spec, cache_spec,  # noqa: E402
+                                  param_spec, params_shardings)
+from repro.train.loop import TrainLoopConfig, train  # noqa: E402
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": {"c": jnp.ones((5,), jnp.int32),
+                      "d": jnp.zeros((), jnp.float32)}}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tree, str(tmp_path), step=7)
+        assert latest_step(str(tmp_path)) == 7
+        restored, step = restore_checkpoint(tree, str(tmp_path))
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_corruption_detected(self, tmp_path):
+        tree = self._tree()
+        path = save_checkpoint(tree, str(tmp_path), step=1)
+        # corrupt a shard
+        target = os.path.join(path, "a.npy")
+        arr = np.load(target)
+        arr.flat[0] += 1
+        np.save(target, arr)
+        with pytest.raises(IOError, match="checksum"):
+            restore_checkpoint(tree, str(tmp_path))
+
+    def test_torn_checkpoint_ignored(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tree, str(tmp_path), step=3)
+        torn = os.path.join(str(tmp_path), "step_000000009")
+        os.makedirs(torn)                      # no COMMIT file
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_elastic_restore_onto_mesh(self, tmp_path):
+        """Checkpoint saved without a mesh restores with shardings (the
+        resharding path used when the pod size changes)."""
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        save_checkpoint(tree, str(tmp_path), step=0, mesh_shape=(16, 16))
+        mesh = make_smoke_mesh()
+        sh = params_shardings(tree, mesh)
+        restored, _ = restore_checkpoint(tree, str(tmp_path), shardings=sh)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = AsyncCheckpointer()
+        ck.save(self._tree(), str(tmp_path), step=11)
+        ck.wait()
+        assert latest_step(str(tmp_path)) == 11
+
+
+class TestTrainLoopRestart:
+    def test_resume_from_checkpoint(self, tmp_path):
+        cfg = get_arch("qwen2-0.5b").reduced()
+        model = build_model(cfg)
+        data = DataConfig(global_batch=2, seq_len=16,
+                          vocab_size=cfg.vocab_size)
+        loop = TrainLoopConfig(steps=4, ckpt_every=2,
+                               ckpt_dir=str(tmp_path), log_every=0)
+        out1 = train(model, data, loop, log_fn=lambda s: None)
+        # crash-and-restart: a fresh invocation resumes past step 1
+        loop2 = TrainLoopConfig(steps=6, ckpt_every=2,
+                                ckpt_dir=str(tmp_path), log_every=0)
+        out2 = train(model, data, loop2, log_fn=lambda s: None)
+        assert out2["last_step"] == 5
+        assert np.isfinite(out2["final_loss"])
+
+
+class TestSupervisor:
+    def test_failure_triggers_remesh(self):
+        clock = [0.0]
+        sup = Supervisor(4, SupervisorConfig(heartbeat_timeout_s=10),
+                         clock=lambda: clock[0])
+        for w in range(4):
+            sup.heartbeat(w, step=5, step_seconds=1.0)
+        sup.checkpoint_committed(4)
+        clock[0] = 30.0
+        for w in (0, 1, 2):
+            sup.heartbeat(w, step=6, step_seconds=1.0)
+        act = sup.decide()
+        assert act.kind == "remesh"
+        assert act.new_num_workers == 3
+        assert act.restore_step == 4
+
+    def test_straggler_rebalance(self):
+        clock = [0.0]
+        sup = Supervisor(4, clock=lambda: clock[0])
+        for step in range(6):
+            for w in range(4):
+                sup.heartbeat(w, step, step_seconds=3.0 if w == 2 else 1.0)
+        act = sup.decide()
+        assert act.kind == "rebalance"
+        assert act.slow_workers == (2,)
+        shares = Supervisor.rebalanced_shares(4, (2,))
+        assert abs(sum(shares) - 1.0) < 1e-9
+        assert shares[2] < shares[0]
+
+    def test_steady_state(self):
+        sup = Supervisor(2)
+        for w in range(2):
+            sup.heartbeat(w, 0, 1.0)
+        assert sup.decide().kind == "none"
+
+
+class TestServeEngine:
+    def test_continuous_batching_end_to_end(self):
+        cfg = get_arch("qwen2-0.5b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params, max_batch=2, max_len=32)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i,
+                        prompt=list(map(int, rng.integers(
+                            0, cfg.vocab_size, 4))),
+                        max_new_tokens=5)
+                for i in range(4)]     # 4 requests > 2 slots: slot reuse
+        done = engine.run(reqs)
+        assert all(len(r.out_tokens) == 5 for r in done)
+        assert engine.metrics["requests_done"] == 4
+
+    def test_slot_isolation(self):
+        """A request's output must not depend on co-batched requests."""
+        cfg = get_arch("qwen2-0.5b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = [3, 5, 7, 11]
+
+        solo = ServeEngine(model, params, max_batch=2, max_len=32)
+        [r_solo] = solo.run([Request(rid=0, prompt=prompt,
+                                     max_new_tokens=4)])
+        pair = ServeEngine(model, params, max_batch=2, max_len=32)
+        rs = pair.run([Request(rid=0, prompt=prompt, max_new_tokens=4),
+                       Request(rid=1, prompt=[2, 4, 6, 8],
+                               max_new_tokens=4)])
+        assert rs[0].out_tokens == r_solo.out_tokens
+
+
+class TestShardingRules:
+    def test_param_spec_divisibility(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        spec = param_spec("layers/attn/wq", (24, 896, 896), mesh)
+        # 1-sized axes: nothing sharded
+        assert all(s is None for s in spec)
+
+    @settings(max_examples=40, deadline=None)
+    @given(d0=st.sampled_from([7, 64, 896, 12288]),
+           d1=st.sampled_from([13, 128, 14336, 49155]))
+    def test_specs_always_divide(self, d0, d1):
+        """property: any dim the rules shard must divide the axis size."""
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        axis_sizes = {"data": 1, "model": 1}
+        spec = param_spec("layers/mlp/w", (d0, d1), mesh)
+        shape = (d0, d1)
+        for dim, ax in enumerate(spec):
+            if ax is not None:
+                assert shape[dim] % axis_sizes[ax] == 0
+
+    def test_batch_spec(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        assert batch_spec((256, 4096), mesh)[0] is not None or \
+            mesh.shape["data"] == 1
+
+    def test_cache_spec_pos_replicated(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        spec = cache_spec("layers/pos", (24, 128), mesh)
+        assert all(s is None for s in spec)
