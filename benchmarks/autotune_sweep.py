@@ -1,0 +1,152 @@
+"""Autotune sweep: default-vs-tuned table over the common op shapes.
+
+For every (op, shape) in ``common.SWEEP_SHAPES`` the sweep runs the full
+tuner loop — enumerate legal candidates, SOL-prune to the top-K, measure
+each with warmup + median-of-N — and reports the tuned config against the
+static library default.  The default is always part of the measured set,
+so the tuned median can never be worse than the default median.
+
+Results persist in the on-disk tuning cache: re-running this script (in a
+fresh process) performs **zero** measured trials and re-prints the table
+from the cache.  Runs on CPU interpret mode out of the box.
+
+    PYTHONPATH=src python benchmarks/autotune_sweep.py [--force]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from common import SWEEP_SHAPES, write_output
+from repro.core import tune
+from repro.kernels import ops
+
+_SEED = 0
+
+
+def _default_config(op):
+    if op == "gemm":
+        return {"stages": 2, "tile": list(tune.DEFAULT_GEMM_TILE)}
+    if op == "attention":
+        return {"block_q": tune.DEFAULT_ATTN_BLOCK[0],
+                "block_kv": tune.DEFAULT_ATTN_BLOCK[1]}
+    if op == "ssd_scan":
+        return {"chunk": tune.DEFAULT_SSD_CHUNK}
+    raise KeyError(op)
+
+
+def _make_gemm(shape):
+    m, n, k = shape
+    rng = np.random.default_rng(_SEED)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def make_fn(cfg):
+        tile = tuple(cfg["tile"])
+        return lambda: ops.gemm(a, b, tile=tile)
+
+    return make_fn
+
+
+def _make_attention(shape):
+    sq, skv, d = shape
+    heads = 2
+    rng = np.random.default_rng(_SEED)
+    q = jnp.asarray(rng.standard_normal((1, sq, heads, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, skv, heads, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, skv, heads, d)), jnp.float32)
+
+    def make_fn(cfg):
+        bq, bkv = int(cfg["block_q"]), int(cfg["block_kv"])
+        return lambda: ops.attention(q, k, v, block_q=bq, block_kv=bkv)
+
+    return make_fn
+
+
+def _make_ssd(shape):
+    t, n, p = shape
+    heads = 2
+    rng = np.random.default_rng(_SEED)
+    x = jnp.asarray(rng.standard_normal((1, t, heads, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (1, t, heads)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 1.5, (heads,)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1, t, n)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((1, t, n)), jnp.float32)
+
+    def make_fn(cfg):
+        chunk = int(cfg["chunk"])
+        return lambda: ops.ssd(x, dt, a, b, c, chunk=chunk)
+
+    return make_fn
+
+
+_BUILDERS = {"gemm": _make_gemm, "attention": _make_attention,
+             "ssd_scan": _make_ssd}
+
+
+def run_sweep(force: bool = False):
+    rows = []
+    total_trials = 0
+    for op, shapes in SWEEP_SHAPES.items():
+        for shape in shapes:
+            make_fn = _BUILDERS[op](shape)
+            res = tune.tune_op(op, shape, "fp32", make_fn, force=force)
+            total_trials += res.trials_run
+            rec = res.record
+            t_def = rec.median_for(_default_config(op))
+            t_best = rec.median_for(rec.best)
+            rows.append({
+                "op": op,
+                "shape": list(shape),
+                "bucket": list(rec.shape_bucket),
+                "default_config": _default_config(op),
+                "tuned_config": rec.best,
+                "default_median_s": t_def,
+                "tuned_median_s": t_best,
+                "speedup": (t_def / t_best
+                            if t_def and t_best else None),
+                "trials_run": res.trials_run,
+                "from_cache": res.from_cache,
+                "tuned_not_worse": (t_def is not None and t_best is not None
+                                    and t_best <= t_def),
+            })
+    return rows, total_trials
+
+
+def main() -> int:
+    force = "--force" in sys.argv[1:]
+    rows, total_trials = run_sweep(force=force)
+
+    hdr = (f"{'op':<10} {'shape':<16} {'default':>12} {'tuned':>12} "
+           f"{'speedup':>8}  {'tuned config':<28} {'src':<6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        d_us = (r["default_median_s"] or 0) * 1e6
+        t_us = (r["tuned_median_s"] or 0) * 1e6
+        sp = f"{r['speedup']:.2f}x" if r["speedup"] else "n/a"
+        src = "cache" if r["from_cache"] else "tuned"
+        print(f"{r['op']:<10} {str(tuple(r['shape'])):<16} "
+              f"{d_us:>10.1f}us {t_us:>10.1f}us {sp:>8}  "
+              f"{str(r['tuned_config']):<28} {src:<6}")
+    all_ok = all(r["tuned_not_worse"] for r in rows)
+    print(f"\nmeasured trials this run: {total_trials} "
+          f"(cache dir: {tune.default_cache_dir()})")
+    print("tuned >= default on every shape:", "yes" if all_ok else "NO")
+
+    path = write_output("autotune_sweep", {
+        "rows": rows,
+        "total_trials": total_trials,
+        "all_tuned_not_worse": all_ok,
+        "device_kind": tune.device_kind(),
+    })
+    print("wrote", path)
+    return 0 if all_ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

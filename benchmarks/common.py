@@ -18,6 +18,16 @@ BENCH_DIR = os.path.join(RUNS_DIR, "bench")
 
 CAPABILITIES = ("mini", "mid", "max")
 
+# Op shapes swept by benchmarks/autotune_sweep.py (kept CPU-interpret-sized;
+# the cache's power-of-two shape buckets extend each tuned config to the
+# surrounding band).  Conventions match the tuning-cache keys:
+#   gemm: (m, n, k)   attention: (sq, skv, head_dim)   ssd_scan: (t, n, p)
+SWEEP_SHAPES = {
+    "gemm": [(64, 64, 64), (100, 80, 60), (128, 256, 128)],
+    "attention": [(128, 128, 64), (64, 256, 64)],
+    "ssd_scan": [(128, 32, 64), (200, 64, 64)],
+}
+
 
 def problems():
     probs = all_problems()

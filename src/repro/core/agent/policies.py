@@ -502,6 +502,14 @@ class SOLGuidedPolicy(DSLPolicy):
             hint = memory.lookup(problem)
             if hint:
                 cfg.update(hint)
+        # SOL steering applied to trial 0: seed per-segment configs from the
+        # persistent autotuning cache (measured on this device class), so
+        # the first hypothesis starts from the tuned point instead of the
+        # static library default.
+        from ..tune import seed_hint_for_problem
+        tuned = seed_hint_for_problem(problem, dtype=cfg["dtype"])
+        for key in ("tiles", "blocks", "chunks"):
+            cfg[key] = {**tuned[key], **cfg[key]}
         return self._rebuild(problem, cfg)
 
     def _config_of(self, sol: Solution, problem: Problem) -> Dict:

@@ -28,15 +28,18 @@ XLA_ROUTED = {
 
 
 def _tile(ir: KernelIR):
+    """Explicit IR tile, else None: the ops wrapper then resolves the
+    autotuning cache (repro.core.tune) before falling back to the static
+    library default."""
     if ir.tile is not None:
         return (ir.tile.m, ir.tile.n, ir.tile.k)
-    return (256, 256, 512) if ir.op_name == "gemm" else (128, 128, 256)
+    return None
 
 
 def _block(ir: KernelIR):
     if ir.block is not None:
         return (ir.block.q, ir.block.kv)
-    return (128, 128)
+    return (None, None)
 
 
 def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
@@ -176,7 +179,7 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
             body.append(f"    x = {ep_fn}(x.astype(jnp.float32))")
         body.append(f"    return x.astype({out_dt})")
     elif op == "ssd_scan":
-        chunk = ir.chunk or 128
+        chunk = ir.chunk    # None -> tuned-or-default in the ops wrapper
         body += [
             f"    x = _kops.ssd(x.astype({in_dt}), dt, a, b, c,"
             f" chunk={chunk})",

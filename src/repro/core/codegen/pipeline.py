@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from ..dsl.ir import KernelIR, PipelineIR, TransformIR
+from ..dsl.ir import PipelineIR, TransformIR
 from . import pallas_backend, xla_backend
 from .common import aux_plan, input_names
 
@@ -33,30 +33,14 @@ def _transform_expr(t: TransformIR, var: str) -> str:
     return expr
 
 
-def generate_pipeline_source(ir: PipelineIR, backend: str) -> Tuple[str, Tuple[str, ...], Tuple[str, ...]]:
-    """Returns (source, primary_input_names, aux_input_names).
-
-    Dataflow: the first kernel stage receives the (possibly transformed)
-    driver inputs; each subsequent kernel stage receives the previous stage's
-    output as its first input plus its own remaining inputs, which are
-    appended to the driver signature with a stage suffix.
-    """
-    gen = (pallas_backend if backend == "pallas" else xla_backend)
-    pieces: List[str] = []
-    kernel_idx = 0
-    stage_fns: List[Tuple[str, KernelIR]] = []
-    for st in ir.stages:
-        if isinstance(st, KernelIR):
-            fn_name = f"_stage{kernel_idx}_fn"
-            pieces.append(gen.generate_kernel_source(st, fn_name))
-            stage_fns.append((fn_name, st))
-            kernel_idx += 1
-
-    # Build driver signature.
+def _signature_plan(ir: PipelineIR) -> Tuple[List[str], List[str],
+                                             List[List[str]]]:
+    """Driver signature (prim, aux) and per-stage call args, derived from
+    the kernel stages alone — usable without generating any stage source."""
     prim: List[str] = []
     aux: List[str] = []
     call_args: List[List[str]] = []
-    for i, (fn_name, st) in enumerate(stage_fns):
+    for i, st in enumerate(ir.kernel_stages):
         names = list(input_names(st))
         aux_names = [name for name, _ in aux_plan(st)]
         if i == 0:
@@ -69,6 +53,30 @@ def generate_pipeline_source(ir: PipelineIR, backend: str) -> Tuple[str, Tuple[s
         stage_aux = [f"{n}_s{i}" if i else n for n in aux_names]
         aux.extend(a for a in stage_aux)
         call_args.append(stage_prims + stage_aux)
+    return prim, aux, call_args
+
+
+def pipeline_signature(ir: PipelineIR) -> Tuple[Tuple[str, ...],
+                                                Tuple[str, ...]]:
+    """(primary_input_names, aux_input_names) for a pipeline driver."""
+    prim, aux, _ = _signature_plan(ir)
+    return tuple(prim), tuple(aux)
+
+
+def generate_pipeline_source(ir: PipelineIR, backend: str) -> Tuple[str, Tuple[str, ...], Tuple[str, ...]]:
+    """Returns (source, primary_input_names, aux_input_names).
+
+    Dataflow: the first kernel stage receives the (possibly transformed)
+    driver inputs; each subsequent kernel stage receives the previous stage's
+    output as its first input plus its own remaining inputs, which are
+    appended to the driver signature with a stage suffix.
+    """
+    gen = (pallas_backend if backend == "pallas" else xla_backend)
+    pieces: List[str] = []
+    for kernel_idx, st in enumerate(ir.kernel_stages):
+        pieces.append(gen.generate_kernel_source(st, f"_stage{kernel_idx}_fn"))
+
+    prim, aux, call_args = _signature_plan(ir)
 
     sig = ", ".join(prim + aux)
     body: List[str] = [f"def kernel_fn({sig}):"]

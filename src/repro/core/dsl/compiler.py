@@ -6,12 +6,26 @@ lands in a deterministic namespace derived from a hash of the configuration
 (``upallas_<hash>``); the original DSL source is embedded as a comment for
 traceability; results are cached so repeated attempts with identical
 configurations are free (paper Sec. 3, "Compilation").
+
+The cache is two-level:
+
+  * memory — an LRU-bounded map keyed by (namespace, backend); the bound
+    (REPRO_COMPILE_CACHE_SIZE, default 256) keeps long agent runs from
+    growing without limit,
+  * disk — generated sources persisted as ``<namespace>_<backend>.py``
+    under ``build_dir`` (or REPRO_COMPILE_CACHE_DIR when no build_dir is
+    passed), so repeated attempts *across processes* skip codegen entirely:
+    a disk hit just execs the stored source.
+
+``clear_cache()`` clears both layers; ``clear_cache(disk=False)`` drops
+only the memory layer (the disk layer then serves the next compile).
 """
 
 from __future__ import annotations
 
 import os
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -37,6 +51,7 @@ class CompiledKernel:
     warnings: List[Diagnostic] = field(default_factory=list)
     dsl_source: str = ""
     compile_seconds: float = 0.0
+    from_disk_cache: bool = False
 
     @property
     def all_input_names(self) -> Tuple[str, ...]:
@@ -46,11 +61,72 @@ class CompiledKernel:
         return self.fn(*args, **kwargs)
 
 
-_CACHE: Dict[Tuple[str, str], CompiledKernel] = {}
+_CACHE: "OrderedDict[Tuple[str, str], CompiledKernel]" = OrderedDict()
 
 
-def clear_cache() -> None:
-    _CACHE.clear()
+def _cache_cap() -> int:
+    try:
+        return max(1, int(os.environ.get("REPRO_COMPILE_CACHE_SIZE", 256)))
+    except ValueError:
+        return 256
+
+
+# Stamped into every disk-cache file and required on read: bump it whenever
+# codegen output changes so stale sources from older codegen are regenerated
+# instead of exec'd (the namespace hash covers only the DSL config).
+_DISK_STAMP = "# repro-compile-cache-v2"
+
+# every disk dir this process wrote to / read from, so clear_cache() can
+# clear build_dir-based layers too, not just the env-configured one
+_DISK_DIRS_USED: set = set()
+
+
+def _disk_cache_dir(build_dir: Optional[str] = None) -> Optional[str]:
+    d = build_dir or os.environ.get("REPRO_COMPILE_CACHE_DIR") or None
+    if d:
+        _DISK_DIRS_USED.add(d)
+    return d
+
+
+def _disk_path(disk_dir: str, namespace: str, backend: str) -> str:
+    return os.path.join(disk_dir, f"{namespace}_{backend}.py")
+
+
+def _cache_put(key: Tuple[str, str], result: CompiledKernel) -> None:
+    _CACHE[key] = result
+    _CACHE.move_to_end(key)
+    while len(_CACHE) > _cache_cap():
+        _CACHE.popitem(last=False)
+
+
+def _cache_get(key: Tuple[str, str]) -> Optional[CompiledKernel]:
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _CACHE.move_to_end(key)
+    return hit
+
+
+def clear_cache(*, memory: bool = True, disk: bool = True) -> None:
+    """Clear the compile cache; ``disk=False`` keeps the on-disk layer."""
+    if memory:
+        _CACHE.clear()
+    if disk:
+        _disk_cache_dir()       # register the env-configured dir, if any
+        for disk_dir in list(_DISK_DIRS_USED):
+            if not os.path.isdir(disk_dir):
+                continue
+            for name in os.listdir(disk_dir):
+                if name.startswith("upallas_") and name.endswith(".py"):
+                    try:
+                        os.unlink(os.path.join(disk_dir, name))
+                    except OSError:
+                        pass
+
+
+def _exec_source(source: str, namespace: str) -> Callable:
+    scope: Dict[str, object] = {}
+    exec(compile(source, f"<{namespace}>", "exec"), scope)  # noqa: S102
+    return scope["kernel_fn"]
 
 
 def validate_dsl(src: str) -> List[Diagnostic]:
@@ -86,32 +162,53 @@ def compile_dsl(src: str, backend: str = "pallas", *,
     ir, warnings = lower_dsl(src)
     namespace = namespace_of(ir)
     cache_key = (namespace, backend)
-    if use_cache and cache_key in _CACHE:
-        return _CACHE[cache_key]
+    if use_cache:
+        hit = _cache_get(cache_key)
+        if hit is not None:
+            return hit
 
     if isinstance(ir, PipelineIR):
-        body, prim, aux = pipeline_gen.generate_pipeline_source(ir, backend)
+        prim, aux = pipeline_gen.pipeline_signature(ir)
     else:
-        gen = pallas_backend if backend == "pallas" else xla_backend
-        body = gen.generate_kernel_source(ir, "kernel_fn")
         prim, aux = full_signature(ir)
 
-    source = header(namespace, src, backend) + "\n" + body
+    # disk layer: a prior process already generated this namespace+backend
+    disk_dir = _disk_cache_dir(build_dir)
+    from_disk = False
+    source = None
+    if use_cache and disk_dir:
+        path = _disk_path(disk_dir, namespace, backend)
+        try:
+            with open(path) as f:
+                stamp, _, cached_source = f.read().partition("\n")
+            if stamp != _DISK_STAMP:
+                raise ValueError("codegen version mismatch")
+            fn = _exec_source(cached_source, namespace)
+            source, from_disk = cached_source, True
+        except Exception:
+            source = None           # stale/torn file: fall through to codegen
 
-    scope: Dict[str, object] = {}
-    try:
-        exec(compile(source, f"<{namespace}>", "exec"), scope)  # noqa: S102
-    except Exception as e:  # codegen bug — surface with full context
-        raise DSLError(
-            f"internal codegen error for {namespace}: {e}\n"
-            f"--- generated source ---\n{source}") from e
-    fn = scope["kernel_fn"]
+    if source is None:
+        if isinstance(ir, PipelineIR):
+            body, prim, aux = pipeline_gen.generate_pipeline_source(
+                ir, backend)
+        else:
+            gen = pallas_backend if backend == "pallas" else xla_backend
+            body = gen.generate_kernel_source(ir, "kernel_fn")
+        source = header(namespace, src, backend) + "\n" + body
+        try:
+            fn = _exec_source(source, namespace)
+        except Exception as e:  # codegen bug — surface with full context
+            raise DSLError(
+                f"internal codegen error for {namespace}: {e}\n"
+                f"--- generated source ---\n{source}") from e
 
-    if build_dir:
-        os.makedirs(build_dir, exist_ok=True)
-        with open(os.path.join(build_dir, f"{namespace}_{backend}.py"),
-                  "w") as f:
-            f.write(source)
+    if disk_dir and not from_disk:
+        os.makedirs(disk_dir, exist_ok=True)
+        tmp = _disk_path(disk_dir, namespace, backend) + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(_DISK_STAMP + "\n" + source)
+        os.replace(tmp, _disk_path(disk_dir, namespace, backend))
 
     result = CompiledKernel(
         namespace=namespace,
@@ -124,7 +221,8 @@ def compile_dsl(src: str, backend: str = "pallas", *,
         warnings=warnings,
         dsl_source=src,
         compile_seconds=time.perf_counter() - t0,
+        from_disk_cache=from_disk,
     )
     if use_cache:
-        _CACHE[cache_key] = result
+        _cache_put(cache_key, result)
     return result

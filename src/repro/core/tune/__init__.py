@@ -1,0 +1,124 @@
+"""SOL-guided autotuner with a persistent tuning cache.
+
+Four stages (paper: SOL bounds steer and budget the search):
+
+  candidates.py   legal config enumeration from the validator's constraints
+  sol_prune.py    analytic (roofline/cost-model) ranking, keep top-K
+  runner.py       measured tuning: warmup + median-of-N per candidate
+  cache.py        persistent on-disk cache keyed by
+                  (op, shape-bucket, dtype, backend, device_kind)
+
+Hot paths (``kernels.ops``, codegen, serving, the agent's trial 0) only
+ever *look up* tuned configs — measurement happens exclusively through
+``tune_op`` / ``benchmarks/autotune_sweep.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from .cache import (TuningCache, TuningRecord, default_cache_dir,
+                    device_kind, global_cache, make_key, shape_bucket,
+                    tuning_disabled)
+from .candidates import (Candidate, DEFAULT_ATTN_BLOCK, DEFAULT_GEMM_TILE,
+                         DEFAULT_BATCHED_TILE, DEFAULT_NORM_BLOCK_ROWS,
+                         DEFAULT_SSD_CHUNK, enumerate_candidates)
+from .runner import TuneResult, measure, tune_op
+from .sol_prune import predict_seconds, prune, rank_candidates
+
+__all__ = [
+    "Candidate", "TuneResult", "TuningCache", "TuningRecord",
+    "default_cache_dir", "device_kind", "enumerate_candidates",
+    "global_cache", "lookup", "make_key", "measure", "predict_seconds",
+    "prune", "rank_candidates", "seed_hint_for_problem", "shape_bucket",
+    "tune_op", "tuned_attention_block", "tuned_gemm_tile", "tuned_ssd_chunk",
+    "tuning_disabled", "DEFAULT_ATTN_BLOCK", "DEFAULT_BATCHED_TILE",
+    "DEFAULT_GEMM_TILE", "DEFAULT_NORM_BLOCK_ROWS", "DEFAULT_SSD_CHUNK",
+]
+
+
+def canon_dtype_name(dtype) -> str:
+    """Canonical cache-key dtype from a jnp dtype / numpy dtype / string."""
+    from ..sol.hardware import DTYPE_CANON
+
+    try:
+        import numpy as np
+
+        name = np.dtype(dtype).name
+    except (TypeError, ValueError):
+        name = str(dtype)
+    return DTYPE_CANON.get(name.lower(), name.lower())
+
+
+def lookup(op: str, shape, dtype, *,
+           backend: str = "pallas") -> Optional[Dict[str, object]]:
+    """Best tuned config for (op, shape-bucket, dtype) or None on miss."""
+    if tuning_disabled():
+        return None
+    rec = global_cache().get(op, shape, canon_dtype_name(dtype),
+                             backend=backend)
+    return dict(rec.best) if rec is not None else None
+
+
+# -- typed convenience lookups used by the wired-in call sites --------------
+
+def tuned_gemm_tile(m: int, n: int, k: int, dtype, *,
+                    batched: bool = False) -> Optional[Tuple[int, int, int]]:
+    op = "batched_gemm" if batched else "gemm"
+    best = lookup(op, (m, n, k), dtype)
+    if best and "tile" in best:
+        return tuple(int(x) for x in best["tile"])
+    return None
+
+
+def tuned_attention_block(sq: int, skv: int, d: int, dtype, *,
+                          window: int = 0) -> Optional[Tuple[int, int]]:
+    from .runner import keyed_op
+
+    best = lookup(keyed_op("attention", window), (sq, skv, d), dtype)
+    if best and "block_q" in best and "block_kv" in best:
+        return int(best["block_q"]), int(best["block_kv"])
+    return None
+
+
+def tuned_ssd_chunk(t: int, n: int, p: int, dtype) -> Optional[int]:
+    best = lookup("ssd_scan", (t, n, p), dtype)
+    if best and "chunk" in best:
+        return int(best["chunk"])
+    return None
+
+
+def tuned_norm_block_rows(rows: int, d: int, dtype) -> Optional[int]:
+    best = lookup("norm", (rows, d), dtype)
+    if best and "block_rows" in best:
+        return int(best["block_rows"])
+    return None
+
+
+def seed_hint_for_problem(problem, dtype: str = "fp32") -> Dict[str, Dict]:
+    """Tuned per-segment configs for an agent problem — SOL steering
+    applied to trial 0: the variant proposer seeds its first hypothesis
+    from whatever the autotuner already measured on this device class.
+
+    Returns {"tiles": {...}, "blocks": {...}, "chunks": {...}} holding only
+    the segments with a cache hit (empty dicts on a cold cache).
+    """
+    hint: Dict[str, Dict] = {"tiles": {}, "blocks": {}, "chunks": {}}
+    if tuning_disabled():
+        return hint
+    for seg in problem.segments:
+        d = dict(seg.dims)
+        if seg.kind == "matmul":
+            tile = tuned_gemm_tile(d["m"], d["n"], d["k"], dtype,
+                                   batched=d.get("batch", 1) > 1)
+            if tile:
+                hint["tiles"][seg.name] = tile
+        elif seg.kind == "attention":
+            block = tuned_attention_block(d["sq"], d["skv"], d["d"], dtype)
+            if block:
+                hint["blocks"][seg.name] = block
+        elif seg.kind == "ssd":
+            chunk = tuned_ssd_chunk(d["t"], d["n"], d["p"], dtype)
+            if chunk:
+                hint["chunks"][seg.name] = chunk
+    return hint

@@ -1,0 +1,226 @@
+"""Persistent on-disk tuning cache.
+
+Tuning results are keyed by ``(op, shape-bucket, dtype, backend,
+device_kind)`` so a measurement made once (e.g. by
+``benchmarks/autotune_sweep.py``) is reused by every later process on the
+same device class.  Shapes are bucketed to the next power of two per
+dimension, so nearby problem sizes share one tuned config — the same
+quantization the analytic cost model applies through tile padding.
+
+Layout: one JSON file (``tune_cache.json``) per cache directory, holding a
+schema version plus a flat ``{key: record}`` map.  Writes go through a
+temp file + ``os.replace`` so concurrent readers never observe a torn file.
+
+Env knobs (all optional):
+
+  REPRO_TUNE_DIR      cache directory (default ``~/.cache/repro/tune``)
+  REPRO_TUNE_DISABLE  "1" disables lookups and writes entirely
+  REPRO_TUNE_TRIALS   measured trials per candidate (runner, default 3)
+  REPRO_TUNE_TOPK     candidates kept after SOL pruning (default 4)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 1
+CACHE_FILENAME = "tune_cache.json"
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get("REPRO_TUNE_DIR", "")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "tune")
+
+
+def tuning_disabled() -> bool:
+    return os.environ.get("REPRO_TUNE_DISABLE", "") in ("1", "true", "True")
+
+
+def shape_bucket(dims: Sequence[int]) -> Tuple[int, ...]:
+    """Round every dimension up to the next power of two (floor 8).
+
+    Stable within a power-of-two band: (100, 80, 60) and (97, 70, 50) both
+    bucket to (128, 128, 64), so one tuned config covers both.
+    """
+    out = []
+    for d in dims:
+        d = max(int(d), 1)
+        b = 1 << (d - 1).bit_length()
+        out.append(max(b, 8))
+    return tuple(out)
+
+
+def device_kind() -> str:
+    """Device-class component of the cache key (never raises)."""
+    try:
+        import jax
+
+        kind = jax.devices()[0].device_kind.replace(" ", "_")
+    except Exception:
+        kind = "unknown"
+    try:
+        from repro.kernels.ops import default_interpret
+
+        if default_interpret():
+            kind += ":interp"
+    except Exception:
+        pass
+    return kind
+
+
+def make_key(op: str, bucket: Sequence[int], dtype: str, backend: str,
+             device: str) -> str:
+    return "|".join([op, "x".join(str(b) for b in bucket), dtype, backend,
+                     device])
+
+
+@dataclass
+class TuningRecord:
+    """One tuned entry: the winning config plus every measured trial."""
+
+    op: str
+    shape_bucket: Tuple[int, ...]
+    dtype: str
+    backend: str
+    device_kind: str
+    best: Dict[str, object]                  # winning config
+    trials: List[Dict[str, object]] = field(default_factory=list)
+    # trials entries: {"config": {...}, "median_s": float}
+    sol_rank: List[Dict[str, object]] = field(default_factory=list)
+    # analytic ranking kept by the SOL pruner (config + predicted seconds)
+
+    @property
+    def key(self) -> str:
+        return make_key(self.op, self.shape_bucket, self.dtype, self.backend,
+                        self.device_kind)
+
+    def median_for(self, config: Dict[str, object]) -> Optional[float]:
+        for t in self.trials:
+            if t["config"] == config:
+                return float(t["median_s"])
+        return None
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TuningRecord":
+        return cls(
+            op=d["op"],
+            shape_bucket=tuple(d["shape_bucket"]),
+            dtype=d["dtype"],
+            backend=d["backend"],
+            device_kind=d["device_kind"],
+            best=dict(d["best"]),
+            trials=list(d.get("trials", [])),
+            sol_rank=list(d.get("sol_rank", [])),
+        )
+
+
+class TuningCache:
+    """Thread-safe two-level (memory + disk) tuning cache."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.dir = path or default_cache_dir()
+        self.file = os.path.join(self.dir, CACHE_FILENAME)
+        self._lock = threading.Lock()
+        self._records: Dict[str, TuningRecord] = {}
+        self._loaded = False
+
+    # -- disk layer ---------------------------------------------------------
+    def _read_disk(self) -> Dict[str, TuningRecord]:
+        out: Dict[str, TuningRecord] = {}
+        try:
+            with open(self.file) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            return out
+        if payload.get("schema") != SCHEMA_VERSION:
+            return out                  # stale schema: ignore, rewrite later
+        for key, rec in payload.get("records", {}).items():
+            try:
+                out[key] = TuningRecord.from_dict(rec)
+            except (KeyError, TypeError):
+                continue
+        return out
+
+    def _load(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        self._records.update(self._read_disk())
+
+    def _flush(self) -> None:
+        os.makedirs(self.dir, exist_ok=True)
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "records": {k: asdict(r) for k, r in self._records.items()},
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, self.file)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- public API ---------------------------------------------------------
+    def get(self, op: str, shape: Sequence[int], dtype: str, *,
+            backend: str = "pallas",
+            device: Optional[str] = None) -> Optional[TuningRecord]:
+        if tuning_disabled():
+            return None
+        with self._lock:
+            self._load()
+            key = make_key(op, shape_bucket(shape), dtype, backend,
+                           device or device_kind())
+            return self._records.get(key)
+
+    def put(self, record: TuningRecord) -> None:
+        if tuning_disabled():
+            return
+        with self._lock:
+            self._load()
+            # merge records a concurrent process flushed since our load, so
+            # the rewrite below doesn't discard them (ours win on conflict)
+            disk = self._read_disk()
+            disk.update(self._records)
+            self._records = disk
+            self._records[record.key] = record
+            self._flush()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+            self._loaded = True
+            try:
+                os.unlink(self.file)
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load()
+            return len(self._records)
+
+
+_GLOBAL: Optional[TuningCache] = None
+_GLOBAL_DIR: Optional[str] = None
+
+
+def global_cache() -> TuningCache:
+    """Process-wide cache instance (re-created if REPRO_TUNE_DIR changes)."""
+    global _GLOBAL, _GLOBAL_DIR
+    d = default_cache_dir()
+    if _GLOBAL is None or _GLOBAL_DIR != d:
+        _GLOBAL = TuningCache(d)
+        _GLOBAL_DIR = d
+    return _GLOBAL

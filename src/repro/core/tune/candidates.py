@@ -1,0 +1,181 @@
+"""Legal candidate-config enumeration per operator family.
+
+Mirrors the muPallas validator's constraint families (lane/sublane
+alignment, VMEM working-set budget, window gating) so every emitted
+candidate would pass static validation — the tuner never burns a measured
+trial on a config the DSL would reject (paper Sec. 3: validity is decided
+*before* the toolchain runs).
+
+The library default for each family is always candidate 0, so a measured
+sweep can never pick something worse than the shipped static config.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+from ..sol.hardware import (LANE_MULTIPLE, SUBLANE_MULTIPLE, ChipSpec,
+                            TPU_V5E, dtype_bytes)
+
+# Static defaults shipped by the codegen/ops layer (kept in sync with
+# repro.kernels.ops and codegen.pallas_backend fallbacks).
+DEFAULT_GEMM_TILE = (256, 256, 512)
+DEFAULT_BATCHED_TILE = (128, 128, 256)
+DEFAULT_ATTN_BLOCK = (128, 128)
+DEFAULT_SSD_CHUNK = 128
+DEFAULT_NORM_BLOCK_ROWS = 256
+
+_TILE_M = (64, 128, 256, 512)
+_TILE_N = (128, 256, 512)
+_TILE_K = (128, 256, 512, 1024)
+_BLOCK_Q = (64, 128, 256, 512)
+_BLOCK_KV = (128, 256, 512)
+_CHUNKS = (32, 64, 128, 256, 512)
+_NORM_ROWS = (64, 128, 256, 512, 1024)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One tunable configuration for an op family."""
+
+    op: str
+    config: Tuple[Tuple[str, object], ...]
+
+    def as_dict(self) -> Dict[str, object]:
+        return {k: (list(v) if isinstance(v, tuple) else v)
+                for k, v in self.config}
+
+
+def _cand(op: str, **config) -> Candidate:
+    return Candidate(op, tuple(sorted(config.items())))
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _sub(dtype: str) -> int:
+    return SUBLANE_MULTIPLE.get(dtype, 8)
+
+
+def _vmem_ok(bm: int, bn: int, bk: int, stages: int, dtype: str,
+             chip: ChipSpec) -> bool:
+    """Same working-set math as the validator's E_TILE_VMEM check."""
+    in_b = dtype_bytes(dtype)
+    total = stages * (bm * bk + bk * bn) * in_b + bm * bn * 4
+    return total <= chip.vmem_bytes
+
+
+def _dedup(cands: List[Candidate]) -> List[Candidate]:
+    seen, out = set(), []
+    for c in cands:
+        if c.config not in seen:
+            seen.add(c.config)
+            out.append(c)
+    return out
+
+
+def gemm_candidates(m: int, n: int, k: int, *, dtype: str = "fp32",
+                    batched: bool = False,
+                    chip: ChipSpec = TPU_V5E) -> List[Candidate]:
+    """Legal (tile, stages) configs for a (possibly batched) GEMM."""
+    op = "batched_gemm" if batched else "gemm"
+    sub = _sub(dtype)
+    default_tile = DEFAULT_BATCHED_TILE if batched else DEFAULT_GEMM_TILE
+    out = [_cand(op, tile=default_tile, stages=2)]
+    # a tile never needs to exceed the padded problem dimension
+    m_cap = _ceil_to(max(m, 1), max(sub, LANE_MULTIPLE))
+    n_cap = _ceil_to(max(n, 1), LANE_MULTIPLE)
+    k_cap = _ceil_to(max(k, 1), LANE_MULTIPLE)
+    # stages is carried as a constant (2 = double buffering): the Pallas
+    # kernel has no runtime stages knob, so enumerating it would only
+    # re-measure identical callables; it stays in the config for the DSL
+    # consumers (agent seeding, VMEM math).
+    for bm in _TILE_M:
+        if bm % sub or bm > 2 * m_cap:
+            continue
+        for bn in _TILE_N:
+            if bn > 2 * n_cap:
+                continue
+            for bk in _TILE_K:
+                if bk > 2 * k_cap:
+                    continue
+                if _vmem_ok(bm, bn, bk, 2, dtype, chip):
+                    out.append(_cand(op, tile=(bm, bn, bk), stages=2))
+    return _dedup(out)
+
+
+def attention_candidates(sq: int, skv: int, d: int, *, dtype: str = "fp32",
+                         window: int = 0,
+                         chip: ChipSpec = TPU_V5E) -> List[Candidate]:
+    """Legal (block_q, block_kv) configs for flash attention."""
+    sub = _sub(dtype)
+    out = [_cand("attention", block_q=DEFAULT_ATTN_BLOCK[0],
+                 block_kv=DEFAULT_ATTN_BLOCK[1])]
+    q_cap = _ceil_to(max(sq, 1), max(sub, 64))
+    kv_cap = _ceil_to(max(skv, 1), LANE_MULTIPLE)
+    for bq in _BLOCK_Q:
+        if bq % sub or bq > 2 * q_cap:
+            continue
+        for bkv in _BLOCK_KV:
+            if bkv % LANE_MULTIPLE or bkv > 2 * kv_cap:
+                continue
+            if window and bkv > window:
+                continue        # validator E_BLOCK_WINDOW
+            out.append(_cand("attention", block_q=bq, block_kv=bkv))
+    return _dedup(out)
+
+
+def ssd_candidates(t: int, n: int, p: int, *, dtype: str = "fp32",
+                   chip: ChipSpec = TPU_V5E) -> List[Candidate]:
+    """Legal chunk sizes for the SSD chunked scan."""
+    sub = _sub(dtype)
+    out = [_cand("ssd_scan", chunk=DEFAULT_SSD_CHUNK)]
+    t_cap = _ceil_to(max(t, 1), sub)
+    for c in _CHUNKS:
+        if c % sub or c > 2 * t_cap:
+            continue
+        out.append(_cand("ssd_scan", chunk=c))
+    return _dedup(out)
+
+
+def norm_candidates(rows: int, d: int, *,
+                    dtype: str = "fp32") -> List[Candidate]:
+    """Row-block sizes for the fused norm/softmax/eltwise row kernels."""
+    sub = _sub(dtype)
+    out = [_cand("norm", block_rows=DEFAULT_NORM_BLOCK_ROWS)]
+    for r in _NORM_ROWS:
+        if r % sub or r > 2 * _ceil_to(max(rows, 1), sub):
+            continue
+        out.append(_cand("norm", block_rows=r))
+    return _dedup(out)
+
+
+def enumerate_candidates(op: str, shape: Sequence[int], *,
+                         dtype: str = "fp32", window: int = 0,
+                         chip: ChipSpec = TPU_V5E) -> List[Candidate]:
+    """Dispatch by op family; ``shape`` follows the cache-key convention:
+
+      gemm / batched_gemm: (m, n, k)
+      attention:           (sq, skv, d)
+      ssd_scan:            (t, n, p)
+      norm:                (rows, d)
+    """
+    if op == "gemm":
+        m, n, k = shape
+        return gemm_candidates(m, n, k, dtype=dtype, chip=chip)
+    if op in ("batched_gemm", "grouped_gemm"):
+        m, n, k = shape
+        return gemm_candidates(m, n, k, dtype=dtype, batched=True, chip=chip)
+    if op == "attention":
+        sq, skv, d = shape
+        return attention_candidates(sq, skv, d, dtype=dtype, window=window,
+                                    chip=chip)
+    if op == "ssd_scan":
+        t, n, p = shape
+        return ssd_candidates(t, n, p, dtype=dtype, chip=chip)
+    if op == "norm":
+        rows, d = shape
+        return norm_candidates(rows, d, dtype=dtype)
+    raise KeyError(f"no candidate enumerator for op {op!r}")

@@ -1,0 +1,140 @@
+"""Measured-tuning runner: warmup + median-of-N timing per candidate.
+
+``tune_op`` is the full loop: enumerate legal candidates, SOL-prune to the
+top-K worth measuring, measure each, persist the winner.  A cache hit
+short-circuits everything — the second process performs zero measured
+trials.
+"""
+
+from __future__ import annotations
+
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..sol.hardware import ChipSpec, TPU_V5E
+from .cache import (TuningCache, TuningRecord, device_kind, global_cache,
+                    shape_bucket, tuning_disabled)
+from .candidates import Candidate, enumerate_candidates
+from .sol_prune import prune, sol_rank_payload
+
+DEFAULT_TRIALS = 3
+DEFAULT_WARMUP = 1
+
+
+def keyed_op(op: str, window: int = 0) -> str:
+    """Cache-key op name: windowed attention keys apart from full attention
+    (exact window — bucketing could cross the legality boundary)."""
+    if op == "attention" and window:
+        return f"attention_w{int(window)}"
+    return op
+
+
+def trials_from_env() -> int:
+    try:
+        return max(1, int(os.environ.get("REPRO_TUNE_TRIALS",
+                                         DEFAULT_TRIALS)))
+    except ValueError:
+        return DEFAULT_TRIALS
+
+
+def _block(result) -> None:
+    """Wait for async jax dispatch so wall-clock covers the real work."""
+    try:
+        import jax
+
+        jax.block_until_ready(result)
+    except Exception:
+        pass
+
+
+def measure(fn: Callable[[], object], *, warmup: int = DEFAULT_WARMUP,
+            trials: Optional[int] = None) -> float:
+    """Median wall-clock seconds of ``fn`` over ``trials`` timed calls."""
+    n = trials if trials is not None else trials_from_env()
+    for _ in range(max(warmup, 0)):
+        _block(fn())
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        _block(fn())
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+@dataclass
+class TuneResult:
+    """Outcome of one ``tune_op`` call."""
+
+    record: TuningRecord
+    trials_run: int = 0                 # 0 == pure cache hit
+    from_cache: bool = False
+    failures: List[Dict[str, str]] = field(default_factory=list)
+
+
+def tune_op(op: str, shape: Sequence[int], dtype: str,
+            make_fn: Callable[[Dict[str, object]], Callable[[], object]], *,
+            backend: str = "pallas", window: int = 0,
+            cache: Optional[TuningCache] = None,
+            top_k: Optional[int] = None, trials: Optional[int] = None,
+            warmup: int = DEFAULT_WARMUP, force: bool = False,
+            chip: ChipSpec = TPU_V5E) -> TuneResult:
+    """Tune one op/shape: candidates -> SOL prune -> measure -> persist.
+
+    ``make_fn(config)`` returns a zero-arg callable running the op with
+    that config (the runner times it).  A candidate whose callable raises
+    is recorded as a failure and skipped — the default config cannot fail
+    this way without surfacing the error (it is re-raised if *every*
+    candidate fails).
+    """
+    cache = cache or global_cache()
+    device = device_kind()
+    # windowed attention is a different legality/optimality space than the
+    # full-attention bucket — key it separately (exact window, unbucketed)
+    key_op = keyed_op(op, window)
+    if not force:
+        hit = cache.get(key_op, shape, dtype, backend=backend, device=device)
+        if hit is not None:
+            return TuneResult(record=hit, trials_run=0, from_cache=True)
+
+    cands = enumerate_candidates(op, shape, dtype=dtype, window=window,
+                                 chip=chip)
+    kept = prune(op, shape, cands, dtype=dtype, top_k=top_k, chip=chip)
+
+    measured: List[Dict[str, object]] = []
+    failures: List[Dict[str, str]] = []
+    n_trials = 0
+    last_error: Optional[BaseException] = None
+    for cand, _pred in kept:
+        cfg = cand.as_dict()
+        try:
+            fn = make_fn(cfg)
+            med = measure(fn, warmup=warmup, trials=trials)
+        except Exception as e:  # illegal on this backend: skip, keep going
+            failures.append({"config": repr(cfg), "error": str(e)})
+            last_error = e
+            continue
+        n_trials += trials if trials is not None else trials_from_env()
+        measured.append({"config": cfg, "median_s": med})
+    if not measured:
+        raise RuntimeError(
+            f"autotune {op}{tuple(shape)}: every candidate failed"
+        ) from last_error
+
+    best = min(measured, key=lambda t: t["median_s"])
+    record = TuningRecord(
+        op=key_op,
+        shape_bucket=shape_bucket(shape),
+        dtype=dtype,
+        backend=backend,
+        device_kind=device,
+        best=dict(best["config"]),
+        trials=measured,
+        sol_rank=sol_rank_payload(kept),
+    )
+    if not tuning_disabled():
+        cache.put(record)
+    return TuneResult(record=record, trials_run=n_trials, from_cache=False,
+                      failures=failures)

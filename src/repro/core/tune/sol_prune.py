@@ -1,0 +1,117 @@
+"""Speed-of-Light candidate pruning.
+
+The paper's central mechanism applied to autotuning: instead of measuring
+the whole legal config space, rank candidates with the first-principles
+analytic model (``core.agent.costmodel`` — tile quantization, MXU
+alignment, HBM re-read amplification, pipeline overlap) and measure only
+the top-K.  The analytic best is always kept, and the library default is
+always appended to the measured set so a sweep can never regress it.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..agent.costmodel import CostModel
+from ..problems.base import Segment
+from ..sol.hardware import ChipSpec, TPU_V5E
+from .candidates import Candidate
+
+DEFAULT_TOP_K = 4
+
+
+def top_k_from_env() -> int:
+    try:
+        return max(1, int(os.environ.get("REPRO_TUNE_TOPK", DEFAULT_TOP_K)))
+    except ValueError:
+        return DEFAULT_TOP_K
+
+
+def _segment_for(op: str, shape: Sequence[int]) -> Segment:
+    """A minimal Segment carrying the tuner's shape key (unit batch/heads:
+    relative ranking between configs is what matters, not absolute time)."""
+    if op in ("gemm", "batched_gemm", "grouped_gemm"):
+        m, n, k = shape
+        dims = (("k", k), ("m", m), ("n", n))
+        return Segment(name=f"tune_{op}", kind="matmul", dims=dims)
+    if op == "attention":
+        sq, skv, d = shape
+        dims = (("b", 1), ("d", d), ("h", 1), ("skv", skv), ("sq", sq))
+        return Segment(name="tune_attention", kind="attention", dims=dims)
+    if op == "ssd_scan":
+        t, n, p = shape
+        dims = (("b", 1), ("h", 1), ("n", n), ("p", p), ("t", t))
+        return Segment(name="tune_ssd", kind="ssd", dims=dims)
+    raise KeyError(f"no analytic segment for op {op!r}")
+
+
+def predict_seconds(op: str, shape: Sequence[int], cand: Candidate, *,
+                    dtype: str = "fp32",
+                    chip: ChipSpec = TPU_V5E) -> Optional[float]:
+    """Analytic runtime for one candidate; None when the family has no
+    shape-sensitive model (e.g. norm row blocks — purely memory bound)."""
+    cfg = cand.as_dict()
+    model = CostModel(chip)
+    if op in ("gemm", "batched_gemm", "grouped_gemm"):
+        bm, bn, bk = cfg["tile"]
+        cost = model.matmul_cost(_segment_for(op, shape), bm=bm, bn=bn,
+                                 bk=bk, in_dtype=dtype, out_dtype=dtype,
+                                 stages=int(cfg.get("stages", 2)))
+        return cost.t_total
+    if op == "attention":
+        cost = model.attention_cost(_segment_for(op, shape),
+                                    bq=int(cfg["block_q"]),
+                                    bkv=int(cfg["block_kv"]),
+                                    in_dtype=dtype)
+        return cost.t_total
+    if op == "ssd_scan":
+        cost = model.ssd_cost(_segment_for(op, shape),
+                              chunk=int(cfg["chunk"]), in_dtype=dtype)
+        return cost.t_total
+    return None
+
+
+def rank_candidates(op: str, shape: Sequence[int],
+                    candidates: Sequence[Candidate], *,
+                    dtype: str = "fp32", chip: ChipSpec = TPU_V5E
+                    ) -> List[Tuple[Candidate, Optional[float]]]:
+    """All candidates sorted best-first by predicted runtime (stable for
+    families without an analytic model)."""
+    scored = [(c, predict_seconds(op, shape, c, dtype=dtype, chip=chip))
+              for c in candidates]
+    order = sorted(range(len(scored)),
+                   key=lambda i: (scored[i][1] is None,
+                                  scored[i][1] if scored[i][1] is not None
+                                  else i))
+    return [scored[i] for i in order]
+
+
+def prune(op: str, shape: Sequence[int], candidates: Sequence[Candidate], *,
+          dtype: str = "fp32", top_k: Optional[int] = None,
+          chip: ChipSpec = TPU_V5E) -> List[Tuple[Candidate,
+                                                  Optional[float]]]:
+    """Keep the top-K analytically-ranked candidates worth measuring.
+
+    The library default (candidate 0 by the enumerator's convention) is
+    always part of the result, so measured tuning can only ever match or
+    beat the shipped static config.
+    """
+    if not candidates:
+        return []
+    k = top_k if top_k is not None else top_k_from_env()
+    ranked = rank_candidates(op, shape, candidates, dtype=dtype, chip=chip)
+    kept = ranked[:k]
+    default = candidates[0]
+    if all(c is not default for c, _ in kept):
+        for c, pred in ranked:
+            if c is default:
+                kept.append((c, pred))
+                break
+    return kept
+
+
+def sol_rank_payload(ranked: Sequence[Tuple[Candidate, Optional[float]]]
+                     ) -> List[Dict[str, object]]:
+    """JSON-serializable form of a ranking, stored in the TuningRecord."""
+    return [{"config": c.as_dict(), "predicted_s": p} for c, p in ranked]

@@ -1,0 +1,17 @@
+"""Version-compat shims for the Pallas TPU API.
+
+The ``jax.experimental.pallas.tpu`` surface renamed ``TPUCompilerParams`` to
+``CompilerParams`` across jax releases.  All kernels import the class from
+here so they run on both spellings of the pinned toolchain.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -4,6 +4,13 @@ The wrappers own everything the kernels assume away: padding to tile/block
 multiples (and un-padding the result), GQA head expansion, dtype plumbing,
 and the interpret-mode switch (interpret=True on CPU; on a real TPU runtime
 set REPRO_PALLAS_INTERPRET=0 or pass interpret=False).
+
+Tile/block/chunk arguments are optional: when omitted (None), the wrapper
+consults the persistent autotuning cache (``repro.core.tune``) for the best
+measured config on this device class and falls back to the static library
+default on a miss.  Resolution happens in the thin outer wrapper — the
+jit'd inner function always receives a concrete config, so the tuned value
+participates in jit's static-argument cache key like an explicit one.
 """
 
 from __future__ import annotations
@@ -20,12 +27,24 @@ from . import gemm_epilogue as _ge
 from . import rmsnorm as _rn
 from . import ssd_scan as _ssd
 
+# Static fallback configs live in repro.core.tune.candidates (the single
+# source of truth the tuner's candidate-0 guarantee depends on); they are
+# resolved lazily through _tune() below.
+
 
 def default_interpret() -> bool:
     env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
     if env:
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+def _tune():
+    # imported lazily: the tune package pulls in the cost model, which the
+    # kernel layer must not depend on at import time
+    from repro.core import tune
+
+    return tune
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
@@ -41,16 +60,13 @@ def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=(
     "tile", "epilogue", "aux_kinds", "out_dtype", "interpret", "swap",
     "dimension_semantics"))
-def gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
-         tile: Tuple[int, int, int] = (256, 256, 512),
-         epilogue: Optional[Callable] = None,
-         aux_kinds: Sequence[str] = (),
-         out_dtype=None, swap: bool = False,
-         dimension_semantics: Tuple[str, str, str] = ("parallel", "parallel",
-                                                      "arbitrary"),
-         interpret: Optional[bool] = None) -> jax.Array:
-    """C = epilogue(A @ B); arbitrary (M,K)x(K,N), padded internally."""
-    interpret = default_interpret() if interpret is None else interpret
+def _gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+          tile: Tuple[int, int, int],
+          epilogue: Optional[Callable],
+          aux_kinds: Sequence[str],
+          out_dtype, swap: bool,
+          dimension_semantics: Tuple[str, str, str],
+          interpret: bool) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     if swap:
@@ -60,10 +76,10 @@ def gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
                 f"with_swap(true) requires a square output (M == N), got "
                 f"M={m}, N={n} — the layout-reinterpretation identity "
                 "(A@B)^T = B^T@A^T only holds then")
-        return gemm(b.T, a.T, *aux, tile=tile, epilogue=epilogue,
-                    aux_kinds=aux_kinds, out_dtype=out_dtype, swap=False,
-                    dimension_semantics=dimension_semantics,
-                    interpret=interpret).T
+        return _gemm(b.T, a.T, *aux, tile=tile, epilogue=epilogue,
+                     aux_kinds=aux_kinds, out_dtype=out_dtype, swap=False,
+                     dimension_semantics=dimension_semantics,
+                     interpret=interpret).T
     bm, bn, bk = tile
     ap = _pad_to(_pad_to(a, 0, bm), 1, bk)
     bp = _pad_to(_pad_to(b, 0, bk), 1, bn)
@@ -82,15 +98,34 @@ def gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
     return out[:m, :n]
 
 
+def gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+         tile: Optional[Tuple[int, int, int]] = None,
+         epilogue: Optional[Callable] = None,
+         aux_kinds: Sequence[str] = (),
+         out_dtype=None, swap: bool = False,
+         dimension_semantics: Tuple[str, str, str] = ("parallel", "parallel",
+                                                      "arbitrary"),
+         interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue(A @ B); arbitrary (M,K)x(K,N), padded internally."""
+    interpret = default_interpret() if interpret is None else interpret
+    if tile is None:
+        m, k = a.shape
+        n = b.shape[1]
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, a.dtype) or t.DEFAULT_GEMM_TILE
+    return _gemm(a, b, *aux, tile=tuple(tile), epilogue=epilogue,
+                 aux_kinds=tuple(aux_kinds), out_dtype=out_dtype, swap=swap,
+                 dimension_semantics=dimension_semantics,
+                 interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "tile", "epilogue", "aux_kinds", "out_dtype", "interpret"))
-def batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
-                 tile: Tuple[int, int, int] = (128, 128, 256),
-                 epilogue: Optional[Callable] = None,
-                 aux_kinds: Sequence[str] = (),
-                 out_dtype=None,
-                 interpret: Optional[bool] = None) -> jax.Array:
-    interpret = default_interpret() if interpret is None else interpret
+def _batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+                  tile: Tuple[int, int, int],
+                  epilogue: Optional[Callable],
+                  aux_kinds: Sequence[str],
+                  out_dtype, interpret: bool) -> jax.Array:
     g, m, k = a.shape
     _, _, n = b.shape
     bm, bn, bk = tile
@@ -110,6 +145,24 @@ def batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
     return out[:, :m, :n]
 
 
+def batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+                 tile: Optional[Tuple[int, int, int]] = None,
+                 epilogue: Optional[Callable] = None,
+                 aux_kinds: Sequence[str] = (),
+                 out_dtype=None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    if tile is None:
+        _, m, k = a.shape
+        n = b.shape[2]
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, a.dtype, batched=True) \
+            or t.DEFAULT_BATCHED_TILE
+    return _batched_gemm(a, b, *aux, tile=tuple(tile), epilogue=epilogue,
+                         aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+                         interpret=interpret)
+
+
 # Grouped (MoE expert) GEMM shares the batched kernel: G = experts, fixed
 # per-expert capacity rows (dispatch/permutation handled by the MoE layer).
 grouped_gemm = batched_gemm
@@ -117,13 +170,9 @@ grouped_gemm = batched_gemm
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "scale", "block_q", "block_kv", "interpret"))
-def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-              causal: bool = False, window: int = 0,
-              scale: Optional[float] = None,
-              block_q: int = 128, block_kv: int = 128,
-              interpret: Optional[bool] = None) -> jax.Array:
-    """(B, S, H, D) GQA attention; kv heads broadcast to q heads."""
-    interpret = default_interpret() if interpret is None else interpret
+def _attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               causal: bool, window: int, scale: Optional[float],
+               block_q: int, block_kv: int, interpret: bool) -> jax.Array:
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
     if hkv != hq:
@@ -144,11 +193,29 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.swapaxes(out.reshape(b, hq, sq, d), 1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
-def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
-            block_rows: int = 256,
-            interpret: Optional[bool] = None) -> jax.Array:
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = False, window: int = 0,
+              scale: Optional[float] = None,
+              block_q: Optional[int] = None,
+              block_kv: Optional[int] = None,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """(B, S, H, D) GQA attention; kv heads broadcast to q heads."""
     interpret = default_interpret() if interpret is None else interpret
+    if block_q is None or block_kv is None:
+        t = _tune()
+        tuned = t.tuned_attention_block(q.shape[1], k.shape[1], q.shape[3],
+                                        q.dtype, window=window)
+        bq, bkv = tuned or t.DEFAULT_ATTN_BLOCK
+        block_q = block_q if block_q is not None else bq
+        block_kv = block_kv if block_kv is not None else bkv
+    return _attention(q, k, v, causal=causal, window=window, scale=scale,
+                      block_q=int(block_q), block_kv=int(block_kv),
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float,
+             block_rows: int, interpret: bool) -> jax.Array:
     shape = x.shape
     d = shape[-1]
     rows = int(x.size // d)
@@ -160,11 +227,28 @@ def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
     return out[:rows].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
-def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
-              eps: float = 1e-5, block_rows: int = 256,
-              interpret: Optional[bool] = None) -> jax.Array:
+def _norm_block_rows(x: jax.Array, block_rows: Optional[int]) -> int:
+    if block_rows is not None:
+        return int(block_rows)
+    d = x.shape[-1] if x.ndim > 1 else x.shape[0]
+    rows = int(x.size // d)
+    t = _tune()
+    return t.tuned_norm_block_rows(rows, d, x.dtype) \
+        or t.DEFAULT_NORM_BLOCK_ROWS
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            block_rows: Optional[int] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
+    return _rmsnorm(x, gamma, eps=eps,
+                    block_rows=_norm_block_rows(x, block_rows),
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+               eps: float, block_rows: int, interpret: bool) -> jax.Array:
     shape = x.shape
     d = shape[-1]
     rows = int(x.size // d)
@@ -174,10 +258,18 @@ def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
     return out[:rows].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("fn", "block_rows", "interpret"))
-def eltwise(x: jax.Array, fn, *, block_rows: int = 256,
-            interpret: Optional[bool] = None) -> jax.Array:
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, block_rows: Optional[int] = None,
+              interpret: Optional[bool] = None) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
+    return _layernorm(x, gamma, beta, eps=eps,
+                      block_rows=_norm_block_rows(x, block_rows),
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "block_rows", "interpret"))
+def _eltwise(x: jax.Array, fn, *, block_rows: int,
+             interpret: bool) -> jax.Array:
     shape = x.shape
     d = shape[-1] if x.ndim > 1 else x.shape[0]
     rows = int(x.size // d)
@@ -186,10 +278,15 @@ def eltwise(x: jax.Array, fn, *, block_rows: int = 256,
     return out[:rows].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def softmax(x: jax.Array, *, block_rows: int = 256,
+def eltwise(x: jax.Array, fn, *, block_rows: Optional[int] = None,
             interpret: Optional[bool] = None) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
+    return _eltwise(x, fn, block_rows=_norm_block_rows(x, block_rows),
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _softmax(x: jax.Array, *, block_rows: int, interpret: bool) -> jax.Array:
     shape = x.shape
     d = shape[-1]
     rows = int(x.size // d)
@@ -198,16 +295,16 @@ def softmax(x: jax.Array, *, block_rows: int = 256,
     return out[:rows].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
-        c: jax.Array, *, chunk: int = 128,
-        interpret: Optional[bool] = None) -> jax.Array:
-    """Mamba-2 SSD over (B, T, H, P) inputs with shared B/C (n_groups=1).
-
-    x: (B,T,H,P)  dt: (B,T,H) (positive)  a: (H,) (negative)
-    b, c: (B,T,N) shared across heads  ->  y: (B,T,H,P)
-    """
+def softmax(x: jax.Array, *, block_rows: Optional[int] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
+    return _softmax(x, block_rows=_norm_block_rows(x, block_rows),
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_impl(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+         c: jax.Array, *, chunk: int, interpret: bool) -> jax.Array:
     bsz, t, h, p = x.shape
     n = b.shape[-1]
     xbar = (x * dt[..., None]).astype(jnp.float32)
@@ -227,3 +324,20 @@ def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                       interpret=interpret)
     y = y[:, :t]
     return jnp.swapaxes(y.reshape(bsz, h, t, p), 1, 2).astype(x.dtype)
+
+
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, *, chunk: Optional[int] = None,
+        interpret: Optional[bool] = None) -> jax.Array:
+    """Mamba-2 SSD over (B, T, H, P) inputs with shared B/C (n_groups=1).
+
+    x: (B,T,H,P)  dt: (B,T,H) (positive)  a: (H,) (negative)
+    b, c: (B,T,N) shared across heads  ->  y: (B,T,H,P)
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    if chunk is None:
+        t = _tune()
+        chunk = t.tuned_ssd_chunk(x.shape[1], b.shape[-1], x.shape[3],
+                                  x.dtype) or t.DEFAULT_SSD_CHUNK
+    return _ssd_impl(x, dt, a, b, c, chunk=int(chunk),
+                     interpret=interpret)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _ssd_kernel(xbar_ref, da_ref, b_ref, c_ref, y_ref, s_ref, *,
                 chunk: int, d_state: int, head_dim: int):
@@ -98,7 +100,7 @@ def ssd_scan(
         out_specs=pl.BlockSpec((1, chunk, p), lambda bb, cc: (bb, cc, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, t, p), xbar.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xbar, da, b, c)

@@ -21,7 +21,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import tune
 from ..models.model import Model
+
+
+def resolve_tuned_decode_cfg(model: Model, max_len: int):
+    """Tuned decode-path config overrides resolved once at engine build.
+
+    Consults the persistent autotuning cache for the engine's actual
+    decode/prefill shapes: a tuned attention (q, kv) block informs the XLA
+    flash-attention KV chunk, and a tuned SSD chunk replaces the config
+    default.  Returns (new_cfg, overrides-dict); on a cold cache the config
+    is returned unchanged and the dict is empty.
+    """
+    cfg = model.cfg
+    overrides = {}
+    if cfg.num_heads:
+        block = tune.tuned_attention_block(
+            max_len, max_len, cfg.resolved_head_dim, "bf16")
+        if block is not None and block[1] != cfg.attn_chunk_kv:
+            overrides["attn_chunk_kv"] = block[1]
+    if cfg.ssm_state:
+        chunk = tune.tuned_ssd_chunk(max_len, cfg.ssm_state,
+                                     cfg.ssm_head_dim, "bf16")
+        if chunk is not None and chunk != cfg.ssd_chunk:
+            overrides["ssd_chunk"] = chunk
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg, overrides
 
 
 @dataclass
@@ -60,6 +87,10 @@ def _reset_slot_positions(cache, slot: int):
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_len: int = 256, seed: int = 0):
+        tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
+            model, max_len)
+        if self.tuned_overrides:
+            model = dataclasses.replace(model, cfg=tuned_cfg)
         self.model = model
         self.params = params
         self.max_batch = max_batch

@@ -1,0 +1,11 @@
+"""Test-suite isolation: never read/write the developer's persistent
+caches, so results match a cold-cache CI run regardless of what
+``benchmarks/autotune_sweep.py`` tuned on this machine."""
+
+import os
+import tempfile
+
+os.environ.setdefault(
+    "REPRO_TUNE_DIR", tempfile.mkdtemp(prefix="repro-tune-tests-"))
+os.environ.setdefault(
+    "REPRO_COMPILE_CACHE_DIR", "")      # empty -> disk layer off by default

@@ -3,7 +3,9 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dsl import compile_dsl, lower_dsl, namespace_of, validate_dsl
 from repro.core.schedule import (SchedulePolicy, UNSOLVED_FLOOR, fastp,

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 jax = pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
 import jax.numpy as jnp  # noqa: E402
 from hypothesis import given, settings, strategies as st  # noqa: E402
 

@@ -66,4 +66,6 @@ def test_train_step_lowering_on_smoke_mesh():
                               state_abs, batch_abs)
         compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0]
     assert cost.get("flops", 0) > 0

@@ -1,0 +1,291 @@
+"""Autotuner subsystem: cache roundtrip, shape buckets, SOL pruning, the
+measured-tuning runner, and the two-level compile cache."""
+
+import os
+
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import tune  # noqa: E402
+from repro.core.dsl import compiler  # noqa: E402
+from repro.core.tune.cache import TuningCache, TuningRecord  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+
+@pytest.fixture
+def tune_dir(tmp_path, monkeypatch):
+    d = str(tmp_path / "tune")
+    monkeypatch.setenv("REPRO_TUNE_DIR", d)
+    monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+    return d
+
+
+def _record(**over):
+    base = dict(
+        op="gemm", shape_bucket=(64, 64, 64), dtype="fp32",
+        backend="pallas", device_kind="testdev",
+        best={"tile": [64, 128, 128], "stages": 2},
+        trials=[{"config": {"tile": [64, 128, 128], "stages": 2},
+                 "median_s": 1e-4}],
+    )
+    base.update(over)
+    return TuningRecord(**base)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+class TestCacheRoundtrip:
+    def test_write_reload_hit(self, tune_dir):
+        cache = TuningCache(tune_dir)
+        cache.put(_record())
+        # a *fresh* instance (new process analogue) must see the record
+        reloaded = TuningCache(tune_dir)
+        rec = reloaded.get("gemm", (64, 64, 64), "fp32", device="testdev")
+        assert rec is not None
+        assert rec.best == {"tile": [64, 128, 128], "stages": 2}
+        assert rec.median_for(rec.best) == pytest.approx(1e-4)
+
+    def test_miss_on_different_key(self, tune_dir):
+        cache = TuningCache(tune_dir)
+        cache.put(_record())
+        assert cache.get("gemm", (64, 64, 64), "bf16",
+                         device="testdev") is None
+        assert cache.get("attention", (64, 64, 64), "fp32",
+                         device="testdev") is None
+        assert cache.get("gemm", (64, 64, 64), "fp32",
+                         device="otherdev") is None
+
+    def test_atomic_file_valid_json(self, tune_dir):
+        import json
+
+        cache = TuningCache(tune_dir)
+        cache.put(_record())
+        cache.put(_record(dtype="bf16"))
+        with open(cache.file) as f:
+            payload = json.load(f)
+        assert payload["schema"] == 1
+        assert len(payload["records"]) == 2
+
+    def test_disable_env(self, tune_dir, monkeypatch):
+        cache = TuningCache(tune_dir)
+        cache.put(_record())
+        monkeypatch.setenv("REPRO_TUNE_DISABLE", "1")
+        assert cache.get("gemm", (64, 64, 64), "fp32",
+                         device="testdev") is None
+        assert tune.lookup("gemm", (64, 64, 64), "fp32") is None
+
+
+class TestShapeBucket:
+    def test_stability_within_band(self):
+        # nearby shapes share a bucket -> one tuned config covers the band
+        assert tune.shape_bucket((100, 80, 60)) == \
+            tune.shape_bucket((97, 70, 50))
+        assert tune.shape_bucket((100, 80, 60)) == (128, 128, 64)
+
+    def test_powers_of_two_fixed(self):
+        assert tune.shape_bucket((128, 256, 512)) == (128, 256, 512)
+
+    def test_floor(self):
+        assert tune.shape_bucket((1, 3)) == (8, 8)
+
+    def test_band_edges_differ(self):
+        assert tune.shape_bucket((128,)) != tune.shape_bucket((129,))
+
+
+# ---------------------------------------------------------------------------
+# candidates + SOL pruning
+# ---------------------------------------------------------------------------
+
+class TestCandidates:
+    def test_default_is_first(self):
+        cands = tune.enumerate_candidates("gemm", (256, 256, 512))
+        assert cands[0].as_dict() == {"tile": [256, 256, 512], "stages": 2}
+
+    def test_alignment_constraints(self):
+        from repro.core.sol.hardware import SUBLANE_MULTIPLE
+
+        for dtype in ("fp32", "bf16"):
+            sub = SUBLANE_MULTIPLE[dtype]
+            for c in tune.enumerate_candidates("gemm", (256, 256, 512),
+                                               dtype=dtype):
+                bm, bn, bk = c.as_dict()["tile"]
+                assert bm % sub == 0 or (bm, bn, bk) == (256, 256, 512)
+                assert bn % 128 == 0 and bk % 128 == 0
+
+    def test_attention_window_gating(self):
+        for c in tune.enumerate_candidates("attention", (512, 512, 64),
+                                           window=128):
+            cfg = c.as_dict()
+            assert cfg["block_kv"] <= 128
+            assert cfg["block_kv"] % 128 == 0
+
+    def test_ssd_chunks_aligned(self):
+        for c in tune.enumerate_candidates("ssd_scan", (256, 64, 64),
+                                           dtype="bf16"):
+            assert c.as_dict()["chunk"] % 16 == 0
+
+
+class TestSOLPruning:
+    def test_keeps_analytic_best(self):
+        shape = (512, 512, 512)
+        cands = tune.enumerate_candidates("gemm", shape, dtype="bf16")
+        preds = [tune.predict_seconds("gemm", shape, c, dtype="bf16")
+                 for c in cands]
+        best_idx = min(range(len(cands)), key=lambda i: preds[i])
+        kept = tune.prune("gemm", shape, cands, dtype="bf16", top_k=3)
+        kept_cfgs = [c.config for c, _ in kept]
+        assert cands[best_idx].config in kept_cfgs
+
+    def test_always_keeps_default(self):
+        shape = (512, 512, 512)
+        cands = tune.enumerate_candidates("gemm", shape, dtype="bf16")
+        kept = tune.prune("gemm", shape, cands, dtype="bf16", top_k=2)
+        assert cands[0].config in [c.config for c, _ in kept]
+
+    def test_top_k_bounds_measured_set(self):
+        shape = (512, 512, 512)
+        cands = tune.enumerate_candidates("gemm", shape, dtype="bf16")
+        kept = tune.prune("gemm", shape, cands, dtype="bf16", top_k=3)
+        assert len(kept) <= 4        # top-3 plus (maybe) the default
+
+
+# ---------------------------------------------------------------------------
+# runner: measured tuning + persistence
+# ---------------------------------------------------------------------------
+
+def _gemm_builder(m, n, k):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def make_fn(cfg):
+        tile = tuple(cfg["tile"])
+        return lambda: ops.gemm(a, b, tile=tile)
+
+    return make_fn
+
+
+class TestRunner:
+    def test_second_run_zero_trials(self, tune_dir):
+        make_fn = _gemm_builder(32, 32, 32)
+        r1 = tune.tune_op("gemm", (32, 32, 32), "fp32", make_fn,
+                          top_k=2, trials=1)
+        assert not r1.from_cache and r1.trials_run > 0
+        # fresh cache instance = fresh process; zero measured trials
+        r2 = tune.tune_op("gemm", (32, 32, 32), "fp32", make_fn,
+                          cache=TuningCache(tune_dir), top_k=2, trials=1)
+        assert r2.from_cache and r2.trials_run == 0
+        assert r2.record.best == r1.record.best
+
+    def test_best_not_worse_than_default(self, tune_dir):
+        make_fn = _gemm_builder(32, 32, 32)
+        r = tune.tune_op("gemm", (32, 32, 32), "fp32", make_fn,
+                         top_k=2, trials=1, force=True)
+        default = {"tile": list(tune.DEFAULT_GEMM_TILE), "stages": 2}
+        t_def = r.record.median_for(default)
+        t_best = r.record.median_for(r.record.best)
+        assert t_def is not None, "default config must always be measured"
+        assert t_best <= t_def
+
+    def test_tuned_lookup_feeds_ops(self, tune_dir):
+        make_fn = _gemm_builder(32, 32, 32)
+        tune.tune_op("gemm", (32, 32, 32), "fp32", make_fn, top_k=2,
+                     trials=1)
+        tile = tune.tuned_gemm_tile(32, 32, 32, jnp.float32)
+        assert tile is not None and len(tile) == 3
+        # ops.gemm(tile=None) resolves the same tuned config and still
+        # computes the right product
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(ops.gemm(a, b)),
+                                   np.asarray(a @ b), rtol=1e-4, atol=1e-4)
+
+
+class TestAgentSeeding:
+    def test_seed_hint_consults_cache(self, tune_dir):
+        from repro.core.problems import all_problems, problem_ids
+
+        probs = all_problems()
+        problem = next(p for p in (probs[pid] for pid in problem_ids())
+                       if any(s.kind == "matmul" for s in p.segments))
+        seg = next(s for s in problem.segments if s.kind == "matmul")
+        d = dict(seg.dims)
+        cache = TuningCache(tune_dir)
+        cache.put(_record(
+            shape_bucket=tune.shape_bucket((d["m"], d["n"], d["k"])),
+            device_kind=tune.device_kind()))
+        hint = tune.seed_hint_for_problem(problem, dtype="fp32")
+        assert hint["tiles"][seg.name] == (64, 128, 128)
+
+    def test_seed_hint_empty_on_cold_cache(self, tune_dir):
+        from repro.core.problems import all_problems, problem_ids
+
+        probs = all_problems()
+        problem = probs[problem_ids()[0]]
+        hint = tune.seed_hint_for_problem(problem, dtype="fp32")
+        assert hint == {"tiles": {}, "blocks": {}, "chunks": {}}
+
+
+# ---------------------------------------------------------------------------
+# two-level compile cache
+# ---------------------------------------------------------------------------
+
+_DSL = ("gemm().with_dtype(input=bf16, acc=fp32, output=bf16)"
+        ".with_tile(m=128, n=128, k=256)")
+
+
+class TestCompileCache:
+    def test_disk_hit_after_memory_clear(self, tmp_path, monkeypatch):
+        build = str(tmp_path / "build")
+        monkeypatch.delenv("REPRO_COMPILE_CACHE_DIR", raising=False)
+        compiler.clear_cache(disk=False)
+        k1 = compiler.compile_dsl(_DSL, build_dir=build)
+        assert not k1.from_disk_cache
+        # clear ONLY the memory layer; the disk layer must serve the hit
+        compiler.clear_cache(disk=False)
+        k2 = compiler.compile_dsl(_DSL, build_dir=build)
+        assert k2.from_disk_cache
+        assert k2.source == k1.source
+        a = jnp.ones((64, 64), jnp.float32)
+        assert k2(a, a).shape == (64, 64)
+
+    def test_clear_cache_clears_disk_layer(self, tmp_path, monkeypatch):
+        build = str(tmp_path / "build")
+        monkeypatch.setenv("REPRO_COMPILE_CACHE_DIR", build)
+        compiler.clear_cache(disk=False)
+        compiler.compile_dsl(_DSL)
+        assert any(f.startswith("upallas_") for f in os.listdir(build))
+        compiler.clear_cache()
+        assert not any(f.startswith("upallas_") for f in os.listdir(build))
+        k = compiler.compile_dsl(_DSL)
+        assert not k.from_disk_cache
+
+    def test_memory_lru_bounded(self, monkeypatch):
+        monkeypatch.setenv("REPRO_COMPILE_CACHE_SIZE", "3")
+        monkeypatch.delenv("REPRO_COMPILE_CACHE_DIR", raising=False)
+        compiler.clear_cache(disk=False)
+        for m in (64, 128, 192, 256, 320):
+            compiler.compile_dsl(
+                f"gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+                f".with_tile(m={m}, n=128, k=128)")
+        assert len(compiler._CACHE) == 3
+
+    def test_corrupt_disk_entry_falls_back(self, tmp_path, monkeypatch):
+        build = str(tmp_path / "build")
+        monkeypatch.delenv("REPRO_COMPILE_CACHE_DIR", raising=False)
+        compiler.clear_cache(disk=False)
+        k1 = compiler.compile_dsl(_DSL, build_dir=build)
+        # corrupt the cached source; compile must regenerate, not crash
+        path = os.path.join(build, f"{k1.namespace}_pallas.py")
+        with open(path, "w") as f:
+            f.write("this is ( not python")
+        compiler.clear_cache(disk=False)
+        k2 = compiler.compile_dsl(_DSL, build_dir=build)
+        assert not k2.from_disk_cache
+        assert k2.source == k1.source
