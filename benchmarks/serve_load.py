@@ -1,0 +1,153 @@
+"""Serving load benchmark: replay a synthetic mixed workload against the
+engine in its different configurations and compare TTFT / throughput.
+
+Workload (deterministic, seeded):
+  * short chat turns       — small prompts, interactive SLO
+  * long-document prefill  — prompts several chunks long, batch SLO
+  * shared-prefix burst    — requests sharing one system-prompt prefix
+
+Engines compared:
+  token    token-at-a-time prompt streaming (the seed engine's behaviour)
+  chunked  chunked prefill, FIFO admission
+  sol      chunked prefill + SOL-capacity admission + prefix cache
+
+Assertions (exit non-zero on violation; CI runs ``--smoke``):
+  * chunked prefill strictly improves mean TTFT (in engine steps —
+    deterministic on any host) over token-at-a-time on the mixed workload,
+  * the shared-prefix burst gets nonzero prefix-cache hits and produces
+    bit-identical outputs to a cache-disabled run.
+
+    PYTHONPATH=src python benchmarks/serve_load.py --smoke
+"""
+
+import argparse
+import copy
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+from repro.serve import PrefixCache, Request, ServeEngine
+
+
+def build_workload(cfg, *, chunk: int, n_chat: int, n_doc: int,
+                   n_burst: int, seed: int = 0):
+    """Deterministic mixed workload; prompts sized in prefill chunks."""
+    rng = np.random.default_rng(seed)
+
+    def toks(n):
+        return list(map(int, rng.integers(1, cfg.vocab_size, n)))
+
+    reqs = []
+    rid = 0
+    for _ in range(n_chat):                      # short chat turns
+        reqs.append(Request(rid=rid, prompt=toks(4), max_new_tokens=6,
+                            slo="interactive"))
+        rid += 1
+    for _ in range(n_doc):                       # long-document prefill
+        reqs.append(Request(rid=rid, prompt=toks(3 * chunk),
+                            max_new_tokens=4, slo="batch"))
+        rid += 1
+    system = toks(2 * chunk)                     # shared-prefix burst
+    for _ in range(n_burst):
+        reqs.append(Request(rid=rid, prompt=system + toks(3),
+                            max_new_tokens=4, slo="batch"))
+        rid += 1
+    return reqs
+
+
+def run_engine(model, params, reqs, *, mode, scheduler, prefix, chunk,
+               max_batch, max_len):
+    reqs = copy.deepcopy(reqs)
+    engine = ServeEngine(
+        model, params, max_batch=max_batch, max_len=max_len,
+        prefill_mode=mode, chunk_size=chunk, scheduler=scheduler,
+        prefix_cache=PrefixCache(block=chunk) if prefix else None)
+    t0 = time.perf_counter()
+    engine.run(reqs, max_steps=100000)
+    wall = time.perf_counter() - t0
+    assert all(r.done for r in reqs), "benchmark workload must complete"
+    summ = engine.telemetry.summary()
+    return reqs, engine, summ, wall
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + assertions (CI mode)")
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    chunk = args.chunk
+    n = (3, 2, 3) if args.smoke else (6, 4, 6)
+    reqs = build_workload(cfg, chunk=chunk, n_chat=n[0], n_doc=n[1],
+                          n_burst=n[2])
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in reqs) + chunk
+
+    variants = [
+        ("token", dict(mode="token", scheduler="fifo", prefix=False)),
+        ("chunked", dict(mode="chunked", scheduler="fifo", prefix=False)),
+        ("sol", dict(mode="chunked", scheduler="sol", prefix=True)),
+    ]
+    results = {}
+    for name, kw in variants:
+        out, engine, summ, wall = run_engine(
+            model, params, reqs, chunk=chunk, max_batch=args.max_batch,
+            max_len=max_len, **kw)
+        results[name] = (out, engine, summ, wall)
+        print(f"{name:8s} steps={summ['steps']:5d} "
+              f"ttft_mean={summ['ttft_steps_mean']:7.1f} "
+              f"ttft_p95={summ['ttft_steps_p95']:7.1f} (steps) "
+              f"tok/s={summ['throughput_tok_s']:8.1f} "
+              f"util={summ['slot_utilization']:.2f} "
+              f"prefix_hits={engine.metrics['prefix_hits']} "
+              f"wall={wall:.1f}s")
+
+    tok_ttft = results["token"][2]["ttft_steps_mean"]
+    chk_ttft = results["chunked"][2]["ttft_steps_mean"]
+    sol_ttft = results["sol"][2]["ttft_steps_mean"]
+    print(f"\nchunked prefill TTFT: {chk_ttft:.1f} vs token-at-a-time "
+          f"{tok_ttft:.1f} steps ({tok_ttft / max(chk_ttft, 1e-9):.1f}x)")
+    assert chk_ttft < tok_ttft, \
+        f"chunked prefill must beat token-at-a-time TTFT " \
+        f"({chk_ttft} >= {tok_ttft})"
+    assert sol_ttft < tok_ttft, \
+        f"sol scheduler must beat token-at-a-time TTFT " \
+        f"({sol_ttft} >= {tok_ttft})"
+
+    # scheduling policy must never change what a request generates: chunk
+    # takes are always chunk-aligned, so per-request outputs are identical
+    # across fifo and sol (+ prefix cache) runs
+    mismatch = [r.rid for a, r in zip(results["chunked"][0],
+                                      results["sol"][0])
+                if a.out_tokens != r.out_tokens]
+    assert not mismatch, f"sol scheduling changed outputs for {mismatch}"
+
+    # shared-prefix burst: nonzero hits, outputs bit-identical without cache
+    burst_rids = {r.rid for r in reqs[-n[2]:]}
+    cache_on, eng_on, _, _ = run_engine(
+        model, params, reqs, chunk=chunk, max_batch=args.max_batch,
+        max_len=max_len, mode="chunked", scheduler="fifo", prefix=True)
+    cache_off = results["chunked"][0]
+    hits = eng_on.metrics["prefix_hits"]
+    assert hits > 0, "shared-prefix burst produced no prefix-cache hits"
+    mismatch = [r.rid for a, r in zip(cache_off, cache_on)
+                if a.out_tokens != r.out_tokens]
+    assert not mismatch, \
+        f"prefix cache changed outputs for rids {mismatch}"
+    print(f"prefix cache: {hits} hits on the shared-prefix burst "
+          f"({eng_on.metrics['prefix_tokens_reused']} prompt tokens "
+          f"reused), outputs bit-identical to cache-disabled run "
+          f"({len(burst_rids)} burst requests)")
+    print("serve_load: all assertions passed")
+
+
+if __name__ == "__main__":
+    main()

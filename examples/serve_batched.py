@@ -1,6 +1,7 @@
-"""End-to-end serving driver: continuous batching over a small model
-(the paper's kind is kernels/inference, so the e2e example serves batched
-requests through the decode path the dry-run lowers at scale).
+"""End-to-end serving driver: continuous batching with chunked prefill,
+prefix-cache reuse, and per-token streaming over a small model (the
+paper's kind is kernels/inference, so the e2e example serves batched
+requests through the same decode cell the dry-run lowers at scale).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -12,30 +13,47 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.model import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import PrefixCache, Request, ServeEngine
 
 cfg = get_arch("qwen2-0.5b").reduced()
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 n_params = sum(x.size for x in jax.tree.leaves(params))
 print(f"serving {cfg.name} ({n_params/1e3:.0f}k params) "
-      f"with 4-slot continuous batching")
+      f"with 4-slot continuous batching + chunked prefill")
 
-engine = ServeEngine(model, params, max_batch=4, max_len=64)
+engine = ServeEngine(model, params, max_batch=4, max_len=64,
+                     chunk_size=8, scheduler="sol",
+                     prefix_cache=PrefixCache(block=8))
 rng = np.random.default_rng(0)
-requests = [
-    Request(rid=i, prompt=list(map(int, rng.integers(0, cfg.vocab_size, 6))),
-            max_new_tokens=10, temperature=0.0 if i % 2 == 0 else 0.8)
-    for i in range(8)
-]
+system_prompt = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+requests = []
+for i in range(8):
+    tail = list(map(int, rng.integers(0, cfg.vocab_size, 4)))
+    requests.append(Request(
+        rid=i,
+        # even rids share a system prompt -> prefix-cache hits
+        prompt=(system_prompt + tail) if i % 2 == 0 else tail + tail,
+        max_new_tokens=10,
+        temperature=0.0 if i % 2 == 0 else 0.8,
+        slo="interactive" if i < 4 else "batch"))
+
 t0 = time.perf_counter()
-done = engine.run(requests)
+for ev in engine.stream(requests):        # tokens arrive as they are sampled
+    if ev.final:
+        print(f"  req {ev.rid} finished at step {ev.step}")
 dt = time.perf_counter() - t0
 
-for r in done:
+for r in requests:
     print(f"  req {r.rid}: {len(r.prompt)} prompt -> {r.out_tokens}")
 m = engine.metrics
 print(f"\n{m['requests_done']} requests, {m['tokens_generated']} tokens in "
       f"{dt:.1f}s ({m['tokens_generated']/dt:.1f} tok/s on CPU interpret)")
-print(f"decode steps: {m['steps']} (continuous batching packs "
-      f"{m['tokens_generated']/m['steps']:.2f} useful tokens/step)")
+print(f"steps: {m['steps']} (continuous batching packs "
+      f"{m['tokens_generated']/m['steps']:.2f} useful tokens/step); "
+      f"prefix hits: {m['prefix_hits']} "
+      f"({m['prefix_tokens_reused']} prompt tokens skipped)")
+s = engine.telemetry.summary()
+print(f"TTFT p50 {s['ttft_steps_p50']:.0f} steps / p95 "
+      f"{s['ttft_steps_p95']:.0f} steps; slot utilization "
+      f"{s['slot_utilization']:.2f}; by SLO: {s['ttft_steps_by_slo']}")

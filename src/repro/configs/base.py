@@ -59,6 +59,13 @@ class ModelConfig:
     tie_embeddings: bool = False
     notes: str = ""
     # ---- performance knobs (SS Perf hillclimb levers) -------------------
+    compute_dtype: str = "bf16"      # declared activation dtype: the one
+    #                                  source of truth keying tuning-cache
+    #                                  lookups and SOL capacity estimates.
+    #                                  Must match models.layers.COMPUTE_DTYPE
+    #                                  (build_model enforces this) until the
+    #                                  substrate grows per-config compute
+    #                                  dtypes.
     remat_policy: str = "full"       # full | dots | none
     ssd_chunk: int = 256             # Mamba-2 SSD chunk length
     ssd_impl: str = "parallel"       # parallel (all-chunks materialized) |

@@ -1,4 +1,8 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch qwen2-0.5b --smoke``."""
+"""Serving launcher.
+
+    python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+        --scheduler sol --prefix-cache --stream
+"""
 
 import argparse
 
@@ -7,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.model import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import PrefixCache, Request, ServeEngine
 
 
 def main():
@@ -16,6 +20,17 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prefill", choices=("chunked", "token"),
+                    default="chunked")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size (tokens per slot per step)")
+    ap.add_argument("--scheduler", choices=("fifo", "sol"), default="fifo")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse prefilled state across shared prefixes")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are sampled")
+    ap.add_argument("--slo", choices=("interactive", "batch"),
+                    default="batch", help="SLO class for the requests")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -23,16 +38,43 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, max_batch=4, max_len=64)
+    engine = ServeEngine(
+        model, params, max_batch=4, max_len=64,
+        prefill_mode=args.prefill, chunk_size=args.chunk,
+        scheduler=args.scheduler,
+        prefix_cache=PrefixCache(block=args.chunk) if args.prefix_cache
+        else None)
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=list(rng.integers(0, cfg.vocab_size, 5)),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    done = engine.run(reqs)
-    for r in done:
-        print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
+    shared = list(map(int, rng.integers(0, cfg.vocab_size, args.chunk)))
+    reqs = []
+    for i in range(args.requests):
+        # half the requests share a "system prompt" prefix so --prefix-cache
+        # has something to hit
+        tail = list(map(int, rng.integers(0, cfg.vocab_size, 5)))
+        prompt = (shared + tail) if i % 2 == 0 else \
+            list(map(int, rng.integers(0, cfg.vocab_size, 5)))
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=args.max_new, slo=args.slo))
+
+    if args.stream:
+        for ev in engine.stream(reqs):
+            flag = " <end>" if ev.final else ""
+            print(f"  [step {ev.step:3d}] req {ev.rid} "
+                  f"token[{ev.index}] = {ev.token}{flag}")
+    else:
+        engine.run(reqs)
+    for r in reqs:
+        state = "done" if r.done else ("truncated" if r.truncated else "?")
+        print(f"req {r.rid} ({state}): {len(r.prompt)}-token prompt "
+              f"-> {r.out_tokens}")
     print("metrics:", engine.metrics)
+    summ = engine.telemetry.summary()
+    print(f"telemetry: ttft p50={summ['ttft_steps_p50']:.1f} "
+          f"p95={summ['ttft_steps_p95']:.1f} steps, "
+          f"util={summ['slot_utilization']:.2f}, "
+          f"prefix hit rate={summ['prefix_hit_rate']:.2f}")
+    if engine.prefix_cache is not None:
+        print("prefix cache:", engine.prefix_cache.stats())
 
 
 if __name__ == "__main__":

@@ -220,11 +220,16 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
                     positions: Optional[jax.Array] = None,
                     kv_cache: Optional[Dict] = None,
                     xattn_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
-                    flash_threshold: int = 2048, chunk_kv: int = 512):
+                    flash_threshold: int = 2048, chunk_kv: int = 512,
+                    token_counts: Optional[jax.Array] = None):
     """Self- or cross-attention with optional KV cache.
 
     kv_cache: {"k": (B, Smax, n_kv, D), "v": ..., "pos": scalar} for decode.
     xattn_kv: precomputed (k, v) from an encoder (cross-attention).
+    token_counts: (B,) chunked-prefill valid-prefix lengths — row b of the
+        sq new tokens contributes only its first token_counts[b] tokens to
+        the cache; the rest are padding (masked from attention, never
+        written).  Requires kv_cache.
     Returns (out, new_cache).
     """
     b, sq, _ = x.shape
@@ -243,6 +248,65 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
         out = dense_attention(q, _repeat_kv(k, n_heads // k.shape[2]),
                               _repeat_kv(v, n_heads // v.shape[2]),
                               causal=False)
+    elif kv_cache is not None and token_counts is not None:
+        # chunked prefill: sq new tokens land in the cache at once, with a
+        # per-slot valid prefix.  Fresh K/V stay out of the cache during
+        # attention (concat columns: [cached history | chunk]) so partial
+        # chunks can't clobber live rolling-window entries, then the valid
+        # prefix is written back; padding rows scatter to index s_max and
+        # are dropped.
+        pos = kv_cache["pos"]
+        if pos.ndim == 0:
+            pos = jnp.full((b,), pos)
+        counts = token_counts.astype(pos.dtype)
+        q_abs = pos[:, None] + jnp.arange(sq)[None, :]          # (B, sq)
+        q = rope(q, q_abs, rope_theta)
+        k = rope(k, q_abs, rope_theta)
+        s_max = kv_cache["k"].shape[1]
+        slot_idx = jnp.arange(s_max)
+        if window:
+            p_prev = pos - 1          # newest absolute position cached
+            anchor = (p_prev % s_max)[:, None]
+            base = (p_prev[:, None] - anchor)
+            kv_abs = jnp.where(slot_idx[None, :] <= anchor,
+                               base + slot_idx[None, :],
+                               base - s_max + slot_idx[None, :])  # (B,s_max)
+            valid_old = (kv_abs[:, None, :] >= 0) \
+                & (kv_abs[:, None, :] > q_abs[:, :, None] - window)
+        else:
+            valid_old = jnp.broadcast_to(
+                slot_idx[None, None, :] < pos[:, None, None],
+                (b, sq, s_max))
+        i_idx = jnp.arange(sq)
+        valid_new = (i_idx[None, :, None] >= i_idx[None, None, :]) \
+            & (i_idx[None, None, :] < counts[:, None, None])
+        if window:
+            valid_new = valid_new \
+                & (i_idx[None, :, None] - i_idx[None, None, :] < window)
+        n_rep = n_heads // n_kv
+        kk = jnp.concatenate(
+            [_repeat_kv(kv_cache["k"].astype(COMPUTE_DTYPE), n_rep),
+             _repeat_kv(k, n_rep)], axis=1)
+        vv = jnp.concatenate(
+            [_repeat_kv(kv_cache["v"].astype(COMPUTE_DTYPE), n_rep),
+             _repeat_kv(v, n_rep)], axis=1)
+        valid = jnp.concatenate([valid_old, valid_new], axis=2)
+        scale = 1.0 / math.sqrt(head_dim)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(vv.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p, vv,
+                         preferred_element_type=jnp.float32).astype(q.dtype)
+        valid_q = i_idx[None, :] < counts[:, None]               # (B, sq)
+        write_idx = jnp.where(
+            valid_q, (q_abs % s_max) if window else q_abs, s_max)
+        b_idx = jnp.arange(b)[:, None]
+        ck = kv_cache["k"].at[b_idx, write_idx].set(
+            k.astype(kv_cache["k"].dtype), mode="drop")
+        cv = kv_cache["v"].at[b_idx, write_idx].set(
+            v.astype(kv_cache["v"].dtype), mode="drop")
+        new_cache = {"k": ck, "v": cv, "pos": pos + counts}
     elif kv_cache is not None:
         pos = kv_cache["pos"]                   # (B,) per-slot positions
         if pos.ndim == 0:

@@ -54,7 +54,8 @@ def _tf_layer_init(rng, cfg: ModelConfig, cross: bool = False) -> Dict:
 
 
 def _tf_layer_apply(params, x, cfg: ModelConfig, *, causal=True,
-                    kv_cache=None, xattn_kv=None, positions=None):
+                    kv_cache=None, xattn_kv=None, positions=None,
+                    token_counts=None):
     aux = jnp.zeros((), jnp.float32)
     h, new_cache = attention_apply(
         params["attn"], rmsnorm(params["norm1"], x, cfg.norm_eps),
@@ -62,7 +63,7 @@ def _tf_layer_apply(params, x, cfg: ModelConfig, *, causal=True,
         head_dim=cfg.resolved_head_dim, causal=causal,
         window=cfg.sliding_window, rope_theta=cfg.rope_theta,
         kv_cache=kv_cache, xattn_kv=xattn_kv, positions=positions,
-        chunk_kv=cfg.attn_chunk_kv)
+        chunk_kv=cfg.attn_chunk_kv, token_counts=token_counts)
     x = x + h
     z = rmsnorm(params["norm2"], x, cfg.norm_eps)
     if "moe" in params:
@@ -84,12 +85,14 @@ def _ssm_layer_init(rng, cfg: ModelConfig) -> Dict:
     }
 
 
-def _ssm_layer_apply(params, x, cfg: ModelConfig, state=None):
+def _ssm_layer_apply(params, x, cfg: ModelConfig, state=None,
+                     token_mask=None):
     h, new_state = mamba2_apply(
         params["mamba"], rmsnorm(params["norm"], x, cfg.norm_eps),
         d_inner=cfg.d_inner, d_state=cfg.ssm_state,
         head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel,
-        chunk=cfg.ssd_chunk, impl=cfg.ssd_impl, state=state)
+        chunk=cfg.ssd_chunk, impl=cfg.ssd_impl, state=state,
+        token_mask=token_mask)
     return x + h, new_state
 
 
@@ -427,6 +430,139 @@ class Model:
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         return self.logits_of(params, x), new_cache
 
+    # ---------------- chunked prefill --------------------------------------
+    def prefill_step(self, params: Dict, cache: Dict, tokens: jax.Array,
+                     counts: jax.Array):
+        """tokens: (B, C) prompt chunk; counts: (B,) valid prefix lengths.
+
+        Writes each slot's KV/SSM state for its first ``counts[b]`` tokens
+        in ONE forward (instead of ``counts[b]`` decode steps) and returns
+        ``(logits (B, C, V), new_cache)``.  A slot with ``counts[b] == 0``
+        is untouched (its cache state and positions are preserved exactly);
+        rows at or past ``counts[b]`` are padding whose logits are garbage.
+        The last valid row ``logits[b, counts[b]-1]`` is the next-token
+        distribution, so serving samples the first output token directly
+        from the prefill forward.
+        """
+        cfg = self.cfg
+        b, c = tokens.shape
+        counts = counts.astype(jnp.int32)
+        token_mask = jnp.arange(c)[None, :] < counts[:, None]
+        x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+
+        if cfg.family in ("dense", "moe"):
+            def body(x, xs):
+                lp, lc = xs
+                y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                           kv_cache=lc, token_counts=counts)
+                return y, nc
+            x, new_layer_cache = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": new_layer_cache}
+        elif cfg.family == "ssm":
+            def body(x, xs):
+                lp, st = xs
+                y, ns = _ssm_layer_apply(lp, x, cfg, state=st,
+                                         token_mask=token_mask)
+                return y, ns
+            x, new_states = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": new_states}
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def group(x, xs):
+                gp, gstate, gkv = xs
+
+                def inner(x, ys):
+                    lp, st = ys
+                    y, ns = _ssm_layer_apply(lp, x, cfg, state=st,
+                                             token_mask=token_mask)
+                    return y, ns
+                x, new_gstate = jax.lax.scan(inner, x, (gp, gstate))
+                y, nkv, _ = _tf_layer_apply(shared, x, cfg, causal=True,
+                                            kv_cache=gkv, token_counts=counts)
+                return y, (new_gstate, nkv)
+            x, (new_ssm, new_shared) = jax.lax.scan(
+                group, x, (params["ssm_layers"], cache["ssm"],
+                           cache["shared"]))
+            new_cache = {"ssm": new_ssm, "shared": new_shared}
+        elif cfg.family == "audio":
+            def body(x, xs):
+                lp, xp, lc, ck, cv = xs
+                y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                           kv_cache=lc, token_counts=counts)
+                h, _ = attention_apply(
+                    xp["attn"], rmsnorm(xp["norm"], y, cfg.norm_eps),
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, xattn_kv=(ck, cv))
+                return y + h, nc
+            x, new_layer_cache = jax.lax.scan(
+                body, x, (params["dec_layers"], params["dec_xattn"],
+                          cache["layers"], cache["cross_k"],
+                          cache["cross_v"]))
+            new_cache = dict(cache)
+            new_cache["layers"] = new_layer_cache
+        elif cfg.family == "vlm":
+            def group(x, xs):
+                sp, cp, sc, ck, cv = xs
+
+                def inner(x, ys):
+                    lp, lc = ys
+                    y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                               kv_cache=lc,
+                                               token_counts=counts)
+                    return y, nc
+                x, new_sc = jax.lax.scan(inner, x, (sp, sc))
+                h, _ = attention_apply(
+                    cp["attn"], rmsnorm(cp["norm1"], x, cfg.norm_eps),
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, xattn_kv=(ck, cv))
+                x = x + h
+                x = x + mlp_apply(cp["mlp"],
+                                  rmsnorm(cp["norm2"], x, cfg.norm_eps),
+                                  cfg.act)
+                return x, new_sc
+            x, new_self = jax.lax.scan(
+                group, x, (params["self_layers"], params["cross_layers"],
+                           cache["self"], cache["cross_k"],
+                           cache["cross_v"]))
+            new_cache = dict(cache)
+            new_cache["self"] = new_self
+        else:
+            raise KeyError(cfg.family)
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.logits_of(params, x), new_cache
+
+    def prefill(self, params: Dict, tokens: jax.Array, max_len: int,
+                lengths: Optional[jax.Array] = None):
+        """Full-prompt prefill: fresh cache + one ``prefill_step`` over the
+        whole (possibly ragged) batch.  Returns (last_logits (B,V), cache).
+        """
+        b, s = tokens.shape
+        cache = self.init_cache(b, max_len)
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        logits, cache = self.prefill_step(params, cache, tokens, lengths)
+        last = jnp.take_along_axis(
+            logits, (lengths.astype(jnp.int32) - 1)[:, None, None],
+            axis=1)[:, 0]
+        return last, cache
+
 
 def build_model(cfg: ModelConfig) -> Model:
+    declared = cfg.compute_dtype.lower()
+    actual = jnp.dtype(COMPUTE_DTYPE).name
+    if declared not in (actual, {"bfloat16": "bf16", "float32": "fp32",
+                                 "float16": "fp16"}.get(actual)):
+        # the substrate computes in the fixed layers.COMPUTE_DTYPE; a config
+        # declaring anything else would silently key tuning/capacity lookups
+        # with a dtype the kernels never run in
+        raise NotImplementedError(
+            f"cfg.compute_dtype={cfg.compute_dtype!r} but the model "
+            f"substrate computes in {actual}; per-config compute dtypes "
+            f"are not implemented yet")
     return Model(cfg)

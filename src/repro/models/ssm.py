@@ -48,7 +48,8 @@ def _causal_conv(x: jax.Array, w: jax.Array,
     return out.astype(COMPUTE_DTYPE), new_state
 
 
-def _ssd_chunked(xbar, da, bmat, cmat, chunk: int, decay_dtype=jnp.float32):
+def _ssd_chunked(xbar, da, bmat, cmat, chunk: int, decay_dtype=jnp.float32,
+                 initial_state=None, return_state: bool = False):
     """Chunked SSD (see kernels/ssd_scan.py for the derivation).
 
     xbar: (B,S,H,P)  da: (B,S,H)  bmat,cmat: (B,S,N)  ->  y: (B,S,H,P)
@@ -56,6 +57,10 @@ def _ssd_chunked(xbar, da, bmat, cmat, chunk: int, decay_dtype=jnp.float32):
     ``decay_dtype=bf16`` halves the dominant HBM traffic (the
     (B,nc,chunk,chunk,H) decay tensors) at ~1e-3 relative error — the
     SS Perf ``ssd_impl=parallel_bf16`` lever.
+
+    ``initial_state`` (B,H,N,P) seeds the inter-chunk scan (chunked-prefill
+    resume); with ``return_state`` the post-sequence state is also returned
+    so serving can carry it across prefill chunks.
     """
     b, s, h, p = xbar.shape
     n = bmat.shape[-1]
@@ -93,18 +98,23 @@ def _ssd_chunked(xbar, da, bmat, cmat, chunk: int, decay_dtype=jnp.float32):
         s_new = jnp.exp(tot_g)[:, :, None, None] * s_prev + st_g
         return s_new, s_prev
 
-    s0 = jnp.zeros((b, h, n, p), jnp.float32)
-    _, s_prevs = jax.lax.scan(
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    s_final, s_prevs = jax.lax.scan(
         step, s0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(states, 1, 0)))
     s_prevs = jnp.moveaxis(s_prevs, 0, 1)               # (b,nc,h,n,p)
 
     y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp",
                          cc, jnp.exp(cum), s_prevs)
     y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)
-    return y[:, :s].astype(COMPUTE_DTYPE)
+    y = y[:, :s].astype(COMPUTE_DTYPE)
+    if return_state:
+        return y, s_final
+    return y
 
 
-def _ssd_chunk_scan(xbar, da, bmat, cmat, chunk: int):
+def _ssd_chunk_scan(xbar, da, bmat, cmat, chunk: int,
+                    initial_state=None, return_state: bool = False):
     """Sequential-chunk SSD: one chunk's decay tile lives at a time.
 
     Identical math to ``_ssd_chunked`` but the (chunk, chunk, heads) decay
@@ -146,19 +156,27 @@ def _ssd_chunk_scan(xbar, da, bmat, cmat, chunk: int):
             + jnp.einsum("bjn,bjh,bjhp->bhnp", bg, d2e, xg)
         return s_new, (y_intra.astype(jnp.float32) + y_inter)
 
-    s0 = jnp.zeros((b, h, n, p), jnp.float32)
-    _, ys = jax.lax.scan(step, s0, (xc, dac, bc, cc))
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    s_final, ys = jax.lax.scan(step, s0, (xc, dac, bc, cc))
     y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, p)
-    return y[:, :s].astype(COMPUTE_DTYPE)
+    y = y[:, :s].astype(COMPUTE_DTYPE)
+    if return_state:
+        return y, s_final
+    return y
 
 
 def mamba2_apply(params: Dict, x: jax.Array, *, d_inner: int, d_state: int,
                  head_dim: int, conv_kernel: int = 4, chunk: int = 256,
                  impl: str = "parallel",
-                 state: Optional[Dict] = None):
+                 state: Optional[Dict] = None,
+                 token_mask: Optional[jax.Array] = None):
     """x: (B, S, D) -> (y, new_state).
 
     state (decode): {"conv": (B, K-1, C), "ssd": (B, H, N, P)}.
+    token_mask (chunked prefill): (B, S) valid-prefix mask — masked tokens
+    leave the carried state untouched (decay 1, zero input) so ragged
+    prompt chunks can share one padded forward.  Requires ``state``.
     """
     b, s, d = x.shape
     h = d_inner // head_dim
@@ -195,6 +213,35 @@ def mamba2_apply(params: Dict, x: jax.Array, *, d_inner: int, d_state: int,
         else:
             y = _ssd_chunked(xbar, da, bmat, cmat, chunk)
         new_ssd = None
+    elif token_mask is not None or s > 1:
+        # chunked prefill resume: run the chunked form seeded with the
+        # carried state; masked (padding) tokens get decay 1 / input 0 so
+        # they are exact no-ops on the state.
+        if token_mask is not None:
+            m = token_mask.astype(jnp.float32)
+            da = da * m[:, :, None]
+            xbar = xbar * m[:, :, None, None].astype(xbar.dtype)
+            if conv_kernel > 1:
+                # ragged chunks: the conv state is the last K-1 *valid*
+                # inputs per slot, not the last K-1 rows of the padded chunk
+                xp = jnp.concatenate(
+                    [state["conv"].astype(conv_in.dtype), conv_in], axis=1)
+                counts = jnp.sum(token_mask.astype(jnp.int32), axis=1)
+                gi = counts[:, None] + jnp.arange(conv_kernel - 1)[None, :]
+                new_conv = jnp.take_along_axis(xp, gi[:, :, None], axis=1)
+        eff_chunk = max(1, min(chunk, s))
+        if impl == "scan":
+            y, new_ssd = _ssd_chunk_scan(
+                xbar, da, bmat, cmat, eff_chunk,
+                initial_state=state["ssd"], return_state=True)
+        elif impl == "parallel_bf16":
+            y, new_ssd = _ssd_chunked(
+                xbar, da, bmat, cmat, eff_chunk, decay_dtype=COMPUTE_DTYPE,
+                initial_state=state["ssd"], return_state=True)
+        else:
+            y, new_ssd = _ssd_chunked(
+                xbar, da, bmat, cmat, eff_chunk,
+                initial_state=state["ssd"], return_state=True)
     else:
         # recurrent decode step (s == 1)
         s_prev = state["ssd"]                          # (b,h,n,p)

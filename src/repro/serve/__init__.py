@@ -1,0 +1,27 @@
+"""SOL-aware serving subsystem.
+
+  engine.py        continuous batching over one ``model.prefill_step`` call
+  prefill.py       chunked-prefill planning (chunk budget, ragged batches)
+  prefix_cache.py  token-prefix reuse of prefilled KV/SSM slot state
+  scheduler.py     SLO classes, FIFO/priority admission, SOL capacity model
+  streaming.py     per-token events, callbacks, iterator API
+  telemetry.py     TTFT / per-token latency percentiles, utilization
+"""
+
+from .engine import Request, ServeEngine, resolve_tuned_decode_cfg
+from .prefill import ChunkedPrefillPlanner, PrefillPlan, SlotState
+from .prefix_cache import PrefixCache, extract_slot, insert_slot
+from .scheduler import (SLO_CLASSES, EngineView, FIFOScheduler, SLOClass,
+                        SOLCapacityModel, SOLScheduler, get_slo,
+                        make_scheduler)
+from .streaming import StreamEvent, StreamMux, collect_streams, stream_tokens
+from .telemetry import ServeTelemetry, percentile
+
+__all__ = [
+    "ChunkedPrefillPlanner", "EngineView", "FIFOScheduler", "PrefillPlan",
+    "PrefixCache", "Request", "SLOClass", "SLO_CLASSES", "SOLCapacityModel",
+    "SOLScheduler", "ServeEngine", "ServeTelemetry", "SlotState",
+    "StreamEvent", "StreamMux", "collect_streams", "extract_slot",
+    "get_slo", "insert_slot", "make_scheduler", "percentile",
+    "resolve_tuned_decode_cfg", "stream_tokens",
+]

@@ -1,28 +1,45 @@
-"""Batched serving engine: continuous batching over the jit decode step.
+"""Batched serving engine: continuous batching over one jit step.
 
 Production-shaped, CPU-scale:
-  * one shared KV cache with static shapes and *per-slot* positions — the
-    same decode cell the multi-pod dry-run lowers,
-  * continuous batching: every decode step advances all active slots; a new
-    request takes a free slot, streams its prompt (teacher-forced prefill),
-    then samples; finished requests release their slot immediately,
+  * one shared KV/SSM cache with static shapes and *per-slot* positions —
+    the same decode cell the multi-pod dry-run lowers,
+  * continuous batching where decode is the 1-token special case of
+    chunked prefill: every step issues ONE ``model.prefill_step`` over the
+    whole slot batch — started slots advance a token, prefilling slots
+    ingest a prompt chunk, free slots are exact no-ops,
+  * chunked prefill writes a slot's KV/SSM state in one forward instead of
+    N decode steps, so TTFT drops by ~the prompt length in steps; a
+    scheduler-controlled chunk budget keeps long prompts from starving
+    co-batched decoders,
+  * admission via pluggable schedulers (FIFO, or SOL-capacity-gated —
+    see ``scheduler.py``), prefix-cache reuse (``prefix_cache.py``),
+    per-token streaming (``streaming.py``), and TTFT/latency telemetry
+    (``telemetry.py``),
   * slot reset = zeroing that slot's cache positions (old entries are
     masked out by the validity mask, so no cache clearing is needed),
-  * greedy or temperature sampling.
+  * greedy or temperature sampling, batched in one device call per step.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from functools import partial
+from typing import Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import tune
+from ..core.sol.hardware import canon_dtype
 from ..models.model import Model
+from .prefill import ChunkedPrefillPlanner, SlotState
+from .prefix_cache import PrefixCache, extract_slot, insert_slot
+from .scheduler import EngineView, FIFOScheduler, make_scheduler
+from .streaming import StreamEvent, StreamMux
+from .telemetry import ServeTelemetry
 
 
 def resolve_tuned_decode_cfg(model: Model, max_len: int):
@@ -31,19 +48,22 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int):
     Consults the persistent autotuning cache for the engine's actual
     decode/prefill shapes: a tuned attention (q, kv) block informs the XLA
     flash-attention KV chunk, and a tuned SSD chunk replaces the config
-    default.  Returns (new_cfg, overrides-dict); on a cold cache the config
-    is returned unchanged and the dict is empty.
+    default.  Lookups are keyed by the model's own compute dtype (an fp32
+    model must never read bf16-tuned entries).  Returns (new_cfg,
+    overrides-dict); on a cold cache the config is returned unchanged and
+    the dict is empty.
     """
     cfg = model.cfg
+    dtype_key = canon_dtype(cfg.compute_dtype)
     overrides = {}
     if cfg.num_heads:
         block = tune.tuned_attention_block(
-            max_len, max_len, cfg.resolved_head_dim, "bf16")
+            max_len, max_len, cfg.resolved_head_dim, dtype_key)
         if block is not None and block[1] != cfg.attn_chunk_kv:
             overrides["attn_chunk_kv"] = block[1]
     if cfg.ssm_state:
         chunk = tune.tuned_ssd_chunk(max_len, cfg.ssm_state,
-                                     cfg.ssm_head_dim, "bf16")
+                                     cfg.ssm_head_dim, dtype_key)
         if chunk is not None and chunk != cfg.ssd_chunk:
             overrides["ssd_chunk"] = chunk
     if overrides:
@@ -57,15 +77,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    slo: str = "batch"
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
-
-
-@dataclass
-class _Slot:
-    req: Request
-    feed: List[int]              # prompt tokens not yet consumed
-    started: bool = False        # past prefill
+    truncated: bool = False
 
 
 def _reset_slot_positions(cache, slot: int):
@@ -84,9 +99,37 @@ def _reset_slot_positions(cache, slot: int):
     return jax.tree_util.tree_map_with_path(reset, cache)
 
 
+@partial(jax.jit, static_argnames=("vocab",))
+def _sample_batch(logits, last_idx, temps, key, *, vocab: int):
+    """Sample every slot's next token in one device call.
+
+    logits: (B, C, V); last_idx: (B,) row to sample per slot;
+    temps: (B,) 0 = greedy.  Returns (B,) int32 tokens.
+    """
+    rows = jnp.take_along_axis(
+        logits, last_idx[:, None, None], axis=1)[:, 0, :vocab]
+    greedy = jnp.argmax(rows, axis=-1)
+    keys = jax.random.split(key, rows.shape[0])
+    scaled = rows.astype(jnp.float32) / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+
 class ServeEngine:
+    """Continuous-batching engine over ``model.prefill_step``.
+
+    prefill_mode: "chunked" (default) ingests up to ``chunk_size`` prompt
+    tokens per slot per step; "token" is the seed engine's one-prompt-
+    token-per-step baseline.
+    scheduler: a scheduler instance, or a name ("fifo" | "sol").
+    prefix_cache: a ``PrefixCache``, True for a default one, or None/False.
+    """
+
     def __init__(self, model: Model, params, *, max_batch: int = 4,
-                 max_len: int = 256, seed: int = 0):
+                 max_len: int = 256, seed: int = 0,
+                 prefill_mode: str = "chunked", chunk_size: int = 16,
+                 scheduler=None, prefix_cache=None,
+                 telemetry: Optional[ServeTelemetry] = None):
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
             model, max_len)
         if self.tuned_overrides:
@@ -96,11 +139,36 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = model.init_cache(max_batch, max_len)
-        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self.slots: List[Optional[SlotState]] = [None] * max_batch
         self._rng = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(model.decode_step)
-        self.metrics = {"steps": 0, "tokens_generated": 0,
-                        "prefill_tokens": 0, "requests_done": 0}
+        self._step_fn = jax.jit(model.prefill_step)
+        # a chunk must fit the KV ring: a sliding-window cache holds
+        # min(max_len, window) rows, and two tokens of one chunk must never
+        # scatter to the same ring slot
+        ring = min(max_len, model.cfg.sliding_window) \
+            if model.cfg.sliding_window else max_len
+        chunk_size = min(chunk_size, ring)
+        self.planner = ChunkedPrefillPlanner(chunk_size=chunk_size,
+                                             mode=prefill_mode)
+        if scheduler is None:
+            scheduler = FIFOScheduler()
+        elif isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, model.cfg,
+                                       chunk_size=chunk_size)
+        self.scheduler = scheduler
+        if prefix_cache is True:
+            prefix_cache = PrefixCache(block=chunk_size)
+        self.prefix_cache: Optional[PrefixCache] = (
+            prefix_cache if isinstance(prefix_cache, PrefixCache) else None)
+        self.telemetry = telemetry if telemetry is not None \
+            else ServeTelemetry()
+        self.mux = StreamMux()
+        self.step_count = 0
+        self.metrics: Dict[str, int] = {
+            "steps": 0, "tokens_generated": 0, "prefill_tokens": 0,
+            "requests_done": 0, "truncated": 0, "prefill_chunks": 0,
+            "prefix_hits": 0, "prefix_tokens_reused": 0,
+        }
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -109,58 +177,208 @@ class ServeEngine:
                 return i
         return None
 
+    def _view(self) -> EngineView:
+        decode_positions, decode_slos = [], []
+        backlog = 0
+        for s in self.slots:
+            if s is None:
+                continue
+            if s.started:
+                decode_positions.append(s.pos)
+                decode_slos.append(s.req.slo)
+            else:
+                backlog += len(s.feed)
+        return EngineView(
+            free_slots=sum(1 for s in self.slots if s is None),
+            num_slots=self.max_batch,
+            decode_positions=decode_positions,
+            decode_slos=decode_slos,
+            prefill_backlog=backlog,
+            step=self.step_count)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, slo: Optional[str] = None) -> None:
+        """Enqueue a request; the scheduler decides when it starts."""
+        if not req.prompt:
+            raise ValueError(f"req {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"req {req.rid}: prompt ({len(req.prompt)}) + max_new "
+                f"({req.max_new_tokens}) exceeds max_len ({self.max_len})")
+        if slo is not None:
+            req.slo = slo
+        if self.prefix_cache is not None:
+            self.prefix_cache.register(req.prompt)
+        self.scheduler.submit(req, slo=req.slo, step=self.step_count)
+        self.telemetry.on_submit(req.rid, self.step_count, slo=req.slo,
+                                 prompt_tokens=len(req.prompt))
+
     def add_request(self, req: Request) -> bool:
+        """Seed-engine compat: place immediately if a slot is free."""
         i = self._free_slot()
         if i is None:
             return False
-        self.cache = _reset_slot_positions(self.cache, i)
-        self.slots[i] = _Slot(req=req, feed=list(req.prompt))
-        self.metrics["prefill_tokens"] += len(req.prompt)
+        if self.prefix_cache is not None:
+            self.prefix_cache.register(req.prompt)
+        self.telemetry.on_submit(req.rid, self.step_count, slo=req.slo,
+                                 prompt_tokens=len(req.prompt))
+        self._place(req, i)
         return True
 
-    def _sample(self, logits_row: jax.Array, temperature: float) -> int:
-        vocab = self.model.cfg.vocab_size
-        row = logits_row[:vocab]
-        if temperature <= 0:
-            return int(jnp.argmax(row))
-        self._rng, k = jax.random.split(self._rng)
-        return int(jax.random.categorical(k, row / temperature))
+    def _place(self, req: Request, slot: int) -> None:
+        self.cache = _reset_slot_positions(self.cache, slot)
+        feed = list(req.prompt)
+        pos = 0
+        reused = 0
+        if self.prefix_cache is not None:
+            n, snap = self.prefix_cache.match(req.prompt)
+            self.telemetry.on_prefix_lookup(hit=n > 0)
+            if n:
+                self.cache = insert_slot(self.cache, slot, snap)
+                feed = list(req.prompt[n:])
+                pos = n
+                reused = n
+                self.metrics["prefix_hits"] += 1
+                self.metrics["prefix_tokens_reused"] += n
+        self.slots[slot] = SlotState(req=req, feed=feed, pos=pos,
+                                     prompt_pos=pos)
+        self.metrics["prefill_tokens"] += len(feed)
+        self.telemetry.on_admit(req.rid, self.step_count,
+                                prefix_tokens_reused=reused)
+
+    def _should_defer(self, req: Request) -> bool:
+        """Prefix-aware admission: hold a request back while another slot
+        is mid-prefill over a (chunk-aligned) prefix they share — the
+        donor's snapshot will land shortly and turn this request's prefill
+        into a cache hit instead of duplicate work.  Deferral always has an
+        actively-prefilling donor, so it cannot deadlock.
+        """
+        pc = self.prefix_cache
+        if pc is None:
+            return False
+        have = pc.peek_len(req.prompt)
+        for s in self.slots:
+            if s is None or s.started:
+                continue
+            shared = 0
+            for a, c in zip(s.req.prompt, req.prompt):
+                if a != c:
+                    break
+                shared += 1
+            aligned = (min(shared, len(req.prompt) - 1)
+                       // pc.block) * pc.block
+            if aligned > have and s.prompt_pos < aligned:
+                return True
+        return False
+
+    def _admit(self) -> None:
+        deferred = []
+        for entry in self.scheduler.next_admissions(self._view()):
+            i = self._free_slot()
+            if i is None or self._should_defer(entry.req):
+                deferred.append(entry)
+                continue
+            self._place(entry.req, i)
+        for entry in reversed(deferred):
+            self.scheduler.requeue_front(entry)
 
     # ------------------------------------------------------------------
-    def step(self) -> None:
-        """One decode step over all slots (idle slots feed a pad token)."""
+    def step(self) -> List[StreamEvent]:
+        """One engine step: admit, run one prefill/decode forward, sample."""
+        t0 = time.perf_counter()
+        self._admit()
         if not any(self.slots):
-            return
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for i, s in enumerate(self.slots):
-            if s is None:
-                continue
-            if s.feed:
-                tokens[i, 0] = s.feed.pop(0)
-                s.started = not s.feed     # last prompt token => sample next
-            else:
-                tokens[i, 0] = s.req.out_tokens[-1]
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens))
+            return []
+        budget = self.scheduler.prefill_budget(self._view())
+        plan = self.planner.plan(self.slots, budget=budget)
+        if not plan.any_work:
+            return []
+        logits, self.cache = self._step_fn(
+            self.params, self.cache, jnp.asarray(plan.tokens),
+            jnp.asarray(plan.counts))
+        self.step_count += 1
         self.metrics["steps"] += 1
-        for i, s in enumerate(self.slots):
-            if s is None or not s.started:
-                continue
-            nxt = self._sample(logits[i, -1], s.req.temperature)
-            s.req.out_tokens.append(nxt)
-            self.metrics["tokens_generated"] += 1
-            if len(s.req.out_tokens) >= s.req.max_new_tokens:
-                s.req.done = True
-                self.slots[i] = None        # release slot immediately
-                self.metrics["requests_done"] += 1
+        if plan.prefill_tokens:
+            self.metrics["prefill_chunks"] += len(plan.consumed)
 
+        # prefix-cache snapshots at chunk-aligned prompt offsets — but only
+        # for prefixes >= 2 registered requests share, so unique prompts
+        # never pay the host transfer or churn the LRU
+        if self.prefix_cache is not None:
+            for i, took in plan.consumed.items():
+                s = self.slots[i]
+                if s is None or took <= 0:
+                    continue
+                prefix = s.req.prompt[:s.prompt_pos]
+                if s.prompt_pos % self.prefix_cache.block == 0 \
+                        and self.prefix_cache.wants(prefix):
+                    self.prefix_cache.put(prefix,
+                                          extract_slot(self.cache, i))
+
+        events: List[StreamEvent] = []
+        if plan.sample_rows:
+            last_idx = np.zeros((self.max_batch,), np.int32)
+            temps = np.zeros((self.max_batch,), np.float32)
+            for i, row in plan.sample_rows:
+                last_idx[i] = row
+                temps[i] = self.slots[i].req.temperature
+            self._rng, key = jax.random.split(self._rng)
+            toks = np.asarray(_sample_batch(
+                logits, jnp.asarray(last_idx), jnp.asarray(temps), key,
+                vocab=self.model.cfg.vocab_size))
+            for i, _row in plan.sample_rows:
+                s = self.slots[i]
+                req = s.req
+                req.out_tokens.append(int(toks[i]))
+                self.metrics["tokens_generated"] += 1
+                self.telemetry.on_token(req.rid, self.step_count)
+                final = len(req.out_tokens) >= req.max_new_tokens
+                events.append(StreamEvent(
+                    rid=req.rid, token=int(toks[i]),
+                    index=len(req.out_tokens) - 1,
+                    step=self.step_count, final=final))
+                if final:
+                    req.done = True
+                    self.slots[i] = None        # release slot immediately
+                    self.metrics["requests_done"] += 1
+                    self.telemetry.on_finish(req.rid, self.step_count)
+
+        active = sum(1 for s in self.slots if s is not None)
+        self.telemetry.on_step(
+            queue_depth=self.scheduler.pending(), active_slots=active,
+            num_slots=self.max_batch, seconds=time.perf_counter() - t0)
+        self.mux.emit(events)
+        return events
+
+    def has_work(self) -> bool:
+        return self.scheduler.pending() > 0 or any(self.slots)
+
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request], max_steps: int = 10000
             ) -> List[Request]:
-        pending = list(requests)
-        steps = 0
-        while (pending or any(self.slots)) and steps < max_steps:
-            while pending and self._free_slot() is not None:
-                self.add_request(pending.pop(0))
-            self.step()
-            steps += 1
+        """Drive all requests to completion (or ``max_steps``).
+
+        Requests still unfinished when the step limit hits are marked
+        ``truncated`` (``done`` stays False) and counted in
+        ``metrics["truncated"]``.
+        """
+        for ev in self.stream(requests, max_steps=max_steps):
+            pass
         return requests
+
+    def stream(self, requests: List[Request], max_steps: int = 10000
+               ) -> Iterator[StreamEvent]:
+        """Generator form of ``run``: yields tokens as they are sampled."""
+        for req in requests:
+            self.submit(req)
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            yield from self.step()
+            steps += 1
+        if self.has_work():
+            for req in requests:
+                if not req.done and not req.truncated:
+                    req.truncated = True
+                    self.metrics["truncated"] += 1
+                    self.telemetry.on_finish(req.rid, self.step_count,
+                                             truncated=True)

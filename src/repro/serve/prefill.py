@@ -1,0 +1,110 @@
+"""Chunked-prefill planning: which tokens enter the model this step.
+
+Every engine step issues ONE ``model.prefill_step`` call over the whole
+slot batch.  The planner decides each slot's row of that call:
+
+* a slot mid-prefill contributes up to ``chunk_size`` prompt tokens
+  (bounded by the scheduler's step budget, so a long document cannot
+  starve co-batched decoders),
+* a started slot contributes exactly its last sampled token (decode is
+  the 1-token special case of prefill),
+* a free slot contributes nothing (``count 0`` rows are exact no-ops).
+
+``mode="token"`` reproduces the seed engine's token-at-a-time prompt
+streaming (1 prompt token per step) — kept as the baseline that
+``benchmarks/serve_load.py`` measures chunked prefill against.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SlotState:
+    """Host-side bookkeeping for one cache slot."""
+
+    req: object                       # serve.engine.Request
+    feed: List[int]                   # prompt tokens not yet ingested
+    pos: int = 0                      # tokens in this slot's cache
+    prompt_pos: int = 0               # prompt tokens ingested (<= len prompt)
+    started: bool = False             # past prefill, sampling
+
+
+@dataclass
+class PrefillPlan:
+    """One step's model call, plus the host bookkeeping to apply after."""
+
+    tokens: np.ndarray                # (B, W) int32
+    counts: np.ndarray                # (B,) int32
+    width: int
+    prefill_tokens: int               # prompt tokens ingested this step
+    decode_tokens: int                # started slots advanced this step
+    # slots to sample from after the call: (slot, logits row)
+    sample_rows: List[Tuple[int, int]] = field(default_factory=list)
+    # slot -> prompt tokens consumed this step (for prefix snapshots)
+    consumed: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def any_work(self) -> bool:
+        return bool(self.sample_rows) or self.prefill_tokens > 0
+
+
+class ChunkedPrefillPlanner:
+    """Builds the per-step (tokens, counts) arrays from the slot table."""
+
+    def __init__(self, chunk_size: int = 32, mode: str = "chunked"):
+        if mode not in ("chunked", "token"):
+            raise KeyError(f"unknown prefill mode {mode!r} (chunked | token)")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        self.chunk_size = chunk_size
+        self.mode = mode
+
+    def plan(self, slots: List[Optional[SlotState]],
+             budget: Optional[int] = None) -> PrefillPlan:
+        """Consume up to ``budget`` prompt tokens (None = unlimited) across
+        prefilling slots; mutates the slots' feeds/positions."""
+        n = len(slots)
+        chunk = self.chunk_size if self.mode == "chunked" else 1
+        prefilling = any(s is not None and s.feed for s in slots)
+        width = chunk if prefilling else 1
+        tokens = np.zeros((n, width), np.int32)
+        counts = np.zeros((n,), np.int32)
+        plan = PrefillPlan(tokens=tokens, counts=counts, width=width,
+                           prefill_tokens=0, decode_tokens=0)
+        remaining = budget if budget is not None else -1
+        for i, s in enumerate(slots):
+            if s is None:
+                continue
+            if s.feed:
+                take = min(len(s.feed), chunk)
+                if remaining >= 0 and take > remaining:
+                    # never split a chunk across steps: a partial take would
+                    # shift this slot off the chunk-aligned partition the
+                    # prefix cache's bit-identity guarantee relies on
+                    continue
+                tokens[i, :take] = s.feed[:take]
+                del s.feed[:take]
+                counts[i] = take
+                s.pos += take
+                s.prompt_pos += take
+                plan.prefill_tokens += take
+                plan.consumed[i] = take
+                if remaining >= 0:
+                    remaining -= take
+                if not s.feed:
+                    # last prompt token ingested: the first output token is
+                    # sampled from this same forward's last valid row
+                    s.started = True
+                    plan.sample_rows.append((i, take - 1))
+            elif s.started:
+                tokens[i, 0] = s.req.out_tokens[-1]
+                counts[i] = 1
+                s.pos += 1
+                plan.decode_tokens += 1
+                plan.sample_rows.append((i, 0))
+        return plan

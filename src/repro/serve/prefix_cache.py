@@ -1,0 +1,168 @@
+"""Prefix cache: reuse prefilled KV/SSM slot state across requests that
+share a token prefix (system prompts, few-shot preambles).
+
+Semantics
+---------
+* Entries are keyed by the exact token tuple they cover and stored as a
+  host-side (numpy) snapshot of one slot's cache leaves (KV rows + per-slot
+  position for attention, conv + SSD state for SSM/hybrid).
+* Snapshots are only taken at *chunk-aligned* prompt offsets (the engine
+  passes ``block`` = its prefill chunk size).  Combined with resuming in
+  the same chunk size, a cache hit replays the exact same chunk partition
+  the request would have computed itself, so outputs are bit-identical
+  with the cache on or off.
+* ``match`` returns the longest stored key that is a *proper* prefix of the
+  prompt (at least one prompt token must remain, so the engine always has a
+  real last-token logit row to sample from).
+* LRU eviction by entry count and total bytes.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _slot_axis(path, leaf) -> int:
+    """Batch(=slot) axis of a decode-cache leaf, by leaf name.
+
+    Mirrors the layout rules of ``Model.init_cache``: KV leaves are
+    (stack..., B, S, kv, hd); SSD state is (stack..., B, H, N, P); conv
+    state is (stack..., B, K-1, C); ``pos`` is (stack..., B).
+    """
+    name = str(getattr(path[-1], "key", path[-1]))
+    if name == "pos":
+        return leaf.ndim - 1
+    if name == "conv":
+        return leaf.ndim - 3
+    if name in ("k", "v", "cross_k", "cross_v", "ssd"):
+        return leaf.ndim - 4
+    raise KeyError(f"unknown cache leaf {name!r}")
+
+
+def extract_slot(cache, slot: int) -> Dict:
+    """Copy one slot's state out of the shared cache pytree (device)."""
+    def take(path, leaf):
+        return jax.lax.index_in_dim(leaf, slot, axis=_slot_axis(path, leaf),
+                                    keepdims=False)
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
+def insert_slot(cache, slot: int, snapshot) -> Dict:
+    """Write a snapshot back into one slot of the shared cache pytree."""
+    def put(path, leaf, snap):
+        ax = _slot_axis(path, leaf)
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slot
+        return leaf.at[tuple(idx)].set(
+            jax.numpy.asarray(snap).astype(leaf.dtype))
+    return jax.tree_util.tree_map_with_path(put, cache, snapshot)
+
+
+def _snapshot_bytes(snapshot) -> int:
+    return sum(int(np.asarray(x).nbytes) for x in jax.tree.leaves(snapshot))
+
+
+class PrefixCache:
+    """LRU token-prefix -> slot-state-snapshot store."""
+
+    def __init__(self, max_entries: int = 64,
+                 max_bytes: Optional[int] = None, block: int = 1):
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.block = max(1, block)
+        self._store: "OrderedDict[Tuple[int, ...], Dict]" = OrderedDict()
+        self._interest: Dict[Tuple[int, ...], int] = {}
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.insertions = 0
+        self.evictions = 0
+        self.tokens_reused = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    # ------------------------------------------------------------------
+    def register(self, prompt) -> None:
+        """Declare a request's chunk-aligned proper prefixes.  Snapshots
+        are only worth a host transfer (and an LRU entry) for prefixes at
+        least two requests share — ``wants`` answers that."""
+        p = tuple(int(t) for t in prompt)
+        for n in range(self.block, len(p) + 1, self.block):
+            key = p[:n]
+            self._interest[key] = self._interest.get(key, 0) + 1
+
+    def wants(self, tokens) -> bool:
+        """True when this exact prefix is shared by >= 2 registered
+        requests (or already stored, which ``put`` dedups anyway)."""
+        key = tuple(int(t) for t in tokens)
+        return self._interest.get(key, 0) >= 2
+
+    def put(self, tokens, snapshot) -> bool:
+        """Store a device snapshot covering ``tokens``; host-copies it.
+
+        Only chunk-aligned prefixes are accepted (see module docstring).
+        """
+        key = tuple(int(t) for t in tokens)
+        if not key or len(key) % self.block != 0:
+            return False
+        if key in self._store:
+            self._store.move_to_end(key)
+            return False
+        snap_np = jax.tree.map(np.asarray, jax.device_get(snapshot))
+        self._store[key] = snap_np
+        self._bytes += _snapshot_bytes(snap_np)
+        self.insertions += 1
+        self._evict()
+        return True
+
+    def peek_len(self, prompt) -> int:
+        """Length of the longest stored proper prefix of ``prompt`` without
+        touching stats or LRU order (used by prefix-aware admission)."""
+        p = tuple(int(t) for t in prompt)
+        best = 0
+        for key in self._store:
+            if best < len(key) < len(p) and p[:len(key)] == key:
+                best = len(key)
+        return best
+
+    def match(self, prompt) -> Tuple[int, Optional[Dict]]:
+        """Longest stored proper prefix of ``prompt``.
+
+        Returns (n_tokens_matched, snapshot) or (0, None).
+        """
+        p = tuple(int(t) for t in prompt)
+        best_key = None
+        for key in self._store:
+            if len(key) < len(p) and len(key) > len(best_key or ()) \
+                    and p[:len(key)] == key:
+                best_key = key
+        if best_key is None:
+            self.misses += 1
+            return 0, None
+        self._store.move_to_end(best_key)
+        self.hits += 1
+        self.tokens_reused += len(best_key)
+        return len(best_key), self._store[best_key]
+
+    def _evict(self) -> None:
+        while len(self._store) > self.max_entries or (
+                self.max_bytes is not None and self._bytes > self.max_bytes
+                and len(self._store) > 1):
+            _, snap = self._store.popitem(last=False)
+            self._bytes -= _snapshot_bytes(snap)
+            self.evictions += 1
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._store), "bytes": self._bytes,
+                "hits": self.hits, "misses": self.misses,
+                "insertions": self.insertions, "evictions": self.evictions,
+                "tokens_reused": self.tokens_reused}

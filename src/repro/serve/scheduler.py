@@ -1,0 +1,291 @@
+"""Admission scheduling: SLO classes, FIFO/priority queues, and a
+Speed-of-Light capacity model.
+
+The paper's core move — budget work with first-principles SOL bounds
+instead of blind iteration — applied to serving: a roofline-derived
+per-step cost model (``core/sol/roofline``) estimates what one decode step
+costs with the current batch composition, and the SOL scheduler uses that
+estimate to decide *when to admit or defer prefill* and *how many prefill
+tokens fit this step* without blowing the inter-token latency budget of
+the interactive requests already decoding.  Measured medians from the
+autotuning cache (``core/tune``), when present, calibrate the model's
+achieved-fraction-of-SOL so the estimates track this device class.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from ..configs.base import ModelConfig
+from ..core.sol.hardware import DEFAULT_CHIP, DTYPE_BYTES, canon_dtype
+from ..core.sol.roofline import roofline
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """Class of service attached to a request at submit time."""
+
+    name: str
+    priority: int = 0                 # higher admits first
+    ttft_target_s: float = math.inf   # advisory (telemetry / reports)
+    itl_target_s: float = math.inf    # per-step latency ceiling while active
+
+
+SLO_CLASSES: Dict[str, SLOClass] = {
+    "interactive": SLOClass("interactive", priority=10,
+                            ttft_target_s=0.2, itl_target_s=0.05),
+    "batch": SLOClass("batch", priority=0),
+}
+
+
+def get_slo(name: str) -> SLOClass:
+    if name not in SLO_CLASSES:
+        raise KeyError(f"unknown SLO class {name!r}; "
+                       f"known: {sorted(SLO_CLASSES)}")
+    return SLO_CLASSES[name]
+
+
+@dataclass
+class QueueEntry:
+    req: object                       # serve.engine.Request
+    slo: SLOClass
+    seq: int                          # FIFO tiebreak
+    submit_step: int
+
+
+@dataclass
+class EngineView:
+    """Host-side snapshot of engine state the scheduler plans against."""
+
+    free_slots: int = 0
+    num_slots: int = 0
+    # per active slot: (context position, slo name, prompt tokens remaining)
+    decode_positions: List[int] = field(default_factory=list)
+    decode_slos: List[str] = field(default_factory=list)
+    prefill_backlog: int = 0          # prompt tokens still to ingest
+    step: int = 0
+
+
+# ---------------------------------------------------------------------------
+# SOL capacity model
+# ---------------------------------------------------------------------------
+
+class SOLCapacityModel:
+    """Roofline estimate of one serving step's latency.
+
+    One decode step streams the (active) weights once and reads each
+    attention slot's KV history (or each SSM slot's constant recurrent
+    state); prefill adds ``2 * P_active`` FLOPs per ingested token plus the
+    chunk's KV writes.  ``t_step = t_SOL / efficiency`` where efficiency is
+    the achieved fraction of SOL — calibrated from the autotuning cache's
+    measured medians when available, else a conservative default.
+    """
+
+    DEFAULT_EFFICIENCY = 0.5
+
+    def __init__(self, cfg: ModelConfig, *, chip=None,
+                 efficiency: Optional[float] = None):
+        self.cfg = cfg
+        self.chip = chip or DEFAULT_CHIP
+        self.dtype = canon_dtype(cfg.compute_dtype)
+        self._dtype_bytes = DTYPE_BYTES[self.dtype]
+        self.param_bytes = cfg.param_count() * self._dtype_bytes
+        self.active_params = cfg.param_count(active_only=True)
+        self.efficiency = (efficiency if efficiency is not None
+                           else self._calibrated_efficiency())
+
+    def _calibrated_efficiency(self) -> float:
+        """Fraction of SOL this device class actually achieves, from the
+        tuning cache's (measured median, analytic prediction) pairs."""
+        try:
+            from ..core import tune
+            rec = tune.global_cache().get(
+                "attention",
+                (self.cfg.max_position, self.cfg.max_position,
+                 self.cfg.resolved_head_dim),
+                self.dtype)
+            if rec and rec.trials and rec.sol_rank:
+                measured = min(float(t["median_s"]) for t in rec.trials
+                               if t.get("median_s"))
+                predicted = min(float(r.get("predicted_s", 0.0))
+                                for r in rec.sol_rank
+                                if r.get("predicted_s"))
+                if measured > 0 and predicted > 0:
+                    return max(0.05, min(1.0, predicted / measured))
+        except Exception:
+            pass
+        return self.DEFAULT_EFFICIENCY
+
+    # -- per-component byte/FLOP counts ------------------------------------
+    def kv_bytes_per_slot(self, position: int) -> float:
+        cfg = self.cfg
+        if cfg.uses_attention:
+            n_attn = cfg.num_layers
+            if cfg.family == "hybrid" and cfg.shared_attn_every:
+                n_attn = cfg.num_layers // cfg.shared_attn_every
+            span = min(position, cfg.sliding_window) if cfg.sliding_window \
+                else position
+            kv = (2 * n_attn * span * cfg.num_kv_heads
+                  * cfg.resolved_head_dim * self._dtype_bytes)
+        else:
+            kv = 0.0
+        if cfg.ssm_state:
+            # recurrent state is position-independent (read + written)
+            kv += 2 * cfg.num_layers * cfg.ssm_heads * cfg.ssm_state \
+                * cfg.ssm_head_dim * 4          # fp32 SSD state
+        return float(kv)
+
+    def step_seconds(self, *, decode_positions: List[int],
+                     prefill_tokens: int = 0,
+                     prefill_position: int = 0) -> float:
+        """Estimated wall-clock for one engine step."""
+        tokens = len(decode_positions) + prefill_tokens
+        if tokens == 0:
+            return 0.0
+        flops = 2.0 * self.active_params * tokens
+        hbm = float(self.param_bytes)
+        for pos in decode_positions:
+            hbm += self.kv_bytes_per_slot(pos + 1)
+        if prefill_tokens:
+            hbm += self.kv_bytes_per_slot(prefill_position + prefill_tokens)
+        r = roofline(flops, hbm, dtype=self.dtype, chip=self.chip)
+        return r.t_sol / max(self.efficiency, 1e-6)
+
+    def max_prefill_tokens(self, *, decode_positions: List[int],
+                           budget_s: float, granularity: int = 1,
+                           cap: int = 1 << 20) -> int:
+        """Largest chunk (multiple of ``granularity``) whose step estimate
+        stays within ``budget_s``; 0 when even one granule exceeds it."""
+        if math.isinf(budget_s):
+            return cap
+        best = 0
+        n = granularity
+        while n <= cap:
+            t = self.step_seconds(decode_positions=decode_positions,
+                                  prefill_tokens=n)
+            if t > budget_s:
+                break
+            best = n
+            n += granularity
+        return best
+
+
+# ---------------------------------------------------------------------------
+# Schedulers
+# ---------------------------------------------------------------------------
+
+class FIFOScheduler:
+    """Admit in arrival order whenever a slot is free; no prefill cap.
+
+    This reproduces the seed engine's admission behaviour and is the
+    baseline the SOL scheduler is benchmarked against.
+    """
+
+    name = "fifo"
+
+    def __init__(self):
+        self._queue: Deque[QueueEntry] = deque()
+        self._seq = 0
+
+    def submit(self, req, slo: str = "batch", step: int = 0) -> QueueEntry:
+        entry = QueueEntry(req=req, slo=get_slo(slo), seq=self._seq,
+                           submit_step=step)
+        self._seq += 1
+        self._queue.append(entry)
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def next_admissions(self, view: EngineView) -> List[QueueEntry]:
+        out = []
+        while self._queue and len(out) < view.free_slots:
+            out.append(self._queue.popleft())
+        return out
+
+    def requeue_front(self, entry: QueueEntry) -> None:
+        """Put a deferred admission back at the head of the queue (used by
+        the engine's prefix-aware admission)."""
+        self._queue.appendleft(entry)
+
+    def prefill_budget(self, view: EngineView) -> Optional[int]:
+        """Token budget for this step's prefill; None = unlimited."""
+        return None
+
+
+class SOLScheduler(FIFOScheduler):
+    """Priority + FIFO admission gated by the SOL capacity model.
+
+    Interactive requests admit first (priority order, FIFO within a
+    class).  A request only starts prefill when the capacity model says
+    the resulting step still meets the strictest inter-token-latency
+    target among requests already decoding; otherwise it waits, unless it
+    has aged past ``max_defer_steps`` (anti-starvation).
+    """
+
+    name = "sol"
+
+    def __init__(self, capacity: SOLCapacityModel, *,
+                 chunk_size: int = 32, max_defer_steps: int = 200):
+        super().__init__()
+        self.capacity = capacity
+        self.chunk_size = chunk_size
+        self.max_defer_steps = max_defer_steps
+
+    def _itl_budget(self, view: EngineView) -> float:
+        return min((get_slo(s).itl_target_s for s in view.decode_slos),
+                   default=math.inf)
+
+    def next_admissions(self, view: EngineView) -> List[QueueEntry]:
+        if not self._queue or not view.free_slots:
+            return []
+        ordered = sorted(self._queue,
+                         key=lambda e: (-e.slo.priority, e.seq))
+        budget_s = self._itl_budget(view)
+        decode_positions = list(view.decode_positions)
+        backlog = view.prefill_backlog
+        out: List[QueueEntry] = []
+        for entry in ordered:
+            if len(out) >= view.free_slots:
+                break
+            prompt = len(getattr(entry.req, "prompt", ()))
+            aged = (view.step - entry.submit_step) >= self.max_defer_steps
+            chunk = min(self.chunk_size, prompt + backlog)
+            t = self.capacity.step_seconds(
+                decode_positions=decode_positions, prefill_tokens=chunk)
+            if aged or t <= budget_s:
+                out.append(entry)
+                backlog += prompt
+        for entry in out:
+            self._queue.remove(entry)
+        return out
+
+    def prefill_budget(self, view: EngineView) -> Optional[int]:
+        budget_s = self._itl_budget(view)
+        if math.isinf(budget_s):
+            return None
+        n = self.capacity.max_prefill_tokens(
+            decode_positions=list(view.decode_positions),
+            budget_s=budget_s, granularity=self.chunk_size,
+            cap=max(view.prefill_backlog, self.chunk_size))
+        # always let at least one chunk through so prefill cannot starve
+        return max(n, self.chunk_size)
+
+
+def make_scheduler(name: str, cfg: Optional[ModelConfig] = None, *,
+                   chunk_size: int = 32, chip=None,
+                   efficiency: Optional[float] = None) -> FIFOScheduler:
+    if name == "fifo":
+        return FIFOScheduler()
+    if name == "sol":
+        if cfg is None:
+            raise ValueError("SOL scheduler needs the model config")
+        cap = SOLCapacityModel(cfg, chip=chip, efficiency=efficiency)
+        return SOLScheduler(cap, chunk_size=chunk_size)
+    raise KeyError(f"unknown scheduler {name!r} (fifo | sol)")

@@ -1,0 +1,66 @@
+"""Per-token streaming: events, callbacks, and an iterator API.
+
+The engine is synchronous (one thread drives the jit step loop), so
+streaming is event-based rather than thread-based: every ``engine.step()``
+returns the ``StreamEvent``s it produced, ``engine.stream(...)`` is a
+generator that drives steps and yields events as they happen, and a
+``StreamMux`` fans events out to per-request callbacks (the serving-layer
+analogue of an SSE connection per client).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    """One sampled token leaving the engine."""
+
+    rid: int          # request id
+    token: int        # sampled token id
+    index: int        # 0-based position in the request's output
+    step: int         # engine step that produced it
+    final: bool       # True on the request's last token
+
+
+Callback = Callable[[StreamEvent], None]
+
+
+class StreamMux:
+    """Fans engine events out to per-request (and global) subscribers."""
+
+    def __init__(self):
+        self._by_rid: Dict[int, List[Callback]] = {}
+        self._global: List[Callback] = []
+
+    def subscribe(self, cb: Callback, rid: Optional[int] = None) -> None:
+        if rid is None:
+            self._global.append(cb)
+        else:
+            self._by_rid.setdefault(rid, []).append(cb)
+
+    def emit(self, events: Iterable[StreamEvent]) -> None:
+        for ev in events:
+            for cb in self._global:
+                cb(ev)
+            for cb in self._by_rid.get(ev.rid, ()):
+                cb(ev)
+            if ev.final:
+                self._by_rid.pop(ev.rid, None)
+
+
+def collect_streams(events: Iterable[StreamEvent]
+                    ) -> Dict[int, List[StreamEvent]]:
+    """Group a flat event iterator per request, preserving order."""
+    out: Dict[int, List[StreamEvent]] = {}
+    for ev in events:
+        out.setdefault(ev.rid, []).append(ev)
+    return out
+
+
+def stream_tokens(engine, requests, **kw) -> Iterator[StreamEvent]:
+    """Convenience wrapper over ``engine.stream`` (keeps call sites free of
+    engine internals)."""
+    yield from engine.stream(requests, **kw)

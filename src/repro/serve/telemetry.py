@@ -1,0 +1,178 @@
+"""Serving telemetry: TTFT / per-token latency percentiles, queue depth,
+slot utilization, and prefix-cache reuse.
+
+Every engine step calls ``on_step``; request lifecycle events
+(submit -> admit -> first token -> tokens -> finish) are recorded per rid.
+``summary()`` folds the raw samples into the serving dashboard numbers:
+p50/p95 TTFT in both *engine steps* (deterministic, what the load benchmark
+asserts on) and wall-clock seconds, mean inter-token latency, throughput,
+and the prefix-cache hit rate.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]); nan when empty."""
+    if not xs:
+        return float("nan")
+    return float(np.percentile(xs, q))
+
+
+@dataclass
+class RequestTrace:
+    rid: int
+    slo: str = "batch"
+    submit_step: int = -1
+    submit_time: float = 0.0
+    admit_step: int = -1
+    admit_time: float = 0.0
+    first_token_step: int = -1
+    first_token_time: float = 0.0
+    finish_step: int = -1
+    finish_time: float = 0.0
+    n_tokens: int = 0
+    prompt_tokens: int = 0
+    prefix_tokens_reused: int = 0
+    truncated: bool = False
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        if self.first_token_step < 0 or self.submit_step < 0:
+            return None
+        return self.first_token_step - self.submit_step
+
+    @property
+    def ttft_seconds(self) -> Optional[float]:
+        if self.first_token_step < 0:
+            return None
+        return self.first_token_time - self.submit_time
+
+    @property
+    def mean_itl_seconds(self) -> Optional[float]:
+        """Mean inter-token latency after the first token."""
+        if self.n_tokens < 2 or self.finish_step < 0:
+            return None
+        return (self.finish_time - self.first_token_time) \
+            / (self.n_tokens - 1)
+
+
+class ServeTelemetry:
+    """Accumulates serving metrics; cheap enough to stay always-on."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.traces: Dict[int, RequestTrace] = {}
+        self.queue_depth_samples: List[int] = []
+        self.active_slot_samples: List[int] = []
+        self.step_seconds: List[float] = []
+        self.num_slots = 0
+        self.steps = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+
+    # ---- request lifecycle ------------------------------------------------
+    def _trace(self, rid: int) -> RequestTrace:
+        if rid not in self.traces:
+            self.traces[rid] = RequestTrace(rid=rid)
+        return self.traces[rid]
+
+    def on_submit(self, rid: int, step: int, *, slo: str = "batch",
+                  prompt_tokens: int = 0) -> None:
+        t = self._trace(rid)
+        t.slo = slo
+        t.submit_step = step
+        t.submit_time = self._clock()
+        t.prompt_tokens = prompt_tokens
+
+    def on_admit(self, rid: int, step: int, *,
+                 prefix_tokens_reused: int = 0) -> None:
+        t = self._trace(rid)
+        t.admit_step = step
+        t.admit_time = self._clock()
+        t.prefix_tokens_reused = prefix_tokens_reused
+
+    def on_token(self, rid: int, step: int) -> None:
+        t = self._trace(rid)
+        t.n_tokens += 1
+        if t.first_token_step < 0:
+            t.first_token_step = step
+            t.first_token_time = self._clock()
+
+    def on_finish(self, rid: int, step: int, *,
+                  truncated: bool = False) -> None:
+        t = self._trace(rid)
+        t.finish_step = step
+        t.finish_time = self._clock()
+        t.truncated = truncated
+
+    def on_prefix_lookup(self, hit: bool) -> None:
+        self.prefix_lookups += 1
+        if hit:
+            self.prefix_hits += 1
+
+    # ---- per-step samples -------------------------------------------------
+    def on_step(self, *, queue_depth: int, active_slots: int,
+                num_slots: int, seconds: float) -> None:
+        self.steps += 1
+        self.num_slots = num_slots
+        self.queue_depth_samples.append(queue_depth)
+        self.active_slot_samples.append(active_slots)
+        self.step_seconds.append(seconds)
+
+    # ---- summary ----------------------------------------------------------
+    def summary(self) -> Dict[str, object]:
+        done = [t for t in self.traces.values() if t.first_token_step >= 0]
+        ttft_steps = [float(t.ttft_steps) for t in done
+                      if t.ttft_steps is not None]
+        ttft_s = [t.ttft_seconds for t in done
+                  if t.ttft_seconds is not None]
+        itl = [t.mean_itl_seconds for t in done
+               if t.mean_itl_seconds is not None]
+        total_tokens = sum(t.n_tokens for t in self.traces.values())
+        total_time = sum(self.step_seconds)
+        util = (sum(self.active_slot_samples)
+                / (len(self.active_slot_samples) * max(self.num_slots, 1))
+                if self.active_slot_samples else 0.0)
+        by_slo: Dict[str, List[float]] = {}
+        for t in done:
+            if t.ttft_steps is not None:
+                by_slo.setdefault(t.slo, []).append(float(t.ttft_steps))
+        return {
+            "requests": len(self.traces),
+            "completed": sum(1 for t in self.traces.values()
+                             if t.finish_step >= 0 and not t.truncated),
+            "truncated": sum(1 for t in self.traces.values() if t.truncated),
+            "steps": self.steps,
+            "tokens": total_tokens,
+            "throughput_tok_s": (total_tokens / total_time
+                                 if total_time > 0 else 0.0),
+            "ttft_steps_mean": (sum(ttft_steps) / len(ttft_steps)
+                                if ttft_steps else float("nan")),
+            "ttft_steps_p50": percentile(ttft_steps, 50),
+            "ttft_steps_p95": percentile(ttft_steps, 95),
+            "ttft_s_p50": percentile(ttft_s, 50),
+            "ttft_s_p95": percentile(ttft_s, 95),
+            "itl_s_p50": percentile(itl, 50),
+            "itl_s_p95": percentile(itl, 95),
+            "ttft_steps_by_slo": {k: percentile(v, 50)
+                                  for k, v in by_slo.items()},
+            "queue_depth_mean": (sum(self.queue_depth_samples)
+                                 / len(self.queue_depth_samples)
+                                 if self.queue_depth_samples else 0.0),
+            "queue_depth_max": (max(self.queue_depth_samples)
+                                if self.queue_depth_samples else 0),
+            "slot_utilization": util,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_rate": (self.prefix_hits / self.prefix_lookups
+                                if self.prefix_lookups else 0.0),
+            "prefix_tokens_reused": sum(t.prefix_tokens_reused
+                                        for t in self.traces.values()),
+        }

@@ -1,0 +1,409 @@
+"""Serving subsystem: chunked prefill, slot reuse, truncation, prefix
+cache, scheduler/capacity model, streaming, telemetry."""
+
+import copy
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve import (EngineView, FIFOScheduler, PrefixCache,  # noqa: E402
+                         Request, ServeEngine, SOLCapacityModel,
+                         SOLScheduler, collect_streams, percentile)
+
+ARCH_BY_FAMILY = {
+    "dense": "qwen2-0.5b",
+    "ssm": "mamba2-1.3b",
+    "hybrid": "zamba2-2.7b",
+}
+
+_MODELS = {}
+
+
+def family_model(family):
+    if family not in _MODELS:
+        cfg = get_arch(ARCH_BY_FAMILY[family]).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODELS[family] = (model, params)
+    return _MODELS[family]
+
+
+def make_requests(vocab, n=4, prompt_len=6, max_new=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=list(map(int, rng.integers(1, vocab, prompt_len))),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+class TestChunkedPrefill:
+    def test_chunked_matches_token_mode_dense(self):
+        """Attention prefill chunks are bit-exact vs one-token-at-a-time
+        (same softmax column order, masked columns contribute exact 0)."""
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        a = make_requests(vocab)
+        b = copy.deepcopy(a)
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    prefill_mode="chunked", chunk_size=4).run(a)
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    prefill_mode="token").run(b)
+        assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+
+    def test_chunked_fewer_steps(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        e1 = ServeEngine(model, params, max_batch=2, max_len=32,
+                         prefill_mode="chunked", chunk_size=8)
+        e1.run(make_requests(vocab))
+        e2 = ServeEngine(model, params, max_batch=2, max_len=32,
+                         prefill_mode="token")
+        e2.run(make_requests(vocab))
+        assert e1.metrics["steps"] < e2.metrics["steps"]
+
+    def test_windowed_model_chunk_clamped_to_ring(self):
+        """Sliding-window model with an oversized chunk: the engine clamps
+        the chunk to the KV ring so one chunk can never scatter two tokens
+        to the same ring slot, and chunked prefill stays consistent with
+        the decode-step reference."""
+        import dataclasses
+        cfg = dataclasses.replace(get_arch("qwen2-0.5b").reduced(),
+                                  sliding_window=8)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        # model level: one 12-token ragged prefill vs decode-step feeding,
+        # with prompts longer than the 8-slot ring
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(1, cfg.vocab_size, 12)
+        cache = model.init_cache(1, 32)
+        for t in prompt:
+            ref, cache = model.decode_step(params, cache,
+                                           jnp.array([[t]], jnp.int32))
+        last, _ = model.prefill(params, jnp.array([prompt], jnp.int32), 32)
+        np.testing.assert_allclose(np.asarray(last[0]),
+                                   np.asarray(ref[0, -1]),
+                                   rtol=0, atol=5e-2)
+        # engine level: an absurd chunk request is clamped to the ring
+        engine = ServeEngine(model, params, max_batch=2, max_len=32,
+                             prefill_mode="chunked", chunk_size=1000)
+        assert engine.planner.chunk_size == 8
+        reqs = make_requests(cfg.vocab_size, n=2, prompt_len=12, max_new=4)
+        engine.run(reqs)
+        assert all(r.done and len(r.out_tokens) == 4 for r in reqs)
+
+    @pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+    def test_prefill_matches_decode_reference(self, family):
+        """model.prefill == feeding the prompt through decode_step."""
+        model, params = family_model(family)
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(1, model.cfg.vocab_size, 7)
+        cache = model.init_cache(1, 32)
+        for t in prompt:
+            ref, cache = model.decode_step(params, cache,
+                                           jnp.array([[t]], jnp.int32))
+        last, _ = model.prefill(params, jnp.array([prompt], jnp.int32), 32)
+        np.testing.assert_allclose(np.asarray(last[0]),
+                                   np.asarray(ref[0, -1]),
+                                   rtol=0, atol=5e-2)
+
+    @pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+    def test_counts_zero_is_exact_noop(self, family):
+        """A zero-count prefill row must leave the slot's state bitwise
+        untouched — the invariant that lets decode and prefill share one
+        jit step."""
+        model, params = family_model(family)
+        cache = model.init_cache(2, 32)
+        _, cache = model.prefill_step(
+            params, cache, jnp.array([[3, 5, 7, 9], [0, 0, 0, 0]],
+                                     jnp.int32), jnp.array([4, 0]))
+        before = jax.tree.map(np.asarray, cache)
+        _, cache = model.prefill_step(
+            params, cache, jnp.array([[1, 2, 3, 4], [5, 6, 7, 8]],
+                                     jnp.int32), jnp.array([0, 0]))
+        after = jax.tree.map(np.asarray, cache)
+        for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(x, y)
+
+
+class TestSlotReuse:
+    @pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+    def test_released_slot_has_no_stale_state(self, family):
+        """A request admitted into a just-released slot must produce the
+        same outputs as on a fresh engine (KV/SSM state fully reset)."""
+        model, params = family_model(family)
+        vocab = model.cfg.vocab_size
+        probe = Request(rid=99, prompt=[3, 5, 7, 11], max_new_tokens=4)
+
+        fresh_probe = copy.deepcopy(probe)
+        ServeEngine(model, params, max_batch=1, max_len=32,
+                    chunk_size=4).run([fresh_probe])
+
+        # 1 slot, 3 requests: the probe lands in a slot two others used
+        reused = ServeEngine(model, params, max_batch=1, max_len=32,
+                             chunk_size=4)
+        fillers = make_requests(vocab, n=2, prompt_len=5, max_new=6, seed=7)
+        reused_probe = copy.deepcopy(probe)
+        reused.run(fillers + [reused_probe])
+        assert reused_probe.out_tokens == fresh_probe.out_tokens
+
+
+class TestTruncation:
+    def test_unfinished_requests_marked_truncated(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        reqs = make_requests(vocab, n=4)
+        engine = ServeEngine(model, params, max_batch=2, max_len=32)
+        engine.run(reqs, max_steps=2)
+        n_trunc = sum(1 for r in reqs if r.truncated)
+        assert n_trunc > 0
+        assert engine.metrics["truncated"] == n_trunc
+        for r in reqs:
+            assert r.done != r.truncated  # exactly one of the two
+        assert engine.telemetry.summary()["truncated"] == n_trunc
+
+    def test_completed_run_has_no_truncations(self):
+        model, params = family_model("dense")
+        reqs = make_requests(model.cfg.vocab_size, n=2)
+        engine = ServeEngine(model, params, max_batch=2, max_len=32)
+        engine.run(reqs)
+        assert engine.metrics["truncated"] == 0
+        assert all(r.done and not r.truncated for r in reqs)
+
+
+class TestPrefixCache:
+    def test_hits_and_bit_identical_outputs(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        rng = np.random.default_rng(42)
+        system = list(map(int, rng.integers(1, vocab, 8)))
+        reqs = [Request(rid=i,
+                        prompt=system + list(map(int,
+                                                 rng.integers(1, vocab, 3))),
+                        max_new_tokens=4)
+                for i in range(3)]
+        with_cache = copy.deepcopy(reqs)
+        without = copy.deepcopy(reqs)
+        e1 = ServeEngine(model, params, max_batch=2, max_len=32,
+                         chunk_size=8, prefix_cache=True)
+        e1.run(with_cache)
+        e2 = ServeEngine(model, params, max_batch=2, max_len=32,
+                         chunk_size=8)
+        e2.run(without)
+        assert e1.metrics["prefix_hits"] > 0
+        assert e1.metrics["prefix_tokens_reused"] >= 8
+        assert [r.out_tokens for r in with_cache] == \
+            [r.out_tokens for r in without]
+
+    def test_proper_prefix_only(self):
+        pc = PrefixCache(block=2)
+        snap = {"k": np.zeros((2, 2))}
+        assert pc.put([1, 2, 3, 4], snap)
+        n, _ = pc.match([1, 2, 3, 4])      # full prompt: no proper prefix
+        assert n == 0
+        n, got = pc.match([1, 2, 3, 4, 5])
+        assert n == 4 and got is not None
+        n, _ = pc.match([9, 9, 9, 9, 9])
+        assert n == 0
+
+    def test_alignment_and_lru_eviction(self):
+        pc = PrefixCache(max_entries=2, block=4)
+        snap = {"x": np.zeros((1,))}
+        assert not pc.put([1, 2, 3], snap)          # unaligned: rejected
+        assert pc.put([1, 2, 3, 4], snap)
+        assert pc.put([5, 6, 7, 8], snap)
+        assert pc.put([9, 10, 11, 12], snap)        # evicts the oldest
+        assert len(pc) == 2
+        assert pc.evictions == 1
+        n, _ = pc.match([1, 2, 3, 4, 5])
+        assert n == 0                                # evicted
+
+    def test_peek_does_not_touch_stats(self):
+        pc = PrefixCache(block=2)
+        pc.put([1, 2], {"x": np.zeros((1,))})
+        assert pc.peek_len([1, 2, 3]) == 2
+        assert pc.hits == 0 and pc.misses == 0
+
+    def test_interest_gating(self):
+        """Unique prompts never trigger snapshots; shared ones do."""
+        pc = PrefixCache(block=4)
+        pc.register([1, 2, 3, 4, 5])
+        assert not pc.wants([1, 2, 3, 4])      # one request: not shared
+        pc.register([1, 2, 3, 4, 9])
+        assert pc.wants([1, 2, 3, 4])          # two sharers
+        assert not pc.wants([1, 2, 3, 9])
+        # engine-level: a lone long prompt leaves the cache empty
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        engine = ServeEngine(model, params, max_batch=2, max_len=32,
+                             chunk_size=4, prefix_cache=True)
+        engine.run(make_requests(vocab, n=2, prompt_len=12, max_new=2,
+                                 seed=11))
+        assert len(engine.prefix_cache) == 0
+        assert engine.prefix_cache.insertions == 0
+
+
+class TestScheduler:
+    def _capacity(self):
+        return SOLCapacityModel(get_arch("qwen2-0.5b").reduced(),
+                                efficiency=0.5)
+
+    def test_capacity_model_monotone(self):
+        cap = self._capacity()
+        base = cap.step_seconds(decode_positions=[8, 8])
+        more_tokens = cap.step_seconds(decode_positions=[8, 8],
+                                       prefill_tokens=64)
+        longer_ctx = cap.step_seconds(decode_positions=[512, 512])
+        assert more_tokens > base
+        assert longer_ctx > base
+        assert cap.step_seconds(decode_positions=[]) == 0.0
+
+    def test_max_prefill_tokens_respects_budget(self):
+        cap = self._capacity()
+        t_one = cap.step_seconds(decode_positions=[8], prefill_tokens=8)
+        n = cap.max_prefill_tokens(decode_positions=[8],
+                                   budget_s=t_one * 2.5, granularity=8,
+                                   cap=1024)
+        assert n >= 8
+        t_n = cap.step_seconds(decode_positions=[8], prefill_tokens=n)
+        assert t_n <= t_one * 2.5
+
+    def test_sol_scheduler_defers_past_capacity(self):
+        cap = self._capacity()
+        sched = SOLScheduler(cap, chunk_size=8)
+        long_req = Request(rid=0, prompt=list(range(1, 9)) * 4,
+                           max_new_tokens=2)
+        sched.submit(long_req, slo="batch", step=0)
+        # an interactive request is decoding with an impossibly tight ITL
+        view = EngineView(free_slots=1, num_slots=2,
+                          decode_positions=[16],
+                          decode_slos=["interactive"], step=0)
+        cap_big = SOLCapacityModel(get_arch("qwen2-0.5b").reduced(),
+                                   efficiency=1e-12)
+        sched_tight = SOLScheduler(cap_big, chunk_size=8)
+        sched_tight.submit(long_req, slo="batch", step=0)
+        assert sched_tight.next_admissions(view) == []      # deferred
+        assert len(sched_tight) == 1
+        # with no interactive decoder active, admission is unrestricted
+        view_free = EngineView(free_slots=1, num_slots=2, step=0)
+        assert len(sched.next_admissions(view_free)) == 1
+
+    def test_sol_scheduler_priority_order(self):
+        sched = SOLScheduler(self._capacity(), chunk_size=8)
+        batch = Request(rid=0, prompt=[1, 2], max_new_tokens=1, slo="batch")
+        inter = Request(rid=1, prompt=[3, 4], max_new_tokens=1,
+                        slo="interactive")
+        sched.submit(batch, slo="batch", step=0)
+        sched.submit(inter, slo="interactive", step=0)
+        out = sched.next_admissions(EngineView(free_slots=1, num_slots=1))
+        assert [e.req.rid for e in out] == [1]   # interactive first
+
+    def test_fifo_order_and_requeue(self):
+        sched = FIFOScheduler()
+        a = sched.submit(Request(rid=0, prompt=[1], max_new_tokens=1))
+        sched.submit(Request(rid=1, prompt=[2], max_new_tokens=1))
+        got = sched.next_admissions(EngineView(free_slots=1, num_slots=1))
+        assert [e.req.rid for e in got] == [0]
+        sched.requeue_front(a)
+        got = sched.next_admissions(EngineView(free_slots=2, num_slots=2))
+        assert [e.req.rid for e in got] == [0, 1]
+
+    def test_sol_end_to_end(self):
+        model, params = family_model("dense")
+        reqs = make_requests(model.cfg.vocab_size, n=4)
+        for r in reqs[:2]:
+            r.slo = "interactive"
+        engine = ServeEngine(model, params, max_batch=2, max_len=32,
+                             chunk_size=8, scheduler="sol")
+        engine.run(reqs)
+        assert all(r.done for r in reqs)
+
+
+class TestTunedCfgResolution:
+    def test_dtype_key_follows_model_config(self, monkeypatch):
+        """fp32 models must look up fp32 tuning entries, not bf16 ones."""
+        import dataclasses
+        from repro.models.model import Model
+        from repro.core import tune
+        from repro.serve.engine import resolve_tuned_decode_cfg
+
+        seen = []
+
+        def fake_attn(sq, skv, d, dtype, **kw):
+            seen.append(dtype)
+            return None
+
+        def fake_ssd(t, n, p, dtype):
+            seen.append(dtype)
+            return None
+
+        monkeypatch.setattr(tune, "tuned_attention_block", fake_attn)
+        monkeypatch.setattr(tune, "tuned_ssd_chunk", fake_ssd)
+        for family, dtype in (("dense", "fp32"), ("ssm", "bf16")):
+            cfg = get_arch(ARCH_BY_FAMILY[family]).reduced()
+            cfg = dataclasses.replace(cfg, compute_dtype=dtype)
+            seen.clear()
+            resolve_tuned_decode_cfg(Model(cfg), 64)
+            assert seen and all(d == dtype for d in seen)
+
+    def test_build_model_rejects_undeclared_compute_dtype(self):
+        """A config declaring a dtype the substrate doesn't compute in must
+        fail loudly instead of silently mis-keying tuning lookups."""
+        import dataclasses
+        cfg = dataclasses.replace(get_arch("qwen2-0.5b").reduced(),
+                                  compute_dtype="fp32")
+        with pytest.raises(NotImplementedError, match="compute_dtype"):
+            build_model(cfg)
+
+
+class TestStreaming:
+    def test_events_match_outputs(self):
+        model, params = family_model("dense")
+        reqs = make_requests(model.cfg.vocab_size, n=3)
+        engine = ServeEngine(model, params, max_batch=2, max_len=32,
+                             chunk_size=8)
+        events = list(engine.stream(copy.deepcopy(reqs)))
+        groups = collect_streams(events)
+        assert sorted(groups) == [0, 1, 2]
+        for rid, evs in groups.items():
+            assert [e.index for e in evs] == list(range(len(evs)))
+            assert [e.final for e in evs[:-1]] == [False] * (len(evs) - 1)
+            assert evs[-1].final
+            steps = [e.step for e in evs]
+            assert steps == sorted(steps)
+
+    def test_mux_callbacks(self):
+        model, params = family_model("dense")
+        reqs = make_requests(model.cfg.vocab_size, n=2)
+        engine = ServeEngine(model, params, max_batch=2, max_len=32,
+                             chunk_size=8)
+        seen = []
+        engine.mux.subscribe(lambda ev: seen.append(ev.rid), rid=1)
+        engine.run(reqs)
+        assert set(seen) == {1}
+        assert len(seen) == len(reqs[1].out_tokens)
+
+
+class TestTelemetry:
+    def test_percentile(self):
+        assert percentile([1.0], 95) == 1.0
+        assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+        assert percentile([1.0, 2.0, 3.0, 4.0], 100) == 4.0
+        assert np.isnan(percentile([], 50))
+
+    def test_summary_fields(self):
+        model, params = family_model("dense")
+        reqs = make_requests(model.cfg.vocab_size, n=4)
+        engine = ServeEngine(model, params, max_batch=2, max_len=32,
+                             chunk_size=8)
+        engine.run(reqs)
+        s = engine.telemetry.summary()
+        assert s["requests"] == 4 and s["completed"] == 4
+        assert s["tokens"] == sum(len(r.out_tokens) for r in reqs)
+        assert s["ttft_steps_p50"] <= s["ttft_steps_p95"]
+        assert 0 < s["slot_utilization"] <= 1
+        assert s["steps"] == engine.metrics["steps"]
