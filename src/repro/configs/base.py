@@ -76,6 +76,13 @@ class ModelConfig:
     prefill_last_only: bool = False  # prefill emits last-position logits
     #                                  only (serving semantics) instead of
     #                                  the full (B,S,V) tensor
+    fused_decode: bool = False       # decode block uses the fused
+    #                                  residual+rmsnorm+projection step
+    #                                  (maps to the DSL fusion pass's
+    #                                  rmsnorm_gemm kernel on TPU); outputs
+    #                                  are bitwise identical either way —
+    #                                  the win is fewer kernel dispatches
+    #                                  and HBM round-trips per step
 
     # ---- derived -------------------------------------------------------
     @property

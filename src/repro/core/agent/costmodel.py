@@ -375,3 +375,33 @@ class CostModel:
             segs.append(c)
         runtime = sum(c.t_total for c in segs) * max(solution.quality, 1e-3)
         return Measurement(runtime_s=runtime, ok=True, segments=segs)
+
+
+def cite_fusion_report(report) -> str:
+    """One-line citation of a compile artifact's fusion report
+    (``CompiledKernel.fusion``) for agent run logs / hypothesis notes.
+
+    The fusion pass is the compiler-side ground truth for the model's
+    epilogue-fusion and full-row-norm terms above: citing its per-edge
+    predicted bytes-saved ties an agent's "fuse these stages" hypothesis
+    to the SOL memory-traffic estimate that justified it.
+    """
+    if report is None:
+        return "no fusion report (single-kernel program)"
+    fused = [d for d in report.decisions if d.fused]
+    declined = [d for d in report.decisions if not d.fused]
+    parts = []
+    for d in fused:
+        if d.bytes_saved is not None:
+            parts.append(f"{d.pattern} saves {d.bytes_saved / 1e3:.1f} KB"
+                         + (f" ({100 * d.headroom:.0f}% of unfused traffic)"
+                            if d.headroom else ""))
+        else:
+            parts.append(d.pattern)
+    head = f"fused {len(fused)}/{len(report.decisions)} edges"
+    if parts:
+        head += ": " + "; ".join(parts)
+    if declined:
+        head += f"; declined: " + "; ".join(
+            f"{d.pattern} ({d.reason})" for d in declined[:2])
+    return head

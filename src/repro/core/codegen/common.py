@@ -43,13 +43,30 @@ OP_INPUTS: Dict[str, Tuple[str, ...]] = {
     "cumprod": ("x",),
     "cross_entropy": ("logits", "labels"),
     "ssd_scan": ("x", "dt", "a", "b", "c"),
+    # fused producer->consumer stages emitted by the SOL-guided fusion pass
+    "rmsnorm_gemm": ("x", "gamma", "b"),
+    "gemm_gemm": ("a", "b", "b2"),
 }
 
 
-def aux_plan(ir: KernelIR) -> List[Tuple[str, str]]:
-    """Ordered (aux_name, aux_kind) pairs the epilogue chain consumes."""
+def _uniquify(names: Sequence[str], seen: Dict[str, int]) -> List[str]:
+    """Make ``names`` unique python identifiers across a whole signature.
+
+    Repeated aux/input names (e.g. two ``bias()`` epilogues, or the same
+    aux appearing in two pipeline stages) would otherwise shadow each other
+    in the generated driver signature."""
+    out = []
+    for name in names:
+        n = seen.get(name, 0)
+        seen[name] = n + 1
+        out.append(name if n == 0 else f"{name}__{n + 1}")
+    return out
+
+
+def _chain_aux(epilogues) -> List[Tuple[str, str]]:
+    """Raw (aux_name, aux_kind) pairs one epilogue chain consumes."""
     plan: List[Tuple[str, str]] = []
-    for ep in ir.epilogues:
+    for ep in epilogues:
         edef = EPILOGUES[ep.name]
         if ep.name == "custom":
             for name, spec in ep.inputs:
@@ -61,38 +78,77 @@ def aux_plan(ir: KernelIR) -> List[Tuple[str, str]]:
     return plan
 
 
-def emit_epilogue_fn(ir: KernelIR, fn_name: str = "_epilogue") -> str:
-    """Emit ``def _epilogue(x, *blocks)`` applying the chain in order.
+def aux_plan(ir: KernelIR) -> List[Tuple[str, str]]:
+    """Ordered, deduplicated (aux_name, aux_kind) pairs the kernel's
+    epilogue chains consume — mid-chain aux (fused gemm_gemm stages) first,
+    then the final chain, matching the generated call order.
 
-    Blocks arrive already broadcast-compatible with x (kernels/ref handle the
-    vector-vs-full expansion), in aux_plan order.
-    """
-    plan = aux_plan(ir)
-    args = ", ".join(["x"] + [name for name, _ in plan])
+    Names are uniquified against the op's primary inputs too: a custom
+    epilogue input named like a primary operand ("a", "b", ...) must not
+    emit a duplicate parameter in ``def kernel_fn(a, b, b)``."""
+    mid = getattr(ir, "mid_epilogues", ())
+    raw = _chain_aux(mid) + _chain_aux(ir.epilogues)
+    seen: Dict[str, int] = {}
+    for n in OP_INPUTS.get(ir.op_name, ()):
+        seen[n] = 1
+    names = _uniquify([name for name, _ in raw], seen)
+    return [(n, kind) for n, (_, kind) in zip(names, raw)]
+
+
+def mid_aux_count(ir: KernelIR) -> int:
+    """How many entries of ``aux_plan(ir)`` belong to the mid chain."""
+    return len(_chain_aux(getattr(ir, "mid_epilogues", ())))
+
+
+def emit_chain_fn(epilogues, aux_names: Sequence[str], fn_name: str,
+                  custom_offset: int = 0,
+                  kernel_write_casts: bool = True) -> str:
+    """Emit ``def fn_name(x, *blocks)`` applying ``epilogues`` in order.
+
+    ``aux_names`` are the (already uniquified) identifiers for the chain's
+    aux blocks, in chain order; ``custom_offset`` offsets the module-level
+    ``_custom_<i>`` binding indices so split chains (pre/mid/post) can share
+    one set of bindings.  ``kernel_write_casts=False`` (the XLA backend)
+    skips fold-boundary casts marked ``kernel_write`` — those replicate a
+    Pallas kernel's write-at-input-dtype round trip, which the XLA unfused
+    kernels don't have."""
+    args = ", ".join(["x"] + list(aux_names))
     lines = [f"def {fn_name}({args}):"]
-    aux_iter = iter([name for name, _ in plan])
-    if not ir.epilogues:
+    aux_iter = iter(aux_names)
+    if not epilogues:
         lines.append("    return x")
         return "\n".join(lines)
-    for i, ep in enumerate(ir.epilogues):
+    ci = custom_offset
+    for ep in epilogues:
         edef = EPILOGUES[ep.name]
         if ep.name == "custom":
-            names = [name for name, _ in ep.inputs]
-            for _ in names:
-                next(aux_iter)
-            kwargs = ", ".join(f"{n}={n}" for n in names)
-            lines.append(f"    x = _custom_{i}(x{', ' + kwargs if kwargs else ''})")
+            orig = [name for name, _ in ep.inputs]
+            uniq = [next(aux_iter) for _ in orig]
+            kwargs = ", ".join(f"{o}={u}" for o, u in zip(orig, uniq))
+            lines.append(
+                f"    x = _custom_{ci}(x{', ' + kwargs if kwargs else ''})")
+            ci += 1
         elif edef.aux_input:
             aux = next(aux_iter)
-            if ep.name == "bias":
-                lines.append(f"    x = x + {aux}")
-            elif ep.name == "residual_add":
+            if ep.name in ("bias", "residual_add"):
                 lines.append(f"    x = x + {aux}")
             elif ep.name in ("per_channel_scale", "per_col_scale",
                              "per_row_scale"):
                 lines.append(f"    x = x * {aux}")
+            elif ep.name == "rmsnorm":
+                eps = float(ep.param("eps", 1e-6))
+                lines.append(
+                    f"    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), "
+                    f"axis=-1, keepdims=True) + {eps}) * {aux}")
             else:
                 raise KeyError(f"no emitter for aux epilogue {ep.name}")
+        elif ep.name == "cast":
+            if ep.param("kernel_write") and not kernel_write_casts:
+                continue
+            dt = JNP_DTYPE[str(ep.param("dtype"))]
+            # materialization round-trip at a fused stage boundary: keeps
+            # fused output bitwise identical to the unfused pipeline
+            lines.append(f"    x = x.astype({dt}).astype(jnp.float32)")
         else:
             params = dict(ep.params)
             lines.append(f"    x = _act({ep.name!r}, {params!r})(x)")
@@ -100,14 +156,35 @@ def emit_epilogue_fn(ir: KernelIR, fn_name: str = "_epilogue") -> str:
     return "\n".join(lines)
 
 
+def emit_epilogue_fn(ir: KernelIR, fn_name: str = "_epilogue",
+                     kernel_write_casts: bool = True) -> str:
+    """Emit ``def _epilogue(x, *blocks)`` applying the final chain in order.
+
+    Blocks arrive already broadcast-compatible with x (kernels/ref handle the
+    vector-vs-full expansion), in aux_plan order (after any mid-chain aux).
+    """
+    plan = aux_plan(ir)
+    n_mid = mid_aux_count(ir)
+    names = [name for name, _ in plan][n_mid:]
+    n_mid_customs = sum(1 for ep in getattr(ir, "mid_epilogues", ())
+                        if ep.name == "custom")
+    return emit_chain_fn(ir.epilogues, names, fn_name,
+                         custom_offset=n_mid_customs,
+                         kernel_write_casts=kernel_write_casts)
+
+
 def emit_custom_bindings(ir: KernelIR) -> str:
-    """Emit module-level compiled custom-expression bindings."""
+    """Emit module-level compiled custom-expression bindings (mid chain
+    first, then the final chain — matching emit_chain_fn offsets)."""
     out = []
-    for i, ep in enumerate(ir.epilogues):
+    chains = tuple(getattr(ir, "mid_epilogues", ())) + tuple(ir.epilogues)
+    i = 0
+    for ep in chains:
         if ep.name == "custom":
             names = [name for name, _ in ep.inputs]
             out.append(
                 f"_custom_{i} = _compile_custom({ep.expr!r}, {names!r})")
+            i += 1
     return "\n".join(out)
 
 

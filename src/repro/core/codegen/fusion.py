@@ -1,0 +1,534 @@
+"""SOL-guided inter-stage fusion pass for ``pipeline(...)`` programs.
+
+Runs between ``lower_and_validate`` and codegen.  A dataflow walk over the
+``PipelineIR`` stage list finds producer->consumer kernel pairs whose
+intermediate never needs HBM residency and rewrites them:
+
+  fold_eltwise   an ``eltwise`` transform stage folds into the producer's
+                 epilogue chain (the paper's EVT epilogue fusion),
+  fold_rmsnorm   a single-consumer ``rmsnorm`` stage folds into a GEMM
+                 producer's epilogue chain (legal because one N tile spans
+                 the whole output row — the Pallas backend routes such
+                 chains through the single-N-tile ``gemm_rmsnorm`` path),
+  rmsnorm_gemm   rmsnorm -> gemm collapses into one kernel whose normalized
+                 activations stay in VMEM,
+  gemm_gemm      gemm -> gemm collapses into one kernel whose (row-block,
+                 N1) intermediate tile stays in VMEM.
+
+Fuse-vs-materialize is decided per edge with the SOL memory-traffic model
+(``core/sol/characterize``): predicted HBM bytes saved (one write + one
+read of the intermediate) against the fused kernel's VMEM working set.
+Every decision — including declines, with the reason — lands in the
+``FusionReport`` stored on the compile artifact, so ``core/tune`` can treat
+fusion on/off as a tunable axis (a ``fusion:<pattern>`` tuning-cache record
+with ``{"fuse": false}`` vetoes an edge) and the agent's cost model can
+cite the predicted headroom.
+
+Dtype fidelity: each fold inserts ``cast`` epilogues (and the fused kernels
+replay ``inter_dtypes``) reproducing the exact materialization round-trips
+of the unfused driver, so fused outputs are bitwise identical.
+
+Escape hatch: ``compile_dsl(..., fuse="off")`` or ``REPRO_FUSION=off``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..dsl.ir import DTypes, EpilogueIR, KernelIR, PipelineIR, TransformIR
+from ..dsl.stdlib import EPILOGUES
+from ..sol.hardware import dtype_bytes, get_chip
+from .common import input_names
+from .pipeline import _PERMS
+
+MODES = ("auto", "off", "force")
+
+_LANE = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _cast_ep(dtype: str, kernel_write: bool = False) -> EpilogueIR:
+    """A fold-boundary dtype round-trip.  ``kernel_write=True`` marks casts
+    replicating a Pallas kernel's write-at-input-dtype (``row_map``/
+    ``rmsnorm`` write o_ref at x.dtype); the XLA backend — whose unfused
+    kernels compute in f32 and cast straight to the output dtype — skips
+    those so fused-vs-unfused stays bitwise on BOTH backends."""
+    if kernel_write:
+        return EpilogueIR("cast", params=(("dtype", dtype),
+                                          ("kernel_write", True)))
+    return EpilogueIR("cast", params=(("dtype", dtype),))
+
+
+def _has_row_stat(eps: Sequence[EpilogueIR]) -> bool:
+    return any(EPILOGUES[e.name].row_stat for e in eps)
+
+
+def _aux_free(eps: Sequence[EpilogueIR]) -> bool:
+    """Chain uses no runtime side inputs (safe to fold onto any producer)."""
+    for e in eps:
+        if e.name == "custom" and e.inputs:
+            return False
+        if EPILOGUES[e.name].aux_input:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Decisions and report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FusionDecision:
+    pattern: str               # fold_eltwise|fold_rmsnorm|rmsnorm_gemm|gemm_gemm|none
+    producer: str
+    consumer: str
+    edge: Tuple[int, int]      # kernel-stage indices in the UNFUSED pipeline
+    fused: bool
+    reason: str
+    bytes_saved: Optional[float] = None   # predicted HBM bytes saved
+    headroom: Optional[float] = None      # fraction of unfused SOL memory time
+    seconds_saved: Optional[float] = None # bytes_saved / HBM bandwidth
+    vmem_bytes: Optional[int] = None      # fused working set (when checked)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "pattern": self.pattern, "producer": self.producer,
+            "consumer": self.consumer, "edge": list(self.edge),
+            "fused": self.fused, "reason": self.reason,
+            "bytes_saved": self.bytes_saved, "headroom": self.headroom,
+            "seconds_saved": self.seconds_saved,
+            "vmem_bytes": self.vmem_bytes,
+        }
+
+
+@dataclass
+class FusionReport:
+    mode: str
+    decisions: List[FusionDecision] = field(default_factory=list)
+    unfused_bytes: Optional[float] = None  # SOL best-case bytes, unfused
+    fused_bytes: Optional[float] = None    # after the pass's fusions
+
+    @property
+    def fused_count(self) -> int:
+        return sum(1 for d in self.decisions if d.fused)
+
+    @property
+    def bytes_saved(self) -> Optional[float]:
+        if self.unfused_bytes is None or self.fused_bytes is None:
+            return None
+        return self.unfused_bytes - self.fused_bytes
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "mode": self.mode,
+            "fused_count": self.fused_count,
+            "unfused_bytes": self.unfused_bytes,
+            "fused_bytes": self.fused_bytes,
+            "bytes_saved": self.bytes_saved,
+            "decisions": [d.as_dict() for d in self.decisions],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Shape inference over the unfused pipeline (from optional driver hints)
+# ---------------------------------------------------------------------------
+
+def _infer_stage_shapes(ir: PipelineIR, shape_hints: Optional[Dict]
+                        ) -> Optional[List[Dict[str, Tuple[int, ...]]]]:
+    """Per-kernel-stage {"in": [shapes], "out": shape} from driver-input
+    shape hints keyed by the unfused pipeline's signature names
+    (stage-0 names bare, later stages suffixed ``_s<i>``).  Returns None
+    when hints are missing or an op's shape rule is unknown."""
+    if not shape_hints:
+        return None
+    out: List[Dict[str, object]] = []
+    cur: Optional[Tuple[int, ...]] = None
+    ki = 0
+    try:
+        for st in ir.stages:
+            if isinstance(st, TransformIR):
+                perm = _PERMS.get((st.src_layout, st.dst_layout))
+                if st.target == "input" and ki == 0:
+                    first = input_names(ir.kernel_stages[0])[0]
+                    base = tuple(shape_hints[first])
+                    if perm:
+                        base = tuple(base[p] for p in perm)
+                    shape_hints = dict(shape_hints)
+                    shape_hints[first] = base
+                elif st.target == "output" and cur is not None and perm:
+                    cur = tuple(cur[p] for p in perm)
+                continue
+            names = input_names(st)
+            shapes: List[Tuple[int, ...]] = []
+            for j, n in enumerate(names):
+                if ki > 0 and j == 0:
+                    if cur is None:
+                        return None
+                    shapes.append(cur)
+                else:
+                    key = n if ki == 0 else f"{n}_s{ki}"
+                    shapes.append(tuple(shape_hints[key]))
+            op = st.op_name
+            if op == "gemm":
+                (m, k), (k2, n) = shapes[0], shapes[1]
+                if k != k2:
+                    return None
+                cur = (m, n)
+            elif op in ("rmsnorm", "layernorm", "softmax", "eltwise"):
+                cur = shapes[0]
+            else:
+                cur = shapes[0]     # permissive: flow the first input
+            out.append({"in": shapes, "out": cur})
+            ki += 1
+    except (KeyError, ValueError, IndexError):
+        return None
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SOL memory-traffic model per edge
+# ---------------------------------------------------------------------------
+
+def _edge_traffic(inter_shape: Optional[Tuple[int, ...]], inter_dtype: str,
+                  chip) -> Tuple[Optional[float], Optional[float]]:
+    """(bytes_saved, seconds_saved) for killing one intermediate's HBM
+    round-trip: best-case one write + one read (characterize semantics)."""
+    if inter_shape is None:
+        return None, None
+    nbytes = math.prod(inter_shape) * dtype_bytes(inter_dtype)
+    saved = 2.0 * nbytes
+    return saved, saved / chip.hbm_bandwidth
+
+
+def _pipeline_unfused_bytes(ir: PipelineIR,
+                            shapes: Optional[List[Dict]]) -> Optional[float]:
+    """SOL best-case HBM bytes for the unfused pipeline: every stage reads
+    its inputs and writes its output once."""
+    if shapes is None:
+        return None
+    total = 0.0
+    for st, sh in zip(ir.kernel_stages, shapes):
+        for j, s in enumerate(sh["in"]):
+            total += math.prod(s) * dtype_bytes(st.dtypes.input)
+        total += math.prod(sh["out"]) * dtype_bytes(st.dtypes.output)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-pattern legality + VMEM working sets
+# ---------------------------------------------------------------------------
+
+def _tile_of(k: KernelIR, default=(256, 256, 512)) -> Tuple[int, int, int]:
+    if k.tile is not None:
+        return (k.tile.m, k.tile.n, k.tile.k)
+    return default
+
+
+def _vmem_budget(k: KernelIR, chip) -> int:
+    return k.vmem_limit_mb * 2 ** 20 if k.vmem_limit_mb else chip.vmem_bytes
+
+
+def _ws_gemm_rmsnorm(p: KernelIR, dims, chip) -> int:
+    """Working set of a GEMM forced to a single N tile (row-stat fold)."""
+    m, k = dims["in"][0]
+    n = dims["out"][1]
+    bm, _, bk = _tile_of(p)
+    bn = _ceil_to(n, _LANE)
+    in_b = dtype_bytes(p.dtypes.input)
+    return p.stages * (bm * bk + bk * bn) * in_b + bm * bn * 4
+
+
+def _ws_rmsnorm_gemm(p: KernelIR, c: KernelIR, pdims, cdims, chip) -> int:
+    m, k = pdims["in"][0]
+    n = cdims["out"][1]
+    bm, bn, bk = _tile_of(c)
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, _LANE))
+    kp = _ceil_to(k, bk)
+    in_b = dtype_bytes(c.dtypes.input)
+    # x row block + gamma-scaled B slab + f32 normalized rows + f32 acc
+    return (bm * kp + kp * bn) * in_b + bm * kp * 4 + bm * bn * 4
+
+
+def _ws_gemm_gemm(p: KernelIR, c: KernelIR, pdims, cdims, chip) -> int:
+    m, k = pdims["in"][0]
+    n1 = pdims["out"][1]
+    n2 = cdims["out"][1]
+    bm, bn, bk = _tile_of(p)
+    bk2 = _tile_of(c)[2]
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n2, _LANE))
+    kp = _ceil_to(k, bk)
+    n1p = _ceil_to(n1, bk2)
+    in_b = dtype_bytes(p.dtypes.input)
+    # a row block + full B1 + B2 column slab + f32 intermediate + f32 acc
+    return (bm * kp + kp * n1p + n1p * bn) * in_b \
+        + bm * n1p * 4 + bm * bn * 4
+
+
+def _tuned_veto(pattern: str, dims: Optional[Tuple[int, ...]],
+                dtype: str) -> bool:
+    """Fusion as a tunable axis: a measured ``fusion:<pattern>`` record in
+    the tuning cache with {"fuse": false} vetoes the edge."""
+    if dims is None:
+        return False
+    try:
+        from ..tune import lookup
+        best = lookup(f"fusion:{pattern}", dims, dtype)
+    except Exception:
+        return False
+    return bool(best) and best.get("fuse") is False
+
+
+# ---------------------------------------------------------------------------
+# The pass
+# ---------------------------------------------------------------------------
+
+def _try_fuse(p: KernelIR, c: KernelIR, pdims, cdims, mode: str, chip
+              ) -> Tuple[Optional[KernelIR], str, str, Dict]:
+    """Attempt one producer->consumer fusion.  Returns
+    (fused_stage_or_None, pattern, reason, extras)."""
+    extras: Dict[str, object] = {}
+    inter_shape = pdims["out"] if pdims else None
+    saved, secs = _edge_traffic(inter_shape, p.dtypes.output, chip)
+    extras["bytes_saved"] = saved
+    extras["seconds_saved"] = secs
+
+    # ---- (a) epilogue folds ---------------------------------------------
+    if c.op_name == "eltwise":
+        if not _aux_free(c.epilogues):
+            return None, "fold_eltwise", \
+                "consumer chain needs side inputs the producer path " \
+                "cannot thread", extras
+        appended = [_cast_ep(p.dtypes.output)]
+        if c.dtypes.input != p.dtypes.output:
+            appended.append(_cast_ep(c.dtypes.input, kernel_write=True))
+        appended += list(c.epilogues) \
+            + [_cast_ep(c.dtypes.input, kernel_write=True)]
+        fused = p.with_appended_epilogues(
+            tuple(appended), output_dtype=c.dtypes.output)
+        return fused, "fold_eltwise", \
+            "elementwise tail is free in the producer epilogue", extras
+
+    if c.op_name == "rmsnorm":
+        if p.op_name != "gemm":
+            return None, "fold_rmsnorm", \
+                f"row-stat epilogues fold into gemm producers only " \
+                f"(got {p.op_name})", extras
+        if p.swap or p.split_k.mode != "none":
+            return None, "fold_rmsnorm", \
+                "producer uses swap/split-k (incompatible with the " \
+                "single-N-tile path)", extras
+        if _has_row_stat(p.epilogues):
+            return None, "fold_rmsnorm", \
+                "producer chain already contains a row-stat epilogue", extras
+        if not _aux_free(c.epilogues):
+            return None, "fold_rmsnorm", \
+                "consumer chain needs side inputs", extras
+        if pdims is None:
+            if mode != "force":
+                # the fold forces a single N tile spanning the whole row —
+                # without shapes its working set is unprovable, like the
+                # other VMEM-resident patterns
+                return None, "fold_rmsnorm", \
+                    "shapes unknown: pass shape_hints (or fuse='force') " \
+                    "so the single-N-tile working set can be proven", extras
+        else:
+            ws = _ws_gemm_rmsnorm(p, pdims, chip)
+            extras["vmem_bytes"] = ws
+            budget = _vmem_budget(p, chip)
+            if mode != "force" and ws > budget:
+                return None, "fold_rmsnorm", \
+                    f"VMEM pressure: single-N-tile working set " \
+                    f"{ws / 2**20:.2f} MiB > {budget / 2**20:.0f} MiB " \
+                    f"budget", extras
+        dims = tuple(pdims["in"][0]) + (pdims["out"][1],) if pdims else None
+        if mode != "force" and _tuned_veto("fold_rmsnorm", dims,
+                                           p.dtypes.input):
+            return None, "fold_rmsnorm", \
+                "autotuner measured unfused faster for this shape " \
+                "bucket", extras
+        eps = float(c.op_param("eps", 1e-6))
+        appended = [_cast_ep(p.dtypes.output)]
+        if c.dtypes.input != p.dtypes.output:
+            appended.append(_cast_ep(c.dtypes.input, kernel_write=True))
+        appended += [EpilogueIR("rmsnorm", params=(("eps", eps),)),
+                     _cast_ep(c.dtypes.input, kernel_write=True)]
+        appended += list(c.epilogues)
+        fused = p.with_appended_epilogues(
+            tuple(appended), output_dtype=c.dtypes.output)
+        return fused, "fold_rmsnorm", \
+            "single-consumer norm folds into the GEMM epilogue " \
+            "(one N tile spans the row)", extras
+
+    # ---- (b) fused producer->consumer kernels ---------------------------
+    if p.op_name == "rmsnorm" and c.op_name == "gemm":
+        if p.epilogues:
+            return None, "rmsnorm_gemm", \
+                "producer norm has its own epilogue chain", extras
+        if c.swap or c.split_k.mode != "none":
+            return None, "rmsnorm_gemm", \
+                "consumer uses swap/split-k", extras
+        if _has_row_stat(c.epilogues):
+            return None, "rmsnorm_gemm", \
+                "consumer chain contains a row-stat epilogue", extras
+        if pdims is None or cdims is None:
+            if mode != "force":
+                return None, "rmsnorm_gemm", \
+                    "shapes unknown: pass shape_hints (or fuse='force') " \
+                    "so VMEM residency can be proven", extras
+        else:
+            ws = _ws_rmsnorm_gemm(p, c, pdims, cdims, chip)
+            extras["vmem_bytes"] = ws
+            budget = _vmem_budget(c, chip)
+            if mode != "force" and ws > budget:
+                return None, "rmsnorm_gemm", \
+                    f"VMEM pressure: fused working set {ws / 2**20:.2f} " \
+                    f"MiB > {budget / 2**20:.0f} MiB budget", extras
+            dims = tuple(pdims["in"][0]) + (cdims["out"][1],)
+            if mode != "force" and _tuned_veto("rmsnorm_gemm", dims,
+                                               c.dtypes.input):
+                return None, "rmsnorm_gemm", \
+                    "autotuner measured unfused faster for this shape " \
+                    "bucket", extras
+        eps = float(p.op_param("eps", 1e-6))
+        # pallas replays the kernel-write + operand casts; XLA's unfused
+        # driver only materializes the stage output dtype
+        inter = ",".join([p.dtypes.input, p.dtypes.output, c.dtypes.input])
+        fused = KernelIR(
+            op_name="rmsnorm_gemm",
+            op_params=tuple(sorted({
+                "eps": eps, "b_dtype": c.dtypes.input,
+                "inter_dtypes": inter,
+                "inter_dtypes_xla": p.dtypes.output}.items())),
+            arch=c.arch,
+            dtypes=DTypes(p.dtypes.input, "fp32", c.dtypes.output),
+            tile=c.tile, stages=c.stages,
+            vmem_limit_mb=c.vmem_limit_mb,
+            epilogues=c.epilogues,
+        )
+        return fused, "rmsnorm_gemm", \
+            "normalized activations stay in VMEM", extras
+
+    if p.op_name == "gemm" and c.op_name == "gemm":
+        if p.swap or c.swap or p.split_k.mode != "none" \
+                or c.split_k.mode != "none":
+            return None, "gemm_gemm", "swap/split-k stage", extras
+        if _has_row_stat(p.epilogues) or _has_row_stat(c.epilogues):
+            return None, "gemm_gemm", \
+                "a chain contains a row-stat epilogue", extras
+        if pdims is None or cdims is None:
+            if mode != "force":
+                return None, "gemm_gemm", \
+                    "shapes unknown: pass shape_hints (or fuse='force') " \
+                    "so VMEM residency can be proven", extras
+        else:
+            ws = _ws_gemm_gemm(p, c, pdims, cdims, chip)
+            extras["vmem_bytes"] = ws
+            budget = _vmem_budget(c, chip)
+            if mode != "force" and ws > budget:
+                return None, "gemm_gemm", \
+                    f"VMEM pressure: fused working set {ws / 2**20:.2f} " \
+                    f"MiB > {budget / 2**20:.0f} MiB budget", extras
+            dims = tuple(pdims["in"][0]) + (pdims["out"][1],
+                                            cdims["out"][1])
+            if mode != "force" and _tuned_veto("gemm_gemm", dims,
+                                               p.dtypes.input):
+                return None, "gemm_gemm", \
+                    "autotuner measured unfused faster for this shape " \
+                    "bucket", extras
+        op_params: Dict[str, object] = {
+            "b2_dtype": c.dtypes.input,
+            "inter_dtypes": ",".join([p.dtypes.output, c.dtypes.input]),
+            "inter_dtypes_xla": p.dtypes.output,
+        }
+        if c.tile is not None:
+            op_params["k2_chunk"] = c.tile.k
+        fused = KernelIR(
+            op_name="gemm_gemm",
+            op_params=tuple(sorted(op_params.items())),
+            arch=p.arch,
+            dtypes=DTypes(p.dtypes.input, "fp32", c.dtypes.output),
+            tile=p.tile, stages=p.stages,
+            vmem_limit_mb=c.vmem_limit_mb,
+            mid_epilogues=p.epilogues,
+            epilogues=c.epilogues,
+        )
+        return fused, "gemm_gemm", \
+            "intermediate tile stays in VMEM", extras
+
+    return None, "none", "no applicable fusion pattern", extras
+
+
+def fuse_pipeline(ir: PipelineIR, *, mode: str = "auto",
+                  shape_hints: Optional[Dict] = None,
+                  ) -> Tuple[PipelineIR, FusionReport]:
+    """Apply the SOL-guided fusion pass; returns (fused_ir, report)."""
+    if mode not in MODES:
+        raise ValueError(f"fuse mode must be one of {MODES}, got {mode!r}")
+    kstages = ir.kernel_stages
+    chip = get_chip(kstages[0].arch) if kstages else get_chip("tpu_v5e")
+    shapes = _infer_stage_shapes(ir, shape_hints)
+    report = FusionReport(mode=mode)
+    report.unfused_bytes = _pipeline_unfused_bytes(ir, shapes)
+    report.fused_bytes = report.unfused_bytes
+
+    if mode == "off" or len(kstages) < 2:
+        return ir, report
+
+    # Work list of (stage, origin_span) where origin_span = (first, last)
+    # kernel-stage indices of the unfused pipeline the entry covers.
+    work: List[Tuple[object, Optional[Tuple[int, int]]]] = []
+    ki = 0
+    for st in ir.stages:
+        if isinstance(st, KernelIR):
+            work.append((st, (ki, ki)))
+            ki += 1
+        else:
+            work.append((st, None))
+
+    seen_edges = set()
+    changed = True
+    while changed:
+        changed = False
+        for idx in range(len(work) - 1):
+            (p, pspan), (c, cspan) = work[idx], work[idx + 1]
+            if not (isinstance(p, KernelIR) and isinstance(c, KernelIR)):
+                continue
+            pdims = shapes[pspan[1]] if shapes else None
+            cdims = shapes[cspan[1]] if shapes else None
+            if pdims is not None and pspan[0] != pspan[1]:
+                # a fused producer's inputs are those of its first origin
+                pdims = {"in": shapes[pspan[0]]["in"],
+                         "out": shapes[pspan[1]]["out"]}
+            fused, pattern, reason, extras = _try_fuse(
+                p, c, pdims, cdims, mode, chip)
+            dec = FusionDecision(
+                pattern=pattern, producer=p.op_name, consumer=c.op_name,
+                edge=(pspan[1], cspan[0]), fused=fused is not None,
+                reason=reason,
+                bytes_saved=extras.get("bytes_saved"),
+                headroom=None,
+                seconds_saved=extras.get("seconds_saved"),
+                vmem_bytes=extras.get("vmem_bytes"))
+            if report.unfused_bytes and dec.bytes_saved is not None:
+                dec.headroom = dec.bytes_saved / report.unfused_bytes
+            key = (pspan, cspan, pattern)
+            if key not in seen_edges:       # re-scans revisit early edges
+                seen_edges.add(key)
+                report.decisions.append(dec)
+            if fused is not None:
+                work[idx:idx + 2] = [(fused, (pspan[0], cspan[1]))]
+                if report.fused_bytes is not None \
+                        and dec.bytes_saved is not None:
+                    report.fused_bytes -= dec.bytes_saved
+                changed = True
+                break
+
+    fused_ir = PipelineIR(stages=tuple(st for st, _ in work))
+    return fused_ir, report

@@ -14,13 +14,17 @@ from __future__ import annotations
 from typing import List
 
 from ..dsl.ir import KernelIR
+from ..dsl.stdlib import EPILOGUES
 from . import xla_backend
-from .common import JNP_DTYPE, aux_plan, emit_custom_bindings, emit_epilogue_fn, input_names
+from .common import (JNP_DTYPE, _chain_aux, aux_plan, emit_chain_fn,
+                     emit_custom_bindings, emit_epilogue_fn, input_names,
+                     mid_aux_count)
 
 # Ops with a dedicated Pallas kernel; everything else routes to XLA codegen.
 PALLAS_ROUTED = {
     "gemm", "batched_gemm", "grouped_gemm", "conv1d", "conv2d",
     "attention", "eltwise", "rmsnorm", "layernorm", "softmax", "ssd_scan",
+    "rmsnorm_gemm", "gemm_gemm",
 }
 XLA_ROUTED = {
     "depthwise_conv1d", "reduce", "cumsum", "cumprod", "cross_entropy",
@@ -57,17 +61,101 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
     aux_kinds = tuple(kind for _, kind in plan)
     sig = ", ".join(list(prim) + aux_names)
 
+    row_stat = any(EPILOGUES[e.name].row_stat for e in ir.epilogues)
+    if row_stat and op != "gemm":
+        raise NotImplementedError(
+            f"pallas backend: row-stat epilogues (rmsnorm) are only fusable "
+            f"into gemm, not {op!r}")
+
     pre: List[str] = [
         "from repro.kernels import ops as _kops",
         emit_custom_bindings(ir),
     ]
     ep_fn = f"_epilogue_{fn_name}"
-    has_ep = bool(ir.epilogues)
+    has_ep = bool(ir.epilogues) and not row_stat
     if has_ep:
         pre.append(emit_epilogue_fn(ir, ep_fn))
     ep_arg = ep_fn if has_ep else "None"
 
     body: List[str] = [f"def {fn_name}({sig}):"]
+
+    def _inter_src(default: str = "") -> str:
+        names = [s for s in str(ir.op_param("inter_dtypes", default)
+                                ).split(",") if s]
+        return "(" + "".join(JNP_DTYPE[s] + ", " for s in names) + ")"
+
+    if op == "gemm" and row_stat:
+        # folded single-consumer RMSNorm: split the chain at the norm and
+        # route through the single-N-tile gemm_rmsnorm path
+        names = [e.name for e in ir.epilogues]
+        idx = names.index("rmsnorm")
+        pre_chain = ir.epilogues[:idx]
+        post_chain = ir.epilogues[idx + 1:]
+        eps = float(ir.epilogues[idx].param("eps", 1e-6))
+        n_pre = len(_chain_aux(pre_chain))
+        pre_names = aux_names[:n_pre]
+        post_names = aux_names[n_pre + 1:]
+        n_pre_customs = sum(1 for e in pre_chain if e.name == "custom")
+        pre_arg = post_arg = "None"
+        if pre_chain:
+            pre_arg = f"_ep_pre_{fn_name}"
+            pre.append(emit_chain_fn(pre_chain, pre_names, pre_arg))
+        if post_chain:
+            post_arg = f"_ep_post_{fn_name}"
+            pre.append(emit_chain_fn(post_chain, post_names, post_arg,
+                                     custom_offset=n_pre_customs))
+        tile = _tile(ir)
+        cast_aux = "".join(f", {n}" for n in aux_names)
+        body += [
+            f"    a = a.astype({in_dt}); b = b.astype({in_dt})",
+            f"    return _kops.gemm_rmsnorm(a, b{cast_aux}, tile={tile},",
+            f"        pre_epilogue={pre_arg}, post_epilogue={post_arg},",
+            f"        n_pre_aux={n_pre}, eps={eps},",
+            f"        aux_kinds={aux_kinds!r}, out_dtype={out_dt})",
+        ]
+        return ("\n".join(p for p in pre if p) + "\n\n"
+                + "\n".join(body) + "\n")
+
+    if op == "rmsnorm_gemm":
+        eps = float(ir.op_param("eps", 1e-6))
+        tile = _tile(ir)
+        b_dt = JNP_DTYPE[str(ir.op_param("b_dtype", ir.dtypes.input))]
+        cast_aux = "".join(f", {n}" for n in aux_names)
+        body += [
+            f"    x = x.astype({in_dt}); b = b.astype({b_dt})",
+            f"    return _kops.rmsnorm_gemm(x, gamma, b{cast_aux},"
+            f" tile={tile},",
+            f"        eps={eps}, inter_dtypes={_inter_src()},",
+            f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+            f"        out_dtype={out_dt})",
+        ]
+        return ("\n".join(p for p in pre if p) + "\n\n"
+                + "\n".join(body) + "\n")
+
+    if op == "gemm_gemm":
+        tile = _tile(ir)
+        n_mid = mid_aux_count(ir)
+        mid_names = aux_names[:n_mid]
+        mid_kinds = aux_kinds[:n_mid]
+        fin_kinds = aux_kinds[n_mid:]
+        b2_dt = JNP_DTYPE[str(ir.op_param("b2_dtype", ir.dtypes.input))]
+        k2 = ir.op_param("k2_chunk", None)
+        mid_arg = "None"
+        if ir.mid_epilogues:
+            mid_arg = f"_ep_mid_{fn_name}"
+            pre.append(emit_chain_fn(ir.mid_epilogues, mid_names, mid_arg))
+        cast_aux = "".join(f", {n}" for n in aux_names)
+        body += [
+            f"    a = a.astype({in_dt}); b = b.astype({in_dt});"
+            f" b2 = b2.astype({b2_dt})",
+            f"    return _kops.gemm_gemm(a, b, b2{cast_aux}, tile={tile},"
+            f" k2_chunk={k2},",
+            f"        mid_epilogue={mid_arg}, mid_aux_kinds={mid_kinds!r},",
+            f"        inter_dtypes={_inter_src()}, epilogue={ep_arg},",
+            f"        aux_kinds={fin_kinds!r}, out_dtype={out_dt})",
+        ]
+        return ("\n".join(p for p in pre if p) + "\n\n"
+                + "\n".join(body) + "\n")
 
     if op in ("gemm", "batched_gemm", "grouped_gemm"):
         tile = _tile(ir)

@@ -8,7 +8,7 @@ expect a different layout/dtype than the surrounding model.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
 from ..dsl.ir import PipelineIR, TransformIR
 from . import pallas_backend, xla_backend
@@ -36,22 +36,35 @@ def _transform_expr(t: TransformIR, var: str) -> str:
 def _signature_plan(ir: PipelineIR) -> Tuple[List[str], List[str],
                                              List[List[str]]]:
     """Driver signature (prim, aux) and per-stage call args, derived from
-    the kernel stages alone — usable without generating any stage source."""
+    the kernel stages alone — usable without generating any stage source.
+
+    Names are deduplicated across the whole signature: a repeated aux/input
+    name (the same aux consumed by two stages, or by two epilogues of one
+    stage) gets a ``__<n>`` suffix instead of shadowing the earlier
+    parameter in the generated driver."""
     prim: List[str] = []
     aux: List[str] = []
     call_args: List[List[str]] = []
+    seen: Dict[str, int] = {}
+
+    def uniq(name: str) -> str:
+        n = seen.get(name, 0)
+        seen[name] = n + 1
+        return name if n == 0 else f"{name}__{n + 1}"
+
     for i, st in enumerate(ir.kernel_stages):
         names = list(input_names(st))
         aux_names = [name for name, _ in aux_plan(st)]
         if i == 0:
-            stage_prims = [f"{n}" for n in names]
+            stage_prims = [uniq(n) for n in names]
             prim.extend(stage_prims)
         else:
             # first input is the previous stage's output
-            stage_prims = ["_y"] + [f"{n}_s{i}" for n in names[1:]]
-            prim.extend(f"{n}_s{i}" for n in names[1:])
-        stage_aux = [f"{n}_s{i}" if i else n for n in aux_names]
-        aux.extend(a for a in stage_aux)
+            tail = [uniq(f"{n}_s{i}") for n in names[1:]]
+            stage_prims = ["_y"] + tail
+            prim.extend(tail)
+        stage_aux = [uniq(f"{n}_s{i}" if i else n) for n in aux_names]
+        aux.extend(stage_aux)
         call_args.append(stage_prims + stage_aux)
     return prim, aux, call_args
 

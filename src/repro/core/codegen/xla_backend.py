@@ -12,11 +12,13 @@ from __future__ import annotations
 from typing import List
 
 from ..dsl.ir import KernelIR
-from .common import JNP_DTYPE, aux_plan, emit_custom_bindings, emit_epilogue_fn, input_names
+from .common import (JNP_DTYPE, aux_plan, emit_chain_fn,
+                     emit_custom_bindings, emit_epilogue_fn, input_names,
+                     mid_aux_count)
 
 
 def _epilogue_call(ir: KernelIR, x_var: str = "x") -> List[str]:
-    plan = aux_plan(ir)
+    plan = aux_plan(ir)[mid_aux_count(ir):]   # final chain's aux only
     if not ir.epilogues:
         return []
     args = [x_var] + [
@@ -36,7 +38,8 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
     aux = [name for name, _ in aux_plan(ir)]
     sig = ", ".join(list(prim) + aux)
     pre: List[str] = [emit_custom_bindings(ir),
-                      emit_epilogue_fn(ir, f"_epilogue_{fn_name}")]
+                      emit_epilogue_fn(ir, f"_epilogue_{fn_name}",
+                                       kernel_write_casts=False)]
     body: List[str] = [f"def {fn_name}({sig}):"]
 
     def ep_lines():
@@ -44,10 +47,51 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
         return [ln.replace("_epilogue(", f"_epilogue_{fn_name}(")
                 for ln in lines]
 
+    def inter_casts(var: str = "x") -> List[str]:
+        # the XLA-specific boundary chain: the unfused XLA driver only
+        # materializes each stage's output dtype (no kernel-write round
+        # trips), so the fused emitter must replay exactly that
+        raw = ir.op_param("inter_dtypes_xla",
+                          ir.op_param("inter_dtypes", ""))
+        names = [s for s in str(raw).split(",") if s]
+        return [f"    {var} = {var}.astype({JNP_DTYPE[s]})" for s in names]
+
     op = ir.op_name
     if op == "gemm":
         body += [
             f"    x = jnp.dot(a.astype({f32}), b.astype({f32}){prec})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "rmsnorm_gemm":
+        eps = float(ir.op_param("eps", 1e-6))
+        body += [
+            f"    xf = x.astype({f32})",
+            "    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)",
+            f"    z = xf * jax.lax.rsqrt(ms + {eps}) * gamma.astype({f32})",
+            *inter_casts("z"),
+            f"    x = jnp.dot(z.astype({f32}), b.astype({f32}){prec})",
+            *ep_lines(),
+            f"    return x.astype({out_dt})",
+        ]
+    elif op == "gemm_gemm":
+        n_mid = mid_aux_count(ir)
+        mid_names = aux[:n_mid]
+        if ir.mid_epilogues:
+            pre.append(emit_chain_fn(ir.mid_epilogues, mid_names,
+                                     f"_ep_mid_{fn_name}",
+                                     kernel_write_casts=False))
+        mid_call = []
+        if ir.mid_epilogues:
+            mid_args = ["x"] + [
+                f"_bc({kind!r}, {name}.astype(jnp.float32), x.ndim)"
+                for name, kind in aux_plan(ir)[:n_mid]]
+            mid_call = [f"    x = _ep_mid_{fn_name}({', '.join(mid_args)})"]
+        body += [
+            f"    x = jnp.dot(a.astype({f32}), b.astype({f32}){prec})",
+            *mid_call,
+            *inter_casts(),
+            f"    x = jnp.dot(x.astype({f32}), b2.astype({f32}){prec})",
             *ep_lines(),
             f"    return x.astype({out_dt})",
         ]

@@ -1,7 +1,7 @@
 """muPallas: a compact, statically-validated DSL for TPU Pallas kernels."""
 
 from .compiler import (CompiledKernel, compile_dsl, validate_dsl, lower_dsl,
-                       clear_cache, BACKENDS)
+                       clear_cache, default_fuse_mode, BACKENDS)
 from .errors import Diagnostic, DSLError, DSLSyntaxError, DSLValidationError
 from .grammar import grammar_text, prompt_spec, grammar_stats
 from .ir import (AttnBlock, DTypes, EpilogueIR, KernelIR, Layout, PipelineIR,
@@ -9,9 +9,11 @@ from .ir import (AttnBlock, DTypes, EpilogueIR, KernelIR, Layout, PipelineIR,
 from .parser import parse
 from .stdlib import CONFIGS, EPILOGUES, OPS
 
+# The fusion pass itself lives in repro.core.codegen.fusion (imported
+# lazily by the compiler to avoid a dsl <-> codegen import cycle).
 __all__ = [
     "CompiledKernel", "compile_dsl", "validate_dsl", "lower_dsl",
-    "clear_cache", "BACKENDS",
+    "clear_cache", "default_fuse_mode", "BACKENDS",
     "Diagnostic", "DSLError", "DSLSyntaxError", "DSLValidationError",
     "grammar_text", "prompt_spec", "grammar_stats",
     "AttnBlock", "DTypes", "EpilogueIR", "KernelIR", "Layout", "PipelineIR",

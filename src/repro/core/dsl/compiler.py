@@ -29,14 +29,25 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from typing import TYPE_CHECKING
+
 from ..codegen import pallas_backend, pipeline as pipeline_gen, xla_backend
 from ..codegen.common import aux_plan, full_signature, header
 from .errors import Diagnostic, DSLError, DSLSyntaxError, DSLValidationError
+
+if TYPE_CHECKING:   # imported lazily at runtime (dsl <-> codegen cycle)
+    from ..codegen.fusion import FusionReport
 from .ir import KernelIR, PipelineIR, ProgramIR, namespace_of
 from .parser import parse
 from .validator import lower_and_validate
 
 BACKENDS = ("pallas", "xla")
+
+
+def default_fuse_mode() -> str:
+    """Fusion mode when ``compile_dsl`` gets ``fuse=None``: the
+    REPRO_FUSION env var (off | auto | force), default auto."""
+    return os.environ.get("REPRO_FUSION", "auto") or "auto"
 
 
 @dataclass
@@ -52,6 +63,10 @@ class CompiledKernel:
     dsl_source: str = ""
     compile_seconds: float = 0.0
     from_disk_cache: bool = False
+    # SOL-guided fusion pass artifact (pipelines only): every fuse/decline
+    # decision with its predicted bytes-saved headroom — what core/tune
+    # treats as a tunable axis and the agent's cost model cites.
+    fusion: Optional[FusionReport] = None
 
     @property
     def all_input_names(self) -> Tuple[str, ...]:
@@ -59,6 +74,11 @@ class CompiledKernel:
 
     def __call__(self, *args, **kwargs):
         return self.fn(*args, **kwargs)
+
+    def bind(self, **arrays):
+        """Call with inputs by name (fusion may reorder the positional
+        signature between fused and unfused compiles of one program)."""
+        return self.fn(*[arrays[n] for n in self.all_input_names])
 
 
 _CACHE: "OrderedDict[Tuple[str, str], CompiledKernel]" = OrderedDict()
@@ -74,7 +94,7 @@ def _cache_cap() -> int:
 # Stamped into every disk-cache file and required on read: bump it whenever
 # codegen output changes so stale sources from older codegen are regenerated
 # instead of exec'd (the namespace hash covers only the DSL config).
-_DISK_STAMP = "# repro-compile-cache-v2"
+_DISK_STAMP = "# repro-compile-cache-v3"
 
 # every disk dir this process wrote to / read from, so clear_cache() can
 # clear build_dir-based layers too, not just the env-configured one
@@ -154,17 +174,38 @@ def lower_dsl(src: str) -> Tuple[ProgramIR, List[Diagnostic]]:
 
 def compile_dsl(src: str, backend: str = "pallas", *,
                 build_dir: Optional[str] = None,
-                use_cache: bool = True) -> CompiledKernel:
-    """Compile a muPallas program into a callable kernel."""
+                use_cache: bool = True,
+                fuse: Optional[str] = None,
+                shape_hints: Optional[Dict] = None) -> CompiledKernel:
+    """Compile a muPallas program into a callable kernel.
+
+    ``fuse`` controls the SOL-guided inter-stage fusion pass on pipelines:
+    "auto" (default; REPRO_FUSION overrides) fuses edges the memory-traffic
+    model approves, "off" is the escape hatch, "force" fuses every legal
+    edge even without shape proof.  ``shape_hints`` maps the *unfused*
+    driver's input names to shapes so the pass can prove VMEM residency and
+    predict bytes saved.
+    """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     t0 = time.perf_counter()
     ir, warnings = lower_dsl(src)
+    fusion_report: Optional["FusionReport"] = None
+    if isinstance(ir, PipelineIR):
+        from ..codegen.fusion import fuse_pipeline
+        mode = fuse if fuse is not None else default_fuse_mode()
+        ir, fusion_report = fuse_pipeline(ir, mode=mode,
+                                          shape_hints=shape_hints)
     namespace = namespace_of(ir)
     cache_key = (namespace, backend)
     if use_cache:
         hit = _cache_get(cache_key)
         if hit is not None:
+            if fusion_report is not None and hit.fusion != fusion_report:
+                # don't mutate the shared cached object: earlier holders
+                # keep their own report (same compiled fn either way)
+                import dataclasses as _dc
+                return _dc.replace(hit, fusion=fusion_report)
             return hit
 
     if isinstance(ir, PipelineIR):
@@ -222,6 +263,7 @@ def compile_dsl(src: str, backend: str = "pallas", *,
         dsl_source=src,
         compile_seconds=time.perf_counter() - t0,
         from_disk_cache=from_disk,
+        fusion=fusion_report,
     )
     if use_cache:
         _cache_put(cache_key, result)

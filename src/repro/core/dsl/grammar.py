@@ -5,6 +5,29 @@ This is the TPU adaptation of the paper's ~170-line muCUTLASS EBNF
 ``grammar_text()`` returns the EBNF; ``prompt_spec()`` returns the short
 in-context prompt (grammar + examples) an agent would be given — the paper's
 "learnable entirely in context" requirement is measured against this string.
+
+Pipelines and the fusion pass
+-----------------------------
+
+``pipeline(stage, stage, ...)`` programs do NOT necessarily compile to one
+kernel per stage: after validation, the SOL-guided fusion pass
+(``repro.core.codegen.fusion``) rewrites producer->consumer stage pairs
+whose intermediate never needs HBM residency —
+
+  * ``eltwise`` stages and single-consumer ``rmsnorm`` stages fold into
+    the producer's epilogue chain (the rmsnorm fold is legal because the
+    backend widens the GEMM to a single N tile spanning the output row),
+  * ``rmsnorm -> gemm`` and ``gemm -> gemm`` pairs collapse into fused
+    kernels whose intermediate tile stays in VMEM.
+
+Fuse-vs-materialize is decided per edge by the SOL memory-traffic model:
+predicted HBM bytes saved (one write + one read of the intermediate)
+versus the fused kernel's VMEM working set; each decision and its
+predicted headroom is recorded on the compile artifact
+(``CompiledKernel.fusion``).  Fused output is bitwise identical to the
+unfused driver (fold boundaries replay the unfused dtype round-trips).
+The escape hatch is ``compile_dsl(..., fuse="off")`` / ``REPRO_FUSION=off``;
+``fuse="force"`` fuses every legal edge without shape proof.
 '''
 
 EBNF = r"""

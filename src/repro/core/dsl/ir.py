@@ -78,12 +78,27 @@ class KernelIR:
     dimension_semantics: Optional[Tuple[str, ...]] = None
     precision: str = "default"   # default | highest (fp32 multi-pass on MXU)
     epilogues: Tuple[EpilogueIR, ...] = ()
+    # Fused two-kernel stages (gemm_gemm): the producer's epilogue chain,
+    # applied to the VMEM-resident intermediate between the two matmuls.
+    mid_epilogues: Tuple[EpilogueIR, ...] = ()
 
     def op_param(self, key: str, default=None):
         for k, v in self.op_params:
             if k == key:
                 return v
         return default
+
+    # -- EpilogueIR composition (used by the SOL-guided fusion pass) -------
+    def with_appended_epilogues(self, extra: Tuple["EpilogueIR", ...], *,
+                                output_dtype: Optional[str] = None
+                                ) -> "KernelIR":
+        """This kernel with ``extra`` folded onto the end of its epilogue
+        chain (and optionally the consumer's output dtype taken over)."""
+        import dataclasses
+        dtypes = self.dtypes if output_dtype is None else DTypes(
+            self.dtypes.input, self.dtypes.acc, output_dtype)
+        return dataclasses.replace(
+            self, epilogues=self.epilogues + tuple(extra), dtypes=dtypes)
 
     def canonical(self) -> str:
         parts = [f"op={self.op_name}"]
@@ -108,6 +123,10 @@ class KernelIR:
             parts.append(f"dims={','.join(self.dimension_semantics)}")
         if self.precision != "default":
             parts.append(f"prec={self.precision}")
+        for ep in self.mid_epilogues:
+            p = ",".join(f"{k}:{v}" for k, v in sorted(ep.params))
+            e = f"|{ep.expr}|{sorted(ep.inputs)}" if ep.expr else ""
+            parts.append(f"midep={ep.name}({p}){e}")
         for ep in self.epilogues:
             p = ",".join(f"{k}:{v}" for k, v in sorted(ep.params))
             e = f"|{ep.expr}|{sorted(ep.inputs)}" if ep.expr else ""

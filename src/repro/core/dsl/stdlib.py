@@ -174,6 +174,10 @@ class EpilogueDef:
     aux_kind: Optional[str] = None      # "col_vector" | "row_vector" | "full"
     families: Optional[Tuple[str, ...]] = None
     min_generation: int = 4
+    # True for epilogues computing statistics along the output row (N axis):
+    # they fuse into a GEMM only when one tile spans the whole row, so the
+    # Pallas backend routes them through the single-N-tile gemm_rmsnorm path.
+    row_stat: bool = False
 
 
 EPILOGUES: Dict[str, EpilogueDef] = {}
@@ -204,6 +208,14 @@ _ep(EpilogueDef("residual_add", aux_input="residual", aux_kind="full",
                 families=("matmul", "conv")))
 _ep(EpilogueDef("custom", (ParamSpec("expr", str, required=True),),
                 min_generation=5))   # like paper: custom() gated to newest arch
+# Fusion-pass epilogues: ``rmsnorm`` is a single-consumer norm stage folded
+# into its producer's epilogue chain (paper: EVT-style epilogue fusion);
+# ``cast`` reproduces the HBM-materialization dtype round-trip at a fused
+# stage boundary so fused and unfused pipelines stay bitwise identical.
+_ep(EpilogueDef("rmsnorm", (ParamSpec("eps", float, default=1e-6),),
+                aux_input="gamma", aux_kind="col_vector",
+                families=("matmul", "conv"), row_stat=True))
+_ep(EpilogueDef("cast", (ParamSpec("dtype", str, required=True),)))
 
 
 # ---------------------------------------------------------------------------

@@ -384,6 +384,15 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
                            "need an output N axis to broadcast along",
                       line=ep.line)
             continue
+        if edef.row_stat and node.op.name != "gemm":
+            ctx.error("E_EPILOGUE_ROWSTAT",
+                      f">> {ep.name}() computes row statistics and is only "
+                      f"fusable into gemm, not {node.op.name}",
+                      hint="row-stat epilogues need one output tile spanning "
+                           "the whole row; only the single-N-tile gemm path "
+                           "provides that",
+                      line=ep.line)
+            continue
         if ep.name == "custom":
             if chip.generation < edef.min_generation:
                 ctx.error("E_EPILOGUE_ARCH",

@@ -22,16 +22,20 @@ from .cache import (TuningCache, TuningRecord, default_cache_dir,
                     tuning_disabled)
 from .candidates import (Candidate, DEFAULT_ATTN_BLOCK, DEFAULT_GEMM_TILE,
                          DEFAULT_BATCHED_TILE, DEFAULT_NORM_BLOCK_ROWS,
-                         DEFAULT_SSD_CHUNK, enumerate_candidates)
+                         DEFAULT_SSD_CHUNK, enumerate_candidates,
+                         fusion_candidates)
 from .runner import TuneResult, measure, tune_op
 from .sol_prune import predict_seconds, prune, rank_candidates
 
 __all__ = [
     "Candidate", "TuneResult", "TuningCache", "TuningRecord",
     "default_cache_dir", "device_kind", "enumerate_candidates",
+    "fusion_candidates",
     "global_cache", "lookup", "make_key", "measure", "predict_seconds",
-    "prune", "rank_candidates", "seed_hint_for_problem", "shape_bucket",
-    "tune_op", "tuned_attention_block", "tuned_gemm_tile", "tuned_ssd_chunk",
+    "prune", "rank_candidates", "record_fusion_measurement",
+    "seed_hint_for_problem", "shape_bucket",
+    "tune_op", "tuned_attention_block", "tuned_fusion", "tuned_gemm_tile",
+    "tuned_norm_block_rows", "tuned_ssd_chunk",
     "tuning_disabled", "DEFAULT_ATTN_BLOCK", "DEFAULT_BATCHED_TILE",
     "DEFAULT_GEMM_TILE", "DEFAULT_NORM_BLOCK_ROWS", "DEFAULT_SSD_CHUNK",
 ]
@@ -93,6 +97,32 @@ def tuned_norm_block_rows(rows: int, d: int, dtype) -> Optional[int]:
     if best and "block_rows" in best:
         return int(best["block_rows"])
     return None
+
+
+def tuned_fusion(pattern: str, dims, dtype) -> Optional[bool]:
+    """Fusion as a tunable axis: the measured fuse-on/off verdict for one
+    ``fusion:<pattern>`` edge bucket, or None when unmeasured (the fusion
+    pass then falls back to the analytic SOL decision)."""
+    best = lookup(f"fusion:{pattern}", dims, dtype)
+    if best is not None and "fuse" in best:
+        return bool(best["fuse"])
+    return None
+
+
+def record_fusion_measurement(pattern: str, dims, dtype, *,
+                              fuse_best: bool, trials=(),
+                              backend: str = "pallas") -> None:
+    """Persist a measured fused-vs-unfused verdict (written by
+    ``benchmarks/fusion_sweep.py``); consumed by ``tuned_fusion`` and the
+    fusion pass's per-edge veto."""
+    if tuning_disabled():
+        return
+    rec = TuningRecord(
+        op=f"fusion:{pattern}", shape_bucket=shape_bucket(dims),
+        dtype=canon_dtype_name(dtype), backend=backend,
+        device_kind=device_kind(), best={"fuse": bool(fuse_best)},
+        trials=list(trials))
+    global_cache().put(rec)
 
 
 def seed_hint_for_problem(problem, dtype: str = "fp32") -> Dict[str, Dict]:

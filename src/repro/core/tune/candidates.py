@@ -152,6 +152,14 @@ def norm_candidates(rows: int, d: int, *,
     return _dedup(out)
 
 
+def fusion_candidates(pattern: str) -> List[Candidate]:
+    """The fusion pass's tunable axis: candidate 0 (the default the SOL
+    model picks when legal) keeps the edge fused; candidate 1 materializes
+    the intermediate.  Measured via ``benchmarks/fusion_sweep.py``."""
+    op = f"fusion:{pattern}"
+    return [_cand(op, fuse=True), _cand(op, fuse=False)]
+
+
 def enumerate_candidates(op: str, shape: Sequence[int], *,
                          dtype: str = "fp32", window: int = 0,
                          chip: ChipSpec = TPU_V5E) -> List[Candidate]:
@@ -161,7 +169,10 @@ def enumerate_candidates(op: str, shape: Sequence[int], *,
       attention:           (sq, skv, d)
       ssd_scan:            (t, n, p)
       norm:                (rows, d)
+      fusion:<pattern>:    the edge's dims tuple
     """
+    if op.startswith("fusion:"):
+        return fusion_candidates(op.split(":", 1)[1])
     if op == "gemm":
         m, n, k = shape
         return gemm_candidates(m, n, k, dtype=dtype, chip=chip)

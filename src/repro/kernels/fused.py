@@ -1,0 +1,204 @@
+"""Inter-stage fused Pallas kernels: the intermediate tile stays in VMEM.
+
+Two producer->consumer pairs the SOL-guided fusion pass emits when the
+memory-traffic model says the HBM round-trip for the intermediate dominates:
+
+  rmsnorm_gemm   rmsnorm(x) @ B        (normalized activations never hit HBM)
+  gemm_gemm      g(f(A @ B1) @ B2)     (the (M, N1) intermediate never hits HBM)
+
+Both kernels reproduce the unfused pipeline's arithmetic exactly: the
+contraction is accumulated in the same k-chunk order as the tiled GEMM
+kernel, and the intermediate passes through the same dtype round-trip the
+unfused driver would materialize (``inter_dtypes``), so fused and unfused
+outputs are bitwise identical.
+
+Shapes must be pre-padded by the ops.py wrappers: M to the row block, the
+contraction dims to their chunk sizes (zero padding, which contributes
+exact zeros to the accumulator), N dims to the lane multiple.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .compat import CompilerParams
+
+AuxKind = str
+
+
+def _mid_aux_spec(kind: AuxKind, bm: int, n1: int):
+    """Mid-chain aux: broadcast against the full (bm, N1) intermediate."""
+    if kind == "col_vector":
+        return pl.BlockSpec((n1,), lambda i, j: (0,))
+    if kind == "row_vector":
+        return pl.BlockSpec((bm,), lambda i, j: (i,))
+    if kind == "full":
+        return pl.BlockSpec((bm, n1), lambda i, j: (i, 0))
+    raise ValueError(f"unknown aux kind {kind!r}")
+
+
+def _out_aux_spec(kind: AuxKind, bm: int, bn: int):
+    """Final-chain aux: broadcast against the (bm, bn) output tile."""
+    if kind == "col_vector":
+        return pl.BlockSpec((bn,), lambda i, j: (j,))
+    if kind == "row_vector":
+        return pl.BlockSpec((bm,), lambda i, j: (i,))
+    if kind == "full":
+        return pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    raise ValueError(f"unknown aux kind {kind!r}")
+
+
+def _aux_block(kind: AuxKind, ref):
+    x = ref[...]
+    if kind == "col_vector":
+        return x[None, :]
+    if kind == "row_vector":
+        return x[:, None]
+    return x
+
+
+def _chunked_dot(lhs, rhs, chunk: int):
+    """Accumulate lhs @ rhs over ``chunk``-wide slabs of the contraction,
+    in the same order as the tiled GEMM kernel's sequential k loop (so the
+    fused result is bitwise identical to the unfused one)."""
+    k = lhs.shape[-1]
+    acc = jnp.zeros((lhs.shape[0], rhs.shape[1]), jnp.float32)
+    for c in range(k // chunk):
+        acc = acc + jnp.dot(lhs[:, c * chunk:(c + 1) * chunk],
+                            rhs[c * chunk:(c + 1) * chunk, :],
+                            preferred_element_type=jnp.float32)
+    return acc
+
+
+def rmsnorm_gemm(
+    x: jax.Array,
+    gamma: jax.Array,
+    b: jax.Array,
+    *aux: jax.Array,
+    block: Tuple[int, int] = (256, 256),
+    k_chunk: int = 512,
+    k_true: int = 0,
+    eps: float = 1e-6,
+    inter_dtypes: Tuple = (),
+    epilogue: Optional[Callable] = None,
+    aux_kinds: Sequence[AuxKind] = (),
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = epilogue(rmsnorm(x, gamma) @ B) with the normalized rows resident
+    in VMEM.  x: (M, Kp), gamma: (Kp,), b: (Kp, N); ``k_true`` is the
+    unpadded K (row statistics must not count padding)."""
+    (m, kp), (kp2, n) = x.shape, b.shape
+    assert kp == kp2, f"contraction mismatch {kp} vs {kp2}"
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0 and kp % k_chunk == 0
+    out_dtype = out_dtype or x.dtype
+    k_true = k_true or kp
+
+    def kernel(x_ref, g_ref, b_ref, *rest):
+        aux_refs = rest[: len(aux_kinds)]
+        o_ref = rest[len(aux_kinds)]
+        xf = x_ref[...].astype(jnp.float32)
+        if k_true == kp:
+            ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        else:
+            mask = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1) < k_true
+            xf = jnp.where(mask, xf, 0.0)
+            ms = jnp.sum(jnp.square(xf), axis=-1, keepdims=True) / k_true
+        z = xf * jax.lax.rsqrt(ms + eps) \
+            * g_ref[...].astype(jnp.float32)[None, :]
+        for dt in inter_dtypes:     # the unfused driver's HBM round-trips
+            z = z.astype(dt)
+        acc = _chunked_dot(z, b_ref[...], k_chunk)
+        if epilogue is not None:
+            blocks = [_aux_block(kk, r).astype(jnp.float32)
+                      for kk, r in zip(aux_kinds, aux_refs)]
+            acc = epilogue(acc, *blocks)
+        o_ref[...] = acc.astype(out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+        pl.BlockSpec((kp,), lambda i, j: (0,)),
+        pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+    ] + [_out_aux_spec(kind, bm, bn) for kind in aux_kinds]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, gamma, b, *aux)
+
+
+def gemm_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    b2: jax.Array,
+    *aux: jax.Array,
+    block: Tuple[int, int] = (256, 256),
+    k_chunk: int = 512,
+    k2_chunk: int = 512,
+    mid_epilogue: Optional[Callable] = None,
+    mid_aux_kinds: Sequence[AuxKind] = (),
+    inter_dtypes: Tuple = (),
+    epilogue: Optional[Callable] = None,
+    aux_kinds: Sequence[AuxKind] = (),
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = epilogue(mid_epilogue(A @ B1) @ B2), the (bm, N1) intermediate
+    tile held in VMEM.  a: (M, Kp), b: (Kp, N1p), b2: (N1p, N2);
+    aux = (*mid_aux, *final_aux)."""
+    (m, kp), (kp2, n1), (n12, n2) = a.shape, b.shape, b2.shape
+    assert kp == kp2 and n1 == n12
+    bm, bn = block
+    assert m % bm == 0 and n2 % bn == 0
+    assert kp % k_chunk == 0 and n1 % k2_chunk == 0
+    out_dtype = out_dtype or a.dtype
+
+    n_mid = len(mid_aux_kinds)
+
+    def kernel(a_ref, b_ref, b2_ref, *rest):
+        mid_refs = rest[:n_mid]
+        out_refs = rest[n_mid: n_mid + len(aux_kinds)]
+        o_ref = rest[n_mid + len(aux_kinds)]
+        h = _chunked_dot(a_ref[...], b_ref[...], k_chunk)
+        if mid_epilogue is not None:
+            blocks = [_aux_block(kk, r).astype(jnp.float32)
+                      for kk, r in zip(mid_aux_kinds, mid_refs)]
+            h = mid_epilogue(h, *blocks)
+        for dt in inter_dtypes:     # the unfused driver's HBM round-trips
+            h = h.astype(dt)
+        acc = _chunked_dot(h, b2_ref[...], k2_chunk)
+        if epilogue is not None:
+            blocks = [_aux_block(kk, r).astype(jnp.float32)
+                      for kk, r in zip(aux_kinds, out_refs)]
+            acc = epilogue(acc, *blocks)
+        o_ref[...] = acc.astype(out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+        pl.BlockSpec((kp, n1), lambda i, j: (0, 0)),
+        pl.BlockSpec((n1, bn), lambda i, j: (0, j)),
+    ] + [_mid_aux_spec(kind, bm, n1) for kind in mid_aux_kinds] \
+      + [_out_aux_spec(kind, bm, bn) for kind in aux_kinds]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n2 // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n2), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b, b2, *aux)

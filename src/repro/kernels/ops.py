@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from . import flash_attention as _fa
+from . import fused as _fu
 from . import gemm_epilogue as _ge
 from . import rmsnorm as _rn
 from . import ssd_scan as _ssd
@@ -166,6 +167,204 @@ def batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
 # Grouped (MoE expert) GEMM shares the batched kernel: G = experts, fixed
 # per-expert capacity rows (dispatch/permutation handled by the MoE layer).
 grouped_gemm = batched_gemm
+
+
+# ---------------------------------------------------------------------------
+# Inter-stage fused kernels (SOL-guided fusion pass targets)
+# ---------------------------------------------------------------------------
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.lru_cache(maxsize=256)
+def _rmsnorm_combined(pre: Optional[Callable], post: Optional[Callable],
+                      n_pre: int, n_true: int, eps: float) -> Callable:
+    """Build (and cache, for jit static-arg identity) the combined epilogue
+    applying pre-chain -> row RMSNorm -> post-chain on the accumulator tile.
+
+    The tile may be wider than the true row (N padded to the lane multiple);
+    padded columns are masked out of the row statistics."""
+
+    def fn(x, *blocks):
+        pre_blocks = blocks[:n_pre]
+        gamma = blocks[n_pre]
+        post_blocks = blocks[n_pre + 1:]
+        if pre is not None:
+            x = pre(x, *pre_blocks)
+        width = x.shape[-1]
+        if width == n_true:
+            ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        else:
+            mask = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1) < n_true
+            x = jnp.where(mask, x, 0.0)
+            ms = jnp.sum(jnp.square(x), axis=-1, keepdims=True) / n_true
+        x = x * jax.lax.rsqrt(ms + eps) * gamma
+        if post is not None:
+            x = post(x, *post_blocks)
+        return x
+
+    return fn
+
+
+def gemm_rmsnorm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+                 tile: Optional[Tuple[int, int, int]] = None,
+                 pre_epilogue: Optional[Callable] = None,
+                 post_epilogue: Optional[Callable] = None,
+                 n_pre_aux: int = 0, eps: float = 1e-6,
+                 aux_kinds: Sequence[str] = (),
+                 out_dtype=None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """C = post(rmsnorm(pre(A @ B), gamma)): a GEMM whose epilogue chain
+    contains a folded single-consumer RMSNorm stage.
+
+    Row statistics need the whole output row in one tile, so the N tile is
+    widened to span (padded) N — the fusion pass's legality condition.
+    aux = (*pre_aux, gamma, *post_aux) in chain order.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    n = b.shape[1]
+    if tile is None:
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, a.dtype) or t.DEFAULT_GEMM_TILE
+    bm, _, bk = tile
+    bn = _ceil_to(n, 128)               # one tile spans the whole row
+    combined = _rmsnorm_combined(pre_epilogue, post_epilogue,
+                                 int(n_pre_aux), n, float(eps))
+    return _gemm(a, b, *aux, tile=(bm, bn, bk), epilogue=combined,
+                 aux_kinds=tuple(aux_kinds), out_dtype=out_dtype, swap=False,
+                 dimension_semantics=("parallel", "parallel", "arbitrary"),
+                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "k_chunk", "k_true", "eps", "inter_dtypes", "epilogue",
+    "aux_kinds", "out_dtype", "interpret"))
+def _rmsnorm_gemm(x: jax.Array, gamma: jax.Array, b: jax.Array,
+                  *aux: jax.Array, block: Tuple[int, int], k_chunk: int,
+                  k_true: int, eps: float, inter_dtypes: Tuple,
+                  epilogue: Optional[Callable], aux_kinds: Sequence[str],
+                  out_dtype, interpret: bool) -> jax.Array:
+    m, k = x.shape
+    n = b.shape[1]
+    bm, bn = block
+    xp = _pad_to(_pad_to(x, 0, bm), 1, k_chunk)
+    gp = _pad_to(gamma, 0, k_chunk)
+    bp = _pad_to(_pad_to(b, 0, k_chunk), 1, bn)
+    aux_p = []
+    for kind, arr in zip(aux_kinds, aux):
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 0, bn))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 0, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 0, bm), 1, bn))
+    out = _fu.rmsnorm_gemm(
+        xp, gp, bp, *aux_p, block=block, k_chunk=k_chunk, k_true=k_true,
+        eps=eps, inter_dtypes=inter_dtypes, epilogue=epilogue,
+        aux_kinds=tuple(aux_kinds), out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]
+
+
+def rmsnorm_gemm(x: jax.Array, gamma: jax.Array, b: jax.Array,
+                 *aux: jax.Array,
+                 tile: Optional[Tuple[int, int, int]] = None,
+                 eps: float = 1e-6, inter_dtypes: Tuple = (),
+                 epilogue: Optional[Callable] = None,
+                 aux_kinds: Sequence[str] = (),
+                 out_dtype=None,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue(rmsnorm(x, gamma) @ B): the normalized activations stay
+    in VMEM; ``inter_dtypes`` replays the unfused driver's materialization
+    dtype round-trip so the fused output is bitwise identical."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = x.shape
+    n = b.shape[1]
+    if tile is None:
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, b.dtype) or t.DEFAULT_GEMM_TILE
+    bm, bn, bk = tile
+    bn = min(bn, _ceil_to(n, 128))
+    bm = min(bm, _ceil_to(m, 8))
+    return _rmsnorm_gemm(x, gamma, b, *aux, block=(bm, bn), k_chunk=bk,
+                         k_true=k, eps=float(eps),
+                         inter_dtypes=tuple(inter_dtypes), epilogue=epilogue,
+                         aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "k_chunk", "k2_chunk", "mid_epilogue", "mid_aux_kinds",
+    "inter_dtypes", "epilogue", "aux_kinds", "out_dtype", "interpret"))
+def _gemm_gemm(a: jax.Array, b: jax.Array, b2: jax.Array, *aux: jax.Array,
+               block: Tuple[int, int], k_chunk: int, k2_chunk: int,
+               mid_epilogue: Optional[Callable],
+               mid_aux_kinds: Sequence[str], inter_dtypes: Tuple,
+               epilogue: Optional[Callable], aux_kinds: Sequence[str],
+               out_dtype, interpret: bool) -> jax.Array:
+    m, k = a.shape
+    n1 = b.shape[1]
+    n2 = b2.shape[1]
+    bm, bn = block
+    ap = _pad_to(_pad_to(a, 0, bm), 1, k_chunk)
+    bp = _pad_to(_pad_to(b, 0, k_chunk), 1, k2_chunk)
+    b2p = _pad_to(_pad_to(b2, 0, k2_chunk), 1, bn)
+    n_mid = len(mid_aux_kinds)
+    aux_p = []
+    for idx, (kind, arr) in enumerate(zip(
+            tuple(mid_aux_kinds) + tuple(aux_kinds), aux)):
+        width = k2_chunk if idx < n_mid else bn   # mid aux broadcast over N1
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 0, width))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 0, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 0, bm), 1, width))
+    out = _fu.gemm_gemm(
+        ap, bp, b2p, *aux_p, block=block, k_chunk=k_chunk,
+        k2_chunk=k2_chunk, mid_epilogue=mid_epilogue,
+        mid_aux_kinds=tuple(mid_aux_kinds), inter_dtypes=inter_dtypes,
+        epilogue=epilogue, aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+        interpret=interpret)
+    return out[:m, :n2]
+
+
+def gemm_gemm(a: jax.Array, b: jax.Array, b2: jax.Array, *aux: jax.Array,
+              tile: Optional[Tuple[int, int, int]] = None,
+              k2_chunk: Optional[int] = None,
+              mid_epilogue: Optional[Callable] = None,
+              mid_aux_kinds: Sequence[str] = (),
+              inter_dtypes: Tuple = (),
+              epilogue: Optional[Callable] = None,
+              aux_kinds: Sequence[str] = (),
+              out_dtype=None,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue(mid_epilogue(A @ B1) @ B2) with the (row-block, N1)
+    intermediate resident in VMEM.  aux = (*mid_aux, *final_aux)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    n2 = b2.shape[1]
+    if tile is None:
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, b.shape[1], k, a.dtype) \
+            or t.DEFAULT_GEMM_TILE
+    bm, bn, bk = tile
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n2, 128))
+    if k2_chunk is None:
+        # the chunk the unfused consumer GEMM would have used for its own
+        # k loop — keeps the fused accumulation order bitwise identical
+        t = _tune()
+        t2 = t.tuned_gemm_tile(m, n2, b.shape[1], a.dtype) \
+            or t.DEFAULT_GEMM_TILE
+        k2_chunk = t2[2]
+    return _gemm_gemm(a, b, b2, *aux, block=(bm, bn), k_chunk=bk,
+                      k2_chunk=int(k2_chunk), mid_epilogue=mid_epilogue,
+                      mid_aux_kinds=tuple(mid_aux_kinds),
+                      inter_dtypes=tuple(inter_dtypes), epilogue=epilogue,
+                      aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+                      interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

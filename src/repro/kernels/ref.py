@@ -74,6 +74,27 @@ def attention_ref(q, k, v, *, causal: bool = False, window: int = 0,
     return out.astype(q.dtype)
 
 
+def rmsnorm_gemm_ref(x, gamma, b, *aux, eps: float = 1e-6,
+                     epilogue: Optional[Callable] = None,
+                     aux_kinds: Sequence[str] = (), out_dtype=None):
+    """Fused-kernel oracle: rmsnorm(x, gamma) @ b with epilogue chain."""
+    z = rmsnorm_ref(x, gamma, eps=eps)
+    return gemm_ref(z, b, *aux, epilogue=epilogue, aux_kinds=aux_kinds,
+                    out_dtype=out_dtype or x.dtype)
+
+
+def gemm_gemm_ref(a, b, b2, *aux, mid_epilogue: Optional[Callable] = None,
+                  mid_aux_kinds: Sequence[str] = (),
+                  epilogue: Optional[Callable] = None,
+                  aux_kinds: Sequence[str] = (), out_dtype=None):
+    """Fused-kernel oracle: epilogue(mid_epilogue(a @ b) @ b2)."""
+    n_mid = len(mid_aux_kinds)
+    h = gemm_ref(a, b, *aux[:n_mid], epilogue=mid_epilogue,
+                 aux_kinds=mid_aux_kinds, out_dtype=jnp.float32)
+    return gemm_ref(h, b2, *aux[n_mid:], epilogue=epilogue,
+                    aux_kinds=aux_kinds, out_dtype=out_dtype or a.dtype)
+
+
 def rmsnorm_ref(x, gamma, *, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

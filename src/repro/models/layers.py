@@ -394,3 +394,23 @@ def mlp_apply(params: Dict, x: jax.Array, act: str = "swiglu") -> jax.Array:
     h = _proj(x, params["w_in"])
     h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(h.dtype)
     return _proj(h, params["w_out"])
+
+
+def fused_residual_rmsnorm_mlp(norm_params: Dict, mlp_params: Dict,
+                               resid: jax.Array, h: jax.Array, *,
+                               eps: float, act: str = "swiglu"):
+    """Residual add + RMSNorm + MLP projections as ONE fused region — the
+    decode-block step the DSL fusion pass lowers to the ``rmsnorm_gemm`` /
+    ``gemm_gemm`` Pallas kernels on TPU (the residual stream and the
+    normalized activations stay in VMEM instead of round-tripping HBM
+    between four separate kernels).
+
+    The jnp substrate keeps the exact unfused primitive order, so outputs
+    are bitwise identical with fusion on or off; the saved dispatches are
+    what the serve engine's per-step dispatch telemetry counts.
+
+    Returns ``(x_resid, mlp_out)``.
+    """
+    x = resid + h
+    z = rmsnorm(norm_params, x, eps)
+    return x, mlp_apply(mlp_params, z, act)

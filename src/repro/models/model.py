@@ -26,8 +26,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from .layers import (COMPUTE_DTYPE, attention_apply, attention_init,
-                     mlp_apply, mlp_init, rmsnorm, rmsnorm_init, _dense_init,
-                     _proj)
+                     fused_residual_rmsnorm_mlp, mlp_apply, mlp_init,
+                     rmsnorm, rmsnorm_init, _dense_init, _proj)
 from .moe import moe_apply, moe_init
 from .ssm import mamba2_apply, mamba2_init, mamba2_init_state
 
@@ -64,13 +64,20 @@ def _tf_layer_apply(params, x, cfg: ModelConfig, *, causal=True,
         window=cfg.sliding_window, rope_theta=cfg.rope_theta,
         kv_cache=kv_cache, xattn_kv=xattn_kv, positions=positions,
         chunk_kv=cfg.attn_chunk_kv, token_counts=token_counts)
-    x = x + h
-    z = rmsnorm(params["norm2"], x, cfg.norm_eps)
     if "moe" in params:
+        x = x + h
+        z = rmsnorm(params["norm2"], x, cfg.norm_eps)
         m, aux = moe_apply(params["moe"], z,
                            top_k=cfg.num_experts_per_tok,
                            capacity_factor=cfg.capacity_factor, act=cfg.act)
+    elif cfg.fused_decode:
+        # fused residual+rmsnorm+projection step (DSL rmsnorm_gemm lowering)
+        x, m = fused_residual_rmsnorm_mlp(
+            params["norm2"], params["mlp"], x, h, eps=cfg.norm_eps,
+            act=cfg.act)
     else:
+        x = x + h
+        z = rmsnorm(params["norm2"], x, cfg.norm_eps)
         m = mlp_apply(params["mlp"], z, cfg.act)
     return x + m, new_cache, aux
 
@@ -536,6 +543,51 @@ class Model:
 
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         return self.logits_of(params, x), new_cache
+
+    # ---------------- dispatch accounting ----------------------------------
+    def decode_dispatch_count(self) -> int:
+        """Analytic kernel dispatches for ONE decode/prefill step.
+
+        Counts the logical kernels the step's forward issues (norms,
+        projections, attention cores, residual adds) so serving telemetry
+        can assert that the fused decode path measurably reduces the
+        per-step dispatch count.  With ``cfg.fused_decode`` the
+        residual+rmsnorm+MLP-projection sequence collapses from 6-7 kernels
+        (resid, norm, gate/up or in proj, act, down proj, resid) into a
+        fused norm+projection kernel, an epilogue-fused down projection,
+        and the closing residual (3).
+        """
+        cfg = self.cfg
+
+        def tf_layer(moe: bool) -> int:
+            n = 1 + 3 + 1 + 1       # norm1, q/k/v proj, attn core, o proj
+            if moe:
+                n += 1 + 1 + 3 + 1  # resid, norm2, route+experts, resid
+            elif cfg.fused_decode:
+                n += 3              # fused(resid+norm+in-proj+act), down, resid
+            else:
+                projs = 3 if cfg.act == "swiglu" else 2
+                n += 1 + 1 + projs + 1 + 1   # resid, norm2, projs, act, resid
+            return n
+
+        ssm_layer = 3               # norm, mamba cell, resid
+        xattn = 3                   # norm, cross-attn core, resid
+        if cfg.family in ("dense", "moe"):
+            total = cfg.num_layers * tf_layer(cfg.family == "moe")
+        elif cfg.family == "ssm":
+            total = cfg.num_layers * ssm_layer
+        elif cfg.family == "hybrid":
+            g = cfg.num_layers // cfg.shared_attn_every
+            total = cfg.num_layers * ssm_layer + g * tf_layer(False)
+        elif cfg.family == "audio":
+            total = cfg.num_layers * (tf_layer(False) + xattn)
+        elif cfg.family == "vlm":
+            g = cfg.num_layers // cfg.cross_attn_every
+            per = cfg.cross_attn_every - 1
+            total = g * per * tf_layer(False) + g * (xattn + 4)
+        else:
+            raise KeyError(cfg.family)
+        return total + 2            # final norm + lm head
 
     def prefill(self, params: Dict, tokens: jax.Array, max_len: int,
                 lengths: Optional[jax.Array] = None):

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import tune
+from ..core.dsl.compiler import default_fuse_mode
 from ..core.sol.hardware import canon_dtype
 from ..models.model import Model
 from .prefill import ChunkedPrefillPlanner, SlotState
@@ -42,7 +43,8 @@ from .streaming import StreamEvent, StreamMux
 from .telemetry import ServeTelemetry
 
 
-def resolve_tuned_decode_cfg(model: Model, max_len: int):
+def resolve_tuned_decode_cfg(model: Model, max_len: int,
+                             fused_decode: Optional[bool] = None):
     """Tuned decode-path config overrides resolved once at engine build.
 
     Consults the persistent autotuning cache for the engine's actual
@@ -52,6 +54,11 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int):
     model must never read bf16-tuned entries).  Returns (new_cfg,
     overrides-dict); on a cold cache the config is returned unchanged and
     the dict is empty.
+
+    The fused decode block (residual+rmsnorm+projection in one kernel) is
+    resolved the same way: on by default, off when ``REPRO_FUSION=off`` or
+    when a measured ``fusion:decode_block`` tuning record vetoes it;
+    ``fused_decode`` forces it either way.
     """
     cfg = model.cfg
     dtype_key = canon_dtype(cfg.compute_dtype)
@@ -66,6 +73,17 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int):
                                      cfg.ssm_head_dim, dtype_key)
         if chunk is not None and chunk != cfg.ssd_chunk:
             overrides["ssd_chunk"] = chunk
+    if fused_decode is None:
+        if default_fuse_mode() == "off":
+            fused_decode = False        # the escape hatch always wins
+        else:
+            fused_decode = True
+            verdict = tune.tuned_fusion("decode_block",
+                                        (cfg.d_model, cfg.d_ff), dtype_key)
+            if verdict is not None:
+                fused_decode = verdict
+    if bool(fused_decode) != cfg.fused_decode:
+        overrides["fused_decode"] = bool(fused_decode)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     return cfg, overrides
@@ -129,12 +147,14 @@ class ServeEngine:
                  max_len: int = 256, seed: int = 0,
                  prefill_mode: str = "chunked", chunk_size: int = 16,
                  scheduler=None, prefix_cache=None,
+                 fused_decode: Optional[bool] = None,
                  telemetry: Optional[ServeTelemetry] = None):
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
-            model, max_len)
+            model, max_len, fused_decode=fused_decode)
         if self.tuned_overrides:
             model = dataclasses.replace(model, cfg=tuned_cfg)
         self.model = model
+        self.step_dispatches = model.decode_dispatch_count()
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
@@ -168,6 +188,7 @@ class ServeEngine:
             "steps": 0, "tokens_generated": 0, "prefill_tokens": 0,
             "requests_done": 0, "truncated": 0, "prefill_chunks": 0,
             "prefix_hits": 0, "prefix_tokens_reused": 0,
+            "decode_dispatches": 0,
         }
 
     # ------------------------------------------------------------------
@@ -298,6 +319,7 @@ class ServeEngine:
             jnp.asarray(plan.counts))
         self.step_count += 1
         self.metrics["steps"] += 1
+        self.metrics["decode_dispatches"] += self.step_dispatches
         if plan.prefill_tokens:
             self.metrics["prefill_chunks"] += len(plan.consumed)
 
@@ -346,7 +368,8 @@ class ServeEngine:
         active = sum(1 for s in self.slots if s is not None)
         self.telemetry.on_step(
             queue_depth=self.scheduler.pending(), active_slots=active,
-            num_slots=self.max_batch, seconds=time.perf_counter() - t0)
+            num_slots=self.max_batch, seconds=time.perf_counter() - t0,
+            dispatches=self.step_dispatches)
         self.mux.emit(events)
         return events
 

@@ -76,6 +76,9 @@ class ServeTelemetry:
         self.steps = 0
         self.prefix_lookups = 0
         self.prefix_hits = 0
+        # per-step kernel-dispatch counter: the fused decode path must
+        # measurably drop this (asserted in benchmarks/serve_load.py)
+        self.dispatch_total = 0
 
     # ---- request lifecycle ------------------------------------------------
     def _trace(self, rid: int) -> RequestTrace:
@@ -119,12 +122,14 @@ class ServeTelemetry:
 
     # ---- per-step samples -------------------------------------------------
     def on_step(self, *, queue_depth: int, active_slots: int,
-                num_slots: int, seconds: float) -> None:
+                num_slots: int, seconds: float,
+                dispatches: int = 0) -> None:
         self.steps += 1
         self.num_slots = num_slots
         self.queue_depth_samples.append(queue_depth)
         self.active_slot_samples.append(active_slots)
         self.step_seconds.append(seconds)
+        self.dispatch_total += dispatches
 
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -163,6 +168,9 @@ class ServeTelemetry:
             "itl_s_p95": percentile(itl, 95),
             "ttft_steps_by_slo": {k: percentile(v, 50)
                                   for k, v in by_slo.items()},
+            "dispatch_total": self.dispatch_total,
+            "dispatches_per_step": (self.dispatch_total / self.steps
+                                    if self.steps else 0.0),
             "queue_depth_mean": (sum(self.queue_depth_samples)
                                  / len(self.queue_depth_samples)
                                  if self.queue_depth_samples else 0.0),

@@ -1,0 +1,331 @@
+"""SOL-guided inter-stage fusion: golden tests.
+
+Every fusion pattern must produce BITWISE-identical output to the unfused
+driver (the pass replays the unfused materialization dtype round-trips at
+each fold boundary), the pass must decline when VMEM pressure or missing
+shape proof says so, and the fused kernels must match the jnp oracles.
+"""
+
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.core.codegen.fusion import fuse_pipeline
+from repro.core.dsl import compile_dsl, lower_dsl
+
+RNG = np.random.default_rng(7)
+
+
+def _gemm(dt, chain=""):
+    return (f"gemm().with_dtype(input={dt}, acc=fp32, output={dt})"
+            f".with_tile(m=64, n=128, k=128)" + chain)
+
+
+def _arrays(**specs):
+    return {k: RNG.standard_normal(v).astype(np.float32)
+            for k, v in specs.items()}
+
+
+def _fused_unfused(src, arrays, fused_names, unfused_names, hints=None,
+                   backend="pallas", fuse="auto"):
+    kf = compile_dsl(src, backend, use_cache=False, fuse=fuse,
+                     shape_hints=hints)
+    ku = compile_dsl(src, backend, use_cache=False, fuse="off")
+    assert tuple(kf.all_input_names) == tuple(fused_names)
+    assert tuple(ku.all_input_names) == tuple(unfused_names)
+    out_f = np.asarray(kf.fn(*[arrays[n] for n in fused_names]))
+    out_u = np.asarray(ku.fn(*[arrays[n] for n in unfused_names]))
+    return kf, ku, out_f, out_u
+
+
+PATTERN_CASES = {
+    # pattern -> (src template, specs, fused sig, unfused sig,
+    #             unfused-name -> spec-name alias)
+    "fold_eltwise": (
+        lambda dt: ("pipeline(" + _gemm(dt, " >> bias()") + ", "
+                    f"eltwise().with_dtype(input={dt}, acc=fp32,"
+                    f" output={dt}) >> gelu() >> scale(value=2.0))"),
+        dict(a=(48, 256), b=(256, 128), bias=(128,)),
+        ("a", "b", "bias"), ("a", "b", "bias"), {}),
+    "fold_rmsnorm": (
+        lambda dt: ("pipeline(" + _gemm(dt, " >> bias() >> gelu()") + ", "
+                    f"rmsnorm().with_dtype(input={dt}, acc=fp32,"
+                    f" output={dt}))"),
+        dict(a=(48, 256), b=(256, 128), bias=(128,), gamma=(128,)),
+        ("a", "b", "bias", "gamma"), ("a", "b", "gamma_s1", "bias"),
+        {"gamma_s1": "gamma"}),
+    "rmsnorm_gemm": (
+        lambda dt: (f"pipeline(rmsnorm().with_dtype(input={dt}, acc=fp32,"
+                    f" output={dt}), " + _gemm(dt, " >> bias() >> silu()")
+                    + ")"),
+        dict(x=(48, 256), gamma=(256,), b=(256, 128), bias=(128,)),
+        ("x", "gamma", "b", "bias"), ("x", "gamma", "b_s1", "bias_s1"),
+        {"b_s1": "b", "bias_s1": "bias"}),
+    "gemm_gemm": (
+        lambda dt: ("pipeline(" + _gemm(dt, " >> bias() >> gelu()") + ", "
+                    + _gemm(dt) + ")"),
+        dict(a=(48, 256), b=(256, 128), bias=(128,), b2=(128, 128)),
+        ("a", "b", "b2", "bias"), ("a", "b", "b_s1", "bias"),
+        {"b_s1": "b2"}),
+}
+
+
+class TestGoldenBitwise:
+    @pytest.mark.parametrize("dtype", ["fp32", "bf16"])
+    @pytest.mark.parametrize("pattern", sorted(PATTERN_CASES))
+    def test_fused_bitwise_matches_unfused(self, pattern, dtype):
+        src_fn, specs, fsig, usig, alias = PATTERN_CASES[pattern]
+        arrays = _arrays(**specs)
+        for n in usig:                  # unfused aliases share the arrays
+            if n not in arrays:
+                arrays[n] = arrays[alias[n]]
+        hints = {n: arrays[n].shape for n in usig}
+        kf, ku, out_f, out_u = _fused_unfused(
+            src_fn(dtype), arrays, fsig, usig, hints=hints)
+        assert len(ku.ir.kernel_stages) == 2
+        assert len(kf.ir.kernel_stages) == 1, \
+            [d.reason for d in kf.fusion.decisions]
+        assert out_f.dtype == out_u.dtype
+        np.testing.assert_array_equal(out_f, out_u)
+
+    def test_three_stage_acceptance_pipeline_single_dispatch(self):
+        """transform -> gemm+bias_gelu -> rmsnorm == ONE fused dispatch,
+        bitwise identical to the unfused driver."""
+        src = ("pipeline(transpose(input, NCL, NCL, fp32, bf16), "
+               + _gemm("bf16", " >> bias() >> gelu()") + ", "
+               "rmsnorm().with_dtype(input=bf16, acc=fp32, output=bf16))")
+        arrays = _arrays(a=(48, 256), b=(256, 128), bias=(128,),
+                         gamma=(128,))
+        arrays["gamma_s1"] = arrays["gamma"]
+        hints = {n: arrays[n].shape
+                 for n in ("a", "b", "gamma_s1", "bias")}
+        kf, ku, out_f, out_u = _fused_unfused(
+            src, arrays, ("a", "b", "bias", "gamma"),
+            ("a", "b", "gamma_s1", "bias"), hints=hints)
+        assert len(kf.ir.kernel_stages) == 1
+        np.testing.assert_array_equal(out_f, out_u)
+        rep = kf.fusion
+        assert rep.fused_count == 1
+        assert rep.decisions[0].pattern == "fold_rmsnorm"
+
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    @pytest.mark.parametrize("pattern",
+                             ["fold_eltwise", "fold_rmsnorm",
+                              "rmsnorm_gemm", "gemm_gemm"])
+    def test_mixed_dtype_boundary_bitwise(self, pattern, backend):
+        """Consumer input dtype != output dtype: the fold must replay each
+        backend's OWN materialization round-trips (pallas kernels write at
+        input dtype; XLA casts straight to the output dtype)."""
+        mixed = {
+            "fold_eltwise": ("pipeline(" + _gemm("bf16", " >> bias()")
+                             + ", eltwise().with_dtype(input=bf16, acc=fp32,"
+                             " output=fp32) >> gelu())"),
+            "fold_rmsnorm": ("pipeline(" + _gemm("bf16", " >> bias()")
+                             + ", rmsnorm().with_dtype(input=bf16, acc=fp32,"
+                             " output=fp32))"),
+            "rmsnorm_gemm": ("pipeline(rmsnorm().with_dtype(input=bf16,"
+                             " acc=fp32, output=bf16), "
+                             + _gemm("bf16").replace("output=bf16",
+                                                     "output=fp32") + ")"),
+            "gemm_gemm": ("pipeline(" + _gemm("bf16", " >> bias()") + ", "
+                          + _gemm("bf16").replace("output=bf16",
+                                                  "output=fp32") + ")"),
+        }[pattern]
+        _, specs, _, _, alias = PATTERN_CASES[pattern]
+        arrays = _arrays(**specs)
+
+        def resolve(name):
+            return arrays[alias.get(name, name)] if name not in arrays \
+                else arrays[name]
+
+        ku = compile_dsl(mixed, backend, use_cache=False, fuse="off")
+        hints = {n: resolve(n).shape for n in ku.all_input_names}
+        kf = compile_dsl(mixed, backend, use_cache=False, fuse="auto",
+                         shape_hints=hints)
+        assert len(kf.ir.kernel_stages) == 1, \
+            [d.reason for d in kf.fusion.decisions]
+        out_f = np.asarray(kf.fn(*[resolve(n)
+                                   for n in kf.all_input_names]))
+        out_u = np.asarray(ku.fn(*[resolve(n)
+                                   for n in ku.all_input_names]))
+        assert out_f.dtype == out_u.dtype == np.float32
+        np.testing.assert_array_equal(out_f, out_u)
+
+    def test_xla_backend_agrees(self):
+        src_fn, specs, fsig, usig, alias = PATTERN_CASES["gemm_gemm"]
+        arrays = _arrays(**specs)
+        for n in usig:
+            if n not in arrays:
+                arrays[n] = arrays[alias[n]]
+        hints = {n: arrays[n].shape for n in usig}
+        kf, ku, out_f, out_u = _fused_unfused(
+            src_fn("fp32"), arrays, fsig, usig, hints=hints, backend="xla")
+        np.testing.assert_array_equal(out_f, out_u)
+
+
+class TestDecisions:
+    def test_report_records_bytes_and_headroom(self):
+        src_fn, specs, fsig, usig, alias = PATTERN_CASES["fold_rmsnorm"]
+        hints = {n: specs[alias.get(n, n)] for n in usig}
+        k = compile_dsl(src_fn("bf16"), "pallas", use_cache=False,
+                        fuse="auto", shape_hints=hints)
+        d = k.fusion.decisions[0]
+        assert d.fused and d.pattern == "fold_rmsnorm"
+        # intermediate (48, 128) bf16: one write + one read
+        assert d.bytes_saved == 2 * 48 * 128 * 2
+        assert 0 < d.headroom < 1
+        assert k.fusion.bytes_saved == d.bytes_saved
+        assert k.fusion.as_dict()["fused_count"] == 1
+
+    def test_vmem_pressure_declines(self):
+        """The pass must *decline* when the fused working set exceeds VMEM."""
+        src = ("pipeline(rmsnorm().with_dtype(input=bf16, acc=fp32,"
+               " output=bf16), " + _gemm("bf16") + ")")
+        hints = {"x": (8192, 1 << 19), "gamma": (1 << 19,),
+                 "b_s1": (1 << 19, 8192)}
+        k = compile_dsl(src, "pallas", use_cache=False, fuse="auto",
+                        shape_hints=hints)
+        assert len(k.ir.kernel_stages) == 2
+        d = k.fusion.decisions[0]
+        assert not d.fused
+        assert "VMEM pressure" in d.reason
+        assert d.vmem_bytes is not None
+
+    def test_no_hints_declines_vmem_patterns_but_folds(self):
+        src = ("pipeline(" + _gemm("bf16", " >> bias()") + ", "
+               + _gemm("bf16") + ")")
+        k = compile_dsl(src, "pallas", use_cache=False, fuse="auto")
+        assert len(k.ir.kernel_stages) == 2
+        assert "shape_hints" in k.fusion.decisions[0].reason
+        # force fuses anyway
+        k = compile_dsl(src, "pallas", use_cache=False, fuse="force")
+        assert len(k.ir.kernel_stages) == 1
+
+    def test_fuse_off_escape_hatch(self, monkeypatch):
+        src_fn = PATTERN_CASES["fold_eltwise"][0]
+        k = compile_dsl(src_fn("fp32"), "pallas", use_cache=False,
+                        fuse="off")
+        assert len(k.ir.kernel_stages) == 2
+        assert k.fusion.mode == "off" and k.fusion.fused_count == 0
+        monkeypatch.setenv("REPRO_FUSION", "off")
+        k = compile_dsl(src_fn("fp32"), "pallas", use_cache=False)
+        assert len(k.ir.kernel_stages) == 2
+
+    def test_fused_namespace_differs_from_unfused(self):
+        src_fn = PATTERN_CASES["fold_eltwise"][0]
+        kf = compile_dsl(src_fn("fp32"), "pallas", use_cache=False)
+        ku = compile_dsl(src_fn("fp32"), "pallas", use_cache=False,
+                         fuse="off")
+        assert kf.namespace != ku.namespace
+
+    def test_tuning_cache_vetoes_edge(self, tmp_path, monkeypatch):
+        """Fusion is a tunable axis: a measured {"fuse": false} record
+        turns the edge off in auto mode."""
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+        from repro.core import tune
+        src_fn, specs, fsig, usig, alias = PATTERN_CASES["rmsnorm_gemm"]
+        hints = {n: specs[alias.get(n, n)] for n in usig}
+        dims = tuple(specs["x"]) + (specs["b"][1],)
+        tune.record_fusion_measurement("rmsnorm_gemm", dims, "bf16",
+                                       fuse_best=False)
+        assert tune.tuned_fusion("rmsnorm_gemm", dims, "bf16") is False
+        k = compile_dsl(src_fn("bf16"), "pallas", use_cache=False,
+                        fuse="auto", shape_hints=hints)
+        assert len(k.ir.kernel_stages) == 2
+        assert "autotuner" in k.fusion.decisions[0].reason
+
+
+class TestSignatureDedup:
+    def test_repeated_aux_names_deduped(self):
+        """Two bias() epilogues must not shadow each other in the driver."""
+        src = _gemm("fp32", " >> bias() >> gelu() >> bias()")
+        k = compile_dsl(src, "pallas", use_cache=False)
+        assert k.all_input_names == ("a", "b", "bias", "bias__2")
+        a = RNG.standard_normal((32, 128)).astype(np.float32)
+        b = RNG.standard_normal((128, 128)).astype(np.float32)
+        b1 = RNG.standard_normal((128,)).astype(np.float32)
+        b2 = RNG.standard_normal((128,)).astype(np.float32)
+        out = np.asarray(k(a, b, b1, b2))
+        import jax
+        ref = np.asarray(
+            jax.nn.gelu(a @ b + b1[None, :], approximate=True) + b2[None, :])
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    def test_custom_input_named_like_primary_deduped(self):
+        """A custom-epilogue input named like a primary operand must not
+        shadow it in the generated signature."""
+        src = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_tile(m=64, n=128, k=128).with_arch(tpu_v5p)"
+               " >> custom('x * b', inputs={'b': 'col_vector'})")
+        k = compile_dsl(src, "pallas", use_cache=False)
+        assert k.all_input_names == ("a", "b", "b__2")
+        a = RNG.standard_normal((32, 128)).astype(np.float32)
+        b = RNG.standard_normal((128, 128)).astype(np.float32)
+        scale = RNG.standard_normal((128,)).astype(np.float32)
+        out = np.asarray(k(a, b, scale))
+        np.testing.assert_allclose(out, (a @ b) * scale[None, :],
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_pipeline_cross_stage_dedup(self):
+        """The same aux name in two pipeline stages gets distinct driver
+        parameters (the old code emitted shadowing duplicates)."""
+        src = ("pipeline(" + _gemm("fp32", " >> bias()") + ", "
+               + _gemm("fp32", " >> bias()") + ")")
+        k = compile_dsl(src, "pallas", use_cache=False, fuse="off")
+        names = k.all_input_names
+        assert len(set(names)) == len(names)
+        assert "bias" in names and "bias_s1" in names
+
+
+class TestFusedKernelOracles:
+    def test_rmsnorm_gemm_matches_ref(self):
+        from repro.kernels import ops, ref
+        x = RNG.standard_normal((40, 192)).astype(np.float32)
+        g = RNG.standard_normal((192,)).astype(np.float32)
+        b = RNG.standard_normal((192, 96)).astype(np.float32)
+        out = np.asarray(ops.rmsnorm_gemm(
+            jnp.asarray(x), jnp.asarray(g), jnp.asarray(b),
+            tile=(64, 128, 128), eps=1e-6, out_dtype=jnp.float32))
+        want = np.asarray(ref.rmsnorm_gemm_ref(
+            jnp.asarray(x), jnp.asarray(g), jnp.asarray(b),
+            out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_gemm_gemm_matches_ref(self):
+        from repro.kernels import ops, ref
+        a = RNG.standard_normal((40, 160)).astype(np.float32)
+        b = RNG.standard_normal((160, 96)).astype(np.float32)
+        b2 = RNG.standard_normal((96, 112)).astype(np.float32)
+        out = np.asarray(ops.gemm_gemm(
+            jnp.asarray(a), jnp.asarray(b), jnp.asarray(b2),
+            tile=(64, 128, 128), k2_chunk=128, out_dtype=jnp.float32))
+        want = np.asarray(ref.gemm_gemm_ref(
+            jnp.asarray(a), jnp.asarray(b), jnp.asarray(b2),
+            out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+class TestServeFusedDecode:
+    def test_fused_decode_identical_and_fewer_dispatches(self):
+        import jax
+        from repro.configs import get_arch
+        from repro.models.model import build_model
+        import dataclasses
+        cfg = get_arch("qwen2-0.5b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        fused = dataclasses.replace(model,
+                                    cfg=dataclasses.replace(
+                                        cfg, fused_decode=True))
+        assert fused.decode_dispatch_count() < model.decode_dispatch_count()
+        cache_a = model.init_cache(2, 32)
+        cache_b = fused.init_cache(2, 32)
+        toks = jnp.asarray([[3, 5, 7, 2], [11, 2, 4, 9]], jnp.int32)
+        counts = jnp.asarray([4, 3], jnp.int32)
+        la, ca = model.prefill_step(params, cache_a, toks, counts)
+        lb, cb = fused.prefill_step(params, cache_b, toks, counts)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        for x, y in zip(jax.tree.leaves(ca), jax.tree.leaves(cb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
