@@ -1,0 +1,191 @@
+"""Quantization sweep: dequant-fused quantized GEMM vs fp GEMM per shape
+class, checked against the dtype-aware SOL byte model and the per-op
+rel-error budget.
+
+For each (wdtype, shape class) the sweep:
+
+  * SOL-prunes the quantization candidates (``tune.prune_quant``): a
+    shape whose predicted weight-bytes saved is a trivial fraction of its
+    HBM traffic never reaches measurement,
+  * runs ``ops.gemm_q`` (weight streamed at 1 B/elem, dequant fused at
+    writeback) against the fp ``ops.gemm`` twin with interleaved timing,
+  * measures the HBM bytes the quantized kernel actually streams (the
+    real nbytes of activations + quantized values + scales + output) and
+    asserts the dtype-aware SOL prediction
+    (``roofline.matmul_hbm_bytes``) is within 20%,
+  * checks the measured rel-error against the per-dtype budget
+    (``tune.quant_error_budget``) and records the verdict in the tuning
+    cache under ``quant:gemm`` — a budget violation records the
+    ``{"wdtype": "none"}`` VETO the serve engine and DSL consumers honor.
+
+The per-case table is appended to ``$GITHUB_STEP_SUMMARY`` when set (CI
+job summary) and always written to ``quant_sweep_summary.md``.
+
+    PYTHONPATH=src python benchmarks/quant_sweep.py --smoke
+"""
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+# Wall time gates only on real hardware: interpret-mode timings measure
+# the Python/XLA emulation of the kernel, not HBM traffic (same policy as
+# fusion_sweep.py).
+TIME_SLACK = 1.10
+
+SHAPE_CLASSES = {                     # (m, k, n)
+    "decode": (8, 256, 512),          # skinny decode row: weight-dominated
+    "square": (128, 256, 256),
+    "wide": (64, 128, 384),
+}
+
+WDTYPES = ("int8", "fp8_e4m3")
+
+
+def bench_pair(fn_a, fn_b, reps):
+    """Interleaved timing (median of ``reps``) so shared-CPU drift cancels
+    instead of landing on whichever side ran second."""
+    out_a = np.asarray(fn_a())          # warmup (compile) + result
+    out_b = np.asarray(fn_b())
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.asarray(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        np.asarray(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)), out_a, float(np.median(tb)), out_b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing reps (CI mode)")
+    args = ap.parse_args()
+    reps = 7 if args.smoke else 21
+
+    import jax.numpy as jnp
+
+    from repro.core import tune
+    from repro.core.sol.roofline import matmul_hbm_bytes, quant_bytes_saved
+    from repro.kernels import ops, quant
+    from repro.kernels.ops import default_interpret
+
+    rng = np.random.default_rng(0)
+    rows = []
+    failures = []
+    total_q = total_fp = 0.0
+    tile = (64, 128, 128)
+    for cls, (m, k, n) in SHAPE_CLASSES.items():
+        # SOL pruning: quantized candidates survive only when predicted
+        # weight-bytes saved is a meaningful fraction of the op's traffic
+        cands = tune.quant_candidates("gemm")
+        kept = tune.prune_quant((m, n, k), cands, dtype="fp32")
+        kept_wdtypes = {c.as_dict()["wdtype"] for c, _ in kept}
+        assert "none" in kept_wdtypes, "fp default must always survive"
+
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        fp_fn = lambda: ops.gemm(jnp.asarray(a), jnp.asarray(w),  # noqa
+                                 tile=tile, out_dtype=jnp.float32)
+        out_fp = np.asarray(fp_fn())
+
+        for wdtype in WDTYPES:
+            if wdtype not in kept_wdtypes:
+                # pruned analytically — log it so the drop is visible
+                print(f"{wdtype:9s} {cls:7s} {m}x{k}x{n}: SOL-pruned "
+                      f"(predicted bytes saved below threshold)")
+                continue
+            qt = quant.quantize(jnp.asarray(w), wdtype)
+            q_fn = lambda: ops.gemm_q(jnp.asarray(a), qt,  # noqa
+                                      tile=tile, out_dtype=jnp.float32)
+            t_q, out_q, t_fp, _ = bench_pair(q_fn, fp_fn, reps)
+
+            rel_err = float(np.linalg.norm(out_q - out_fp)
+                            / max(np.linalg.norm(out_fp), 1e-30))
+            budget = tune.quant_error_budget(wdtype)
+
+            # dtype-aware SOL byte prediction vs the bytes the quantized
+            # kernel actually streams (exact array sizes)
+            pred = matmul_hbm_bytes(m, n, k, a_dtype="fp32",
+                                    w_dtype=wdtype)
+            meas = (a.nbytes + int(qt.values.nbytes)
+                    + int(qt.scales.nbytes) + out_q.nbytes)
+            err = abs(pred - meas) / max(meas, 1)
+            saved, frac = quant_bytes_saved(m, n, k, w_dtype_from="fp32",
+                                            w_dtype_to=wdtype,
+                                            a_dtype="fp32")
+            within = rel_err <= budget
+            verdict = wdtype if within else "none"
+            rows.append((wdtype, cls, f"{m}x{k}x{n}", pred, meas,
+                         100 * err, rel_err, budget, verdict,
+                         1e3 * t_fp, 1e3 * t_q, 100 * frac))
+            print(f"{wdtype:9s} {cls:7s} {m}x{k}x{n}: "
+                  f"pred {pred / 1e3:7.1f} KB  meas {meas / 1e3:7.1f} KB "
+                  f"(err {100 * err:4.1f}%)  rel_err {rel_err:.4f} "
+                  f"(budget {budget})  fp {1e3 * t_fp:6.2f} ms  "
+                  f"q {1e3 * t_q:6.2f} ms  saves {100 * frac:.0f}% bytes")
+            if err > 0.20:
+                failures.append(
+                    f"{wdtype}/{cls}: SOL byte prediction off by "
+                    f"{100 * err:.0f}% (> 20%)")
+            if not within:
+                failures.append(
+                    f"{wdtype}/{cls}: rel error {rel_err:.4f} exceeds "
+                    f"budget {budget}")
+            total_q += t_q
+            total_fp += t_fp
+            # persist the measured verdict (veto on budget violation) —
+            # only on real hardware, where the wall clock means something;
+            # the error verdict itself is hardware-independent but shares
+            # the record, so keep the policy uniform with fusion_sweep
+            try:
+                if not default_interpret():
+                    tune.record_quant_measurement(
+                        "gemm", (m, n, k), "fp32", wdtype_best=verdict,
+                        rel_err=rel_err, budget=budget,
+                        bytes_saved=saved,
+                        trials=[{"config": {"wdtype": wdtype},
+                                 "median_s": t_q},
+                                {"config": {"wdtype": "none"},
+                                 "median_s": t_fp}])
+            except Exception:
+                pass
+
+    table = ["| wdtype | shape class | m x k x n | SOL bytes | measured "
+             "bytes | byte err % | rel err | budget | verdict | fp ms | "
+             "quant ms | bytes saved % |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        table.append(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]:.0f} | {r[4]:.0f}"
+                     f" | {r[5]:.1f} | {r[6]:.4f} | {r[7]} | {r[8]} |"
+                     f" {r[9]:.2f} | {r[10]:.2f} | {r[11]:.0f} |")
+    md = "## Quantization sweep: quantized vs fp GEMM\n\n" \
+        + "\n".join(table) + "\n"
+    with open("quant_sweep_summary.md", "w") as f:
+        f.write(md)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(md)
+
+    print(f"aggregate wall: quantized {1e3 * total_q:.1f} ms vs fp "
+          f"{1e3 * total_fp:.1f} ms")
+    if total_q > total_fp * TIME_SLACK:
+        msg = (f"quantized aggregate wall time {1e3 * total_q:.1f} ms "
+               f"exceeds fp {1e3 * total_fp:.1f} ms x {TIME_SLACK}")
+        if default_interpret():
+            print(f"WARNING (interpret mode, not gating): {msg}")
+        else:
+            failures.append(msg)
+    if failures:
+        raise SystemExit("quant_sweep FAILED:\n  " + "\n  ".join(failures))
+    print(f"quant_sweep: all {len(rows)} wdtype x shape cases passed "
+          f"(SOL bytes within 20% of measured, rel error within budget)")
+
+
+if __name__ == "__main__":
+    main()

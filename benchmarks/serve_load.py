@@ -22,6 +22,7 @@ Assertions (exit non-zero on violation; CI runs ``--smoke``):
 
 import argparse
 import copy
+import dataclasses
 import time
 
 import jax
@@ -59,12 +60,12 @@ def build_workload(cfg, *, chunk: int, n_chat: int, n_doc: int,
 
 
 def run_engine(model, params, reqs, *, mode, scheduler, prefix, chunk,
-               max_batch, max_len, fused=None):
+               max_batch, max_len, fused=None, weight_dtype=None):
     reqs = copy.deepcopy(reqs)
     engine = ServeEngine(
         model, params, max_batch=max_batch, max_len=max_len,
         prefill_mode=mode, chunk_size=chunk, scheduler=scheduler,
-        fused_decode=fused,
+        fused_decode=fused, weight_dtype=weight_dtype,
         prefix_cache=PrefixCache(block=chunk) if prefix else None)
     t0 = time.perf_counter()
     engine.run(reqs, max_steps=100000)
@@ -194,6 +195,113 @@ def main():
                         {"config": {"fuse": False}, "median_s": wall_off}])
     except Exception:
         pass
+
+    # quantized weights (ModelConfig.weight_dtype): decode is memory-bound
+    # on weight bytes, so int8 projections (+ untied lm head) must cut the
+    # analytic weight-bytes-per-decode-step >= 3x, with outputs inside the
+    # declared end-to-end rel-error budget, and an exceeded budget must
+    # land a quant:decode_block VETO in the tuning cache
+    import jax.numpy as jnp
+
+    from repro.core import tune
+
+    fcfg = dataclasses.replace(cfg, tie_embeddings=False)
+    qcfg = dataclasses.replace(fcfg, weight_dtype="int8")
+    model_f = build_model(fcfg)
+    qparams = model_f.init(jax.random.PRNGKey(1))
+    model_q = build_model(qcfg)
+
+    fp_out, eng_fp, summ_fp, _ = run_engine(
+        model_f, qparams, reqs, chunk=chunk, max_batch=args.max_batch,
+        max_len=max_len, mode="chunked", scheduler="fifo", prefix=False)
+    # weight_dtype passed explicitly: the sweep IS the measurer, so a
+    # previously persisted quant:decode_block veto must not turn the
+    # quantized run off (same policy as fusion_sweep's fuse="force")
+    q_out, eng_q, summ_q, _ = run_engine(
+        model_q, qparams, reqs, chunk=chunk, max_batch=args.max_batch,
+        max_len=max_len, mode="chunked", scheduler="fifo", prefix=False,
+        weight_dtype="int8")
+    q_out2, eng_q2, _, _ = run_engine(
+        model_q, qparams, reqs, chunk=chunk, max_batch=args.max_batch,
+        max_len=max_len, mode="chunked", scheduler="fifo", prefix=False,
+        weight_dtype="int8")
+
+    wb_fp = summ_fp["weight_bytes_per_step"]
+    wb_q = summ_q["weight_bytes_per_step"]
+    ratio = wb_fp / max(wb_q, 1)
+    print(f"\nquantized decode: {wb_q / 1e3:.1f} KB weights/step (int8) vs "
+          f"{wb_fp / 1e3:.1f} KB (fp32) -> {ratio:.2f}x less weight "
+          f"traffic")
+    assert eng_q.model.cfg.weight_dtype == "int8"
+    assert ratio >= 3.0, \
+        f"int8 weights must cut weight-bytes-per-decode-step >= 3x " \
+        f"(got {ratio:.2f}x)"
+    assert wb_q == eng_q.weight_bytes_per_step
+    mism = [a.rid for a, b in zip(q_out, q_out2)
+            if a.out_tokens != b.out_tokens]
+    assert not mism, \
+        f"quantized decode must be bitwise deterministic across engine " \
+        f"runs (rids {mism} differ)"
+
+    # declared error budget: per-op budget compounded in quadrature over
+    # the quantized matmuls one forward runs
+    probe = jnp.asarray(np.array([[r.prompt[:4] for r in reqs[:2]]],
+                                 np.int32)[0])
+    counts = jnp.full((probe.shape[0],), probe.shape[1], jnp.int32)
+    lf, _ = model_f.prefill_step(eng_fp.params,
+                                 model_f.init_cache(probe.shape[0], 16),
+                                 probe, counts)
+    lq, _ = model_q.prefill_step(eng_q.params,
+                                 model_q.init_cache(probe.shape[0], 16),
+                                 probe, counts)
+    lf = np.asarray(lf, np.float32)
+    lq = np.asarray(lq, np.float32)
+    rel_err = float(np.linalg.norm(lq - lf) / np.linalg.norm(lf))
+    n_mm = model_q.num_quantized_matmuls(eng_q.params)
+    budget = tune.model_error_budget("int8", n_mm)
+    print(f"quantized logits rel err {rel_err:.4f} vs declared budget "
+          f"{budget:.4f} ({n_mm} quantized matmuls x per-op "
+          f"{tune.quant_error_budget('int8')})")
+    assert rel_err <= budget, \
+        f"quantized outputs exceed the declared rel-error budget " \
+        f"({rel_err:.4f} > {budget:.4f})"
+    dims = (qcfg.d_model, qcfg.d_ff)
+    if not tune.tuning_disabled():
+        # record the within-budget verdict; then demonstrate the veto
+        # path with an impossible budget — the veto entry must land in
+        # the tuning cache AND flip the engine's resolved weight_dtype
+        tune.record_quant_measurement(
+            "decode_block", dims, qcfg.compute_dtype, wdtype_best="int8",
+            rel_err=rel_err, budget=budget)
+        assert tune.tuned_wdtype("decode_block", dims,
+                                 qcfg.compute_dtype) == "int8"
+        assert rel_err > 0, "quantized logits cannot match fp exactly"
+        tiny = rel_err / 2              # an impossible budget -> veto
+        try:
+            tune.record_quant_measurement(
+                "decode_block", dims, qcfg.compute_dtype,
+                wdtype_best="none", rel_err=rel_err, budget=tiny)
+            assert tune.tuned_wdtype("decode_block", dims,
+                                     qcfg.compute_dtype) == "none", \
+                "exceeded budget must record a quant:decode_block veto"
+            _, eng_veto, summ_veto, _ = run_engine(
+                model_q, qparams, reqs, chunk=chunk,
+                max_batch=args.max_batch, max_len=max_len, mode="chunked",
+                scheduler="fifo", prefix=False)
+            assert eng_veto.model.cfg.weight_dtype == "none", \
+                "tuned veto must turn the engine's weight quantization off"
+            print(f"tuned veto: quant:decode_block {{'wdtype': 'none'}} "
+                  f"recorded (budget {tiny:.4f} < measured {rel_err:.4f});"
+                  f" engine resolved weight_dtype=none "
+                  f"({summ_veto['weight_bytes_per_step'] / 1e3:.1f} "
+                  f"KB/step)")
+        finally:
+            # ALWAYS restore the honest verdict: the demonstration entry
+            # lives in the persistent cache and would otherwise silently
+            # disable int8 for every later serve run of this shape
+            tune.record_quant_measurement(
+                "decode_block", dims, qcfg.compute_dtype,
+                wdtype_best="int8", rel_err=rel_err, budget=budget)
     print("serve_load: all assertions passed")
 
 

@@ -83,6 +83,19 @@ class ModelConfig:
     #                                  are bitwise identical either way —
     #                                  the win is fewer kernel dispatches
     #                                  and HBM round-trips per step
+    weight_dtype: str = "none"       # "none" keeps fp weights; "int8" /
+    #                                  "fp8_e4m3" / "fp8_e5m2" quantizes
+    #                                  attention+MLP projection (and
+    #                                  untied lm-head) weights ONCE at
+    #                                  engine load and routes decode
+    #                                  through the dequant-fused step (the
+    #                                  DSL wdtype lever / rmsnorm_gemm_q8
+    #                                  kernel on TPU).  Decode is memory-
+    #                                  bound on weight bytes, so int8 cuts
+    #                                  per-step weight traffic ~4x at a
+    #                                  rel-error cost the tuner checks
+    #                                  against a budget.  REPRO_QUANT=off
+    #                                  is the escape hatch.
 
     # ---- derived -------------------------------------------------------
     @property

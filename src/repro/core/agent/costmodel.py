@@ -36,14 +36,11 @@ from ..dsl.compiler import lower_dsl
 from ..dsl.errors import DSLError
 from ..dsl.ir import KernelIR, PipelineIR
 from ..problems.base import Problem, Segment, Solution
-from ..sol.hardware import ChipSpec, TPU_V5E, dtype_bytes
+from ..sol.hardware import (ChipSpec, TPU_V5E, ceil_to as _ceil_to,
+                            dtype_bytes)
 
 LAUNCH_OVERHEAD = 5e-6        # per optimized-kernel launch
 BASELINE_OVERHEAD = 12e-6     # per baseline framework op dispatch
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _align_eff(x: int, native: int = 128) -> float:
@@ -404,4 +401,37 @@ def cite_fusion_report(report) -> str:
     if declined:
         head += f"; declined: " + "; ".join(
             f"{d.pattern} ({d.reason})" for d in declined[:2])
+    return head
+
+
+def cite_quant_report(report: Optional[Dict]) -> str:
+    """One-line citation of a quantization headroom report
+    (``core.tune.quant_report``) for agent run logs / hypothesis notes —
+    the quantized twin of ``cite_fusion_report``.
+
+    Ties an agent's "quantize this weight" hypothesis to the dtype-aware
+    SOL byte accounting that justified it (predicted weight-bytes saved as
+    a fraction of the op's HBM traffic) and to the measured error-budget
+    verdict the tuning cache holds for the shape bucket.
+    """
+    if not report:
+        return "no quantization report (op not a weight matmul)"
+    head = (f"{report['op']}{tuple(report['dims'])}: "
+            f"{report['wdtype']} weights save "
+            f"{report['bytes_saved'] / 1e3:.1f} KB "
+            f"({100 * report['headroom']:.0f}% of op HBM traffic)")
+    verdict = report.get("verdict", "unmeasured")
+    if verdict == "unmeasured":
+        head += (f"; error budget {report['budget']:.3g} rel "
+                 f"(unmeasured — sweep to confirm)")
+    elif verdict == "vetoed":
+        err = report.get("rel_err")
+        head += ("; VETOED by measured error"
+                 + (f" {err:.3g}" if err is not None else "")
+                 + f" > budget {report['budget']:.3g}")
+    else:
+        err = report.get("rel_err")
+        head += (f"; measured verdict {verdict}"
+                 + (f" (rel err {err:.3g} within budget "
+                    f"{report['budget']:.3g})" if err is not None else ""))
     return head

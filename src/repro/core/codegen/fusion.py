@@ -39,17 +39,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..dsl.ir import DTypes, EpilogueIR, KernelIR, PipelineIR, TransformIR
 from ..dsl.stdlib import EPILOGUES
-from ..sol.hardware import dtype_bytes, get_chip
+from ..sol.hardware import ceil_to as _ceil_to, dtype_bytes, get_chip
 from .common import input_names
 from .pipeline import _PERMS
 
 MODES = ("auto", "off", "force")
 
 _LANE = 128
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _cast_ep(dtype: str, kernel_write: bool = False) -> EpilogueIR:
@@ -251,8 +247,12 @@ def _ws_rmsnorm_gemm(p: KernelIR, c: KernelIR, pdims, cdims, chip) -> int:
     bn = min(bn, _ceil_to(n, _LANE))
     kp = _ceil_to(k, bk)
     in_b = dtype_bytes(c.dtypes.input)
+    # a quantized weight slab sits in VMEM at 1 B/element (+ fp32 scales)
+    w_b = dtype_bytes(c.wdtype) if c.wdtype else in_b
+    scale_b = bn * 4 if c.wdtype else 0
     # x row block + gamma-scaled B slab + f32 normalized rows + f32 acc
-    return (bm * kp + kp * bn) * in_b + bm * kp * 4 + bm * bn * 4
+    return bm * kp * in_b + kp * bn * w_b + scale_b \
+        + bm * kp * 4 + bm * bn * 4
 
 
 def _ws_gemm_gemm(p: KernelIR, c: KernelIR, pdims, cdims, chip) -> int:
@@ -320,6 +320,10 @@ def _try_fuse(p: KernelIR, c: KernelIR, pdims, cdims, mode: str, chip
             return None, "fold_rmsnorm", \
                 f"row-stat epilogues fold into gemm producers only " \
                 f"(got {p.op_name})", extras
+        if p.wdtype is not None:
+            return None, "fold_rmsnorm", \
+                "producer has quantized weights (the single-N-tile " \
+                "gemm_rmsnorm path is fp-only)", extras
         if p.swap or p.split_k.mode != "none":
             return None, "fold_rmsnorm", \
                 "producer uses swap/split-k (incompatible with the " \
@@ -410,12 +414,22 @@ def _try_fuse(p: KernelIR, c: KernelIR, pdims, cdims, mode: str, chip
             dtypes=DTypes(p.dtypes.input, "fp32", c.dtypes.output),
             tile=c.tile, stages=c.stages,
             vmem_limit_mb=c.vmem_limit_mb,
+            # a quantized consumer weight rides into the fused kernel:
+            # rmsnorm -> gemm_q collapses to rmsnorm_gemm_q8
+            wdtype=c.wdtype, wscale=c.wscale,
             epilogues=c.epilogues,
         )
         return fused, "rmsnorm_gemm", \
-            "normalized activations stay in VMEM", extras
+            ("normalized activations stay in VMEM"
+             + (f" (quantized {c.wdtype} weight)" if c.wdtype else "")), \
+            extras
 
     if p.op_name == "gemm" and c.op_name == "gemm":
+        if p.wdtype is not None or c.wdtype is not None:
+            return None, "gemm_gemm", \
+                "a stage has quantized weights (gemm_gemm fusion is " \
+                "fp-only; the quantized edge fuses via rmsnorm_gemm)", \
+                extras
         if p.swap or c.swap or p.split_k.mode != "none" \
                 or c.split_k.mode != "none":
             return None, "gemm_gemm", "swap/split-k stage", extras

@@ -69,6 +69,7 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
 
     pre: List[str] = [
         "from repro.kernels import ops as _kops",
+        "from repro.kernels import quant as _kq" if ir.wdtype else "",
         emit_custom_bindings(ir),
     ]
     ep_fn = f"_epilogue_{fn_name}"
@@ -121,14 +122,30 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
         tile = _tile(ir)
         b_dt = JNP_DTYPE[str(ir.op_param("b_dtype", ir.dtypes.input))]
         cast_aux = "".join(f", {n}" for n in aux_names)
-        body += [
-            f"    x = x.astype({in_dt}); b = b.astype({b_dt})",
-            f"    return _kops.rmsnorm_gemm(x, gamma, b{cast_aux},"
-            f" tile={tile},",
-            f"        eps={eps}, inter_dtypes={_inter_src()},",
-            f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
-            f"        out_dtype={out_dt})",
-        ]
+        if ir.wdtype:
+            # quantized fused decode-block kernel: rmsnorm_gemm_q8
+            per_ch = ir.wscale == "per_channel"
+            body += [
+                f"    x = x.astype({in_dt})",
+                # quantize from the RAW driver weight, exactly like the
+                # unfused gemm stage would (bitwise fused == unfused)
+                f"    _wq = _kq.quantize_cached(b, {ir.wdtype!r},"
+                f" per_channel={per_ch})",
+                f"    return _kops.rmsnorm_gemm_q(x, gamma, _wq,"
+                f" None{cast_aux}, tile={tile},",
+                f"        eps={eps}, inter_dtypes={_inter_src()},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+                f"        out_dtype={out_dt})",
+            ]
+        else:
+            body += [
+                f"    x = x.astype({in_dt}); b = b.astype({b_dt})",
+                f"    return _kops.rmsnorm_gemm(x, gamma, b{cast_aux},"
+                f" tile={tile},",
+                f"        eps={eps}, inter_dtypes={_inter_src()},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+                f"        out_dtype={out_dt})",
+            ]
         return ("\n".join(p for p in pre if p) + "\n\n"
                 + "\n".join(body) + "\n")
 
@@ -165,12 +182,28 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
         dims = ""
         if op == "gemm" and ir.dimension_semantics is not None:
             dims = f", dimension_semantics={ir.dimension_semantics!r}"
-        body += [
-            f"    a = a.astype({in_dt}); b = b.astype({in_dt})",
-            f"    return _kops.{kop}(a, b{cast_aux}, tile={tile},",
-            f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
-            f"        out_dtype={out_dt}{swap}{dims})",
-        ]
+        if ir.wdtype:
+            # weight-quantized route: B is quantized in the driver (cached
+            # per concrete weight buffer) and the kernel dequantizes at
+            # writeback (the wdtype lever)
+            per_ch = ir.wscale == "per_channel"
+            qdims = dims if kop == "gemm" else ""
+            body += [
+                f"    a = a.astype({in_dt})",
+                f"    _wq = _kq.quantize_cached(b, {ir.wdtype!r},"
+                f" per_channel={per_ch})",
+                f"    return _kops.{kop}_q(a, _wq, None{cast_aux},"
+                f" tile={tile},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+                f"        out_dtype={out_dt}{qdims})",
+            ]
+        else:
+            body += [
+                f"    a = a.astype({in_dt}); b = b.astype({in_dt})",
+                f"    return _kops.{kop}(a, b{cast_aux}, tile={tile},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+                f"        out_dtype={out_dt}{swap}{dims})",
+            ]
     elif op in ("conv1d", "conv2d"):
         # im2col unfold + Pallas GEMM (the TPU-idiomatic conv lowering)
         tile = _tile(ir)

@@ -37,10 +37,25 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
     prim = input_names(ir)
     aux = [name for name, _ in aux_plan(ir)]
     sig = ", ".join(list(prim) + aux)
-    pre: List[str] = [emit_custom_bindings(ir),
+    pre: List[str] = ["from repro.kernels import quant as _kq"
+                      if ir.wdtype else "",
+                      emit_custom_bindings(ir),
                       emit_epilogue_fn(ir, f"_epilogue_{fn_name}",
                                        kernel_write_casts=False)]
     body: List[str] = [f"def {fn_name}({sig}):"]
+
+    def q_dot(b_var: str, contract: str) -> List[str]:
+        """Quantize B in the driver, dequant-at-writeback matmul — the
+        same (A @ Q) * s formulation as the Pallas kernels (scales commute
+        with the contraction), so both backends agree."""
+        per_ch = ir.wscale == "per_channel"
+        # quantize() casts to f32 internally, so the raw weight is passed
+        # straight through (also lets the per-buffer memo hit every call)
+        return [
+            f"    _wq = _kq.quantize_cached({b_var},"
+            f" {ir.wdtype!r}, per_channel={per_ch})",
+            f"    x = _kq.apply_scales({contract}, _wq.scales)",
+        ]
 
     def ep_lines():
         lines = _epilogue_call(ir)
@@ -58,8 +73,15 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
 
     op = ir.op_name
     if op == "gemm":
+        if ir.wdtype:
+            body += q_dot(
+                "b", f"jnp.dot(a.astype({f32}),"
+                     f" _wq.values.astype({f32}){prec})")
+        else:
+            body += [
+                f"    x = jnp.dot(a.astype({f32}), b.astype({f32}){prec})",
+            ]
         body += [
-            f"    x = jnp.dot(a.astype({f32}), b.astype({f32}){prec})",
             *ep_lines(),
             f"    return x.astype({out_dt})",
         ]
@@ -70,7 +92,16 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
             "    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)",
             f"    z = xf * jax.lax.rsqrt(ms + {eps}) * gamma.astype({f32})",
             *inter_casts("z"),
-            f"    x = jnp.dot(z.astype({f32}), b.astype({f32}){prec})",
+        ]
+        if ir.wdtype:
+            body += q_dot(
+                "b", f"jnp.dot(z.astype({f32}),"
+                     f" _wq.values.astype({f32}){prec})")
+        else:
+            body += [
+                f"    x = jnp.dot(z.astype({f32}), b.astype({f32}){prec})",
+            ]
+        body += [
             *ep_lines(),
             f"    return x.astype({out_dt})",
         ]
@@ -96,9 +127,16 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
             f"    return x.astype({out_dt})",
         ]
     elif op in ("batched_gemm", "grouped_gemm"):
+        if ir.wdtype:
+            body += q_dot(
+                "b", f"jnp.einsum('gmk,gkn->gmn', a.astype({f32}),"
+                     f" _wq.values.astype({f32}))")
+        else:
+            body += [
+                f"    x = jnp.einsum('gmk,gkn->gmn', a.astype({f32}),"
+                f" b.astype({f32}))",
+            ]
         body += [
-            f"    x = jnp.einsum('gmk,gkn->gmn', a.astype({f32}),"
-            f" b.astype({f32}))",
             *ep_lines(),
             f"    return x.astype({out_dt})",
         ]

@@ -28,6 +28,31 @@ predicted headroom is recorded on the compile artifact
 unfused driver (fold boundaries replay the unfused dtype round-trips).
 The escape hatch is ``compile_dsl(..., fuse="off")`` / ``REPRO_FUSION=off``;
 ``fuse="force"`` fuses every legal edge without shape proof.
+
+Quantized weights (the ``wdtype`` lever)
+----------------------------------------
+
+``.with_wdtype(int8)`` (or ``fp8_e4m3`` / ``fp8_e5m2``) on a matmul-family
+operation requests a *quantized weight*: the B operand is symmetrically
+quantized (per-channel scales by default; ``scale=per_tensor`` for one
+global scale) and the kernel dequantizes IN-KERNEL — the weight streams
+from HBM at 1 byte/element, is widened on-chip, the MXU accumulates in
+fp32, and the per-channel scales multiply the accumulator once at
+writeback.  This is the SOL-predicted lever for memory-bound shapes whose
+``t_memory`` is dominated by weight bytes (decode): ~4x less weight
+traffic for int8 vs fp32 at a quantization-error cost the autotuner
+checks against a per-op error budget (``core/tune`` records a
+``quant:<op>`` veto when the measured rel-error exceeds it).
+
+``wdtype`` composes with the fusion pass: ``rmsnorm -> gemm.with_wdtype``
+collapses into the quantized fused kernel (``rmsnorm_gemm_q8``) — the
+serve decode block's quantized step.  ``gemm_gemm`` collapse and the
+single-N-tile ``fold_rmsnorm`` path decline quantized producers/consumers
+(recorded in the fusion report with the reason).
+
+Escape hatch: ``REPRO_QUANT=off`` disables model/serve weight quantization
+and tuned-wdtype lookups process-wide (explicit ``.with_wdtype`` programs
+still compile — the flag guards the *implicit* quantized paths).
 '''
 
 EBNF = r"""
@@ -85,13 +110,15 @@ cross_entropy_op   = "cross_entropy(" , [ "reduction=" , RED_MODE ] , ")" ;
 ssd_scan_op        = "ssd_scan(" , "d_state=" , INTEGER , ")" ;
 
 (* CONFIGURATION — all explicit and named; no hidden defaults to guess *)
-configuration = dtype_config | arch_config | tile_config | block_config
-              | chunk_config | layout_config | stages_config
+configuration = dtype_config | wdtype_config | arch_config | tile_config
+              | block_config | chunk_config | layout_config | stages_config
               | split_k_config | swap_config | vmem_config
               | dimsem_config | precision_config ;
 
 dtype_config   = ".with_dtype(" , "input=" , DTYPE , "," , "acc=" , DTYPE
                , "," , "output=" , DTYPE , ")" ;
+wdtype_config  = ".with_wdtype(" , QDTYPE , [ "," , "scale=" , SCALE_GRAN ]
+               , ")" ;   (* quantized B operand, dequantized in-kernel *)
 arch_config    = ".with_arch(" , ARCH , ")" ;
 tile_config    = ".with_tile(" , "m=" , INTEGER , "," , "n=" , INTEGER
                , "," , "k=" , INTEGER , ")" ;
@@ -128,6 +155,8 @@ input_dict  = "{" , STRING , ":" , STRING , { "," , STRING , ":" , STRING } , "}
 DTYPE       = "fp32" | "float32" | "bf16" | "bfloat16" | "fp16" | "float16"
             | "fp8_e4m3" | "e4m3" | "fp8_e5m2" | "e5m2"
             | "int8" | "s8" | "int16" | "int32" ;
+QDTYPE      = "int8" | "fp8_e4m3" | "fp8_e5m2" ;
+SCALE_GRAN  = "per_channel" | "per_tensor" ;
 ARCH        = "tpu_v4" | "tpu_v5e" | "tpu_v5p" ;
 MM_LAYOUT   = "RowMajor" | "ColumnMajor" ;
 REDUCE_KIND = "sum" | "max" | "mean" | "min" ;
@@ -161,6 +190,12 @@ STRING      = "'" , { ANY_CHAR - "'" } , "'" ;
  * ACCUMULATOR: acc=fp32 for float inputs, acc=int32 for int8 inputs
  *   (the MXU accumulates fp32/int32 — narrower acc is rejected).
  *
+ * .with_wdtype: matmul family only; int8 | fp8_e4m3 | fp8_e5m2 (fp8
+ *   gated to tpu_v5p like fp8 inputs); requires acc=fp32 (dequant-fused
+ *   kernels accumulate float); incompatible with .with_swap(true) (swap
+ *   moves the quantized weight out of the B slot) and with row-stat
+ *   (rmsnorm) epilogues on the same kernel.
+ *
  * .with_swap(true): fp32 GEMM only benefit; REQUIRES square output
  *   (M == N) — runtime-checked, like the paper's operand-swap rule.
  *
@@ -175,6 +210,11 @@ STRING      = "'" , { ANY_CHAR - "'" } , "'" ;
  * TEMPLATE (fp32 square GEMM with operand swap):
  *   gemm().with_dtype(input=fp32, acc=fp32, output=fp32)
  *     .with_tile(m=128, n=128, k=256).with_swap(true)
+ *
+ * TEMPLATE (int8 weight-quantized GEMM, dequant fused in-kernel):
+ *   gemm().with_dtype(input=bf16, acc=fp32, output=bf16)
+ *     .with_wdtype(int8, scale=per_channel)
+ *     .with_tile(m=256, n=256, k=512) >> bias()
  *
  * TEMPLATE (pipeline with layout/dtype transform):
  *   pipeline(transpose(input, NCL, NLC, fp32, bf16),
@@ -203,6 +243,10 @@ grouped_gemm(expert_count=8)
 # Mamba-2 SSD scan, 128-token chunks
 ssd_scan(d_state=128).with_dtype(input=fp32, acc=fp32, output=fp32)
   .with_chunk(128)
+
+# int8 weight-quantized GEMM: weight streams at 1 B/elem, dequant fused
+gemm().with_dtype(input=bf16, acc=fp32, output=bf16)
+  .with_wdtype(int8).with_tile(m=256, n=256, k=512)
 """
 
 

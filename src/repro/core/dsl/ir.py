@@ -77,6 +77,10 @@ class KernelIR:
     vmem_limit_mb: Optional[int] = None
     dimension_semantics: Optional[Tuple[str, ...]] = None
     precision: str = "default"   # default | highest (fp32 multi-pass on MXU)
+    # Weight quantization (matmul family): the B operand is symmetrically
+    # quantized to this 8-bit dtype and dequantized in-kernel; None = fp.
+    wdtype: Optional[str] = None
+    wscale: str = "per_channel"  # per_channel | per_tensor
     epilogues: Tuple[EpilogueIR, ...] = ()
     # Fused two-kernel stages (gemm_gemm): the producer's epilogue chain,
     # applied to the VMEM-resident intermediate between the two matmuls.
@@ -123,6 +127,8 @@ class KernelIR:
             parts.append(f"dims={','.join(self.dimension_semantics)}")
         if self.precision != "default":
             parts.append(f"prec={self.precision}")
+        if self.wdtype:
+            parts.append(f"wdtype={self.wdtype}:{self.wscale}")
         for ep in self.mid_epilogues:
             p = ",".join(f"{k}:{v}" for k, v in sorted(ep.params))
             e = f"|{ep.expr}|{sorted(ep.inputs)}" if ep.expr else ""

@@ -127,6 +127,11 @@ _cfg(ConfigDef("with_dtype",
                (ParamSpec("input", str, required=True),
                 ParamSpec("acc", str, required=True),
                 ParamSpec("output", str, required=True))))
+_cfg(ConfigDef("with_wdtype",
+               (ParamSpec("dtype", str, required=True),
+                ParamSpec("scale", str, default="per_channel",
+                          choices=("per_channel", "per_tensor"))),
+               families=("matmul",)))
 _cfg(ConfigDef("with_arch", (ParamSpec("arch", str, required=True),)))
 _cfg(ConfigDef("with_tile",
                (ParamSpec("m", int, required=True),

@@ -148,6 +148,8 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
     vmem_limit_mb: Optional[int] = None
     dim_semantics: Optional[Tuple[str, ...]] = None
     precision = "default"
+    wdtype: Optional[str] = None
+    wscale = "per_channel"
 
     for cfg in node.configs:
         cdef = CONFIGS.get(cfg.name)
@@ -226,6 +228,20 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
             vmem_limit_mb = int(params.get("mb", 0)) or None
         elif cfg.name == "with_precision":
             precision = str(params.get("precision", "default"))
+        elif cfg.name == "with_wdtype":
+            wd = _canon_dtype_or_err(ctx, params.get("dtype"),
+                                     "with_wdtype", cfg.line)
+            if wd is not None and wd not in ("int8", "fp8_e4m3", "fp8_e5m2"):
+                ctx.error("E_WDTYPE",
+                          f"weight quantization dtype must be 8-bit "
+                          f"(int8, fp8_e4m3, fp8_e5m2), got {wd}",
+                          hint="the dequant-fused kernels stream weights "
+                               "at 1 B/element; wider dtypes save no "
+                               "bytes over .with_dtype",
+                          line=cfg.line)
+                wd = None
+            wdtype = wd
+            wscale = str(params.get("scale", "per_channel"))
 
     # ---- required bindings ------------------------------------------------
     if dtypes is None:
@@ -255,6 +271,39 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
     if dtypes.input in ("int8", "uint8") and dtypes.acc != "int32":
         ctx.error("E_ACC_DTYPE",
                   "int8 inputs require acc=int32", line=node.line)
+
+    # ---- weight quantization gating -----------------------------------
+    if wdtype is not None:
+        if wdtype.startswith("fp8") and wdtype not in chip.peak_flops:
+            ctx.error("E_WDTYPE_ARCH",
+                      f"{wdtype} weights require tpu_v5p+ (arch is {arch})",
+                      hint="fp8 is gated to newer TPU generations, like "
+                           "the paper gates fp8 to SM90+",
+                      line=node.line)
+        if dtypes.acc != "fp32":
+            ctx.error("E_WDTYPE_ACC",
+                      f"quantized weights require acc=fp32 "
+                      f"(got acc={dtypes.acc})",
+                      hint="the dequant-fused kernels widen the 8-bit "
+                           "weight on-chip and accumulate in fp32; the "
+                           "per-channel scales multiply the accumulator "
+                           "at writeback",
+                      line=node.line)
+        if swap:
+            ctx.error("E_WDTYPE_SWAP",
+                      "with_swap(true) is incompatible with .with_wdtype",
+                      hint="the operand swap moves the quantized weight "
+                           "out of the B slot the dequant-fused kernel "
+                           "dequantizes",
+                      line=node.line)
+        if any(EPILOGUES.get(ep.name) is not None
+               and EPILOGUES[ep.name].row_stat for ep in node.epilogues):
+            ctx.error("E_WDTYPE_ROWSTAT",
+                      "row-stat epilogues (rmsnorm) cannot fold into a "
+                      "weight-quantized GEMM",
+                      hint="the single-N-tile gemm_rmsnorm path is "
+                           "fp-only; keep the norm as its own stage",
+                      line=node.line)
 
     # ---- stages ------------------------------------------------------
     if not (1 <= stages <= 8):
@@ -300,7 +349,8 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
             in_b = dtype_bytes(dtypes.input)
             acc_b = 4
             a_tile = tile.m * tile.k * in_b
-            b_tile = tile.k * tile.n * in_b
+            # a quantized weight tile sits in VMEM at 1 B/element
+            b_tile = tile.k * tile.n * dtype_bytes(wdtype or dtypes.input)
             acc_tile = tile.m * tile.n * acc_b
             aux = 0
             for ep in node.epilogues:
@@ -440,6 +490,8 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
         vmem_limit_mb=vmem_limit_mb,
         dimension_semantics=dim_semantics,
         precision=precision,
+        wdtype=wdtype,
+        wscale=wscale,
         epilogues=tuple(epilogues),
     )
 

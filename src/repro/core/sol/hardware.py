@@ -33,8 +33,12 @@ DTYPE_CANON: Dict[str, str] = {
     "float32": "fp32", "fp32": "fp32",
     "bfloat16": "bf16", "bf16": "bf16",
     "float16": "fp16", "fp16": "fp16",
+    # float8_e4m3fn / float8_e5m2 are the numpy/ml_dtypes spellings jnp
+    # dtypes canonicalize through (np.dtype(...).name)
     "fp8_e4m3": "fp8_e4m3", "e4m3": "fp8_e4m3",
+    "float8_e4m3fn": "fp8_e4m3", "float8_e4m3": "fp8_e4m3",
     "fp8_e5m2": "fp8_e5m2", "e5m2": "fp8_e5m2",
+    "float8_e5m2": "fp8_e5m2",
     "int8": "int8", "s8": "int8",
     "int16": "int16", "s16": "int16",
     "int32": "int32", "s32": "int32",
@@ -51,6 +55,13 @@ def canon_dtype(name: str) -> str:
 
 def dtype_bytes(name: str) -> int:
     return DTYPE_BYTES[canon_dtype(name)]
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m`` (the tile/lane padding
+    rule).  The single shared copy — kernels.ops, the fusion pass, the tuner
+    and the cost model all import this instead of growing private clones."""
+    return -(-x // m) * m
 
 
 # Sublane packing: the second-minor dimension of a VMEM tile must be a

@@ -13,9 +13,9 @@ multi-chip generalization the grading brief requires:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Tuple
 
-from .hardware import ChipSpec, DEFAULT_CHIP
+from .hardware import ChipSpec, DEFAULT_CHIP, dtype_bytes
 
 
 @dataclass
@@ -99,6 +99,78 @@ class RooflineResult:
             "arithmetic_intensity": self.arithmetic_intensity,
             "ridge_point": self.ridge_point,
         }
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware byte accounting (the weight-quantization lever)
+# ---------------------------------------------------------------------------
+
+def tensor_hbm_bytes(tensors: Sequence[Tuple[Sequence[int], str]]) -> float:
+    """Best-case HBM bytes for streaming each (shape, dtype) tensor ONCE at
+    its OWN storage dtype — the dtype-aware generalization of the uniform
+    per-element accounting above.  A quantized weight streams 1 B/element
+    where its fp twin streams 2-4."""
+    total = 0.0
+    for shape, dtype in tensors:
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n * dtype_bytes(dtype)
+    return total
+
+
+def matmul_hbm_bytes(m: int, n: int, k: int, *, a_dtype: str = "bf16",
+                     w_dtype: str = "bf16", out_dtype: Optional[str] = None,
+                     scale_granularity: str = "per_channel",
+                     batch: int = 1) -> float:
+    """Dtype-aware best-case HBM bytes for ``C[b] = A[b] @ W[b]``: each
+    operand read once, the output written once, each at its storage dtype.
+    Quantized weight dtypes (int8 / fp8) additionally stream their fp32
+    scales — per-channel: N per batch; per-tensor: one scalar."""
+    out_dtype = out_dtype or a_dtype
+    total = batch * tensor_hbm_bytes([
+        ((m, k), a_dtype), ((k, n), w_dtype), ((m, n), out_dtype)])
+    if w_dtype in ("int8", "fp8_e4m3", "fp8_e5m2"):
+        scale_elems = n if scale_granularity == "per_channel" else 1
+        total += batch * scale_elems * 4
+    return total
+
+
+def quant_bytes_saved(m: int, n: int, k: int, *,
+                      w_dtype_from: str = "fp32", w_dtype_to: str = "int8",
+                      a_dtype: str = "bf16",
+                      scale_granularity: str = "per_channel",
+                      batch: int = 1) -> Tuple[float, float]:
+    """Predicted (bytes_saved, fraction_of_op_bytes) from quantizing the
+    weight of one matmul — the SOL headroom the tuner prunes quantization
+    candidates with and the agent's cost model cites."""
+    before = matmul_hbm_bytes(m, n, k, a_dtype=a_dtype, w_dtype=w_dtype_from,
+                              batch=batch)
+    after = matmul_hbm_bytes(m, n, k, a_dtype=a_dtype, w_dtype=w_dtype_to,
+                             scale_granularity=scale_granularity,
+                             batch=batch)
+    saved = before - after
+    return saved, (saved / before if before else 0.0)
+
+
+def matmul_roofline(m: int, n: int, k: int, *, a_dtype: str = "bf16",
+                    w_dtype: str = "bf16",
+                    out_dtype: Optional[str] = None, batch: int = 1,
+                    num_chips: int = 1,
+                    chip: Optional[ChipSpec] = None) -> RooflineResult:
+    """Roofline for one matmul with dtype-aware byte accounting.  The
+    compute term keys on the ACTIVATION dtype (a dequant-fused kernel
+    widens 8-bit weights on-chip and runs the MXU at the activation
+    precision); the memory term streams each tensor at its storage dtype."""
+    return RooflineResult(
+        flops=2.0 * batch * m * n * k,
+        hbm_bytes=matmul_hbm_bytes(m, n, k, a_dtype=a_dtype,
+                                   w_dtype=w_dtype, out_dtype=out_dtype,
+                                   batch=batch),
+        num_chips=num_chips,
+        dtype=a_dtype,
+        chip=chip or DEFAULT_CHIP,
+    )
 
 
 def roofline(flops: float, hbm_bytes: float, *, collective_bytes: float = 0.0,

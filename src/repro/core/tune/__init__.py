@@ -17,28 +17,66 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
+import os as _os
+
 from .cache import (TuningCache, TuningRecord, default_cache_dir,
                     device_kind, global_cache, make_key, shape_bucket,
                     tuning_disabled)
 from .candidates import (Candidate, DEFAULT_ATTN_BLOCK, DEFAULT_GEMM_TILE,
                          DEFAULT_BATCHED_TILE, DEFAULT_NORM_BLOCK_ROWS,
-                         DEFAULT_SSD_CHUNK, enumerate_candidates,
-                         fusion_candidates)
+                         DEFAULT_SSD_CHUNK, QUANT_WDTYPES,
+                         enumerate_candidates, fusion_candidates,
+                         quant_candidates)
 from .runner import TuneResult, measure, tune_op
-from .sol_prune import predict_seconds, prune, rank_candidates
+from .sol_prune import predict_seconds, prune, prune_quant, rank_candidates
 
 __all__ = [
     "Candidate", "TuneResult", "TuningCache", "TuningRecord",
     "default_cache_dir", "device_kind", "enumerate_candidates",
-    "fusion_candidates",
+    "fusion_candidates", "quant_candidates", "quant_error_budget",
+    "model_error_budget", "quant_report",
     "global_cache", "lookup", "make_key", "measure", "predict_seconds",
-    "prune", "rank_candidates", "record_fusion_measurement",
+    "prune", "prune_quant", "rank_candidates",
+    "record_fusion_measurement", "record_quant_measurement",
     "seed_hint_for_problem", "shape_bucket",
     "tune_op", "tuned_attention_block", "tuned_fusion", "tuned_gemm_tile",
-    "tuned_norm_block_rows", "tuned_ssd_chunk",
+    "tuned_norm_block_rows", "tuned_ssd_chunk", "tuned_wdtype",
     "tuning_disabled", "DEFAULT_ATTN_BLOCK", "DEFAULT_BATCHED_TILE",
     "DEFAULT_GEMM_TILE", "DEFAULT_NORM_BLOCK_ROWS", "DEFAULT_SSD_CHUNK",
+    "DEFAULT_QUANT_BUDGETS", "QUANT_WDTYPES",
 ]
+
+# Per-wdtype relative-error budgets (rel L2 of the op output vs its fp
+# twin).  The measured runner (benchmarks/quant_sweep.py, serve_load's
+# quant section) vetoes a wdtype whose measured error exceeds the budget
+# by recording {"wdtype": "none"} under the same quant:<op> key.
+DEFAULT_QUANT_BUDGETS = {
+    "int8": 0.02,
+    "fp8_e4m3": 0.06,
+    "fp8_e5m2": 0.15,
+}
+
+
+def quant_error_budget(wdtype: str = "int8") -> float:
+    """Per-op rel-error budget for one weight dtype (REPRO_QUANT_BUDGET
+    overrides all dtypes with one value)."""
+    env = _os.environ.get("REPRO_QUANT_BUDGET", "")
+    if env:
+        try:
+            return float(env)
+        except ValueError:
+            pass
+    return DEFAULT_QUANT_BUDGETS.get(wdtype, 0.02)
+
+
+def model_error_budget(wdtype: str, n_matmuls: int) -> float:
+    """End-to-end output budget for a model whose forward runs
+    ``n_matmuls`` quantized matmuls: independent per-op quantization
+    errors compound roughly in quadrature, so the declared model-level
+    budget is the per-op budget scaled by sqrt(n)."""
+    import math
+
+    return quant_error_budget(wdtype) * math.sqrt(max(int(n_matmuls), 1))
 
 
 def canon_dtype_name(dtype) -> str:
@@ -107,6 +145,75 @@ def tuned_fusion(pattern: str, dims, dtype) -> Optional[bool]:
     if best is not None and "fuse" in best:
         return bool(best["fuse"])
     return None
+
+
+def tuned_wdtype(op: str, dims, dtype) -> Optional[str]:
+    """Quantization as a tunable axis: the measured weight-dtype verdict
+    for one ``quant:<op>`` shape bucket.  Returns "int8"/"fp8_e4m3"/... to
+    adopt, "none" for an explicit veto (error budget exceeded or no
+    measured win), or None when unmeasured.  ``REPRO_QUANT=off`` silences
+    lookups entirely (the escape hatch)."""
+    from repro.kernels.quant import quant_disabled
+
+    if quant_disabled():
+        return None
+    best = lookup(f"quant:{op}", dims, dtype)
+    if best is not None and "wdtype" in best:
+        return str(best["wdtype"])
+    return None
+
+
+def record_quant_measurement(op: str, dims, dtype, *, wdtype_best: str,
+                             rel_err: Optional[float] = None,
+                             budget: Optional[float] = None,
+                             bytes_saved: Optional[float] = None,
+                             trials=(), backend: str = "pallas") -> None:
+    """Persist a measured quantization verdict (written by
+    ``benchmarks/quant_sweep.py`` and serve_load's quant section).
+    ``wdtype_best="none"`` is the veto — recorded when the measured
+    rel-error exceeded the budget, exactly like ``fusion:<pattern>``
+    records veto edges."""
+    if tuning_disabled():
+        return
+    best: Dict[str, object] = {"wdtype": str(wdtype_best)}
+    if rel_err is not None:
+        best["rel_err"] = float(rel_err)
+    if budget is not None:
+        best["budget"] = float(budget)
+    if bytes_saved is not None:
+        best["bytes_saved"] = float(bytes_saved)
+    rec = TuningRecord(
+        op=f"quant:{op}", shape_bucket=shape_bucket(dims),
+        dtype=canon_dtype_name(dtype), backend=backend,
+        device_kind=device_kind(), best=best, trials=list(trials))
+    global_cache().put(rec)
+
+
+def quant_report(op: str, dims, dtype, *, wdtype: str = "int8",
+                 w_dtype_from: str = "fp32") -> Dict[str, object]:
+    """SOL headroom + cached verdict for one op's quantization decision —
+    what ``core.agent.costmodel.cite_quant_report`` formats for the agent
+    prompt.  ``dims`` is the matmul's (m, n, k)."""
+    from ..sol.roofline import quant_bytes_saved
+
+    m, n, k = dims
+    saved, frac = quant_bytes_saved(m, n, k, w_dtype_from=w_dtype_from,
+                                    w_dtype_to=wdtype, a_dtype=dtype)
+    best = None if tuning_disabled() else lookup(f"quant:{op}", dims, dtype)
+    verdict = "unmeasured"
+    rel_err = budget = None
+    if best is not None and "wdtype" in best:
+        verdict = "vetoed" if best["wdtype"] == "none" else \
+            f"kept:{best['wdtype']}"
+        rel_err = best.get("rel_err")
+        budget = best.get("budget")
+    return {
+        "op": op, "dims": tuple(dims), "wdtype": wdtype,
+        "bytes_saved": saved, "headroom": frac,
+        "budget": budget if budget is not None
+        else quant_error_budget(wdtype),
+        "rel_err": rel_err, "verdict": verdict,
+    }
 
 
 def record_fusion_measurement(pattern: str, dims, dtype, *,

@@ -16,7 +16,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
 from ..sol.hardware import (LANE_MULTIPLE, SUBLANE_MULTIPLE, ChipSpec,
-                            TPU_V5E, dtype_bytes)
+                            TPU_V5E, ceil_to as _ceil_to, dtype_bytes)
 
 # Static defaults shipped by the codegen/ops layer (kept in sync with
 # repro.kernels.ops and codegen.pallas_backend fallbacks).
@@ -49,10 +49,6 @@ class Candidate:
 
 def _cand(op: str, **config) -> Candidate:
     return Candidate(op, tuple(sorted(config.items())))
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
 
 
 def _sub(dtype: str) -> int:
@@ -160,6 +156,22 @@ def fusion_candidates(pattern: str) -> List[Candidate]:
     return [_cand(op, fuse=True), _cand(op, fuse=False)]
 
 
+# Weight dtypes the quantization axis enumerates (candidate 0 = fp weights,
+# so a sweep can never regress the unquantized path).
+QUANT_WDTYPES = ("int8", "fp8_e4m3")
+
+
+def quant_candidates(op: str = "gemm") -> List[Candidate]:
+    """Weight quantization as a tunable axis: ``quant:<op>`` records carry
+    the measured wdtype verdict for one shape bucket.  Candidate 0 keeps
+    fp weights; the others are pruned by SOL-predicted bytes saved
+    (``sol_prune.prune_quant``) and checked against the per-op rel-error
+    budget by the measured runner (``benchmarks/quant_sweep.py``)."""
+    key = f"quant:{op}"
+    return [_cand(key, wdtype="none")] \
+        + [_cand(key, wdtype=d) for d in QUANT_WDTYPES]
+
+
 def enumerate_candidates(op: str, shape: Sequence[int], *,
                          dtype: str = "fp32", window: int = 0,
                          chip: ChipSpec = TPU_V5E) -> List[Candidate]:
@@ -170,9 +182,12 @@ def enumerate_candidates(op: str, shape: Sequence[int], *,
       ssd_scan:            (t, n, p)
       norm:                (rows, d)
       fusion:<pattern>:    the edge's dims tuple
+      quant:<op>:          the matmul's (m, n, k)
     """
     if op.startswith("fusion:"):
         return fusion_candidates(op.split(":", 1)[1])
+    if op.startswith("quant:"):
+        return quant_candidates(op.split(":", 1)[1])
     if op == "gemm":
         m, n, k = shape
         return gemm_candidates(m, n, k, dtype=dtype, chip=chip)

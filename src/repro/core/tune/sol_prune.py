@@ -115,3 +115,34 @@ def sol_rank_payload(ranked: Sequence[Tuple[Candidate, Optional[float]]]
                      ) -> List[Dict[str, object]]:
     """JSON-serializable form of a ranking, stored in the TuningRecord."""
     return [{"config": c.as_dict(), "predicted_s": p} for c, p in ranked]
+
+
+def prune_quant(shape: Sequence[int], candidates: Sequence[Candidate], *,
+                dtype: str = "bf16", min_saved_frac: float = 0.05,
+                chip: ChipSpec = TPU_V5E
+                ) -> List[Tuple[Candidate, Optional[float]]]:
+    """SOL pruning for the quantization axis: keep only wdtype candidates
+    whose predicted weight-bytes saved is a meaningful fraction of the
+    op's total HBM traffic (dtype-aware ``roofline.quant_bytes_saved``).
+
+    A compute-bound or activation-dominated shape gains nothing from
+    shrinking weights, so its quantized candidates never reach the
+    measured runner (and never risk the error budget).  The fp default
+    (candidate 0) is always kept.  Returns (candidate, predicted
+    bytes-saved fraction) pairs.
+    """
+    from ..sol.roofline import quant_bytes_saved
+
+    m, n, k = shape
+    kept: List[Tuple[Candidate, Optional[float]]] = []
+    for cand in candidates:
+        cfg = cand.as_dict()
+        wdtype = str(cfg.get("wdtype", "none"))
+        if wdtype == "none":
+            kept.append((cand, None))       # fp default: always measured
+            continue
+        _, frac = quant_bytes_saved(m, n, k, w_dtype_from=dtype,
+                                    w_dtype_to=wdtype, a_dtype=dtype)
+        if frac >= min_saved_frac:
+            kept.append((cand, frac))
+    return kept

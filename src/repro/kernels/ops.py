@@ -22,9 +22,13 @@ from typing import Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.sol.hardware import (DTYPE_CANON, LANE_MULTIPLE,
+                                     SUBLANE_MULTIPLE, ceil_to as _ceil_to)
+
 from . import flash_attention as _fa
 from . import fused as _fu
 from . import gemm_epilogue as _ge
+from . import quant as _kq
 from . import rmsnorm as _rn
 from . import ssd_scan as _ssd
 
@@ -56,6 +60,41 @@ def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, multiple - rem)
     return jnp.pad(x, pads, constant_values=value)
+
+
+def _canon_np_dtype(dtype) -> str:
+    import numpy as np
+
+    try:
+        name = np.dtype(dtype).name
+    except TypeError:
+        name = str(dtype)
+    return DTYPE_CANON.get(name.lower(), "fp32")
+
+
+def sublane_multiple(dtype) -> int:
+    """Second-minor VMEM packing multiple for a jnp/numpy dtype."""
+    return SUBLANE_MULTIPLE.get(_canon_np_dtype(dtype), 8)
+
+
+def clamp_tile(tile: Tuple[int, int, int], m: int, n: int, k: int,
+               dtype) -> Tuple[int, int, int]:
+    """Clamp a GEMM tile to the aligned problem size — the shared padding
+    helper for the fp and quantized paths.
+
+    Without the clamp, a sub-tile problem dimension (decode's K=64 under
+    the library's bk=512, say) makes ``_pad_to`` materialize a full tile of
+    zeros: 8x wasted HBM traffic and VMEM footprint.  Clamping is
+    bitwise-neutral: a shrunk bm/bn only removes padding rows/columns
+    (per-element reductions are unchanged), and a shrunk bk still covers
+    the whole contraction in one chunk whose dropped tail contributed
+    exact zeros to the fp32 accumulator.
+    """
+    bm, bn, bk = tile
+    sub = sublane_multiple(dtype)
+    return (min(bm, _ceil_to(max(m, 1), sub)),
+            min(bn, _ceil_to(max(n, 1), LANE_MULTIPLE)),
+            min(bk, _ceil_to(max(k, 1), LANE_MULTIPLE)))
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -109,11 +148,12 @@ def gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
          interpret: Optional[bool] = None) -> jax.Array:
     """C = epilogue(A @ B); arbitrary (M,K)x(K,N), padded internally."""
     interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    n = b.shape[1]
     if tile is None:
-        m, k = a.shape
-        n = b.shape[1]
         t = _tune()
         tile = t.tuned_gemm_tile(m, n, k, a.dtype) or t.DEFAULT_GEMM_TILE
+    tile = clamp_tile(tuple(tile), m, n, k, a.dtype)
     return _gemm(a, b, *aux, tile=tuple(tile), epilogue=epilogue,
                  aux_kinds=tuple(aux_kinds), out_dtype=out_dtype, swap=swap,
                  dimension_semantics=dimension_semantics,
@@ -153,12 +193,13 @@ def batched_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
                  out_dtype=None,
                  interpret: Optional[bool] = None) -> jax.Array:
     interpret = default_interpret() if interpret is None else interpret
+    _, m, k = a.shape
+    n = b.shape[2]
     if tile is None:
-        _, m, k = a.shape
-        n = b.shape[2]
         t = _tune()
         tile = t.tuned_gemm_tile(m, n, k, a.dtype, batched=True) \
             or t.DEFAULT_BATCHED_TILE
+    tile = clamp_tile(tuple(tile), m, n, k, a.dtype)
     return _batched_gemm(a, b, *aux, tile=tuple(tile), epilogue=epilogue,
                          aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
                          interpret=interpret)
@@ -170,12 +211,128 @@ grouped_gemm = batched_gemm
 
 
 # ---------------------------------------------------------------------------
-# Inter-stage fused kernels (SOL-guided fusion pass targets)
+# Dequant-fused quantized-weight GEMMs (kernels in repro.kernels.quant)
 # ---------------------------------------------------------------------------
 
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
+def _as_quant(w, scales):
+    """Accept either a QuantTensor or explicit (values, scales) arrays."""
+    if isinstance(w, _kq.QuantTensor):
+        return w.values, w.scales
+    if scales is None:
+        raise ValueError("quantized GEMM needs scales (or a QuantTensor)")
+    return w, scales
 
+
+@functools.partial(jax.jit, static_argnames=(
+    "tile", "epilogue", "aux_kinds", "out_dtype", "dimension_semantics",
+    "interpret"))
+def _gemm_q(a: jax.Array, wq: jax.Array, scales: jax.Array,
+            *aux: jax.Array, tile: Tuple[int, int, int],
+            epilogue: Optional[Callable], aux_kinds: Sequence[str],
+            out_dtype, dimension_semantics: Tuple[str, str, str],
+            interpret: bool) -> jax.Array:
+    m, k = a.shape
+    n = wq.shape[1]
+    bm, bn, bk = tile
+    ap = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(wq, 0, bk, value=0), 1, bn, value=0)
+    sp = _pad_to(_kq.broadcast_scales(scales, n), 0, bn)
+    aux_p = []
+    for kind, arr in zip(aux_kinds, aux):
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 0, bn))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 0, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 0, bm), 1, bn))
+    out = _kq.gemm_q8(ap, wp, sp, *aux_p, tile=tile, epilogue=epilogue,
+                      aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+                      dimension_semantics=dimension_semantics,
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+def gemm_q(a: jax.Array, w, scales=None, *aux: jax.Array,
+           tile: Optional[Tuple[int, int, int]] = None,
+           epilogue: Optional[Callable] = None,
+           aux_kinds: Sequence[str] = (),
+           out_dtype=None,
+           dimension_semantics: Tuple[str, str, str] = (
+               "parallel", "parallel", "arbitrary"),
+           interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue((A @ Q) * s) with int8/fp8 weights dequantized in the
+    kernel; ``w`` is a QuantTensor or (values, per-channel/scalar scales).
+    Tuned-tile lookups key on the WEIGHT dtype so quantized shapes tune
+    independently of their fp twins."""
+    interpret = default_interpret() if interpret is None else interpret
+    wq, scales = _as_quant(w, scales)
+    m, k = a.shape
+    n = wq.shape[1]
+    if tile is None:
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, wq.dtype) or t.DEFAULT_GEMM_TILE
+    tile = clamp_tile(tuple(tile), m, n, k, a.dtype)
+    return _gemm_q(a, wq, scales, *aux, tile=tuple(tile), epilogue=epilogue,
+                   aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
+                   dimension_semantics=dimension_semantics,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "tile", "epilogue", "aux_kinds", "out_dtype", "interpret"))
+def _batched_gemm_q(a: jax.Array, wq: jax.Array, scales: jax.Array,
+                    *aux: jax.Array, tile: Tuple[int, int, int],
+                    epilogue: Optional[Callable], aux_kinds: Sequence[str],
+                    out_dtype, interpret: bool) -> jax.Array:
+    g, m, k = a.shape
+    n = wq.shape[2]
+    bm, bn, bk = tile
+    ap = _pad_to(_pad_to(a, 1, bm), 2, bk)
+    wp = _pad_to(_pad_to(wq, 1, bk, value=0), 2, bn, value=0)
+    if scales.ndim == 0:
+        scales = jnp.full((g, n), scales, jnp.float32)
+    sp = _pad_to(scales.astype(jnp.float32), 1, bn)
+    aux_p = []
+    for kind, arr in zip(aux_kinds, aux):
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 1, bn))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 1, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 1, bm), 2, bn))
+    out = _kq.batched_gemm_q8(ap, wp, sp, *aux_p, tile=tile,
+                              epilogue=epilogue,
+                              aux_kinds=tuple(aux_kinds),
+                              out_dtype=out_dtype, interpret=interpret)
+    return out[:, :m, :n]
+
+
+def batched_gemm_q(a: jax.Array, w, scales=None, *aux: jax.Array,
+                   tile: Optional[Tuple[int, int, int]] = None,
+                   epilogue: Optional[Callable] = None,
+                   aux_kinds: Sequence[str] = (),
+                   out_dtype=None,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    interpret = default_interpret() if interpret is None else interpret
+    wq, scales = _as_quant(w, scales)
+    _, m, k = a.shape
+    n = wq.shape[2]
+    if tile is None:
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, wq.dtype, batched=True) \
+            or t.DEFAULT_BATCHED_TILE
+    tile = clamp_tile(tuple(tile), m, n, k, a.dtype)
+    return _batched_gemm_q(a, wq, scales, *aux, tile=tuple(tile),
+                           epilogue=epilogue, aux_kinds=tuple(aux_kinds),
+                           out_dtype=out_dtype, interpret=interpret)
+
+
+grouped_gemm_q = batched_gemm_q
+
+
+# ---------------------------------------------------------------------------
+# Inter-stage fused kernels (SOL-guided fusion pass targets)
+# ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=256)
 def _rmsnorm_combined(pre: Optional[Callable], post: Optional[Callable],
@@ -228,7 +385,7 @@ def gemm_rmsnorm(a: jax.Array, b: jax.Array, *aux: jax.Array,
     if tile is None:
         t = _tune()
         tile = t.tuned_gemm_tile(m, n, k, a.dtype) or t.DEFAULT_GEMM_TILE
-    bm, _, bk = tile
+    bm, _, bk = clamp_tile(tuple(tile), m, n, k, a.dtype)
     bn = _ceil_to(n, 128)               # one tile spans the whole row
     combined = _rmsnorm_combined(pre_epilogue, post_epilogue,
                                  int(n_pre_aux), n, float(eps))
@@ -287,11 +444,75 @@ def rmsnorm_gemm(x: jax.Array, gamma: jax.Array, b: jax.Array,
     bm, bn, bk = tile
     bn = min(bn, _ceil_to(n, 128))
     bm = min(bm, _ceil_to(m, 8))
+    # same sub-tile-K clamp as the unfused gemm wrapper: the fused k-chunk
+    # order must replay the unfused consumer's exactly (bitwise identity)
+    bk = min(bk, _ceil_to(k, 128))
     return _rmsnorm_gemm(x, gamma, b, *aux, block=(bm, bn), k_chunk=bk,
                          k_true=k, eps=float(eps),
                          inter_dtypes=tuple(inter_dtypes), epilogue=epilogue,
                          aux_kinds=tuple(aux_kinds), out_dtype=out_dtype,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block", "k_chunk", "k_true", "eps", "inter_dtypes", "epilogue",
+    "aux_kinds", "out_dtype", "interpret"))
+def _rmsnorm_gemm_q(x: jax.Array, gamma: jax.Array, wq: jax.Array,
+                    scales: jax.Array, *aux: jax.Array,
+                    block: Tuple[int, int], k_chunk: int, k_true: int,
+                    eps: float, inter_dtypes: Tuple,
+                    epilogue: Optional[Callable], aux_kinds: Sequence[str],
+                    out_dtype, interpret: bool) -> jax.Array:
+    m, k = x.shape
+    n = wq.shape[1]
+    bm, bn = block
+    xp = _pad_to(_pad_to(x, 0, bm), 1, k_chunk)
+    gp = _pad_to(gamma, 0, k_chunk)
+    wp = _pad_to(_pad_to(wq, 0, k_chunk, value=0), 1, bn, value=0)
+    sp = _pad_to(_kq.broadcast_scales(scales, n), 0, bn)
+    aux_p = []
+    for kind, arr in zip(aux_kinds, aux):
+        if kind == "col_vector":
+            aux_p.append(_pad_to(arr, 0, bn))
+        elif kind == "row_vector":
+            aux_p.append(_pad_to(arr, 0, bm))
+        else:
+            aux_p.append(_pad_to(_pad_to(arr, 0, bm), 1, bn))
+    out = _kq.rmsnorm_gemm_q8(
+        xp, gp, wp, sp, *aux_p, block=block, k_chunk=k_chunk, k_true=k_true,
+        eps=eps, inter_dtypes=inter_dtypes, epilogue=epilogue,
+        aux_kinds=tuple(aux_kinds), out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]
+
+
+def rmsnorm_gemm_q(x: jax.Array, gamma: jax.Array, w, scales=None,
+                   *aux: jax.Array,
+                   tile: Optional[Tuple[int, int, int]] = None,
+                   eps: float = 1e-6, inter_dtypes: Tuple = (),
+                   epilogue: Optional[Callable] = None,
+                   aux_kinds: Sequence[str] = (),
+                   out_dtype=None,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue((rmsnorm(x, gamma) @ Q) * s): the quantized twin of
+    ``rmsnorm_gemm`` — normalized activations stay in VMEM AND the weight
+    streams at 1 B/elem.  Same k-chunk clamping as the fp path, so fused
+    output is bitwise identical to the unfused rmsnorm -> gemm_q driver."""
+    interpret = default_interpret() if interpret is None else interpret
+    wq, scales = _as_quant(w, scales)
+    m, k = x.shape
+    n = wq.shape[1]
+    if tile is None:
+        t = _tune()
+        tile = t.tuned_gemm_tile(m, n, k, wq.dtype) or t.DEFAULT_GEMM_TILE
+    bm, bn, bk = tile
+    bn = min(bn, _ceil_to(n, 128))
+    bm = min(bm, _ceil_to(m, 8))
+    bk = min(bk, _ceil_to(k, 128))
+    return _rmsnorm_gemm_q(x, gamma, wq, scales, *aux, block=(bm, bn),
+                           k_chunk=bk, k_true=k, eps=float(eps),
+                           inter_dtypes=tuple(inter_dtypes),
+                           epilogue=epilogue, aux_kinds=tuple(aux_kinds),
+                           out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -352,6 +573,7 @@ def gemm_gemm(a: jax.Array, b: jax.Array, b2: jax.Array, *aux: jax.Array,
     bm, bn, bk = tile
     bm = min(bm, _ceil_to(m, 8))
     bn = min(bn, _ceil_to(n2, 128))
+    bk = min(bk, _ceil_to(k, 128))
     if k2_chunk is None:
         # the chunk the unfused consumer GEMM would have used for its own
         # k loop — keeps the fused accumulation order bitwise identical
@@ -359,6 +581,8 @@ def gemm_gemm(a: jax.Array, b: jax.Array, b2: jax.Array, *aux: jax.Array,
         t2 = t.tuned_gemm_tile(m, n2, b.shape[1], a.dtype) \
             or t.DEFAULT_GEMM_TILE
         k2_chunk = t2[2]
+    # the unfused consumer gemm clamps its own sub-tile K the same way
+    k2_chunk = min(int(k2_chunk), _ceil_to(b.shape[1], 128))
     return _gemm_gemm(a, b, b2, *aux, block=(bm, bn), k_chunk=bk,
                       k2_chunk=int(k2_chunk), mid_epilogue=mid_epilogue,
                       mid_aux_kinds=tuple(mid_aux_kinds),

@@ -1,0 +1,446 @@
+"""Weight quantization + dequant-fused Pallas GEMM kernels.
+
+Decode is memory-bound on weight bytes (the roofline's ``t_memory`` term),
+so the single largest SOL-predicted speedup left on the table is shrinking
+the weights themselves.  This module provides:
+
+  * symmetric quantization helpers (``quantize`` / ``dequantize``) for
+    8-bit weight formats — ``int8`` and the fp8 pair (``fp8_e4m3`` /
+    ``fp8_e5m2``) — with per-channel (one scale per output channel) or
+    per-tensor scale granularity,
+  * ``QuantTensor``: a registered pytree carrying (values, scales) so
+    quantized weights flow through scan-stacked model params unchanged,
+  * dequant-fused Pallas kernels (``gemm_q8``, ``batched_gemm_q8``,
+    ``rmsnorm_gemm_q8``): the weight streams from HBM at 1 byte/element,
+    is widened on-chip (int8/fp8 -> the activation dtype, exact — both
+    formats embed losslessly in bf16), and the MXU accumulates in fp32.
+    Per-channel scales stay resident in VMEM and are applied ONCE to the
+    fp32 accumulator at writeback (scales over the N axis commute with the
+    K reduction), so dequantization adds one multiply per output element
+    instead of one per weight element.
+
+Formulation (shared by the kernels, the jnp oracles in ``ref.py``, and the
+model substrate's quantized projections): ``C = (A @ Q) * s`` with the
+contraction accumulated in fp32 — NOT ``A @ (Q * s)`` — so every consumer
+computes bit-identical results for the same quantized weights.
+
+``REPRO_QUANT=off`` is the escape hatch: model/serve weight quantization
+and tuned-wdtype lookups become no-ops (direct kernel calls still work —
+tests and sweeps stay runnable).
+
+Shapes must be pre-padded to tile multiples by the ops.py wrappers.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams
+from .fused import _aux_block as _f_aux_block
+from .fused import _chunked_dot, _out_aux_spec
+from .gemm_epilogue import _aux_block, _aux_spec
+
+AuxKind = str
+
+# Largest representable magnitude per 8-bit weight format: the symmetric
+# scale maps the per-channel absmax onto it.  int8 uses +/-127 (not -128)
+# so the grid is symmetric; fp8 maxes follow the OCP FP8 spec.
+QUANT_MAX = {
+    "int8": 127.0,
+    "fp8_e4m3": 448.0,
+    "fp8_e5m2": 57344.0,
+}
+
+WEIGHT_DTYPES = tuple(QUANT_MAX)
+
+
+def _jnp_qdtype(wdtype: str):
+    if wdtype == "int8":
+        return jnp.int8
+    if wdtype == "fp8_e4m3":
+        return jnp.float8_e4m3fn
+    if wdtype == "fp8_e5m2":
+        return jnp.float8_e5m2
+    raise KeyError(
+        f"unknown weight quantization dtype {wdtype!r}; "
+        f"supported: {sorted(QUANT_MAX)}")
+
+
+def quant_disabled() -> bool:
+    """REPRO_QUANT=off|0 disables model/serve weight quantization and
+    tuned-wdtype lookups (the reproducibility escape hatch)."""
+    return os.environ.get("REPRO_QUANT", "") in ("off", "0", "false",
+                                                 "False")
+
+
+# ---------------------------------------------------------------------------
+# QuantTensor + quantize / dequantize
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuantTensor:
+    """A quantized weight: 8-bit ``values`` plus fp32 ``scales``.
+
+    ``scales`` has the values' shape with the contraction axis (-2) removed
+    for per-channel granularity — (K, N) -> (N,), (G, K, N) -> (G, N) — or
+    is a scalar for per-tensor.  Registered as a pytree so scan-stacked
+    layer params slice through it transparently.
+    """
+
+    values: jax.Array
+    scales: jax.Array
+    wdtype: str = "int8"
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.values.nbytes) + int(self.scales.nbytes)
+
+    @property
+    def per_channel(self) -> bool:
+        return self.scales.ndim > 0
+
+
+jax.tree_util.register_pytree_node(
+    QuantTensor,
+    lambda qt: ((qt.values, qt.scales), qt.wdtype),
+    lambda wdtype, children: QuantTensor(children[0], children[1], wdtype),
+)
+
+
+def _expand_scales(scales: jax.Array) -> jax.Array:
+    """Broadcast scales back against the values: insert the contraction
+    axis (-2) for per-channel scales; scalars broadcast as-is."""
+    if scales.ndim == 0:
+        return scales
+    return scales[..., None, :]
+
+
+def quantize(w: jax.Array, wdtype: str = "int8", *,
+             per_channel: bool = True) -> QuantTensor:
+    """Symmetric quantization of a weight matrix (or stacked weights).
+
+    Per-channel: one scale per output channel (the last axis), absmax taken
+    over the contraction axis (-2) — quantization error in one channel
+    never inflates another's scale.  Per-tensor: one global scale.
+    """
+    qmax = QUANT_MAX[_canon_wdtype(wdtype)]
+    wdtype = _canon_wdtype(wdtype)
+    wf = w.astype(jnp.float32)
+    if per_channel:
+        absmax = jnp.max(jnp.abs(wf), axis=-2)
+    else:
+        absmax = jnp.max(jnp.abs(wf))
+    scales = jnp.maximum(absmax, 1e-12) / qmax
+    scaled = wf / _expand_scales(scales)
+    if wdtype == "int8":
+        values = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        values = jnp.clip(scaled, -qmax, qmax).astype(_jnp_qdtype(wdtype))
+    return QuantTensor(values=values, scales=scales, wdtype=wdtype)
+
+
+def _canon_wdtype(wdtype: str) -> str:
+    name = str(wdtype).lower()
+    alias = {"s8": "int8", "e4m3": "fp8_e4m3", "e5m2": "fp8_e5m2"}
+    name = alias.get(name, name)
+    if name not in QUANT_MAX:
+        raise KeyError(
+            f"unknown weight quantization dtype {wdtype!r}; "
+            f"supported: {sorted(QUANT_MAX)}")
+    return name
+
+
+def dequantize(qt: QuantTensor) -> jax.Array:
+    """fp32 reconstruction (the round-trip tests' reference)."""
+    return qt.values.astype(jnp.float32) * _expand_scales(qt.scales)
+
+
+# Per-buffer quantization memo for the DSL drivers: a compiled
+# ``.with_wdtype`` kernel quantizes its weight in the driver, and without
+# a cache every call would re-read the full fp weight from HBM — erasing
+# the 1 B/elem streaming saving the SOL model predicts.  Keyed by the
+# concrete buffer's id(); a weakref finalizer evicts the entry when the
+# buffer dies, so a recycled id can never serve a stale QuantTensor.
+_QUANT_MEMO: dict = {}
+
+
+def quantize_cached(w: jax.Array, wdtype: str = "int8", *,
+                    per_channel: bool = True) -> QuantTensor:
+    """``quantize`` with a per-buffer memo: repeated calls on the SAME
+    concrete weight array (the agent benchmark loop, a jitted driver's
+    host-side re-invocation) quantize once.  Tracers (inside jit) bypass
+    the memo — the traced quantize is then hoisted/CSEd by XLA itself."""
+    import weakref
+
+    import jax.core as jcore
+
+    if isinstance(w, jcore.Tracer):
+        return quantize(w, wdtype, per_channel=per_channel)
+    key = (id(w), _canon_wdtype(wdtype), per_channel)
+    hit = _QUANT_MEMO.get(key)
+    if hit is not None:
+        return hit
+    qt = quantize(w, wdtype, per_channel=per_channel)
+    _QUANT_MEMO[key] = qt
+    try:
+        weakref.finalize(w, _QUANT_MEMO.pop, key, None)
+    except TypeError:       # buffer type without weakref support
+        _QUANT_MEMO.pop(key, None)
+    return qt
+
+
+def apply_scales(x: jax.Array, scales: jax.Array) -> jax.Array:
+    """Apply per-channel (or per-tensor) scales to a matmul OUTPUT: the
+    dequant-at-writeback step.  x: (..., M, N); scales: (), (N,), or
+    broadcastable leading dims + (N,)."""
+    if scales.ndim <= 1:
+        return x * scales
+    return x * scales[..., None, :]
+
+
+def broadcast_scales(scales: jax.Array, n: int) -> jax.Array:
+    """Materialize scales as a per-channel (N,)/( ..., N) vector so the
+    Pallas kernels always see one layout (per-tensor scalars broadcast)."""
+    if scales.ndim == 0:
+        return jnp.full((n,), scales, jnp.float32)
+    return scales.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Dequant-fused Pallas kernels (pre-padded shapes, like gemm_epilogue)
+# ---------------------------------------------------------------------------
+
+def gemm_q8(
+    a: jax.Array,
+    w: jax.Array,
+    scales: jax.Array,
+    *aux: jax.Array,
+    tile: Tuple[int, int, int] = (256, 256, 512),
+    epilogue: Optional[Callable] = None,
+    aux_kinds: Sequence[AuxKind] = (),
+    out_dtype=None,
+    dimension_semantics: Tuple[str, str, str] = ("parallel", "parallel",
+                                                 "arbitrary"),
+    interpret: bool = True,
+) -> jax.Array:
+    """C = epilogue((A @ Q) * s); A:(M,K) float, Q:(K,N) int8/fp8,
+    s:(N,) fp32 per-channel scales.  The weight tile is widened to A's
+    dtype in VMEM (exact) and the scales multiply the fp32 accumulator
+    once at writeback."""
+    (m, k), (k2, n) = a.shape, w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert scales.shape == (n,), \
+        f"scales must be per-channel (N,)={n}, got {scales.shape}"
+    bm, bn, bk = tile
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{n},{k}) must be padded to tile ({bm},{bn},{bk})")
+    out_dtype = out_dtype or a.dtype
+    nsteps_k = k // bk
+    grid = (m // bm, n // bn, nsteps_k)
+    a_dt = a.dtype
+
+    def kernel(a_ref, w_ref, s_ref, *rest):
+        aux_refs = rest[: len(aux_kinds)]
+        o_ref = rest[len(aux_kinds)]
+        acc_ref = rest[len(aux_kinds) + 1]
+
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(
+            a_ref[...], w_ref[...].astype(a_dt),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(2) == nsteps_k - 1)
+        def _writeback():
+            x = acc_ref[...] * s_ref[...].astype(jnp.float32)[None, :]
+            if epilogue is not None:
+                blocks = [_aux_block(kk_, r).astype(jnp.float32)
+                          for kk_, r in zip(aux_kinds, aux_refs)]
+                x = epilogue(x, *blocks)
+            o_ref[...] = x.astype(out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+    ] + [_aux_spec(kind, bm, bn) for kind in aux_kinds]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=dimension_semantics),
+        interpret=interpret,
+    )(a, w, scales, *aux)
+
+
+def batched_gemm_q8(
+    a: jax.Array,
+    w: jax.Array,
+    scales: jax.Array,
+    *aux: jax.Array,
+    tile: Tuple[int, int, int] = (128, 128, 256),
+    epilogue: Optional[Callable] = None,
+    aux_kinds: Sequence[AuxKind] = (),
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """C[g] = epilogue((A[g] @ Q[g]) * s[g]); A:(G,M,K), Q:(G,K,N) int8/fp8,
+    s:(G,N).  Also the quantized grouped (MoE expert) GEMM."""
+    (g, m, k), (g2, k2, n) = a.shape, w.shape
+    assert g == g2 and k == k2
+    assert scales.shape == (g, n), \
+        f"scales must be (G,N)=({g},{n}), got {scales.shape}"
+    bm, bn, bk = tile
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{n},{k}) must be padded to tile ({bm},{bn},{bk})")
+    out_dtype = out_dtype or a.dtype
+    nsteps_k = k // bk
+    grid = (g, m // bm, n // bn, nsteps_k)
+    a_dt = a.dtype
+
+    def _aux_spec_b(kind: AuxKind):
+        if kind == "col_vector":
+            return pl.BlockSpec((1, bn), lambda gg, i, j, kk: (gg, j))
+        if kind == "row_vector":
+            return pl.BlockSpec((1, bm), lambda gg, i, j, kk: (gg, i))
+        return pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j))
+
+    def _aux_block_b(kind: AuxKind, ref):
+        x = ref[...]
+        if kind == "col_vector":
+            return x.reshape(1, bn)
+        if kind == "row_vector":
+            return x.reshape(bm, 1)
+        return x.reshape(bm, bn)
+
+    def kernel(a_ref, w_ref, s_ref, *rest):
+        aux_refs = rest[: len(aux_kinds)]
+        o_ref = rest[len(aux_kinds)]
+        acc_ref = rest[len(aux_kinds) + 1]
+
+        @pl.when(pl.program_id(3) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(
+            a_ref[...].reshape(bm, bk),
+            w_ref[...].reshape(bk, bn).astype(a_dt),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(3) == nsteps_k - 1)
+        def _writeback():
+            x = acc_ref[...] \
+                * s_ref[...].reshape(bn).astype(jnp.float32)[None, :]
+            if epilogue is not None:
+                blocks = [_aux_block_b(kk_, r).astype(jnp.float32)
+                          for kk_, r in zip(aux_kinds, aux_refs)]
+                x = epilogue(x, *blocks)
+            o_ref[...] = x.reshape(1, bm, bn).astype(out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+        pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+        pl.BlockSpec((1, bn), lambda gg, i, j, kk: (gg, j)),
+    ] + [_aux_spec_b(kind) for kind in aux_kinds]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(a, w, scales, *aux)
+
+
+def rmsnorm_gemm_q8(
+    x: jax.Array,
+    gamma: jax.Array,
+    w: jax.Array,
+    scales: jax.Array,
+    *aux: jax.Array,
+    block: Tuple[int, int] = (256, 256),
+    k_chunk: int = 512,
+    k_true: int = 0,
+    eps: float = 1e-6,
+    inter_dtypes: Tuple = (),
+    epilogue: Optional[Callable] = None,
+    aux_kinds: Sequence[AuxKind] = (),
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """C = epilogue((rmsnorm(x, gamma) @ Q) * s): the PR-3 fused
+    rmsnorm->gemm kernel with a quantized weight — the serve decode block's
+    quantized fused step.  The normalized rows stay in VMEM, the weight
+    streams at 1 B/elem, and the contraction is accumulated in the same
+    k-chunk order as the fp kernel so fused == unfused bitwise."""
+    (m, kp), (kp2, n) = x.shape, w.shape
+    assert kp == kp2, f"contraction mismatch {kp} vs {kp2}"
+    assert scales.shape == (n,), \
+        f"scales must be per-channel (N,)={n}, got {scales.shape}"
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0 and kp % k_chunk == 0
+    out_dtype = out_dtype or x.dtype
+    k_true = k_true or kp
+
+    def kernel(x_ref, g_ref, w_ref, s_ref, *rest):
+        aux_refs = rest[: len(aux_kinds)]
+        o_ref = rest[len(aux_kinds)]
+        xf = x_ref[...].astype(jnp.float32)
+        if k_true == kp:
+            ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        else:
+            mask = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1) < k_true
+            xf = jnp.where(mask, xf, 0.0)
+            ms = jnp.sum(jnp.square(xf), axis=-1, keepdims=True) / k_true
+        z = xf * jax.lax.rsqrt(ms + eps) \
+            * g_ref[...].astype(jnp.float32)[None, :]
+        for dt in inter_dtypes:     # the unfused driver's HBM round-trips
+            z = z.astype(dt)
+        acc = _chunked_dot(z, w_ref[...].astype(z.dtype), k_chunk)
+        acc = acc * s_ref[...].astype(jnp.float32)[None, :]
+        if epilogue is not None:
+            blocks = [_f_aux_block(kk, r).astype(jnp.float32)
+                      for kk, r in zip(aux_kinds, aux_refs)]
+            acc = epilogue(acc, *blocks)
+        o_ref[...] = acc.astype(out_dtype)
+
+    in_specs = [
+        pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+        pl.BlockSpec((kp,), lambda i, j: (0,)),
+        pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        pl.BlockSpec((bn,), lambda i, j: (j,)),
+    ] + [_out_aux_spec(kind, bm, bn) for kind in aux_kinds]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, gamma, w, scales, *aux)

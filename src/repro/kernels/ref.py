@@ -95,6 +95,68 @@ def gemm_gemm_ref(a, b, b2, *aux, mid_epilogue: Optional[Callable] = None,
                     aux_kinds=aux_kinds, out_dtype=out_dtype or a.dtype)
 
 
+def _q_scales(x, scales):
+    """Dequant-at-writeback broadcast — the ONE shared formulation, from
+    kernels.quant (a private clone here could diverge the oracle from the
+    kernels and the XLA backend)."""
+    from .quant import apply_scales
+
+    return apply_scales(x, scales.astype(jnp.float32))
+
+
+def gemm_q_ref(a, wq, scales, *aux, epilogue: Optional[Callable] = None,
+               aux_kinds: Sequence[str] = (), out_dtype=None):
+    """Dequant-fused GEMM oracle: (A @ Q) * s, fp32 accumulation, scales
+    applied AFTER the contraction (they commute with the K sum) — the same
+    formulation as the Pallas kernel and the quantized model projections."""
+    out_dtype = out_dtype or a.dtype
+    x = jnp.dot(a.astype(jnp.float32), wq.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    x = _q_scales(x, scales)
+    if epilogue is not None:
+        blocks = []
+        for kind, arr in zip(aux_kinds, aux):
+            arr = arr.astype(jnp.float32)
+            if kind == "col_vector":
+                blocks.append(arr[None, :])
+            elif kind == "row_vector":
+                blocks.append(arr[:, None])
+            else:
+                blocks.append(arr)
+        x = epilogue(x, *blocks)
+    return x.astype(out_dtype)
+
+
+def batched_gemm_q_ref(a, wq, scales, *aux,
+                       epilogue: Optional[Callable] = None,
+                       aux_kinds: Sequence[str] = (), out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    x = jnp.einsum("gmk,gkn->gmn", a.astype(jnp.float32),
+                   wq.astype(jnp.float32))
+    x = _q_scales(x, scales)
+    if epilogue is not None:
+        blocks = []
+        for kind, arr in zip(aux_kinds, aux):
+            arr = arr.astype(jnp.float32)
+            if kind == "col_vector":
+                blocks.append(arr[:, None, :])
+            elif kind == "row_vector":
+                blocks.append(arr[:, :, None])
+            else:
+                blocks.append(arr)
+        x = epilogue(x, *blocks)
+    return x.astype(out_dtype)
+
+
+def rmsnorm_gemm_q_ref(x, gamma, wq, scales, *aux, eps: float = 1e-6,
+                       epilogue: Optional[Callable] = None,
+                       aux_kinds: Sequence[str] = (), out_dtype=None):
+    """Quantized fused-kernel oracle: (rmsnorm(x, gamma) @ Q) * s."""
+    z = rmsnorm_ref(x, gamma, eps=eps)
+    return gemm_q_ref(z, wq, scales, *aux, epilogue=epilogue,
+                      aux_kinds=aux_kinds, out_dtype=out_dtype or x.dtype)
+
+
 def rmsnorm_ref(x, gamma, *, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

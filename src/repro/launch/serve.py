@@ -31,6 +31,13 @@ def main():
                     help="print tokens as they are sampled")
     ap.add_argument("--slo", choices=("interactive", "batch"),
                     default="batch", help="SLO class for the requests")
+    ap.add_argument("--weight-dtype",
+                    choices=("none", "int8", "fp8_e4m3", "fp8_e5m2"),
+                    default=None,
+                    help="quantize projection weights at load and route "
+                         "decode through the dequant-fused step; unset "
+                         "defers to the config + tuned verdict "
+                         "(REPRO_QUANT=off overrides)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -42,8 +49,13 @@ def main():
         model, params, max_batch=4, max_len=64,
         prefill_mode=args.prefill, chunk_size=args.chunk,
         scheduler=args.scheduler,
+        weight_dtype=args.weight_dtype,
         prefix_cache=PrefixCache(block=args.chunk) if args.prefix_cache
         else None)
+    if engine.model.cfg.weight_dtype != "none":
+        print(f"weight_dtype={engine.model.cfg.weight_dtype} "
+              f"({engine.weight_bytes_per_step / 1e3:.1f} KB weight "
+              f"traffic per decode step)")
     rng = np.random.default_rng(0)
     shared = list(map(int, rng.integers(0, cfg.vocab_size, args.chunk)))
     reqs = []

@@ -15,6 +15,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.quant import QuantTensor
+
 COMPUTE_DTYPE = jnp.bfloat16
 NEG_INF = -1e30
 
@@ -206,9 +208,27 @@ def attention_init(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int,
     return p
 
 
+def weight_einsum(eq: str, x, w):
+    """The ONE projection contraction every model-substrate consumer
+    shares, fp or quantized (fp32 accumulation either way).
+
+    For a ``QuantTensor`` this is the kernels.quant ``gemm_q8``
+    formulation: the 8-bit weight widens to the compute dtype on-chip
+    (exact — int8/fp8 embed losslessly in bf16), the MXU accumulates in
+    fp32, and the per-channel scales multiply the accumulator once at
+    writeback — ``(x @ Q) * s``, never ``x @ (Q * s)``.  Keeping one copy
+    is what makes the bitwise-determinism guarantee hold across the
+    attention, MLP, and lm-head call sites."""
+    if isinstance(w, QuantTensor):
+        y = jnp.einsum(eq, x, w.values.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32)
+        return y * w.scales
+    return jnp.einsum(eq, x, w.astype(COMPUTE_DTYPE),
+                      preferred_element_type=jnp.float32)
+
+
 def _proj(x, w, b=None):
-    y = jnp.einsum("bsd,df->bsf", x, w.astype(COMPUTE_DTYPE),
-                   preferred_element_type=jnp.float32)
+    y = weight_einsum("bsd,df->bsf", x, w)
     if b is not None:
         y = y + b
     return y.astype(COMPUTE_DTYPE)
@@ -366,8 +386,8 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
             out = dense_attention(q, kk, vv, causal=causal, window=window)
 
     out = out.reshape(b, sq, n_heads * head_dim)
-    y = jnp.einsum("bsf,fd->bsd", out, params["wo"].astype(COMPUTE_DTYPE),
-                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    y = weight_einsum("bsf,fd->bsd", out,
+                      params["wo"]).astype(COMPUTE_DTYPE)
     return y, new_cache
 
 

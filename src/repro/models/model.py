@@ -25,9 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..kernels.quant import QuantTensor, quant_disabled, quantize
 from .layers import (COMPUTE_DTYPE, attention_apply, attention_init,
                      fused_residual_rmsnorm_mlp, mlp_apply, mlp_init,
-                     rmsnorm, rmsnorm_init, _dense_init, _proj)
+                     rmsnorm, rmsnorm_init, weight_einsum, _dense_init,
+                     _proj)
 from .moe import moe_apply, moe_init
 from .ssm import mamba2_apply, mamba2_init, mamba2_init_state
 
@@ -277,8 +279,7 @@ class Model:
 
     def logits_of(self, params: Dict, x: jax.Array) -> jax.Array:
         head = self.lm_head_matrix(params)
-        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(COMPUTE_DTYPE),
-                            preferred_element_type=jnp.float32)
+        logits = weight_einsum("bsd,dv->bsv", x, head)
         try:  # keep the vocab dim model-sharded (needs an active mesh)
             logits = jax.lax.with_sharding_constraint(
                 logits, jax.sharding.PartitionSpec(None, None, "model"))
@@ -289,6 +290,77 @@ class Model:
     def forward(self, params: Dict, batch: Dict):
         x, aux = self.forward_hidden(params, batch)
         return self.logits_of(params, x), aux
+
+    # ---------------- weight quantization -----------------------------------
+    _QUANT_PROJ_NAMES = frozenset(
+        {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_in",
+         "w_out"})
+
+    def quantize_params(self, params: Dict) -> Dict:
+        """Quantize projection weights ONCE at load per
+        ``cfg.weight_dtype`` (the serve engine calls this at build).
+
+        Attention and MLP projections — the matmuls whose weight bytes
+        dominate the decode roofline's ``t_memory`` — are replaced by
+        ``QuantTensor`` (8-bit values + per-channel fp32 scales) and flow
+        through the dequant-fused projection in ``layers._proj``.  The
+        untied lm head is quantized too (it is a projection); embeddings
+        (a per-token row gather), norms, MoE experts, and SSM state
+        parameters stay fp.  ``weight_dtype="none"`` or ``REPRO_QUANT=off``
+        returns params unchanged.
+        """
+        wd = (self.cfg.weight_dtype or "none").lower()
+        if wd in ("none", "fp32", "bf16", "") or quant_disabled():
+            return params
+
+        def q(path, leaf):
+            keys = [str(getattr(k, "key", k)) for k in path]
+            name = keys[-1] if keys else ""
+            in_proj_tree = any(k in ("attn", "mlp") for k in keys[:-1])
+            if in_proj_tree and name in self._QUANT_PROJ_NAMES:
+                return quantize(leaf, wd, per_channel=True)
+            if name == "lm_head":
+                return quantize(leaf, wd, per_channel=True)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(q, params)
+
+    def num_quantized_matmuls(self, params: Dict) -> int:
+        """How many quantized matmuls one forward runs — a stacked
+        (L, K, N) QuantTensor is L per-layer projections.  Scales the
+        per-op error budget to the declared end-to-end model budget
+        (``tune.model_error_budget``)."""
+        is_qt = lambda x: isinstance(x, QuantTensor)  # noqa: E731
+        total = 0
+        for leaf in jax.tree.leaves(params, is_leaf=is_qt):
+            if isinstance(leaf, QuantTensor):
+                total += math.prod(leaf.values.shape[:-2]) or 1
+        return total
+
+    def decode_weight_bytes(self, params: Dict) -> int:
+        """Analytic HBM weight traffic for ONE decode/prefill step: every
+        parameter the step streams, at its STORAGE dtype (a quantized leaf
+        counts its 8-bit values plus fp32 scales).  The embedding table is
+        a per-token row gather, so it is excluded — unless tied, where it
+        doubles as the lm-head matmul operand and streams fully.  This is
+        the number serve telemetry reports as ``weight_bytes_per_step``
+        and ``benchmarks/serve_load.py`` asserts drops >= 3x with int8.
+        """
+        def nbytes(leaf) -> int:
+            if isinstance(leaf, QuantTensor):
+                return leaf.nbytes
+            return int(leaf.nbytes)
+
+        is_qt = lambda x: isinstance(x, QuantTensor)  # noqa: E731
+        total = 0
+        for key, sub in params.items():
+            if key == "embed":
+                if self.cfg.tie_embeddings:
+                    total += nbytes(sub)
+                continue
+            total += sum(nbytes(leaf)
+                         for leaf in jax.tree.leaves(sub, is_leaf=is_qt))
+        return total
 
     # ---------------- decode cache -----------------------------------------
     def init_cache(self, batch: int, max_len: int) -> Dict:

@@ -44,7 +44,8 @@ from .telemetry import ServeTelemetry
 
 
 def resolve_tuned_decode_cfg(model: Model, max_len: int,
-                             fused_decode: Optional[bool] = None):
+                             fused_decode: Optional[bool] = None,
+                             weight_dtype: Optional[str] = None):
     """Tuned decode-path config overrides resolved once at engine build.
 
     Consults the persistent autotuning cache for the engine's actual
@@ -59,10 +60,33 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int,
     resolved the same way: on by default, off when ``REPRO_FUSION=off`` or
     when a measured ``fusion:decode_block`` tuning record vetoes it;
     ``fused_decode`` forces it either way.
+
+    Weight quantization is resolved asymmetrically: the config's
+    ``weight_dtype`` request is honored UNLESS a measured
+    ``quant:decode_block`` veto ({"wdtype": "none"}) says the error
+    budget was exceeded on this shape bucket — a cached record can turn
+    quantization off, never silently on (it is lossy).  An explicit
+    ``weight_dtype`` argument forces past the veto (like ``fused_decode``
+    forces past the fusion verdict); ``REPRO_QUANT=off`` wins over
+    everything.
     """
+    from repro.kernels.quant import quant_disabled
+
     cfg = model.cfg
     dtype_key = canon_dtype(cfg.compute_dtype)
     overrides = {}
+    wd = (weight_dtype if weight_dtype is not None
+          else cfg.weight_dtype) or "none"
+    if wd != "none":
+        if quant_disabled():
+            wd = "none"                 # the escape hatch always wins
+        elif weight_dtype is None:
+            verdict = tune.tuned_wdtype("decode_block",
+                                        (cfg.d_model, cfg.d_ff), dtype_key)
+            if verdict == "none":
+                wd = "none"             # measured veto: budget exceeded
+    if wd != cfg.weight_dtype:
+        overrides["weight_dtype"] = wd
     if cfg.num_heads:
         block = tune.tuned_attention_block(
             max_len, max_len, cfg.resolved_head_dim, dtype_key)
@@ -148,14 +172,19 @@ class ServeEngine:
                  prefill_mode: str = "chunked", chunk_size: int = 16,
                  scheduler=None, prefix_cache=None,
                  fused_decode: Optional[bool] = None,
+                 weight_dtype: Optional[str] = None,
                  telemetry: Optional[ServeTelemetry] = None):
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
-            model, max_len, fused_decode=fused_decode)
+            model, max_len, fused_decode=fused_decode,
+            weight_dtype=weight_dtype)
         if self.tuned_overrides:
             model = dataclasses.replace(model, cfg=tuned_cfg)
         self.model = model
         self.step_dispatches = model.decode_dispatch_count()
-        self.params = params
+        # weights quantize ONCE at engine build (cfg.weight_dtype lever);
+        # every decode/prefill step then streams 8-bit projections
+        self.params = model.quantize_params(params)
+        self.weight_bytes_per_step = model.decode_weight_bytes(self.params)
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = model.init_cache(max_batch, max_len)
@@ -189,6 +218,7 @@ class ServeEngine:
             "requests_done": 0, "truncated": 0, "prefill_chunks": 0,
             "prefix_hits": 0, "prefix_tokens_reused": 0,
             "decode_dispatches": 0,
+            "weight_bytes_per_step": self.weight_bytes_per_step,
         }
 
     # ------------------------------------------------------------------
@@ -369,7 +399,8 @@ class ServeEngine:
         self.telemetry.on_step(
             queue_depth=self.scheduler.pending(), active_slots=active,
             num_slots=self.max_batch, seconds=time.perf_counter() - t0,
-            dispatches=self.step_dispatches)
+            dispatches=self.step_dispatches,
+            weight_bytes=self.weight_bytes_per_step)
         self.mux.emit(events)
         return events
 

@@ -79,6 +79,9 @@ class ServeTelemetry:
         # per-step kernel-dispatch counter: the fused decode path must
         # measurably drop this (asserted in benchmarks/serve_load.py)
         self.dispatch_total = 0
+        # per-step HBM weight traffic: quantized weights must drop this
+        # >= 3x for int8 (asserted in benchmarks/serve_load.py)
+        self.weight_bytes_total = 0
 
     # ---- request lifecycle ------------------------------------------------
     def _trace(self, rid: int) -> RequestTrace:
@@ -123,13 +126,14 @@ class ServeTelemetry:
     # ---- per-step samples -------------------------------------------------
     def on_step(self, *, queue_depth: int, active_slots: int,
                 num_slots: int, seconds: float,
-                dispatches: int = 0) -> None:
+                dispatches: int = 0, weight_bytes: int = 0) -> None:
         self.steps += 1
         self.num_slots = num_slots
         self.queue_depth_samples.append(queue_depth)
         self.active_slot_samples.append(active_slots)
         self.step_seconds.append(seconds)
         self.dispatch_total += dispatches
+        self.weight_bytes_total += weight_bytes
 
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -171,6 +175,8 @@ class ServeTelemetry:
             "dispatch_total": self.dispatch_total,
             "dispatches_per_step": (self.dispatch_total / self.steps
                                     if self.steps else 0.0),
+            "weight_bytes_per_step": (self.weight_bytes_total / self.steps
+                                      if self.steps else 0.0),
             "queue_depth_mean": (sum(self.queue_depth_samples)
                                  / len(self.queue_depth_samples)
                                  if self.queue_depth_samples else 0.0),

@@ -1,0 +1,530 @@
+"""SOL-planned weight quantization: kernels, DSL lever, tune axis, serve.
+
+Covers the quantize->dequantize round-trip error bounds, per-channel vs
+per-tensor scale granularity, the dequant-fused Pallas kernels against
+their jnp oracles, the DSL ``wdtype`` lever (validation + both backends +
+fusion composition), quantization as a tunable axis (budgets, vetoes,
+engine resolution), and bitwise determinism of the quantized decode step
+across two engine runs.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+import jax  # noqa: E402
+
+from repro.core.dsl import compile_dsl  # noqa: E402
+from repro.core.dsl.compiler import validate_dsl  # noqa: E402
+from repro.kernels import ops, quant, ref  # noqa: E402
+
+RNG = np.random.default_rng(11)
+
+
+def _arr(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+class TestQuantizeRoundTrip:
+    @pytest.mark.parametrize("wdtype,tol", [("int8", 0.01),
+                                            ("fp8_e4m3", 0.08)])
+    def test_round_trip_error_bound(self, wdtype, tol):
+        w = _arr(256, 128)
+        qt = quant.quantize(jnp.asarray(w), wdtype)
+        dq = np.asarray(quant.dequantize(qt))
+        # per element: |err| <= scale/2 (int8 rounding) resp. fp8 ulp
+        rel = np.linalg.norm(dq - w) / np.linalg.norm(w)
+        assert rel < tol
+        scales = np.asarray(qt.scales)
+        if wdtype == "int8":
+            assert np.all(np.abs(dq - w) <= scales[None, :] * 0.5 + 1e-7)
+
+    def test_int8_symmetric_grid(self):
+        w = _arr(64, 32)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        vals = np.asarray(qt.values)
+        assert vals.dtype == np.int8
+        assert vals.min() >= -127 and vals.max() <= 127
+
+    def test_per_channel_beats_per_tensor_on_outlier_channel(self):
+        w = _arr(128, 16)
+        w[:, 3] *= 100.0                # one huge output channel
+        pc = quant.quantize(jnp.asarray(w), "int8", per_channel=True)
+        pt = quant.quantize(jnp.asarray(w), "int8", per_channel=False)
+        assert pc.scales.shape == (16,)
+        assert pt.scales.shape == ()
+        keep = [c for c in range(16) if c != 3]   # the healthy channels
+        err_pc = np.linalg.norm(
+            (np.asarray(quant.dequantize(pc)) - w)[:, keep])
+        err_pt = np.linalg.norm(
+            (np.asarray(quant.dequantize(pt)) - w)[:, keep])
+        # the outlier inflates every OTHER channel's grid under per-tensor;
+        # per-channel scales isolate it
+        assert err_pc < err_pt / 10
+
+    def test_batched_scales_shape(self):
+        w = _arr(4, 64, 32)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        assert qt.scales.shape == (4, 32)     # per (group, channel)
+
+    def test_quant_tensor_is_pytree(self):
+        qt = quant.quantize(jnp.asarray(_arr(8, 16)), "int8")
+        leaves = jax.tree.leaves(qt)
+        assert len(leaves) == 2
+        rebuilt = jax.tree.map(lambda x: x, qt)
+        assert isinstance(rebuilt, quant.QuantTensor)
+        assert rebuilt.wdtype == "int8"
+
+    def test_unknown_wdtype_rejected(self):
+        with pytest.raises(KeyError):
+            quant.quantize(jnp.asarray(_arr(8, 16)), "int4")
+
+    def test_quantize_cached_memoizes_per_buffer(self):
+        w = jnp.asarray(_arr(64, 32))
+        q1 = quant.quantize_cached(w, "int8")
+        q2 = quant.quantize_cached(w, "int8")
+        assert q1 is q2                       # one quantization per buffer
+        q3 = quant.quantize_cached(w, "int8", per_channel=False)
+        assert q3 is not q1                   # granularity keys apart
+        w2 = jnp.asarray(_arr(64, 32))
+        assert quant.quantize_cached(w2, "int8") is not q1
+
+
+class TestQuantKernelsVsOracles:
+    @pytest.mark.parametrize("wdtype", ["int8", "fp8_e4m3"])
+    def test_gemm_q_matches_ref(self, wdtype):
+        a, w = _arr(40, 96), _arr(96, 112)
+        qt = quant.quantize(jnp.asarray(w), wdtype)
+        out = np.asarray(ops.gemm_q(jnp.asarray(a), qt, tile=(64, 128, 128),
+                                    out_dtype=jnp.float32))
+        want = np.asarray(ref.gemm_q_ref(jnp.asarray(a), qt.values,
+                                         qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_gemm_q_epilogue_after_scales(self):
+        a, w, bias = _arr(32, 64), _arr(64, 128), _arr(128)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        ep = lambda x, b: x + b  # noqa: E731
+        out = np.asarray(ops.gemm_q(
+            jnp.asarray(a), qt, None, jnp.asarray(bias),
+            tile=(64, 128, 128), epilogue=ep, aux_kinds=("col_vector",),
+            out_dtype=jnp.float32))
+        want = np.asarray(ref.gemm_q_ref(
+            jnp.asarray(a), qt.values, qt.scales, jnp.asarray(bias),
+            epilogue=ep, aux_kinds=("col_vector",), out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_batched_gemm_q_matches_ref(self):
+        a, w = _arr(3, 24, 64), _arr(3, 64, 128)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        out = np.asarray(ops.batched_gemm_q(
+            jnp.asarray(a), qt, tile=(64, 128, 128),
+            out_dtype=jnp.float32))
+        want = np.asarray(ref.batched_gemm_q_ref(
+            jnp.asarray(a), qt.values, qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_rmsnorm_gemm_q_matches_ref(self):
+        x, g, w = _arr(40, 192), _arr(192), _arr(192, 96)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        out = np.asarray(ops.rmsnorm_gemm_q(
+            jnp.asarray(x), jnp.asarray(g), qt, tile=(64, 128, 128),
+            out_dtype=jnp.float32))
+        want = np.asarray(ref.rmsnorm_gemm_q_ref(
+            jnp.asarray(x), jnp.asarray(g), qt.values, qt.scales,
+            out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_per_tensor_scales_accepted(self):
+        a, w = _arr(16, 64), _arr(64, 128)
+        qt = quant.quantize(jnp.asarray(w), "int8", per_channel=False)
+        out = np.asarray(ops.gemm_q(jnp.asarray(a), qt, tile=(64, 128, 128),
+                                    out_dtype=jnp.float32))
+        want = np.asarray(ref.gemm_q_ref(jnp.asarray(a), qt.values,
+                                         qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_sub_tile_k_clamp_shared_by_fp_and_quant(self):
+        """K=64 under the library's default bk: both paths clamp through
+        the shared helper and still match their oracles."""
+        a, w = _arr(16, 64), _arr(64, 128)
+        assert ops.clamp_tile((256, 256, 512), 16, 128, 64,
+                              np.float32) == (16, 128, 128)
+        out_fp = np.asarray(ops.gemm(jnp.asarray(a), jnp.asarray(w),
+                                     out_dtype=jnp.float32))
+        np.testing.assert_allclose(out_fp, a @ w, rtol=2e-4, atol=2e-4)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        out_q = np.asarray(ops.gemm_q(jnp.asarray(a), qt,
+                                      out_dtype=jnp.float32))
+        want = np.asarray(ref.gemm_q_ref(jnp.asarray(a), qt.values,
+                                         qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(out_q, want, rtol=2e-4, atol=2e-4)
+
+    def test_clamp_respects_sublane_packing(self):
+        assert ops.clamp_tile((256, 256, 512), 20, 100, 60,
+                              jnp.bfloat16)[0] == 32   # bf16 sublane 16
+        assert ops.clamp_tile((256, 256, 512), 20, 100, 60,
+                              np.float32) == (24, 128, 128)
+
+
+WDTYPE_GEMM = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_wdtype(int8).with_tile(m=64, n=128, k=128)")
+
+
+class TestDSLWdtypeLever:
+    def test_wdtype_in_canonical_namespace(self):
+        k = compile_dsl(WDTYPE_GEMM, "pallas", use_cache=False)
+        kf = compile_dsl(WDTYPE_GEMM.replace(".with_wdtype(int8)", ""),
+                         "pallas", use_cache=False)
+        assert k.namespace != kf.namespace
+        assert k.ir.wdtype == "int8" and k.ir.wscale == "per_channel"
+
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    def test_backends_agree(self, backend):
+        a, w, bias = _arr(32, 96), _arr(96, 112), _arr(112)
+        src = WDTYPE_GEMM + " >> bias()"
+        k = compile_dsl(src, backend, use_cache=False)
+        out = np.asarray(k(a, w, bias))
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        want = np.asarray(ref.gemm_q_ref(
+            jnp.asarray(a), qt.values, qt.scales, jnp.asarray(bias),
+            epilogue=lambda x, b: x + b, aux_kinds=("col_vector",),
+            out_dtype=jnp.float32))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_dimension_semantics_threads_through_quantized_route(self):
+        src = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_wdtype(int8).with_tile(m=64, n=128, k=128)"
+               ".with_dimension_semantics(arbitrary, arbitrary, arbitrary)")
+        k = compile_dsl(src, "pallas", use_cache=False)
+        assert "dimension_semantics=('arbitrary'" in k.source
+        a, w = _arr(16, 64), _arr(64, 128)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        want = np.asarray(ref.gemm_q_ref(jnp.asarray(a), qt.values,
+                                         qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(k(a, w)), want,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_per_tensor_scale_param(self):
+        src = ("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_wdtype(int8, scale=per_tensor)"
+               ".with_tile(m=64, n=128, k=128)")
+        k = compile_dsl(src, "pallas", use_cache=False)
+        assert k.ir.wscale == "per_tensor"
+        a, w = _arr(16, 64), _arr(64, 128)
+        qt = quant.quantize(jnp.asarray(w), "int8", per_channel=False)
+        want = np.asarray(ref.gemm_q_ref(jnp.asarray(a), qt.values,
+                                         qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(k(a, w)), want,
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_batched_gemm_wdtype(self):
+        src = ("batched_gemm().with_dtype(input=fp32, acc=fp32,"
+               " output=fp32).with_wdtype(int8)"
+               ".with_tile(m=64, n=128, k=128)")
+        k = compile_dsl(src, "pallas", use_cache=False)
+        a, w = _arr(2, 24, 64), _arr(2, 64, 128)
+        qt = quant.quantize(jnp.asarray(w), "int8")
+        want = np.asarray(ref.batched_gemm_q_ref(
+            jnp.asarray(a), qt.values, qt.scales, out_dtype=jnp.float32))
+        np.testing.assert_allclose(np.asarray(k(a, w)), want,
+                                   rtol=2e-4, atol=2e-4)
+
+    # ---- validation ------------------------------------------------------
+    def test_fp8_wdtype_arch_gated(self):
+        errs = validate_dsl("gemm().with_dtype(input=bf16, acc=fp32,"
+                            " output=bf16).with_wdtype(fp8_e4m3)")
+        assert [e.code for e in errs] == ["E_WDTYPE_ARCH"]
+        errs = validate_dsl("gemm().with_dtype(input=bf16, acc=fp32,"
+                            " output=bf16).with_arch(tpu_v5p)"
+                            ".with_wdtype(fp8_e4m3)")
+        assert errs == []
+
+    def test_wide_wdtype_rejected(self):
+        errs = validate_dsl("gemm().with_dtype(input=fp32, acc=fp32,"
+                            " output=fp32).with_wdtype(bf16)")
+        assert "E_WDTYPE" in [e.code for e in errs]
+
+    def test_wdtype_requires_fp32_acc(self):
+        errs = validate_dsl("gemm().with_dtype(input=int8, acc=int32,"
+                            " output=int8).with_wdtype(int8)")
+        assert "E_WDTYPE_ACC" in [e.code for e in errs]
+
+    def test_wdtype_swap_rejected(self):
+        errs = validate_dsl("gemm().with_dtype(input=fp32, acc=fp32,"
+                            " output=fp32).with_wdtype(int8)"
+                            ".with_swap(true)")
+        assert "E_WDTYPE_SWAP" in [e.code for e in errs]
+
+    def test_wdtype_rowstat_epilogue_rejected(self):
+        errs = validate_dsl(WDTYPE_GEMM + " >> rmsnorm()")
+        assert "E_WDTYPE_ROWSTAT" in [e.code for e in errs]
+
+    def test_wdtype_family_gated(self):
+        errs = validate_dsl("rmsnorm().with_dtype(input=fp32, acc=fp32,"
+                            " output=fp32).with_wdtype(int8)")
+        assert "E_CFG_FAMILY" in [e.code for e in errs]
+
+
+class TestQuantFusionComposition:
+    SRC = ("pipeline(rmsnorm().with_dtype(input=fp32, acc=fp32,"
+           " output=fp32), " + WDTYPE_GEMM + " >> bias())")
+
+    def _arrays(self):
+        return dict(x=_arr(48, 256), gamma=_arr(256), b_s1=_arr(256, 128),
+                    bias_s1=_arr(128))
+
+    def test_rmsnorm_gemm_q_fuses_bitwise(self):
+        arrays = self._arrays()
+        hints = {n: a.shape for n, a in arrays.items()}
+        kf = compile_dsl(self.SRC, "pallas", use_cache=False, fuse="auto",
+                         shape_hints=hints)
+        ku = compile_dsl(self.SRC, "pallas", use_cache=False, fuse="off")
+        assert len(kf.ir.kernel_stages) == 1
+        assert kf.ir.kernel_stages[0].op_name == "rmsnorm_gemm"
+        assert kf.ir.kernel_stages[0].wdtype == "int8"
+        amap = dict(arrays)
+        amap.update(b=arrays["b_s1"], bias=arrays["bias_s1"])
+        out_f = np.asarray(kf.bind(**amap))
+        out_u = np.asarray(ku.bind(**amap))
+        np.testing.assert_array_equal(out_f, out_u)
+
+    def test_xla_backend_fused_agrees(self):
+        arrays = self._arrays()
+        hints = {n: a.shape for n, a in arrays.items()}
+        kf = compile_dsl(self.SRC, "xla", use_cache=False, fuse="auto",
+                         shape_hints=hints)
+        ku = compile_dsl(self.SRC, "xla", use_cache=False, fuse="off")
+        amap = dict(arrays)
+        amap.update(b=arrays["b_s1"], bias=arrays["bias_s1"])
+        np.testing.assert_array_equal(np.asarray(kf.bind(**amap)),
+                                      np.asarray(ku.bind(**amap)))
+
+    def test_gemm_gemm_declines_quantized_stage(self):
+        src = ("pipeline(" + WDTYPE_GEMM + ", "
+               "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               ".with_tile(m=64, n=128, k=128))")
+        k = compile_dsl(src, "pallas", use_cache=False, fuse="force")
+        assert len(k.ir.kernel_stages) == 2
+        assert "quantized" in k.fusion.decisions[0].reason
+
+    def test_fold_rmsnorm_declines_quantized_producer(self):
+        src = ("pipeline(" + WDTYPE_GEMM + ", "
+               "rmsnorm().with_dtype(input=fp32, acc=fp32, output=fp32))")
+        k = compile_dsl(src, "pallas", use_cache=False, fuse="force")
+        assert len(k.ir.kernel_stages) == 2
+        assert "quantized" in k.fusion.decisions[0].reason
+
+    def test_fold_eltwise_onto_quantized_producer(self):
+        src = ("pipeline(" + WDTYPE_GEMM + ", "
+               "eltwise().with_dtype(input=fp32, acc=fp32, output=fp32)"
+               " >> gelu())")
+        arrays = dict(a=_arr(32, 128), b=_arr(128, 128))
+        hints = {n: a.shape for n, a in arrays.items()}
+        kf = compile_dsl(src, "pallas", use_cache=False, fuse="auto",
+                         shape_hints=hints)
+        ku = compile_dsl(src, "pallas", use_cache=False, fuse="off")
+        assert len(kf.ir.kernel_stages) == 1
+        assert kf.ir.kernel_stages[0].wdtype == "int8"
+        np.testing.assert_array_equal(
+            np.asarray(kf.bind(**arrays)), np.asarray(ku.bind(**arrays)))
+
+
+class TestQuantTuneAxis:
+    def test_candidates_default_first(self):
+        cands = __import__("repro.core.tune", fromlist=["tune"]) \
+            .quant_candidates("gemm")
+        assert cands[0].as_dict() == {"wdtype": "none"}
+        assert {c.as_dict()["wdtype"] for c in cands[1:]} \
+            == {"int8", "fp8_e4m3"}
+
+    def test_prune_quant_keeps_weight_heavy_drops_nothing_saved(self):
+        from repro.core import tune
+        cands = tune.quant_candidates("gemm")
+        # decode shape: weights dominate -> quant candidates survive
+        kept = tune.prune_quant((8, 512, 256), cands, dtype="fp32")
+        assert len(kept) == len(cands)
+        # giant activation, tiny weight: nothing meaningful to save
+        kept = tune.prune_quant((65536, 8, 8), cands, dtype="fp32",
+                                min_saved_frac=0.05)
+        assert [c.as_dict()["wdtype"] for c, _ in kept] == ["none"]
+
+    def test_record_and_veto_roundtrip(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+        from repro.core import tune
+        dims = (64, 128, 64)
+        assert tune.tuned_wdtype("gemm", dims, "fp32") is None
+        tune.record_quant_measurement("gemm", dims, "fp32",
+                                      wdtype_best="int8", rel_err=0.003,
+                                      budget=0.02)
+        assert tune.tuned_wdtype("gemm", dims, "fp32") == "int8"
+        tune.record_quant_measurement("gemm", dims, "fp32",
+                                      wdtype_best="none", rel_err=0.5,
+                                      budget=0.02)
+        assert tune.tuned_wdtype("gemm", dims, "fp32") == "none"
+
+    def test_repro_quant_off_silences_lookups(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+        from repro.core import tune
+        tune.record_quant_measurement("gemm", (8, 8, 8), "fp32",
+                                      wdtype_best="int8")
+        monkeypatch.setenv("REPRO_QUANT", "off")
+        assert tune.tuned_wdtype("gemm", (8, 8, 8), "fp32") is None
+
+    def test_budgets_and_env_override(self, monkeypatch):
+        from repro.core import tune
+        assert tune.quant_error_budget("int8") == 0.02
+        assert tune.quant_error_budget("fp8_e4m3") > \
+            tune.quant_error_budget("int8")
+        monkeypatch.setenv("REPRO_QUANT_BUDGET", "0.5")
+        assert tune.quant_error_budget("int8") == 0.5
+
+    def test_cite_quant_report(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+        from repro.core import tune
+        from repro.core.agent.costmodel import cite_quant_report
+        dims = (8, 512, 256)
+        line = cite_quant_report(tune.quant_report("gemm", dims, "bf16"))
+        assert "int8 weights save" in line and "unmeasured" in line
+        tune.record_quant_measurement("gemm", dims, "bf16",
+                                      wdtype_best="none", rel_err=0.9,
+                                      budget=0.02)
+        line = cite_quant_report(tune.quant_report("gemm", dims, "bf16"))
+        assert "VETOED" in line
+        assert cite_quant_report(None).startswith("no quantization")
+
+    def test_dtype_aware_roofline(self):
+        from repro.core.sol.roofline import (matmul_hbm_bytes,
+                                             matmul_roofline,
+                                             quant_bytes_saved)
+        fp = matmul_hbm_bytes(8, 256, 512, a_dtype="fp32", w_dtype="fp32")
+        q8 = matmul_hbm_bytes(8, 256, 512, a_dtype="fp32", w_dtype="int8")
+        # weight term shrinks 4x (+ scales); activations/output unchanged
+        assert fp - q8 == 512 * 256 * 3 - 256 * 4
+        saved, frac = quant_bytes_saved(8, 256, 512, w_dtype_from="fp32",
+                                        w_dtype_to="int8", a_dtype="fp32")
+        assert saved == fp - q8 and 0 < frac < 1
+        r = matmul_roofline(8, 256, 512, a_dtype="bf16", w_dtype="int8")
+        assert r.bottleneck == "memory"      # decode shape is memory-bound
+        assert r.hbm_bytes == matmul_hbm_bytes(8, 256, 512, a_dtype="bf16",
+                                               w_dtype="int8")
+
+
+class TestServeQuantizedDecode:
+    def _build(self, weight_dtype="int8"):
+        from repro.configs import get_arch
+        from repro.models.model import build_model
+        cfg = dataclasses.replace(get_arch("qwen2-0.5b").reduced(),
+                                  tie_embeddings=False,
+                                  weight_dtype=weight_dtype)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return model, params
+
+    def test_quantize_params_targets_projections_only(self):
+        model, params = self._build()
+        qp = model.quantize_params(params)
+        assert isinstance(qp["layers"]["attn"]["wq"], quant.QuantTensor)
+        assert isinstance(qp["layers"]["mlp"]["w_down"], quant.QuantTensor)
+        assert isinstance(qp["lm_head"], quant.QuantTensor)
+        assert not isinstance(qp["embed"], quant.QuantTensor)
+        assert not isinstance(qp["layers"]["norm1"]["gamma"],
+                              quant.QuantTensor)
+        assert model.num_quantized_matmuls(qp) \
+            == model.cfg.num_layers * 7 + 1   # swiglu: 4 attn + 3 mlp
+
+    def test_weight_bytes_drop_at_least_3x(self):
+        model, params = self._build()
+        qp = model.quantize_params(params)
+        fp_bytes = model.decode_weight_bytes(params)
+        q_bytes = model.decode_weight_bytes(qp)
+        assert fp_bytes / q_bytes >= 3.0
+
+    def test_quantized_prefill_within_model_budget(self):
+        from repro.core import tune
+        model, params = self._build()
+        qp = model.quantize_params(params)
+        toks = jnp.asarray([[3, 5, 7, 2], [11, 2, 4, 9]], jnp.int32)
+        counts = jnp.asarray([4, 4], jnp.int32)
+        lf, _ = model.prefill_step(params, model.init_cache(2, 16), toks,
+                                   counts)
+        lq, _ = model.prefill_step(qp, model.init_cache(2, 16), toks,
+                                   counts)
+        lf = np.asarray(lf, np.float32)
+        lq = np.asarray(lq, np.float32)
+        rel = np.linalg.norm(lq - lf) / np.linalg.norm(lf)
+        budget = tune.model_error_budget(
+            "int8", model.num_quantized_matmuls(qp))
+        assert rel <= budget
+
+    def test_engine_decode_bitwise_deterministic_across_runs(self):
+        from repro.serve import Request, ServeEngine
+        model, params = self._build()
+
+        def run():
+            eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                              chunk_size=8, weight_dtype="int8", seed=3)
+            reqs = [Request(rid=i, prompt=[3 + i, 5, 7, 2, 9],
+                            max_new_tokens=5, temperature=0.8)
+                    for i in range(3)]
+            eng.run(reqs)
+            return eng, [r.out_tokens for r in reqs]
+
+        eng_a, out_a = run()
+        eng_b, out_b = run()
+        assert eng_a.model.cfg.weight_dtype == "int8"
+        assert out_a == out_b                 # bitwise-deterministic decode
+        assert eng_a.weight_bytes_per_step == eng_b.weight_bytes_per_step
+        assert eng_a.metrics["weight_bytes_per_step"] \
+            == eng_a.weight_bytes_per_step
+
+    def test_repro_quant_off_escape_hatch(self, monkeypatch):
+        from repro.serve import ServeEngine
+        model, params = self._build()
+        monkeypatch.setenv("REPRO_QUANT", "off")
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          chunk_size=8)
+        assert eng.model.cfg.weight_dtype == "none"
+        assert not any(isinstance(leaf, quant.QuantTensor)
+                       for leaf in jax.tree.leaves(
+                           eng.params,
+                           is_leaf=lambda x: isinstance(
+                               x, quant.QuantTensor)))
+
+    def test_tuned_veto_flips_engine_off_but_explicit_forces(
+            self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+        from repro.core import tune
+        from repro.serve import ServeEngine
+        model, params = self._build()
+        cfg = model.cfg
+        tune.record_quant_measurement(
+            "decode_block", (cfg.d_model, cfg.d_ff), cfg.compute_dtype,
+            wdtype_best="none", rel_err=0.9, budget=0.001)
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          chunk_size=8)
+        assert eng.model.cfg.weight_dtype == "none"   # veto honored
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          chunk_size=8, weight_dtype="int8")
+        assert eng.model.cfg.weight_dtype == "int8"   # explicit forces
+
+    def test_quantized_works_with_fused_decode(self):
+        model, params = self._build()
+        fused = dataclasses.replace(
+            model, cfg=dataclasses.replace(model.cfg, fused_decode=True))
+        qp = model.quantize_params(params)
+        toks = jnp.asarray([[3, 5, 7, 2]], jnp.int32)
+        counts = jnp.asarray([4], jnp.int32)
+        la, _ = model.prefill_step(qp, model.init_cache(1, 16), toks,
+                                   counts)
+        lb, _ = fused.prefill_step(qp, fused.init_cache(1, 16), toks,
+                                   counts)
+        # the fused decode block preserves bitwise identity even over
+        # quantized projections (same primitive order)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
