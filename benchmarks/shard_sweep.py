@@ -1,0 +1,269 @@
+"""Sharding sweep: tensor-parallel GEMM vs single-device per shape class,
+checked against the SOL collective (wire-bytes) model.
+
+Forces an 8-device host-platform mesh (XLA_FLAGS, set before jax import)
+unless the environment already forced one; exits cleanly (skip) when only
+one device is visible.  For each shape class:
+
+  * enumerates the ``shard:<op>`` candidates (mesh divisors) and
+    SOL-prunes them with the alpha-beta collective model
+    (``tune.prune_shard``) — latency-bound skinny shapes never reach
+    measurement,
+  * runs ``ops.tp_gemm`` for each divisor tp and asserts the sharded
+    output equals the single-device Pallas reference (the full-output
+    strategies are bitwise),
+  * validates the SOL-predicted bytes-on-wire against an INDEPENDENT
+    measurement: the collective operand sizes parsed out of the compiled
+    post-SPMD HLO (``collective.compiled_wire_bytes`` /
+    ``sol.hlo_analysis``) for every strategy that emits a collective
+    (weight gather, quantized gather, reduce-scatter) — must agree
+    within 20%.  Column-strategy rows carry no module collective (the
+    output stays sharded; the consumer pays the gather), so they report
+    the prediction with that note instead of a fake measurement,
+  * measures tp candidates against unsharded, records the winner in the
+    persistent tuning cache (``tune.record_shard_measurement``; tp=1 is
+    the veto), and asserts the tuned choice is never slower than
+    unsharded,
+  * adds a quantized weight-gather row: the int8 gather must move
+    exactly 4x fewer HLO-measured bytes than its fp32 twin.
+
+The per-case table is appended to ``$GITHUB_STEP_SUMMARY`` when set and
+always written to ``shard_sweep_summary.md``.
+
+    PYTHONPATH=src python benchmarks/shard_sweep.py --smoke
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse      # noqa: E402
+import time          # noqa: E402
+
+import numpy as np   # noqa: E402
+
+# Wall time gates only on real hardware: interpret-mode timings measure
+# the Python/XLA emulation, not ICI traffic (same policy as quant_sweep).
+TIME_SLACK = 1.10
+
+SHAPE_CLASSES = {                     # (m, k, n)
+    "decode": (8, 256, 512),          # skinny decode row: latency-bound
+    "square": (128, 256, 256),
+    "wide": (64, 128, 512),
+}
+
+
+def bench(fn, reps):
+    out = np.asarray(fn())              # warmup (compile) + result
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.asarray(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timing reps (CI mode)")
+    args = ap.parse_args()
+    reps = 5 if args.smoke else 15
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import tune
+    from repro.core.sol.collectives import collective_cost, plan_tp_gemm
+    from repro.kernels import collective, ops, quant
+    from repro.kernels.ops import default_interpret
+    from repro.kernels.ref import gemm_reduce_scatter_ref
+
+    n_dev = len(jax.devices())
+    print(f"shard_sweep: {n_dev} devices "
+          f"({jax.devices()[0].platform} host platform)")
+    if n_dev < 2:
+        # XLA_FLAGS was already set by the environment without forcing
+        # multiple host devices: nothing to shard, nothing to assert
+        print("shard_sweep: SKIPPED (single device; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
+        return
+    rng = np.random.default_rng(0)
+    rows = []
+    failures = []
+    tile = (8, 128, 128)
+
+    def check_wire(label, tp, strategy, pred, meas, note):
+        err = abs(pred - meas) / max(meas, 1)
+        rows.append((label[0], label[1], tp, strategy, pred, meas,
+                     100 * err, note))
+        print(f"  {label[0]} {label[1]} tp={tp} [{strategy}]: pred "
+              f"{pred / 1e3:7.1f} KB wire  HLO-meas {meas / 1e3:7.1f} KB "
+              f"(err {100 * err:4.1f}%)  {note}")
+        if err > 0.20:
+            failures.append(f"{label[0]}/tp={tp}/{strategy}: SOL wire "
+                            f"prediction off by {100 * err:.0f}% (> 20%)")
+
+    for cls, (m, k, n) in SHAPE_CLASSES.items():
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        base_fn = lambda: ops.gemm(a, w, tile=tile,  # noqa: E731
+                                   out_dtype=jnp.float32)
+        t_base, out_base = bench(base_fn, reps)
+
+        cands = tune.shard_candidates("gemm", n_devices=n_dev)
+        kept = tune.prune_shard((m, n, k), cands, dtype="fp32")
+        kept_tps = [c.as_dict()["tp"] for c, _ in kept]
+        assert kept_tps[0] == 1, "unsharded default must always survive"
+        pruned = [c.as_dict()["tp"] for c in cands
+                  if c.as_dict()["tp"] not in kept_tps]
+        if pruned:
+            print(f"  {cls} {m}x{k}x{n}: SOL-pruned tp={pruned} "
+                  f"(alpha-beta collective model: wire time beats the "
+                  f"single-chip bound nowhere)")
+
+        measured = [(1, t_base)]
+        # measure every divisor in the sweep (the prune decides what a
+        # production tuner would measure; the sweep validates the model
+        # across the full axis)
+        for cand in cands:
+            tp = cand.as_dict()["tp"]
+            if tp == 1:
+                continue
+            plan = plan_tp_gemm(m, n, k, tp=tp, a_dtype="fp32")
+            tp_fn = lambda: ops.tp_gemm(a, w, tp=tp, tile=tile,  # noqa
+                                        out_dtype=jnp.float32)
+            t_tp, out_tp = bench(tp_fn, reps)
+            measured.append((tp, t_tp))
+            if not (out_tp == out_base).all():
+                failures.append(f"{cls}/tp={tp}: sharded output != "
+                                f"single-device reference")
+            print(f"  {cls} {m}x{k}x{n} tp={tp} [{plan.strategy}]: base "
+                  f"{1e3 * t_base:6.2f} ms  tp {1e3 * t_tp:6.2f} ms")
+
+            # wire validation against the compiled HLO, per strategy
+            if k % tp == 0:
+                pred_w = plan_tp_gemm(
+                    m, n, k, tp=tp, a_dtype="fp32",
+                    strategy="gather_w").collective.total_wire_bytes
+                meas_w = collective.compiled_wire_bytes(
+                    "gather_w", a, w, tp=tp, tile=tile,
+                    out_dtype=jnp.float32)
+                check_wire((cls, f"{m}x{k}x{n}"), tp, "gather_w",
+                           pred_w, meas_w, "all-gather in module")
+            if k % tp == 0 and m % tp == 0:
+                pred_r = collective_cost(
+                    "reduce_scatter", m * n * 4, tp).total_wire_bytes
+                meas_r = collective.compiled_wire_bytes(
+                    "row", a, w, tp=tp, tile=tile, out_dtype=jnp.float32)
+                check_wire((cls, f"{m}x{k}x{n}"), tp, "row",
+                           pred_r, meas_r, "reduce-scatter in module")
+            if n % tp == 0:
+                pred_c = plan_tp_gemm(
+                    m, n, k, tp=tp, a_dtype="fp32",
+                    strategy="column").collective.total_wire_bytes
+                meas_c = collective.compiled_wire_bytes(
+                    "column", a, w, tp=tp, tile=tile,
+                    out_dtype=jnp.float32)
+                # no collective in the module: the output stays sharded
+                # and the consumer pays the gather the plan prices
+                rows.append((cls, f"{m}x{k}x{n}", tp, "column", pred_c,
+                             meas_c, float("nan"),
+                             "gather deferred to consumer"))
+                if meas_c != 0.0:
+                    failures.append(f"{cls}/tp={tp}/column: unexpected "
+                                    f"module collective ({meas_c} B)")
+
+        # tuned shard:<op> never slower than unsharded: the measured
+        # winner includes tp=1, so adopting it can never regress
+        tp_best, t_best = min(measured, key=lambda x: x[1])
+        best_plan = (plan_tp_gemm(m, n, k, tp=tp_best, a_dtype="fp32")
+                     if tp_best > 1 else None)
+        try:
+            if not default_interpret():
+                tune.record_shard_measurement(
+                    "gemm", (m, n, k), "fp32", tp_best=tp_best,
+                    wire_bytes=(best_plan.collective.total_wire_bytes
+                                if best_plan else 0.0),
+                    trials=[{"config": {"tp": tp}, "median_s": t}
+                            for tp, t in measured])
+        except Exception:
+            pass
+        if t_best > t_base * TIME_SLACK:
+            msg = (f"{cls}: tuned tp={tp_best} slower than unsharded "
+                   f"({1e3 * t_best:.2f} vs {1e3 * t_base:.2f} ms)")
+            if default_interpret():
+                print(f"  WARNING (interpret mode, not gating): {msg}")
+            else:
+                failures.append(msg)
+        print(f"  {cls}: tuned shard verdict tp={tp_best}")
+
+    # quantized weight gather: int8 must move exactly 1/4 the fp32
+    # HLO-measured bytes (the quant lever composed with the shard lever)
+    m, k, n = SHAPE_CLASSES["square"]
+    qtp = max((d for d in range(2, n_dev + 1)
+               if n_dev % d == 0 and k % d == 0 and n % d == 0),
+              default=None)
+    if qtp is None:
+        print("  quantized gather: SKIPPED (no usable divisor of "
+              f"{n_dev} devices for k={k}, n={n})")
+    else:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        qt = quant.quantize(w, "int8")
+        pred_q = plan_tp_gemm(m, n, k, tp=qtp, a_dtype="fp32",
+                              w_dtype="int8",
+                              strategy="gather_w").collective
+        meas_q = collective.compiled_wire_bytes(
+            "gather_w", a, qt, tp=qtp, tile=tile, out_dtype=jnp.float32)
+        meas_fp = collective.compiled_wire_bytes(
+            "gather_w", a, w, tp=qtp, tile=tile, out_dtype=jnp.float32)
+        check_wire(("quant-int8", f"{m}x{k}x{n}"), qtp, "gather_w",
+                   pred_q.total_wire_bytes, meas_q,
+                   f"{meas_fp / max(meas_q, 1):.0f}x less wire than fp32")
+        out_q = np.asarray(ops.tp_gemm_q(a, qt, tp=qtp,
+                                         strategy="gather_w", tile=tile,
+                                         out_dtype=jnp.float32))
+        want_q = np.asarray(ops.gemm_q(a, qt, tile=tile,
+                                       out_dtype=jnp.float32))
+        if not (out_q == want_q).all():
+            failures.append("quantized sharded output != single-device "
+                            "gemm_q")
+        if abs(meas_fp / max(meas_q, 1) - 4.0) > 1e-6:
+            failures.append(f"int8 gather wire ratio "
+                            f"{meas_fp / max(meas_q, 1)} != 4x")
+
+        # GEMM -> reduce-scatter numeric sanity (allclose: distributed K)
+        out_rs = np.asarray(collective.gemm_reduce_scatter(
+            a, w, tp=qtp, tile=tile, out_dtype=jnp.float32))
+        want_rs = np.asarray(gemm_reduce_scatter_ref(
+            a, w, tp=qtp, out_dtype=jnp.float32))
+        if not np.allclose(out_rs, want_rs, atol=1e-4):
+            failures.append("gemm_reduce_scatter != jnp oracle")
+
+    table = ["| shape class | m x k x n | tp | strategy | SOL wire B | "
+             "HLO wire B | err % | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        err = "-" if r[6] != r[6] else f"{r[6]:.1f}"   # NaN -> deferred
+        table.append(f"| {r[0]} | {r[1]} | {r[2]} | {r[3]} | {r[4]:.0f} |"
+                     f" {r[5]:.0f} | {err} | {r[7]} |")
+    md = "## Shard sweep: SOL-predicted vs HLO-measured wire bytes\n\n" \
+        + "\n".join(table) + "\n"
+    with open("shard_sweep_summary.md", "w") as f:
+        f.write(md)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(md)
+
+    if failures:
+        raise SystemExit("shard_sweep FAILED:\n  " + "\n  ".join(failures))
+    print(f"shard_sweep: all {len(rows)} cases passed (sharded == "
+          f"single-device, SOL wire bytes within 20% of the compiled "
+          f"HLO's, tuned shard never slower)")
+
+
+if __name__ == "__main__":
+    main()

@@ -96,6 +96,18 @@ class ModelConfig:
     #                                  rel-error cost the tuner checks
     #                                  against a budget.  REPRO_QUANT=off
     #                                  is the escape hatch.
+    tp_shards: int = 1               # tensor-parallel shards for the serve
+    #                                  decode path: >1 places params/cache
+    #                                  with sharding.plan.ShardPlan over a
+    #                                  (data=1, model=tp) mesh so GSPMD
+    #                                  runs the decode projections tensor-
+    #                                  parallel.  Requires tp local
+    #                                  devices; the SOL-predicted per-step
+    #                                  interconnect traffic is reported as
+    #                                  wire_bytes_per_step, and a measured
+    #                                  shard:decode_block veto ({"tp": 1})
+    #                                  in the tuning cache can turn
+    #                                  sharding off (never silently on).
 
     # ---- derived -------------------------------------------------------
     @property

@@ -320,6 +320,10 @@ def _try_fuse(p: KernelIR, c: KernelIR, pdims, cdims, mode: str, chip
             return None, "fold_rmsnorm", \
                 f"row-stat epilogues fold into gemm producers only " \
                 f"(got {p.op_name})", extras
+        if getattr(p, "tp", 1) > 1:
+            return None, "fold_rmsnorm", \
+                "producer is sharded (column shards split the output " \
+                "row the fold's statistics need)", extras
         if p.wdtype is not None:
             return None, "fold_rmsnorm", \
                 "producer has quantized weights (the single-N-tile " \
@@ -372,6 +376,10 @@ def _try_fuse(p: KernelIR, c: KernelIR, pdims, cdims, mode: str, chip
 
     # ---- (b) fused producer->consumer kernels ---------------------------
     if p.op_name == "rmsnorm" and c.op_name == "gemm":
+        if getattr(c, "tp", 1) > 1:
+            return None, "rmsnorm_gemm", \
+                "consumer is sharded (the fused rmsnorm_gemm kernel is " \
+                "single-device; the collective boundary stays)", extras
         if p.epilogues:
             return None, "rmsnorm_gemm", \
                 "producer norm has its own epilogue chain", extras
@@ -425,6 +433,11 @@ def _try_fuse(p: KernelIR, c: KernelIR, pdims, cdims, mode: str, chip
             extras
 
     if p.op_name == "gemm" and c.op_name == "gemm":
+        if getattr(p, "tp", 1) > 1 or getattr(c, "tp", 1) > 1:
+            return None, "gemm_gemm", \
+                "a stage is sharded (gemm_gemm keeps its intermediate in " \
+                "one device's VMEM; fusing across the collective would " \
+                "change the wire traffic the SOL plan priced)", extras
         if p.wdtype is not None or c.wdtype is not None:
             return None, "gemm_gemm", \
                 "a stage has quantized weights (gemm_gemm fusion is " \

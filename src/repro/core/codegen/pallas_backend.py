@@ -174,6 +174,33 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
         return ("\n".join(p for p in pre if p) + "\n\n"
                 + "\n".join(body) + "\n")
 
+    if op == "gemm" and ir.tp > 1:
+        # .with_sharding lowering: the shard_map collective path, strategy
+        # chosen by the SOL collective model in the ops wrapper
+        tile = _tile(ir)
+        cast_aux = "".join(f", {n}" for n in aux_names)
+        sh = f", tp={ir.tp}, axis={ir.tp_axis!r}"
+        if ir.wdtype:
+            per_ch = ir.wscale == "per_channel"
+            body += [
+                f"    a = a.astype({in_dt})",
+                f"    _wq = _kq.quantize_cached(b, {ir.wdtype!r},"
+                f" per_channel={per_ch})",
+                f"    return _kops.tp_gemm_q(a, _wq, None{cast_aux},"
+                f" tile={tile},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+                f"        out_dtype={out_dt}{sh})",
+            ]
+        else:
+            body += [
+                f"    a = a.astype({in_dt}); b = b.astype({in_dt})",
+                f"    return _kops.tp_gemm(a, b{cast_aux}, tile={tile},",
+                f"        epilogue={ep_arg}, aux_kinds={aux_kinds!r},",
+                f"        out_dtype={out_dt}{sh})",
+            ]
+        return ("\n".join(p for p in pre if p) + "\n\n"
+                + "\n".join(body) + "\n")
+
     if op in ("gemm", "batched_gemm", "grouped_gemm"):
         tile = _tile(ir)
         kop = "gemm" if op == "gemm" else "batched_gemm"

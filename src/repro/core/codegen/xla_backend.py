@@ -39,6 +39,8 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
     sig = ", ".join(list(prim) + aux)
     pre: List[str] = ["from repro.kernels import quant as _kq"
                       if ir.wdtype else "",
+                      "from repro.kernels import collective as _kcol"
+                      if ir.tp > 1 else "",
                       emit_custom_bindings(ir),
                       emit_epilogue_fn(ir, f"_epilogue_{fn_name}",
                                        kernel_write_casts=False)]
@@ -73,7 +75,26 @@ def generate_kernel_source(ir: KernelIR, fn_name: str = "kernel_fn") -> str:
 
     op = ir.op_name
     if op == "gemm":
-        if ir.wdtype:
+        if ir.tp > 1:
+            # .with_sharding: jnp.dot under shard_map, the strategy chosen
+            # by the same SOL plan as the Pallas path (dtype hints are the
+            # program's declared dtypes so both backends agree).  Operands
+            # pass at their STORAGE dtype — xla_tp_gemm widens to f32
+            # after the gather, so an int8 weight gathers at 1 B/elem and
+            # the result stays bitwise identical to the unsharded dot
+            sh = (f"tp={ir.tp}, axis={ir.tp_axis!r}, "
+                  f"highest={ir.precision == 'highest'}, "
+                  f"a_dtype={ir.dtypes.input!r}, "
+                  f"w_dtype={(ir.wdtype or ir.dtypes.input)!r}, "
+                  f"out_dtype={ir.dtypes.output!r}")
+            if ir.wdtype:
+                body += q_dot(
+                    "b", f"_kcol.xla_tp_gemm(a, _wq.values, {sh})")
+            else:
+                body += [
+                    f"    x = _kcol.xla_tp_gemm(a, b, {sh})",
+                ]
+        elif ir.wdtype:
             body += q_dot(
                 "b", f"jnp.dot(a.astype({f32}),"
                      f" _wq.values.astype({f32}){prec})")

@@ -44,6 +44,107 @@ from .validator import lower_and_validate
 BACKENDS = ("pallas", "xla")
 
 
+@dataclass
+class ShardDecision:
+    """One stage's ``.with_sharding`` lowering with its distributed SOL
+    bounds: the interconnect term sits beside compute/HBM so a
+    collective-bound kernel is flagged before it ever runs."""
+
+    op: str
+    stage: int
+    tp: int
+    axis: str
+    strategy: Optional[str] = None        # column | gather_w (SOL-chosen)
+    wire_bytes: Optional[float] = None    # total predicted bytes on wire
+    t_compute: Optional[float] = None
+    t_memory: Optional[float] = None
+    t_collective: Optional[float] = None
+    bottleneck: Optional[str] = None      # compute | memory | collective
+
+    @property
+    def collective_bound(self) -> Optional[bool]:
+        return None if self.bottleneck is None \
+            else self.bottleneck == "collective"
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "op": self.op, "stage": self.stage, "tp": self.tp,
+            "axis": self.axis, "strategy": self.strategy,
+            "wire_bytes": self.wire_bytes, "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+@dataclass
+class ShardingReport:
+    """Per-program distributed-SOL artifact (``CompiledKernel.sharding``):
+    every sharded stage with its strategy and three-term roofline.  Bounds
+    need concrete shapes, so they are filled only when ``compile_dsl`` got
+    ``shape_hints`` (strategy/tp are recorded either way)."""
+
+    decisions: List[ShardDecision] = field(default_factory=list)
+
+    @property
+    def max_tp(self) -> int:
+        return max((d.tp for d in self.decisions), default=1)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"max_tp": self.max_tp,
+                "decisions": [d.as_dict() for d in self.decisions]}
+
+
+def _shard_decision(k, stage: int, dims) -> ShardDecision:
+    dec = ShardDecision(op=k.op_name, stage=stage, tp=k.tp, axis=k.tp_axis)
+    if dims is not None and k.op_name == "gemm":
+        from ..sol.collectives import tp_matmul_roofline
+        from ..sol.hardware import get_chip
+
+        (m, kk) = dims["in"][0]
+        n = dims["out"][1]
+        res, plan = tp_matmul_roofline(
+            m, n, kk, tp=k.tp, a_dtype=k.dtypes.input,
+            w_dtype=k.wdtype or k.dtypes.input,
+            out_dtype=k.dtypes.output, chip=get_chip(k.arch))
+        dec.strategy = plan.strategy
+        dec.wire_bytes = plan.collective.total_wire_bytes
+        dec.t_compute = res.t_compute
+        dec.t_memory = res.t_memory
+        dec.t_collective = res.t_collective
+        dec.bottleneck = res.bottleneck
+    return dec
+
+
+def build_sharding_report(ir: "ProgramIR",
+                          shape_hints: Optional[Dict]
+                          ) -> Optional[ShardingReport]:
+    """Distributed-SOL report for a lowered (pre-fusion) program; None when
+    nothing is sharded.  Stage shapes come from the same driver-input
+    ``shape_hints`` the fusion pass proves VMEM residency with."""
+    from .ir import KernelIR as _K
+
+    if isinstance(ir, PipelineIR):
+        stages = ir.kernel_stages
+        if not any(k.tp > 1 for k in stages):
+            return None
+        from ..codegen.fusion import _infer_stage_shapes
+        shapes = _infer_stage_shapes(ir, shape_hints)
+        decisions = [
+            _shard_decision(k, i, shapes[i] if shapes else None)
+            for i, k in enumerate(stages) if k.tp > 1
+        ]
+        return ShardingReport(decisions=decisions)
+    if not isinstance(ir, _K) or ir.tp <= 1:
+        return None
+    dims = None
+    if shape_hints and "a" in shape_hints and "b" in shape_hints:
+        m, kk = tuple(shape_hints["a"])
+        n = tuple(shape_hints["b"])[1]
+        dims = {"in": [(m, kk)], "out": (m, n)}
+    return ShardingReport(decisions=[_shard_decision(ir, 0, dims)])
+
+
 def default_fuse_mode() -> str:
     """Fusion mode when ``compile_dsl`` gets ``fuse=None``: the
     REPRO_FUSION env var (off | auto | force), default auto."""
@@ -67,6 +168,10 @@ class CompiledKernel:
     # decision with its predicted bytes-saved headroom — what core/tune
     # treats as a tunable axis and the agent's cost model cites.
     fusion: Optional[FusionReport] = None
+    # Distributed-SOL artifact (.with_sharding programs only): per sharded
+    # stage, the SOL-chosen strategy and the interconnect bound alongside
+    # the compute/HBM bounds.
+    sharding: Optional[ShardingReport] = None
 
     @property
     def all_input_names(self) -> Tuple[str, ...]:
@@ -190,6 +295,7 @@ def compile_dsl(src: str, backend: str = "pallas", *,
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     t0 = time.perf_counter()
     ir, warnings = lower_dsl(src)
+    sharding_report = build_sharding_report(ir, shape_hints)
     fusion_report: Optional["FusionReport"] = None
     if isinstance(ir, PipelineIR):
         from ..codegen.fusion import fuse_pipeline
@@ -201,11 +307,24 @@ def compile_dsl(src: str, backend: str = "pallas", *,
     if use_cache:
         hit = _cache_get(cache_key)
         if hit is not None:
-            if fusion_report is not None and hit.fusion != fusion_report:
+            # a hint-less recompile must not downgrade a cached report
+            # whose SOL bounds were filled from shape_hints
+            def _has_bounds(rep: Optional[ShardingReport]) -> bool:
+                return rep is not None and any(
+                    d.wire_bytes is not None for d in rep.decisions)
+
+            keep_sharding = sharding_report
+            if not _has_bounds(sharding_report) \
+                    and _has_bounds(hit.sharding):
+                keep_sharding = hit.sharding
+            if (fusion_report is not None and hit.fusion != fusion_report) \
+                    or hit.sharding != keep_sharding:
                 # don't mutate the shared cached object: earlier holders
                 # keep their own report (same compiled fn either way)
                 import dataclasses as _dc
-                return _dc.replace(hit, fusion=fusion_report)
+                return _dc.replace(hit,
+                                   fusion=fusion_report or hit.fusion,
+                                   sharding=keep_sharding)
             return hit
 
     if isinstance(ir, PipelineIR):
@@ -264,6 +383,7 @@ def compile_dsl(src: str, backend: str = "pallas", *,
         compile_seconds=time.perf_counter() - t0,
         from_disk_cache=from_disk,
         fusion=fusion_report,
+        sharding=sharding_report,
     )
     if use_cache:
         _cache_put(cache_key, result)

@@ -53,6 +53,38 @@ single-N-tile ``fold_rmsnorm`` path decline quantized producers/consumers
 Escape hatch: ``REPRO_QUANT=off`` disables model/serve weight quantization
 and tuned-wdtype lookups process-wide (explicit ``.with_wdtype`` programs
 still compile — the flag guards the *implicit* quantized paths).
+
+Tensor-parallel sharding (the ``tp`` lever)
+-------------------------------------------
+
+``.with_sharding(tp=N[, axis=...])`` on a ``gemm`` shards the kernel over
+an N-device mesh axis (default ``model``) through the ``shard_map``
+collective path.  The *strategy* is chosen by the SOL collective model
+(``core/sol/collectives``) as the minimum predicted bytes on the wire:
+
+  * ``column`` — B and C shard over N, A replicated; the C shards are
+    all-gathered into the full output (wire: ``(tp-1)/tp * |C|``),
+  * ``gather_w`` — B's K rows shard at their STORAGE dtype and are
+    all-gathered before one local GEMM (wire: ``(tp-1)/tp * |B|``; with
+    ``.with_wdtype(int8)`` the int8 bytes cross the wire — 4x fewer than
+    the fp32 twin, the quantization lever composed with sharding).
+
+Both strategies keep every output column's K reduction on one device, so
+sharded output is BITWISE identical to the unsharded kernel on both
+backends.  The compile artifact records the distributed roofline per
+sharded stage (``CompiledKernel.sharding``): the interconnect bound sits
+beside compute/HBM and ``bottleneck == "collective"`` flags kernels where
+more shards only add wire time.  Divisibility (N or K by ``tp``) is
+enforced at call time with the wrapper twin of ``E_SHARD_DIV``; the VMEM
+working-set check prices the per-shard tile.  ``tp`` is also a tuning
+axis: ``shard:<op>`` records in the persistent cache carry measured tp
+verdicts (candidates from mesh divisors, SOL-pruned by predicted wire
+bytes); a ``{"tp": 1}`` record is the measured veto the serve engine
+honors for its ``ModelConfig.tp_shards`` decode path.
+
+Running a ``tp=N`` program needs N local devices: on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before importing
+jax (tests/CI use the same flag; see ``launch.mesh.make_smoke_mesh``).
 '''
 
 EBNF = r"""
@@ -113,12 +145,16 @@ ssd_scan_op        = "ssd_scan(" , "d_state=" , INTEGER , ")" ;
 configuration = dtype_config | wdtype_config | arch_config | tile_config
               | block_config | chunk_config | layout_config | stages_config
               | split_k_config | swap_config | vmem_config
-              | dimsem_config | precision_config ;
+              | dimsem_config | precision_config | sharding_config ;
 
 dtype_config   = ".with_dtype(" , "input=" , DTYPE , "," , "acc=" , DTYPE
                , "," , "output=" , DTYPE , ")" ;
 wdtype_config  = ".with_wdtype(" , QDTYPE , [ "," , "scale=" , SCALE_GRAN ]
                , ")" ;   (* quantized B operand, dequantized in-kernel *)
+sharding_config= ".with_sharding(" , "tp=" , INTEGER
+               , [ "," , "axis=" , MESH_AXIS ] , ")" ;
+               (* tensor-parallel shards over a mesh axis; the collective
+                  strategy is SOL-chosen by predicted wire bytes *)
 arch_config    = ".with_arch(" , ARCH , ")" ;
 tile_config    = ".with_tile(" , "m=" , INTEGER , "," , "n=" , INTEGER
                , "," , "k=" , INTEGER , ")" ;
@@ -157,6 +193,7 @@ DTYPE       = "fp32" | "float32" | "bf16" | "bfloat16" | "fp16" | "float16"
             | "int8" | "s8" | "int16" | "int32" ;
 QDTYPE      = "int8" | "fp8_e4m3" | "fp8_e5m2" ;
 SCALE_GRAN  = "per_channel" | "per_tensor" ;
+MESH_AXIS   = "model" | "data" | "pod" | "stage" ;
 ARCH        = "tpu_v4" | "tpu_v5e" | "tpu_v5p" ;
 MM_LAYOUT   = "RowMajor" | "ColumnMajor" ;
 REDUCE_KIND = "sum" | "max" | "mean" | "min" ;
@@ -198,6 +235,14 @@ STRING      = "'" , { ANY_CHAR - "'" } , "'" ;
  *
  * .with_swap(true): fp32 GEMM only benefit; REQUIRES square output
  *   (M == N) — runtime-checked, like the paper's operand-swap rule.
+ *
+ * .with_sharding: gemm only (E_SHARD_OP); tp >= 1 (E_SHARD_TP); axis in
+ *   model|data|pod|stage (E_SHARD_AXIS); incompatible with .with_swap
+ *   (E_SHARD_SWAP) and .with_split_k (E_SHARD_SPLITK — the row-parallel
+ *   strategy IS the distributed split-k); row-stat epilogues need the
+ *   whole output row one device no longer holds (E_SHARD_ROWSTAT).
+ *   N-or-K divisibility by tp is checked at call time (E_SHARD_DIV);
+ *   the VMEM working-set math prices the per-shard tile.
  *
  * .with_dimension_semantics: reduction grid dims must be 'arbitrary'
  *   (sequential); independent dims may be 'parallel' (Megacore).
@@ -247,6 +292,11 @@ ssd_scan(d_state=128).with_dtype(input=fp32, acc=fp32, output=fp32)
 # int8 weight-quantized GEMM: weight streams at 1 B/elem, dequant fused
 gemm().with_dtype(input=bf16, acc=fp32, output=bf16)
   .with_wdtype(int8).with_tile(m=256, n=256, k=512)
+
+# tensor-parallel GEMM over 4 model-axis shards; the collective strategy
+# (column vs weight gather) is SOL-chosen by predicted wire bytes
+gemm().with_dtype(input=bf16, acc=fp32, output=bf16)
+  .with_sharding(tp=4).with_tile(m=256, n=256, k=512)
 """
 
 

@@ -81,6 +81,11 @@ class KernelIR:
     # quantized to this 8-bit dtype and dequantized in-kernel; None = fp.
     wdtype: Optional[str] = None
     wscale: str = "per_channel"  # per_channel | per_tensor
+    # Tensor-parallel sharding (the .with_sharding lever): tp > 1 lowers
+    # the kernel through the shard_map collective path on a (tp,) mesh
+    # named tp_axis; the strategy is chosen by the SOL collective model.
+    tp: int = 1
+    tp_axis: str = "model"
     epilogues: Tuple[EpilogueIR, ...] = ()
     # Fused two-kernel stages (gemm_gemm): the producer's epilogue chain,
     # applied to the VMEM-resident intermediate between the two matmuls.
@@ -129,6 +134,8 @@ class KernelIR:
             parts.append(f"prec={self.precision}")
         if self.wdtype:
             parts.append(f"wdtype={self.wdtype}:{self.wscale}")
+        if self.tp > 1:
+            parts.append(f"tp={self.tp}@{self.tp_axis}")
         for ep in self.mid_epilogues:
             p = ",".join(f"{k}:{v}" for k, v in sorted(ep.params))
             e = f"|{ep.expr}|{sorted(ep.inputs)}" if ep.expr else ""

@@ -132,6 +132,10 @@ _cfg(ConfigDef("with_wdtype",
                 ParamSpec("scale", str, default="per_channel",
                           choices=("per_channel", "per_tensor"))),
                families=("matmul",)))
+_cfg(ConfigDef("with_sharding",
+               (ParamSpec("tp", int, required=True),
+                ParamSpec("axis", str, default="model")),
+               families=("matmul",)))
 _cfg(ConfigDef("with_arch", (ParamSpec("arch", str, required=True),)))
 _cfg(ConfigDef("with_tile",
                (ParamSpec("m", int, required=True),

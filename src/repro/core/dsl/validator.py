@@ -150,6 +150,8 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
     precision = "default"
     wdtype: Optional[str] = None
     wscale = "per_channel"
+    tp = 1
+    tp_axis = "model"
 
     for cfg in node.configs:
         cdef = CONFIGS.get(cfg.name)
@@ -242,6 +244,24 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
                 wd = None
             wdtype = wd
             wscale = str(params.get("scale", "per_channel"))
+        elif cfg.name == "with_sharding":
+            tp = int(params.get("tp", 1))
+            tp_axis = str(params.get("axis", "model"))
+            if tp < 1:
+                ctx.error("E_SHARD_TP",
+                          f"with_sharding tp={tp} must be >= 1",
+                          hint="tp=1 is the unsharded no-op; tp=N shards "
+                               "the kernel over an N-device mesh axis",
+                          line=cfg.line)
+                tp = 1
+            if tp_axis not in ("model", "data", "pod", "stage"):
+                ctx.error("E_SHARD_AXIS",
+                          f"unknown mesh axis {tp_axis!r}",
+                          hint="mesh axes: model (TP, the default), data, "
+                               "pod, stage — matching launch.mesh / "
+                               "sharding.rules",
+                          line=cfg.line)
+                tp_axis = "model"
 
     # ---- required bindings ------------------------------------------------
     if dtypes is None:
@@ -304,6 +324,42 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
                       hint="the single-N-tile gemm_rmsnorm path is "
                            "fp-only; keep the norm as its own stage",
                       line=node.line)
+
+    # ---- sharding gating ----------------------------------------------
+    if tp > 1:
+        if node.op.name != "gemm":
+            ctx.error("E_SHARD_OP",
+                      f".with_sharding(tp={tp}) currently lowers gemm "
+                      f"only, not {node.op.name}",
+                      hint="batched/grouped matmuls parallelize over their "
+                           "group dim via the data axis; shard the inner "
+                           "gemm instead",
+                      line=node.line)
+        if swap:
+            ctx.error("E_SHARD_SWAP",
+                      "with_swap(true) is incompatible with .with_sharding",
+                      hint="the operand swap transposes A/B out of the "
+                           "slots the collective strategies shard",
+                      line=node.line)
+        if split_k.mode != "none":
+            ctx.error("E_SHARD_SPLITK",
+                      "with_split_k is incompatible with .with_sharding",
+                      hint="both levers carve the K loop; the row-parallel "
+                           "strategy IS the distributed split-k",
+                      line=node.line)
+        if any(EPILOGUES.get(ep.name) is not None
+               and EPILOGUES[ep.name].row_stat for ep in node.epilogues):
+            ctx.error("E_SHARD_ROWSTAT",
+                      "row-stat epilogues (rmsnorm) cannot fuse into a "
+                      "sharded GEMM",
+                      hint="row statistics need the whole output row in "
+                           "one tile; column sharding splits the row "
+                           "across devices — keep the norm as its own "
+                           "stage",
+                      line=node.line)
+        # the VMEM working-set check below already prices the PER-SHARD
+        # tile: each device pipelines the same (m, n, k) tile over its own
+        # shard, so sharding never widens the on-chip footprint.
 
     # ---- stages ------------------------------------------------------
     if not (1 <= stages <= 8):
@@ -492,6 +548,8 @@ def _lower_kernel(ctx: _Ctx, node: KernelNode) -> Optional[KernelIR]:
         precision=precision,
         wdtype=wdtype,
         wscale=wscale,
+        tp=tp,
+        tp_axis=tp_axis,
         epilogues=tuple(epilogues),
     )
 

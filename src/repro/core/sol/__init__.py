@@ -2,14 +2,19 @@
 HLO-derived summaries, structured reports."""
 
 from .hardware import (ChipSpec, SystemSpec, get_chip, canon_dtype,
-                       dtype_bytes, DEFAULT_CHIP, TPU_V5E, TPU_V5P, TPU_V4,
-                       H100, LANE_MULTIPLE, SUBLANE_MULTIPLE)
+                       dtype_bytes, mesh_axis_size, DEFAULT_CHIP, TPU_V5E,
+                       TPU_V5P, TPU_V4, H100, LANE_MULTIPLE,
+                       SUBLANE_MULTIPLE)
+from .collectives import (CollectiveCost, TPPlan, collective_cost,
+                          decode_step_collectives,
+                          decode_wire_bytes_per_step, plan_tp_gemm,
+                          tp_matmul_roofline, wire_bytes)
 from .characterize import (TensorSpec, OpSpec, Characterization, gemm_flops,
                            gemm_op, elementwise_op, reduction_op, softmax_op,
                            norm_op, attention_flops, attention_op,
                            conv1d_flops, conv1d_op, conv2d_flops,
                            ssd_scan_flops, moe_ffn_flops)
-from .roofline import RooflineResult, roofline
+from .roofline import RooflineResult, distributed_roofline, roofline
 from .hlo_analysis import (CollectiveStats, CompiledSummary,
                            parse_collective_bytes, summarize_compiled,
                            count_recompute_ops)
@@ -23,7 +28,10 @@ __all__ = [
     "elementwise_op", "reduction_op", "softmax_op", "norm_op",
     "attention_flops", "attention_op", "conv1d_flops", "conv1d_op",
     "conv2d_flops", "ssd_scan_flops", "moe_ffn_flops",
-    "RooflineResult", "roofline",
+    "RooflineResult", "distributed_roofline", "roofline",
+    "CollectiveCost", "TPPlan", "collective_cost", "mesh_axis_size",
+    "decode_step_collectives", "decode_wire_bytes_per_step",
+    "plan_tp_gemm", "tp_matmul_roofline", "wire_bytes",
     "CollectiveStats", "CompiledSummary", "parse_collective_bytes",
     "summarize_compiled", "count_recompute_ops",
     "SOLReport", "make_report",

@@ -1,0 +1,323 @@
+"""First-principles collective cost model — the distributed SOL plane.
+
+The single-chip roofline bounds a kernel by peak compute and HBM bandwidth;
+once an op is sharded, a third bound appears: bytes that must cross the
+interconnect.  This module models the ring algorithms XLA lowers collectives
+to on the TPU torus with the standard alpha-beta form
+
+    t = steps * link_latency  +  wire_bytes_per_device / link_bandwidth
+
+and derives, per collective kind, the bytes each device must put on the wire
+for a logical payload of ``payload_bytes``:
+
+    all_gather      (n-1)/n * payload      (each shard hops n-1 times)
+    reduce_scatter  (n-1)/n * payload
+    all_reduce      2(n-1)/n * payload     (reduce-scatter + all-gather)
+    all_to_all      (n-1)/n^2 * payload    (each device keeps its own slice)
+
+On top of that sit the tensor-parallel GEMM *strategies* the sharded kernels
+in ``repro.kernels.collective`` implement, with their wire bytes at the
+operand STORAGE dtype — an int8 weight gather moves 4x fewer bytes than its
+fp32 twin, which is exactly the composition of the quantization lever (PR 4)
+with the sharding lever this module prices.
+
+``tp_matmul_roofline`` returns the three-term distributed roofline for one
+sharded matmul (``RooflineResult`` already carries ``t_collective``), so the
+DSL compile artifact, the ``shard:<op>`` tuning axis, and the serve engine's
+``wire_bytes_per_step`` telemetry all cite one model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+from .hardware import ChipSpec, DEFAULT_CHIP, dtype_bytes
+from .roofline import RooflineResult
+
+COLLECTIVE_KINDS = ("all_gather", "reduce_scatter", "all_reduce",
+                    "all_to_all")
+
+# Tensor-parallel GEMM strategies (kernels/collective.py implements each):
+#   column    B column(N)-sharded, A replicated; local GEMM, all-gather C
+#   row       contraction(K)-sharded A and B; partial C, reduce-scatter
+#   gather_w  B row(K)-sharded at its STORAGE dtype; all-gather B (int8
+#             weights move 1 B/elem on the wire), one local full GEMM
+TP_STRATEGIES = ("column", "row", "gather_w")
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    """Predicted cost of one collective over ``num_devices`` ring members."""
+
+    kind: str
+    payload_bytes: float          # logical (full-tensor) bytes
+    wire_bytes: float             # bytes ON THE WIRE per device
+    steps: int                    # ring steps (latency hops)
+    seconds: float                # alpha-beta predicted time
+    num_devices: int
+    link: str = "ici"             # ici | dcn
+
+    @property
+    def total_wire_bytes(self) -> float:
+        """Aggregate bytes crossing links across the whole ring — what the
+        serve telemetry sums into ``wire_bytes_per_step``."""
+        return self.wire_bytes * self.num_devices
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "kind": self.kind, "payload_bytes": self.payload_bytes,
+            "wire_bytes": self.wire_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+            "steps": self.steps, "seconds": self.seconds,
+            "num_devices": self.num_devices, "link": self.link,
+        }
+
+
+def wire_bytes(kind: str, payload_bytes: float, num_devices: int) -> float:
+    """Per-device bytes on the wire for one collective (ring algorithm)."""
+    n = max(int(num_devices), 1)
+    if n <= 1:
+        return 0.0
+    if kind in ("all_gather", "reduce_scatter"):
+        return payload_bytes * (n - 1) / n
+    if kind == "all_reduce":
+        return 2.0 * payload_bytes * (n - 1) / n
+    if kind == "all_to_all":
+        return payload_bytes * (n - 1) / (n * n)
+    raise KeyError(
+        f"unknown collective kind {kind!r}; known: {COLLECTIVE_KINDS}")
+
+
+def ring_steps(kind: str, num_devices: int) -> int:
+    n = max(int(num_devices), 1)
+    if n <= 1:
+        return 0
+    if kind == "all_reduce":
+        return 2 * (n - 1)            # reduce-scatter phase + gather phase
+    if kind == "all_to_all":
+        return n - 1
+    return n - 1
+
+
+def collective_cost(kind: str, payload_bytes: float, num_devices: int, *,
+                    chip: Optional[ChipSpec] = None,
+                    link: str = "ici") -> CollectiveCost:
+    """alpha-beta cost of one collective on the chip's interconnect."""
+    chip = chip or DEFAULT_CHIP
+    if link == "dcn":
+        bw, lat = chip.dcn_bandwidth, chip.dcn_latency
+    else:
+        bw, lat = chip.ici_bandwidth, chip.ici_latency
+    wb = wire_bytes(kind, payload_bytes, num_devices)
+    steps = ring_steps(kind, num_devices)
+    return CollectiveCost(
+        kind=kind, payload_bytes=float(payload_bytes), wire_bytes=wb,
+        steps=steps, seconds=steps * lat + wb / bw,
+        num_devices=max(int(num_devices), 1), link=link)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel GEMM strategy planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TPPlan:
+    """The SOL-chosen sharding strategy for one ``C = A @ B`` matmul."""
+
+    strategy: str                 # column | row | gather_w
+    tp: int
+    collective: CollectiveCost    # the strategy's single collective
+    shardable: bool = True        # divisibility held for this strategy
+    reason: str = ""
+
+    @property
+    def wire_bytes(self) -> float:
+        return self.collective.wire_bytes
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "strategy": self.strategy, "tp": self.tp,
+            "shardable": self.shardable, "reason": self.reason,
+            "collective": self.collective.as_dict(),
+        }
+
+
+def _strategy_collective(strategy: str, m: int, n: int, k: int, tp: int, *,
+                         a_dtype: str, w_dtype: str, out_dtype: str,
+                         chip: ChipSpec) -> CollectiveCost:
+    if strategy == "column":
+        # C shards (M, N/tp) all-gathered into the full output
+        return collective_cost("all_gather", m * n * dtype_bytes(out_dtype),
+                               tp, chip=chip)
+    if strategy == "row":
+        # partial (M, N) outputs reduced across the K shards
+        return collective_cost("all_reduce", m * n * dtype_bytes(out_dtype),
+                               tp, chip=chip)
+    if strategy == "gather_w":
+        # the weight is gathered at its STORAGE dtype: int8/fp8 shards put
+        # 1 B/elem on the wire where the fp32 twin puts 4
+        return collective_cost("all_gather", k * n * dtype_bytes(w_dtype),
+                               tp, chip=chip)
+    raise KeyError(
+        f"unknown TP strategy {strategy!r}; known: {TP_STRATEGIES}")
+
+
+def _strategy_divisible(strategy: str, m: int, n: int, k: int,
+                        tp: int) -> bool:
+    if strategy == "column":
+        return n % tp == 0
+    if strategy == "row":
+        return k % tp == 0
+    return k % tp == 0            # gather_w shards the weight's K rows
+
+
+def plan_tp_gemm(m: int, n: int, k: int, *, tp: int,
+                 strategy: Optional[str] = None,
+                 a_dtype: str = "bf16", w_dtype: Optional[str] = None,
+                 out_dtype: Optional[str] = None,
+                 chip: Optional[ChipSpec] = None) -> TPPlan:
+    """Pick (or cost a requested) TP strategy for one matmul by predicted
+    bytes on the wire.  ``w_dtype`` is the weight's storage dtype — passing
+    "int8" prices the quantized gather.  Strategies whose shard dimension
+    does not divide are skipped (an explicit request for one returns a plan
+    with ``shardable=False`` so callers can surface the divisibility
+    error)."""
+    chip = chip or DEFAULT_CHIP
+    a_dtype = a_dtype or "bf16"
+    w_dtype = w_dtype or a_dtype
+    out_dtype = out_dtype or a_dtype
+    tp = max(int(tp), 1)
+
+    def cost(s: str) -> CollectiveCost:
+        return _strategy_collective(s, m, n, k, tp, a_dtype=a_dtype,
+                                    w_dtype=w_dtype, out_dtype=out_dtype,
+                                    chip=chip)
+
+    if strategy is not None:
+        ok = _strategy_divisible(strategy, m, n, k, tp)
+        return TPPlan(strategy=strategy, tp=tp, collective=cost(strategy),
+                      shardable=ok,
+                      reason="requested" if ok else
+                      f"{strategy}: shard dim not divisible by tp={tp}")
+    # auto: cheapest wire among the full-output-preserving strategies
+    # (column / gather_w); "row" leaves a partial sum and is only chosen
+    # explicitly by pipeline consumers that keep the output sharded.
+    best: Optional[TPPlan] = None
+    for s in ("column", "gather_w"):
+        if not _strategy_divisible(s, m, n, k, tp):
+            continue
+        c = cost(s)
+        if best is None or c.wire_bytes < best.collective.wire_bytes:
+            best = TPPlan(strategy=s, tp=tp, collective=c,
+                          reason="min predicted wire bytes")
+    if best is None:
+        return TPPlan(strategy="column", tp=tp, collective=cost("column"),
+                      shardable=False,
+                      reason=f"no strategy divides (m={m}, n={n}, k={k}) "
+                             f"by tp={tp}")
+    return best
+
+
+def tp_matmul_hbm_bytes(m: int, n: int, k: int, *, tp: int, strategy: str,
+                        a_dtype: str, w_dtype: str,
+                        out_dtype: str) -> float:
+    """Aggregate best-case HBM bytes across all ``tp`` shards of one TP
+    matmul (each operand read once per device that touches it)."""
+    ab, wb, ob = (dtype_bytes(a_dtype), dtype_bytes(w_dtype),
+                  dtype_bytes(out_dtype))
+    if strategy == "column":
+        # every device reads full A, its W column shard, writes its C shard
+        return tp * m * k * ab + k * n * wb + m * n * ob
+    if strategy == "row":
+        # K-sharded A and W read once total; every device writes a partial C
+        return m * k * ab + k * n * wb + tp * m * n * ob
+    if strategy == "gather_w":
+        # every device re-reads the gathered weight and full A, one C write
+        return tp * (m * k * ab + k * n * wb) + m * n * ob
+    raise KeyError(f"unknown TP strategy {strategy!r}")
+
+
+def tp_matmul_roofline(m: int, n: int, k: int, *, tp: int,
+                       strategy: Optional[str] = None,
+                       a_dtype: str = "bf16",
+                       w_dtype: Optional[str] = None,
+                       out_dtype: Optional[str] = None,
+                       chip: Optional[ChipSpec] = None
+                       ) -> Tuple[RooflineResult, TPPlan]:
+    """Three-term distributed roofline for one sharded matmul: compute and
+    HBM terms over ``tp`` chips plus the strategy's interconnect term.
+    ``bottleneck == "collective"`` flags a collective-bound kernel."""
+    chip = chip or DEFAULT_CHIP
+    w_dtype = w_dtype or a_dtype
+    out_dtype = out_dtype or a_dtype
+    plan = plan_tp_gemm(m, n, k, tp=tp, strategy=strategy, a_dtype=a_dtype,
+                        w_dtype=w_dtype, out_dtype=out_dtype, chip=chip)
+    hbm = tp_matmul_hbm_bytes(m, n, k, tp=plan.tp, strategy=plan.strategy,
+                              a_dtype=a_dtype, w_dtype=w_dtype,
+                              out_dtype=out_dtype)
+    # RooflineResult divides by num_chips: feed it totals-across-chips
+    result = RooflineResult(
+        flops=2.0 * m * n * k,
+        hbm_bytes=hbm,
+        collective_bytes=plan.collective.total_wire_bytes,
+        num_chips=plan.tp,
+        dtype=a_dtype,
+        chip=chip,
+    )
+    return result, plan
+
+
+# ---------------------------------------------------------------------------
+# Serve decode: analytic per-step wire traffic for a TP-sharded model
+# ---------------------------------------------------------------------------
+
+def decode_step_collectives(cfg, *, tp: int, batch: int = 1,
+                            chip: Optional[ChipSpec] = None
+                            ) -> Sequence[CollectiveCost]:
+    """The collectives ONE tensor-parallel decode step issues, Megatron
+    accounting: each attention block and each MLP block ends in an
+    all-reduce of the (batch, 1, d_model) activation (the row-parallel
+    output projection), SSM blocks in one, and the vocab-sharded lm head
+    all-gathers the (batch, 1, padded_vocab) logits row for sampling."""
+    chip = chip or DEFAULT_CHIP
+    tp = max(int(tp), 1)
+    if tp <= 1:
+        return []
+    act_b = dtype_bytes(cfg.compute_dtype)
+    resid = batch * 1 * cfg.d_model * act_b
+    out: list = []
+
+    def block_reduces(n: int):
+        for _ in range(int(n)):
+            out.append(collective_cost("all_reduce", resid, tp, chip=chip))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio", "vlm"):
+        n_attn = cfg.num_layers
+        n_mlp = cfg.num_layers
+        if fam == "audio":
+            n_attn += cfg.num_layers          # cross-attention blocks
+        if fam == "vlm" and cfg.cross_attn_every:
+            n_attn += cfg.num_layers // cfg.cross_attn_every
+            n_mlp += cfg.num_layers // cfg.cross_attn_every
+        block_reduces(n_attn + n_mlp)
+    elif fam == "ssm":
+        block_reduces(cfg.num_layers)         # out-proj all-reduce per layer
+    elif fam == "hybrid":
+        g = (cfg.num_layers // cfg.shared_attn_every
+             if cfg.shared_attn_every else 0)
+        block_reduces(cfg.num_layers + 2 * g)
+    logits = batch * 1 * cfg.padded_vocab * act_b
+    out.append(collective_cost("all_gather", logits, tp, chip=chip))
+    return out
+
+
+def decode_wire_bytes_per_step(cfg, *, tp: int, batch: int = 1,
+                               chip: Optional[ChipSpec] = None) -> float:
+    """Total predicted bytes crossing the interconnect per decode step —
+    what the serve engine reports as ``wire_bytes_per_step``."""
+    return float(sum(c.total_wire_bytes
+                     for c in decode_step_collectives(cfg, tp=tp,
+                                                      batch=batch,
+                                                      chip=chip)))

@@ -64,6 +64,16 @@ def ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def mesh_axis_size(mesh, name: str) -> int:
+    """Size of a named mesh axis, 1 when the axis is absent.
+
+    The single shared copy of the lookup ``sharding.rules`` and its callers
+    used to clone as private ``_axis_size`` helpers.  Duck-typed over
+    anything with ``axis_names`` / ``shape`` (a ``jax.sharding.Mesh``), so
+    this module stays importable without touching jax device state."""
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
 # Sublane packing: the second-minor dimension of a VMEM tile must be a
 # multiple of this (the minor dimension must be a multiple of 128 lanes).
 SUBLANE_MULTIPLE: Dict[str, int] = {
@@ -92,6 +102,10 @@ class ChipSpec:
     max_clock_ghz: float
     generation: int               # for arch gating, e.g. 5 for v5e
     notes: str = ""
+    # per-hop link latencies (seconds): the alpha term of the alpha-beta
+    # collective model core/sol/collectives uses for ring-step time
+    ici_latency: float = 1e-6
+    dcn_latency: float = 10e-6
 
     @property
     def clock_scale(self) -> float:

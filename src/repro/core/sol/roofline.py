@@ -72,6 +72,12 @@ class RooflineResult:
     def compute_bound(self) -> bool:
         return self.arithmetic_intensity >= self.ridge_point
 
+    @property
+    def collective_bound(self) -> bool:
+        """True when the interconnect term dominates — the sharding lever's
+        stop condition (widening tp past this point only adds wire time)."""
+        return self.bottleneck == "collective"
+
     def fraction_of_roofline(self, measured_seconds: float) -> float:
         """How close a measured runtime is to SOL (1.0 == at the bound)."""
         if measured_seconds <= 0:
@@ -169,6 +175,27 @@ def matmul_roofline(m: int, n: int, k: int, *, a_dtype: str = "bf16",
                                    batch=batch),
         num_chips=num_chips,
         dtype=a_dtype,
+        chip=chip or DEFAULT_CHIP,
+    )
+
+
+def distributed_roofline(flops: float, hbm_bytes: float, collectives, *,
+                         num_chips: int = 1, dtype: str = "bf16",
+                         chip: Optional[ChipSpec] = None) -> RooflineResult:
+    """Three-term roofline for a sharded workload: compute and HBM totals
+    across ``num_chips`` plus the interconnect bound from a sequence of
+    ``sol.collectives.CollectiveCost`` entries (their aggregate on-wire
+    bytes).  ``result.collective_bound`` flags kernels the interconnect
+    dominates."""
+    ici = sum(c.total_wire_bytes for c in collectives if c.link == "ici")
+    dcn = sum(c.total_wire_bytes for c in collectives if c.link == "dcn")
+    return RooflineResult(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        collective_bytes=float(ici),
+        dcn_bytes=float(dcn),
+        num_chips=num_chips,
+        dtype=dtype,
         chip=chip or DEFAULT_CHIP,
     )
 

@@ -26,9 +26,10 @@ from .candidates import (Candidate, DEFAULT_ATTN_BLOCK, DEFAULT_GEMM_TILE,
                          DEFAULT_BATCHED_TILE, DEFAULT_NORM_BLOCK_ROWS,
                          DEFAULT_SSD_CHUNK, QUANT_WDTYPES,
                          enumerate_candidates, fusion_candidates,
-                         quant_candidates)
+                         quant_candidates, shard_candidates)
 from .runner import TuneResult, measure, tune_op
-from .sol_prune import predict_seconds, prune, prune_quant, rank_candidates
+from .sol_prune import (predict_seconds, prune, prune_quant, prune_shard,
+                        rank_candidates)
 
 __all__ = [
     "Candidate", "TuneResult", "TuningCache", "TuningRecord",
@@ -38,9 +39,11 @@ __all__ = [
     "global_cache", "lookup", "make_key", "measure", "predict_seconds",
     "prune", "prune_quant", "rank_candidates",
     "record_fusion_measurement", "record_quant_measurement",
-    "seed_hint_for_problem", "shape_bucket",
+    "record_shard_measurement", "seed_hint_for_problem", "shape_bucket",
+    "shard_candidates", "shard_report", "prune_shard",
     "tune_op", "tuned_attention_block", "tuned_fusion", "tuned_gemm_tile",
-    "tuned_norm_block_rows", "tuned_ssd_chunk", "tuned_wdtype",
+    "tuned_norm_block_rows", "tuned_shard", "tuned_ssd_chunk",
+    "tuned_wdtype",
     "tuning_disabled", "DEFAULT_ATTN_BLOCK", "DEFAULT_BATCHED_TILE",
     "DEFAULT_GEMM_TILE", "DEFAULT_NORM_BLOCK_ROWS", "DEFAULT_SSD_CHUNK",
     "DEFAULT_QUANT_BUDGETS", "QUANT_WDTYPES",
@@ -213,6 +216,60 @@ def quant_report(op: str, dims, dtype, *, wdtype: str = "int8",
         "budget": budget if budget is not None
         else quant_error_budget(wdtype),
         "rel_err": rel_err, "verdict": verdict,
+    }
+
+
+def tuned_shard(op: str, dims, dtype) -> Optional[int]:
+    """Sharding as a tunable axis: the measured tensor-parallel width for
+    one ``shard:<op>`` shape bucket.  Returns the tp to adopt, 1 for an
+    explicit measured veto (sharding measured slower than unsharded — the
+    ``{"tp": 1}`` analogue of ``{"wdtype": "none"}``), or None when
+    unmeasured."""
+    best = lookup(f"shard:{op}", dims, dtype)
+    if best is not None and "tp" in best:
+        return int(best["tp"])
+    return None
+
+
+def record_shard_measurement(op: str, dims, dtype, *, tp_best: int,
+                             wire_bytes: Optional[float] = None,
+                             trials=(), backend: str = "pallas") -> None:
+    """Persist a measured sharding verdict (written by
+    ``benchmarks/shard_sweep.py``).  ``tp_best=1`` is the veto — recorded
+    when every sharded candidate measured slower than unsharded, exactly
+    like ``quant:<op>`` records ``{"wdtype": "none"}``."""
+    if tuning_disabled():
+        return
+    best: Dict[str, object] = {"tp": int(tp_best)}
+    if wire_bytes is not None:
+        best["wire_bytes"] = float(wire_bytes)
+    rec = TuningRecord(
+        op=f"shard:{op}", shape_bucket=shape_bucket(dims),
+        dtype=canon_dtype_name(dtype), backend=backend,
+        device_kind=device_kind(), best=best, trials=list(trials))
+    global_cache().put(rec)
+
+
+def shard_report(op: str, dims, dtype, *, tp: int,
+                 w_dtype: Optional[str] = None) -> Dict[str, object]:
+    """Distributed-SOL headroom + cached verdict for one op's sharding
+    decision.  ``dims`` is the matmul's (m, n, k)."""
+    from ..sol.collectives import tp_matmul_roofline
+
+    m, n, k = dims
+    result, plan = tp_matmul_roofline(m, n, k, tp=tp, a_dtype=dtype,
+                                      w_dtype=w_dtype or dtype)
+    best = None if tuning_disabled() else lookup(f"shard:{op}", dims, dtype)
+    verdict = "unmeasured"
+    if best is not None and "tp" in best:
+        verdict = "vetoed" if int(best["tp"]) <= 1 else f"kept:{best['tp']}"
+    return {
+        "op": op, "dims": tuple(dims), "tp": tp,
+        "strategy": plan.strategy,
+        "wire_bytes": plan.collective.total_wire_bytes,
+        "t_sol_s": result.t_sol, "bottleneck": result.bottleneck,
+        "collective_bound": result.collective_bound,
+        "verdict": verdict,
     }
 
 

@@ -13,7 +13,7 @@ sweep can never pick something worse than the shipped static config.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..sol.hardware import (LANE_MULTIPLE, SUBLANE_MULTIPLE, ChipSpec,
                             TPU_V5E, ceil_to as _ceil_to, dtype_bytes)
@@ -161,6 +161,26 @@ def fusion_candidates(pattern: str) -> List[Candidate]:
 QUANT_WDTYPES = ("int8", "fp8_e4m3")
 
 
+def shard_candidates(op: str = "gemm", *,
+                     n_devices: Optional[int] = None) -> List[Candidate]:
+    """Sharding as a tunable axis: ``shard:<op>`` records carry the
+    measured tensor-parallel width for one shape bucket.  Candidates are
+    the divisors of the device count (a tp that does not divide the mesh
+    cannot form a ring); candidate 0 is tp=1 — the unsharded default a
+    sweep can never regress."""
+    if n_devices is None:
+        try:
+            import jax
+
+            n_devices = len(jax.devices())
+        except Exception:
+            n_devices = 1
+    n = max(int(n_devices), 1)
+    key = f"shard:{op}"
+    tps = [d for d in range(1, n + 1) if n % d == 0]
+    return [_cand(key, tp=t) for t in tps]
+
+
 def quant_candidates(op: str = "gemm") -> List[Candidate]:
     """Weight quantization as a tunable axis: ``quant:<op>`` records carry
     the measured wdtype verdict for one shape bucket.  Candidate 0 keeps
@@ -183,11 +203,14 @@ def enumerate_candidates(op: str, shape: Sequence[int], *,
       norm:                (rows, d)
       fusion:<pattern>:    the edge's dims tuple
       quant:<op>:          the matmul's (m, n, k)
+      shard:<op>:          the matmul's (m, n, k)
     """
     if op.startswith("fusion:"):
         return fusion_candidates(op.split(":", 1)[1])
     if op.startswith("quant:"):
         return quant_candidates(op.split(":", 1)[1])
+    if op.startswith("shard:"):
+        return shard_candidates(op.split(":", 1)[1])
     if op == "gemm":
         m, n, k = shape
         return gemm_candidates(m, n, k, dtype=dtype, chip=chip)

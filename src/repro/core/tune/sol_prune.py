@@ -117,6 +117,41 @@ def sol_rank_payload(ranked: Sequence[Tuple[Candidate, Optional[float]]]
     return [{"config": c.as_dict(), "predicted_s": p} for c, p in ranked]
 
 
+def prune_shard(shape: Sequence[int], candidates: Sequence[Candidate], *,
+                dtype: str = "bf16", w_dtype: Optional[str] = None,
+                chip: ChipSpec = TPU_V5E
+                ) -> List[Tuple[Candidate, Optional[float]]]:
+    """SOL pruning for the sharding axis: keep only tp candidates whose
+    predicted three-term roofline (compute + HBM + INTERCONNECT,
+    ``sol.collectives.tp_matmul_roofline``) beats the unsharded bound —
+    a shape whose wire bytes dominate never reaches the measured runner.
+    The unsharded default (candidate 0, tp=1) is always kept.  Returns
+    (candidate, predicted t_sol seconds) pairs."""
+    from ..sol.collectives import tp_matmul_roofline
+    from ..sol.roofline import matmul_roofline
+
+    m, n, k = shape
+    base = matmul_roofline(m, n, k, a_dtype=dtype,
+                           w_dtype=w_dtype or dtype, chip=chip)
+    kept: List[Tuple[Candidate, Optional[float]]] = []
+    for cand in candidates:
+        tp = int(cand.as_dict().get("tp", 1))
+        if tp <= 1:
+            kept.append((cand, base.t_sol))     # unsharded: always measured
+            continue
+        result, plan = tp_matmul_roofline(
+            m, n, k, tp=tp, a_dtype=dtype, w_dtype=w_dtype or dtype,
+            chip=chip)
+        # alpha-beta collective seconds (ring-step latency included — a
+        # skinny decode matmul is latency-bound long before it is
+        # bandwidth-bound, and the bytes-only roofline term misses that)
+        t_pred = max(result.t_compute, result.t_memory,
+                     plan.collective.seconds)
+        if plan.shardable and t_pred < base.t_sol:
+            kept.append((cand, t_pred))
+    return kept
+
+
 def prune_quant(shape: Sequence[int], candidates: Sequence[Candidate], *,
                 dtype: str = "bf16", min_saved_frac: float = 0.05,
                 chip: ChipSpec = TPU_V5E

@@ -1,2 +1,2 @@
 """Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles."""
-from . import ops, quant, ref
+from . import collective, ops, quant, ref

@@ -1,0 +1,455 @@
+"""shard_map-based collective-fused tensor-parallel GEMM kernels.
+
+The sharding counterparts of the fusion (PR 3) and quantization (PR 4)
+kernels: each pattern pairs ONE collective with the local Pallas GEMM so
+the bytes on the wire are exactly what the SOL collective model
+(``core.sol.collectives``) prices:
+
+  all_gather_gemm       sequence-parallel -> column-parallel: A arrives
+                        row(M)-sharded, is all-gathered once, and each
+                        device multiplies against its N-shard of B
+  gemm_reduce_scatter   row-parallel: A and B arrive contraction(K)-
+                        sharded; each device computes a partial (M, N)
+                        product that is reduce-scattered over M
+  all_gather_gemm_q     weight-gather TP with a QUANTIZED weight: the
+                        K-sharded int8/fp8 values are all-gathered at
+                        1 B/elem (4x fewer wire bytes than fp32), widened
+                        on-chip, and dequantized at writeback — the PR-4
+                        lever composed with the sharding lever
+
+``tp_gemm`` / ``tp_gemm_q`` are the strategy dispatchers the DSL's
+``.with_sharding(tp=N)`` lowering calls: the strategy (column vs weight
+gather) defaults to the SOL plan's minimum-wire choice and both preserve
+full-array in/out semantics, so sharded output is comparable (bitwise,
+for the column strategy) against the unsharded oracle.
+
+Meshes are 1-D ``(tp,)`` over the first ``tp`` local devices (cached).
+On CPU runs, force a multi-device host platform with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE importing
+jax (``launch.mesh.make_smoke_mesh`` honors the same flag).
+
+The local GEMM inside ``shard_map`` is the ordinary ``ops.gemm`` /
+``ops.gemm_q`` Pallas path (``check_rep=False`` — pallas_call has no
+replication rule), so sharded and unsharded runs share one kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .quant import QuantTensor
+
+AuxKind = str
+
+_TP_MESH_AXES = ("model", "data", "pod", "stage")
+
+
+def device_count() -> int:
+    """Local devices available for a TP mesh."""
+    return len(jax.devices())
+
+
+def require_devices(tp: int) -> int:
+    """The ONE devices-vs-tp check (tp_mesh, launch.mesh.make_tp_mesh and
+    the serve engine's explicit-request path all route here).  Returns the
+    local device count; raises with the XLA_FLAGS recipe otherwise."""
+    n = device_count()
+    if tp > n:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices, found {n}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} "
+            f"before importing jax (see launch.mesh.make_smoke_mesh)")
+    return n
+
+
+@functools.lru_cache(maxsize=16)
+def tp_mesh(tp: int, axis: str = "model") -> Mesh:
+    """A cached 1-D ``(tp,)`` mesh named ``axis`` over the first ``tp``
+    devices — the runtime mesh behind ``.with_sharding(tp=N)``."""
+    require_devices(tp)
+    return Mesh(jax.devices()[:tp], (axis,))
+
+
+def _check_div(what: str, size: int, tp: int) -> None:
+    if size % tp:
+        raise ValueError(
+            f"sharded GEMM: {what}={size} is not divisible by tp={tp} "
+            f"(the validator's E_SHARD_DIV rule; pad the dim or lower tp)")
+
+
+def _aux_specs(aux_kinds: Sequence[AuxKind], axis: str,
+               shard_n: bool) -> list:
+    """Per-shard specs for epilogue aux blocks.  Under the column strategy
+    (``shard_n``) anything spanning the N axis is sharded with the output;
+    row vectors (M axis) and everything under gather_w stay replicated."""
+    specs = []
+    for kind in aux_kinds:
+        if not shard_n:
+            specs.append(P())
+        elif kind == "col_vector":
+            specs.append(P(axis))
+        elif kind == "row_vector":
+            specs.append(P())
+        else:                        # full (M, N) block
+            specs.append(P(None, axis))
+    return specs
+
+
+def _ops():
+    # lazy: ops imports this module for the public tp wrappers
+    from repro.kernels import ops
+
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# The three collective-fused patterns
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _ag_gemm_fn(mesh: Mesh, axis: str, tile, epilogue, aux_kinds,
+                out_dtype, interpret) -> Callable:
+    def per_device(a_blk, b_blk, *aux_blk):
+        a_full = jax.lax.all_gather(a_blk, axis, axis=0, tiled=True)
+        return _ops().gemm(a_full, b_blk, *aux_blk, tile=tile,
+                           epilogue=epilogue, aux_kinds=aux_kinds,
+                           out_dtype=out_dtype, interpret=interpret)
+
+    in_specs = (P(axis, None), P(None, axis),
+                *_aux_specs(aux_kinds, axis, shard_n=True))
+    return jax.jit(shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(None, axis), check_rep=False))
+
+
+def all_gather_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array,
+                    tp: int, axis: str = "model",
+                    tile: Optional[Tuple[int, int, int]] = None,
+                    epilogue: Optional[Callable] = None,
+                    aux_kinds: Sequence[AuxKind] = (),
+                    out_dtype=None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue(A @ B) with A row(M)-sharded on entry (all-gathered
+    once over ``axis``) and B/C column(N)-sharded.  Wire bytes per device:
+    (tp-1)/tp * |A| — the "all-gather -> GEMM" pattern."""
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    n = b.shape[1]
+    _check_div("M (all-gathered rows)", m, tp)
+    _check_div("N (column shards)", n, tp)
+    mesh = tp_mesh(tp, axis)
+    fn = _ag_gemm_fn(mesh, axis, tile if tile is None else tuple(tile),
+                     epilogue, tuple(aux_kinds), out_dtype, interpret)
+    return fn(a, b, *aux)
+
+
+@functools.lru_cache(maxsize=256)
+def _gemm_rs_fn(mesh: Mesh, axis: str, tile, out_dtype,
+                interpret) -> Callable:
+    def per_device(a_blk, b_blk):
+        partial = _ops().gemm(a_blk, b_blk, tile=tile,
+                              out_dtype=jnp.float32, interpret=interpret)
+        out = jax.lax.psum_scatter(partial, axis, scatter_dimension=0,
+                                   tiled=True)
+        return out if out_dtype is None else out.astype(out_dtype)
+
+    return jax.jit(shard_map(per_device, mesh=mesh,
+                             in_specs=(P(None, axis), P(axis, None)),
+                             out_specs=P(axis, None), check_rep=False))
+
+
+def gemm_reduce_scatter(a: jax.Array, b: jax.Array, *, tp: int,
+                        axis: str = "model",
+                        tile: Optional[Tuple[int, int, int]] = None,
+                        out_dtype=None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """C = A @ B with the contraction K-sharded: each device computes a
+    partial (M, N) product in fp32 and the partials are reduce-scattered
+    over M — the "GEMM -> reduce-scatter" pattern.  Wire bytes per device:
+    (tp-1)/tp * |C|.  The cross-device reduction reorders the K sum, so
+    outputs are allclose (not bitwise) to the unsharded oracle."""
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    _check_div("K (contraction shards)", k, tp)
+    _check_div("M (scatter rows)", m, tp)
+    mesh = tp_mesh(tp, axis)
+    fn = _gemm_rs_fn(mesh, axis, tile if tile is None else tuple(tile),
+                     out_dtype, interpret)
+    return fn(a, b)
+
+
+@functools.lru_cache(maxsize=256)
+def _ag_gemm_q_fn(mesh: Mesh, axis: str, tile, epilogue, aux_kinds,
+                  out_dtype, interpret) -> Callable:
+    def per_device(a_rep, wq_blk, s_rep, *aux_blk):
+        wq_full = jax.lax.all_gather(wq_blk, axis, axis=0, tiled=True)
+        return _ops().gemm_q(a_rep, wq_full, s_rep, *aux_blk, tile=tile,
+                             epilogue=epilogue, aux_kinds=aux_kinds,
+                             out_dtype=out_dtype, interpret=interpret)
+
+    in_specs = (P(), P(axis, None), P(),
+                *_aux_specs(aux_kinds, axis, shard_n=False))
+    return jax.jit(shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(None, None), check_rep=False))
+
+
+def all_gather_gemm_q(a: jax.Array, w, scales=None, *aux: jax.Array,
+                      tp: int, axis: str = "model",
+                      tile: Optional[Tuple[int, int, int]] = None,
+                      epilogue: Optional[Callable] = None,
+                      aux_kinds: Sequence[AuxKind] = (),
+                      out_dtype=None,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """C = epilogue((A @ Q) * s) with the quantized weight K-row-sharded:
+    the int8/fp8 VALUES are all-gathered at 1 B/elem (vs 4 for the fp32
+    twin — the wire-bytes saving the SOL plan prices), then one local
+    dequant-fused GEMM runs per device.  A and the per-channel scales are
+    replicated."""
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    if isinstance(w, QuantTensor):
+        w, scales = w.values, w.scales
+    if scales is None:
+        raise ValueError("all_gather_gemm_q needs scales (or a QuantTensor)")
+    k, n = w.shape
+    _check_div("K (weight row shards)", k, tp)
+    mesh = tp_mesh(tp, axis)
+    from .quant import broadcast_scales
+
+    fn = _ag_gemm_q_fn(mesh, axis, tile if tile is None else tuple(tile),
+                       epilogue, tuple(aux_kinds), out_dtype, interpret)
+    return fn(a, w, broadcast_scales(scales, n), *aux)
+
+
+@functools.lru_cache(maxsize=256)
+def _gather_w_fn(mesh: Mesh, axis: str, tile, epilogue, aux_kinds,
+                 out_dtype, interpret) -> Callable:
+    def per_device(a_rep, b_blk, *aux_blk):
+        b_full = jax.lax.all_gather(b_blk, axis, axis=0, tiled=True)
+        return _ops().gemm(a_rep, b_full, *aux_blk, tile=tile,
+                           epilogue=epilogue, aux_kinds=aux_kinds,
+                           out_dtype=out_dtype, interpret=interpret)
+
+    in_specs = (P(), P(axis, None),
+                *_aux_specs(aux_kinds, axis, shard_n=False))
+    return jax.jit(shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(None, None), check_rep=False))
+
+
+def gather_w_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array, tp: int,
+                  axis: str = "model",
+                  tile: Optional[Tuple[int, int, int]] = None,
+                  epilogue: Optional[Callable] = None,
+                  aux_kinds: Sequence[AuxKind] = (),
+                  out_dtype=None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Weight-gather TP (the fp twin of ``all_gather_gemm_q``): B arrives
+    K-row-sharded, is all-gathered once, then one local full GEMM runs per
+    device — bitwise identical to the unsharded kernel."""
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    k = b.shape[0]
+    _check_div("K (weight row shards)", k, tp)
+    mesh = tp_mesh(tp, axis)
+    fn = _gather_w_fn(mesh, axis, tile if tile is None else tuple(tile),
+                      epilogue, tuple(aux_kinds), out_dtype, interpret)
+    return fn(a, b, *aux)
+
+
+# ---------------------------------------------------------------------------
+# Column-parallel (shard N, gather C) — the full-output TP default
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _col_gemm_fn(mesh: Mesh, axis: str, tile, epilogue, aux_kinds,
+                 out_dtype, interpret, quantized: bool) -> Callable:
+    if quantized:
+        def per_device(a_rep, wq_blk, s_blk, *aux_blk):
+            return _ops().gemm_q(a_rep, wq_blk, s_blk, *aux_blk, tile=tile,
+                                 epilogue=epilogue, aux_kinds=aux_kinds,
+                                 out_dtype=out_dtype, interpret=interpret)
+
+        in_specs = (P(), P(None, axis), P(axis),
+                    *_aux_specs(aux_kinds, axis, shard_n=True))
+    else:
+        def per_device(a_rep, b_blk, *aux_blk):
+            return _ops().gemm(a_rep, b_blk, *aux_blk, tile=tile,
+                               epilogue=epilogue, aux_kinds=aux_kinds,
+                               out_dtype=out_dtype, interpret=interpret)
+
+        in_specs = (P(), P(None, axis),
+                    *_aux_specs(aux_kinds, axis, shard_n=True))
+    return jax.jit(shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                             out_specs=P(None, axis), check_rep=False))
+
+
+def column_gemm(a: jax.Array, b: jax.Array, *aux: jax.Array, tp: int,
+                axis: str = "model",
+                tile: Optional[Tuple[int, int, int]] = None,
+                epilogue: Optional[Callable] = None,
+                aux_kinds: Sequence[AuxKind] = (),
+                out_dtype=None,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Column-parallel C = epilogue(A @ B): B and C sharded over N, A
+    replicated, the C shards all-gathered into the full output.  Column
+    sharding never splits a K reduction, so the result is BITWISE
+    identical to the unsharded Pallas GEMM."""
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    n = b.shape[1]
+    _check_div("N (column shards)", n, tp)
+    mesh = tp_mesh(tp, axis)
+    fn = _col_gemm_fn(mesh, axis, tile if tile is None else tuple(tile),
+                      epilogue, tuple(aux_kinds), out_dtype, interpret,
+                      quantized=False)
+    return fn(a, b, *aux)
+
+
+def column_gemm_q(a: jax.Array, w, scales=None, *aux: jax.Array, tp: int,
+                  axis: str = "model",
+                  tile: Optional[Tuple[int, int, int]] = None,
+                  epilogue: Optional[Callable] = None,
+                  aux_kinds: Sequence[AuxKind] = (),
+                  out_dtype=None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Column-parallel quantized GEMM: the int8/fp8 weight and its
+    per-channel scales shard over N with the output."""
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    if isinstance(w, QuantTensor):
+        w, scales = w.values, w.scales
+    if scales is None:
+        raise ValueError("column_gemm_q needs scales (or a QuantTensor)")
+    n = w.shape[1]
+    _check_div("N (column shards)", n, tp)
+    mesh = tp_mesh(tp, axis)
+    from .quant import broadcast_scales
+
+    fn = _col_gemm_fn(mesh, axis, tile if tile is None else tuple(tile),
+                      epilogue, tuple(aux_kinds), out_dtype, interpret,
+                      quantized=True)
+    return fn(a, w, broadcast_scales(scales, n), *aux)
+
+
+def compiled_wire_bytes(strategy: str, a: jax.Array, w, *, tp: int,
+                        axis: str = "model",
+                        tile: Optional[Tuple[int, int, int]] = None,
+                        out_dtype=None,
+                        interpret: Optional[bool] = None) -> float:
+    """Ring-wide wire bytes a strategy's COMPILED module actually moves —
+    measured by parsing the post-SPMD HLO's collective operand sizes
+    (``sol.hlo_analysis.parse_collective_bytes``), independently of the
+    SOL wire formulas.  The only model applied on top is the fixed ring
+    conversion: an all-gather's operand is the local shard (ring total =
+    (tp-1) * tp * operand), a reduce-scatter's is the full partial (ring
+    total = (tp-1) * operand).
+
+    Returns 0.0 for the ``column`` strategy: its output STAYS sharded, so
+    no collective appears in the module — the gather is deferred to the
+    consumer (the SOL plan still prices it, because a full-output caller
+    pays it there).
+    """
+    from repro.core.sol.hlo_analysis import parse_collective_bytes
+
+    ops = _ops()
+    interpret = ops.default_interpret() if interpret is None else interpret
+    mesh = tp_mesh(tp, axis)
+    tile = tile if tile is None else tuple(tile)
+    if strategy == "gather_w":
+        if isinstance(w, QuantTensor):
+            from .quant import broadcast_scales
+
+            fn = _ag_gemm_q_fn(mesh, axis, tile, None, (), out_dtype,
+                               interpret)
+            args = (a, w.values,
+                    broadcast_scales(w.scales, w.values.shape[1]))
+        else:
+            fn = _gather_w_fn(mesh, axis, tile, None, (), out_dtype,
+                              interpret)
+            args = (a, w)
+    elif strategy == "row":
+        fn = _gemm_rs_fn(mesh, axis, tile, out_dtype, interpret)
+        args = (a, w)
+    elif strategy == "column":
+        fn = _col_gemm_fn(mesh, axis, tile, None, (), out_dtype,
+                          interpret, quantized=False)
+        args = (a, w)
+    else:
+        raise KeyError(f"unknown strategy {strategy!r}")
+    stats = parse_collective_bytes(fn.lower(*args).compile().as_text())
+    if stats.total_count == 0:
+        return 0.0
+    if strategy == "row":
+        return (tp - 1) * stats.total_bytes
+    return (tp - 1) * tp * stats.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# XLA-backend twin: same collectives, jnp.dot local matmul
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _xla_fn(mesh: Mesh, axis: str, highest: bool,
+            strategy: str) -> Callable:
+    prec = jax.lax.Precision.HIGHEST if highest else None
+
+    # operands arrive at their STORAGE dtype and widen to f32 at compute
+    # time, AFTER any gather — the bytes on the wire are the bytes the
+    # SOL plan priced (an int8 weight gathers at 1 B/elem), and the
+    # elementwise cast commutes with the gather so the result is still
+    # bitwise identical to jnp.dot(a.astype(f32), b.astype(f32))
+    if strategy == "gather_w":
+        def per_device(a_rep, b_blk):
+            b_full = jax.lax.all_gather(b_blk, axis, axis=0, tiled=True)
+            return jnp.dot(a_rep.astype(jnp.float32),
+                           b_full.astype(jnp.float32), precision=prec)
+
+        in_specs = (P(), P(axis, None))
+        out_specs = P(None, None)
+    else:
+        def per_device(a_rep, b_blk):
+            return jnp.dot(a_rep.astype(jnp.float32),
+                           b_blk.astype(jnp.float32), precision=prec)
+
+        in_specs = (P(), P(None, axis))
+        out_specs = P(None, axis)
+    return jax.jit(shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
+
+
+def xla_tp_gemm(a: jax.Array, b: jax.Array, *, tp: int,
+                axis: str = "model", highest: bool = False,
+                a_dtype: Optional[str] = None,
+                w_dtype: Optional[str] = None,
+                out_dtype: Optional[str] = None) -> jax.Array:
+    """The XLA backend's TP lowering: jnp.dot under the same mesh and the
+    same SOL-chosen strategy as the Pallas path (the dtype hints let the
+    planner see the program's declared dtypes, so both backends pick the
+    same strategy — including gather_w when N does not divide).  Pass
+    ``a`` / ``b`` at their STORAGE dtypes: the f32 widening happens after
+    the gather, so the wire moves exactly the bytes the plan priced.
+    Neither strategy splits a K reduction, so the f32 result is bitwise
+    identical to the single-device ``jnp.dot(a.astype(f32),
+    b.astype(f32))``."""
+    from repro.core.sol.collectives import plan_tp_gemm
+
+    m, k = a.shape
+    n = b.shape[1]
+    plan = plan_tp_gemm(m, n, k, tp=tp, a_dtype=a_dtype or "fp32",
+                        w_dtype=w_dtype, out_dtype=out_dtype)
+    if not plan.shardable:
+        raise ValueError(
+            f"sharded GEMM ({m}x{k}x{n}), tp={tp}: {plan.reason}")
+    if plan.strategy == "column":
+        _check_div("N (column shards)", n, tp)
+    else:
+        _check_div("K (weight row shards)", k, tp)
+    mesh = tp_mesh(tp, axis)
+    return _xla_fn(mesh, axis, highest, plan.strategy)(a, b)

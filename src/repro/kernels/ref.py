@@ -157,6 +157,44 @@ def rmsnorm_gemm_q_ref(x, gamma, wq, scales, *aux, eps: float = 1e-6,
                       aux_kinds=aux_kinds, out_dtype=out_dtype or x.dtype)
 
 
+def tp_gemm_ref(a, b, *aux, tp: int = 1,
+                epilogue: Optional[Callable] = None,
+                aux_kinds: Sequence[str] = (), out_dtype=None):
+    """Oracle for the full-output TP strategies (column / gather_w): both
+    reassemble exact operand shards before or after a whole-column
+    contraction, so the sharded result must equal the single-device GEMM —
+    the oracle IS ``gemm_ref``; ``tp`` is accepted only to document the
+    equivalence at call sites."""
+    return gemm_ref(a, b, *aux, epilogue=epilogue, aux_kinds=aux_kinds,
+                    out_dtype=out_dtype)
+
+
+def tp_gemm_q_ref(a, wq, scales, *aux, tp: int = 1,
+                  epilogue: Optional[Callable] = None,
+                  aux_kinds: Sequence[str] = (), out_dtype=None):
+    """Quantized twin of ``tp_gemm_ref``: gathering int8 row shards
+    reassembles the exact quantized values, so sharded == unsharded."""
+    return gemm_q_ref(a, wq, scales, *aux, epilogue=epilogue,
+                      aux_kinds=aux_kinds, out_dtype=out_dtype)
+
+
+def gemm_reduce_scatter_ref(a, b, *, tp: int, out_dtype=None):
+    """Oracle for the K-sharded row-parallel pattern: per-shard fp32
+    partial products summed across shards — the reduction order the
+    collective's reduce-scatter uses, which differs from the single-device
+    K loop (compare with allclose, not bitwise)."""
+    out_dtype = out_dtype or a.dtype
+    m, k = a.shape
+    assert k % tp == 0, f"K={k} must divide tp={tp}"
+    ks = k // tp
+    acc = jnp.zeros((m, b.shape[1]), jnp.float32)
+    for s in range(tp):
+        acc = acc + jnp.dot(a[:, s * ks:(s + 1) * ks].astype(jnp.float32),
+                            b[s * ks:(s + 1) * ks].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
 def rmsnorm_ref(x, gamma, *, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

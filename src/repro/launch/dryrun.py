@@ -32,8 +32,7 @@ from repro.launch.mesh import make_production_mesh                  # noqa: E402
 from repro.launch.specs import input_specs                          # noqa: E402
 from repro.models.model import build_model                          # noqa: E402
 from repro.optim.adamw import AdamWState, adamw_init                # noqa: E402
-from repro.sharding.rules import (batch_shardings, cache_shardings,  # noqa: E402
-                                  params_shardings, replicated)
+from repro.sharding.plan import ShardPlan                           # noqa: E402
 from repro.train.step import (TrainState, init_state,               # noqa: E402
                               make_decode_step, make_prefill_step,
                               make_train_step)
@@ -65,20 +64,21 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     cfg = _apply_overrides(get_arch(arch), overrides)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = mesh.devices.size
+    plan = ShardPlan(mesh)
+    n_dev = plan.num_devices
     model = build_model(cfg)
     rng = jax.random.PRNGKey(0)
 
     if shape.kind == "train":
         state_abs = jax.eval_shape(lambda: init_state(model, rng))
         state_sh = TrainState(
-            params=params_shardings(state_abs.params, mesh),
+            params=plan.params(state_abs.params),
             opt=AdamWState(
-                step=replicated(mesh),
-                mu=params_shardings(state_abs.opt.mu, mesh),
-                nu=params_shardings(state_abs.opt.nu, mesh)))
+                step=plan.replicated(),
+                mu=plan.params(state_abs.opt.mu),
+                nu=plan.params(state_abs.opt.nu)))
         batch_abs = input_specs(cfg, shape)
-        batch_sh = batch_shardings(batch_abs, mesh)
+        batch_sh = plan.batch(batch_abs)
         step = make_train_step(model)
         with mesh:
             lowered = jax.jit(
@@ -89,9 +89,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         model_flops = 6.0 * cfg.param_count(active_only=True) * tokens
     elif shape.kind == "prefill":
         params_abs = jax.eval_shape(lambda: model.init(rng))
-        params_sh = params_shardings(params_abs, mesh)
+        params_sh = plan.params(params_abs)
         batch_abs = input_specs(cfg, shape)
-        batch_sh = batch_shardings(batch_abs, mesh)
+        batch_sh = plan.batch(batch_abs)
         step = make_prefill_step(model)
         with mesh:
             lowered = jax.jit(
@@ -102,12 +102,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         model_flops = 2.0 * cfg.param_count(active_only=True) * tokens
     else:  # decode / long_decode
         params_abs = jax.eval_shape(lambda: model.init(rng))
-        params_sh = params_shardings(params_abs, mesh)
+        params_sh = plan.params(params_abs)
         cache_abs = jax.eval_shape(functools.partial(
             model.init_cache, shape.global_batch, shape.seq_len))
-        cache_sh = cache_shardings(cache_abs, mesh)
+        cache_sh = plan.cache(cache_abs)
         batch_abs = input_specs(cfg, shape)
-        tok_sh = batch_shardings(batch_abs, mesh)["tokens"]
+        tok_sh = plan.batch(batch_abs)["tokens"]
         step = make_decode_step(model)
         with mesh:
             lowered = jax.jit(

@@ -1,6 +1,6 @@
 """Production mesh construction.
 
-A FUNCTION (not a module-level constant) so importing this module never
+FUNCTIONS (not module-level constants) so importing this module never
 touches jax device state.  Single pod: (data=16, model=16) = 256 chips.
 Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is the
 outer data-parallel axis whose collectives cross the DCN.
@@ -18,5 +18,33 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_smoke_mesh():
-    """1-device mesh with the production axis names (for CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+    """A (data, model) mesh over ALL local devices, with the production
+    axis names — for CPU tests.
+
+    Honors ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set
+    BEFORE importing jax): N forced host devices become a real multi-device
+    mesh — (2, N/2) so both axes exercise sharding when N is an even
+    count >= 4, else (1, N) — instead of collapsing to the 1x1 mesh that
+    silently skipped every multi-device sharding path in CI.
+    """
+    n = len(jax.devices())
+    if n >= 4 and n % 2 == 0:
+        shape = (2, n // 2)
+    else:
+        shape = (1, n) if n > 1 else (1, 1)
+    return jax.make_mesh(shape, ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """A (data=1, model=tp) decode mesh over the first ``tp`` local
+    devices — what the serve engine builds for ``ModelConfig.tp_shards``
+    (sharding.plan.ShardPlan consumes it; GSPMD inserts the collectives
+    the SOL model prices as ``wire_bytes_per_step``)."""
+    from repro.kernels.collective import require_devices
+
+    require_devices(tp)
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = np.asarray(jax.devices()[:tp]).reshape(1, tp)
+    return Mesh(devs, ("data", "model"))

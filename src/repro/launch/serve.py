@@ -38,6 +38,12 @@ def main():
                          "decode through the dequant-fused step; unset "
                          "defers to the config + tuned verdict "
                          "(REPRO_QUANT=off overrides)")
+    ap.add_argument("--tp-shards", type=int, default=None,
+                    help="tensor-parallel shards for the decode path "
+                         "(needs that many devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N); "
+                         "unset defers to the config + tuned shard "
+                         "verdict")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -50,12 +56,17 @@ def main():
         prefill_mode=args.prefill, chunk_size=args.chunk,
         scheduler=args.scheduler,
         weight_dtype=args.weight_dtype,
+        tp_shards=args.tp_shards,
         prefix_cache=PrefixCache(block=args.chunk) if args.prefix_cache
         else None)
     if engine.model.cfg.weight_dtype != "none":
         print(f"weight_dtype={engine.model.cfg.weight_dtype} "
               f"({engine.weight_bytes_per_step / 1e3:.1f} KB weight "
               f"traffic per decode step)")
+    if engine.model.cfg.tp_shards > 1:
+        print(f"tp_shards={engine.model.cfg.tp_shards} "
+              f"({engine.wire_bytes_per_step / 1e3:.1f} KB SOL-predicted "
+              f"interconnect traffic per decode step)")
     rng = np.random.default_rng(0)
     shared = list(map(int, rng.integers(0, cfg.vocab_size, args.chunk)))
     reqs = []

@@ -281,11 +281,20 @@ class Model:
         head = self.lm_head_matrix(params)
         logits = weight_einsum("bsd,dv->bsv", x, head)
         try:  # keep the vocab dim model-sharded (needs an active mesh)
+            from ..sharding.plan import logits_partition_spec
+
             logits = jax.lax.with_sharding_constraint(
-                logits, jax.sharding.PartitionSpec(None, None, "model"))
+                logits, logits_partition_spec())
         except Exception:
             pass
         return logits
+
+    def place_decode_state(self, params: Dict, cache: Dict, plan):
+        """Place params and decode cache per a ``sharding.plan.ShardPlan``
+        — the serve engine's tensor-parallel decode path.  GSPMD then
+        partitions ``prefill_step`` along the placed shardings, inserting
+        the collectives ``plan.decode_wire_bytes`` prices."""
+        return plan.place_params(params), plan.place_cache(cache)
 
     def forward(self, params: Dict, batch: Dict):
         x, aux = self.forward_hidden(params, batch)

@@ -45,7 +45,8 @@ from .telemetry import ServeTelemetry
 
 def resolve_tuned_decode_cfg(model: Model, max_len: int,
                              fused_decode: Optional[bool] = None,
-                             weight_dtype: Optional[str] = None):
+                             weight_dtype: Optional[str] = None,
+                             tp_shards: Optional[int] = None):
     """Tuned decode-path config overrides resolved once at engine build.
 
     Consults the persistent autotuning cache for the engine's actual
@@ -69,6 +70,15 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int,
     ``weight_dtype`` argument forces past the veto (like ``fused_decode``
     forces past the fusion verdict); ``REPRO_QUANT=off`` wins over
     everything.
+
+    Tensor-parallel sharding resolves with the same asymmetry: the
+    config's ``tp_shards`` request is honored UNLESS a measured
+    ``shard:decode_block`` veto ({"tp": 1}) says sharding was slower on
+    this shape bucket — a cached record can turn sharding off, never
+    silently on (it changes device placement).  An explicit ``tp_shards``
+    argument forces past the veto but raises when the host has fewer
+    devices; a config-driven request on a too-small host falls back to 1
+    (recorded in the overrides).
     """
     from repro.kernels.quant import quant_disabled
 
@@ -87,6 +97,22 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int,
                 wd = "none"             # measured veto: budget exceeded
     if wd != cfg.weight_dtype:
         overrides["weight_dtype"] = wd
+    tp = int(tp_shards if tp_shards is not None
+             else getattr(cfg, "tp_shards", 1) or 1)
+    if tp > 1:
+        from repro.kernels.collective import device_count, require_devices
+
+        if tp_shards is None:
+            verdict = tune.tuned_shard("decode_block",
+                                       (cfg.d_model, cfg.d_ff), dtype_key)
+            if verdict is not None and verdict <= 1:
+                tp = 1                  # measured veto: sharding was slower
+            if tp > device_count():
+                tp = 1                  # config request on a small host
+        else:
+            require_devices(tp)         # explicit request: fail loudly
+    if tp != cfg.tp_shards:
+        overrides["tp_shards"] = tp
     if cfg.num_heads:
         block = tune.tuned_attention_block(
             max_len, max_len, cfg.resolved_head_dim, dtype_key)
@@ -173,10 +199,11 @@ class ServeEngine:
                  scheduler=None, prefix_cache=None,
                  fused_decode: Optional[bool] = None,
                  weight_dtype: Optional[str] = None,
+                 tp_shards: Optional[int] = None,
                  telemetry: Optional[ServeTelemetry] = None):
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
             model, max_len, fused_decode=fused_decode,
-            weight_dtype=weight_dtype)
+            weight_dtype=weight_dtype, tp_shards=tp_shards)
         if self.tuned_overrides:
             model = dataclasses.replace(model, cfg=tuned_cfg)
         self.model = model
@@ -188,6 +215,21 @@ class ServeEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = model.init_cache(max_batch, max_len)
+        # tensor-parallel decode: place params + cache per the ShardPlan;
+        # GSPMD partitions prefill_step along them, inserting the
+        # collectives the SOL model prices as wire_bytes_per_step
+        self.shard_plan = None
+        self.wire_bytes_per_step = 0
+        if model.cfg.tp_shards > 1:
+            from ..launch.mesh import make_tp_mesh
+            from ..sharding.plan import ShardPlan
+
+            plan = ShardPlan(make_tp_mesh(model.cfg.tp_shards))
+            self.params, self.cache = model.place_decode_state(
+                self.params, self.cache, plan)
+            self.shard_plan = plan
+            self.wire_bytes_per_step = int(
+                plan.decode_wire_bytes(model.cfg, batch=max_batch))
         self.slots: List[Optional[SlotState]] = [None] * max_batch
         self._rng = jax.random.PRNGKey(seed)
         self._step_fn = jax.jit(model.prefill_step)
@@ -219,6 +261,7 @@ class ServeEngine:
             "prefix_hits": 0, "prefix_tokens_reused": 0,
             "decode_dispatches": 0,
             "weight_bytes_per_step": self.weight_bytes_per_step,
+            "wire_bytes_per_step": self.wire_bytes_per_step,
         }
 
     # ------------------------------------------------------------------
@@ -400,7 +443,8 @@ class ServeEngine:
             queue_depth=self.scheduler.pending(), active_slots=active,
             num_slots=self.max_batch, seconds=time.perf_counter() - t0,
             dispatches=self.step_dispatches,
-            weight_bytes=self.weight_bytes_per_step)
+            weight_bytes=self.weight_bytes_per_step,
+            wire_bytes=self.wire_bytes_per_step)
         self.mux.emit(events)
         return events
 

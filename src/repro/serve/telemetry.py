@@ -82,6 +82,9 @@ class ServeTelemetry:
         # per-step HBM weight traffic: quantized weights must drop this
         # >= 3x for int8 (asserted in benchmarks/serve_load.py)
         self.weight_bytes_total = 0
+        # per-step SOL-predicted interconnect traffic of the TP decode
+        # path (0 when unsharded) — sharding.plan.ShardPlan prices it
+        self.wire_bytes_total = 0
 
     # ---- request lifecycle ------------------------------------------------
     def _trace(self, rid: int) -> RequestTrace:
@@ -126,7 +129,8 @@ class ServeTelemetry:
     # ---- per-step samples -------------------------------------------------
     def on_step(self, *, queue_depth: int, active_slots: int,
                 num_slots: int, seconds: float,
-                dispatches: int = 0, weight_bytes: int = 0) -> None:
+                dispatches: int = 0, weight_bytes: int = 0,
+                wire_bytes: int = 0) -> None:
         self.steps += 1
         self.num_slots = num_slots
         self.queue_depth_samples.append(queue_depth)
@@ -134,6 +138,7 @@ class ServeTelemetry:
         self.step_seconds.append(seconds)
         self.dispatch_total += dispatches
         self.weight_bytes_total += weight_bytes
+        self.wire_bytes_total += wire_bytes
 
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -177,6 +182,8 @@ class ServeTelemetry:
                                     if self.steps else 0.0),
             "weight_bytes_per_step": (self.weight_bytes_total / self.steps
                                       if self.steps else 0.0),
+            "wire_bytes_per_step": (self.wire_bytes_total / self.steps
+                                    if self.steps else 0.0),
             "queue_depth_mean": (sum(self.queue_depth_samples)
                                  / len(self.queue_depth_samples)
                                  if self.queue_depth_samples else 0.0),

@@ -1,0 +1,108 @@
+"""Sharding plans: the first-class object the call sites consume.
+
+``sharding/rules.py`` maps pytrees to ``NamedSharding`` leaf-by-leaf;
+before this refactor every consumer (dry-run, tests, the serve engine)
+re-derived mesh axis sizes and stitched the rule functions together by
+hand.  ``ShardPlan`` packages one mesh + the rules + the distributed SOL
+cost model into a single lever:
+
+  * ``params`` / ``batch`` / ``cache`` return the NamedSharding pytrees
+    the rules derive (TP over 'model', FSDP over 'data', batch over the
+    data axes),
+  * ``place_params`` / ``place_cache`` device_put a concrete pytree onto
+    the plan — the serve engine's TP decode path (GSPMD then inserts the
+    all-reduces the SOL model prices),
+  * ``decode_wire_bytes`` is the SOL-predicted interconnect traffic of
+    ONE decode step under this plan (``sol.collectives``) — what serve
+    telemetry reports as ``wire_bytes_per_step``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sol.collectives import (decode_step_collectives,
+                                        decode_wire_bytes_per_step)
+from repro.core.sol.hardware import ChipSpec, mesh_axis_size
+
+from . import rules
+
+
+def logits_partition_spec() -> P:
+    """The lm-head output spec: vocab stays model-sharded (FSDP on the
+    d_model dim of embedding tables is deliberately excluded by the param
+    rules for the same reason — see rules.param_spec)."""
+    return P(None, None, "model")
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """One mesh plus the sharding rules and their SOL-predicted cost."""
+
+    mesh: Mesh
+    fsdp: bool = True
+
+    # ---- axis sizes ------------------------------------------------------
+    @property
+    def tp(self) -> int:
+        return mesh_axis_size(self.mesh, "model")
+
+    @property
+    def dp(self) -> int:
+        n = 1
+        for a in rules.data_axes(self.mesh):
+            n *= mesh_axis_size(self.mesh, a)
+        return n
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.mesh.shape.values():
+            n *= s
+        return n
+
+    # ---- NamedSharding pytrees (delegating to the rules) -----------------
+    def params(self, params):
+        return rules.params_shardings(params, self.mesh, self.fsdp)
+
+    def batch(self, batch):
+        return rules.batch_shardings(batch, self.mesh)
+
+    def cache(self, cache):
+        return rules.cache_shardings(cache, self.mesh)
+
+    def replicated(self) -> NamedSharding:
+        return rules.replicated(self.mesh)
+
+    # ---- placement (the serve TP decode path) ----------------------------
+    def place_params(self, params):
+        return jax.device_put(params, self.params(params))
+
+    def place_cache(self, cache):
+        return jax.device_put(cache, self.cache(cache))
+
+    # ---- distributed SOL -------------------------------------------------
+    def decode_wire_bytes(self, cfg, *, batch: int = 1,
+                          chip: Optional[ChipSpec] = None) -> float:
+        """SOL-predicted bytes on the interconnect for ONE decode step of
+        ``cfg`` under this plan's TP width."""
+        return decode_wire_bytes_per_step(cfg, tp=self.tp, batch=batch,
+                                          chip=chip)
+
+    def decode_collectives(self, cfg, *, batch: int = 1,
+                           chip: Optional[ChipSpec] = None):
+        return decode_step_collectives(cfg, tp=self.tp, batch=batch,
+                                       chip=chip)
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "axes": dict(self.mesh.shape),
+            "tp": self.tp,
+            "dp": self.dp,
+            "devices": self.num_devices,
+            "fsdp": self.fsdp,
+        }

@@ -20,6 +20,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.sol.hardware import mesh_axis_size as _axis_size
+
 # params smaller than this stay replicated over 'data' (FSDP threshold)
 FSDP_MIN_SIZE = 1 << 20
 
@@ -27,10 +29,6 @@ FSDP_MIN_SIZE = 1 << 20
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Batch axes: ('pod', 'data') when the pod axis exists."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-
-def _axis_size(mesh: Mesh, name: str) -> int:
-    return mesh.shape[name] if name in mesh.axis_names else 1
 
 
 def _n_stack_dims(path: str, ndim: int, shape) -> int:
