@@ -60,6 +60,25 @@ def write_output(name: str, payload: Dict) -> str:
     return path
 
 
+def write_bench_json(name: str, payload: Dict) -> str:
+    """Persist a benchmark's headline numbers as ``BENCH_<name>.json``.
+
+    Unlike ``write_output`` (scratch space under runs/), these land at the
+    repo root (override with ``REPRO_BENCH_JSON_DIR``) and are meant to be
+    committed: they are the perf-trajectory files future re-anchors diff
+    to see whether a PR moved the needle.  Keep payloads small, stable-
+    keyed, and free of host-specific noise (prefer deterministic step
+    counts over wall clock where possible).
+    """
+    out_dir = os.environ.get("REPRO_BENCH_JSON_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
+    return path
+
+
 def csv_line(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 

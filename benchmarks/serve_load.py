@@ -23,6 +23,8 @@ Assertions (exit non-zero on violation; CI runs ``--smoke``):
 import argparse
 import copy
 import dataclasses
+import os
+import sys
 import time
 
 import jax
@@ -30,7 +32,11 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.model import build_model
-from repro.serve import PrefixCache, Request, ServeEngine
+from repro.serve import (FaultInjector, PrefixCache, Request, ServeEngine,
+                         build_replicated_router)
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import write_bench_json  # noqa: E402
 
 
 def build_workload(cfg, *, chunk: int, n_chat: int, n_doc: int,
@@ -302,6 +308,98 @@ def main():
             tune.record_quant_measurement(
                 "decode_block", dims, qcfg.compute_dtype,
                 wdtype_best="int8", rel_err=rel_err, budget=budget)
+
+    # replicated-fleet fault drill: kill a replica mid-stream and prove
+    # the router re-routes its in-flight requests to the survivor with
+    # ZERO output divergence, while the supervisor restarts the dead
+    # replica with prefix-cache warm handoff and readmits it
+    def run_fleet(injector, kill_tick=None):
+        router = build_replicated_router(
+            model, params, replicas=2, max_batch=2, max_len=max_len,
+            chunk_size=chunk, injector=injector)
+        if kill_tick is not None:
+            injector.kill(0, at_tick=kill_tick)
+        tickets = [router.submit(r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 slo=r.slo)
+                   for r in reqs]
+        t0 = time.perf_counter()
+        router.run_until_complete(tickets, max_ticks=100000)
+        return router, tickets, time.perf_counter() - t0
+
+    base_router, base_tix, base_wall = run_fleet(FaultInjector())
+    assert all(t.status == "done" for t in base_tix)
+    kill_tick = 4                 # mid-stream: prefill started, not done
+    drill_inj = FaultInjector()
+    drill_router, drill_tix, drill_wall = run_fleet(drill_inj,
+                                                    kill_tick=kill_tick)
+    assert all(t.status == "done" for t in drill_tix), \
+        f"fault drill left tickets unfinished: " \
+        f"{[(t.tid, t.status, t.error) for t in drill_tix]}"
+    diverged = [t.tid for a, t in zip(base_tix, drill_tix)
+                if a.tokens != t.tokens]
+    assert not diverged, \
+        f"replica failure changed outputs for tickets {diverged}"
+    assert drill_router.counters["rerouted_tickets"] > 0, \
+        "the kill must have caught in-flight requests"
+    assert len(drill_router.incidents) == 1
+    incident = drill_router.incidents[0]
+    recovery_ticks = incident["restart_tick"] - kill_tick
+    restarted = drill_router.replicas[0]
+    assert restarted.generation == 1 and \
+        restarted.state.value == "running", "replica must be readmitted"
+    # warm handoff: the restarted engine adopted the SHARED prefix cache,
+    # so the shared-prefix snapshots its predecessor (and the survivor)
+    # paid for are already hot
+    assert restarted.engine.prefix_cache is \
+        drill_router.replicas[1].engine.prefix_cache
+    assert len(restarted.engine.prefix_cache) > 0, \
+        "restarted replica must re-adopt shared prefix snapshots"
+    fleet = drill_router.metrics()
+    print(f"\nfault drill: replica 0 killed at tick {kill_tick}, breaker "
+          f"tripped at tick {incident['death_tick']}, restarted at tick "
+          f"{incident['restart_tick']} ({recovery_ticks} ticks end-to-end,"
+          f" rebuild {incident['rebuild_s']:.2f}s); "
+          f"{drill_router.counters['rerouted_tickets']} requests re-routed"
+          f" with 0 output divergence; "
+          f"{len(restarted.engine.prefix_cache)} warm prefix snapshots")
+
+    write_bench_json("serve_load", {
+        "workload": {"n_requests": len(reqs), "chunk": chunk,
+                     "max_batch": args.max_batch, "arch": args.arch,
+                     "smoke": bool(args.smoke)},
+        "engines": {
+            name: {
+                "steps": summ["steps"],
+                "ttft_steps_mean": summ["ttft_steps_mean"],
+                "ttft_steps_p50": summ["ttft_steps_p50"],
+                "ttft_steps_p95": summ["ttft_steps_p95"],
+                "itl_s_p50": summ["itl_s_p50"],
+                "itl_s_p95": summ["itl_s_p95"],
+                "throughput_tok_s": summ["throughput_tok_s"],
+                "slot_utilization": summ["slot_utilization"],
+            } for name, (_, _, summ, _) in results.items()},
+        "fused_decode": {"dispatches_per_step_on": d_on,
+                         "dispatches_per_step_off": d_off},
+        "quant": {"weight_bytes_per_step_int8": wb_q,
+                  "weight_bytes_per_step_fp": wb_fp,
+                  "bytes_ratio": ratio, "rel_err": rel_err,
+                  "budget": budget},
+        "fault_drill": {
+            "kill_tick": kill_tick,
+            "death_tick": incident["death_tick"],
+            "restart_tick": incident["restart_tick"],
+            "recovery_ticks": recovery_ticks,
+            "rebuild_s": incident["rebuild_s"],
+            "rerouted_tickets":
+                drill_router.counters["rerouted_tickets"],
+            "output_divergence": len(diverged),
+            "warm_prefix_snapshots": len(restarted.engine.prefix_cache),
+            "fleet_ttft_steps_p95": fleet["ttft_steps_p95"],
+            "no_fault_wall_s": base_wall, "fault_wall_s": drill_wall,
+        },
+    })
+    print(f"wrote BENCH_serve_load.json")
     print("serve_load: all assertions passed")
 
 

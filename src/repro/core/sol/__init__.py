@@ -14,6 +14,7 @@ from .characterize import (TensorSpec, OpSpec, Characterization, gemm_flops,
                            norm_op, attention_flops, attention_op,
                            conv1d_flops, conv1d_op, conv2d_flops,
                            ssd_scan_flops, moe_ffn_flops)
+from .fleet import FleetCapacityModel, FleetVerdict, ReplicaLoad
 from .roofline import RooflineResult, distributed_roofline, roofline
 from .hlo_analysis import (CollectiveStats, CompiledSummary,
                            parse_collective_bytes, summarize_compiled,
@@ -28,6 +29,7 @@ __all__ = [
     "elementwise_op", "reduction_op", "softmax_op", "norm_op",
     "attention_flops", "attention_op", "conv1d_flops", "conv1d_op",
     "conv2d_flops", "ssd_scan_flops", "moe_ffn_flops",
+    "FleetCapacityModel", "FleetVerdict", "ReplicaLoad",
     "RooflineResult", "distributed_roofline", "roofline",
     "CollectiveCost", "TPPlan", "collective_cost", "mesh_axis_size",
     "decode_step_collectives", "decode_wire_bytes_per_step",

@@ -1,0 +1,140 @@
+"""Fleet-level SOL capacity: aggregate per-replica roofline estimates into
+placement scores and an admission verdict for a replicated serving
+deployment.
+
+The paper's discipline — price a lever with first-principles bounds before
+spending resources on it — applied to *where a request runs* and *whether
+the fleet should accept it at all*:
+
+* placement: each replica's next-step wall clock is estimated from its
+  current batch composition (``SOLCapacityModel.step_seconds``), and a
+  request goes to the replica where adding its prefill costs the least
+  once the queue ahead of it is priced in — not blind round-robin,
+* admission: when every replica's queue is full or the strictest active
+  inter-token-latency target is already blown, the fleet is *saturated*
+  and the router answers 429 with a Retry-After derived from the SOL
+  estimate of how long the least-loaded replica needs to drain one queue
+  entry — a principled backpressure signal instead of a magic constant.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class ReplicaLoad:
+    """Host-side snapshot of one replica's load the fleet model prices."""
+
+    replica_id: int
+    free_slots: int = 0
+    num_slots: int = 0
+    queue_depth: int = 0
+    decode_positions: Tuple[int, ...] = ()
+    prefill_backlog: int = 0
+
+
+@dataclass(frozen=True)
+class FleetVerdict:
+    """Admission decision for one request against the whole fleet."""
+
+    admit: bool
+    reason: str = "ok"
+    retry_after_s: float = 0.0
+
+
+class FleetCapacityModel:
+    """SOL-costed placement + admission over N engine replicas.
+
+    ``capacity`` is the per-replica :class:`~repro.serve.scheduler.
+    SOLCapacityModel` (replicas are homogeneous: same model, same chip
+    class, so one instance prices them all).  ``avg_request_steps`` is the
+    drain-time horizon used to turn a queue depth into a Retry-After — an
+    estimate of how many engine steps a typical request occupies a slot.
+    """
+
+    def __init__(self, capacity, *, max_queue_per_replica: int = 8,
+                 avg_request_steps: int = 32):
+        self.capacity = capacity
+        self.max_queue_per_replica = max(1, int(max_queue_per_replica))
+        self.avg_request_steps = max(1, int(avg_request_steps))
+
+    # -- per-replica estimates ---------------------------------------------
+    def step_estimate(self, load: ReplicaLoad, *,
+                      extra_prefill: int = 0) -> float:
+        """Predicted wall clock of the replica's next step, including its
+        outstanding prefill backlog and ``extra_prefill`` new tokens."""
+        return self.capacity.step_seconds(
+            decode_positions=list(load.decode_positions),
+            prefill_tokens=load.prefill_backlog + extra_prefill)
+
+    def placement_score(self, load: ReplicaLoad,
+                        prompt_tokens: int) -> float:
+        """Lower is better: the SOL-estimated cost of landing this request
+        on this replica — the step cost with the request's prefill added,
+        weighted by the work queued ahead of it (each queued/held request
+        keeps the new one waiting about one loaded step)."""
+        t_now = self.step_estimate(load)
+        t_with = self.step_estimate(load, extra_prefill=prompt_tokens)
+        waiting = load.queue_depth + (0 if load.free_slots > 0 else 1)
+        return t_with + waiting * max(t_now, 1e-12)
+
+    def headroom(self, load: ReplicaLoad, *,
+                 itl_budget_s: float = math.inf) -> float:
+        """Fraction of the ITL budget left after this replica's next step:
+        1 = idle, 0 = at the bound, negative = already blowing the target.
+        An infinite budget cannot be blown, so it always has headroom —
+        for budget-free classes the bounded queue is the only
+        backpressure."""
+        t = self.step_estimate(load)
+        if math.isinf(itl_budget_s):
+            return 1.0
+        return 1.0 - t / itl_budget_s
+
+    # -- fleet-level decisions ---------------------------------------------
+    def choose(self, loads: Sequence[ReplicaLoad],
+               prompt_tokens: int) -> Optional[int]:
+        """Replica id with the lowest placement score; queue-full replicas
+        are skipped.  None when every replica's queue is full."""
+        best_id, best_score = None, math.inf
+        for load in loads:
+            if load.queue_depth >= self.max_queue_per_replica:
+                continue
+            score = self.placement_score(load, prompt_tokens)
+            if score < best_score:
+                best_id, best_score = load.replica_id, score
+        return best_id
+
+    def drain_estimate_s(self, load: ReplicaLoad) -> float:
+        """SOL estimate of the time until this replica frees one queue
+        entry: one typical request's worth of loaded steps."""
+        t = max(self.step_estimate(load), 1e-9)
+        return t * self.avg_request_steps
+
+    def verdict(self, loads: Sequence[ReplicaLoad], *,
+                prompt_tokens: int = 0,
+                itl_budget_s: float = math.inf) -> FleetVerdict:
+        """Admit / saturated decision for one request.
+
+        Saturated when no replica can take it: every queue is at
+        ``max_queue_per_replica``, or every replica with queue room is both
+        slot-full and out of ITL headroom.  The Retry-After is the minimum
+        over replicas of the SOL drain estimate.
+        """
+        if not loads:
+            return FleetVerdict(False, reason="no_replicas",
+                                retry_after_s=1.0)
+        open_loads = [l for l in loads
+                      if l.queue_depth < self.max_queue_per_replica]
+        if not open_loads:
+            retry = min(self.drain_estimate_s(l) for l in loads)
+            return FleetVerdict(False, reason="queue_full",
+                                retry_after_s=retry)
+        for load in open_loads:
+            if load.free_slots > 0 or \
+                    self.headroom(load, itl_budget_s=itl_budget_s) > 0:
+                return FleetVerdict(True)
+        retry = min(self.drain_estimate_s(l) for l in open_loads)
+        return FleetVerdict(False, reason="saturated", retry_after_s=retry)

@@ -6,6 +6,15 @@ with step + step-duration per worker) and emits *actions* (restart from
 checkpoint, shrink/expand the mesh, re-balance data shards).  On a real
 cluster the events come from the pod runtime; in tests they are simulated —
 which is exactly how the policy logic should be validated anyway.
+
+Two supervisors share the HEALTHY -> SUSPECT -> DEAD detector:
+
+* :class:`Supervisor` — the training control plane (wall-clock heartbeats
+  from train workers; emits remesh / rebalance actions),
+* :class:`ReplicaSupervisor` — the serving control plane (tick-based
+  heartbeats from engine replicas behind the router; emits budgeted
+  ``restart`` actions so a tripped circuit breaker or lost heartbeat
+  triggers supervised restart with prefix-cache warm handoff).
 """
 
 from __future__ import annotations
@@ -39,11 +48,12 @@ class WorkerStatus:
 
 @dataclass(frozen=True)
 class Action:
-    kind: str          # restart | remesh | rebalance | none
+    kind: str          # restart | remesh | rebalance | give_up | none
     detail: str = ""
     restore_step: Optional[int] = None
     new_num_workers: Optional[int] = None
     slow_workers: Tuple[int, ...] = ()
+    replica_id: Optional[int] = None   # serving: which replica to restart
 
 
 @dataclass
@@ -149,3 +159,108 @@ class Supervisor:
             shares[i] = slow_factor
         total = sum(shares)
         return [s / total for s in shares]
+
+
+# ---------------------------------------------------------------------------
+# Serving replicas
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ReplicaSupervisorConfig:
+    """Tick-based policy knobs (a *tick* is one router pump iteration, so
+    every threshold is deterministic in tests and benchmarks)."""
+
+    suspect_after_ticks: int = 3     # missed heartbeats before SUSPECT
+    dead_after_ticks: int = 6        # missed heartbeats before DEAD
+    max_restarts: int = 3            # per replica; beyond it: give_up
+
+
+@dataclass
+class ReplicaStatus:
+    replica_id: int
+    last_heartbeat_tick: int = 0
+    state: WorkerState = WorkerState.HEALTHY
+    restarts: int = 0
+    last_failure: str = ""
+    restart_pending: bool = False    # DEAD and restart action emitted
+
+
+class ReplicaSupervisor:
+    """Health tracking + restart policy for serving engine replicas.
+
+    Events in: per-tick heartbeats from live replicas and explicit failure
+    reports from the router's circuit breakers (a tripped breaker is
+    conclusive — no SUSPECT grace period).  Actions out (from ``poll``):
+    one budgeted ``restart`` per newly dead replica, or ``give_up`` once a
+    replica has burned through ``max_restarts`` (a crash-looping replica
+    must not be restarted forever into the same fault).  The router
+    executes restarts and confirms them with ``restarted`` — the restarted
+    engine re-adopts the shared prefix-cache snapshots (warm handoff)
+    before rejoining the routing set.
+    """
+
+    def __init__(self, replica_ids,
+                 cfg: ReplicaSupervisorConfig = ReplicaSupervisorConfig()):
+        self.cfg = cfg
+        self.replicas: Dict[int, ReplicaStatus] = {
+            int(i): ReplicaStatus(int(i)) for i in replica_ids}
+
+    # ---- event ingestion ---------------------------------------------
+    def heartbeat(self, replica_id: int, tick: int) -> None:
+        r = self.replicas[replica_id]
+        r.last_heartbeat_tick = max(r.last_heartbeat_tick, tick)
+        if r.state is not WorkerState.DEAD:
+            r.state = WorkerState.HEALTHY
+
+    def report_failure(self, replica_id: int, tick: int,
+                       reason: str = "") -> None:
+        """A circuit breaker tripped: the replica is conclusively dead."""
+        r = self.replicas[replica_id]
+        r.state = WorkerState.DEAD
+        r.last_failure = reason or "breaker_tripped"
+
+    def restarted(self, replica_id: int, tick: int) -> None:
+        """Router confirmation that the replica was rebuilt and readmitted."""
+        r = self.replicas[replica_id]
+        r.state = WorkerState.HEALTHY
+        r.last_heartbeat_tick = tick
+        r.restarts += 1
+        r.restart_pending = False
+
+    # ---- policy ------------------------------------------------------
+    def state_of(self, replica_id: int) -> WorkerState:
+        return self.replicas[replica_id].state
+
+    def healthy_replicas(self) -> List[int]:
+        return [i for i, r in self.replicas.items()
+                if r.state is WorkerState.HEALTHY]
+
+    def poll(self, tick: int) -> List[Action]:
+        """The control loop body: refresh heartbeat-derived states, then
+        emit exactly one restart (or give_up) action per newly dead
+        replica.  Actions are emitted once — the router must answer with
+        ``restarted`` before another restart can be issued."""
+        actions: List[Action] = []
+        for r in self.replicas.values():
+            if r.state is not WorkerState.DEAD:
+                idle = tick - r.last_heartbeat_tick
+                if idle >= self.cfg.dead_after_ticks:
+                    r.state = WorkerState.DEAD
+                    r.last_failure = r.last_failure or "heartbeat_lost"
+                elif idle >= self.cfg.suspect_after_ticks:
+                    r.state = WorkerState.SUSPECT
+            if r.state is WorkerState.DEAD and not r.restart_pending:
+                r.restart_pending = True
+                if r.restarts >= self.cfg.max_restarts:
+                    actions.append(Action(
+                        "give_up", replica_id=r.replica_id,
+                        detail=f"replica {r.replica_id} exceeded "
+                               f"{self.cfg.max_restarts} restarts "
+                               f"({r.last_failure})"))
+                else:
+                    actions.append(Action(
+                        "restart", replica_id=r.replica_id,
+                        detail=f"replica {r.replica_id} dead "
+                               f"({r.last_failure}); supervised restart "
+                               f"{r.restarts + 1}/{self.cfg.max_restarts}"))
+        return actions

@@ -1,7 +1,20 @@
 """Serving launcher.
 
+Single-engine batch mode (drives a workload to completion and exits):
+
     python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --scheduler sol --prefix-cache --stream
+
+Gateway mode (replicated engines behind the HTTP/WS front door; serves
+until interrupted):
+
+    python -m repro.launch.serve --arch qwen2-0.5b --smoke --gateway \
+        --replicas 2 --port 8080 --rate-limit 50
+
+    curl -s localhost:8080/healthz
+    curl -s localhost:8080/v1/generate -d '{"prompt": [3,5,7], \
+"max_new_tokens": 8, "slo": "interactive"}'
+    curl -s localhost:8080/metrics
 """
 
 import argparse
@@ -16,6 +29,22 @@ from repro.serve import PrefixCache, Request, ServeEngine
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve the HTTP/WS front door over replicated "
+                         "engines instead of running a one-shot workload")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="engine replicas behind the gateway router")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--rate-limit", type=float, default=None,
+                    help="per-SLO-class token-bucket rate (requests/s, "
+                         "burst 2x); unset = unlimited")
+    ap.add_argument("--max-queue", type=int, default=8,
+                    help="bounded per-replica admission queue; a full "
+                         "fleet answers 429 with a SOL-priced Retry-After")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="slot-occupancy deadline (engine steps) after "
+                         "which a stuck request is reclaimed (timed_out)")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
@@ -51,6 +80,28 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    if args.gateway:
+        from repro.serve import SLO_CLASSES, build_replicated_router
+        from repro.serve.gateway import run_gateway
+
+        limits = None
+        if args.rate_limit:
+            limits = {slo: (args.rate_limit, 2 * args.rate_limit)
+                      for slo in SLO_CLASSES}
+        router = build_replicated_router(
+            model, params, replicas=args.replicas, max_batch=4,
+            max_len=64 if args.smoke else 256, chunk_size=args.chunk,
+            scheduler=args.scheduler, prefix_cache=args.prefix_cache,
+            rate_limits=limits, max_queue_per_replica=args.max_queue,
+            request_timeout_steps=args.deadline_steps,
+            weight_dtype=args.weight_dtype, tp_shards=args.tp_shards)
+        print(f"gateway: {args.replicas} replicas on "
+              f"http://{args.host}:{args.port}  "
+              f"(POST /v1/generate, WS /v1/stream, /healthz, /metrics)")
+        run_gateway(router, host=args.host, port=args.port)
+        return
+
     engine = ServeEngine(
         model, params, max_batch=4, max_len=64,
         prefill_mode=args.prefill, chunk_size=args.chunk,

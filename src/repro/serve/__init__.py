@@ -6,22 +6,35 @@
   scheduler.py     SLO classes, FIFO/priority admission, SOL capacity model
   streaming.py     per-token events, callbacks, iterator API
   telemetry.py     TTFT / per-token latency percentiles, utilization
+  replica.py       restartable engine replica: breaker, validation, faults
+  router.py        SOL-capacity routing, rate limits, backpressure, recovery
+  gateway.py       aiohttp HTTP + WebSocket front door (/v1/generate, WS)
+  faults.py        deterministic tick-scheduled fault injection
 """
 
 from .engine import Request, ServeEngine, resolve_tuned_decode_cfg
+from .faults import FaultEvent, FaultInjector
 from .prefill import ChunkedPrefillPlanner, PrefillPlan, SlotState
 from .prefix_cache import PrefixCache, extract_slot, insert_slot
+from .replica import (CircuitBreaker, EngineReplica, ReplicaFault,
+                      ReplicaState)
+from .router import (RateLimiter, Router, RouterRejected, Ticket,
+                     TokenBucket, build_replicated_router)
 from .scheduler import (SLO_CLASSES, EngineView, FIFOScheduler, SLOClass,
                         SOLCapacityModel, SOLScheduler, get_slo,
                         make_scheduler)
 from .streaming import StreamEvent, StreamMux, collect_streams, stream_tokens
-from .telemetry import ServeTelemetry, percentile
+from .telemetry import ServeTelemetry, fleet_summary, percentile
 
 __all__ = [
-    "ChunkedPrefillPlanner", "EngineView", "FIFOScheduler", "PrefillPlan",
-    "PrefixCache", "Request", "SLOClass", "SLO_CLASSES", "SOLCapacityModel",
-    "SOLScheduler", "ServeEngine", "ServeTelemetry", "SlotState",
-    "StreamEvent", "StreamMux", "collect_streams", "extract_slot",
-    "get_slo", "insert_slot", "make_scheduler", "percentile",
-    "resolve_tuned_decode_cfg", "stream_tokens",
+    "ChunkedPrefillPlanner", "CircuitBreaker", "EngineReplica",
+    "EngineView", "FIFOScheduler", "FaultEvent", "FaultInjector",
+    "PrefillPlan", "PrefixCache", "RateLimiter", "ReplicaFault",
+    "ReplicaState", "Request", "Router", "RouterRejected", "SLOClass",
+    "SLO_CLASSES", "SOLCapacityModel", "SOLScheduler", "ServeEngine",
+    "ServeTelemetry", "SlotState", "StreamEvent", "StreamMux", "Ticket",
+    "TokenBucket", "build_replicated_router", "collect_streams",
+    "extract_slot", "fleet_summary", "get_slo", "insert_slot",
+    "make_scheduler", "percentile", "resolve_tuned_decode_cfg",
+    "stream_tokens",
 ]

@@ -149,6 +149,11 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
     truncated: bool = False
+    # slot-occupancy deadline in engine steps (None = engine default); a
+    # request that holds a slot past it is reclaimed and marked timed_out
+    deadline_steps: Optional[int] = None
+    timed_out: bool = False
+    cancelled: bool = False
 
 
 def _reset_slot_positions(cache, slot: int):
@@ -200,7 +205,8 @@ class ServeEngine:
                  fused_decode: Optional[bool] = None,
                  weight_dtype: Optional[str] = None,
                  tp_shards: Optional[int] = None,
-                 telemetry: Optional[ServeTelemetry] = None):
+                 telemetry: Optional[ServeTelemetry] = None,
+                 request_timeout_steps: Optional[int] = None):
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
             model, max_len, fused_decode=fused_decode,
             weight_dtype=weight_dtype, tp_shards=tp_shards)
@@ -255,9 +261,13 @@ class ServeEngine:
             else ServeTelemetry()
         self.mux = StreamMux()
         self.step_count = 0
+        # default slot-occupancy deadline (engine steps); per-request
+        # ``deadline_steps`` overrides.  None = no deadline (seed behaviour)
+        self.request_timeout_steps = request_timeout_steps
         self.metrics: Dict[str, int] = {
             "steps": 0, "tokens_generated": 0, "prefill_tokens": 0,
             "requests_done": 0, "truncated": 0, "prefill_chunks": 0,
+            "timed_out": 0, "cancelled": 0,
             "prefix_hits": 0, "prefix_tokens_reused": 0,
             "decode_dispatches": 0,
             "weight_bytes_per_step": self.weight_bytes_per_step,
@@ -335,7 +345,8 @@ class ServeEngine:
                 self.metrics["prefix_hits"] += 1
                 self.metrics["prefix_tokens_reused"] += n
         self.slots[slot] = SlotState(req=req, feed=feed, pos=pos,
-                                     prompt_pos=pos)
+                                     prompt_pos=pos,
+                                     admit_step=self.step_count)
         self.metrics["prefill_tokens"] += len(feed)
         self.telemetry.on_admit(req.rid, self.step_count,
                                 prefix_tokens_reused=reused)
@@ -376,10 +387,56 @@ class ServeEngine:
         for entry in reversed(deferred):
             self.scheduler.requeue_front(entry)
 
+    def _reap_expired(self) -> None:
+        """Release slots whose request exceeded its occupancy deadline.
+
+        A request can hold a slot forever when its client is gone or its
+        generation is stuck behind a scheduler that never finishes it —
+        without a deadline the slot leaks and the engine's capacity decays
+        to zero.  Reclaimed requests are marked ``timed_out`` (``done``
+        stays False so callers can retry) and counted in the ``timed_out``
+        metric.  Runs before admission so a freed slot is reusable in the
+        same step.
+        """
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            deadline = s.req.deadline_steps \
+                if s.req.deadline_steps is not None \
+                else self.request_timeout_steps
+            if deadline is None:
+                continue
+            if self.step_count - s.admit_step >= deadline:
+                s.req.timed_out = True
+                self.slots[i] = None
+                self.metrics["timed_out"] += 1
+                self.telemetry.on_finish(s.req.rid, self.step_count,
+                                         timed_out=True)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request (client disconnect): release its slot or drop it
+        from the admission queue.  Returns True when found."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.req.rid == rid:
+                s.req.cancelled = True
+                self.slots[i] = None
+                self.metrics["cancelled"] += 1
+                self.telemetry.on_finish(rid, self.step_count,
+                                         cancelled=True)
+                return True
+        entry = self.scheduler.remove(rid)
+        if entry is not None:
+            entry.req.cancelled = True
+            self.metrics["cancelled"] += 1
+            self.telemetry.on_finish(rid, self.step_count, cancelled=True)
+            return True
+        return False
+
     # ------------------------------------------------------------------
     def step(self) -> List[StreamEvent]:
         """One engine step: admit, run one prefill/decode forward, sample."""
         t0 = time.perf_counter()
+        self._reap_expired()
         self._admit()
         if not any(self.slots):
             return []
@@ -475,7 +532,8 @@ class ServeEngine:
             steps += 1
         if self.has_work():
             for req in requests:
-                if not req.done and not req.truncated:
+                if not req.done and not req.truncated \
+                        and not req.timed_out and not req.cancelled:
                     req.truncated = True
                     self.metrics["truncated"] += 1
                     self.telemetry.on_finish(req.rid, self.step_count,

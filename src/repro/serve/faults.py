@@ -1,0 +1,83 @@
+"""Deterministic fault injection for the replicated serving path.
+
+Faults are *scheduled* against router ticks (one tick = one router pump
+iteration), so a drill is exactly reproducible: the same schedule against
+the same workload produces the same failure, detection, and recovery
+trace on every host.  Three fault families, matching how replicas really
+die:
+
+* ``kill``        — the replica's step raises from ``at_tick`` onward
+                    (process crash / device loss); permanent until the
+                    supervisor restarts it (``revive``),
+* ``delay_heartbeats`` — the replica keeps stepping but its heartbeats
+                    are suppressed for a tick window (network partition /
+                    GC pause); the supervisor must walk it through
+                    SUSPECT -> DEAD without any step ever failing,
+* ``corrupt_output`` — the replica's sampled tokens are mangled out of
+                    the vocab range for a tick window (silent data
+                    corruption); the replica's own output validation must
+                    catch it and count it as a step failure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass
+class FaultEvent:
+    kind: str          # kill | revive | heartbeat_delay | corrupt
+    replica_id: int
+    tick: int
+    detail: str = ""
+
+
+class FaultInjector:
+    """Tick-scheduled fault plan shared by the router and its replicas."""
+
+    def __init__(self):
+        self._kill_at: Dict[int, int] = {}
+        self._hb_delay: Dict[int, Tuple[int, int]] = {}   # [from, until)
+        self._corrupt: Dict[int, Tuple[int, int]] = {}    # [from, until)
+        self.events: List[FaultEvent] = []
+
+    # ---- scheduling ---------------------------------------------------
+    def kill(self, replica_id: int, at_tick: int = 0) -> None:
+        """Every step of ``replica_id`` fails from ``at_tick`` onward."""
+        self._kill_at[replica_id] = at_tick
+        self.events.append(FaultEvent("kill", replica_id, at_tick))
+
+    def revive(self, replica_id: int, tick: int = 0) -> None:
+        """Clear a kill — called by the replica's restart path (a freshly
+        restarted process does not inherit its predecessor's crash)."""
+        if self._kill_at.pop(replica_id, None) is not None:
+            self.events.append(FaultEvent("revive", replica_id, tick))
+
+    def delay_heartbeats(self, replica_id: int, from_tick: int,
+                         until_tick: int) -> None:
+        """Suppress heartbeats in ``[from_tick, until_tick)``."""
+        self._hb_delay[replica_id] = (from_tick, until_tick)
+        self.events.append(FaultEvent(
+            "heartbeat_delay", replica_id, from_tick,
+            detail=f"until tick {until_tick}"))
+
+    def corrupt_output(self, replica_id: int, at_tick: int,
+                       n_ticks: int = 1) -> None:
+        """Mangle sampled tokens in ``[at_tick, at_tick + n_ticks)``."""
+        self._corrupt[replica_id] = (at_tick, at_tick + n_ticks)
+        self.events.append(FaultEvent(
+            "corrupt", replica_id, at_tick, detail=f"{n_ticks} ticks"))
+
+    # ---- queries (consulted by EngineReplica / Router) ----------------
+    def step_fails(self, replica_id: int, tick: int) -> bool:
+        at = self._kill_at.get(replica_id)
+        return at is not None and tick >= at
+
+    def heartbeat_suppressed(self, replica_id: int, tick: int) -> bool:
+        window = self._hb_delay.get(replica_id)
+        return window is not None and window[0] <= tick < window[1]
+
+    def corrupts(self, replica_id: int, tick: int) -> bool:
+        window = self._corrupt.get(replica_id)
+        return window is not None and window[0] <= tick < window[1]

@@ -1,0 +1,234 @@
+"""HTTP + WebSocket front door over the SOL-capacity router.
+
+The network skin of the serving stack — a thin asyncio (aiohttp) layer;
+every decision (placement, admission, backpressure, breakers, recovery)
+lives in the synchronous :class:`~repro.serve.router.Router`, which a
+single background *pump task* drives inside the event loop.  One thread,
+no locks: ticket callbacks fire inside ``router.pump()`` on the loop, so
+they can touch asyncio futures/queues directly.
+
+Routes
+------
+``POST /v1/generate``   body ``{"prompt": [ints], "max_new_tokens", \
+"temperature", "slo", "deadline_steps"}``; waits for completion and
+returns ``{"tid", "tokens", "reroutes", "status"}``.  Saturation or a
+rate limit answers ``429`` with a ``Retry-After`` header priced by the
+SOL drain estimate.
+
+``GET /v1/stream``      WebSocket: client sends the same JSON request
+once, then receives one ``{"token", "index", "final"}`` message per
+sampled token and a closing ``{"done": true, "tokens": [...]}``.  If the
+serving replica dies mid-stream the stream *continues on the survivor*
+(the router replays and deduplicates); the client sees a pause, never a
+gap or a duplicate.  A disconnected client cancels the ticket and frees
+its slot.
+
+``GET /healthz``        replica/breaker/supervisor states; 200 while at
+least one replica is running, 503 when the fleet is down.
+
+``GET /metrics``        pooled fleet telemetry (p50/p95 TTFT and ITL,
+throughput, timed_out/cancelled counts, incidents, counters).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+from typing import Optional
+
+try:
+    from aiohttp import WSMsgType, web
+except ImportError:                      # pragma: no cover - aiohttp is a
+    web = None                           # soft dependency of the gateway
+    WSMsgType = None
+
+from .router import Router, RouterRejected, Ticket
+
+# idle backoff between pump ticks once the fleet has no work; with work
+# pending the pump yields to the loop but does not sleep
+IDLE_PUMP_INTERVAL_S = 0.002
+
+
+def require_aiohttp() -> None:
+    if web is None:
+        raise ImportError(
+            "the serving gateway needs aiohttp (pip install aiohttp)")
+
+
+def _reject_response(exc: RouterRejected):
+    retry = max(exc.retry_after_s, 0.001)
+    return web.json_response(
+        {"error": exc.reason, "retry_after_s": retry},
+        status=429, headers={"Retry-After": f"{retry:.3f}"})
+
+
+def _parse_generate(payload: dict) -> dict:
+    prompt = payload.get("prompt")
+    if not isinstance(prompt, list) or not prompt \
+            or not all(isinstance(t, int) for t in prompt):
+        raise ValueError("prompt must be a non-empty list of ints")
+    return dict(
+        prompt=prompt,
+        max_new_tokens=int(payload.get("max_new_tokens", 16)),
+        temperature=float(payload.get("temperature", 0.0)),
+        slo=str(payload.get("slo", "batch")),
+        deadline_steps=(int(payload["deadline_steps"])
+                        if payload.get("deadline_steps") is not None
+                        else None))
+
+
+async def _pump_loop(app) -> None:
+    router: Router = app["router"]
+    while True:
+        progressed = router.pump() if router.has_work() else False
+        if progressed:
+            await asyncio.sleep(0)       # yield; more work is likely
+        else:
+            await asyncio.sleep(IDLE_PUMP_INTERVAL_S)
+
+
+async def _pump_ctx(app):
+    task = asyncio.ensure_future(_pump_loop(app))
+    yield
+    task.cancel()
+    try:
+        await task
+    except asyncio.CancelledError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# handlers
+# ---------------------------------------------------------------------------
+
+async def handle_generate(request):
+    router: Router = request.app["router"]
+    try:
+        kw = _parse_generate(await request.json())
+    except (ValueError, TypeError, json.JSONDecodeError) as exc:
+        return web.json_response({"error": str(exc)}, status=400)
+    try:
+        ticket = router.submit(**kw)
+    except RouterRejected as exc:
+        return _reject_response(exc)
+    fut = asyncio.get_event_loop().create_future()
+
+    def on_event(t: Ticket, ev) -> None:
+        if ev is None and not fut.done():
+            fut.set_result(t.status)
+    ticket.subscribe(on_event)
+    try:
+        await fut
+    except asyncio.CancelledError:
+        router.cancel(ticket)
+        raise
+    body = {"tid": ticket.tid, "status": ticket.status,
+            "tokens": ticket.tokens, "reroutes": ticket.reroutes}
+    if ticket.status == "failed":
+        body["error"] = ticket.error
+        body["retryable"] = ticket.retryable
+        status = 504 if ticket.error == "deadline_exceeded" else 500
+        return web.json_response(body, status=status)
+    return web.json_response(body)
+
+
+async def handle_stream(request):
+    router: Router = request.app["router"]
+    ws = web.WebSocketResponse()
+    await ws.prepare(request)
+    msg = await ws.receive()
+    if msg.type != WSMsgType.TEXT:
+        await ws.close()
+        return ws
+    try:
+        kw = _parse_generate(json.loads(msg.data))
+    except (ValueError, TypeError, json.JSONDecodeError) as exc:
+        await ws.send_json({"error": str(exc)})
+        await ws.close()
+        return ws
+    try:
+        ticket = router.submit(**kw)
+    except RouterRejected as exc:
+        await ws.send_json({"error": exc.reason,
+                            "retry_after_s": exc.retry_after_s})
+        await ws.close()
+        return ws
+
+    queue: asyncio.Queue = asyncio.Queue()
+
+    def on_event(t: Ticket, ev) -> None:
+        queue.put_nowait(("end", None) if ev is None else ("token", ev))
+    ticket.subscribe(on_event)
+    try:
+        while True:
+            kind, ev = await queue.get()
+            if kind == "token":
+                await ws.send_json({"tid": ticket.tid, "token": ev.token,
+                                    "index": ev.index, "final": ev.final})
+            else:
+                if ticket.status == "done":
+                    await ws.send_json({"done": True, "tid": ticket.tid,
+                                        "tokens": ticket.tokens,
+                                        "reroutes": ticket.reroutes})
+                else:
+                    await ws.send_json({"error": ticket.error,
+                                        "retryable": ticket.retryable,
+                                        "tid": ticket.tid})
+                break
+    except (ConnectionResetError, asyncio.CancelledError):
+        router.cancel(ticket)
+        raise
+    finally:
+        if ticket.status not in ("done", "failed"):
+            router.cancel(ticket)        # client went away mid-stream
+    await ws.close()
+    return ws
+
+
+async def handle_healthz(request):
+    health = request.app["router"].healthz()
+    return web.json_response(health,
+                             status=200 if health["status"] != "down"
+                             else 503)
+
+
+async def handle_metrics(request):
+    metrics = request.app["router"].metrics()
+    return web.json_response(json.loads(json.dumps(metrics, default=str)))
+
+
+# ---------------------------------------------------------------------------
+# app assembly
+# ---------------------------------------------------------------------------
+
+def build_app(router: Router) -> "web.Application":
+    require_aiohttp()
+    app = web.Application()
+    app["router"] = router
+    app.router.add_post("/v1/generate", handle_generate)
+    app.router.add_get("/v1/stream", handle_stream)
+    app.router.add_get("/healthz", handle_healthz)
+    app.router.add_get("/metrics", handle_metrics)
+    app.cleanup_ctx.append(_pump_ctx)
+    return app
+
+
+async def start_gateway(router: Router, *, host: str = "127.0.0.1",
+                        port: int = 8080):
+    """Start serving; returns (runner, actual_port).  ``port=0`` binds an
+    ephemeral port (tests / smoke drills)."""
+    require_aiohttp()
+    app = build_app(router)
+    runner = web.AppRunner(app)
+    await runner.setup()
+    site = web.TCPSite(runner, host, port)
+    await site.start()
+    bound = runner.addresses[0][1] if runner.addresses else port
+    return runner, bound
+
+
+def run_gateway(router: Router, *, host: str = "127.0.0.1",
+                port: int = 8080) -> None:
+    """Blocking entry point for ``python -m repro.launch.serve --gateway``."""
+    require_aiohttp()
+    web.run_app(build_app(router), host=host, port=port)

@@ -32,6 +32,7 @@ class SlotState:
     pos: int = 0                      # tokens in this slot's cache
     prompt_pos: int = 0               # prompt tokens ingested (<= len prompt)
     started: bool = False             # past prefill, sampling
+    admit_step: int = 0               # engine step the slot was claimed at
 
 
 @dataclass

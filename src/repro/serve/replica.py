@@ -1,0 +1,157 @@
+"""One serving engine replica behind the router: health, circuit breaker,
+output validation, and supervised restart with prefix-cache warm handoff.
+
+The replica owns a :class:`~repro.serve.engine.ServeEngine` built by a
+``make_engine`` factory.  The factory closes over the model, params, and —
+critically — the fleet's *shared* :class:`~repro.serve.prefix_cache.
+PrefixCache`: snapshots are host-side numpy, so every replica can adopt
+them, and a restarted replica re-adopts everything its predecessor (and
+its peers) prefilled before rejoining the router.  That is the warm
+handoff: the rebuilt engine's first shared-prefix request is a cache hit,
+not a cold prefill.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+from typing import Callable, List, Optional
+
+from ..core.sol.fleet import ReplicaLoad
+from .engine import ServeEngine
+from .faults import FaultInjector
+from .streaming import StreamEvent
+
+
+class ReplicaFault(RuntimeError):
+    """A replica step failed (crash, device loss, or detected corruption)."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+class ReplicaState(str, Enum):
+    RUNNING = "running"      # in the routing set
+    EJECTED = "ejected"      # breaker open / supervisor declared dead
+    RETIRED = "retired"      # supervisor gave up (crash loop)
+
+
+@dataclass
+class CircuitBreaker:
+    """Consecutive-failure breaker: trips open after ``threshold`` step
+    failures in a row; any success resets the count.  The router ejects a
+    tripped replica from the routing set; only a supervised restart closes
+    the breaker again."""
+
+    threshold: int = 3
+    consecutive_failures: int = 0
+    open: bool = False
+    trips: int = 0
+
+    def record_success(self) -> None:
+        self.consecutive_failures = 0
+
+    def record_failure(self) -> bool:
+        """Returns True when this failure trips the breaker open."""
+        self.consecutive_failures += 1
+        if not self.open and self.consecutive_failures >= self.threshold:
+            self.open = True
+            self.trips += 1
+            return True
+        return False
+
+    def reset(self) -> None:
+        self.consecutive_failures = 0
+        self.open = False
+
+
+class EngineReplica:
+    """A restartable engine wrapped with fault hooks and validation."""
+
+    def __init__(self, replica_id: int,
+                 make_engine: Callable[[], ServeEngine], *,
+                 breaker_threshold: int = 3,
+                 injector: Optional[FaultInjector] = None):
+        self.replica_id = replica_id
+        self._make_engine = make_engine
+        self.engine = make_engine()
+        self.state = ReplicaState.RUNNING
+        self.breaker = CircuitBreaker(threshold=breaker_threshold)
+        self.injector = injector
+        self.generation = 0            # bumped on every restart
+        self.telemetries = [self.engine.telemetry]
+
+    # ---- load snapshot (what the fleet capacity model prices) ---------
+    def load(self) -> ReplicaLoad:
+        view = self.engine._view()
+        return ReplicaLoad(
+            replica_id=self.replica_id,
+            free_slots=view.free_slots,
+            num_slots=view.num_slots,
+            queue_depth=self.engine.scheduler.pending(),
+            decode_positions=tuple(view.decode_positions),
+            prefill_backlog=view.prefill_backlog)
+
+    def has_work(self) -> bool:
+        return self.engine.has_work()
+
+    # ---- stepping with fault hooks ------------------------------------
+    def step(self, tick: int) -> List[StreamEvent]:
+        """One engine step.  Raises :class:`ReplicaFault` on an injected
+        crash or when output validation catches corrupted tokens — the
+        router turns those into breaker failures."""
+        inj = self.injector
+        if inj is not None and inj.step_fails(self.replica_id, tick):
+            raise ReplicaFault("killed")
+        events = self.engine.step()
+        if inj is not None and inj.corrupts(self.replica_id, tick):
+            events = [StreamEvent(rid=ev.rid,
+                                  token=self.engine.model.cfg.vocab_size
+                                  + 7 + ev.index,
+                                  index=ev.index, step=ev.step,
+                                  final=ev.final)
+                      for ev in events]
+        vocab = self.engine.model.cfg.vocab_size
+        for ev in events:
+            if not 0 <= ev.token < vocab:
+                raise ReplicaFault("corrupt_output")
+        return events
+
+    def heartbeat_due(self, tick: int) -> bool:
+        """False while an injected network partition suppresses them."""
+        return not (self.injector is not None and
+                    self.injector.heartbeat_suppressed(self.replica_id,
+                                                       tick))
+
+    # ---- lifecycle ----------------------------------------------------
+    def eject(self) -> None:
+        self.state = ReplicaState.EJECTED
+
+    def retire(self) -> None:
+        self.state = ReplicaState.RETIRED
+
+    def restart(self, tick: int = 0) -> None:
+        """Supervised restart: rebuild the engine from the factory (fresh
+        cache/slots, same params, SAME shared prefix cache -> warm
+        handoff), clear the injected kill (a new process does not inherit
+        the old crash), close the breaker, and rejoin the routing set."""
+        if self.injector is not None:
+            self.injector.revive(self.replica_id, tick)
+        self.engine = self._make_engine()
+        self.telemetries.append(self.engine.telemetry)
+        self.breaker.reset()
+        self.generation += 1
+        self.state = ReplicaState.RUNNING
+
+    def describe(self) -> dict:
+        return {
+            "replica_id": self.replica_id,
+            "state": self.state.value,
+            "generation": self.generation,
+            "breaker_open": self.breaker.open,
+            "breaker_trips": self.breaker.trips,
+            "queue_depth": self.engine.scheduler.pending(),
+            "active_slots": sum(1 for s in self.engine.slots
+                                if s is not None),
+        }

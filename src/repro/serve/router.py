@@ -1,0 +1,431 @@
+"""SOL-capacity router over replicated serving engines.
+
+The front half of the fault-tolerant serving stack (the gateway is the
+network skin over this).  Synchronous and tick-driven by design: one
+``pump()`` call steps every running replica once, delivers their tokens
+to tickets, exchanges heartbeats with the supervisor, and executes any
+restart actions — so every failure drill is deterministic and the same
+router drives the asyncio gateway, the tests, and the load benchmark.
+
+Robustness levers, each priced or budgeted rather than guessed:
+
+* placement: requests land on the replica where the SOL fleet model says
+  they cost least (queue depth x predicted step time + the request's own
+  prefill), not round-robin,
+* admission: per-SLO-class token buckets first, then the fleet
+  saturation verdict — a rejected request carries a Retry-After derived
+  from the SOL drain estimate (HTTP 429 at the gateway),
+* deadlines: the engines reclaim slots from requests that outlive their
+  occupancy deadline (``timed_out``); the router fails those tickets
+  with a retryable error,
+* circuit breakers: consecutive step failures (crash or detected output
+  corruption) trip a replica out of the routing set; heartbeat loss gets
+  there through the supervisor's SUSPECT -> DEAD walk,
+* recovery: a dead replica's in-flight tickets are re-routed to
+  survivors and *replayed* — greedy decoding is deterministic, so
+  already-delivered tokens are verified against the replay (any
+  divergence fails the ticket) and only the tail is newly delivered;
+  the supervisor then restarts the replica with prefix-cache warm
+  handoff and the router readmits it.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..core.sol.fleet import FleetCapacityModel, ReplicaLoad
+from ..ft.supervisor import ReplicaSupervisor, ReplicaSupervisorConfig
+from .engine import Request
+from .faults import FaultInjector
+from .replica import EngineReplica, ReplicaFault, ReplicaState
+from .scheduler import get_slo
+from .telemetry import fleet_summary
+
+
+class RouterRejected(Exception):
+    """Admission refused; the gateway maps this to HTTP 429."""
+
+    def __init__(self, reason: str, retry_after_s: float = 1.0):
+        super().__init__(f"{reason} (retry after {retry_after_s:.3f}s)")
+        self.reason = reason
+        self.retry_after_s = retry_after_s
+
+
+@dataclass
+class TokenBucket:
+    """Classic token bucket: ``rate`` requests/s refill up to ``burst``."""
+
+    rate: float
+    burst: float
+    tokens: float = field(init=False)
+    last: Optional[float] = field(default=None, init=False)
+
+    def __post_init__(self):
+        self.tokens = self.burst
+
+    def try_take(self, now: float) -> float:
+        """0.0 on success; else seconds until a token will be available."""
+        if self.last is not None:
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self.last) * self.rate)
+        self.last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return 0.0
+        return (1.0 - self.tokens) / max(self.rate, 1e-9)
+
+
+class RateLimiter:
+    """Per-SLO-class token buckets.  ``limits`` maps class name to
+    (rate_per_s, burst); classes without an entry are unlimited."""
+
+    def __init__(self, limits: Optional[Dict[str, tuple]] = None):
+        self._buckets = {slo: TokenBucket(rate=float(r), burst=float(b))
+                         for slo, (r, b) in (limits or {}).items()}
+
+    def try_take(self, slo: str, now: float) -> float:
+        bucket = self._buckets.get(slo)
+        return bucket.try_take(now) if bucket is not None else 0.0
+
+
+TERMINAL = ("done", "failed")
+
+
+@dataclass
+class Ticket:
+    """Router-level request state, stable across replica reassignment."""
+
+    tid: int
+    prompt: List[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+    slo: str = "batch"
+    deadline_steps: Optional[int] = None
+    status: str = "queued"           # queued | running | done | failed
+    tokens: List[int] = field(default_factory=list)
+    error: str = ""
+    retryable: bool = False
+    replica_id: Optional[int] = None
+    reroutes: int = 0
+    submit_tick: int = 0
+    first_token_tick: int = -1
+    finish_tick: int = -1
+    _req: Optional[Request] = None   # current engine-level request
+    _subscribers: List[Callable] = field(default_factory=list)
+
+    def subscribe(self, cb: Callable[["Ticket", Optional[object]], None]
+                  ) -> None:
+        """cb(ticket, event) per newly delivered token; cb(ticket, None)
+        on terminal transition."""
+        self._subscribers.append(cb)
+
+    def _notify(self, event=None) -> None:
+        for cb in self._subscribers:
+            cb(self, event)
+
+
+class Router:
+    """Routes requests over N :class:`EngineReplica`s; self-heals."""
+
+    def __init__(self, replicas: Sequence[EngineReplica],
+                 fleet: FleetCapacityModel, *,
+                 supervisor: Optional[ReplicaSupervisor] = None,
+                 rate_limits: Optional[Dict[str, tuple]] = None,
+                 injector: Optional[FaultInjector] = None,
+                 clock=time.monotonic):
+        self.replicas: Dict[int, EngineReplica] = {
+            r.replica_id: r for r in replicas}
+        self.fleet = fleet
+        self.supervisor = supervisor if supervisor is not None else \
+            ReplicaSupervisor(list(self.replicas),
+                              ReplicaSupervisorConfig())
+        self.limiter = RateLimiter(rate_limits)
+        self.injector = injector
+        self.clock = clock
+        self.tick = 0
+        self.tickets: Dict[int, Ticket] = {}
+        self._tids = itertools.count()
+        self._death_tick: Dict[int, int] = {}
+        self.incidents: List[dict] = []
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "rejected_rate_limited": 0,
+            "rejected_saturated": 0, "rerouted_tickets": 0,
+            "replica_restarts": 0, "step_failures": 0,
+            "divergence_failures": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def _running(self) -> List[EngineReplica]:
+        return [r for r in self.replicas.values()
+                if r.state is ReplicaState.RUNNING]
+
+    def _loads(self) -> List[ReplicaLoad]:
+        return [r.load() for r in self._running()]
+
+    # ---- admission ----------------------------------------------------
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
+               temperature: float = 0.0, slo: str = "batch",
+               deadline_steps: Optional[int] = None) -> Ticket:
+        """Admit one request or raise :class:`RouterRejected`."""
+        get_slo(slo)                       # validate the class early
+        retry = self.limiter.try_take(slo, self.clock())
+        if retry > 0:
+            self.counters["rejected_rate_limited"] += 1
+            raise RouterRejected("rate_limited", retry)
+        loads = self._loads()
+        verdict = self.fleet.verdict(
+            loads, prompt_tokens=len(prompt),
+            itl_budget_s=get_slo(slo).itl_target_s)
+        if not verdict.admit:
+            self.counters["rejected_saturated"] += 1
+            raise RouterRejected(verdict.reason, verdict.retry_after_s)
+        ticket = Ticket(tid=next(self._tids), prompt=list(map(int, prompt)),
+                        max_new_tokens=int(max_new_tokens),
+                        temperature=float(temperature), slo=slo,
+                        deadline_steps=deadline_steps,
+                        submit_tick=self.tick)
+        self.tickets[ticket.tid] = ticket
+        self._place(ticket, loads)
+        self.counters["submitted"] += 1
+        return ticket
+
+    def _place(self, ticket: Ticket, loads: Sequence[ReplicaLoad]) -> None:
+        rid = self.fleet.choose(loads, len(ticket.prompt))
+        if rid is None:
+            # every open replica filled up between verdict and placement
+            raise RouterRejected(
+                "queue_full",
+                min((self.fleet.drain_estimate_s(l) for l in loads),
+                    default=1.0))
+        replica = self.replicas[rid]
+        req = Request(rid=ticket.tid, prompt=list(ticket.prompt),
+                      max_new_tokens=ticket.max_new_tokens,
+                      temperature=ticket.temperature, slo=ticket.slo,
+                      deadline_steps=ticket.deadline_steps)
+        replica.engine.submit(req)
+        ticket.replica_id = rid
+        ticket._req = req
+        ticket.status = "queued"
+
+    def cancel(self, ticket: Ticket) -> None:
+        """Client gone: reclaim the slot and close the ticket."""
+        if ticket.status in TERMINAL:
+            return
+        if ticket.replica_id is not None:
+            replica = self.replicas.get(ticket.replica_id)
+            if replica is not None and \
+                    replica.state is ReplicaState.RUNNING:
+                replica.engine.cancel(ticket.tid)
+        self._finish(ticket, "failed", error="cancelled", retryable=False)
+
+    # ---- ticket transitions ------------------------------------------
+    def _finish(self, ticket: Ticket, status: str, *, error: str = "",
+                retryable: bool = False) -> None:
+        ticket.status = status
+        ticket.error = error
+        ticket.retryable = retryable
+        ticket.finish_tick = self.tick
+        ticket._notify(None)
+
+    def _deliver(self, replica: EngineReplica, events) -> None:
+        """Map engine events onto tickets; replayed tokens are verified
+        against what was already delivered (zero-divergence guarantee)."""
+        for ev in events:
+            ticket = self.tickets.get(ev.rid)
+            if ticket is None or ticket.status in TERMINAL \
+                    or ticket.replica_id != replica.replica_id:
+                continue                 # stale event (rerouted/cancelled)
+            if ev.index < len(ticket.tokens):
+                if ticket.tokens[ev.index] != ev.token:
+                    self.counters["divergence_failures"] += 1
+                    self._finish(ticket, "failed",
+                                 error="output_divergence",
+                                 retryable=False)
+                continue                 # replayed token: verified, skip
+            ticket.tokens.append(int(ev.token))
+            ticket.status = "running"
+            if ticket.first_token_tick < 0:
+                ticket.first_token_tick = self.tick
+            ticket._notify(ev)
+            if ev.final:
+                self._finish(ticket, "done")
+
+    def _sweep_timeouts(self, replica: EngineReplica) -> None:
+        for ticket in self.tickets.values():
+            if ticket.status in TERMINAL \
+                    or ticket.replica_id != replica.replica_id:
+                continue
+            req = ticket._req
+            if req is not None and req.timed_out:
+                self._finish(ticket, "failed", error="deadline_exceeded",
+                             retryable=True)
+
+    # ---- failure handling --------------------------------------------
+    def _eject(self, replica: EngineReplica, reason: str) -> None:
+        replica.eject()
+        self._death_tick[replica.replica_id] = self.tick
+        self.supervisor.report_failure(replica.replica_id, self.tick,
+                                       reason)
+        self._reroute_tickets(replica)
+
+    def _reroute_tickets(self, dead: EngineReplica) -> None:
+        """Move the dead replica's live tickets to survivors, replaying
+        from the prompt (greedy decode makes the replay bit-identical, so
+        clients notice nothing beyond a pause)."""
+        for ticket in self.tickets.values():
+            if ticket.status in TERMINAL \
+                    or ticket.replica_id != dead.replica_id:
+                continue
+            loads = self._loads()
+            try:
+                self._place(ticket, loads)
+                ticket.reroutes += 1
+                self.counters["rerouted_tickets"] += 1
+            except RouterRejected as exc:
+                self._finish(ticket, "failed", error=exc.reason,
+                             retryable=True)
+
+    def _restart(self, replica: EngineReplica) -> None:
+        t0 = time.perf_counter()
+        replica.restart(self.tick)
+        rebuild_s = time.perf_counter() - t0
+        self.supervisor.restarted(replica.replica_id, self.tick)
+        self.counters["replica_restarts"] += 1
+        death = self._death_tick.pop(replica.replica_id, self.tick)
+        self.incidents.append({
+            "replica_id": replica.replica_id,
+            "death_tick": death,
+            "restart_tick": self.tick,
+            "recovery_ticks": self.tick - death,
+            "rebuild_s": rebuild_s,
+            "generation": replica.generation,
+        })
+
+    # ---- the control loop body ---------------------------------------
+    def pump(self) -> bool:
+        """One tick: step replicas, deliver tokens, heartbeat, supervise.
+        Returns True when any replica did work (progress signal for the
+        gateway's idle backoff)."""
+        self.tick += 1
+        progressed = False
+        for replica in list(self.replicas.values()):
+            if replica.state is not ReplicaState.RUNNING:
+                continue
+            if replica.has_work():
+                try:
+                    events = replica.step(self.tick)
+                    replica.breaker.record_success()
+                    progressed = True
+                    self._deliver(replica, events)
+                    self._sweep_timeouts(replica)
+                except ReplicaFault as fault:
+                    self.counters["step_failures"] += 1
+                    if replica.breaker.record_failure():
+                        self._eject(replica, fault.reason)
+                    continue
+            if replica.heartbeat_due(self.tick):
+                self.supervisor.heartbeat(replica.replica_id, self.tick)
+        for action in self.supervisor.poll(self.tick):
+            replica = self.replicas.get(action.replica_id)
+            if replica is None:
+                continue
+            if action.kind == "restart":
+                if replica.state is ReplicaState.RUNNING:
+                    # supervisor-detected death (heartbeat loss): the
+                    # breaker never saw a step fail, so eject here
+                    self._eject(replica, "heartbeat_lost")
+                self._restart(replica)
+            elif action.kind == "give_up":
+                if replica.state is ReplicaState.RUNNING:
+                    self._eject(replica, "give_up")
+                replica.retire()
+        return progressed
+
+    def has_work(self) -> bool:
+        return any(r.has_work() for r in self._running()) or any(
+            t.status not in TERMINAL for t in self.tickets.values())
+
+    def run_until_complete(self, tickets: Sequence[Ticket], *,
+                           max_ticks: int = 10000) -> None:
+        """Drive pumps until every ticket is terminal (tests/benchmarks)."""
+        for _ in range(max_ticks):
+            if all(t.status in TERMINAL for t in tickets):
+                return
+            self.pump()
+        raise TimeoutError(
+            f"tickets not terminal after {max_ticks} ticks: "
+            f"{[t.tid for t in tickets if t.status not in TERMINAL]}")
+
+    # ---- observability ------------------------------------------------
+    def healthz(self) -> dict:
+        states = [r.describe() for r in self.replicas.values()]
+        n_run = sum(1 for r in self.replicas.values()
+                    if r.state is ReplicaState.RUNNING)
+        status = "ok" if n_run == len(self.replicas) else (
+            "degraded" if n_run else "down")
+        return {"status": status, "running": n_run,
+                "replicas": states,
+                "supervisor": {
+                    str(i): self.supervisor.state_of(i).value
+                    for i in self.replicas}}
+
+    def metrics(self) -> dict:
+        telemetries = [t for r in self.replicas.values()
+                       for t in r.telemetries]
+        out = fleet_summary(telemetries)
+        out["counters"] = dict(self.counters)
+        out["incidents"] = list(self.incidents)
+        out["tick"] = self.tick
+        out["queue_depth"] = sum(r.engine.scheduler.pending()
+                                 for r in self._running())
+        return out
+
+
+def build_replicated_router(model, params, *, replicas: int = 2,
+                            max_batch: int = 4, max_len: int = 256,
+                            chunk_size: int = 16, scheduler: str = "fifo",
+                            prefix_cache: bool = True,
+                            request_timeout_steps: Optional[int] = None,
+                            rate_limits: Optional[Dict[str, tuple]] = None,
+                            max_queue_per_replica: int = 8,
+                            breaker_threshold: int = 3,
+                            supervisor_cfg: Optional[
+                                ReplicaSupervisorConfig] = None,
+                            injector: Optional[FaultInjector] = None,
+                            efficiency: Optional[float] = 0.5,
+                            clock=time.monotonic,
+                            **engine_kw) -> Router:
+    """Build N engine replicas sharing one params pytree and ONE prefix
+    cache (host-side snapshots adopt across replicas — the warm-handoff
+    substrate), an SOL fleet capacity model over the replicas' common
+    config, and a supervised router on top."""
+    from .prefix_cache import PrefixCache
+    from .scheduler import SOLCapacityModel
+
+    shared_cache = PrefixCache(block=chunk_size) if prefix_cache else None
+
+    def make_engine() -> "ServeEngine":
+        from .engine import ServeEngine
+        return ServeEngine(model, params, max_batch=max_batch,
+                           max_len=max_len, chunk_size=chunk_size,
+                           scheduler=scheduler, prefix_cache=shared_cache,
+                           request_timeout_steps=request_timeout_steps,
+                           **engine_kw)
+
+    fleet_replicas = [
+        EngineReplica(i, make_engine, breaker_threshold=breaker_threshold,
+                      injector=injector)
+        for i in range(replicas)]
+    capacity = SOLCapacityModel(fleet_replicas[0].engine.model.cfg,
+                                efficiency=efficiency)
+    fleet = FleetCapacityModel(capacity,
+                               max_queue_per_replica=max_queue_per_replica)
+    supervisor = ReplicaSupervisor(
+        [r.replica_id for r in fleet_replicas],
+        supervisor_cfg if supervisor_cfg is not None
+        else ReplicaSupervisorConfig())
+    return Router(fleet_replicas, fleet, supervisor=supervisor,
+                  rate_limits=rate_limits, injector=injector, clock=clock)

@@ -214,6 +214,15 @@ class FIFOScheduler:
         the engine's prefix-aware admission)."""
         self._queue.appendleft(entry)
 
+    def remove(self, rid: int) -> Optional[QueueEntry]:
+        """Drop a queued request by rid (client cancelled before admission);
+        returns the removed entry or None when not queued."""
+        for entry in self._queue:
+            if getattr(entry.req, "rid", None) == rid:
+                self._queue.remove(entry)
+                return entry
+        return None
+
     def prefill_budget(self, view: EngineView) -> Optional[int]:
         """Token budget for this step's prefill; None = unlimited."""
         return None

@@ -41,6 +41,8 @@ class RequestTrace:
     prompt_tokens: int = 0
     prefix_tokens_reused: int = 0
     truncated: bool = False
+    timed_out: bool = False
+    cancelled: bool = False
 
     @property
     def ttft_steps(self) -> Optional[int]:
@@ -115,11 +117,14 @@ class ServeTelemetry:
             t.first_token_time = self._clock()
 
     def on_finish(self, rid: int, step: int, *,
-                  truncated: bool = False) -> None:
+                  truncated: bool = False, timed_out: bool = False,
+                  cancelled: bool = False) -> None:
         t = self._trace(rid)
         t.finish_step = step
         t.finish_time = self._clock()
         t.truncated = truncated
+        t.timed_out = timed_out
+        t.cancelled = cancelled
 
     def on_prefix_lookup(self, hit: bool) -> None:
         self.prefix_lookups += 1
@@ -161,8 +166,11 @@ class ServeTelemetry:
         return {
             "requests": len(self.traces),
             "completed": sum(1 for t in self.traces.values()
-                             if t.finish_step >= 0 and not t.truncated),
+                             if t.finish_step >= 0 and not t.truncated
+                             and not t.timed_out and not t.cancelled),
             "truncated": sum(1 for t in self.traces.values() if t.truncated),
+            "timed_out": sum(1 for t in self.traces.values() if t.timed_out),
+            "cancelled": sum(1 for t in self.traces.values() if t.cancelled),
             "steps": self.steps,
             "tokens": total_tokens,
             "throughput_tok_s": (total_tokens / total_time
@@ -197,3 +205,44 @@ class ServeTelemetry:
             "prefix_tokens_reused": sum(t.prefix_tokens_reused
                                         for t in self.traces.values()),
         }
+
+
+def fleet_summary(telemetries: List["ServeTelemetry"]) -> Dict[str, object]:
+    """Pool per-replica telemetry into one fleet-level summary.
+
+    Percentiles are computed over the POOLED per-request samples (not
+    averaged per-replica percentiles, which would be wrong for skewed
+    loads); counters and token totals are summed.  This is what the
+    gateway's ``/metrics`` route publishes for a replicated deployment.
+    """
+    traces = [t for tel in telemetries for t in tel.traces.values()]
+    done = [t for t in traces if t.first_token_step >= 0]
+    ttft_steps = [float(t.ttft_steps) for t in done
+                  if t.ttft_steps is not None]
+    ttft_s = [t.ttft_seconds for t in done if t.ttft_seconds is not None]
+    itl = [t.mean_itl_seconds for t in done
+           if t.mean_itl_seconds is not None]
+    total_tokens = sum(t.n_tokens for t in traces)
+    total_time = sum(sum(tel.step_seconds) for tel in telemetries)
+    return {
+        "replicas": len(telemetries),
+        "requests": len(traces),
+        "completed": sum(1 for t in traces
+                         if t.finish_step >= 0 and not t.truncated
+                         and not t.timed_out and not t.cancelled),
+        "truncated": sum(1 for t in traces if t.truncated),
+        "timed_out": sum(1 for t in traces if t.timed_out),
+        "cancelled": sum(1 for t in traces if t.cancelled),
+        "steps": sum(tel.steps for tel in telemetries),
+        "tokens": total_tokens,
+        "throughput_tok_s": (total_tokens / total_time
+                             if total_time > 0 else 0.0),
+        "ttft_steps_p50": percentile(ttft_steps, 50),
+        "ttft_steps_p95": percentile(ttft_steps, 95),
+        "ttft_s_p50": percentile(ttft_s, 50),
+        "ttft_s_p95": percentile(ttft_s, 95),
+        "itl_s_p50": percentile(itl, 50),
+        "itl_s_p95": percentile(itl, 95),
+        "prefix_hits": sum(tel.prefix_hits for tel in telemetries),
+        "prefix_lookups": sum(tel.prefix_lookups for tel in telemetries),
+    }

@@ -1,0 +1,491 @@
+"""Fault-tolerant serving front door: router placement, admission and
+backpressure, circuit breakers, fault drills (kill / heartbeat loss /
+output corruption), zero-divergence re-routing, warm handoff, and the
+aiohttp HTTP + WebSocket gateway over real sockets."""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core.sol.fleet import (FleetCapacityModel,  # noqa: E402
+                                  ReplicaLoad)
+from repro.ft.supervisor import (ReplicaSupervisorConfig,  # noqa: E402
+                                 WorkerState)
+from repro.models.model import build_model  # noqa: E402
+from repro.serve import (FaultInjector, ReplicaState, Request,  # noqa: E402
+                         RouterRejected, ServeEngine, SOLCapacityModel,
+                         TokenBucket, build_replicated_router)
+
+_MODEL = None
+
+
+def tiny_model():
+    global _MODEL
+    if _MODEL is None:
+        cfg = get_arch("qwen2-0.5b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL = (model, params)
+    return _MODEL
+
+
+def make_router(replicas=2, **kw):
+    model, params = tiny_model()
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("chunk_size", 4)
+    return build_replicated_router(model, params, replicas=replicas, **kw)
+
+
+def prompts(n=4, length=5, seed=0):
+    model, _ = tiny_model()
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, model.cfg.vocab_size, length)))
+            for _ in range(n)]
+
+
+def baseline_tokens(prompt, max_new=4):
+    """Single-engine greedy reference for divergence checks."""
+    model, params = tiny_model()
+    req = Request(rid=0, prompt=list(prompt), max_new_tokens=max_new)
+    ServeEngine(model, params, max_batch=1, max_len=32,
+                chunk_size=4).run([req])
+    return req.out_tokens
+
+
+class TestFleetCapacityModel:
+    def make(self, **kw):
+        model, _ = tiny_model()
+        return FleetCapacityModel(SOLCapacityModel(model.cfg), **kw)
+
+    def load(self, rid=0, free=2, slots=2, queue=0, decode=(), backlog=0):
+        return ReplicaLoad(replica_id=rid, free_slots=free, num_slots=slots,
+                           queue_depth=queue, decode_positions=decode,
+                           prefill_backlog=backlog)
+
+    def test_choose_prefers_idle_replica(self):
+        fleet = self.make()
+        busy = self.load(rid=0, free=0, queue=3, decode=(8, 8),
+                         backlog=64)
+        idle = self.load(rid=1)
+        assert fleet.choose([busy, idle], prompt_tokens=8) == 1
+
+    def test_choose_skips_full_queues(self):
+        fleet = self.make(max_queue_per_replica=2)
+        full = self.load(rid=0, free=0, queue=2)
+        open_ = self.load(rid=1, free=0, queue=1, decode=(4,))
+        assert fleet.choose([full, open_], prompt_tokens=4) == 1
+        assert fleet.choose([full], prompt_tokens=4) is None
+
+    def test_verdict_saturated_prices_retry_after(self):
+        fleet = self.make(max_queue_per_replica=2)
+        loads = [self.load(rid=i, free=0, queue=2, decode=(8, 8))
+                 for i in range(2)]
+        v = fleet.verdict(loads, prompt_tokens=4, itl_budget_s=10.0)
+        assert not v.admit
+        assert v.retry_after_s > 0
+
+    def test_verdict_admits_open_fleet(self):
+        v = self.make().verdict([self.load()], prompt_tokens=4,
+                                itl_budget_s=10.0)
+        assert v.admit
+
+    def test_no_replicas_is_rejected(self):
+        v = self.make().verdict([], prompt_tokens=4, itl_budget_s=10.0)
+        assert not v.admit and v.reason == "no_replicas"
+
+
+class TestAdmission:
+    def test_token_bucket_refills_at_rate(self):
+        b = TokenBucket(rate=2.0, burst=2.0)
+        assert b.try_take(0.0) == 0.0
+        assert b.try_take(0.0) == 0.0
+        wait = b.try_take(0.0)           # burst exhausted
+        assert wait == pytest.approx(0.5)
+        assert b.try_take(1.0) == 0.0    # refilled
+
+    def test_rate_limit_rejects_with_retry_after(self):
+        now = [0.0]
+        router = make_router(rate_limits={"batch": (1.0, 1.0)},
+                             clock=lambda: now[0])
+        ps = prompts(3)
+        router.submit(ps[0], max_new_tokens=2)
+        with pytest.raises(RouterRejected) as exc:
+            router.submit(ps[1], max_new_tokens=2)
+        assert exc.value.reason == "rate_limited"
+        assert exc.value.retry_after_s > 0
+        # interactive class has no bucket configured -> unlimited
+        router.submit(ps[1], max_new_tokens=2, slo="interactive")
+        now[0] = 2.0                     # bucket refilled
+        router.submit(ps[2], max_new_tokens=2)
+        assert router.counters["rejected_rate_limited"] == 1
+
+    def test_backpressure_when_fleet_saturated(self):
+        router = make_router(replicas=1, max_batch=1,
+                             max_queue_per_replica=1)
+        ps = prompts(3)
+        router.submit(ps[0], max_new_tokens=8)
+        router.pump()                            # admitted into the slot
+        router.submit(ps[1], max_new_tokens=8)   # fills the queue
+        with pytest.raises(RouterRejected) as exc:
+            router.submit(ps[2], max_new_tokens=2)
+        assert exc.value.reason == "queue_full"
+        assert exc.value.retry_after_s > 0
+        assert router.counters["rejected_saturated"] == 1
+
+    def test_placement_spreads_by_capacity(self):
+        router = make_router(replicas=2)
+        t1, t2 = (router.submit(p, max_new_tokens=2)
+                  for p in prompts(2))
+        assert {t1.replica_id, t2.replica_id} == {0, 1}
+
+
+class TestFaultDrills:
+    def run_fleet(self, router, tickets):
+        router.run_until_complete(tickets, max_ticks=2000)
+        return tickets
+
+    def submit_all(self, router, ps, max_new=4):
+        return [router.submit(p, max_new_tokens=max_new) for p in ps]
+
+    def test_kill_mid_stream_reroutes_zero_divergence(self):
+        """The acceptance drill: replica killed mid-generation; its
+        tickets replay on the survivor and finish with tokens identical
+        to a fault-free single engine."""
+        inj = FaultInjector()
+        router = make_router(injector=inj)
+        ps = prompts(4)
+        tickets = self.submit_all(router, ps)
+        inj.kill(0, at_tick=3)
+        self.run_fleet(router, tickets)
+        assert all(t.status == "done" for t in tickets)
+        assert router.counters["rerouted_tickets"] > 0
+        for t, p in zip(tickets, ps):
+            assert t.tokens == baseline_tokens(p)
+        victims = [t for t in tickets if t.reroutes > 0]
+        assert victims and all(t.replica_id == 1 for t in victims)
+        assert router.counters["divergence_failures"] == 0
+
+    def test_breaker_trips_after_threshold(self):
+        inj = FaultInjector()
+        router = make_router(injector=inj, breaker_threshold=3)
+        tickets = self.submit_all(router, prompts(2))
+        inj.kill(0, at_tick=1)
+        for _ in range(2):
+            router.pump()
+        r0 = router.replicas[0]
+        assert r0.state is ReplicaState.RUNNING    # not yet tripped
+        assert r0.breaker.consecutive_failures == 2
+        router.pump()                              # third strike
+        assert r0.state is not ReplicaState.RUNNING or r0.generation == 1
+        assert router.counters["step_failures"] >= 3
+        self.run_fleet(router, tickets)
+        assert all(t.status == "done" for t in tickets)
+
+    def test_supervised_restart_and_readmission(self):
+        inj = FaultInjector()
+        router = make_router(injector=inj)
+        tickets = self.submit_all(router, prompts(4))
+        inj.kill(0, at_tick=2)
+        self.run_fleet(router, tickets)
+        r0 = router.replicas[0]
+        assert r0.state is ReplicaState.RUNNING
+        assert r0.generation == 1
+        assert not r0.breaker.open
+        assert router.counters["replica_restarts"] == 1
+        assert len(router.incidents) == 1
+        assert router.supervisor.state_of(0) is WorkerState.HEALTHY
+        # readmitted: new submissions can land on the restarted replica
+        extra = [router.submit(p, max_new_tokens=2)
+                 for p in prompts(4, seed=7)]
+        assert 0 in {t.replica_id for t in extra}
+        self.run_fleet(router, extra)
+        assert all(t.status == "done" for t in extra)
+
+    def test_heartbeat_loss_walks_suspect_to_dead(self):
+        """A partitioned replica never fails a step — the supervisor's
+        missed-heartbeat walk must get it restarted anyway."""
+        cfg = ReplicaSupervisorConfig(suspect_after_ticks=2,
+                                      dead_after_ticks=4)
+        inj = FaultInjector()
+        router = make_router(injector=inj, supervisor_cfg=cfg)
+        tickets = self.submit_all(router, prompts(2))
+        inj.delay_heartbeats(0, from_tick=1, until_tick=50)
+        for _ in range(3):
+            router.pump()
+        assert router.supervisor.state_of(0) is WorkerState.SUSPECT
+        while not router.incidents and router.tick < 50:
+            router.pump()
+        assert router.incidents[0]["replica_id"] == 0
+        assert router.replicas[0].generation == 1
+        self.run_fleet(router, tickets)
+        assert all(t.status == "done" for t in tickets)
+
+    def test_corrupt_output_detected_and_survived(self):
+        """Silently corrupted tokens must be caught by output validation
+        (never delivered), charged to the breaker, and recovered from."""
+        inj = FaultInjector()
+        router = make_router(injector=inj, breaker_threshold=1)
+        ps = prompts(4)
+        tickets = self.submit_all(router, ps)
+        inj.corrupt_output(0, at_tick=2, n_ticks=1)
+        self.run_fleet(router, tickets)
+        assert all(t.status == "done" for t in tickets)
+        vocab = tiny_model()[0].cfg.vocab_size
+        assert all(0 <= tok < vocab for t in tickets for tok in t.tokens)
+        for t, p in zip(tickets, ps):
+            assert t.tokens == baseline_tokens(p)
+        assert router.counters["step_failures"] >= 1
+
+    def test_warm_handoff_shared_prefix_cache(self):
+        """The restarted engine re-adopts the fleet-shared prefix cache:
+        its first shared-prefix request is a hit, not a cold prefill."""
+        inj = FaultInjector()
+        router = make_router(injector=inj)
+        shared = prompts(1, length=8)[0]
+        tails = prompts(4, length=3, seed=3)
+        tickets = self.submit_all(router, [shared + t for t in tails])
+        inj.kill(0, at_tick=4)
+        self.run_fleet(router, tickets)
+        r0, r1 = router.replicas[0], router.replicas[1]
+        assert r0.generation == 1
+        assert r0.engine.prefix_cache is r1.engine.prefix_cache
+        assert len(r0.engine.prefix_cache) > 0
+        before = r0.engine.metrics["prefix_hits"]
+        extra = router.submit(shared + prompts(1, length=3, seed=9)[0],
+                              max_new_tokens=2)
+        while extra.status not in ("done", "failed"):
+            router.pump()
+        hit_engine = router.replicas[extra.replica_id].engine
+        assert hit_engine.metrics["prefix_hits"] > (
+            before if extra.replica_id == 0 else 0) - 1
+
+    def test_crash_loop_gives_up_and_fails_fast(self):
+        """A replica that dies into the same fault on every restart must
+        be retired after max_restarts, not bounced forever."""
+        cfg = ReplicaSupervisorConfig(max_restarts=1)
+
+        class StickyInjector(FaultInjector):
+            def revive(self, replica_id, tick=0):
+                super().revive(replica_id, tick)
+                self.kill(replica_id, tick + 1)    # same fault, next tick
+
+        inj = StickyInjector()
+        router = make_router(injector=inj, supervisor_cfg=cfg)
+        tickets = self.submit_all(router, prompts(4))
+        inj.kill(0, at_tick=2)
+        self.run_fleet(router, tickets)
+        assert all(t.status == "done" for t in tickets)
+        assert router.replicas[0].generation == 1    # budget spent
+        # new work lands on the restarted replica -> it dies into the
+        # same fault -> the supervisor gives up instead of bouncing it
+        extra = self.submit_all(router, prompts(4, seed=5))
+        self.run_fleet(router, extra)
+        assert all(t.status == "done" for t in extra)
+        assert router.replicas[0].state is ReplicaState.RETIRED
+        assert router.healthz()["status"] == "degraded"
+
+    def test_deadline_exceeded_fails_retryable(self):
+        router = make_router()
+        t = router.submit(prompts(1)[0], max_new_tokens=20,
+                          deadline_steps=2)
+        while t.status not in ("done", "failed") and router.tick < 100:
+            router.pump()
+        assert t.status == "failed"
+        assert t.error == "deadline_exceeded"
+        assert t.retryable
+
+    def test_cancel_releases_capacity(self):
+        router = make_router(replicas=1, max_batch=1,
+                             max_queue_per_replica=1)
+        ps = prompts(3)
+        t1 = router.submit(ps[0], max_new_tokens=8)
+        router.pump()                                 # t1 takes the slot
+        t2 = router.submit(ps[1], max_new_tokens=8)   # queued
+        router.cancel(t1)
+        assert t1.status == "failed" and t1.error == "cancelled"
+        router.pump()                # freed slot admits the queued request
+        t3 = router.submit(ps[2], max_new_tokens=2)
+        router.run_until_complete([t2, t3], max_ticks=500)
+        assert t2.status == "done" and t3.status == "done"
+        eng = router.replicas[0].engine
+        assert eng.metrics["cancelled"] == 1
+
+
+class TestEngineDeadlines:
+    """Satellite: the scheduler slot-leak fix — abandoned requests release
+    their slots at the occupancy deadline and are counted."""
+
+    def test_expired_request_releases_slot(self):
+        model, params = tiny_model()
+        eng = ServeEngine(model, params, max_batch=1, max_len=32,
+                          chunk_size=4, request_timeout_steps=8)
+        stuck = Request(rid=0, prompt=prompts(1)[0], max_new_tokens=25)
+        ok = Request(rid=1, prompt=prompts(1, seed=1)[0], max_new_tokens=2)
+        eng.submit(stuck)
+        eng.submit(ok)
+        for _ in range(100):
+            if ok.done:
+                break
+            eng.step()
+        assert stuck.timed_out and not stuck.done
+        assert ok.done                   # reclaimed slot served the queue
+        assert eng.metrics["timed_out"] == 1
+        assert eng.telemetry.summary()["timed_out"] == 1
+
+    def test_per_request_deadline_overrides_engine_default(self):
+        model, params = tiny_model()
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          chunk_size=4)
+        tight = Request(rid=0, prompt=prompts(1)[0], max_new_tokens=25,
+                        deadline_steps=2)
+        loose = Request(rid=1, prompt=prompts(1, seed=1)[0],
+                        max_new_tokens=3)
+        eng.run([tight, loose], max_steps=200)
+        assert tight.timed_out and not tight.done
+        assert loose.done and not loose.timed_out
+
+    def test_cancel_queued_and_placed(self):
+        model, params = tiny_model()
+        eng = ServeEngine(model, params, max_batch=1, max_len=32,
+                          chunk_size=4)
+        a = Request(rid=0, prompt=prompts(1)[0], max_new_tokens=8)
+        b = Request(rid=1, prompt=prompts(1, seed=1)[0], max_new_tokens=8)
+        eng.submit(a)
+        eng.submit(b)                    # still queued (1 slot)
+        eng.step()
+        assert eng.cancel(1)             # from the scheduler queue
+        assert eng.cancel(0)             # from its slot
+        assert not eng.cancel(99)
+        assert eng.metrics["cancelled"] == 2
+        assert not eng.has_work()
+
+
+# ---------------------------------------------------------------------------
+# HTTP / WebSocket gateway over real sockets
+# ---------------------------------------------------------------------------
+
+aiohttp = pytest.importorskip("aiohttp")
+
+from repro.serve.gateway import start_gateway  # noqa: E402
+
+
+def gateway_session(test):
+    """Run ``await test(base_url, session, router, injector)`` against a
+    live gateway on an ephemeral port."""
+    async def main():
+        inj = FaultInjector()
+        router = make_router(injector=inj,
+                             rate_limits={"interactive": (0.1, 2.0)})
+        runner, port = await start_gateway(router, port=0)
+        base = f"http://127.0.0.1:{port}"
+        try:
+            async with aiohttp.ClientSession() as sess:
+                await test(base, sess, router, inj)
+        finally:
+            await runner.cleanup()
+    asyncio.run(main())
+
+
+class TestGatewayHTTP:
+    def test_healthz_and_metrics(self):
+        async def t(base, sess, router, inj):
+            async with sess.get(base + "/healthz") as resp:
+                assert resp.status == 200
+                body = await resp.json()
+                assert body["status"] == "ok"
+                assert len(body["replicas"]) == 2
+            async with sess.get(base + "/metrics") as resp:
+                assert resp.status == 200
+                body = await resp.json()
+                assert {"requests", "counters", "ttft_steps_p95",
+                        "timed_out"} <= set(body)
+        gateway_session(t)
+
+    def test_generate_roundtrip_matches_engine(self):
+        prompt = prompts(1)[0]
+        expected = baseline_tokens(prompt)
+
+        async def t(base, sess, router, inj):
+            async with sess.post(base + "/v1/generate",
+                                 json={"prompt": prompt,
+                                       "max_new_tokens": 4}) as resp:
+                assert resp.status == 200
+                body = await resp.json()
+            assert body["status"] == "done"
+            assert body["tokens"] == expected
+        gateway_session(t)
+
+    def test_generate_rejects_bad_prompt(self):
+        async def t(base, sess, router, inj):
+            for bad in ({}, {"prompt": "text"}, {"prompt": []}):
+                async with sess.post(base + "/v1/generate",
+                                     json=bad) as resp:
+                    assert resp.status == 400
+        gateway_session(t)
+
+    def test_rate_limited_429_with_retry_after(self):
+        prompt = prompts(1)[0]
+
+        async def t(base, sess, router, inj):
+            codes = []
+            for _ in range(4):           # burst of 2 then rejections
+                async with sess.post(
+                        base + "/v1/generate",
+                        json={"prompt": prompt, "max_new_tokens": 1,
+                              "slo": "interactive"}) as resp:
+                    codes.append(resp.status)
+                    if resp.status == 429:
+                        assert float(resp.headers["Retry-After"]) > 0
+                        body = await resp.json()
+                        assert body["error"] == "rate_limited"
+            assert 429 in codes and 200 in codes
+        gateway_session(t)
+
+    def test_ws_stream_delivers_tokens_in_order(self):
+        prompt = prompts(1)[0]
+        expected = baseline_tokens(prompt)
+
+        async def t(base, sess, router, inj):
+            async with sess.ws_connect(base + "/v1/stream") as ws:
+                await ws.send_json({"prompt": prompt, "max_new_tokens": 4})
+                toks, done = [], None
+                async for msg in ws:
+                    data = msg.json()
+                    if data.get("done"):
+                        done = data
+                        break
+                    assert data["index"] == len(toks)
+                    toks.append(data["token"])
+            assert toks == expected
+            assert done["tokens"] == expected
+        gateway_session(t)
+
+    def test_ws_stream_survives_replica_kill(self):
+        """The CI smoke in miniature: kill the serving replica after the
+        first streamed token; the stream must finish on the survivor with
+        the exact fault-free tokens."""
+        prompt = prompts(1)[0]
+        expected = baseline_tokens(prompt, max_new=6)
+
+        async def t(base, sess, router, inj):
+            async with sess.ws_connect(base + "/v1/stream") as ws:
+                await ws.send_json({"prompt": prompt, "max_new_tokens": 6})
+                toks, done = [], None
+                async for msg in ws:
+                    data = msg.json()
+                    if data.get("done"):
+                        done = data
+                        break
+                    toks.append(data["token"])
+                    if len(toks) == 1:   # first token: kill its replica
+                        [tk] = router.tickets.values()
+                        inj.kill(tk.replica_id, at_tick=router.tick)
+            assert toks == expected, "stream must not skip or duplicate"
+            assert done["reroutes"] == 1
+            assert router.counters["replica_restarts"] == 1
+        gateway_session(t)

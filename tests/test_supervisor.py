@@ -1,0 +1,173 @@
+"""Supervisor policy logic: heartbeat state walks, straggler detection,
+and action emission — for both the training control plane (`Supervisor`)
+and the serving control plane (`ReplicaSupervisor`).
+
+All hardware-independent: events are simulated (fake clocks / explicit
+ticks), which is how the policy should be validated anyway.
+"""
+
+from repro.ft.supervisor import (ReplicaSupervisor, ReplicaSupervisorConfig,
+                                 Supervisor, SupervisorConfig, WorkerState)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class TestTrainSupervisorStates:
+    def make(self, n=3):
+        clock = FakeClock()
+        sup = Supervisor(n, SupervisorConfig(heartbeat_timeout_s=60.0,
+                                             suspect_after_s=20.0),
+                         clock=clock)
+        return sup, clock
+
+    def test_healthy_to_suspect_to_dead(self):
+        sup, clock = self.make()
+        for i in range(3):
+            sup.heartbeat(i, step=1)
+        assert sup.healthy_workers() == [0, 1, 2]
+        # worker 2 goes quiet; the others keep beating
+        clock.advance(25.0)
+        sup.heartbeat(0, step=2)
+        sup.heartbeat(1, step=2)
+        sup.healthy_workers()
+        assert sup.workers[2].state is WorkerState.SUSPECT
+        clock.advance(40.0)              # 65s idle total > timeout
+        sup.heartbeat(0, step=3)
+        sup.heartbeat(1, step=3)
+        sup.healthy_workers()
+        assert sup.workers[2].state is WorkerState.DEAD
+
+    def test_suspect_recovers_on_heartbeat(self):
+        sup, clock = self.make()
+        clock.advance(25.0)
+        sup.healthy_workers()
+        assert sup.workers[0].state is WorkerState.SUSPECT
+        sup.heartbeat(0, step=1)
+        assert sup.workers[0].state is WorkerState.HEALTHY
+
+    def test_dead_stays_dead_despite_heartbeat(self):
+        """A declared-dead worker must not flap back on a late heartbeat —
+        only the restart path readmits it."""
+        sup, clock = self.make()
+        clock.advance(100.0)
+        sup.healthy_workers()
+        assert sup.workers[1].state is WorkerState.DEAD
+        sup.heartbeat(1, step=5)
+        assert sup.workers[1].state is WorkerState.DEAD
+
+    def test_remesh_restores_last_committed_step(self):
+        sup, clock = self.make()
+        sup.checkpoint_committed(40)
+        sup.checkpoint_committed(30)     # out-of-order commit is ignored
+        clock.advance(100.0)
+        sup.heartbeat(0, step=50)
+        sup.heartbeat(1, step=50)
+        act = sup.decide()
+        assert act.kind == "remesh"
+        assert act.restore_step == 40
+        assert act.new_num_workers == 2
+
+    def test_below_min_workers_waits(self):
+        clock = FakeClock()
+        sup = Supervisor(2, SupervisorConfig(min_workers=2), clock=clock)
+        clock.advance(100.0)
+        sup.heartbeat(0, step=1)
+        act = sup.decide()
+        assert act.kind == "none"
+        assert "min_workers" in act.detail
+
+    def test_straggler_detection_needs_quorum(self):
+        sup, _ = self.make(n=2)
+        for i in range(2):
+            sup.heartbeat(i, step=1, step_seconds=1.0 if i == 0 else 9.0)
+        assert sup.stragglers() == []    # < 3 reporters: no verdict
+
+    def test_straggler_rebalance_action(self):
+        sup, _ = self.make(n=4)
+        for i in range(4):
+            sup.heartbeat(i, step=1,
+                          step_seconds=5.0 if i == 3 else 1.0)
+        act = sup.decide()
+        assert act.kind == "rebalance"
+        assert act.slow_workers == (3,)
+        shares = Supervisor.rebalanced_shares(4, act.slow_workers)
+        assert abs(sum(shares) - 1.0) < 1e-9
+        assert shares[3] < shares[0]
+
+
+class TestReplicaSupervisor:
+    CFG = ReplicaSupervisorConfig(suspect_after_ticks=3, dead_after_ticks=6,
+                                  max_restarts=2)
+
+    def make(self, n=2):
+        return ReplicaSupervisor(range(n), self.CFG)
+
+    def pump(self, sup, ticks, beating=()):
+        acts = []
+        for t in ticks:
+            for rid in beating:
+                sup.heartbeat(rid, t)
+            acts += sup.poll(t)
+        return acts
+
+    def test_heartbeat_loss_walks_suspect_then_dead(self):
+        sup = self.make()
+        self.pump(sup, range(1, 3), beating=(0, 1))
+        # replica 1 goes quiet at tick 3
+        acts = self.pump(sup, range(3, 6), beating=(0,))
+        assert acts == []
+        assert sup.state_of(1) is WorkerState.SUSPECT
+        acts = self.pump(sup, range(6, 9), beating=(0,))
+        assert sup.state_of(1) is WorkerState.DEAD
+        assert [a.kind for a in acts] == ["restart"]
+        assert acts[0].replica_id == 1
+        assert sup.state_of(0) is WorkerState.HEALTHY
+
+    def test_breaker_report_skips_suspect_grace(self):
+        """A tripped circuit breaker is conclusive: DEAD immediately, no
+        SUSPECT walk, restart emitted on the next poll."""
+        sup = self.make()
+        sup.heartbeat(0, 1)
+        sup.report_failure(0, 1, "corrupt_output")
+        assert sup.state_of(0) is WorkerState.DEAD
+        acts = sup.poll(1)
+        assert [a.kind for a in acts] == ["restart"]
+        assert "corrupt_output" in acts[0].detail
+
+    def test_restart_emitted_exactly_once(self):
+        """One action per death: the router must confirm with restarted()
+        before another restart can be issued."""
+        sup = self.make()
+        sup.report_failure(0, 1)
+        assert len(sup.poll(1)) == 1
+        assert sup.poll(2) == []         # pending: no re-emission
+        sup.restarted(0, 3)
+        assert sup.state_of(0) is WorkerState.HEALTHY
+        assert sup.replicas[0].restarts == 1
+        sup.report_failure(0, 4)         # a second, later death
+        assert [a.kind for a in sup.poll(4)] == ["restart"]
+
+    def test_give_up_after_restart_budget(self):
+        sup = self.make()
+        for tick in (1, 3, 5):           # crash loop: die, restart, die...
+            sup.report_failure(0, tick)
+            acts = sup.poll(tick)
+            if tick < 5:
+                assert [a.kind for a in acts] == ["restart"]
+                sup.restarted(0, tick + 1)
+        assert [a.kind for a in acts] == ["give_up"]
+        assert acts[0].replica_id == 0
+
+    def test_healthy_replicas_view(self):
+        sup = self.make(3)
+        sup.report_failure(1, 1)
+        assert sup.healthy_replicas() == [0, 2]
