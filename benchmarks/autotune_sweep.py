@@ -21,7 +21,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from common import SWEEP_SHAPES, write_output
+from common import SWEEP_SHAPES, write_bench_json, write_output
 from repro.core import tune
 from repro.kernels import ops
 
@@ -145,6 +145,18 @@ def main() -> int:
         "device_kind": tune.device_kind(),
     })
     print("wrote", path)
+    # committed trajectory file: configs and verdicts only — wall-clock
+    # medians live in the runs/ scratch copy above
+    print("wrote", write_bench_json("autotune", {
+        "cases": [{
+            "op": r["op"],
+            "shape": r["shape"],
+            "tuned_config": r["tuned_config"],
+            "tuned_not_worse": r["tuned_not_worse"],
+        } for r in rows],
+        "all_tuned_not_worse": all_ok,
+        "device_kind": tune.device_kind(),
+    }))
     return 0 if all_ok else 1
 
 

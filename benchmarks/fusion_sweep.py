@@ -27,6 +27,7 @@ import time
 
 import numpy as np
 
+from common import write_bench_json
 from repro.core.codegen import xla_backend
 from repro.core.codegen.common import header
 from repro.core.dsl import compile_dsl
@@ -252,6 +253,21 @@ def main():
     if step_summary:
         with open(step_summary, "a") as f:
             f.write(md)
+
+    # committed trajectory file: predicted/measured bytes only (exact,
+    # host-independent) — wall clock stays in the printed table
+    print("wrote", write_bench_json("fusion", {
+        "cases": [{
+            "pattern": r[0],
+            "shape_class": r[1],
+            "shape": r[2],
+            "predicted_bytes_saved": int(r[3]),
+            "measured_bytes_saved": int(r[4]),
+            "byte_err_pct": round(r[5], 1),
+        } for r in rows],
+        "all_within_20pct": not failures,
+        "dtype": args.dtype,
+    }))
 
     print(f"aggregate wall: fused {1e3 * total_f:.1f} ms vs unfused "
           f"{1e3 * total_u:.1f} ms")

@@ -30,6 +30,8 @@ import time
 
 import numpy as np
 
+from common import write_bench_json
+
 # Wall time gates only on real hardware: interpret-mode timings measure
 # the Python/XLA emulation of the kernel, not HBM traffic (same policy as
 # fusion_sweep.py).
@@ -171,6 +173,24 @@ def main():
     if step_summary:
         with open(step_summary, "a") as f:
             f.write(md)
+
+    # committed trajectory file: byte accounting + accuracy verdicts only
+    # (host-independent) — wall clock stays in the printed table
+    print("wrote", write_bench_json("quant", {
+        "cases": [{
+            "wdtype": r[0],
+            "shape_class": r[1],
+            "shape": r[2],
+            "predicted_bytes": int(r[3]),
+            "measured_bytes": int(r[4]),
+            "byte_err_pct": round(r[5], 1),
+            "rel_err": round(r[6], 6),
+            "budget": r[7],
+            "verdict": r[8],
+            "bytes_saved_pct": round(r[11], 1),
+        } for r in rows],
+        "all_within_budget": not failures,
+    }))
 
     print(f"aggregate wall: quantized {1e3 * total_q:.1f} ms vs fp "
           f"{1e3 * total_fp:.1f} ms")

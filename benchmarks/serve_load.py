@@ -364,6 +364,40 @@ def main():
           f" with 0 output divergence; "
           f"{len(restarted.engine.prefix_cache)} warm prefix snapshots")
 
+    # tracing overhead: the enabled flight recorder must not tax the hot
+    # path — traced throughput (token count over in-engine step seconds)
+    # must stay within 5% of tracing-disabled throughput.  Best-of-N with
+    # retries absorbs shared-CPU scheduler noise; the token counts and
+    # step counts are deterministic either way.
+    from repro.core.obs import trace as obs_trace
+
+    def measure_throughput(traced):
+        if traced:
+            obs_trace.configure(None)    # ring only: the enabled hot path
+        else:
+            obs_trace.disable()
+        try:
+            _, _, summ, _ = run_engine(
+                model, params, reqs, chunk=chunk, max_batch=args.max_batch,
+                max_len=max_len, mode="chunked", scheduler="sol",
+                prefix=False)
+            return summ["throughput_tok_s"]
+        finally:
+            obs_trace.disable()
+
+    thr_off = thr_on = 0.0
+    for _attempt in range(3):
+        thr_off = max(thr_off, measure_throughput(False))
+        thr_on = max(thr_on, measure_throughput(True))
+        if thr_on >= 0.95 * thr_off:
+            break
+    trace_overhead = 1.0 - thr_on / max(thr_off, 1e-9)
+    print(f"tracing overhead: {thr_on:.1f} tok/s traced vs {thr_off:.1f} "
+          f"tok/s disabled ({100 * trace_overhead:.1f}% overhead)")
+    assert thr_on >= 0.95 * thr_off, \
+        f"traced throughput {thr_on:.1f} tok/s is more than 5% below " \
+        f"tracing-disabled {thr_off:.1f} tok/s"
+
     write_bench_json("serve_load", {
         "workload": {"n_requests": len(reqs), "chunk": chunk,
                      "max_batch": args.max_batch, "arch": args.arch,
@@ -381,6 +415,9 @@ def main():
             } for name, (_, _, summ, _) in results.items()},
         "fused_decode": {"dispatches_per_step_on": d_on,
                          "dispatches_per_step_off": d_off},
+        "tracing": {"throughput_tok_s_traced": thr_on,
+                    "throughput_tok_s_disabled": thr_off,
+                    "overhead_pct": round(100 * trace_overhead, 2)},
         "quant": {"weight_bytes_per_step_int8": wb_q,
                   "weight_bytes_per_step_fp": wb_fp,
                   "bytes_ratio": ratio, "rel_err": rel_err,

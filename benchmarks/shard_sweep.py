@@ -43,6 +43,8 @@ import time          # noqa: E402
 
 import numpy as np   # noqa: E402
 
+from common import write_bench_json   # noqa: E402
+
 # Wall time gates only on real hardware: interpret-mode timings measure
 # the Python/XLA emulation, not ICI traffic (same policy as quant_sweep).
 TIME_SLACK = 1.10
@@ -257,6 +259,23 @@ def main():
     if step_summary:
         with open(step_summary, "a") as f:
             f.write(md)
+
+    # committed trajectory file: wire-byte accounting only (exact, from
+    # the compiled HLO) — wall clock stays in the printed table
+    print("wrote", write_bench_json("shard", {
+        "cases": [{
+            "shape_class": r[0],
+            "shape": r[1],
+            "tp": r[2],
+            "strategy": r[3],
+            "predicted_wire_bytes": int(r[4]),
+            "measured_wire_bytes": int(r[5]),
+            "wire_err_pct": None if r[6] != r[6] else round(r[6], 1),
+            "note": r[7],
+        } for r in rows],
+        "all_within_20pct": not failures,
+        "devices": n_dev,
+    }))
 
     if failures:
         raise SystemExit("shard_sweep FAILED:\n  " + "\n  ".join(failures))

@@ -404,6 +404,32 @@ def cite_fusion_report(report) -> str:
     return head
 
 
+def cite_drift_report(report: Optional[Dict]) -> str:
+    """One-line citation of a drift report
+    (``core.obs.DriftDetector.report()``) for agent run logs / hypothesis
+    notes — the observability twin of ``cite_fusion_report``.
+
+    A drifting op tells the agent its evidence base is suspect: a
+    ``below_bound`` op means measurements beat the physical SOL bound
+    (the gaming signal the integrity pipeline flags per-attempt), an
+    ``above_model`` op means the calibrated cost model is stale and its
+    predictions should not steer hypothesis ranking until re-calibrated.
+    """
+    if not report:
+        return "no drift report (no SOL-attributed observations yet)"
+    drifting = {op: r for op, r in report.items() if r.get("drifting")}
+    if not drifting:
+        return (f"no sustained drift across {len(report)} op(s): "
+                f"predictions and measurements agree within tolerance")
+    parts = [
+        f"{op} {r['direction']} (measured/predicted "
+        f"{r['mean_ratio']:.3g} over {r['window_n']} samples, {r['unit']})"
+        for op, r in drifting.items()
+    ]
+    return (f"DRIFT on {len(drifting)}/{len(report)} op(s): "
+            + "; ".join(parts))
+
+
 def cite_quant_report(report: Optional[Dict]) -> str:
     """One-line citation of a quantization headroom report
     (``core.tune.quant_report``) for agent run logs / hypothesis notes —

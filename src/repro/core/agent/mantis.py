@@ -162,7 +162,7 @@ class Agent:
                     self.cfg.capability, rng))
 
         if toolchain_error is not None:
-            log.attempts.append(Attempt(
+            log.record(Attempt(
                 index=idx, phase=phase, description=hyp.description,
                 tokens=tokens, ok=False, runtime_s=float("inf"), speedup=0.0,
                 error=toolchain_error, hypothesis=hyp.description))
@@ -170,7 +170,7 @@ class Agent:
 
         m = self.cost.evaluate(problem, sol)
         if not m.ok:
-            log.attempts.append(Attempt(
+            log.record(Attempt(
                 index=idx, phase=phase, description=hyp.description,
                 tokens=tokens, ok=False, runtime_s=float("inf"), speedup=0.0,
                 error=m.error, hypothesis=hyp.description))
@@ -182,7 +182,7 @@ class Agent:
             # reduced-precision compute on an fp32-specified problem: the
             # LGD labels this a Minor Issue (math approximation), not gaming
             flags.append("reduced_precision")
-        log.attempts.append(Attempt(
+        log.record(Attempt(
             index=idx, phase=phase, description=hyp.description,
             tokens=tokens, ok=True, runtime_s=m.runtime_s, speedup=speedup,
             flags=flags, inherited=inherited,

@@ -38,6 +38,36 @@ class RunLog:
     t_sol_ceiling: float         # bf16 ceiling (scheduling/integrity)
     attempts: List[Attempt] = field(default_factory=list)
 
+    # ---- recording ------------------------------------------------------
+    def record(self, attempt: Attempt) -> Attempt:
+        """Append an attempt and emit an ``agent.attempt`` trace event.
+
+        The event's SOL attribution holds runtime against the bf16 ceiling
+        bound: a sustained windowed mean *below* the ceiling is the same
+        physically-implausible signal the integrity pipeline's sol_ceiling
+        detector flags per-attempt.
+        """
+        self.attempts.append(attempt)
+        from ..obs.trace import get_tracer
+
+        tr = get_tracer()
+        if tr.enabled:
+            sol = None
+            if attempt.ok and math.isfinite(attempt.runtime_s) \
+                    and self.t_sol_ceiling > 0:
+                sol = {"t_sol_s": self.t_sol_ceiling,
+                       "predicted": self.t_sol_ceiling,
+                       "measured": attempt.runtime_s,
+                       "op": f"agent.{self.problem_id}",
+                       "calibrated": False}
+            tr.event("agent.attempt", cat="agent", sol=sol,
+                     problem_id=self.problem_id, variant=self.variant,
+                     index=attempt.index, phase=attempt.phase,
+                     ok=attempt.ok, runtime_s=attempt.runtime_s,
+                     speedup=attempt.speedup, tokens=attempt.tokens,
+                     flags=list(attempt.flags), error=attempt.error)
+        return attempt
+
     # ---- summaries --------------------------------------------------------
     def best_speedup(self, upto: Optional[int] = None,
                      accepted_only: bool = False) -> float:

@@ -33,6 +33,7 @@ from typing import TYPE_CHECKING
 
 from ..codegen import pallas_backend, pipeline as pipeline_gen, xla_backend
 from ..codegen.common import aux_plan, full_signature, header
+from ..obs.trace import get_tracer
 from .errors import Diagnostic, DSLError, DSLSyntaxError, DSLValidationError
 
 if TYPE_CHECKING:   # imported lazily at runtime (dsl <-> codegen cycle)
@@ -291,6 +292,35 @@ def compile_dsl(src: str, backend: str = "pallas", *,
     driver's input names to shapes so the pass can prove VMEM residency and
     predict bytes saved.
     """
+    tr = get_tracer()
+    if not tr.enabled:
+        return _compile_dsl_impl(src, backend, build_dir=build_dir,
+                                 use_cache=use_cache, fuse=fuse,
+                                 shape_hints=shape_hints)
+    with tr.span("compile.dsl", cat="compile", backend=backend) as sp:
+        result = _compile_dsl_impl(src, backend, build_dir=build_dir,
+                                   use_cache=use_cache, fuse=fuse,
+                                   shape_hints=shape_hints)
+        sp.set(namespace=result.namespace,
+               from_disk_cache=result.from_disk_cache,
+               warnings=len(result.warnings),
+               compile_seconds=result.compile_seconds)
+        if result.fusion is not None:
+            sp.set(fusion_mode=result.fusion.mode,
+                   fused_count=result.fusion.fused_count,
+                   fusion_bytes_saved=result.fusion.bytes_saved,
+                   fusion_decisions=[d.as_dict()
+                                     for d in result.fusion.decisions])
+        if result.sharding is not None:
+            sp.set(sharding=result.sharding.as_dict())
+        return result
+
+
+def _compile_dsl_impl(src: str, backend: str, *,
+                      build_dir: Optional[str],
+                      use_cache: bool,
+                      fuse: Optional[str],
+                      shape_hints: Optional[Dict]) -> CompiledKernel:
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     t0 = time.perf_counter()
@@ -304,9 +334,13 @@ def compile_dsl(src: str, backend: str = "pallas", *,
                                           shape_hints=shape_hints)
     namespace = namespace_of(ir)
     cache_key = (namespace, backend)
+    tr = get_tracer()
     if use_cache:
         hit = _cache_get(cache_key)
         if hit is not None:
+            if tr.enabled:
+                tr.event("compile.cache_hit", cat="compile", layer="memory",
+                         namespace=namespace, backend=backend)
             # a hint-less recompile must not downgrade a cached report
             # whose SOL bounds were filled from shape_hints
             def _has_bounds(rep: Optional[ShardingReport]) -> bool:
@@ -345,6 +379,9 @@ def compile_dsl(src: str, backend: str = "pallas", *,
                 raise ValueError("codegen version mismatch")
             fn = _exec_source(cached_source, namespace)
             source, from_disk = cached_source, True
+            if tr.enabled:
+                tr.event("compile.cache_hit", cat="compile", layer="disk",
+                         namespace=namespace, backend=backend)
         except Exception:
             source = None           # stale/torn file: fall through to codegen
 

@@ -84,6 +84,39 @@ def review_attempt(attempt: Attempt, log: RunLog) -> AttemptReview:
     return AttemptReview(label="no_issues")
 
 
+def review_drift(report: Dict[str, Dict[str, object]]) -> List[AttemptReview]:
+    """Map a drift report (``core.obs.DriftDetector.report()``) onto the
+    integrity labels — the streaming twin of the offline detectors above.
+
+    ``below_bound`` (windowed mean measured/predicted under 1 - tol against
+    an uncalibrated SOL bound) is the same physically-implausible signal as
+    the per-attempt SOL-ceiling detector, so it gets ``label="sol_ceiling"``.
+    ``above_model`` (a calibrated model drifting high) is not gaming — the
+    model is stale — so it gets ``label="minor"`` with a stale-model
+    category.  Non-drifting ops produce no review.
+    """
+    reviews: List[AttemptReview] = []
+    for op, r in sorted(report.items()):
+        if not r.get("drifting"):
+            continue
+        mean = r.get("mean_ratio")
+        n = r.get("window_n")
+        if r.get("direction") == "below_bound":
+            reviews.append(AttemptReview(
+                label="sol_ceiling", category="sustained_below_sol_bound",
+                reasons=[f"{op}: windowed measured/predicted {mean:.3g} "
+                         f"over {n} samples beats the SOL bound "
+                         f"({r.get('unit')})"]))
+        else:
+            reviews.append(AttemptReview(
+                label="minor", category="stale_cost_model",
+                reasons=[f"{op}: calibrated prediction drifts "
+                         f"{mean:.3g}x from measurement over {n} samples "
+                         f"({r.get('unit')}); re-calibrate before steering "
+                         f"on it"]))
+    return reviews
+
+
 def review_log(log: RunLog) -> Dict[str, int]:
     """Label every attempt in place; return label counts."""
     counts: Dict[str, int] = {}

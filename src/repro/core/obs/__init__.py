@@ -1,0 +1,95 @@
+"""SOL-attributed flight recorder: tracing, metrics, drift detection.
+
+Zero-dependency observability that every layer of the repo reports into:
+DSL compile (``cat="compile"``), autotune trials (``cat="tune"``), SOL
+reports (``cat="sol"``), serve engine steps (``cat="serve"``), gateway /
+router lifecycle (``cat="gateway"``), and agent attempts
+(``cat="agent"``).  Three pieces:
+
+* :class:`Tracer` (``trace.py``) — thread-safe context-manager spans and
+  point events into a ring buffer, optional JSONL sink, and
+  Chrome/Perfetto export via :meth:`Tracer.export_chrome`.
+* :class:`MetricsRegistry` (``metrics.py``) — counters / gauges /
+  histograms with Prometheus text exposition; the gateway publishes the
+  :func:`default_registry` at ``GET /metrics`` (JSON twin at
+  ``/metrics.json``).
+* :class:`DriftDetector` (``drift.py``) — folds SOL-attributed spans
+  into per-op ``measured / predicted`` ratios and flags sustained >20%
+  drift, the same band every sweep benchmark asserts.
+
+Span schema
+-----------
+
+Every span / event serializes (JSONL ``as_dict`` and Chrome ``args``)
+with these fields:
+
+====================  ====================================================
+``name``              dotted event name, e.g. ``engine.step``,
+                      ``tune.trial``, ``compile.dsl``, ``router.ticket``
+``cat``               subsystem: ``compile`` | ``tune`` | ``sol`` |
+                      ``serve`` | ``gateway`` | ``agent`` | ``bench``
+``ph``                ``"X"`` complete span, ``"i"`` instant event
+``ts_s`` / ``dur_s``  start (seconds since tracer epoch) and duration;
+                      Chrome export converts both to microseconds
+``tid``               originating thread id (folded to 16 bits)
+``attrs``             free-form key/value payload (raw values, never
+                      pre-formatted strings)
+``sol``               optional SOL attribution — see below
+``sol_efficiency``    ``sol.t_sol_s / dur_s``, filled at span close:
+                      achieved fraction of speed-of-light
+====================  ====================================================
+
+SOL attribution fields (the ``sol`` dict)
+-----------------------------------------
+
+``flops``             predicted floating-point work for the span
+``hbm_bytes``         predicted HBM traffic
+``wire_bytes``        predicted interconnect traffic (sharded runs)
+``bound``             roofline verdict: ``compute`` | ``memory`` |
+                      ``collective``
+``t_sol_s``           speed-of-light time bound for the span's work
+``predicted``         the prediction to hold measurement against; its
+                      presence opts the span into the
+                      :class:`DriftDetector`
+``measured``          the measurement (defaults to the span's duration)
+``op``                drift-accounting key (defaults to the span name)
+``unit``              unit of predicted/measured (default ``"s"``)
+``calibrated``        ``False`` (default): ``predicted`` is a physical
+                      *bound*; only measured < (1 - tol) x predicted —
+                      beating physics — counts as drift
+                      (``below_bound``).  ``True``: ``predicted`` is a
+                      calibrated estimate or exact analytic count; drift
+                      in either direction flags the model stale
+                      (``above_model`` / ``below_bound``).
+
+Tracing is opt-in (``REPRO_TRACE=path``, ``launch/serve.py --trace``,
+``start_gateway(trace=...)``) and near-zero-cost when disabled: the
+global tracer is a shared no-op until :func:`configure` runs.
+"""
+
+from .drift import DriftDetector, DriftEvent
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      default_registry)
+from .serialize import to_jsonable
+from .trace import (NULL_TRACER, NullTracer, Span, Tracer, configure,
+                    default_drift, disable, get_drift, get_tracer)
+
+__all__ = [
+    "Counter",
+    "DriftDetector",
+    "DriftEvent",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "configure",
+    "default_drift",
+    "default_registry",
+    "disable",
+    "get_drift",
+    "get_tracer",
+    "to_jsonable",
+]

@@ -1,0 +1,199 @@
+"""Predicted-vs-measured drift detection over SOL-attributed observations.
+
+The paper's discipline is that every optimization decision is justified by
+a first-principles prediction (FLOPs, HBM bytes, wire bytes, a roofline
+bound) and then checked against measurement — the sweep benchmarks all
+assert the two agree within 20%.  The :class:`DriftDetector` makes that
+check continuous: every closed SOL-attributed span (or explicit
+``observe`` call) folds into a per-op windowed ratio
+``measured / predicted``, and *sustained* drift beyond the same 20%
+tolerance raises a :class:`DriftEvent`.
+
+Two kinds of predictions, two drift directions:
+
+* **bounds** (``calibrated=False``, the default) — a speed-of-light
+  number.  Measurement is expected to sit *above* the bound (often far
+  above on CPU interpret mode); the only implausible direction is
+  measured < (1 - tol) * bound, which means the measurement beats physics
+  — the serving-side analogue of the integrity pipeline's SOL-ceiling
+  gaming detector (``direction="below_bound"``).
+* **calibrated models** (``calibrated=True``) — an estimate that already
+  includes an achieved-efficiency factor or an exact analytic count
+  (bytes, dispatches).  Drift in *either* direction beyond the tolerance
+  marks the model stale (``direction="above_model"`` / ``"below_bound"``).
+
+``core/integrity/pipeline.py:review_drift`` maps drift events onto the
+integrity labels, and ``core/agent/costmodel.py:cite_drift_report`` cites
+the report in agent hypothesis notes.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+DEFAULT_TOLERANCE = 0.20      # the sweeps' shared predicted-vs-measured band
+DEFAULT_WINDOW = 16
+DEFAULT_MIN_SAMPLES = 3
+
+
+@dataclass
+class DriftEvent:
+    """One op's transition into sustained drift."""
+
+    op: str
+    direction: str            # below_bound | above_model
+    mean_ratio: float         # windowed mean of measured / predicted
+    n: int                    # samples in the window
+    unit: str = "s"
+    calibrated: bool = False
+    predicted: float = 0.0    # last observation's prediction
+    measured: float = 0.0     # last observation's measurement
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "op": self.op, "direction": self.direction,
+            "mean_ratio": self.mean_ratio, "n": self.n, "unit": self.unit,
+            "calibrated": self.calibrated, "predicted": self.predicted,
+            "measured": self.measured,
+        }
+
+
+@dataclass
+class _OpState:
+    ratios: Deque[float]
+    unit: str = "s"
+    calibrated: bool = False
+    predicted: float = 0.0
+    measured: float = 0.0
+    total: int = 0
+    drifting: bool = False
+    direction: str = ""
+
+
+class DriftDetector:
+    """Folds predicted-vs-measured pairs into per-op drift verdicts.
+
+    Thread-safe; zero dependencies; cheap enough to stay always-on (one
+    deque append + a windowed mean per observation).  ``on_event`` fires
+    once per op per *transition into* drift (not per drifting sample), so
+    consumers see incidents, not noise.
+    """
+
+    def __init__(self, *, tolerance: float = DEFAULT_TOLERANCE,
+                 window: int = DEFAULT_WINDOW,
+                 min_samples: int = DEFAULT_MIN_SAMPLES,
+                 on_event: Optional[Callable[[DriftEvent], None]] = None):
+        self.tolerance = float(tolerance)
+        self.window = int(window)
+        self.min_samples = int(min_samples)
+        self.on_event = on_event
+        self.events: List[DriftEvent] = []
+        self._ops: Dict[str, _OpState] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def observe(self, op: str, predicted: float, measured: float, *,
+                unit: str = "s",
+                calibrated: bool = False) -> Optional[DriftEvent]:
+        """Record one pair; returns a DriftEvent on transition into drift."""
+        if predicted is None or measured is None:
+            return None
+        predicted = float(predicted)
+        measured = float(measured)
+        if predicted <= 0.0 or measured < 0.0:
+            return None
+        ratio = measured / predicted
+        with self._lock:
+            st = self._ops.get(op)
+            if st is None:
+                st = self._ops[op] = _OpState(
+                    ratios=deque(maxlen=self.window))
+            st.ratios.append(ratio)
+            st.unit = unit
+            st.calibrated = calibrated
+            st.predicted = predicted
+            st.measured = measured
+            st.total += 1
+            mean = sum(st.ratios) / len(st.ratios)
+            below = mean < 1.0 - self.tolerance
+            above = calibrated and mean > 1.0 + self.tolerance
+            drifting = len(st.ratios) >= self.min_samples and (below or above)
+            direction = "below_bound" if below else (
+                "above_model" if above else "")
+            transitioned = drifting and not st.drifting
+            st.drifting = drifting
+            st.direction = direction
+            event = None
+            if transitioned:
+                event = DriftEvent(op=op, direction=direction,
+                                   mean_ratio=mean, n=len(st.ratios),
+                                   unit=unit, calibrated=calibrated,
+                                   predicted=predicted, measured=measured)
+                self.events.append(event)
+        self._publish_gauge(op, mean)
+        if event is None:
+            return None
+        # fire outside the lock: the callback may log / trace / re-enter
+        if self.on_event is not None:
+            try:
+                self.on_event(event)
+            except Exception:
+                pass
+        return event
+
+    def _publish_gauge(self, op: str, mean: float) -> None:
+        """Mirror the windowed ratio into the default metrics registry so
+        ``/metrics`` exports ``repro_sol_drift_ratio{op=...}``."""
+        try:
+            from .metrics import default_registry
+
+            default_registry().gauge(
+                "repro_sol_drift_ratio",
+                "windowed mean of measured / SOL-predicted per op",
+                labels=("op",)).set(mean, op=op)
+        except Exception:
+            pass
+
+    # ------------------------------------------------------------------
+    def report(self) -> Dict[str, Dict[str, object]]:
+        """Per-op summary: {op: {n, mean_ratio, drifting, direction, ...}}."""
+        out: Dict[str, Dict[str, object]] = {}
+        with self._lock:
+            for op, st in sorted(self._ops.items()):
+                mean = (sum(st.ratios) / len(st.ratios)) if st.ratios \
+                    else float("nan")
+                out[op] = {
+                    "n": st.total,
+                    "window_n": len(st.ratios),
+                    "mean_ratio": mean,
+                    "drifting": st.drifting,
+                    "direction": st.direction,
+                    "unit": st.unit,
+                    "calibrated": st.calibrated,
+                    "predicted": st.predicted,
+                    "measured": st.measured,
+                }
+        return out
+
+    def drifting_ops(self) -> List[str]:
+        with self._lock:
+            return sorted(op for op, st in self._ops.items() if st.drifting)
+
+    def table(self) -> str:
+        """Markdown drift table (GITHUB_STEP_SUMMARY / launcher output)."""
+        rows = ["| op | n | measured/predicted | unit | calibrated | "
+                "drift |", "|---|---|---|---|---|---|"]
+        for op, r in self.report().items():
+            flag = r["direction"] if r["drifting"] else "ok"
+            rows.append(
+                f"| {op} | {r['n']} | {r['mean_ratio']:.3g} | {r['unit']} "
+                f"| {'yes' if r['calibrated'] else 'no'} | {flag} |")
+        return "\n".join(rows)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._ops.clear()
+            self.events.clear()

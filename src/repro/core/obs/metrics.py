@@ -1,0 +1,248 @@
+"""Counters / gauges / histograms with Prometheus text exposition.
+
+Zero-dependency, thread-safe, label-aware.  The gateway publishes the
+default registry at ``GET /metrics`` in Prometheus text format
+(version 0.0.4); ``MetricsRegistry.snapshot()`` is the JSON twin used by
+``GET /metrics.json``.
+
+Metric types follow Prometheus semantics:
+
+* ``Counter``   — monotonically increasing (``inc``),
+* ``Gauge``     — set to arbitrary values (``set`` / ``inc``),
+* ``Histogram`` — cumulative ``le`` buckets plus ``_sum`` / ``_count``.
+
+Instruments are get-or-created through the registry so call sites can be
+written as one-liners::
+
+    default_registry().counter("repro_requests_total",
+                               "requests admitted", labels=("slo",))\\
+                      .inc(slo="interactive")
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0, float("inf"))
+
+
+def _fmt_value(v: float) -> str:
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _escape(v: object) -> str:
+    return str(v).replace("\\", r"\\").replace('"', r'\"') \
+        .replace("\n", r"\n")
+
+
+def _label_str(names: Sequence[str], values: Sequence[object],
+               extra: Sequence[Tuple[str, str]] = ()) -> str:
+    pairs = [f'{n}="{_escape(v)}"' for n, v in zip(names, values)]
+    pairs += [f'{n}="{v}"' for n, v in extra]
+    return "{" + ",".join(pairs) + "}" if pairs else ""
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = ()):
+        self.name = name
+        self.help = help
+        self.labels = tuple(labels)
+        self._lock = threading.Lock()
+
+    def _key(self, label_kw: Dict[str, object]) -> Tuple[object, ...]:
+        extra = set(label_kw) - set(self.labels)
+        if extra:
+            raise KeyError(
+                f"{self.name}: unknown labels {sorted(extra)} "
+                f"(declared: {list(self.labels)})")
+        return tuple(label_kw.get(n, "") for n in self.labels)
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = ()):
+        super().__init__(name, help, labels)
+        self._values: Dict[Tuple[object, ...], float] = {}
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError(f"{self.name}: counters only go up")
+        key = self._key(labels)
+        with self._lock:
+            self._values[key] = self._values.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        return self._values.get(self._key(labels), 0.0)
+
+    def _render(self) -> List[str]:
+        with self._lock:
+            return [f"{self.name}{_label_str(self.labels, k)} "
+                    f"{_fmt_value(v)}"
+                    for k, v in sorted(self._values.items(), key=str)]
+
+    def _snapshot(self) -> object:
+        with self._lock:
+            if not self.labels:
+                return self._values.get((), 0.0)
+            return [{"labels": dict(zip(self.labels, k)), "value": v}
+                    for k, v in sorted(self._values.items(), key=str)]
+
+
+class Gauge(Counter):
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        key = self._key(labels)
+        with self._lock:
+            self._values[key] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        key = self._key(labels)
+        with self._lock:
+            self._values[key] = self._values.get(key, 0.0) + amount
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Sequence[str] = (),
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        super().__init__(name, help, labels)
+        bs = sorted(float(b) for b in buckets)
+        if not bs or not math.isinf(bs[-1]):
+            bs.append(float("inf"))
+        self.buckets = tuple(bs)
+        # per label-key: [bucket counts..., sum, count]
+        self._series: Dict[Tuple[object, ...], List[float]] = {}
+
+    def observe(self, value: float, **labels) -> None:
+        value = float(value)
+        if math.isnan(value):
+            return
+        key = self._key(labels)
+        with self._lock:
+            s = self._series.get(key)
+            if s is None:
+                s = self._series[key] = [0.0] * (len(self.buckets) + 2)
+            for i, b in enumerate(self.buckets):
+                if value <= b:
+                    s[i] += 1
+            s[-2] += value
+            s[-1] += 1
+
+    def count(self, **labels) -> int:
+        s = self._series.get(self._key(labels))
+        return int(s[-1]) if s else 0
+
+    def _render(self) -> List[str]:
+        lines: List[str] = []
+        with self._lock:
+            for key, s in sorted(self._series.items(), key=str):
+                for i, b in enumerate(self.buckets):
+                    le = "+Inf" if math.isinf(b) else _fmt_value(b)
+                    lines.append(
+                        f"{self.name}_bucket"
+                        f"{_label_str(self.labels, key, (('le', le),))} "
+                        f"{_fmt_value(s[i])}")
+                lines.append(f"{self.name}_sum"
+                             f"{_label_str(self.labels, key)} "
+                             f"{_fmt_value(s[-2])}")
+                lines.append(f"{self.name}_count"
+                             f"{_label_str(self.labels, key)} "
+                             f"{_fmt_value(s[-1])}")
+        return lines
+
+    def _snapshot(self) -> object:
+        with self._lock:
+            out = []
+            for key, s in sorted(self._series.items(), key=str):
+                out.append({
+                    "labels": dict(zip(self.labels, key)),
+                    "count": s[-1], "sum": s[-2],
+                    "buckets": {("+Inf" if math.isinf(b) else b): s[i]
+                                for i, b in enumerate(self.buckets)},
+                })
+            return out
+
+
+class MetricsRegistry:
+    """Named metrics with get-or-create accessors and text exposition."""
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str, labels: Sequence[str],
+             **kw) -> _Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help, labels, **kw)
+            elif not isinstance(m, cls) or (cls is Counter
+                                            and isinstance(m, Gauge)):
+                raise TypeError(
+                    f"metric {name} already registered as {m.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Sequence[str] = ()) -> Counter:
+        return self._get(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Sequence[str] = ()) -> Gauge:
+        return self._get(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help, labels, buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    # ------------------------------------------------------------------
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition (format version 0.0.4)."""
+        lines: List[str] = []
+        with self._lock:
+            metrics = list(self._metrics.values())
+        for m in metrics:
+            if m.help:
+                lines.append(f"# HELP {m.name} {_escape(m.help)}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            lines.extend(m._render())
+        return "\n".join(lines) + "\n"
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-friendly dump (the ``/metrics.json`` twin)."""
+        with self._lock:
+            metrics = list(self._metrics.values())
+        return {m.name: {"type": m.kind, "help": m.help,
+                         "values": m._snapshot()} for m in metrics}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry the gateway publishes at ``/metrics``."""
+    return _DEFAULT

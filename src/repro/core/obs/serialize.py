@@ -1,0 +1,52 @@
+"""The one JSON serializer shared by every exposition endpoint.
+
+Replaces the gateway's former ``json.loads(json.dumps(x, default=str))``
+round-trip: one recursive pass that maps the repo's telemetry payloads
+onto strict JSON values.  Documented conversions:
+
+* ``nan`` / ``inf`` floats -> ``None`` (strict JSON has no NaN literal;
+  telemetry percentiles are nan when no request finished),
+* numpy scalars / 0-d arrays -> native Python via ``.item()``,
+* numpy arrays / tuples / sets -> lists,
+* dataclasses -> field dicts, Enums -> their ``value``,
+* dict keys -> strings,
+* anything else unrecognized -> ``str(obj)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from enum import Enum
+from typing import Any
+
+
+def to_jsonable(obj: Any) -> Any:
+    """Recursively convert ``obj`` into strict-JSON-safe values."""
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        return None if (math.isnan(obj) or math.isinf(obj)) else obj
+    if isinstance(obj, Enum):
+        return to_jsonable(obj.value)
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return [to_jsonable(v) for v in obj]
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: to_jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    # numpy scalars and 0-d arrays expose .item(); arrays expose .tolist()
+    item = getattr(obj, "item", None)
+    if callable(item) and getattr(obj, "shape", None) in ((), None):
+        try:
+            return to_jsonable(item())
+        except Exception:
+            pass
+    tolist = getattr(obj, "tolist", None)
+    if callable(tolist):
+        try:
+            return to_jsonable(tolist())
+        except Exception:
+            pass
+    return str(obj)

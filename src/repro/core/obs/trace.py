@@ -1,0 +1,342 @@
+"""SOL-attributed tracing: spans, point events, ring buffer, JSONL sink,
+Chrome/Perfetto export.
+
+One process-wide :class:`Tracer` (see :func:`configure` /
+:func:`get_tracer`) that every subsystem reports into.  Tracing is
+opt-in: until configured — via ``configure(path)``, ``REPRO_TRACE=path``,
+``launch/serve.py --trace`` or ``start_gateway(trace=...)`` — the global
+tracer is the :data:`NULL_TRACER`, whose ``span`` / ``event`` calls are
+single attribute lookups returning a shared no-op span, so instrumented
+hot paths pay nanoseconds and format no strings.
+
+Span schema (see ``core/obs/__init__`` for field-by-field docs)::
+
+    with get_tracer().span("tune.trial", cat="tune", op="gemm",
+                           sol={"t_sol_s": 1e-4, "predicted": 2e-4,
+                                "bound": "memory"}) as sp:
+        ...
+        sp.set(median_s=measured)
+
+On close, a span with ``sol.t_sol_s`` gets ``sol_efficiency =
+t_sol_s / duration`` (achieved fraction of speed-of-light), and a span
+whose ``sol`` carries ``predicted`` (plus optionally ``measured``,
+defaulting to the span duration) is folded into the process
+:class:`~repro.core.obs.drift.DriftDetector`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .drift import DriftDetector
+from .serialize import to_jsonable
+
+DEFAULT_RING = 65536
+
+
+@dataclass
+class Span:
+    """One closed span (``ph="X"``) or point event (``ph="i"``)."""
+
+    name: str
+    cat: str
+    ts: float                 # seconds since the tracer's epoch
+    dur: float = 0.0          # seconds (0 for point events)
+    ph: str = "X"
+    tid: int = 0
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    sol: Optional[Dict[str, Any]] = None
+    sol_efficiency: Optional[float] = None
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = {"name": self.name, "cat": self.cat, "ph": self.ph,
+             "ts_s": self.ts, "dur_s": self.dur, "tid": self.tid,
+             "attrs": self.attrs}
+        if self.sol is not None:
+            d["sol"] = self.sol
+        if self.sol_efficiency is not None:
+            d["sol_efficiency"] = self.sol_efficiency
+        return d
+
+    def chrome_event(self, pid: int) -> Dict[str, Any]:
+        args = dict(self.attrs)
+        if self.sol is not None:
+            args["sol"] = self.sol
+        if self.sol_efficiency is not None:
+            args["sol_efficiency"] = self.sol_efficiency
+        ev = {"name": self.name, "cat": self.cat, "ph": self.ph,
+              "pid": pid, "tid": self.tid,
+              "ts": self.ts * 1e6, "args": to_jsonable(args)}
+        if self.ph == "X":
+            ev["dur"] = self.dur * 1e6
+        else:
+            ev["s"] = "t"                 # instant event, thread scope
+        return ev
+
+
+class _NullSpan:
+    """Shared no-op span: zero allocation, zero formatting."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **attrs) -> "_NullSpan":
+        return self
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _LiveSpan:
+    __slots__ = ("_tracer", "name", "cat", "attrs", "sol", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 sol: Optional[Dict[str, Any]], attrs: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.sol = sol
+        self.attrs = attrs
+        self._t0 = 0.0
+
+    def __enter__(self) -> "_LiveSpan":
+        self._t0 = self._tracer.now()
+        return self
+
+    def set(self, **attrs) -> "_LiveSpan":
+        self.attrs.update(attrs)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if exc and exc[0] is not None:
+            self.attrs.setdefault("error", str(exc[1]))
+        end = self._tracer.now()
+        self._tracer._record(Span(
+            name=self.name, cat=self.cat, ts=self._t0,
+            dur=max(end - self._t0, 0.0), ph="X",
+            tid=threading.get_ident() & 0xFFFF,
+            attrs=self.attrs, sol=self.sol))
+        return False
+
+
+class Tracer:
+    """Thread-safe span/event recorder with an in-memory ring buffer, an
+    optional JSONL sink, and Chrome-trace export."""
+
+    enabled = True
+
+    def __init__(self, *, ring: int = DEFAULT_RING,
+                 jsonl_path: Optional[str] = None,
+                 drift: Optional[DriftDetector] = None,
+                 clock=time.perf_counter):
+        self._clock = clock
+        self._epoch = clock()
+        self._lock = threading.Lock()
+        self._ring: deque = deque(maxlen=ring)
+        self._pid = os.getpid()
+        self.drift = drift
+        self.dropped = 0
+        self._jsonl_path = jsonl_path
+        self._jsonl = None
+        if jsonl_path:
+            d = os.path.dirname(jsonl_path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._jsonl = open(jsonl_path, "a")
+
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        """Seconds since this tracer's epoch (span timestamps' clock)."""
+        return self._clock() - self._epoch
+
+    def span(self, name: str, cat: str = "repro",
+             sol: Optional[Dict[str, Any]] = None, **attrs) -> _LiveSpan:
+        """Context-manager span; closes (and records) on ``__exit__``."""
+        return _LiveSpan(self, name, cat, sol, attrs)
+
+    def event(self, name: str, cat: str = "repro",
+              sol: Optional[Dict[str, Any]] = None, **attrs) -> None:
+        """Point event (``ph="i"``)."""
+        self._record(Span(name=name, cat=cat, ts=self.now(), ph="i",
+                          tid=threading.get_ident() & 0xFFFF,
+                          attrs=attrs, sol=sol))
+
+    def complete(self, name: str, *, dur_s: float, cat: str = "repro",
+                 sol: Optional[Dict[str, Any]] = None, **attrs) -> None:
+        """Record a span that ends *now* and lasted ``dur_s`` — for paths
+        (async handlers, pre-timed sections) where a ``with`` block can't
+        bracket the work."""
+        end = self.now()
+        self._record(Span(name=name, cat=cat, ts=max(end - dur_s, 0.0),
+                          dur=max(dur_s, 0.0), ph="X",
+                          tid=threading.get_ident() & 0xFFFF,
+                          attrs=attrs, sol=sol))
+
+    # ------------------------------------------------------------------
+    def _record(self, span: Span) -> None:
+        sol = span.sol
+        if sol is not None:
+            t_sol = sol.get("t_sol_s")
+            if t_sol and span.dur > 0:
+                span.sol_efficiency = float(t_sol) / span.dur
+            pred = sol.get("predicted")
+            if pred is not None and self.drift is not None:
+                measured = sol.get("measured")
+                if measured is None and span.ph == "X":
+                    measured = span.dur
+                if measured is not None:
+                    self.drift.observe(
+                        sol.get("op", span.name), pred, measured,
+                        unit=sol.get("unit", "s"),
+                        calibrated=bool(sol.get("calibrated", False)))
+        with self._lock:
+            if len(self._ring) == self._ring.maxlen:
+                self.dropped += 1
+            self._ring.append(span)
+            if self._jsonl is not None:
+                self._jsonl.write(
+                    json.dumps(to_jsonable(span.as_dict())) + "\n")
+
+    # ------------------------------------------------------------------
+    def spans(self) -> List[Span]:
+        with self._lock:
+            return list(self._ring)
+
+    def categories(self) -> List[str]:
+        """Distinct span categories seen (subsystem coverage check)."""
+        return sorted({s.cat for s in self.spans()})
+
+    def export_chrome(self, path: str) -> str:
+        """Write a Chrome trace-event file (Perfetto / chrome://tracing)."""
+        events = [s.chrome_event(self._pid) for s in self.spans()]
+        payload = {"traceEvents": events, "displayTimeUnit": "ms",
+                   "otherData": {"dropped_spans": self.dropped}}
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return path
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.close()
+                self._jsonl = None
+
+
+class NullTracer:
+    """Disabled tracer: every call is a no-op, no strings are built."""
+
+    enabled = False
+    drift = None
+    dropped = 0
+
+    def now(self) -> float:
+        return 0.0
+
+    def span(self, name, cat="repro", sol=None, **attrs) -> _NullSpan:
+        return NULL_SPAN
+
+    def event(self, name, cat="repro", sol=None, **attrs) -> None:
+        pass
+
+    def complete(self, name, *, dur_s, cat="repro", sol=None,
+                 **attrs) -> None:
+        pass
+
+    def spans(self) -> List[Span]:
+        return []
+
+    def categories(self) -> List[str]:
+        return []
+
+    def export_chrome(self, path: str) -> str:
+        raise RuntimeError("tracing is disabled (configure() first)")
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()
+
+# process-wide state: one always-available drift detector (cheap enough to
+# stay on even without tracing) and the opt-in tracer
+_DRIFT = DriftDetector()
+_TRACER: object = NULL_TRACER
+_ENV_CHECKED = False
+
+
+def default_drift() -> DriftDetector:
+    """The process drift detector (always on; the tracer feeds it too)."""
+    return _DRIFT
+
+
+# back-compat alias used by instrumentation call sites
+def get_drift() -> DriftDetector:
+    return _DRIFT
+
+
+def get_tracer():
+    """The process tracer; the NULL_TRACER until tracing is configured.
+    ``REPRO_TRACE=path`` configures it on first use."""
+    global _ENV_CHECKED
+    if _TRACER is NULL_TRACER and not _ENV_CHECKED:
+        _ENV_CHECKED = True
+        path = os.environ.get("REPRO_TRACE")
+        if path:
+            configure(path)
+    return _TRACER
+
+
+def configure(path: Optional[str] = None, *, ring: int = DEFAULT_RING,
+              drift: Optional[DriftDetector] = None,
+              export_at_exit: Optional[bool] = None) -> Tracer:
+    """Enable tracing process-wide and return the tracer.
+
+    ``path`` ending in ``.jsonl`` streams every closed span as one JSON
+    line (durable even on crash); any other path buffers spans in the
+    ring and exports a Chrome trace there at interpreter exit (or call
+    ``export_chrome`` yourself, as ``launch/serve.py --trace`` does).
+    """
+    global _TRACER
+    jsonl = path if (path and path.endswith(".jsonl")) else None
+    tracer = Tracer(ring=ring, jsonl_path=jsonl,
+                    drift=drift if drift is not None else _DRIFT)
+    if export_at_exit is None:
+        export_at_exit = bool(path) and jsonl is None
+    if export_at_exit and path:
+        import atexit
+
+        atexit.register(lambda: _TRACER is tracer
+                        and tracer.export_chrome(path))
+    _TRACER = tracer
+    return tracer
+
+
+def disable() -> None:
+    """Back to the no-op tracer (tests; flushes/closes the old sink)."""
+    global _TRACER
+    old = _TRACER
+    _TRACER = NULL_TRACER
+    if isinstance(old, Tracer):
+        old.close()

@@ -144,9 +144,22 @@ class SOLReport:
 
 def make_report(problem_id: str, characterization: Characterization, *,
                 chip: Optional[ChipSpec] = None, num_chips: int = 1) -> SOLReport:
-    return SOLReport(
+    report = SOLReport(
         problem_id=problem_id,
         characterization=characterization,
         chip=chip or DEFAULT_CHIP,
         num_chips=num_chips,
     )
+    from ..obs.trace import get_tracer
+
+    tr = get_tracer()
+    if tr.enabled:
+        st = report.steering
+        tr.event("sol.report", cat="sol", problem_id=problem_id,
+                 chip=report.chip.name, num_chips=num_chips,
+                 sol={"flops": characterization.total_flops,
+                      "hbm_bytes": characterization.best_case_bytes,
+                      "bound": st.bottleneck, "t_sol_s": st.t_sol},
+                 t_sol_s=st.t_sol, t_sol_ceiling_s=report.t_sol_ceiling,
+                 bottleneck=st.bottleneck)
+    return report

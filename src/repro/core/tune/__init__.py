@@ -102,7 +102,15 @@ def lookup(op: str, shape, dtype, *,
         return None
     rec = global_cache().get(op, shape, canon_dtype_name(dtype),
                              backend=backend)
-    return dict(rec.best) if rec is not None else None
+    best = dict(rec.best) if rec is not None else None
+    from ..obs.trace import get_tracer
+
+    tr = get_tracer()
+    if tr.enabled:
+        tr.event("tune.lookup", cat="tune", op=op, shape=list(shape),
+                 dtype=canon_dtype_name(dtype), backend=backend,
+                 hit=rec is not None, config=best)
+    return best
 
 
 # -- typed convenience lookups used by the wired-in call sites --------------

@@ -14,6 +14,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
+from ..obs.trace import get_tracer
 from ..sol.hardware import ChipSpec, TPU_V5E
 from .cache import (TuningCache, TuningRecord, device_kind, global_cache,
                     shape_bucket, tuning_disabled)
@@ -89,6 +90,7 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
     this way without surfacing the error (it is re-raised if *every*
     candidate fails).
     """
+    tr = get_tracer()
     cache = cache or global_cache()
     device = device_kind()
     # windowed attention is a different legality/optimality space than the
@@ -97,8 +99,13 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
     if not force:
         hit = cache.get(key_op, shape, dtype, backend=backend, device=device)
         if hit is not None:
+            if tr.enabled:
+                tr.event("tune.cache_hit", cat="tune", op=key_op,
+                         shape=list(shape), dtype=dtype, backend=backend,
+                         config=hit.best)
             return TuneResult(record=hit, trials_run=0, from_cache=True)
 
+    t0 = time.perf_counter()
     cands = enumerate_candidates(op, shape, dtype=dtype, window=window,
                                  chip=chip)
     kept = prune(op, shape, cands, dtype=dtype, top_k=top_k, chip=chip)
@@ -115,9 +122,21 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
         except Exception as e:  # illegal on this backend: skip, keep going
             failures.append({"config": repr(cfg), "error": str(e)})
             last_error = e
+            if tr.enabled:
+                tr.event("tune.trial_failed", cat="tune", op=key_op,
+                         config=cfg, verdict="failed", error=str(e))
             continue
         n_trials += trials if trials is not None else trials_from_env()
         measured.append({"config": cfg, "median_s": med})
+        if tr.enabled:
+            # _pred is the candidate's SOL-predicted seconds: a physical
+            # bound, so drift accounting treats it as uncalibrated
+            tr.complete(
+                "tune.trial", dur_s=med, cat="tune",
+                sol=({"t_sol_s": _pred, "predicted": _pred,
+                      "measured": med, "op": f"tune.{key_op}",
+                      "calibrated": False} if _pred else None),
+                op=key_op, config=cfg, median_s=med, verdict="measured")
     if not measured:
         raise RuntimeError(
             f"autotune {op}{tuple(shape)}: every candidate failed"
@@ -136,5 +155,12 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
     )
     if not tuning_disabled():
         cache.put(record)
+    if tr.enabled:
+        tr.complete("tune.op", dur_s=time.perf_counter() - t0, cat="tune",
+                    op=key_op, shape=list(shape), dtype=dtype,
+                    backend=backend, candidates=len(cands),
+                    sol_pruned=len(cands) - len(kept),
+                    measured=len(measured), failed=len(failures),
+                    best=best["config"], best_median_s=best["median_s"])
     return TuneResult(record=record, trials_run=n_trials, from_cache=False,
                       failures=failures)

@@ -73,7 +73,18 @@ def main():
                          "--xla_force_host_platform_device_count=N); "
                          "unset defers to the config + tuned shard "
                          "verdict")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a SOL-attributed trace: .jsonl streams "
+                         "one span per line, anything else gets a "
+                         "Chrome/Perfetto trace written on exit")
     args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        from repro.core.obs import configure as configure_tracer
+        # the launcher exports explicitly on exit (batch mode) or relies
+        # on the atexit hook (gateway mode, killed by signal)
+        tracer = configure_tracer(args.trace)
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -98,7 +109,10 @@ def main():
             weight_dtype=args.weight_dtype, tp_shards=args.tp_shards)
         print(f"gateway: {args.replicas} replicas on "
               f"http://{args.host}:{args.port}  "
-              f"(POST /v1/generate, WS /v1/stream, /healthz, /metrics)")
+              f"(POST /v1/generate, WS /v1/stream, /healthz, /metrics, "
+              f"/metrics.json)")
+        if args.trace:
+            print(f"tracing to {args.trace}")
         run_gateway(router, host=args.host, port=args.port)
         return
 
@@ -149,6 +163,14 @@ def main():
           f"prefix hit rate={summ['prefix_hit_rate']:.2f}")
     if engine.prefix_cache is not None:
         print("prefix cache:", engine.prefix_cache.stats())
+    if tracer is not None:
+        from repro.core.obs import get_drift
+        if not args.trace.endswith(".jsonl"):
+            print(f"trace: {tracer.export_chrome(args.trace)} "
+                  f"({len(tracer.spans())} spans, "
+                  f"categories {tracer.categories()})")
+        print("drift report:")
+        print(get_drift().table())
 
 
 if __name__ == "__main__":

@@ -34,11 +34,13 @@ import numpy as np
 
 from ..core import tune
 from ..core.dsl.compiler import default_fuse_mode
+from ..core.obs.trace import default_drift, get_tracer
 from ..core.sol.hardware import canon_dtype
 from ..models.model import Model
 from .prefill import ChunkedPrefillPlanner, SlotState
 from .prefix_cache import PrefixCache, extract_slot, insert_slot
-from .scheduler import EngineView, FIFOScheduler, make_scheduler
+from .scheduler import (EngineView, FIFOScheduler, SOLCapacityModel,
+                        make_scheduler)
 from .streaming import StreamEvent, StreamMux
 from .telemetry import ServeTelemetry
 
@@ -259,8 +261,19 @@ class ServeEngine:
             prefix_cache if isinstance(prefix_cache, PrefixCache) else None)
         self.telemetry = telemetry if telemetry is not None \
             else ServeTelemetry()
+        # per-step SOL attribution: the scheduler's capacity model when it
+        # has one (SOL scheduler), else a private one over the same config
+        self.sol_capacity = getattr(self.scheduler, "capacity", None)
+        if self.sol_capacity is None:
+            try:
+                self.sol_capacity = SOLCapacityModel(model.cfg)
+            except Exception:
+                self.sol_capacity = None
         self.mux = StreamMux()
         self.step_count = 0
+        # first _step_fn call triggers the XLA jit compile; when tracing
+        # is on it gets its own cat="compile" span (see _run_step)
+        self._jit_warm = False
         # default slot-occupancy deadline (engine steps); per-request
         # ``deadline_steps`` overrides.  None = no deadline (seed behaviour)
         self.request_timeout_steps = request_timeout_steps
@@ -433,6 +446,34 @@ class ServeEngine:
         return False
 
     # ------------------------------------------------------------------
+    def _run_step(self, view, plan):
+        """Invoke the jitted step; the first call (the XLA compile) gets
+        its own ``compile``-category span when tracing is on."""
+        args = (self.params, self.cache, jnp.asarray(plan.tokens),
+                jnp.asarray(plan.counts))
+        if self._jit_warm:
+            return self._step_fn(*args)
+        self._jit_warm = True
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._step_fn(*args)
+        sol = None
+        if self.sol_capacity is not None:
+            r = self.sol_capacity.step_roofline(
+                decode_positions=view.decode_positions,
+                prefill_tokens=plan.prefill_tokens)
+            if r is not None:
+                # no "predicted" key: compile time is not a step
+                # measurement, so this span must not feed drift
+                sol = {"flops": r.flops, "hbm_bytes": r.hbm_bytes,
+                       "bound": r.bottleneck, "t_sol_s": r.t_sol}
+        with tr.span("compile.engine_step", cat="compile", sol=sol,
+                     batch=int(args[2].shape[0]),
+                     width=int(args[2].shape[1]),
+                     prefill_tokens=plan.prefill_tokens,
+                     includes_first_step=True):
+            return self._step_fn(*args)
+
     def step(self) -> List[StreamEvent]:
         """One engine step: admit, run one prefill/decode forward, sample."""
         t0 = time.perf_counter()
@@ -440,13 +481,12 @@ class ServeEngine:
         self._admit()
         if not any(self.slots):
             return []
-        budget = self.scheduler.prefill_budget(self._view())
+        view = self._view()
+        budget = self.scheduler.prefill_budget(view)
         plan = self.planner.plan(self.slots, budget=budget)
         if not plan.any_work:
             return []
-        logits, self.cache = self._step_fn(
-            self.params, self.cache, jnp.asarray(plan.tokens),
-            jnp.asarray(plan.counts))
+        logits, self.cache = self._run_step(view, plan)
         self.step_count += 1
         self.metrics["steps"] += 1
         self.metrics["decode_dispatches"] += self.step_dispatches
@@ -496,12 +536,41 @@ class ServeEngine:
                     self.telemetry.on_finish(req.rid, self.step_count)
 
         active = sum(1 for s in self.slots if s is not None)
+        dt = time.perf_counter() - t0
         self.telemetry.on_step(
             queue_depth=self.scheduler.pending(), active_slots=active,
-            num_slots=self.max_batch, seconds=time.perf_counter() - t0,
+            num_slots=self.max_batch, seconds=dt,
             dispatches=self.step_dispatches,
             weight_bytes=self.weight_bytes_per_step,
             wire_bytes=self.wire_bytes_per_step)
+        r = None
+        if self.sol_capacity is not None:
+            r = self.sol_capacity.step_roofline(
+                decode_positions=view.decode_positions,
+                prefill_tokens=plan.prefill_tokens)
+        tr = get_tracer()
+        if tr.enabled:
+            sol = None
+            if r is not None:
+                sol = {"flops": r.flops, "hbm_bytes": r.hbm_bytes,
+                       "wire_bytes": self.wire_bytes_per_step,
+                       "bound": r.bottleneck, "t_sol_s": r.t_sol,
+                       "predicted": r.t_sol, "op": "engine.step",
+                       "calibrated": False}
+            tr.complete("engine.step", dur_s=dt, cat="serve", sol=sol,
+                        step=self.step_count, active_slots=active,
+                        num_slots=self.max_batch,
+                        queue_depth=self.scheduler.pending(),
+                        prefill_tokens=plan.prefill_tokens,
+                        prefill_chunks=len(plan.consumed),
+                        tokens=len(plan.sample_rows),
+                        dispatches=self.step_dispatches,
+                        weight_bytes=self.weight_bytes_per_step,
+                        wire_bytes=self.wire_bytes_per_step)
+        elif r is not None:
+            # untraced runs still feed drift accounting (the tracer feeds
+            # it from the span's sol payload when tracing is on)
+            default_drift().observe("engine.step", r.t_sol, dt)
         self.mux.emit(events)
         return events
 

@@ -26,14 +26,18 @@ its slot.
 ``GET /healthz``        replica/breaker/supervisor states; 200 while at
 least one replica is running, 503 when the fleet is down.
 
-``GET /metrics``        pooled fleet telemetry (p50/p95 TTFT and ITL,
-throughput, timed_out/cancelled counts, incidents, counters).
+``GET /metrics``        Prometheus text exposition (``repro_requests_total``,
+``repro_ttft_seconds``, ``repro_sol_drift_ratio``, fleet gauges).
+
+``GET /metrics.json``   the pooled fleet telemetry as JSON (p50/p95 TTFT
+and ITL, throughput, timed_out/cancelled counts, incidents, counters).
 """
 
 from __future__ import annotations
 
 import asyncio
 import json
+import time
 from typing import Optional
 
 try:
@@ -42,6 +46,10 @@ except ImportError:                      # pragma: no cover - aiohttp is a
     web = None                           # soft dependency of the gateway
     WSMsgType = None
 
+from ..core.obs.metrics import default_registry
+from ..core.obs.serialize import to_jsonable
+from ..core.obs.trace import configure as configure_tracer, default_drift, \
+    get_tracer
 from .router import Router, RouterRejected, Ticket
 
 # idle backoff between pump ticks once the fleet has no work; with work
@@ -103,6 +111,8 @@ async def _pump_ctx(app):
 
 async def handle_generate(request):
     router: Router = request.app["router"]
+    t0 = time.perf_counter()
+    tr = get_tracer()
     try:
         kw = _parse_generate(await request.json())
     except (ValueError, TypeError, json.JSONDecodeError) as exc:
@@ -110,6 +120,10 @@ async def handle_generate(request):
     try:
         ticket = router.submit(**kw)
     except RouterRejected as exc:
+        if tr.enabled:
+            tr.event("gateway.reject", cat="gateway",
+                     route="/v1/generate", reason=exc.reason,
+                     retry_after_s=exc.retry_after_s)
         return _reject_response(exc)
     fut = asyncio.get_event_loop().create_future()
 
@@ -122,6 +136,12 @@ async def handle_generate(request):
     except asyncio.CancelledError:
         router.cancel(ticket)
         raise
+    if tr.enabled:
+        tr.complete("gateway.request", cat="gateway",
+                    dur_s=time.perf_counter() - t0, route="/v1/generate",
+                    tid=ticket.tid, status=ticket.status,
+                    tokens=len(ticket.tokens), reroutes=ticket.reroutes,
+                    slo=kw["slo"])
     body = {"tid": ticket.tid, "status": ticket.status,
             "tokens": ticket.tokens, "reroutes": ticket.reroutes}
     if ticket.status == "failed":
@@ -192,9 +212,35 @@ async def handle_healthz(request):
                              else 503)
 
 
+def update_fleet_gauges(router: Router, registry=None) -> None:
+    """Mirror the pooled fleet summary into ``repro_fleet_*`` gauges —
+    called at scrape time so /metrics always reflects the live fleet."""
+    registry = registry or default_registry()
+    summary = router.metrics()
+    for key, value in summary.items():
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            continue
+        if value != value:               # nan (no finished requests yet)
+            continue
+        registry.gauge(f"repro_fleet_{key}",
+                       f"fleet_summary()['{key}']").set(float(value))
+    registry.gauge("repro_drift_ops_drifting",
+                   "ops with sustained predicted-vs-measured drift").set(
+        float(len(default_drift().drifting_ops())))
+
+
 async def handle_metrics(request):
-    metrics = request.app["router"].metrics()
-    return web.json_response(json.loads(json.dumps(metrics, default=str)))
+    """Prometheus text exposition (format 0.0.4)."""
+    update_fleet_gauges(request.app["router"])
+    text = default_registry().render_prometheus()
+    return web.Response(text=text,
+                        content_type="text/plain", charset="utf-8")
+
+
+async def handle_metrics_json(request):
+    metrics = to_jsonable(request.app["router"].metrics())
+    metrics["drift"] = to_jsonable(default_drift().report())
+    return web.json_response(metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -209,15 +255,19 @@ def build_app(router: Router) -> "web.Application":
     app.router.add_get("/v1/stream", handle_stream)
     app.router.add_get("/healthz", handle_healthz)
     app.router.add_get("/metrics", handle_metrics)
+    app.router.add_get("/metrics.json", handle_metrics_json)
     app.cleanup_ctx.append(_pump_ctx)
     return app
 
 
 async def start_gateway(router: Router, *, host: str = "127.0.0.1",
-                        port: int = 8080):
+                        port: int = 8080, trace: Optional[str] = None):
     """Start serving; returns (runner, actual_port).  ``port=0`` binds an
-    ephemeral port (tests / smoke drills)."""
+    ephemeral port (tests / smoke drills).  ``trace`` enables tracing to
+    that path (``.jsonl`` streams; else Chrome export at exit)."""
     require_aiohttp()
+    if trace:
+        configure_tracer(trace)
     app = build_app(router)
     runner = web.AppRunner(app)
     await runner.setup()
@@ -228,7 +278,9 @@ async def start_gateway(router: Router, *, host: str = "127.0.0.1",
 
 
 def run_gateway(router: Router, *, host: str = "127.0.0.1",
-                port: int = 8080) -> None:
+                port: int = 8080, trace: Optional[str] = None) -> None:
     """Blocking entry point for ``python -m repro.launch.serve --gateway``."""
     require_aiohttp()
+    if trace:
+        configure_tracer(trace)
     web.run_app(build_app(router), host=host, port=port)

@@ -17,6 +17,7 @@ from dataclasses import dataclass
 from enum import Enum
 from typing import Callable, List, Optional
 
+from ..core.obs.trace import get_tracer
 from ..core.sol.fleet import ReplicaLoad
 from .engine import ServeEngine
 from .faults import FaultInjector
@@ -103,6 +104,11 @@ class EngineReplica:
         router turns those into breaker failures."""
         inj = self.injector
         if inj is not None and inj.step_fails(self.replica_id, tick):
+            tr = get_tracer()
+            if tr.enabled:
+                tr.event("replica.fault", cat="gateway",
+                         replica_id=self.replica_id, reason="killed",
+                         tick=tick)
             raise ReplicaFault("killed")
         events = self.engine.step()
         if inj is not None and inj.corrupts(self.replica_id, tick):
@@ -115,6 +121,11 @@ class EngineReplica:
         vocab = self.engine.model.cfg.vocab_size
         for ev in events:
             if not 0 <= ev.token < vocab:
+                tr = get_tracer()
+                if tr.enabled:
+                    tr.event("replica.fault", cat="gateway",
+                             replica_id=self.replica_id,
+                             reason="corrupt_output", tick=tick)
                 raise ReplicaFault("corrupt_output")
         return events
 
@@ -138,7 +149,10 @@ class EngineReplica:
         the old crash), close the breaker, and rejoin the routing set."""
         if self.injector is not None:
             self.injector.revive(self.replica_id, tick)
-        self.engine = self._make_engine()
+        with get_tracer().span("replica.restart", cat="gateway",
+                               replica_id=self.replica_id, tick=tick,
+                               generation=self.generation + 1):
+            self.engine = self._make_engine()
         self.telemetries.append(self.engine.telemetry)
         self.breaker.reset()
         self.generation += 1

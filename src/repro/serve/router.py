@@ -36,6 +36,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
+from ..core.obs.metrics import default_registry
+from ..core.obs.trace import get_tracer
 from ..core.sol.fleet import FleetCapacityModel, ReplicaLoad
 from ..ft.supervisor import ReplicaSupervisor, ReplicaSupervisorConfig
 from .engine import Request
@@ -111,6 +113,7 @@ class Ticket:
     replica_id: Optional[int] = None
     reroutes: int = 0
     submit_tick: int = 0
+    submit_time: float = 0.0         # router clock at submit (TTFT metric)
     first_token_tick: int = -1
     finish_tick: int = -1
     _req: Optional[Request] = None   # current engine-level request
@@ -156,6 +159,19 @@ class Router:
             "replica_restarts": 0, "step_failures": 0,
             "divergence_failures": 0,
         }
+        # Prometheus-side twins of the counters above, registered eagerly
+        # so /metrics always renders their HELP/TYPE lines
+        self.registry = default_registry()
+        self._m_requests = self.registry.counter(
+            "repro_requests_total", "requests admitted by the router",
+            labels=("slo",))
+        self._m_rejected = self.registry.counter(
+            "repro_requests_rejected_total",
+            "requests rejected at admission", labels=("reason",))
+        self._m_ttft = self.registry.histogram(
+            "repro_ttft_seconds", "wall-clock time to first token")
+        self._m_restarts = self.registry.counter(
+            "repro_replica_restarts_total", "replica restarts executed")
 
     # ------------------------------------------------------------------
     def _running(self) -> List[EngineReplica]:
@@ -174,6 +190,7 @@ class Router:
         retry = self.limiter.try_take(slo, self.clock())
         if retry > 0:
             self.counters["rejected_rate_limited"] += 1
+            self._m_rejected.inc(reason="rate_limited")
             raise RouterRejected("rate_limited", retry)
         loads = self._loads()
         verdict = self.fleet.verdict(
@@ -181,15 +198,18 @@ class Router:
             itl_budget_s=get_slo(slo).itl_target_s)
         if not verdict.admit:
             self.counters["rejected_saturated"] += 1
+            self._m_rejected.inc(reason=verdict.reason)
             raise RouterRejected(verdict.reason, verdict.retry_after_s)
         ticket = Ticket(tid=next(self._tids), prompt=list(map(int, prompt)),
                         max_new_tokens=int(max_new_tokens),
                         temperature=float(temperature), slo=slo,
                         deadline_steps=deadline_steps,
-                        submit_tick=self.tick)
+                        submit_tick=self.tick,
+                        submit_time=self.clock())
         self.tickets[ticket.tid] = ticket
         self._place(ticket, loads)
         self.counters["submitted"] += 1
+        self._m_requests.inc(slo=slo)
         return ticket
 
     def _place(self, ticket: Ticket, loads: Sequence[ReplicaLoad]) -> None:
@@ -209,6 +229,12 @@ class Router:
         ticket.replica_id = rid
         ticket._req = req
         ticket.status = "queued"
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("router.place", cat="gateway", tid=ticket.tid,
+                     replica_id=rid, slo=ticket.slo,
+                     prompt_tokens=len(ticket.prompt),
+                     reroute=ticket.reroutes > 0)
 
     def cancel(self, ticket: Ticket) -> None:
         """Client gone: reclaim the slot and close the ticket."""
@@ -228,6 +254,13 @@ class Router:
         ticket.error = error
         ticket.retryable = retryable
         ticket.finish_tick = self.tick
+        tr = get_tracer()
+        if tr.enabled:
+            tr.complete("router.ticket", cat="gateway",
+                        dur_s=max(self.clock() - ticket.submit_time, 0.0),
+                        tid=ticket.tid, status=status, slo=ticket.slo,
+                        tokens=len(ticket.tokens),
+                        reroutes=ticket.reroutes, error=error)
         ticket._notify(None)
 
     def _deliver(self, replica: EngineReplica, events) -> None:
@@ -249,6 +282,8 @@ class Router:
             ticket.status = "running"
             if ticket.first_token_tick < 0:
                 ticket.first_token_tick = self.tick
+                self._m_ttft.observe(
+                    max(self.clock() - ticket.submit_time, 0.0))
             ticket._notify(ev)
             if ev.final:
                 self._finish(ticket, "done")
@@ -269,6 +304,11 @@ class Router:
         self._death_tick[replica.replica_id] = self.tick
         self.supervisor.report_failure(replica.replica_id, self.tick,
                                        reason)
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("router.eject", cat="gateway",
+                     replica_id=replica.replica_id, reason=reason,
+                     tick=self.tick)
         self._reroute_tickets(replica)
 
     def _reroute_tickets(self, dead: EngineReplica) -> None:
@@ -294,7 +334,15 @@ class Router:
         rebuild_s = time.perf_counter() - t0
         self.supervisor.restarted(replica.replica_id, self.tick)
         self.counters["replica_restarts"] += 1
+        self._m_restarts.inc()
         death = self._death_tick.pop(replica.replica_id, self.tick)
+        tr = get_tracer()
+        if tr.enabled:
+            tr.complete("router.restart", cat="gateway", dur_s=rebuild_s,
+                        replica_id=replica.replica_id, death_tick=death,
+                        restart_tick=self.tick,
+                        recovery_ticks=self.tick - death,
+                        generation=replica.generation)
         self.incidents.append({
             "replica_id": replica.replica_id,
             "death_tick": death,

@@ -138,20 +138,34 @@ class SOLCapacityModel:
                 * cfg.ssm_head_dim * 4          # fp32 SSD state
         return float(kv)
 
-    def step_seconds(self, *, decode_positions: List[int],
-                     prefill_tokens: int = 0,
-                     prefill_position: int = 0) -> float:
-        """Estimated wall-clock for one engine step."""
+    def step_roofline(self, *, decode_positions: List[int],
+                      prefill_tokens: int = 0,
+                      prefill_position: int = 0):
+        """Roofline for one engine step (None when the step is empty).
+
+        The raw bound, *before* the achieved-efficiency division — the
+        SOL-attribution payload traced spans and drift accounting use.
+        """
         tokens = len(decode_positions) + prefill_tokens
         if tokens == 0:
-            return 0.0
+            return None
         flops = 2.0 * self.active_params * tokens
         hbm = float(self.param_bytes)
         for pos in decode_positions:
             hbm += self.kv_bytes_per_slot(pos + 1)
         if prefill_tokens:
             hbm += self.kv_bytes_per_slot(prefill_position + prefill_tokens)
-        r = roofline(flops, hbm, dtype=self.dtype, chip=self.chip)
+        return roofline(flops, hbm, dtype=self.dtype, chip=self.chip)
+
+    def step_seconds(self, *, decode_positions: List[int],
+                     prefill_tokens: int = 0,
+                     prefill_position: int = 0) -> float:
+        """Estimated wall-clock for one engine step."""
+        r = self.step_roofline(decode_positions=decode_positions,
+                               prefill_tokens=prefill_tokens,
+                               prefill_position=prefill_position)
+        if r is None:
+            return 0.0
         return r.t_sol / max(self.efficiency, 1e-6)
 
     def max_prefill_tokens(self, *, decode_positions: List[int],

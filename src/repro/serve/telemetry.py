@@ -7,6 +7,18 @@ Every engine step calls ``on_step``; request lifecycle events
 p50/p95 TTFT in both *engine steps* (deterministic, what the load benchmark
 asserts on) and wall-clock seconds, mean inter-token latency, throughput,
 and the prefix-cache hit rate.
+
+Empty-input semantics (asserted in ``tests/test_obs.py``): no summary or
+fleet-summary field ever raises on an empty or partial history.  Sample
+statistics over zero samples (percentiles, ``ttft_steps_mean``) are
+``nan`` — "no data", distinct from a measured zero; ratios and totals
+whose denominator is a count (throughput, hit rates, utilization,
+per-step means) are ``0.0``; per-request properties (``ttft_steps``,
+``ttft_seconds``, ``mean_itl_seconds``) are ``None`` until the events
+defining them have happened.  Cancelled/timed-out requests keep their
+traces (counted in ``cancelled``/``timed_out``) but contribute TTFT/ITL
+samples only if they got a first token.  JSON expositions convert the
+nans to ``null`` via ``core.obs.serialize.to_jsonable``.
 """
 
 from __future__ import annotations

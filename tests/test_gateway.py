@@ -399,11 +399,18 @@ class TestGatewayHTTP:
                 body = await resp.json()
                 assert body["status"] == "ok"
                 assert len(body["replicas"]) == 2
-            async with sess.get(base + "/metrics") as resp:
+            async with sess.get(base + "/metrics.json") as resp:
                 assert resp.status == 200
                 body = await resp.json()
                 assert {"requests", "counters", "ttft_steps_p95",
-                        "timed_out"} <= set(body)
+                        "timed_out", "drift"} <= set(body)
+            async with sess.get(base + "/metrics") as resp:
+                assert resp.status == 200
+                assert resp.content_type == "text/plain"
+                text = await resp.text()
+                assert "# TYPE repro_requests_total counter" in text
+                assert "# TYPE repro_ttft_seconds histogram" in text
+                assert "repro_fleet_requests" in text
         gateway_session(t)
 
     def test_generate_roundtrip_matches_engine(self):

@@ -1,0 +1,460 @@
+"""Observability: tracer, metrics exposition, drift detection, the shared
+JSON serializer, serving-telemetry empty-input semantics, and the drift
+consumers in the integrity pipeline and agent cost model."""
+
+import dataclasses
+import enum
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.obs import trace as trace_mod
+from repro.core.obs.drift import DriftDetector
+from repro.core.obs.metrics import (DEFAULT_BUCKETS, MetricsRegistry,
+                                    default_registry)
+from repro.core.obs.serialize import to_jsonable
+from repro.core.obs.trace import (NULL_SPAN, NULL_TRACER, Tracer, configure,
+                                  disable, get_tracer)
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_records_name_cat_attrs(self):
+        tr = Tracer()
+        with tr.span("compile.dsl", cat="compile", backend="xla") as sp:
+            sp.set(fused_count=2)
+        (s,) = tr.spans()
+        assert s.name == "compile.dsl"
+        assert s.cat == "compile"
+        assert s.ph == "X"
+        assert s.dur >= 0
+        assert s.attrs == {"backend": "xla", "fused_count": 2}
+
+    def test_event_is_instant(self):
+        tr = Tracer()
+        tr.event("tune.cache_hit", cat="tune", op="gemm")
+        (s,) = tr.spans()
+        assert s.ph == "i"
+        assert s.dur == 0.0
+        assert s.attrs["op"] == "gemm"
+
+    def test_complete_backdates_start(self):
+        tr = Tracer()
+        tr.complete("tune.trial", dur_s=0.25, cat="tune")
+        (s,) = tr.spans()
+        assert s.ph == "X"
+        assert s.dur == pytest.approx(0.25)
+        assert s.ts >= 0.0
+
+    def test_sol_efficiency_computed_on_close(self):
+        tr = Tracer()
+        tr.complete("engine.step", dur_s=1.0, cat="serve",
+                    sol={"t_sol_s": 0.25, "bound": "memory"})
+        (s,) = tr.spans()
+        assert s.sol_efficiency == pytest.approx(0.25)
+
+    def test_span_exception_sets_error_attr(self):
+        tr = Tracer()
+        with pytest.raises(RuntimeError):
+            with tr.span("compile.dsl", cat="compile"):
+                raise RuntimeError("boom")
+        (s,) = tr.spans()
+        assert s.attrs["error"] == "boom"
+
+    def test_ring_buffer_drops_oldest(self):
+        tr = Tracer(ring=4)
+        for i in range(10):
+            tr.event(f"e{i}")
+        spans = tr.spans()
+        assert len(spans) == 4
+        assert [s.name for s in spans] == ["e6", "e7", "e8", "e9"]
+        assert tr.dropped == 6
+
+    def test_drift_fed_from_sol_payload(self):
+        drift = DriftDetector()
+        tr = Tracer(drift=drift)
+        tr.complete("tune.trial", dur_s=0.002, cat="tune",
+                    sol={"t_sol_s": 1e-3, "predicted": 1e-3,
+                         "measured": 2e-3, "op": "tune.gemm"})
+        rep = drift.report()
+        assert rep["tune.gemm"]["n"] == 1
+        assert rep["tune.gemm"]["mean_ratio"] == pytest.approx(2.0)
+
+    def test_drift_measured_defaults_to_span_duration(self):
+        drift = DriftDetector()
+        tr = Tracer(drift=drift)
+        tr.complete("engine.step", dur_s=0.5, cat="serve",
+                    sol={"t_sol_s": 0.1, "predicted": 0.1})
+        rep = drift.report()
+        assert rep["engine.step"]["mean_ratio"] == pytest.approx(5.0)
+
+    def test_jsonl_sink_streams_spans(self, tmp_path):
+        path = str(tmp_path / "trace.jsonl")
+        tr = Tracer(jsonl_path=path)
+        tr.event("a", cat="compile")
+        tr.complete("b", dur_s=0.1, cat="tune")
+        tr.close()
+        lines = [json.loads(line)
+                 for line in open(path).read().splitlines()]
+        assert [d["name"] for d in lines] == ["a", "b"]
+        assert lines[1]["dur_s"] == pytest.approx(0.1)
+        assert lines[0]["ph"] == "i"
+
+    def test_chrome_export_structure(self, tmp_path):
+        tr = Tracer()
+        tr.event("hit", cat="compile")
+        tr.complete("step", dur_s=0.5, cat="serve",
+                    sol={"t_sol_s": 0.1, "flops": 1e9})
+        path = tr.export_chrome(str(tmp_path / "trace.json"))
+        data = json.load(open(path))
+        evs = data["traceEvents"]
+        assert len(evs) == 2
+        instant = next(e for e in evs if e["ph"] == "i")
+        span = next(e for e in evs if e["ph"] == "X")
+        assert instant["s"] == "t"          # thread-scoped instant
+        assert span["dur"] == pytest.approx(0.5e6)   # microseconds
+        assert span["args"]["sol"]["flops"] == 1e9
+        assert data["otherData"]["dropped_spans"] == 0
+
+    def test_null_tracer_is_noop(self):
+        assert NULL_TRACER.enabled is False
+        sp = NULL_TRACER.span("x", cat="serve", big_attr="ignored")
+        assert sp is NULL_SPAN
+        with sp as inner:
+            inner.set(anything=1)
+        NULL_TRACER.event("x")
+        NULL_TRACER.complete("x", dur_s=1.0)
+        assert NULL_TRACER.spans() == []
+        assert NULL_TRACER.categories() == []
+        with pytest.raises(RuntimeError):
+            NULL_TRACER.export_chrome("/tmp/nope.json")
+
+    def test_configure_and_disable(self, tmp_path):
+        try:
+            tr = configure(str(tmp_path / "t.json"), export_at_exit=False)
+            assert get_tracer() is tr
+            assert tr.enabled
+            tr.event("x", cat="compile")
+            assert tr.categories() == ["compile"]
+        finally:
+            disable()
+        assert get_tracer() is NULL_TRACER
+
+    def test_repro_trace_env_configures_lazily(self, tmp_path,
+                                               monkeypatch):
+        path = str(tmp_path / "env.jsonl")
+        monkeypatch.setenv("REPRO_TRACE", path)
+        monkeypatch.setattr(trace_mod, "_ENV_CHECKED", False)
+        try:
+            tr = get_tracer()
+            assert tr.enabled
+            tr.event("from_env")
+            tr.flush()
+            assert json.loads(open(path).read())["name"] == "from_env"
+        finally:
+            disable()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_inc_and_labels(self):
+        reg = MetricsRegistry()
+        c = reg.counter("reqs_total", "requests", labels=("slo",))
+        c.inc(slo="interactive")
+        c.inc(2, slo="batch")
+        assert c.value(slo="interactive") == 1
+        assert c.value(slo="batch") == 2
+        assert c.value(slo="unseen") == 0
+        with pytest.raises(ValueError):
+            c.inc(-1, slo="batch")
+        with pytest.raises(KeyError):
+            c.inc(nope="x")
+
+    def test_gauge_set(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("depth")
+        g.set(7.5)
+        assert g.value() == 7.5
+        g.inc(-2.5)                       # gauges may go down
+        assert g.value() == 5.0
+
+    def test_histogram_cumulative_buckets(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 5.0):
+            h.observe(v)
+        h.observe(float("nan"))           # ignored, not counted
+        assert h.count() == 3
+        text = reg.render_prometheus()
+        assert 'lat_bucket{le="0.1"} 1' in text
+        assert 'lat_bucket{le="1"} 2' in text
+        assert 'lat_bucket{le="+Inf"} 3' in text
+        assert "lat_sum 5.55" in text
+        assert "lat_count 3" in text
+
+    def test_render_prometheus_help_type_and_escaping(self):
+        reg = MetricsRegistry()
+        reg.counter("c_total", "counts\nthings", labels=("tag",)) \
+            .inc(tag='we"ird')
+        text = reg.render_prometheus()
+        assert "# HELP c_total counts\\nthings" in text
+        assert "# TYPE c_total counter" in text
+        assert 'c_total{tag="we\\"ird"} 1' in text
+
+    def test_get_or_create_returns_same_instrument(self):
+        reg = MetricsRegistry()
+        assert reg.counter("x_total") is reg.counter("x_total")
+
+    def test_kind_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total")
+        with pytest.raises(TypeError):
+            reg.gauge("x_total")
+
+    def test_snapshot_json_twin(self):
+        reg = MetricsRegistry()
+        reg.counter("plain_total").inc(3)
+        reg.counter("lab_total", labels=("k",)).inc(k="v")
+        reg.histogram("h", buckets=(1.0,)).observe(0.5)
+        snap = reg.snapshot()
+        assert snap["plain_total"]["values"] == 3.0
+        assert snap["lab_total"]["values"] == [
+            {"labels": {"k": "v"}, "value": 1.0}]
+        assert snap["h"]["values"][0]["count"] == 1.0
+        assert snap["h"]["type"] == "histogram"
+
+    def test_default_buckets_end_in_inf(self):
+        assert math.isinf(DEFAULT_BUCKETS[-1])
+        assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+
+class TestDrift:
+    def test_below_bound_fires_on_transition_only(self):
+        d = DriftDetector(min_samples=3)
+        events = [d.observe("op", 1.0, 0.5) for _ in range(6)]
+        # min_samples gates the first two; the third transitions; the
+        # rest are the SAME incident, so no further events
+        assert events[0] is None and events[1] is None
+        assert events[2] is not None
+        assert events[2].direction == "below_bound"
+        assert events[2].n == 3
+        assert all(e is None for e in events[3:])
+        assert d.drifting_ops() == ["op"]
+        assert len(d.events) == 1
+
+    def test_uncalibrated_bound_never_flags_slow_measurement(self):
+        # CPU interpret mode: measured >> SOL bound is expected, not drift
+        d = DriftDetector()
+        for _ in range(20):
+            assert d.observe("engine.step", 1e-4, 5.0) is None
+        assert d.drifting_ops() == []
+        assert d.report()["engine.step"]["drifting"] is False
+
+    def test_calibrated_model_flags_above(self):
+        d = DriftDetector(min_samples=3)
+        events = [d.observe("op", 1.0, 2.0, calibrated=True)
+                  for _ in range(3)]
+        assert events[2] is not None
+        assert events[2].direction == "above_model"
+
+    def test_recovery_then_refire(self):
+        d = DriftDetector(window=4, min_samples=2)
+        d.observe("op", 1.0, 0.5)
+        ev1 = d.observe("op", 1.0, 0.5)
+        assert ev1 is not None
+        # window refills with healthy ratios -> drift clears
+        for _ in range(4):
+            d.observe("op", 1.0, 1.0)
+        assert d.drifting_ops() == []
+        # a NEW sustained excursion is a new incident
+        evs = [d.observe("op", 1.0, 0.5) for _ in range(4)]
+        assert any(e is not None for e in evs)
+        assert len(d.events) == 2
+
+    def test_invalid_observations_ignored(self):
+        d = DriftDetector()
+        assert d.observe("op", 0.0, 1.0) is None     # bound must be > 0
+        assert d.observe("op", 1.0, -1.0) is None
+        assert d.observe("op", None, 1.0) is None
+        assert d.report() == {}
+
+    def test_report_and_table(self):
+        d = DriftDetector(min_samples=1)
+        d.observe("a", 2.0, 1.0, unit="bytes", calibrated=True)
+        rep = d.report()["a"]
+        assert rep["n"] == 1
+        assert rep["mean_ratio"] == pytest.approx(0.5)
+        assert rep["drifting"] is True
+        assert rep["unit"] == "bytes"
+        table = d.table()
+        assert "| a | 1 | 0.5 | bytes | yes | below_bound |" in table
+
+    def test_on_event_callback(self):
+        seen = []
+        d = DriftDetector(min_samples=1, on_event=seen.append)
+        d.observe("op", 1.0, 0.1)
+        assert len(seen) == 1 and seen[0].op == "op"
+
+    def test_gauge_published_on_every_observe(self):
+        d = DriftDetector()
+        d.observe("gauge_test_op", 1.0, 1.5)
+        g = default_registry().get("repro_sol_drift_ratio")
+        assert g is not None
+        assert g.value(op="gauge_test_op") == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# shared JSON serializer
+# ---------------------------------------------------------------------------
+
+class TestToJsonable:
+    def test_nan_and_inf_become_null(self):
+        assert to_jsonable(float("nan")) is None
+        assert to_jsonable(float("inf")) is None
+        assert to_jsonable({"p95": float("nan"), "n": 3}) == \
+            {"p95": None, "n": 3}
+
+    def test_numpy_values(self):
+        assert to_jsonable(np.float64(1.5)) == 1.5
+        assert to_jsonable(np.int32(7)) == 7
+        assert to_jsonable(np.array([1, 2])) == [1, 2]
+        assert to_jsonable(np.float64("nan")) is None
+
+    def test_dataclass_enum_and_keys(self):
+        class Color(enum.Enum):
+            RED = "red"
+
+        @dataclasses.dataclass
+        class Point:
+            x: int
+            c: Color
+
+        assert to_jsonable(Point(1, Color.RED)) == {"x": 1, "c": "red"}
+        assert to_jsonable({3: "v"}) == {"3": "v"}
+
+    def test_fallback_is_str(self):
+        class Weird:
+            def __repr__(self):
+                return "<weird>"
+        assert to_jsonable(Weird()) == "<weird>"
+
+    def test_strict_json_roundtrip(self):
+        payload = to_jsonable({"a": float("nan"), "b": (1, 2),
+                               "c": np.float32(0.5)})
+        assert json.loads(json.dumps(payload, allow_nan=False)) == \
+            {"a": None, "b": [1, 2], "c": 0.5}
+
+
+# ---------------------------------------------------------------------------
+# serving-telemetry empty-input semantics (documented in telemetry.py)
+# ---------------------------------------------------------------------------
+
+class TestTelemetryEdgeCases:
+    def test_percentile_empty_is_nan(self):
+        from repro.serve.telemetry import percentile
+        assert math.isnan(percentile([], 50))
+        assert percentile([1.0, 3.0], 50) == 2.0
+
+    def test_fleet_summary_empty_fleet(self):
+        from repro.serve.telemetry import fleet_summary
+        s = fleet_summary([])
+        assert s["replicas"] == 0
+        assert s["requests"] == 0
+        assert s["throughput_tok_s"] == 0.0        # count denominator -> 0
+        assert math.isnan(s["ttft_steps_p50"])     # no samples -> nan
+        assert math.isnan(s["itl_s_p95"])
+
+    def test_summary_zero_finished_requests(self):
+        from repro.serve.telemetry import ServeTelemetry
+        tel = ServeTelemetry()
+        s = tel.summary()
+        assert s["requests"] == 0 and s["completed"] == 0
+        assert math.isnan(s["ttft_steps_mean"])
+        assert math.isnan(s["ttft_steps_p95"])
+        assert s["throughput_tok_s"] == 0.0
+        assert s["prefix_hit_rate"] == 0.0
+        assert s["slot_utilization"] == 0.0
+        assert s["queue_depth_max"] == 0
+        # submitted but never admitted: still no nan crashes
+        tel.on_submit(0, 0, slo="interactive", prompt_tokens=4)
+        s = tel.summary()
+        assert s["requests"] == 1 and s["completed"] == 0
+        assert math.isnan(s["ttft_steps_mean"])
+
+    def test_cancelled_only_traces_keep_counts_not_samples(self):
+        from repro.serve.telemetry import ServeTelemetry
+        tel = ServeTelemetry()
+        tel.on_submit(0, 0)
+        tel.on_finish(0, 3, cancelled=True)       # no first token
+        tel.on_submit(1, 1)
+        tel.on_finish(1, 5, timed_out=True)
+        s = tel.summary()
+        assert s["cancelled"] == 1 and s["timed_out"] == 1
+        assert s["completed"] == 0
+        assert math.isnan(s["ttft_steps_mean"])   # no token -> no sample
+        # a timed-out request WITH a first token contributes TTFT
+        tel.on_submit(2, 2)
+        tel.on_token(2, 4)
+        tel.on_finish(2, 9, timed_out=True)
+        s = tel.summary()
+        assert s["ttft_steps_mean"] == 2.0
+
+    def test_request_properties_none_until_defined(self):
+        from repro.serve.telemetry import RequestTrace
+        t = RequestTrace(rid=0)
+        assert t.ttft_steps is None
+        assert t.ttft_seconds is None
+        assert t.mean_itl_seconds is None
+
+    def test_fleet_summary_json_safe(self):
+        from repro.serve.telemetry import ServeTelemetry, fleet_summary
+        payload = to_jsonable(fleet_summary([ServeTelemetry()]))
+        assert payload["ttft_steps_p50"] is None
+        json.dumps(payload, allow_nan=False)      # strict JSON, no raise
+
+
+# ---------------------------------------------------------------------------
+# drift consumers: integrity pipeline + agent cost model
+# ---------------------------------------------------------------------------
+
+class TestDriftConsumers:
+    def _drifted_report(self):
+        d = DriftDetector(min_samples=1)
+        d.observe("kernel.gemm", 1.0, 0.5)                 # beats the bound
+        d.observe("bytes.model", 1.0, 2.0, unit="bytes",
+                  calibrated=True)                          # stale model
+        d.observe("healthy.op", 1.0, 1.05)
+        return d.report()
+
+    def test_review_drift_labels(self):
+        from repro.core.integrity.pipeline import review_drift
+        reviews = review_drift(self._drifted_report())
+        by_cat = {r.category: r for r in reviews}
+        assert by_cat["sustained_below_sol_bound"].label == "sol_ceiling"
+        assert by_cat["stale_cost_model"].label == "minor"
+        assert len(reviews) == 2                  # healthy op not reviewed
+        assert review_drift({}) == []
+
+    def test_cite_drift_report(self):
+        from repro.core.agent.costmodel import cite_drift_report
+        assert "no drift report" in cite_drift_report(None)
+        assert "no drift report" in cite_drift_report({})
+        healthy = DriftDetector()
+        healthy.observe("op", 1.0, 1.0)
+        assert "no sustained drift" in cite_drift_report(healthy.report())
+        cite = cite_drift_report(self._drifted_report())
+        assert cite.startswith("DRIFT on 2/3 op(s)")
+        assert "kernel.gemm below_bound" in cite
+        assert "bytes.model above_model" in cite
