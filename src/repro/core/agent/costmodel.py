@@ -461,3 +461,45 @@ def cite_quant_report(report: Optional[Dict]) -> str:
                  + (f" (rel err {err:.3g} within budget "
                     f"{report['budget']:.3g})" if err is not None else ""))
     return head
+
+
+def cite_gate_verdict(verdict: Optional[Dict]) -> str:
+    """One-line citation of an integrity-gate verdict
+    (``core.integrity.gate.Verdict.as_dict()``) for agent run logs /
+    hypothesis notes — the enforcement twin of ``cite_drift_report``.
+
+    A quarantined attempt contributes zero to every score the agent
+    optimizes (``Attempt.scored_speedup``), so the citation tells the
+    agent *why* its fast-looking candidate earned nothing: which detector
+    fired and what evidence it recorded.
+    """
+    if not verdict:
+        return "no gate verdict (attempt not yet reviewed)"
+    decision = verdict.get("decision", "accept")
+    if decision == "accept":
+        return "gate: accepted (all integrity detectors passed)"
+    reasons = verdict.get("reason_codes") or []
+    ev = verdict.get("evidence") or {}
+    parts = []
+    for code in reasons:
+        if code == "sol_impossible":
+            parts.append("measurement beats the SOL bound "
+                         "(physically impossible)")
+        elif code == "oracle_mismatch":
+            parts.append("output disagrees with the reference oracle")
+        elif code == "hlo_folded":
+            parts.append("XLA folded the benchmark away "
+                         "(dead code / constants)")
+        elif code == "timer_cheat":
+            parts.append("timed clock disagrees with the monotonic clock")
+        elif code == "dispatch_mismatch":
+            parts.append("dispatch count disagrees with the step counter")
+        elif code == "ledger_blocked":
+            parts.append("config already on the quarantine ledger")
+        else:
+            parts.append(code)
+    head = f"gate: {decision.upper()} — " + ("; ".join(parts) or "unlabeled")
+    label = ev.get("label")
+    if label:
+        head += f" (pipeline label: {label})"
+    return head + "; this attempt scores zero"

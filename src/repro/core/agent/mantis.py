@@ -132,6 +132,27 @@ class Agent:
             base = self.policy.tokens_per_attempt(problem)
         return base + extra
 
+    def _gate(self, attempt: Attempt, log: RunLog) -> None:
+        """Eagerly pass a recorded attempt through the integrity gate: the
+        offline pipeline review becomes the attempt's label AND a recorded
+        verdict, so a gamed attempt scores zero (``scored_speedup``) the
+        moment it lands, not at audit time."""
+        from ..integrity.gate import _record_verdict, verdict_from_review
+        from ..integrity.pipeline import review_attempt
+        from .costmodel import cite_gate_verdict
+
+        r = review_attempt(attempt, log)
+        attempt.label = r.label
+        v = verdict_from_review(r)
+        v.op = f"agent.{log.problem_id}"
+        d = v.as_dict()
+        d["citation"] = cite_gate_verdict(d)
+        attempt.verdict = d
+        # ordinary toolchain failures reject without being adversarial, so
+        # only quarantines land in the audit metric/trace
+        if v.quarantined:
+            _record_verdict(v, source="agent")
+
     def _execute(self, problem: Problem, hyp: Hypothesis,
                  state: "_SearchState", log: RunLog, rng: random.Random,
                  phase: str, extra_tokens: int = 0) -> None:
@@ -162,18 +183,18 @@ class Agent:
                     self.cfg.capability, rng))
 
         if toolchain_error is not None:
-            log.record(Attempt(
+            self._gate(log.record(Attempt(
                 index=idx, phase=phase, description=hyp.description,
                 tokens=tokens, ok=False, runtime_s=float("inf"), speedup=0.0,
-                error=toolchain_error, hypothesis=hyp.description))
+                error=toolchain_error, hypothesis=hyp.description)), log)
             return
 
         m = self.cost.evaluate(problem, sol)
         if not m.ok:
-            log.record(Attempt(
+            self._gate(log.record(Attempt(
                 index=idx, phase=phase, description=hyp.description,
                 tokens=tokens, ok=False, runtime_s=float("inf"), speedup=0.0,
-                error=m.error, hypothesis=hyp.description))
+                error=m.error, hypothesis=hyp.description)), log)
             return
         speedup = state.t_ref / m.runtime_s
         flags = sorted(sol.flags)
@@ -182,11 +203,11 @@ class Agent:
             # reduced-precision compute on an fp32-specified problem: the
             # LGD labels this a Minor Issue (math approximation), not gaming
             flags.append("reduced_precision")
-        log.record(Attempt(
+        self._gate(log.record(Attempt(
             index=idx, phase=phase, description=hyp.description,
             tokens=tokens, ok=True, runtime_s=m.runtime_s, speedup=speedup,
             flags=flags, inherited=inherited,
-            hypothesis=hyp.description))
+            hypothesis=hyp.description)), log)
         if m.runtime_s < state.best_runtime:
             state.best_runtime = m.runtime_s
             state.best_speedup = speedup

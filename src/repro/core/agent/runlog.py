@@ -25,6 +25,24 @@ class Attempt:
     label: str = ""              # no_issues|minor|sol_ceiling|pytorch_only|
     #                              original_gaming|inherited_gaming
     hypothesis: str = ""
+    # the integrity gate's recorded decision over this attempt (Verdict
+    # .as_dict(), plus a "citation" line for the agent prompt); None until
+    # the gate reviewed it
+    verdict: Optional[Dict] = None
+
+    @property
+    def scored_speedup(self) -> float:
+        """The speedup this attempt is allowed to claim: zero unless the
+        toolchain succeeded, the runtime is finite, AND the integrity gate
+        accepted it — a gamed attempt scores nothing, however fast."""
+        if not self.ok or not math.isfinite(self.runtime_s):
+            return 0.0
+        if self.label not in ("", "no_issues", "minor"):
+            return 0.0
+        if self.verdict is not None \
+                and self.verdict.get("decision") not in (None, "accept"):
+            return 0.0
+        return self.speedup
 
 
 @dataclass
@@ -84,6 +102,18 @@ class RunLog:
                      accepted_only: bool = False) -> float:
         s = self.best_speedup(upto, accepted_only)
         return self.t_ref / s if s > 0 else float("inf")
+
+    def gated_best_speedup(self, upto: Optional[int] = None) -> float:
+        """Best speedup under gate enforcement: attempts without a label
+        are reviewed on the fly, gamed/quarantined attempts score zero."""
+        from ..integrity.pipeline import review_attempt
+
+        best = 0.0
+        for a in self.attempts[:upto]:
+            if not a.label and a.ok:
+                a.label = review_attempt(a, self).label
+            best = max(best, a.scored_speedup)
+        return best
 
     @property
     def total_tokens(self) -> int:

@@ -146,6 +146,93 @@ def build_sharding_report(ir: "ProgramIR",
     return ShardingReport(decisions=[_shard_decision(ir, 0, dims)])
 
 
+@dataclass
+class IntegrityReport:
+    """IR-priced cost the integrity gate checks compiled executables
+    against (``CompiledKernel.integrity``).
+
+    The DSL knows what the program *claims* to compute, so the compiler
+    prices it from first principles (2mnk FLOPs per gemm stage, HBM bytes
+    from the dtype-aware traffic model).  ``check_compiled`` then compares
+    a jit-compiled executable's HLO-counted cost against this price —
+    compiled FLOPs collapsing far below it means XLA folded the benchmark
+    away (dead code / constants) and the timing measures nothing.  Bounds
+    need concrete shapes, so the report is filled only when ``compile_dsl``
+    got ``shape_hints``."""
+
+    priced_flops: float = 0.0
+    priced_bytes: float = 0.0
+    stages: List[Dict] = field(default_factory=list)
+    # per priced stage: {"op", "stage", "flops", "bytes"}
+
+    def check_compiled(self, compiled, *, num_devices: int = 1,
+                       ratio: float = 0.01):
+        """Fold-check one compiled executable against the priced cost
+        (returns :class:`~repro.core.sol.hlo_analysis.FoldCheck`)."""
+        from ..sol.hlo_analysis import detect_folding
+
+        return detect_folding(compiled, priced_flops=self.priced_flops,
+                              priced_bytes=self.priced_bytes,
+                              num_devices=num_devices, ratio=ratio)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"priced_flops": self.priced_flops,
+                "priced_bytes": self.priced_bytes,
+                "stages": [dict(s) for s in self.stages]}
+
+
+def _price_stage(k, stage: int, dims) -> Optional[Dict[str, object]]:
+    """IR-priced FLOPs/bytes for one gemm stage (None when unpriceable)."""
+    if dims is None or k.op_name != "gemm":
+        return None
+    from ..sol.roofline import matmul_hbm_bytes
+
+    (m, kk) = dims["in"][0]
+    n = dims["out"][1]
+    wd = k.wdtype or k.dtypes.input
+    return {
+        "op": k.op_name, "stage": stage,
+        "flops": 2.0 * m * n * kk,
+        "bytes": matmul_hbm_bytes(m, n, kk, a_dtype=k.dtypes.input,
+                                  w_dtype=wd, out_dtype=k.dtypes.output),
+    }
+
+
+def build_integrity_report(ir: "ProgramIR",
+                           shape_hints: Optional[Dict]
+                           ) -> Optional[IntegrityReport]:
+    """Price a lowered (pre-fusion) program for the fold check; None when
+    no stage could be priced (no shape hints, or no gemm stages).  Stage
+    shapes come from the same driver-input ``shape_hints`` the fusion and
+    sharding reports use."""
+    from .ir import KernelIR as _K
+
+    priced: List[Dict[str, object]] = []
+    if isinstance(ir, PipelineIR):
+        if shape_hints:
+            from ..codegen.fusion import _infer_stage_shapes
+            shapes = _infer_stage_shapes(ir, shape_hints)
+            for i, k in enumerate(ir.kernel_stages):
+                p = _price_stage(k, i, shapes[i] if shapes else None)
+                if p is not None:
+                    priced.append(p)
+    elif isinstance(ir, _K):
+        dims = None
+        if shape_hints and "a" in shape_hints and "b" in shape_hints:
+            m, kk = tuple(shape_hints["a"])
+            n = tuple(shape_hints["b"])[1]
+            dims = {"in": [(m, kk)], "out": (m, n)}
+        p = _price_stage(ir, 0, dims)
+        if p is not None:
+            priced.append(p)
+    if not priced:
+        return None
+    return IntegrityReport(
+        priced_flops=sum(p["flops"] for p in priced),
+        priced_bytes=sum(p["bytes"] for p in priced),
+        stages=priced)
+
+
 def default_fuse_mode() -> str:
     """Fusion mode when ``compile_dsl`` gets ``fuse=None``: the
     REPRO_FUSION env var (off | auto | force), default auto."""
@@ -173,6 +260,11 @@ class CompiledKernel:
     # stage, the SOL-chosen strategy and the interconnect bound alongside
     # the compute/HBM bounds.
     sharding: Optional[ShardingReport] = None
+    # IR-priced FLOPs/bytes for the integrity gate's dead-code /
+    # constant-folding check (filled only when compiled with shape_hints):
+    # kernel.integrity.check_compiled(jitted.lower(...).compile()) verifies
+    # the executable still performs the work the DSL priced.
+    integrity: Optional[IntegrityReport] = None
 
     @property
     def all_input_names(self) -> Tuple[str, ...]:
@@ -326,6 +418,7 @@ def _compile_dsl_impl(src: str, backend: str, *,
     t0 = time.perf_counter()
     ir, warnings = lower_dsl(src)
     sharding_report = build_sharding_report(ir, shape_hints)
+    integrity_report = build_integrity_report(ir, shape_hints)
     fusion_report: Optional["FusionReport"] = None
     if isinstance(ir, PipelineIR):
         from ..codegen.fusion import fuse_pipeline
@@ -351,14 +444,19 @@ def _compile_dsl_impl(src: str, backend: str, *,
             if not _has_bounds(sharding_report) \
                     and _has_bounds(hit.sharding):
                 keep_sharding = hit.sharding
+            # same rule for the priced-integrity report: a hint-less
+            # recompile keeps the hit's filled pricing
+            keep_integrity = integrity_report or hit.integrity
             if (fusion_report is not None and hit.fusion != fusion_report) \
-                    or hit.sharding != keep_sharding:
+                    or hit.sharding != keep_sharding \
+                    or hit.integrity != keep_integrity:
                 # don't mutate the shared cached object: earlier holders
                 # keep their own report (same compiled fn either way)
                 import dataclasses as _dc
                 return _dc.replace(hit,
                                    fusion=fusion_report or hit.fusion,
-                                   sharding=keep_sharding)
+                                   sharding=keep_sharding,
+                                   integrity=keep_integrity)
             return hit
 
     if isinstance(ir, PipelineIR):
@@ -421,6 +519,7 @@ def _compile_dsl_impl(src: str, backend: str, *,
         from_disk_cache=from_disk,
         fusion=fusion_report,
         sharding=sharding_report,
+        integrity=integrity_report,
     )
     if use_cache:
         _cache_put(cache_key, result)

@@ -1,9 +1,27 @@
-"""SOL-guided integrity checking pipeline."""
+"""SOL-guided integrity checking: the offline review pipeline
+(``pipeline.py``), the online adversarial verdict gate (``gate.py``) every
+measured verdict passes before being cached / cited / served, and the
+deterministic fault/adversary injector (``adversary.py``) that drills
+both."""
 
+from .gate import (ACCEPT, QUARANTINE, QUARANTINE_REASONS, REJECT,
+                   CheckResult, QuarantineLedger, Verdict, check_hlo_fold,
+                   check_oracle, check_sol_bound, check_timing_protocol,
+                   gate_measurement, global_ledger, install_drift_gate,
+                   integrity_disabled, ledger_key, oracle_budget,
+                   verdict_from_drift, verdict_from_review)
 from .pipeline import (ACCEPTED, GAMING_LABELS, SOL_CEILING_SLACK,
                        AttemptReview, InflationReport, category_breakdown,
-                       inflation, review_attempt, review_log, review_logs)
+                       inflation, review_attempt, review_drift, review_log,
+                       review_logs)
 
-__all__ = ["ACCEPTED", "GAMING_LABELS", "SOL_CEILING_SLACK", "AttemptReview",
-           "InflationReport", "category_breakdown", "inflation",
-           "review_attempt", "review_log", "review_logs"]
+__all__ = ["ACCEPT", "ACCEPTED", "GAMING_LABELS", "QUARANTINE",
+           "QUARANTINE_REASONS", "REJECT", "SOL_CEILING_SLACK",
+           "AttemptReview", "CheckResult", "InflationReport",
+           "QuarantineLedger", "Verdict", "category_breakdown",
+           "check_hlo_fold", "check_oracle", "check_sol_bound",
+           "check_timing_protocol", "gate_measurement", "global_ledger",
+           "inflation", "install_drift_gate", "integrity_disabled",
+           "ledger_key", "oracle_budget", "review_attempt", "review_drift",
+           "review_log", "review_logs", "verdict_from_drift",
+           "verdict_from_review"]

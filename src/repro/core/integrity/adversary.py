@@ -1,0 +1,177 @@
+"""Deterministic fault/adversary injector for the integrity gate.
+
+Each planted adversary is one of the gaming modes the paper's validators
+must catch (a kernel that *looks* fast while failing to perform the
+intended computation), built so the gate's recall and false-positive rate
+are testable and drilled in CI (``benchmarks/integrity_drill.py``):
+
+  dead_code        returns a precomputed constant instead of computing —
+                   fast, wrong; the oracle comparison catches it.
+  wrong_output     performs the work but perturbs the result beyond the
+                   dtype budget — the oracle comparison catches it.
+  constant_folded  bakes its inputs in as constants so XLA folds the whole
+                   computation at compile time — the compiled executable's
+                   FLOPs collapse below the IR-priced cost (HLO check).
+  timer_cheat      reports elapsed time through a clock that runs slow —
+                   the monotonic cross-check in ``measure_protocol``
+                   collapses ``clock_skew`` and the protocol check fires.
+
+Plus two measurement faults (not adversarial — transient infrastructure
+failure) for the fault-tolerance drill: ``flaky_fn`` fails its first N
+calls then recovers (bounded retry must absorb it), ``hanging_fn`` never
+returns (the per-trial timeout must cut it off).
+
+Everything is seeded and shape-parameterized — no randomness at call time
+— so drills reproduce bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+_SEED = 1234
+
+
+def _gemm_inputs(m: int, n: int, k: int):
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(_SEED)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return a, b
+
+
+@dataclass
+class PlantedAdversary:
+    """One planted gaming mode: a tune-op builder plus its oracle and the
+    reason code the gate must convict it with."""
+
+    name: str
+    expected_reason: str          # the Verdict reason code that must fire
+    description: str
+    make_fn: Callable[[Dict[str, object]], Callable[[], object]]
+    ref: Callable[[], object]     # kernels/ref.py oracle, precomputed shape
+
+
+def dead_code_adversary(m: int = 64, n: int = 64,
+                        k: int = 64) -> PlantedAdversary:
+    """Returns zeros without ever touching the inputs — the classic
+    dead-code exploit (fast because nothing runs)."""
+    import jax.numpy as jnp
+
+    from ...kernels.ref import gemm_ref
+
+    a, b = _gemm_inputs(m, n, k)
+    z = jnp.zeros((m, n), jnp.float32)
+
+    def make_fn(cfg):
+        return lambda: z
+
+    return PlantedAdversary(
+        name="dead_code", expected_reason="oracle_mismatch",
+        description="returns a constant zero tensor instead of computing",
+        make_fn=make_fn, ref=lambda: gemm_ref(a, b))
+
+
+def wrong_output_adversary(m: int = 64, n: int = 64,
+                           k: int = 64) -> PlantedAdversary:
+    """Computes the gemm but scales the result — numerically wrong beyond
+    any dtype budget, indistinguishable from honest by timing alone."""
+    from ...kernels.ref import gemm_ref
+
+    a, b = _gemm_inputs(m, n, k)
+
+    def make_fn(cfg):
+        return lambda: (a @ b) * 1.5
+
+    return PlantedAdversary(
+        name="wrong_output", expected_reason="oracle_mismatch",
+        description="computes the matmul but perturbs the result 1.5x",
+        make_fn=make_fn, ref=lambda: gemm_ref(a, b))
+
+
+def constant_folded_executable(m: int = 64, n: int = 64, k: int = 64):
+    """A jit-compiled executable whose inputs are baked-in constants, so
+    XLA constant-folds the entire matmul at compile time.  Returns
+    ``(compiled, priced_flops, priced_bytes)`` for the HLO fold check."""
+    import jax
+
+    from ..sol.roofline import matmul_hbm_bytes
+
+    a, b = _gemm_inputs(m, n, k)
+    compiled = jax.jit(lambda: a @ b).lower().compile()
+    return compiled, 2.0 * m * n * k, matmul_hbm_bytes(m, n, k)
+
+
+def timer_cheat_clock(scale: float = 0.01,
+                      base: Callable[[], float] = time.perf_counter
+                      ) -> Callable[[], float]:
+    """A clock that runs ``scale``x slower than wall time — the
+    benchmark-side timer cheat (self-reported elapsed time shrinks while
+    monotonic wall time does not)."""
+    t0 = base()
+
+    def clock() -> float:
+        return t0 + (base() - t0) * scale
+
+    return clock
+
+
+def slow_fn(duration_s: float = 0.002) -> Callable[[], object]:
+    """A callable that takes real wall time — long enough that the
+    monotonic cross-check is meaningfully above timer resolution."""
+
+    def fn():
+        time.sleep(duration_s)
+        return duration_s
+
+    return fn
+
+
+# -- measurement faults (fault-tolerance drill, not adversaries) -------------
+
+@dataclass
+class FlakyFn:
+    """Fails its first ``failures`` calls, then succeeds forever — the
+    transient infra fault bounded retry must absorb."""
+
+    failures: int = 1
+    calls: int = 0
+    result: object = 1.0
+
+    def __call__(self):
+        self.calls += 1
+        if self.calls <= self.failures:
+            raise RuntimeError(f"transient fault (call {self.calls})")
+        return self.result
+
+
+def flaky_fn(failures: int = 1) -> FlakyFn:
+    return FlakyFn(failures=failures)
+
+
+def hanging_fn(hang_s: float = 3600.0,
+               stop: Optional[List[bool]] = None) -> Callable[[], object]:
+    """Never returns within any reasonable budget — the per-trial timeout
+    must cut it off.  Sleeps in small slices watching the optional ``stop``
+    flag so drill teardown doesn't strand a thread for an hour."""
+
+    def fn():
+        deadline = time.monotonic() + hang_s
+        while time.monotonic() < deadline:
+            if stop and stop[0]:
+                return None
+            time.sleep(0.01)
+        return None
+
+    return fn
+
+
+def all_adversaries() -> List[PlantedAdversary]:
+    """The tune-path planted modes (constant_folded and timer_cheat attack
+    other layers — see ``constant_folded_executable`` /
+    ``timer_cheat_clock``)."""
+    return [dead_code_adversary(), wrong_output_adversary()]

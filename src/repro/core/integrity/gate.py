@@ -1,0 +1,612 @@
+"""Adversarial verdict gate: every measured verdict passes here before it
+is cached, cited, or served (the paper's final claim, enforced).
+
+``core/integrity/pipeline.py`` *reviews* run logs offline; this module is
+the online trust boundary.  Four detectors compose into one recorded,
+auditable :class:`Verdict` (accept / reject / quarantine with reason codes
+and evidence):
+
+  1. **Oracle comparison** (:func:`check_oracle`) — the candidate's output
+     against the ``kernels/ref.py`` oracle, with per-dtype tolerance
+     budgets reused from tune's quant machinery (a quantized weight dtype
+     gets its declared rel-error budget, a float dtype its precision
+     floor).  A kernel that is fast because it computes the wrong thing
+     fails here.
+  2. **SOL impossibility** (:func:`check_sol_bound`) — a timing below the
+     uncalibrated roofline bound for the op's priced bytes/FLOPs is
+     physically impossible.  The same ``below_bound`` signal
+     ``core/obs/drift.py`` raises on sustained windows is consumed via
+     :func:`install_drift_gate` / :func:`verdict_from_drift`.
+  3. **HLO dead-code / constant-folding** (:func:`check_hlo_fold`) — the
+     compiled executable's FLOPs/bytes collapsing far below the IR-priced
+     cost means XLA folded the benchmark away (the measurement timed a
+     constant, not the computation).
+  4. **Timing-protocol sanity** (:func:`check_timing_protocol`) — warmup
+     discipline, minimum timed trials, a monotonic-clock cross-check that
+     catches a cheating timer, and a dispatch-count cross-check against
+     the PR-3 per-step counter when the caller can supply one.
+
+Enforcement points: ``core/tune/runner.tune_op`` (quarantined configs
+never enter the :class:`~repro.core.tune.cache.TuningCache`; the
+persistent :class:`QuarantineLedger` — same key schema as the tuning
+cache — blocks re-admission), ``core/tune.lookup`` (a quarantined record
+resolves to None, i.e. the safe default, and increments the
+``repro_integrity_quarantined`` metric — this covers the serve engine's
+tuned-config resolution and the agent's trial-0 seeding in one choke
+point), and ``core/agent`` scoring (gamed attempts score zero, the
+verdict is recorded on the attempt).
+
+``REPRO_INTEGRITY=off`` is the escape hatch for repro debugging: the gate
+accepts everything and the ledger stops blocking (entries are kept).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+# -- decisions & reason codes ------------------------------------------------
+
+ACCEPT = "accept"
+REJECT = "reject"
+QUARANTINE = "quarantine"
+
+# stable reason-code vocabulary (documented in README "Integrity & verdict
+# gating"); quarantine codes mark adversarial/physically-impossible results,
+# reject codes mark measurements that are merely untrustworthy (re-measure)
+R_ORACLE = "oracle_mismatch"
+R_SOL = "sol_impossible"
+R_FOLDED = "hlo_folded"
+R_TIMER = "timer_cheat"
+R_DISPATCH = "dispatch_mismatch"
+R_PROTOCOL = "protocol_violation"
+R_LEDGER = "ledger_blocked"
+
+QUARANTINE_REASONS = (R_ORACLE, R_SOL, R_FOLDED, R_TIMER, R_DISPATCH,
+                      R_LEDGER)
+REJECT_REASONS = (R_PROTOCOL,)
+
+# SOL-impossibility slack: measured < (1 - tol) * bound beats physics.
+# Shares the sweeps' predicted-vs-measured band (core/obs/drift.py).
+SOL_TOLERANCE = 0.20
+
+# compiled-vs-priced collapse ratio below which the benchmark was folded
+FOLD_RATIO = 0.01
+
+# timed/monotonic clock-ratio floor; a cheating timer under-reports wall
+# time so the ratio collapses.  Real clocks on one host agree within noise.
+CLOCK_SKEW_FLOOR = 0.5
+# trials shorter than this are too close to timer resolution for the
+# cross-check to be meaningful (skew stays neutral)
+CLOCK_SKEW_MIN_SECONDS = 1e-4
+
+# per-float-dtype oracle rel-L2 budgets; quantized weight dtypes reuse
+# tune.quant_error_budget (the quant machinery's declared budgets)
+DEFAULT_ORACLE_BUDGETS = {
+    "fp32": 1e-5,
+    "tf32": 1e-3,
+    "bf16": 2e-2,
+    "fp16": 1e-2,
+    "fp64": 1e-12,
+}
+
+MIN_TIMED_TRIALS = 1
+
+
+def integrity_disabled() -> bool:
+    """``REPRO_INTEGRITY=off`` — the repro-debugging escape hatch."""
+    return os.environ.get("REPRO_INTEGRITY", "").lower() in ("off", "0",
+                                                             "false")
+
+
+def oracle_budget(dtype: str = "fp32",
+                  wdtype: Optional[str] = None) -> float:
+    """Rel-L2 tolerance for an oracle comparison: a quantized weight dtype
+    gets the quant machinery's per-dtype budget (lossy by design), a float
+    dtype its precision floor."""
+    if wdtype and wdtype != "none":
+        from ..tune import quant_error_budget
+
+        return quant_error_budget(wdtype)
+    return DEFAULT_ORACLE_BUDGETS.get(str(dtype).lower(), 1e-5)
+
+
+# -- check results & verdicts ------------------------------------------------
+
+@dataclass
+class CheckResult:
+    """One detector's outcome with its evidence."""
+
+    name: str                           # oracle|sol_bound|hlo_fold|protocol
+    ok: bool
+    reason: str = ""                    # reason code when not ok
+    evidence: Dict[str, object] = field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+
+@dataclass
+class Verdict:
+    """The gate's recorded, auditable decision over one measured result."""
+
+    decision: str                       # accept | reject | quarantine
+    reason_codes: List[str] = field(default_factory=list)
+    checks: List[CheckResult] = field(default_factory=list)
+    op: str = ""
+    config: Optional[Dict[str, object]] = None
+    evidence: Dict[str, object] = field(default_factory=dict)
+    ts: float = field(default_factory=time.time)
+
+    @property
+    def accepted(self) -> bool:
+        return self.decision == ACCEPT
+
+    @property
+    def quarantined(self) -> bool:
+        return self.decision == QUARANTINE
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "decision": self.decision,
+            "reason_codes": list(self.reason_codes),
+            "op": self.op,
+            "config": self.config,
+            "evidence": dict(self.evidence),
+            "checks": [c.as_dict() for c in self.checks],
+            "ts": self.ts,
+        }
+
+
+def _compose(op: str, config: Optional[Dict[str, object]],
+             checks: Sequence[CheckResult]) -> Verdict:
+    """Fold check results into one decision: any quarantine-class failure
+    quarantines; protocol-class failures alone reject; else accept."""
+    reasons = [c.reason for c in checks if not c.ok and c.reason]
+    if any(r in QUARANTINE_REASONS for r in reasons):
+        decision = QUARANTINE
+    elif reasons:
+        decision = REJECT
+    else:
+        decision = ACCEPT
+    evidence: Dict[str, object] = {}
+    for c in checks:
+        if not c.ok:
+            evidence[c.name] = dict(c.evidence)
+    return Verdict(decision=decision, reason_codes=reasons,
+                   checks=list(checks), op=op,
+                   config=dict(config) if config else None,
+                   evidence=evidence)
+
+
+# -- detector 1: oracle comparison ------------------------------------------
+
+def rel_error(got, want) -> float:
+    """Rel L2 of ``got`` against the oracle output ``want`` (fp64 math)."""
+    import numpy as np
+
+    g = np.asarray(got, dtype=np.float64).ravel()
+    w = np.asarray(want, dtype=np.float64).ravel()
+    if g.shape != w.shape:
+        return float("inf")
+    if not (np.isfinite(g).all() and np.isfinite(w).all()):
+        return float("inf")
+    denom = float(np.linalg.norm(w))
+    if denom == 0.0:
+        return float(np.linalg.norm(g))
+    return float(np.linalg.norm(g - w) / denom)
+
+
+def check_oracle(got, want, *, dtype: str = "fp32",
+                 wdtype: Optional[str] = None,
+                 budget: Optional[float] = None) -> CheckResult:
+    """Compare a measured kernel's output against its ``kernels/ref.py``
+    oracle within the per-dtype tolerance budget."""
+    b = budget if budget is not None else oracle_budget(dtype, wdtype)
+    err = rel_error(got, want)
+    ok = err <= b
+    return CheckResult(
+        name="oracle", ok=ok, reason="" if ok else R_ORACLE,
+        evidence={"rel_error": err, "budget": b, "dtype": dtype,
+                  "wdtype": wdtype})
+
+
+# -- detector 2: SOL impossibility ------------------------------------------
+
+def check_sol_bound(measured_s: float, t_sol_s: Optional[float], *,
+                    tolerance: float = SOL_TOLERANCE) -> CheckResult:
+    """A measurement below ``(1 - tolerance) * t_sol`` beats the roofline
+    bound for the op's priced bytes/FLOPs — physically impossible, the
+    benchmark did not perform the priced work."""
+    if t_sol_s is None or t_sol_s <= 0 or measured_s is None \
+            or not math.isfinite(measured_s):
+        return CheckResult(name="sol_bound", ok=True,
+                           evidence={"skipped": "no bound"})
+    impossible = measured_s < (1.0 - tolerance) * t_sol_s
+    return CheckResult(
+        name="sol_bound", ok=not impossible,
+        reason="" if not impossible else R_SOL,
+        evidence={"measured_s": float(measured_s),
+                  "t_sol_s": float(t_sol_s),
+                  "ratio": float(measured_s / t_sol_s),
+                  "tolerance": tolerance})
+
+
+# -- detector 3: HLO dead-code / constant-folding ----------------------------
+
+def check_hlo_fold(compiled, *, priced_flops: float, priced_bytes: float,
+                   num_devices: int = 1,
+                   ratio: float = FOLD_RATIO) -> CheckResult:
+    """Compiled FLOPs/bytes collapsing far below the IR-priced cost means
+    XLA folded the benchmark away (dead code / constants) — the timing
+    measures nothing.  ``compiled`` is a jax compiled executable (or a
+    pre-extracted :class:`~repro.core.sol.hlo_analysis.FoldCheck`)."""
+    from ..sol.hlo_analysis import FoldCheck, detect_folding
+
+    fc = compiled if isinstance(compiled, FoldCheck) else detect_folding(
+        compiled, priced_flops=priced_flops, priced_bytes=priced_bytes,
+        num_devices=num_devices, ratio=ratio)
+    return CheckResult(
+        name="hlo_fold", ok=not fc.folded,
+        reason="" if not fc.folded else R_FOLDED,
+        evidence=fc.as_dict())
+
+
+# -- detector 4: timing-protocol sanity --------------------------------------
+
+def check_timing_protocol(report, *,
+                          min_warmup: int = 1,
+                          min_trials: int = MIN_TIMED_TRIALS,
+                          expected_dispatches: Optional[int] = None,
+                          observed_dispatches: Optional[int] = None
+                          ) -> CheckResult:
+    """Sanity over a :class:`~repro.core.tune.runner.MeasureReport`:
+    warmup discipline, a minimum number of surviving timed trials, the
+    timed-vs-monotonic clock cross-check (a cheating timer collapses the
+    ratio), and — when the caller can supply both sides — the
+    dispatch-count cross-check against the PR-3 per-step counter."""
+    warmup = int(getattr(report, "warmup", 0))
+    times = list(getattr(report, "times", ()) or ())
+    skew = float(getattr(report, "clock_skew", 1.0))
+    evidence: Dict[str, object] = {
+        "warmup": warmup, "timed_trials": len(times), "clock_skew": skew,
+    }
+    reason = ""
+    if skew < CLOCK_SKEW_FLOOR:
+        reason = R_TIMER
+    elif expected_dispatches is not None and observed_dispatches is not None \
+            and int(expected_dispatches) != int(observed_dispatches):
+        reason = R_DISPATCH
+        evidence.update(expected_dispatches=int(expected_dispatches),
+                        observed_dispatches=int(observed_dispatches))
+    elif warmup < min_warmup or len(times) < min_trials:
+        reason = R_PROTOCOL
+        evidence.update(min_warmup=min_warmup, min_trials=min_trials)
+    return CheckResult(name="protocol", ok=not reason, reason=reason,
+                       evidence=evidence)
+
+
+# -- composition --------------------------------------------------------------
+
+def gate_measurement(op: str, *, config: Optional[Dict[str, object]] = None,
+                     measured_s: Optional[float] = None,
+                     t_sol_s: Optional[float] = None,
+                     output=None, expected=None,
+                     dtype: str = "fp32", wdtype: Optional[str] = None,
+                     oracle_budget_override: Optional[float] = None,
+                     compiled=None, priced_flops: Optional[float] = None,
+                     priced_bytes: Optional[float] = None,
+                     report=None,
+                     expected_dispatches: Optional[int] = None,
+                     observed_dispatches: Optional[int] = None) -> Verdict:
+    """Run every detector the caller supplied inputs for and compose one
+    :class:`Verdict`.  With ``REPRO_INTEGRITY=off`` everything is accepted
+    (the verdict records that the gate was disabled)."""
+    if integrity_disabled():
+        v = Verdict(decision=ACCEPT, op=op,
+                    config=dict(config) if config else None)
+        v.evidence["disabled"] = True
+        return v
+    checks: List[CheckResult] = []
+    if expected is not None and output is not None:
+        checks.append(check_oracle(output, expected, dtype=dtype,
+                                   wdtype=wdtype,
+                                   budget=oracle_budget_override))
+    if measured_s is not None:
+        checks.append(check_sol_bound(measured_s, t_sol_s))
+    if compiled is not None and priced_flops is not None:
+        checks.append(check_hlo_fold(compiled, priced_flops=priced_flops,
+                                     priced_bytes=priced_bytes or 0.0))
+    if report is not None:
+        checks.append(check_timing_protocol(
+            report, expected_dispatches=expected_dispatches,
+            observed_dispatches=observed_dispatches))
+    verdict = _compose(op, config, checks)
+    if measured_s is not None:
+        verdict.evidence.setdefault("measured_s", float(measured_s))
+    _record_verdict(verdict, source="gate")
+    return verdict
+
+
+def _record_verdict(verdict: Verdict, *, source: str) -> None:
+    """Trace + metric trail for every non-accept decision (auditable)."""
+    if verdict.accepted:
+        return
+    try:
+        from ..obs.metrics import default_registry
+
+        default_registry().counter(
+            "repro_integrity_quarantined",
+            "measured verdicts quarantined/rejected by the integrity gate",
+            labels=("source", "decision")).inc(
+                source=source, decision=verdict.decision)
+    except Exception:
+        pass
+    try:
+        from ..obs.trace import get_tracer
+
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("integrity.verdict", cat="integrity", source=source,
+                     decision=verdict.decision,
+                     reasons=list(verdict.reason_codes), op=verdict.op,
+                     config=verdict.config)
+    except Exception:
+        pass
+
+
+# -- the persistent quarantine ledger ----------------------------------------
+
+LEDGER_FILENAME = "quarantine.json"
+LEDGER_SCHEMA = 1
+
+
+def _fingerprint(config: Optional[Dict[str, object]]) -> str:
+    return json.dumps(config or {}, sort_keys=True, default=str)
+
+
+class QuarantineLedger:
+    """Persistent record of quarantined (tuning-key, config) pairs.
+
+    Shares the tuning cache's key schema (``op | shape-bucket | dtype |
+    backend | device_kind``) and directory, so a config quarantined by one
+    process is blocked from re-admission by every later process on the
+    same device class.  Writes are atomic (temp file + rename); a corrupt
+    ledger is renamed aside exactly like a corrupt tuning cache."""
+
+    def __init__(self, path: Optional[str] = None):
+        from ..tune.cache import default_cache_dir
+
+        self.dir = path or default_cache_dir()
+        self.file = os.path.join(self.dir, LEDGER_FILENAME)
+        self._lock = threading.Lock()
+        self._entries: Dict[str, List[Dict[str, object]]] = {}
+        self._loaded = False
+
+    # -- disk layer ---------------------------------------------------------
+    def _read_disk(self) -> Dict[str, List[Dict[str, object]]]:
+        try:
+            with open(self.file) as f:
+                payload = json.load(f)
+        except FileNotFoundError:
+            return {}
+        except (OSError, ValueError):
+            from ..tune.cache import quarantine_corrupt_file
+
+            quarantine_corrupt_file(self.file, kind="quarantine_ledger")
+            return {}
+        if payload.get("schema") != LEDGER_SCHEMA:
+            return {}
+        out: Dict[str, List[Dict[str, object]]] = {}
+        for key, entries in payload.get("entries", {}).items():
+            if isinstance(entries, list):
+                out[key] = [e for e in entries if isinstance(e, dict)]
+        return out
+
+    def _load(self) -> None:
+        if not self._loaded:
+            self._loaded = True
+            disk = self._read_disk()
+            for k, v in disk.items():
+                self._entries.setdefault(k, []).extend(
+                    e for e in v if e not in self._entries.get(k, []))
+
+    def _flush(self) -> None:
+        import tempfile
+
+        os.makedirs(self.dir, exist_ok=True)
+        payload = {"schema": LEDGER_SCHEMA, "entries": self._entries}
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, default=str)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.file)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- public API ---------------------------------------------------------
+    def quarantine(self, key: str, config: Optional[Dict[str, object]],
+                   verdict: Optional[Verdict] = None) -> None:
+        """Record one (key, config) quarantine decision with its evidence."""
+        entry = {
+            "fingerprint": _fingerprint(config),
+            "config": dict(config) if config else {},
+            "reasons": list(verdict.reason_codes) if verdict else [],
+            "evidence": dict(verdict.evidence) if verdict else {},
+            "ts": time.time(),
+        }
+        with self._lock:
+            self._load()
+            # merge entries a concurrent process flushed since our load
+            disk = self._read_disk()
+            for k, v in disk.items():
+                known = self._entries.setdefault(k, [])
+                fps = {e.get("fingerprint") for e in known}
+                known.extend(e for e in v if e.get("fingerprint") not in fps)
+            entries = self._entries.setdefault(key, [])
+            entries[:] = [e for e in entries
+                          if e.get("fingerprint") != entry["fingerprint"]]
+            entries.append(entry)
+            self._flush()
+
+    def is_quarantined(self, key: str,
+                       config: Optional[Dict[str, object]] = None) -> bool:
+        """True when this (key, config) pair is quarantined — or, with
+        ``config=None``, when the key has ANY quarantined config."""
+        if integrity_disabled():
+            return False
+        with self._lock:
+            self._load()
+            entries = self._entries.get(key)
+            if not entries:
+                return False
+            if config is None:
+                return True
+            fp = _fingerprint(config)
+            return any(e.get("fingerprint") == fp for e in entries)
+
+    def entries_for(self, key: str) -> List[Dict[str, object]]:
+        with self._lock:
+            self._load()
+            return [dict(e) for e in self._entries.get(key, [])]
+
+    def release(self, key: str,
+                config: Optional[Dict[str, object]] = None) -> int:
+        """Drop quarantine entries (all for the key, or one config).
+        Returns the number released — the audited path back in."""
+        with self._lock:
+            self._load()
+            entries = self._entries.get(key, [])
+            before = len(entries)
+            if config is None:
+                self._entries.pop(key, None)
+            else:
+                fp = _fingerprint(config)
+                entries[:] = [e for e in entries
+                              if e.get("fingerprint") != fp]
+                if not entries:
+                    self._entries.pop(key, None)
+            released = before - len(self._entries.get(key, []))
+            if released:
+                self._flush()
+            return released
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._loaded = True
+            try:
+                os.unlink(self.file)
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        with self._lock:
+            self._load()
+            return sum(len(v) for v in self._entries.values())
+
+
+_LEDGER: Optional[QuarantineLedger] = None
+_LEDGER_DIR: Optional[str] = None
+
+
+def global_ledger() -> QuarantineLedger:
+    """Process-wide ledger (re-created if REPRO_TUNE_DIR changes), living
+    beside the tuning cache it guards."""
+    global _LEDGER, _LEDGER_DIR
+    from ..tune.cache import default_cache_dir
+
+    d = default_cache_dir()
+    if _LEDGER is None or _LEDGER_DIR != d:
+        _LEDGER = QuarantineLedger(d)
+        _LEDGER_DIR = d
+    return _LEDGER
+
+
+def ledger_key(op: str, shape: Sequence[int], dtype: str, *,
+               backend: str = "pallas",
+               device: Optional[str] = None) -> str:
+    """The tuning cache's key schema, for callers outside core/tune."""
+    from ..tune.cache import device_kind, make_key, shape_bucket
+
+    return make_key(op, shape_bucket(shape), dtype, backend,
+                    device or device_kind())
+
+
+# -- drift wiring -------------------------------------------------------------
+
+def verdict_from_drift(event) -> Optional[Verdict]:
+    """Map a :class:`~repro.core.obs.drift.DriftEvent` onto a gate verdict:
+    sustained ``below_bound`` (beats-physics) quarantines the op;
+    ``above_model`` is a stale calibrated model, not gaming — no verdict
+    (``pipeline.review_drift`` files it as a minor stale-model review)."""
+    if getattr(event, "direction", "") != "below_bound":
+        return None
+    return Verdict(
+        decision=QUARANTINE, reason_codes=[R_SOL], op=event.op,
+        evidence={"mean_ratio": event.mean_ratio, "n": event.n,
+                  "unit": event.unit, "predicted": event.predicted,
+                  "measured": event.measured, "source": "drift"})
+
+
+def verdict_from_review(review) -> Verdict:
+    """Map an offline :class:`~repro.core.integrity.pipeline.AttemptReview`
+    onto the gate's verdict vocabulary (the agent-scoring choke point)."""
+    label = getattr(review, "label", "")
+    if label in ("", "no_issues", "minor"):
+        v = Verdict(decision=ACCEPT)
+    elif label == "sol_ceiling":
+        v = Verdict(decision=QUARANTINE, reason_codes=[R_SOL])
+    elif label in ("original_gaming", "inherited_gaming"):
+        v = Verdict(decision=QUARANTINE, reason_codes=[R_ORACLE])
+    else:                          # pytorch_only / failed: not adversarial
+        v = Verdict(decision=REJECT, reason_codes=[R_PROTOCOL])
+    v.evidence.update(label=label, category=getattr(review, "category", ""),
+                      reasons=list(getattr(review, "reasons", [])))
+    return v
+
+
+_DRIFT_VERDICTS: List[Verdict] = []
+_DRIFT_VERDICTS_CAP = 256
+
+
+def drift_verdicts() -> List[Verdict]:
+    """Verdicts the drift listener produced this process (newest last)."""
+    return list(_DRIFT_VERDICTS)
+
+
+def _on_drift_event(event) -> None:
+    if integrity_disabled():
+        return
+    verdict = verdict_from_drift(event)
+    if verdict is None:
+        return
+    _DRIFT_VERDICTS.append(verdict)
+    del _DRIFT_VERDICTS[:-_DRIFT_VERDICTS_CAP]
+    _record_verdict(verdict, source="drift")
+
+
+def install_drift_gate(detector=None) -> None:
+    """Subscribe the gate to a drift detector's events (idempotent): every
+    sustained ``below_bound`` window becomes a recorded quarantine verdict
+    plus a ``repro_integrity_quarantined{source="drift"}`` increment.
+    Defaults to the process-wide detector both the tracer and the serve
+    engine feed."""
+    if detector is None:
+        from ..obs.trace import default_drift
+
+        detector = default_drift()
+    add = getattr(detector, "add_listener", None)
+    if add is not None:
+        add(_on_drift_event)

@@ -92,7 +92,16 @@ class DriftDetector:
         self.on_event = on_event
         self.events: List[DriftEvent] = []
         self._ops: Dict[str, _OpState] = {}
+        self._listeners: List[Callable[[DriftEvent], None]] = []
         self._lock = threading.Lock()
+
+    def add_listener(self, fn: Callable[[DriftEvent], None]) -> None:
+        """Subscribe an additional event consumer (idempotent).  Listeners
+        fire after ``on_event``, outside the lock, exceptions swallowed —
+        the integrity gate hangs its ``below_bound`` quarantine here."""
+        with self._lock:
+            if fn not in self._listeners:
+                self._listeners.append(fn)
 
     # ------------------------------------------------------------------
     def observe(self, op: str, predicted: float, measured: float, *,
@@ -140,6 +149,13 @@ class DriftDetector:
         if self.on_event is not None:
             try:
                 self.on_event(event)
+            except Exception:
+                pass
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            try:
+                fn(event)
             except Exception:
                 pass
         return event

@@ -450,3 +450,88 @@ def count_recompute_ops(hlo_text: str) -> Dict[str, int]:
         key = m.group(1) if m else "<no-metadata>"
         counts[key] = counts.get(key, 0) + 1
     return {k: v for k, v in counts.items() if v > 1}
+
+
+# ---------------------------------------------------------------------------
+# Dead-code / constant-folding detection (the integrity gate's detector 3)
+#
+# A benchmark whose compiled executable performs far fewer FLOPs (or moves
+# far fewer bytes) than the IR-priced cost was folded away by XLA — dead
+# code eliminated, or constants pre-evaluated at compile time — and its
+# timing measures nothing.  ``core/integrity/gate.check_hlo_fold`` wraps
+# this into a Verdict check.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FoldCheck:
+    """Compiled-vs-priced cost comparison for one executable."""
+
+    folded: bool
+    reason: str                   # "" | flops_collapsed | bytes_collapsed
+    #                             # | no_cost_analysis (indeterminate, not
+    #                             # folded — don't convict without evidence)
+    compiled_flops: float
+    compiled_bytes: float
+    priced_flops: float
+    priced_bytes: float
+    ratio: float                  # threshold the verdict used
+
+    @property
+    def flops_ratio(self) -> float:
+        if self.priced_flops <= 0:
+            return float("inf")
+        return self.compiled_flops / self.priced_flops
+
+    @property
+    def bytes_ratio(self) -> float:
+        if self.priced_bytes <= 0:
+            return float("inf")
+        return self.compiled_bytes / self.priced_bytes
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "folded": self.folded, "reason": self.reason,
+            "compiled_flops": self.compiled_flops,
+            "compiled_bytes": self.compiled_bytes,
+            "priced_flops": self.priced_flops,
+            "priced_bytes": self.priced_bytes,
+            "flops_ratio": self.flops_ratio,
+            "bytes_ratio": self.bytes_ratio,
+            "threshold": self.ratio,
+        }
+
+
+def detect_folding(compiled, *, priced_flops: float,
+                   priced_bytes: float = 0.0, num_devices: int = 1,
+                   ratio: float = 0.01) -> FoldCheck:
+    """Compare a compiled executable's HLO-counted cost against the priced
+    cost of the computation it claims to perform.
+
+    ``folded=True`` when compiled FLOPs collapse below ``ratio`` of the
+    priced FLOPs (priced > 0) — or, for bandwidth-priced ops with no FLOP
+    pricing, when compiled bytes collapse the same way.  An executable
+    with no usable ``cost_analysis`` is *indeterminate*: folded=False with
+    ``reason="no_cost_analysis"``, so backends that don't expose costs
+    (some interpret paths) never false-positive."""
+    summary = summarize_compiled(compiled, num_devices)
+    flops = summary.per_device_flops_scaled * num_devices
+    hbm = summary.per_device_hbm_bytes_scaled * num_devices
+    if flops <= 0.0 and hbm <= 0.0:
+        has_text = False
+        try:
+            has_text = bool(compiled.as_text())
+        except Exception:
+            pass
+        if not has_text:
+            return FoldCheck(False, "no_cost_analysis", 0.0, 0.0,
+                             priced_flops, priced_bytes, ratio)
+    folded = False
+    reason = ""
+    if priced_flops > 0.0 and flops < ratio * priced_flops:
+        folded, reason = True, "flops_collapsed"
+    elif priced_flops <= 0.0 and priced_bytes > 0.0 \
+            and hbm < ratio * priced_bytes:
+        folded, reason = True, "bytes_collapsed"
+    return FoldCheck(folded, reason, flops, hbm, priced_flops, priced_bytes,
+                     ratio)

@@ -27,12 +27,14 @@ from .candidates import (Candidate, DEFAULT_ATTN_BLOCK, DEFAULT_GEMM_TILE,
                          DEFAULT_SSD_CHUNK, QUANT_WDTYPES,
                          enumerate_candidates, fusion_candidates,
                          quant_candidates, shard_candidates)
-from .runner import TuneResult, measure, tune_op
+from .runner import (MeasureError, MeasureReport, TuneResult, measure,
+                     measure_protocol, tune_op)
 from .sol_prune import (predict_seconds, prune, prune_quant, prune_shard,
                         rank_candidates)
 
 __all__ = [
-    "Candidate", "TuneResult", "TuningCache", "TuningRecord",
+    "Candidate", "MeasureError", "MeasureReport", "TuneResult",
+    "TuningCache", "TuningRecord", "measure_protocol",
     "default_cache_dir", "device_kind", "enumerate_candidates",
     "fusion_candidates", "quant_candidates", "quant_error_budget",
     "model_error_budget", "quant_report",
@@ -97,20 +99,54 @@ def canon_dtype_name(dtype) -> str:
 
 def lookup(op: str, shape, dtype, *,
            backend: str = "pallas") -> Optional[Dict[str, object]]:
-    """Best tuned config for (op, shape-bucket, dtype) or None on miss."""
+    """Best tuned config for (op, shape-bucket, dtype) or None on miss.
+
+    This is the single resolution funnel (serve engine, kernels.ops tile
+    defaults, the agent's trial-0 seeding), so the integrity gate enforces
+    its quarantine ledger here: a record whose winning config was
+    quarantined resolves to None — the safe default — and increments
+    ``repro_integrity_quarantined{source="tune_lookup"}``."""
     if tuning_disabled():
         return None
     rec = global_cache().get(op, shape, canon_dtype_name(dtype),
                              backend=backend)
     best = dict(rec.best) if rec is not None else None
+    if best is not None:
+        from ..integrity.gate import global_ledger, integrity_disabled
+
+        if not integrity_disabled() \
+                and global_ledger().is_quarantined(rec.key, best):
+            _quarantined_lookup(op, shape, dtype, backend, best)
+            best = None
     from ..obs.trace import get_tracer
 
     tr = get_tracer()
     if tr.enabled:
         tr.event("tune.lookup", cat="tune", op=op, shape=list(shape),
                  dtype=canon_dtype_name(dtype), backend=backend,
-                 hit=rec is not None, config=best)
+                 hit=best is not None, config=best)
     return best
+
+
+def _quarantined_lookup(op, shape, dtype, backend, best) -> None:
+    """Audit trail for a lookup the ledger blocked (metric + trace)."""
+    try:
+        from ..obs.metrics import default_registry
+
+        default_registry().counter(
+            "repro_integrity_quarantined",
+            "measured verdicts quarantined/rejected by the integrity gate",
+            labels=("source", "decision")).inc(
+                source="tune_lookup", decision="quarantine")
+    except Exception:
+        pass
+    from ..obs.trace import get_tracer
+
+    tr = get_tracer()
+    if tr.enabled:
+        tr.event("tune.lookup_quarantined", cat="tune", op=op,
+                 shape=list(shape), dtype=canon_dtype_name(dtype),
+                 backend=backend, config=best, verdict="quarantine")
 
 
 # -- typed convenience lookups used by the wired-in call sites --------------

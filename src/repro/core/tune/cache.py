@@ -25,11 +25,43 @@ import json
 import os
 import tempfile
 import threading
+import time
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2        # v2: per-record schema_version + integrity ledger
 CACHE_FILENAME = "tune_cache.json"
+
+
+def quarantine_corrupt_file(path: str, *, kind: str = "tune_cache") -> str:
+    """Rename a corrupt cache/ledger file aside (``<file>.corrupt-<ts>``)
+    instead of silently starting empty, and leave a warning trail (trace
+    event + ``repro_cache_corrupt`` counter).  Returns the new path ("" if
+    the rename itself failed — e.g. the file vanished concurrently)."""
+    aside = f"{path}.corrupt-{int(time.time())}"
+    try:
+        os.replace(path, aside)
+    except OSError:
+        aside = ""
+    try:
+        from ..obs.metrics import default_registry
+
+        default_registry().counter(
+            "repro_cache_corrupt",
+            "corrupt cache/ledger files quarantined aside",
+            labels=("kind",)).inc(kind=kind)
+    except Exception:
+        pass
+    try:
+        from ..obs.trace import get_tracer
+
+        tr = get_tracer()
+        if tr.enabled:
+            tr.event("cache.corrupt", cat="tune", kind=kind, file=path,
+                     renamed_to=aside)
+    except Exception:
+        pass
+    return aside
 
 
 def default_cache_dir() -> str:
@@ -95,6 +127,8 @@ class TuningRecord:
     # trials entries: {"config": {...}, "median_s": float}
     sol_rank: List[Dict[str, object]] = field(default_factory=list)
     # analytic ranking kept by the SOL pruner (config + predicted seconds)
+    schema_version: int = SCHEMA_VERSION
+    # bumping SCHEMA_VERSION invalidates stale records at read time
 
     @property
     def key(self) -> str:
@@ -109,6 +143,10 @@ class TuningRecord:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "TuningRecord":
+        version = int(d.get("schema_version", d.get("schema", 0)) or 0)
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"stale tuning record schema {version} != {SCHEMA_VERSION}")
         return cls(
             op=d["op"],
             shape_bucket=tuple(d["shape_bucket"]),
@@ -118,6 +156,7 @@ class TuningRecord:
             best=dict(d["best"]),
             trials=list(d.get("trials", [])),
             sol_rank=list(d.get("sol_rank", [])),
+            schema_version=version,
         )
 
 
@@ -137,15 +176,21 @@ class TuningCache:
         try:
             with open(self.file) as f:
                 payload = json.load(f)
+        except FileNotFoundError:
+            return out                  # no cache yet: the normal cold start
         except (OSError, ValueError):
+            # corrupt file: rename it aside (kept for forensics) + warn,
+            # instead of silently starting empty over live corruption
+            quarantine_corrupt_file(self.file, kind="tune_cache")
             return out
-        if payload.get("schema") != SCHEMA_VERSION:
+        if not isinstance(payload, dict) \
+                or payload.get("schema") != SCHEMA_VERSION:
             return out                  # stale schema: ignore, rewrite later
         for key, rec in payload.get("records", {}).items():
             try:
                 out[key] = TuningRecord.from_dict(rec)
-            except (KeyError, TypeError):
-                continue
+            except (KeyError, TypeError, ValueError):
+                continue                # stale per-record schema: drop it
         return out
 
     def _load(self) -> None:
@@ -164,6 +209,8 @@ class TuningCache:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(payload, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, self.file)
         except BaseException:
             try:

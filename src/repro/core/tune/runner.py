@@ -1,9 +1,17 @@
 """Measured-tuning runner: warmup + median-of-N timing per candidate.
 
 ``tune_op`` is the full loop: enumerate legal candidates, SOL-prune to the
-top-K worth measuring, measure each, persist the winner.  A cache hit
-short-circuits everything — the second process performs zero measured
-trials.
+top-K worth measuring, measure each, gate each measurement through the
+integrity verdict gate (``core/integrity/gate.py``), persist the winner.
+A cache hit short-circuits everything — the second process performs zero
+measured trials.
+
+``measure_protocol`` is the fault-tolerant timing primitive underneath:
+per-trial timeout (a hanging kernel cannot wedge the tuner), bounded retry
+with backoff on transient failures, MAD outlier rejection with adaptive
+extra repetitions, and a monotonic-clock cross-check whose skew the gate's
+timer-cheat detector reads.  ``measure`` stays as the thin median-only
+wrapper existing callers use.
 """
 
 from __future__ import annotations
@@ -11,18 +19,25 @@ from __future__ import annotations
 import os
 import statistics
 import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
-from ..obs.trace import get_tracer
+from ..obs.trace import default_drift, get_tracer
 from ..sol.hardware import ChipSpec, TPU_V5E
 from .cache import (TuningCache, TuningRecord, device_kind, global_cache,
-                    shape_bucket, tuning_disabled)
+                    make_key, shape_bucket, tuning_disabled)
 from .candidates import Candidate, enumerate_candidates
 from .sol_prune import prune, sol_rank_payload
 
 DEFAULT_TRIALS = 3
 DEFAULT_WARMUP = 1
+DEFAULT_MAX_RETRIES = 2        # per trial, on exception or timeout
+DEFAULT_BACKOFF_S = 0.05       # doubled per retry
+DEFAULT_MAD_K = 4.0            # |t - median| > k * MAD rejects the trial
+# trials shorter than this sit at timer resolution: skip the clock check
+_SKEW_MIN_MONOTONIC_S = 1e-4
 
 
 def keyed_op(op: str, window: int = 0) -> str:
@@ -41,6 +56,16 @@ def trials_from_env() -> int:
         return DEFAULT_TRIALS
 
 
+def timeout_from_env() -> Optional[float]:
+    """Per-trial timeout (``REPRO_MEASURE_TIMEOUT_S``; unset/0 = no limit)."""
+    raw = os.environ.get("REPRO_MEASURE_TIMEOUT_S", "")
+    try:
+        val = float(raw)
+    except ValueError:
+        return None
+    return val if val > 0 else None
+
+
 def _block(result) -> None:
     """Wait for async jax dispatch so wall-clock covers the real work."""
     try:
@@ -51,18 +76,186 @@ def _block(result) -> None:
         pass
 
 
+class MeasureError(RuntimeError):
+    """A trial failed after exhausting its timeout/retry budget."""
+
+
+@dataclass
+class MeasureReport:
+    """Full protocol record of one measurement — what the verdict gate's
+    timing-protocol detector inspects."""
+
+    median_s: float = float("nan")
+    times: List[float] = field(default_factory=list)       # surviving trials
+    raw_times: List[float] = field(default_factory=list)   # pre-rejection
+    warmup: int = 0
+    trials_requested: int = 0
+    retries: int = 0
+    timeouts: int = 0
+    outliers_rejected: int = 0
+    # min over trials of timed-clock / monotonic-clock elapsed; a cheating
+    # timer under-reports, collapsing this toward 0 (1.0 = clocks agree)
+    clock_skew: float = 1.0
+    result: object = None          # last call's return, for the oracle check
+    errors: List[str] = field(default_factory=list)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "median_s": self.median_s, "times": list(self.times),
+            "warmup": self.warmup,
+            "trials_requested": self.trials_requested,
+            "retries": self.retries, "timeouts": self.timeouts,
+            "outliers_rejected": self.outliers_rejected,
+            "clock_skew": self.clock_skew, "errors": list(self.errors),
+        }
+
+
+class _TrialRunner:
+    """Runs trials, optionally on a worker thread with a deadline.
+
+    After a timeout the worker may still be stuck inside the kernel, so the
+    executor is abandoned (``shutdown(wait=False)``) and a fresh one is
+    built for the next trial — a hung trial never wedges the tuner."""
+
+    def __init__(self, timeout_s: Optional[float]):
+        self.timeout_s = timeout_s
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def run(self, thunk: Callable[[], object]):
+        if not self.timeout_s:
+            return thunk()
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=1)
+        fut = self._pool.submit(thunk)
+        try:
+            return fut.result(timeout=self.timeout_s)
+        except FutureTimeout:
+            fut.cancel()
+            self._pool.shutdown(wait=False)
+            self._pool = None
+            raise
+        except BaseException:
+            raise
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+
+def measure_protocol(fn: Callable[[], object], *,
+                     warmup: int = DEFAULT_WARMUP,
+                     trials: Optional[int] = None,
+                     timeout_s: Optional[float] = None,
+                     max_retries: int = DEFAULT_MAX_RETRIES,
+                     backoff_s: float = DEFAULT_BACKOFF_S,
+                     mad_k: float = DEFAULT_MAD_K,
+                     clock: Callable[[], float] = time.perf_counter
+                     ) -> MeasureReport:
+    """Fault-tolerant timing of ``fn``: timeout + retry + outlier rejection.
+
+    Raises :class:`MeasureError` only when a trial keeps failing past its
+    retry budget — transient flake and a single hang are absorbed.  The
+    injectable ``clock`` is what the benchmark claims time with; elapsed
+    ``time.monotonic`` is recorded alongside so the gate can cross-check a
+    cheating timer.
+    """
+    n = trials if trials is not None else trials_from_env()
+    if timeout_s is None:
+        timeout_s = timeout_from_env()
+    rep = MeasureReport(warmup=max(warmup, 0), trials_requested=n)
+    runner = _TrialRunner(timeout_s)
+
+    def attempt(timed: bool) -> Optional[float]:
+        """One trial with retry/backoff; returns elapsed (timed) or None."""
+        delay = backoff_s
+        for retry in range(max_retries + 1):
+            try:
+                if timed:
+                    holder: Dict[str, object] = {}
+
+                    def thunk():
+                        t0 = clock()
+                        m0 = time.monotonic()
+                        r = fn()
+                        _block(r)
+                        holder["dt"] = clock() - t0
+                        holder["mono"] = time.monotonic() - m0
+                        holder["result"] = r
+                        return None
+
+                    runner.run(thunk)
+                    dt = float(holder["dt"])
+                    mono = float(holder["mono"])
+                    rep.result = holder["result"]
+                    if mono >= _SKEW_MIN_MONOTONIC_S:
+                        rep.clock_skew = min(rep.clock_skew, dt / mono)
+                    return dt
+                runner.run(lambda: _block(fn()))
+                return None
+            except FutureTimeout:
+                rep.timeouts += 1
+                rep.errors.append(f"timeout after {timeout_s}s")
+                err: BaseException = MeasureError(
+                    f"trial timed out after {timeout_s}s "
+                    f"({rep.timeouts} timeouts)")
+            except Exception as e:
+                rep.errors.append(f"{type(e).__name__}: {e}")
+                err = e
+            if retry < max_retries:
+                rep.retries += 1
+                time.sleep(delay)
+                delay *= 2
+            else:
+                raise MeasureError(
+                    f"trial failed after {max_retries} retries: "
+                    f"{rep.errors[-1]}") from err
+        return None
+
+    try:
+        for _ in range(max(warmup, 0)):
+            attempt(timed=False)
+        for _ in range(n):
+            dt = attempt(timed=True)
+            if dt is not None:
+                rep.raw_times.append(dt)
+
+        # MAD outlier rejection with adaptive repetitions: every rejected
+        # trial earns a replacement, budgeted at n extras total.
+        times = list(rep.raw_times)
+        extra_budget = n
+        while len(times) >= 3:
+            med = statistics.median(times)
+            mad = statistics.median(abs(t - med) for t in times)
+            if mad <= 0.0:
+                break
+            keep = [t for t in times if abs(t - med) <= mad_k * mad]
+            dropped = len(times) - len(keep)
+            if dropped == 0:
+                break
+            rep.outliers_rejected += dropped
+            times = keep
+            took = min(dropped, extra_budget)
+            extra_budget -= took
+            for _ in range(took):
+                dt = attempt(timed=True)
+                if dt is not None:
+                    rep.raw_times.append(dt)
+                    times.append(dt)
+            if took == 0:
+                break
+        rep.times = times
+        if times:
+            rep.median_s = statistics.median(times)
+    finally:
+        runner.close()
+    return rep
+
+
 def measure(fn: Callable[[], object], *, warmup: int = DEFAULT_WARMUP,
             trials: Optional[int] = None) -> float:
     """Median wall-clock seconds of ``fn`` over ``trials`` timed calls."""
-    n = trials if trials is not None else trials_from_env()
-    for _ in range(max(warmup, 0)):
-        _block(fn())
-    times = []
-    for _ in range(n):
-        t0 = time.perf_counter()
-        _block(fn())
-        times.append(time.perf_counter() - t0)
-    return statistics.median(times)
+    return measure_protocol(fn, warmup=warmup, trials=trials).median_s
 
 
 @dataclass
@@ -73,6 +266,9 @@ class TuneResult:
     trials_run: int = 0                 # 0 == pure cache hit
     from_cache: bool = False
     failures: List[Dict[str, str]] = field(default_factory=list)
+    # configs the integrity gate quarantined (never cached); entries:
+    # {"config": {...}, "reasons": [...], "median_s": float}
+    quarantined: List[Dict[str, object]] = field(default_factory=list)
 
 
 def tune_op(op: str, shape: Sequence[int], dtype: str,
@@ -81,14 +277,23 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
             cache: Optional[TuningCache] = None,
             top_k: Optional[int] = None, trials: Optional[int] = None,
             warmup: int = DEFAULT_WARMUP, force: bool = False,
-            chip: ChipSpec = TPU_V5E) -> TuneResult:
-    """Tune one op/shape: candidates -> SOL prune -> measure -> persist.
+            chip: ChipSpec = TPU_V5E,
+            ref: Optional[Callable[[], object]] = None,
+            timeout_s: Optional[float] = None) -> TuneResult:
+    """Tune one op/shape: candidates -> SOL prune -> measure -> gate ->
+    persist.
 
     ``make_fn(config)`` returns a zero-arg callable running the op with
     that config (the runner times it).  A candidate whose callable raises
-    is recorded as a failure and skipped — the default config cannot fail
-    this way without surfacing the error (it is re-raised if *every*
-    candidate fails).
+    is recorded as a failure (config + exception class, traced) and
+    skipped — the default config cannot fail this way without surfacing
+    the error (it is re-raised if *every* candidate fails).
+
+    ``ref``, when given, is a zero-arg oracle (``kernels/ref.py``) whose
+    output every candidate must match within the per-dtype budget; a
+    mismatching, SOL-impossible, or timer-cheating candidate is
+    quarantined — excluded from the winner, never cached, and written to
+    the persistent quarantine ledger so no later process re-admits it.
     """
     tr = get_tracer()
     cache = cache or global_cache()
@@ -105,6 +310,16 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
                          config=hit.best)
             return TuneResult(record=hit, trials_run=0, from_cache=True)
 
+    # gate plumbing (lazy: gate sits above tune in the import graph)
+    from ..integrity.gate import (gate_measurement, global_ledger,
+                                  integrity_disabled)
+
+    ledger = global_ledger() if not integrity_disabled() else None
+    key = make_key(key_op, shape_bucket(shape), dtype, backend, device)
+    expected = None
+    if ref is not None and not integrity_disabled():
+        expected = ref()
+
     t0 = time.perf_counter()
     cands = enumerate_candidates(op, shape, dtype=dtype, window=window,
                                  chip=chip)
@@ -112,21 +327,53 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
 
     measured: List[Dict[str, object]] = []
     failures: List[Dict[str, str]] = []
+    quarantined: List[Dict[str, object]] = []
     n_trials = 0
     last_error: Optional[BaseException] = None
     for cand, _pred in kept:
         cfg = cand.as_dict()
+        # the ledger blocks re-admission of previously quarantined configs
+        if ledger is not None and ledger.is_quarantined(key, cfg):
+            quarantined.append({"config": cfg,
+                                "reasons": ["ledger_blocked"]})
+            if tr.enabled:
+                tr.event("tune.quarantined", cat="tune", op=key_op,
+                         config=cfg, reasons=["ledger_blocked"],
+                         verdict="quarantine")
+            continue
         try:
             fn = make_fn(cfg)
-            med = measure(fn, warmup=warmup, trials=trials)
+            report = measure_protocol(fn, warmup=warmup, trials=trials,
+                                      timeout_s=timeout_s)
+            med = report.median_s
         except Exception as e:  # illegal on this backend: skip, keep going
-            failures.append({"config": repr(cfg), "error": str(e)})
+            failures.append({"config": repr(cfg), "error": str(e),
+                             "error_type": type(e).__name__})
             last_error = e
             if tr.enabled:
                 tr.event("tune.trial_failed", cat="tune", op=key_op,
-                         config=cfg, verdict="failed", error=str(e))
+                         config=cfg, verdict="failed",
+                         error_type=type(e).__name__, error=str(e))
             continue
         n_trials += trials if trials is not None else trials_from_env()
+
+        verdict = gate_measurement(
+            f"tune.{key_op}", config=cfg, measured_s=med,
+            t_sol_s=_pred or None,
+            output=report.result if expected is not None else None,
+            expected=expected, dtype=dtype, report=report)
+        if not verdict.accepted:
+            quarantined.append({"config": cfg,
+                                "reasons": list(verdict.reason_codes),
+                                "median_s": med})
+            if verdict.quarantined and ledger is not None:
+                ledger.quarantine(key, cfg, verdict)
+            if tr.enabled:
+                tr.event("tune.quarantined", cat="tune", op=key_op,
+                         config=cfg, reasons=list(verdict.reason_codes),
+                         median_s=med, verdict=verdict.decision)
+            continue
+
         measured.append({"config": cfg, "median_s": med})
         if tr.enabled:
             # _pred is the candidate's SOL-predicted seconds: a physical
@@ -137,9 +384,12 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
                       "measured": med, "op": f"tune.{key_op}",
                       "calibrated": False} if _pred else None),
                 op=key_op, config=cfg, median_s=med, verdict="measured")
+        elif _pred:
+            default_drift().observe(f"tune.{key_op}", _pred, med)
     if not measured:
         raise RuntimeError(
             f"autotune {op}{tuple(shape)}: every candidate failed"
+            + (" or was quarantined" if quarantined else "")
         ) from last_error
 
     best = min(measured, key=lambda t: t["median_s"])
@@ -161,6 +411,7 @@ def tune_op(op: str, shape: Sequence[int], dtype: str,
                     backend=backend, candidates=len(cands),
                     sol_pruned=len(cands) - len(kept),
                     measured=len(measured), failed=len(failures),
+                    skipped=len(failures), quarantined=len(quarantined),
                     best=best["config"], best_median_s=best["median_s"])
     return TuneResult(record=record, trials_run=n_trials, from_cache=False,
-                      failures=failures)
+                      failures=failures, quarantined=quarantined)

@@ -209,6 +209,15 @@ class ServeEngine:
                  tp_shards: Optional[int] = None,
                  telemetry: Optional[ServeTelemetry] = None,
                  request_timeout_steps: Optional[int] = None):
+        # the integrity gate watches the same drift detector every
+        # engine.step observation feeds: a sustained beats-physics window
+        # becomes a recorded quarantine verdict, not just a gauge
+        from ..core.integrity.gate import install_drift_gate
+
+        install_drift_gate()
+        # tuned-config resolution goes through tune.lookup, where the
+        # quarantine ledger already forces quarantined records back to the
+        # safe defaults (and bumps repro_integrity_quarantined)
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
             model, max_len, fused_decode=fused_decode,
             weight_dtype=weight_dtype, tp_shards=tp_shards)

@@ -1,0 +1,612 @@
+"""Adversarial verdict gate: detectors, composition, the quarantine
+ledger, the fault-tolerant measurement protocol, enforcement at the tune /
+agent / serve choke points, and integrity-pipeline edge cases."""
+
+import json
+import math
+import os
+import types
+
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import tune  # noqa: E402
+from repro.core.agent import VARIANTS, run_variant  # noqa: E402
+from repro.core.agent.costmodel import cite_gate_verdict  # noqa: E402
+from repro.core.agent.runlog import Attempt, RunLog  # noqa: E402
+from repro.core.integrity import gate  # noqa: E402
+from repro.core.integrity.adversary import (  # noqa: E402
+    constant_folded_executable, dead_code_adversary, flaky_fn, hanging_fn,
+    slow_fn, timer_cheat_clock, wrong_output_adversary)
+from repro.core.integrity.pipeline import (  # noqa: E402
+    InflationReport, category_breakdown, inflation, review_drift, review_log)
+from repro.core.obs.drift import DriftEvent  # noqa: E402
+from repro.core.problems import get_problem  # noqa: E402
+from repro.core.sol.hlo_analysis import FoldCheck, detect_folding  # noqa: E402
+from repro.core.tune.cache import (  # noqa: E402
+    CACHE_FILENAME, SCHEMA_VERSION, TuningCache, TuningRecord)
+from repro.core.tune.runner import (  # noqa: E402
+    MeasureError, measure_protocol)
+from repro.kernels import ops  # noqa: E402
+from repro.kernels.ref import gemm_ref  # noqa: E402
+
+
+@pytest.fixture
+def tune_dir(tmp_path, monkeypatch):
+    d = str(tmp_path / "tune")
+    monkeypatch.setenv("REPRO_TUNE_DIR", d)
+    monkeypatch.delenv("REPRO_TUNE_DISABLE", raising=False)
+    monkeypatch.delenv("REPRO_INTEGRITY", raising=False)
+    return d
+
+
+def _gemm_case(shape, seed=0):
+    m, n, k = shape
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def make_fn(cfg):
+        return lambda: ops.gemm(a, b, tile=tuple(cfg["tile"]))
+
+    return make_fn, (lambda: gemm_ref(a, b))
+
+
+def _report(warmup=1, times=(1e-3, 1e-3, 1e-3), clock_skew=1.0):
+    return types.SimpleNamespace(warmup=warmup, times=list(times),
+                                 clock_skew=clock_skew)
+
+
+# ---------------------------------------------------------------------------
+# detector units
+# ---------------------------------------------------------------------------
+
+class TestOracleCheck:
+    def test_exact_match_passes(self):
+        x = np.arange(12.0).reshape(3, 4)
+        r = gate.check_oracle(x, x.copy())
+        assert r.ok and r.reason == ""
+
+    def test_perturbed_fails_with_reason(self):
+        x = np.arange(1.0, 13.0).reshape(3, 4)
+        r = gate.check_oracle(x * 1.5, x)
+        assert not r.ok
+        assert r.reason == "oracle_mismatch"
+        assert r.evidence["rel_error"] > r.evidence["budget"]
+
+    def test_shape_mismatch_is_infinite_error(self):
+        assert gate.rel_error(np.zeros(3), np.zeros(4)) == float("inf")
+
+    def test_nonfinite_output_fails(self):
+        x = np.ones(4)
+        bad = np.array([1.0, float("nan"), 1.0, 1.0])
+        assert not gate.check_oracle(bad, x).ok
+
+    def test_budget_widens_with_dtype(self):
+        x = np.ones((4, 4))
+        noisy = x * (1.0 + 5e-3)        # past fp32 budget, inside bf16's
+        assert not gate.check_oracle(noisy, x, dtype="fp32").ok
+        assert gate.check_oracle(noisy, x, dtype="bf16").ok
+
+    def test_quantized_wdtype_reuses_quant_budget(self):
+        assert gate.oracle_budget("fp32", "int8") == \
+            tune.quant_error_budget("int8")
+        assert gate.oracle_budget("fp32", None) == \
+            gate.DEFAULT_ORACLE_BUDGETS["fp32"]
+
+
+class TestSolBoundCheck:
+    def test_beating_the_bound_is_impossible(self):
+        r = gate.check_sol_bound(0.1, 0.5)
+        assert not r.ok and r.reason == "sol_impossible"
+
+    def test_within_tolerance_passes(self):
+        assert gate.check_sol_bound(0.45, 0.5).ok     # 10% under: within tol
+        assert gate.check_sol_bound(1.5, 0.5).ok
+
+    def test_no_bound_skips(self):
+        assert gate.check_sol_bound(0.1, None).ok
+        assert gate.check_sol_bound(0.1, 0.0).ok
+        assert gate.check_sol_bound(float("nan"), 0.5).ok
+
+
+class TestHloFoldCheck:
+    def test_folded_foldcheck_fails(self):
+        fc = FoldCheck(folded=True, reason="flops_collapsed",
+                       compiled_flops=0.0, compiled_bytes=0.0,
+                       priced_flops=1e9, priced_bytes=0.0, ratio=0.01)
+        r = gate.check_hlo_fold(fc, priced_flops=1e9, priced_bytes=0.0)
+        assert not r.ok and r.reason == "hlo_folded"
+
+    def test_constant_folded_executable_detected(self):
+        compiled, flops, hbm = constant_folded_executable()
+        fc = detect_folding(compiled, priced_flops=flops, priced_bytes=hbm)
+        assert fc.folded and fc.reason == "flops_collapsed"
+
+    def test_honest_executable_not_folded(self):
+        a = jnp.ones((64, 64), jnp.float32)
+        compiled = jax.jit(lambda x, y: x @ y).lower(a, a).compile()
+        fc = detect_folding(compiled, priced_flops=2.0 * 64 ** 3)
+        assert not fc.folded
+
+    def test_no_cost_analysis_is_indeterminate_not_folded(self):
+        fc = detect_folding(object(), priced_flops=1e9)
+        assert not fc.folded
+        assert fc.reason == "no_cost_analysis"
+
+
+class TestTimingProtocolCheck:
+    def test_clean_report_passes(self):
+        assert gate.check_timing_protocol(_report()).ok
+
+    def test_collapsed_clock_skew_is_timer_cheat(self):
+        r = gate.check_timing_protocol(_report(clock_skew=0.01))
+        assert not r.ok and r.reason == "timer_cheat"
+
+    def test_dispatch_count_cross_check(self):
+        r = gate.check_timing_protocol(_report(), expected_dispatches=3,
+                                       observed_dispatches=5)
+        assert not r.ok and r.reason == "dispatch_mismatch"
+        assert gate.check_timing_protocol(_report(), expected_dispatches=3,
+                                          observed_dispatches=3).ok
+
+    def test_missing_warmup_or_trials_is_protocol_violation(self):
+        assert gate.check_timing_protocol(_report(warmup=0)).reason == \
+            "protocol_violation"
+        assert gate.check_timing_protocol(_report(times=())).reason == \
+            "protocol_violation"
+
+    def test_timer_cheat_outranks_protocol(self):
+        r = gate.check_timing_protocol(_report(warmup=0, clock_skew=0.01))
+        assert r.reason == "timer_cheat"
+
+
+# ---------------------------------------------------------------------------
+# verdict composition + escape hatch
+# ---------------------------------------------------------------------------
+
+class TestVerdictComposition:
+    def test_honest_measurement_accepts(self, tune_dir):
+        x = np.ones((4, 4))
+        v = gate.gate_measurement("t.op", measured_s=1.0, t_sol_s=0.5,
+                                  output=x, expected=x.copy(),
+                                  report=_report())
+        assert v.accepted and v.reason_codes == []
+
+    def test_quarantine_reason_wins(self, tune_dir):
+        x = np.ones((4, 4))
+        v = gate.gate_measurement("t.op", measured_s=1.0, output=x * 2,
+                                  expected=x, report=_report(warmup=0))
+        assert v.quarantined
+        assert "oracle_mismatch" in v.reason_codes
+        assert v.evidence["oracle"]["rel_error"] == pytest.approx(1.0)
+
+    def test_protocol_only_rejects(self, tune_dir):
+        v = gate.gate_measurement("t.op", measured_s=1.0,
+                                  report=_report(warmup=0))
+        assert v.decision == gate.REJECT
+        assert v.reason_codes == ["protocol_violation"]
+
+    def test_escape_hatch_accepts_everything(self, tune_dir, monkeypatch):
+        monkeypatch.setenv("REPRO_INTEGRITY", "off")
+        x = np.ones((4, 4))
+        v = gate.gate_measurement("t.op", measured_s=1e-12, t_sol_s=1.0,
+                                  output=x * 5, expected=x)
+        assert v.accepted and v.evidence.get("disabled") is True
+
+    def test_verdict_as_dict_roundtrips_json(self, tune_dir):
+        v = gate.gate_measurement("t.op", config={"tile": [8, 8, 8]},
+                                  measured_s=0.1, t_sol_s=1.0)
+        assert json.loads(json.dumps(v.as_dict()))["decision"] == "quarantine"
+
+    def test_verdict_from_review_mapping(self):
+        mk = lambda label: types.SimpleNamespace(  # noqa: E731
+            label=label, category="", reasons=[])
+        assert gate.verdict_from_review(mk("no_issues")).accepted
+        assert gate.verdict_from_review(mk("minor")).accepted
+        v = gate.verdict_from_review(mk("sol_ceiling"))
+        assert v.quarantined and v.reason_codes == ["sol_impossible"]
+        v = gate.verdict_from_review(mk("original_gaming"))
+        assert v.quarantined and v.reason_codes == ["oracle_mismatch"]
+        assert gate.verdict_from_review(mk("failed")).decision == gate.REJECT
+
+    def test_verdict_from_drift(self):
+        below = DriftEvent(op="gemm", direction="below_bound", mean_ratio=0.5,
+                           n=8, unit="s", predicted=1.0, measured=0.5)
+        v = gate.verdict_from_drift(below)
+        assert v is not None and v.quarantined
+        assert v.reason_codes == ["sol_impossible"]
+        above = DriftEvent(op="gemm", direction="above_model", mean_ratio=2.0,
+                           n=8, unit="s", predicted=1.0, measured=2.0)
+        assert gate.verdict_from_drift(above) is None
+
+
+# ---------------------------------------------------------------------------
+# quarantine ledger
+# ---------------------------------------------------------------------------
+
+class TestQuarantineLedger:
+    def _verdict(self):
+        return gate.Verdict(decision=gate.QUARANTINE,
+                            reason_codes=["oracle_mismatch"], op="t")
+
+    def test_quarantine_blocks_and_persists(self, tune_dir):
+        led = gate.QuarantineLedger(tune_dir)
+        cfg = {"tile": [64, 64, 64]}
+        led.quarantine("k1", cfg, self._verdict())
+        assert led.is_quarantined("k1", cfg)
+        assert led.is_quarantined("k1")               # any-config form
+        assert not led.is_quarantined("k1", {"tile": [8, 8, 8]})
+        assert not led.is_quarantined("k2", cfg)
+        # a fresh instance (new-process analogue) still blocks
+        led2 = gate.QuarantineLedger(tune_dir)
+        assert led2.is_quarantined("k1", cfg)
+        assert led2.entries_for("k1")[0]["reasons"] == ["oracle_mismatch"]
+
+    def test_release_is_the_audited_path_back(self, tune_dir):
+        led = gate.QuarantineLedger(tune_dir)
+        cfg = {"tile": [64, 64, 64]}
+        led.quarantine("k1", cfg, self._verdict())
+        assert led.release("k1", cfg) == 1
+        assert not led.is_quarantined("k1", cfg)
+        assert gate.QuarantineLedger(tune_dir).is_quarantined("k1") is False
+
+    def test_escape_hatch_stops_blocking_keeps_entries(self, tune_dir,
+                                                       monkeypatch):
+        led = gate.QuarantineLedger(tune_dir)
+        led.quarantine("k1", {"a": 1}, self._verdict())
+        monkeypatch.setenv("REPRO_INTEGRITY", "off")
+        assert not led.is_quarantined("k1", {"a": 1})
+        assert len(led) == 1                           # entries kept
+
+    def test_corrupt_ledger_renamed_aside(self, tune_dir):
+        os.makedirs(tune_dir, exist_ok=True)
+        path = os.path.join(tune_dir, gate.LEDGER_FILENAME)
+        with open(path, "w") as f:
+            f.write("{not json")
+        led = gate.QuarantineLedger(tune_dir)
+        assert len(led) == 0
+        aside = [p for p in os.listdir(tune_dir)
+                 if p.startswith(gate.LEDGER_FILENAME + ".corrupt-")]
+        assert len(aside) == 1
+        # and the ledger works normally afterwards
+        led.quarantine("k1", {"a": 1}, self._verdict())
+        assert led.is_quarantined("k1")
+
+    def test_global_ledger_follows_tune_dir(self, tune_dir):
+        assert gate.global_ledger().dir == tune_dir
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant measurement protocol
+# ---------------------------------------------------------------------------
+
+class TestMeasureProtocol:
+    def test_clean_measurement(self):
+        rep = measure_protocol(slow_fn(1e-4), warmup=1, trials=3)
+        # MAD rejection may drop tight-jitter trials; survivors remain
+        assert 1 <= len(rep.times) <= 3 + 3      # trials + extras budget
+        assert math.isfinite(rep.median_s) and rep.median_s > 0
+        assert rep.retries == 0 and rep.timeouts == 0
+
+    def test_transient_flake_absorbed_by_retry(self):
+        rep = measure_protocol(flaky_fn(failures=1), warmup=1, trials=2)
+        assert rep.retries >= 1
+        assert len(rep.times) == 2
+
+    def test_persistent_failure_raises_after_budget(self):
+        with pytest.raises(MeasureError, match="retries"):
+            measure_protocol(flaky_fn(failures=99), warmup=0, trials=1,
+                             max_retries=1, backoff_s=0.001)
+
+    def test_hang_cut_off_by_timeout(self):
+        stop = [False]
+        try:
+            with pytest.raises(MeasureError, match="timeout"):
+                measure_protocol(hanging_fn(stop=stop), warmup=0, trials=1,
+                                 timeout_s=0.15, max_retries=0)
+        finally:
+            stop[0] = True
+
+    def test_mad_outlier_rejection(self):
+        # scripted claimed-clock: trial 5 is a 100x outlier, replacements
+        # are clean — the median must not be poisoned by the spike
+        dts = [1e-3, 1.1e-3, 0.9e-3, 1e-3, 0.1] + [1e-3] * 8
+        script = [x for dt in dts for x in (0.0, dt)]
+        it = iter(script)
+
+        def clock():
+            return next(it, 0.0)
+
+        rep = measure_protocol(lambda: None, warmup=0, trials=5, clock=clock)
+        assert rep.outliers_rejected >= 1
+        assert rep.median_s == pytest.approx(1e-3, rel=0.5)
+
+    def test_timer_cheat_collapses_clock_skew(self):
+        rep = measure_protocol(slow_fn(0.002), warmup=1, trials=2,
+                               clock=timer_cheat_clock(0.01))
+        assert rep.clock_skew < gate.CLOCK_SKEW_FLOOR
+
+    def test_result_captured_for_oracle(self):
+        rep = measure_protocol(lambda: 42, warmup=0, trials=1)
+        assert rep.result == 42
+
+
+# ---------------------------------------------------------------------------
+# choke point 1: the tuner
+# ---------------------------------------------------------------------------
+
+class TestTuneEnforcement:
+    def test_honest_tune_unaffected(self, tune_dir):
+        make_fn, ref = _gemm_case((64, 64, 64))
+        res = tune.tune_op("gemm", (64, 64, 64), "fp32", make_fn, top_k=2,
+                           trials=1, force=True, ref=ref)
+        assert res.quarantined == []
+        assert tune.lookup("gemm", (64, 64, 64), "fp32") == res.record.best
+
+    def test_adversary_quarantined_never_cached(self, tune_dir):
+        adv = dead_code_adversary()
+        with pytest.raises(RuntimeError, match="quarantined"):
+            tune.tune_op("gemm", (64, 64, 64), "fp32", adv.make_fn, top_k=2,
+                         trials=1, force=True, ref=adv.ref)
+        assert tune.global_cache().get("gemm", (64, 64, 64), "fp32") is None
+        key = gate.ledger_key("gemm", (64, 64, 64), "fp32")
+        entries = gate.global_ledger().entries_for(key)
+        assert entries
+        assert all("oracle_mismatch" in e["reasons"] for e in entries)
+
+    def test_ledger_blocks_readmission_before_measuring(self, tune_dir):
+        adv = wrong_output_adversary()
+        with pytest.raises(RuntimeError):
+            tune.tune_op("gemm", (64, 64, 64), "fp32", adv.make_fn, top_k=1,
+                         trials=1, force=True, ref=adv.ref)
+        # second run: the same configs are ledger-blocked pre-measure, so
+        # even an honest fn never re-measures the quarantined config set
+        with pytest.raises(RuntimeError) as ei:
+            tune.tune_op("gemm", (64, 64, 64), "fp32", adv.make_fn, top_k=1,
+                         trials=1, force=True, ref=adv.ref)
+        assert "quarantined" in str(ei.value)
+
+    def test_candidate_failure_records_error_type(self, tune_dir):
+        make_fn, ref = _gemm_case((64, 64, 64))
+        cands = tune.enumerate_candidates("gemm", (64, 64, 64), dtype="fp32")
+        bad_cfg = cands[-1].as_dict()
+
+        def flaky_make_fn(cfg):
+            if cfg == bad_cfg:
+                raise ValueError("illegal on this backend")
+            return make_fn(cfg)
+
+        res = tune.tune_op("gemm", (64, 64, 64), "fp32", flaky_make_fn,
+                           top_k=len(cands), trials=1, force=True)
+        assert any(f["error_type"] == "ValueError" for f in res.failures)
+        assert res.record.best != bad_cfg
+
+    def test_escape_hatch_skips_gating(self, tune_dir, monkeypatch):
+        monkeypatch.setenv("REPRO_INTEGRITY", "off")
+        adv = dead_code_adversary()
+        res = tune.tune_op("gemm", (64, 64, 64), "fp32", adv.make_fn,
+                           top_k=1, trials=1, force=True, ref=adv.ref)
+        assert res.quarantined == []
+
+
+# ---------------------------------------------------------------------------
+# choke point 2: serve-side tuned-config resolution
+# ---------------------------------------------------------------------------
+
+class TestServeChokePoint:
+    def _metric(self):
+        from repro.core.obs.metrics import default_registry
+
+        c = default_registry().counter(
+            "repro_integrity_quarantined",
+            "measured verdicts quarantined/rejected by the integrity gate",
+            labels=("source", "decision"))
+        return c.value(source="tune_lookup", decision="quarantine")
+
+    def test_quarantined_record_never_resolves(self, tune_dir):
+        make_fn, ref = _gemm_case((64, 64, 64))
+        res = tune.tune_op("gemm", (64, 64, 64), "fp32", make_fn, top_k=2,
+                           trials=1, force=True, ref=ref)
+        rec = res.record
+        before = self._metric()
+        gate.global_ledger().quarantine(
+            rec.key, rec.best,
+            gate.Verdict(decision=gate.QUARANTINE,
+                         reason_codes=["sol_impossible"]))
+        # the serve engine (and kernels.ops, and agent trial-0 seeding)
+        # resolve through tune.lookup: quarantined -> safe default + metric
+        assert tune.lookup("gemm", (64, 64, 64), "fp32") is None
+        assert self._metric() == before + 1
+        gate.global_ledger().release(rec.key)
+        assert tune.lookup("gemm", (64, 64, 64), "fp32") == rec.best
+
+    def test_drift_gate_wiring(self, tune_dir):
+        from repro.core.obs.drift import DriftDetector
+
+        det = DriftDetector(window=4, min_samples=4)
+        gate.install_drift_gate(det)
+        n0 = len(gate.drift_verdicts())
+        for _ in range(4):                 # sustained beats-physics window
+            det.observe("t.below", predicted=1.0, measured=0.1,
+                        calibrated=False)
+        verdicts = gate.drift_verdicts()
+        assert len(verdicts) > n0
+        assert verdicts[-1].op == "t.below"
+        assert verdicts[-1].reason_codes == ["sol_impossible"]
+
+
+# ---------------------------------------------------------------------------
+# choke point 3: agent scoring
+# ---------------------------------------------------------------------------
+
+class TestAgentScoring:
+    def _log(self):
+        return RunLog(problem_id="p", variant="v", capability="c", seed=0,
+                      t_ref=1.0, t_sol=0.1, t_sol_ceiling=0.08)
+
+    def test_scored_speedup_zeroes_gamed_attempts(self):
+        a = Attempt(index=0, phase="implement", description="", tokens=1,
+                    ok=True, runtime_s=0.5, speedup=2.0)
+        assert a.scored_speedup == 2.0
+        a.label = "original_gaming"
+        assert a.scored_speedup == 0.0
+        a.label = "no_issues"
+        a.verdict = {"decision": "quarantine"}
+        assert a.scored_speedup == 0.0
+        a.verdict = {"decision": "accept"}
+        assert a.scored_speedup == 2.0
+        a.ok = False
+        assert a.scored_speedup == 0.0
+
+    def test_gated_best_speedup_reviews_on_the_fly(self):
+        log = self._log()
+        log.record(Attempt(index=0, phase="implement", description="",
+                           tokens=1, ok=True, runtime_s=0.5, speedup=2.0))
+        # beats the bf16 SOL ceiling: physically impossible, scores zero
+        log.record(Attempt(index=1, phase="implement", description="",
+                           tokens=1, ok=True, runtime_s=0.01, speedup=100.0))
+        assert log.gated_best_speedup() == 2.0
+        assert log.attempts[1].label == "sol_ceiling"
+
+    def test_agent_attempts_gated_eagerly(self, tune_dir):
+        p = get_problem("L2/76")
+        logs = run_variant(VARIANTS["orch_dsl"], [p], capability="mini",
+                           seed=0)
+        assert logs[0].attempts
+        for a in logs[0].attempts:
+            assert a.label != ""               # labeled at record time
+            assert a.verdict is not None
+            assert "citation" in a.verdict
+        # gamed/failed attempts carry non-accept verdicts with citations
+        bad = [a for a in logs[0].attempts
+               if a.label not in ("no_issues", "minor")]
+        for a in bad:
+            assert a.verdict["decision"] in ("reject", "quarantine")
+            assert a.scored_speedup == 0.0
+
+    def test_citation_text(self):
+        assert "no gate verdict" in cite_gate_verdict(None)
+        assert "accepted" in cite_gate_verdict({"decision": "accept",
+                                                "reason_codes": []})
+        q = cite_gate_verdict({"decision": "quarantine",
+                               "reason_codes": ["sol_impossible"],
+                               "evidence": {"label": "sol_ceiling"}})
+        assert "QUARANTINE" in q and "scores zero" in q
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache hardening (satellite)
+# ---------------------------------------------------------------------------
+
+class TestCacheHardening:
+    def test_corrupt_cache_renamed_aside_not_fatal(self, tune_dir):
+        os.makedirs(tune_dir, exist_ok=True)
+        path = os.path.join(tune_dir, CACHE_FILENAME)
+        with open(path, "w") as f:
+            f.write("xx{ not json !!")
+        cache = TuningCache(tune_dir)
+        assert len(cache) == 0                 # empty, not an exception
+        aside = [p for p in os.listdir(tune_dir)
+                 if p.startswith(CACHE_FILENAME + ".corrupt-")]
+        assert len(aside) == 1
+        with open(os.path.join(tune_dir, aside[0])) as f:
+            assert f.read().startswith("xx{")  # evidence preserved
+
+    def test_schema_version_mismatch_rejected(self, tune_dir):
+        rec = TuningRecord(op="gemm", shape_bucket=(64, 64, 64),
+                           dtype="fp32", backend="pallas",
+                           device_kind="testdev", best={"tile": [64, 64, 64]})
+        d = dict(rec.__dict__)
+        d["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema"):
+            TuningRecord.from_dict(d)
+
+    def test_stale_record_skipped_on_load(self, tune_dir):
+        cache = TuningCache(tune_dir)
+        cache.put(TuningRecord(op="gemm", shape_bucket=(64, 64, 64),
+                               dtype="fp32", backend="pallas",
+                               device_kind="testdev",
+                               best={"tile": [64, 64, 64]}))
+        with open(cache.file) as f:
+            payload = json.load(f)
+        assert payload["schema"] == SCHEMA_VERSION
+        key = next(iter(payload["records"]))
+        payload["records"][key]["schema_version"] = SCHEMA_VERSION + 1
+        with open(cache.file, "w") as f:
+            json.dump(payload, f)
+        reloaded = TuningCache(tune_dir)
+        assert reloaded.get("gemm", (64, 64, 64), "fp32",
+                            device="testdev") is None
+
+
+# ---------------------------------------------------------------------------
+# integrity-pipeline edges (satellite)
+# ---------------------------------------------------------------------------
+
+class TestPipelineEdges:
+    def test_review_drift_empty_report(self):
+        assert review_drift({}) == []
+        assert review_drift({"op": {"drifting": False}}) == []
+
+    def test_review_drift_nan_window_does_not_crash(self):
+        report = {"op": {"drifting": True, "direction": "below_bound",
+                         "mean_ratio": float("nan"), "window_n": 0,
+                         "unit": "s"}}
+        reviews = review_drift(report)
+        assert len(reviews) == 1
+        assert reviews[0].label == "sol_ceiling"
+
+    def test_review_drift_above_model_is_minor(self):
+        report = {"op": {"drifting": True, "direction": "above_model",
+                         "mean_ratio": 2.0, "window_n": 8, "unit": "s"}}
+        reviews = review_drift(report)
+        assert reviews[0].label == "minor"
+        assert reviews[0].category == "stale_cost_model"
+
+    def _gamed_log(self):
+        log = RunLog(problem_id="p", variant="v", capability="c", seed=0,
+                     t_ref=1.0, t_sol=0.1, t_sol_ceiling=0.08)
+        log.attempts = [
+            Attempt(index=0, phase="i", description="", tokens=1, ok=True,
+                    runtime_s=0.2, speedup=5.0, flags=["constant_output"]),
+            Attempt(index=1, phase="i", description="", tokens=1, ok=False,
+                    runtime_s=float("inf"), speedup=0.0),
+        ]
+        return log
+
+    def test_inflation_with_zero_accepted_attempts(self):
+        rep = inflation([self._gamed_log()])
+        assert math.isfinite(rep.max_inflation)
+        assert rep.allow_gaming >= rep.filtered_geomean
+        # degenerate report: no accepted mass at all
+        assert InflationReport(filtered_geomean=0.0, allow_pytorch_only=0.0,
+                               allow_gaming=0.0,
+                               unfiltered=3.0).max_inflation == 0.0
+
+    def test_category_breakdown_mixed(self):
+        log = RunLog(problem_id="p", variant="v", capability="c", seed=0,
+                     t_ref=1.0, t_sol=0.1, t_sol_ceiling=0.08)
+        mk = lambda i, **kw: Attempt(  # noqa: E731
+            index=i, phase="i", description="", tokens=1, ok=True,
+            runtime_s=0.2, speedup=5.0, **kw)
+        log.attempts = [
+            mk(0, flags=["constant_output"]),
+            mk(1, flags=["skip:epilogue"]),
+            mk(2, flags=["input_exploit"]),
+            mk(3, flags=["passthrough"]),
+            mk(4, flags=["reduced_precision"]),
+            mk(5),                                     # no_issues: no category
+        ]
+        cats = category_breakdown([log])
+        assert cats["constant_or_hardcoded_output"] == 1
+        assert cats["skipped_computation_step"] == 1
+        assert cats["benchmark_input_exploitation"] == 1
+        assert cats["library_composition"] == 1
+        assert cats["minor_math_approximation"] == 1
+        assert sum(cats.values()) == 5
+        counts = review_log(log)
+        assert counts.get("no_issues") == 1

@@ -66,10 +66,14 @@ class TestCacheRoundtrip:
         cache = TuningCache(tune_dir)
         cache.put(_record())
         cache.put(_record(dtype="bf16"))
+        from repro.core.tune.cache import SCHEMA_VERSION
+
         with open(cache.file) as f:
             payload = json.load(f)
-        assert payload["schema"] == 1
+        assert payload["schema"] == SCHEMA_VERSION
         assert len(payload["records"]) == 2
+        for rec in payload["records"].values():
+            assert rec["schema_version"] == SCHEMA_VERSION
 
     def test_disable_env(self, tune_dir, monkeypatch):
         cache = TuningCache(tune_dir)
