@@ -108,6 +108,25 @@ class ModelConfig:
     #                                  shard:decode_block veto ({"tp": 1})
     #                                  in the tuning cache can turn
     #                                  sharding off (never silently on).
+    spec_decode: str = "off"         # speculative decoding: "off" or
+    #                                  "ngram:<k>" — draft k tokens with the
+    #                                  prompt-lookup self-drafter
+    #                                  (serve/spec.py) and verify them in
+    #                                  ONE prefill_step forward.  Decode is
+    #                                  memory-bound on weight bytes, so the
+    #                                  verify step costs ~1x weight traffic
+    #                                  for up to k+1 emitted tokens; outputs
+    #                                  are bitwise-equal to greedy decode by
+    #                                  construction (accept = longest prefix
+    #                                  matching greedy argmax, reject =
+    #                                  exact cache rollback).  Unlike quant/
+    #                                  sharding, a measured spec:decode_block
+    #                                  record can turn spec ON as well as
+    #                                  off (it is lossless); structural
+    #                                  gates (audio/vlm families, wrapping
+    #                                  sliding windows, temperature > 0
+    #                                  requests) always force it off, and
+    #                                  REPRO_SPEC=off is the escape hatch.
 
     # ---- derived -------------------------------------------------------
     @property

@@ -6,10 +6,11 @@ both."""
 
 from .gate import (ACCEPT, QUARANTINE, QUARANTINE_REASONS, REJECT,
                    CheckResult, QuarantineLedger, Verdict, check_hlo_fold,
-                   check_oracle, check_sol_bound, check_timing_protocol,
-                   gate_measurement, global_ledger, install_drift_gate,
-                   integrity_disabled, ledger_key, oracle_budget,
-                   verdict_from_drift, verdict_from_review)
+                   check_oracle, check_sol_bound, check_spec_tokens,
+                   check_timing_protocol, gate_measurement, gate_spec_claim,
+                   global_ledger, install_drift_gate, integrity_disabled,
+                   ledger_key, oracle_budget, verdict_from_drift,
+                   verdict_from_review)
 from .pipeline import (ACCEPTED, GAMING_LABELS, SOL_CEILING_SLACK,
                        AttemptReview, InflationReport, category_breakdown,
                        inflation, review_attempt, review_drift, review_log,
@@ -20,7 +21,8 @@ __all__ = ["ACCEPT", "ACCEPTED", "GAMING_LABELS", "QUARANTINE",
            "AttemptReview", "CheckResult", "InflationReport",
            "QuarantineLedger", "Verdict", "category_breakdown",
            "check_hlo_fold", "check_oracle", "check_sol_bound",
-           "check_timing_protocol", "gate_measurement", "global_ledger",
+           "check_spec_tokens", "check_timing_protocol", "gate_measurement",
+           "gate_spec_claim", "global_ledger",
            "inflation", "install_drift_gate", "integrity_disabled",
            "ledger_key", "oracle_budget", "review_attempt", "review_drift",
            "review_log", "review_logs", "verdict_from_drift",

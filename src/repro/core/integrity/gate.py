@@ -333,6 +333,57 @@ def gate_measurement(op: str, *, config: Optional[Dict[str, object]] = None,
     return verdict
 
 
+def check_spec_tokens(spec_tokens: Sequence[int],
+                      greedy_tokens: Sequence[int], *,
+                      accept_rate: Optional[float] = None) -> CheckResult:
+    """Exact-equality oracle for speculative decoding: the lever is
+    LOSSLESS by construction (verification accepts only tokens the target
+    model's greedy argmax would have emitted), so the spec token sequence
+    must equal the greedy sequence *token for token* — no tolerance budget.
+    A drafter whose tokens were accepted unverified (a self-reporting
+    acceptance rate) diverges here and is quarantined as gaming."""
+    spec = [int(t) for t in spec_tokens]
+    greedy = [int(t) for t in greedy_tokens]
+    ok = spec == greedy
+    evidence: Dict[str, object] = {
+        "spec_len": len(spec), "greedy_len": len(greedy),
+    }
+    if accept_rate is not None:
+        evidence["claimed_accept_rate"] = float(accept_rate)
+    if not ok:
+        diverge = next((i for i, (a, b) in enumerate(zip(spec, greedy))
+                        if a != b), min(len(spec), len(greedy)))
+        evidence.update(diverges_at=diverge,
+                        spec_window=spec[diverge:diverge + 8],
+                        greedy_window=greedy[diverge:diverge + 8])
+    return CheckResult(name="spec_oracle", ok=ok,
+                       reason="" if ok else R_ORACLE, evidence=evidence)
+
+
+def gate_spec_claim(op: str, *, spec_tokens: Sequence[int],
+                    greedy_tokens: Sequence[int],
+                    config: Optional[Dict[str, object]] = None,
+                    accept_rate: Optional[float] = None) -> Verdict:
+    """Gate one speculative-decoding acceptance-rate claim: the claimed
+    speedup is only evidence if the spec output is bitwise-equal to
+    greedy.  Mismatch is ``R_ORACLE`` — quarantine class — so the caller
+    can ledger the (op, config) pair and ``tune.lookup`` resolves the
+    record to None (the safe ``spec: off`` default) from then on."""
+    if integrity_disabled():
+        v = Verdict(decision=ACCEPT, op=op,
+                    config=dict(config) if config else None)
+        v.evidence["disabled"] = True
+        return v
+    checks = [check_spec_tokens(spec_tokens, greedy_tokens,
+                                accept_rate=accept_rate)]
+    verdict = _compose(op, config, checks)
+    if accept_rate is not None:
+        verdict.evidence.setdefault("claimed_accept_rate",
+                                    float(accept_rate))
+    _record_verdict(verdict, source="spec_gate")
+    return verdict
+
+
 def _record_verdict(verdict: Verdict, *, source: str) -> None:
     """Trace + metric trail for every non-accept decision (auditable)."""
     if verdict.accepted:

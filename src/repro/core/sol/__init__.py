@@ -15,7 +15,9 @@ from .characterize import (TensorSpec, OpSpec, Characterization, gemm_flops,
                            conv1d_flops, conv1d_op, conv2d_flops,
                            ssd_scan_flops, moe_ffn_flops)
 from .fleet import FleetCapacityModel, FleetVerdict, ReplicaLoad
-from .roofline import RooflineResult, distributed_roofline, roofline
+from .roofline import (RooflineResult, SpecDecodeEstimate,
+                       distributed_roofline, roofline,
+                       spec_decode_roofline, spec_expected_tokens)
 from .hlo_analysis import (CollectiveStats, CompiledSummary,
                            parse_collective_bytes, summarize_compiled,
                            count_recompute_ops)
@@ -30,7 +32,8 @@ __all__ = [
     "attention_flops", "attention_op", "conv1d_flops", "conv1d_op",
     "conv2d_flops", "ssd_scan_flops", "moe_ffn_flops",
     "FleetCapacityModel", "FleetVerdict", "ReplicaLoad",
-    "RooflineResult", "distributed_roofline", "roofline",
+    "RooflineResult", "SpecDecodeEstimate", "distributed_roofline",
+    "roofline", "spec_decode_roofline", "spec_expected_tokens",
     "CollectiveCost", "TPPlan", "collective_cost", "mesh_axis_size",
     "decode_step_collectives", "decode_wire_bytes_per_step",
     "plan_tp_gemm", "tp_matmul_roofline", "wire_bytes",

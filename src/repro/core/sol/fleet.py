@@ -56,10 +56,17 @@ class FleetCapacityModel:
     """
 
     def __init__(self, capacity, *, max_queue_per_replica: int = 8,
-                 avg_request_steps: int = 32):
+                 avg_request_steps: int = 32,
+                 expected_tokens_per_step: float = 1.0):
         self.capacity = capacity
         self.max_queue_per_replica = max(1, int(max_queue_per_replica))
         self.avg_request_steps = max(1, int(avg_request_steps))
+        # speculative decoding: a verify step emits E(k, accept_rate)
+        # tokens, so a request's token budget drains in ~1/E of the steps
+        # — without this term Retry-After and placement overcount load.
+        # The router propagates the engines' tuned/measured value here.
+        self.expected_tokens_per_step = max(float(expected_tokens_per_step),
+                                            1.0)
 
     # -- per-replica estimates ---------------------------------------------
     def step_estimate(self, load: ReplicaLoad, *,
@@ -109,9 +116,10 @@ class FleetCapacityModel:
 
     def drain_estimate_s(self, load: ReplicaLoad) -> float:
         """SOL estimate of the time until this replica frees one queue
-        entry: one typical request's worth of loaded steps."""
+        entry: one typical request's worth of loaded steps, divided by the
+        expected tokens a step emits (spec decode drains requests faster)."""
         t = max(self.step_estimate(load), 1e-9)
-        return t * self.avg_request_steps
+        return t * self.avg_request_steps / self.expected_tokens_per_step
 
     def verdict(self, loads: Sequence[ReplicaLoad], *,
                 prompt_tokens: int = 0,

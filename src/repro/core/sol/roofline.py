@@ -212,3 +212,91 @@ def roofline(flops: float, hbm_bytes: float, *, collective_bytes: float = 0.0,
         dtype=dtype,
         chip=chip or DEFAULT_CHIP,
     )
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding
+# ---------------------------------------------------------------------------
+
+def spec_expected_tokens(k: int, accept_rate: float) -> float:
+    """Expected tokens emitted per verify step at per-token acceptance ``p``.
+
+    Accepting the longest matching prefix of ``k`` drafts plus the bonus
+    token from the verify forward emits ``E(k, p) = sum_{i=0..k} p^i =
+    (1 - p^(k+1)) / (1 - p)`` tokens per step — between 1 (p=0, the greedy
+    floor) and ``k + 1`` (p=1)."""
+    if k <= 0:
+        return 1.0
+    p = min(max(float(accept_rate), 0.0), 1.0)
+    if p >= 1.0:
+        return float(k + 1)
+    return (1.0 - p ** (k + 1)) / (1.0 - p)
+
+
+@dataclass
+class SpecDecodeEstimate:
+    """SOL prediction for speculative decoding at a given acceptance rate."""
+
+    k: int
+    accept_rate: float
+    expected_tokens: float          # E(k, p) tokens emitted per verify step
+    greedy: RooflineResult          # one-token decode step
+    verify: RooflineResult          # (k+1)-token verify step
+    draft_seconds: float            # host-side drafter cost per step
+    speedup: float                  # predicted tokens/sec ratio vs greedy
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "k": self.k,
+            "accept_rate": self.accept_rate,
+            "expected_tokens": self.expected_tokens,
+            "t_greedy_s": self.greedy.t_sol,
+            "t_verify_s": self.verify.t_sol,
+            "draft_seconds": self.draft_seconds,
+            "speedup": self.speedup,
+        }
+
+
+def spec_decode_roofline(k: int, accept_rate: float, *,
+                         flops_per_token: float, weight_bytes: float,
+                         kv_bytes_per_token: float = 0.0,
+                         wire_bytes: float = 0.0,
+                         draft_seconds: float = 0.0,
+                         dtype: str = "bf16",
+                         num_chips: int = 1,
+                         chip: Optional[ChipSpec] = None) -> SpecDecodeEstimate:
+    """Price speculative decoding before measuring it.
+
+    A greedy decode step streams the full weight set (``weight_bytes`` —
+    already reflecting ``.with_wdtype`` quantization when the caller passes
+    ``Model.decode_weight_bytes``) plus per-token KV traffic; a verify step
+    streams the SAME weights once for ``k + 1`` tokens of compute and KV.
+    Because decode is memory-bound on weights, ``t_verify ~= t_greedy`` and
+    the predicted speedup is::
+
+        speedup = E(k, p) * t_greedy / (t_verify + draft_seconds)
+
+    ``wire_bytes`` carries the TP collective traffic per step (from the
+    shard plan) so the prediction stays honest under ``tp_shards > 1`` —
+    wire bytes scale with tokens just like KV, not like weights.
+    """
+    e = spec_expected_tokens(k, accept_rate)
+    greedy = roofline(
+        flops_per_token,
+        weight_bytes + kv_bytes_per_token,
+        collective_bytes=wire_bytes,
+        num_chips=num_chips, dtype=dtype, chip=chip,
+    )
+    verify = roofline(
+        flops_per_token * (k + 1),
+        weight_bytes + kv_bytes_per_token * (k + 1),
+        collective_bytes=wire_bytes * (k + 1),
+        num_chips=num_chips, dtype=dtype, chip=chip,
+    )
+    t_g = max(greedy.t_sol, 1e-12)
+    t_v = max(verify.t_sol, 1e-12) + max(draft_seconds, 0.0)
+    return SpecDecodeEstimate(
+        k=k, accept_rate=min(max(float(accept_rate), 0.0), 1.0),
+        expected_tokens=e, greedy=greedy, verify=verify,
+        draft_seconds=draft_seconds, speedup=e * t_g / t_v,
+    )

@@ -24,13 +24,14 @@ from .cache import (TuningCache, TuningRecord, default_cache_dir,
                     tuning_disabled)
 from .candidates import (Candidate, DEFAULT_ATTN_BLOCK, DEFAULT_GEMM_TILE,
                          DEFAULT_BATCHED_TILE, DEFAULT_NORM_BLOCK_ROWS,
-                         DEFAULT_SSD_CHUNK, QUANT_WDTYPES,
+                         DEFAULT_SSD_CHUNK, QUANT_WDTYPES, SPEC_KS,
                          enumerate_candidates, fusion_candidates,
-                         quant_candidates, shard_candidates)
+                         quant_candidates, shard_candidates,
+                         spec_candidates)
 from .runner import (MeasureError, MeasureReport, TuneResult, measure,
                      measure_protocol, tune_op)
 from .sol_prune import (predict_seconds, prune, prune_quant, prune_shard,
-                        rank_candidates)
+                        prune_spec, rank_candidates)
 
 __all__ = [
     "Candidate", "MeasureError", "MeasureReport", "TuneResult",
@@ -41,14 +42,16 @@ __all__ = [
     "global_cache", "lookup", "make_key", "measure", "predict_seconds",
     "prune", "prune_quant", "rank_candidates",
     "record_fusion_measurement", "record_quant_measurement",
-    "record_shard_measurement", "seed_hint_for_problem", "shape_bucket",
+    "record_shard_measurement", "record_spec_measurement",
+    "seed_hint_for_problem", "shape_bucket",
     "shard_candidates", "shard_report", "prune_shard",
+    "spec_candidates", "spec_report", "prune_spec",
     "tune_op", "tuned_attention_block", "tuned_fusion", "tuned_gemm_tile",
-    "tuned_norm_block_rows", "tuned_shard", "tuned_ssd_chunk",
-    "tuned_wdtype",
+    "tuned_norm_block_rows", "tuned_shard", "tuned_spec",
+    "tuned_ssd_chunk", "tuned_wdtype",
     "tuning_disabled", "DEFAULT_ATTN_BLOCK", "DEFAULT_BATCHED_TILE",
     "DEFAULT_GEMM_TILE", "DEFAULT_NORM_BLOCK_ROWS", "DEFAULT_SSD_CHUNK",
-    "DEFAULT_QUANT_BUDGETS", "QUANT_WDTYPES",
+    "DEFAULT_QUANT_BUDGETS", "QUANT_WDTYPES", "SPEC_KS",
 ]
 
 # Per-wdtype relative-error budgets (rel L2 of the op output vs its fp
@@ -313,6 +316,81 @@ def shard_report(op: str, dims, dtype, *, tp: int,
         "wire_bytes": plan.collective.total_wire_bytes,
         "t_sol_s": result.t_sol, "bottleneck": result.bottleneck,
         "collective_bound": result.collective_bound,
+        "verdict": verdict,
+    }
+
+
+def tuned_spec(op: str, dims, dtype) -> Optional[Dict[str, object]]:
+    """Speculative decoding as a tunable axis: the measured (drafter, k)
+    verdict for one ``spec:<op>`` model bucket.  Returns the best dict —
+    ``{"spec": "ngram", "k": 4, "accept_rate": ...}`` to adopt (the lever
+    is lossless, so unlike quant/shard a measured record may turn it ON),
+    ``{"spec": "off"}`` for an explicit measured veto (acceptance too low
+    to pay for drafting + verify), or None when unmeasured.
+    ``REPRO_SPEC=off`` silences lookups entirely (the escape hatch);
+    checked inline here so core never imports serve."""
+    if _os.environ.get("REPRO_SPEC", "").lower() in ("off", "0", "false"):
+        return None
+    best = lookup(f"spec:{op}", dims, dtype)
+    if best is not None and "spec" in best:
+        return dict(best)
+    return None
+
+
+def record_spec_measurement(op: str, dims, dtype, *, spec_best: str,
+                            k: Optional[int] = None,
+                            accept_rate: Optional[float] = None,
+                            tokens_per_step: Optional[float] = None,
+                            speedup: Optional[float] = None,
+                            trials=(), backend: str = "pallas") -> None:
+    """Persist a measured speculative-decoding verdict (written by
+    ``benchmarks/serve_load.py``'s spec section).  ``spec_best="off"`` is
+    the veto — recorded when the measured acceptance rate made spec slower
+    than greedy; a non-"off" record carries the measured acceptance rate
+    so the SOL capacity/admission models can price expected tokens/step."""
+    if tuning_disabled():
+        return
+    best: Dict[str, object] = {"spec": str(spec_best)}
+    if spec_best != "off" and k is not None:
+        best["k"] = int(k)
+    if accept_rate is not None:
+        best["accept_rate"] = float(accept_rate)
+    if tokens_per_step is not None:
+        best["tokens_per_step"] = float(tokens_per_step)
+    if speedup is not None:
+        best["speedup"] = float(speedup)
+    rec = TuningRecord(
+        op=f"spec:{op}", shape_bucket=shape_bucket(dims),
+        dtype=canon_dtype_name(dtype), backend=backend,
+        device_kind=device_kind(), best=best, trials=list(trials))
+    global_cache().put(rec)
+
+
+def spec_report(op: str, dims, dtype, *, k: int, accept_rate: float,
+                flops_per_token: float, weight_bytes: float,
+                kv_bytes_per_token: float = 0.0,
+                wire_bytes: float = 0.0) -> Dict[str, object]:
+    """SOL speedup prediction + cached verdict for one model's speculative
+    decoding decision.  ``dims`` is the model's decode bucket."""
+    from ..sol.roofline import spec_decode_roofline
+
+    est = spec_decode_roofline(
+        k, accept_rate, flops_per_token=flops_per_token,
+        weight_bytes=weight_bytes, kv_bytes_per_token=kv_bytes_per_token,
+        wire_bytes=wire_bytes)
+    best = None if tuning_disabled() else lookup(f"spec:{op}", dims, dtype)
+    verdict = "unmeasured"
+    measured_accept = None
+    if best is not None and "spec" in best:
+        verdict = "vetoed" if best["spec"] == "off" else \
+            f"kept:{best['spec']}:{best.get('k')}"
+        measured_accept = best.get("accept_rate")
+    return {
+        "op": op, "dims": tuple(dims), "k": k,
+        "accept_rate": accept_rate,
+        "expected_tokens": est.expected_tokens,
+        "predicted_speedup": est.speedup,
+        "measured_accept_rate": measured_accept,
         "verdict": verdict,
     }
 

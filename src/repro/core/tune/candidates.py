@@ -192,6 +192,26 @@ def quant_candidates(op: str = "gemm") -> List[Candidate]:
         + [_cand(key, wdtype=d) for d in QUANT_WDTYPES]
 
 
+# Draft lengths the speculative-decoding axis enumerates and the drafters
+# that propose them (candidate 0 = spec off, the greedy default a sweep can
+# never regress; "draft_model" is opt-in — it needs a second set of params).
+SPEC_KS = (2, 4, 8)
+SPEC_DRAFTERS = ("ngram",)
+
+
+def spec_candidates(op: str = "decode_block") -> List[Candidate]:
+    """Speculative decoding as a tunable axis: ``spec:<op>`` records carry
+    the measured drafter/k verdict — and the measured acceptance rate —
+    for one model shape bucket.  Candidate 0 is ``{"spec": "off"}``; the
+    others are pruned by SOL-predicted speedup at the prior acceptance
+    rate (``sol_prune.prune_spec``) and vetoed (or adopted — the lever is
+    lossless, so records can turn it ON too) from measured acceptance by
+    ``benchmarks/serve_load.py``."""
+    key = f"spec:{op}"
+    return [_cand(key, spec="off")] \
+        + [_cand(key, spec=d, k=k) for d in SPEC_DRAFTERS for k in SPEC_KS]
+
+
 def enumerate_candidates(op: str, shape: Sequence[int], *,
                          dtype: str = "fp32", window: int = 0,
                          chip: ChipSpec = TPU_V5E) -> List[Candidate]:
@@ -204,6 +224,7 @@ def enumerate_candidates(op: str, shape: Sequence[int], *,
       fusion:<pattern>:    the edge's dims tuple
       quant:<op>:          the matmul's (m, n, k)
       shard:<op>:          the matmul's (m, n, k)
+      spec:<op>:           the model's decode bucket dims
     """
     if op.startswith("fusion:"):
         return fusion_candidates(op.split(":", 1)[1])
@@ -211,6 +232,8 @@ def enumerate_candidates(op: str, shape: Sequence[int], *,
         return quant_candidates(op.split(":", 1)[1])
     if op.startswith("shard:"):
         return shard_candidates(op.split(":", 1)[1])
+    if op.startswith("spec:"):
+        return spec_candidates(op.split(":", 1)[1])
     if op == "gemm":
         m, n, k = shape
         return gemm_candidates(m, n, k, dtype=dtype, chip=chip)

@@ -181,3 +181,33 @@ def prune_quant(shape: Sequence[int], candidates: Sequence[Candidate], *,
         if frac >= min_saved_frac:
             kept.append((cand, frac))
     return kept
+
+
+def prune_spec(candidates: Sequence[Candidate], *, accept_rate: float,
+               flops_per_token: float, weight_bytes: float,
+               kv_bytes_per_token: float = 0.0, wire_bytes: float = 0.0,
+               draft_seconds: float = 0.0, dtype: str = "bf16",
+               min_speedup: float = 1.0, chip: ChipSpec = TPU_V5E
+               ) -> List[Tuple[Candidate, Optional[float]]]:
+    """SOL pruning for the speculative-decoding axis: keep only (drafter,
+    k) candidates whose ``spec_decode_roofline`` speedup at the given
+    acceptance rate beats ``min_speedup``.  A compute-bound decode shape
+    (or a prior acceptance rate near zero) never reaches the measured
+    runner.  The greedy default (candidate 0, spec off) is always kept.
+    Returns (candidate, predicted speedup) pairs."""
+    from ..sol.roofline import spec_decode_roofline
+
+    kept: List[Tuple[Candidate, Optional[float]]] = []
+    for cand in candidates:
+        cfg = cand.as_dict()
+        if str(cfg.get("spec", "off")) == "off":
+            kept.append((cand, None))       # greedy default: always measured
+            continue
+        est = spec_decode_roofline(
+            int(cfg.get("k", 0)), accept_rate,
+            flops_per_token=flops_per_token, weight_bytes=weight_bytes,
+            kv_bytes_per_token=kv_bytes_per_token, wire_bytes=wire_bytes,
+            draft_seconds=draft_seconds, dtype=dtype, chip=chip)
+        if est.speedup > min_speedup:
+            kept.append((cand, est.speedup))
+    return kept

@@ -67,6 +67,12 @@ def main():
                          "decode through the dequant-fused step; unset "
                          "defers to the config + tuned verdict "
                          "(REPRO_QUANT=off overrides)")
+    ap.add_argument("--spec-decode", default=None, metavar="K|off",
+                    help="speculative decoding: an int drafts that many "
+                         "tokens per step with the n-gram self-drafter "
+                         "(\"ngram:4\" spells the drafter out), \"off\" "
+                         "disables it; unset defers to the config + tuned "
+                         "acceptance verdict (REPRO_SPEC=off overrides)")
     ap.add_argument("--tp-shards", type=int, default=None,
                     help="tensor-parallel shards for the decode path "
                          "(needs that many devices; on CPU set XLA_FLAGS="
@@ -106,7 +112,8 @@ def main():
             scheduler=args.scheduler, prefix_cache=args.prefix_cache,
             rate_limits=limits, max_queue_per_replica=args.max_queue,
             request_timeout_steps=args.deadline_steps,
-            weight_dtype=args.weight_dtype, tp_shards=args.tp_shards)
+            weight_dtype=args.weight_dtype, tp_shards=args.tp_shards,
+            spec_decode=args.spec_decode)
         print(f"gateway: {args.replicas} replicas on "
               f"http://{args.host}:{args.port}  "
               f"(POST /v1/generate, WS /v1/stream, /healthz, /metrics, "
@@ -122,6 +129,7 @@ def main():
         scheduler=args.scheduler,
         weight_dtype=args.weight_dtype,
         tp_shards=args.tp_shards,
+        spec_decode=args.spec_decode,
         prefix_cache=PrefixCache(block=args.chunk) if args.prefix_cache
         else None)
     if engine.model.cfg.weight_dtype != "none":
@@ -132,6 +140,10 @@ def main():
         print(f"tp_shards={engine.model.cfg.tp_shards} "
               f"({engine.wire_bytes_per_step / 1e3:.1f} KB SOL-predicted "
               f"interconnect traffic per decode step)")
+    if engine.spec is not None:
+        print(f"spec_decode={engine.model.cfg.spec_decode} "
+              f"(E[tokens/step]={engine.expected_tokens_per_step:.2f} at "
+              f"the tuned acceptance hint, {engine.spec_mode} rollback)")
     rng = np.random.default_rng(0)
     shared = list(map(int, rng.integers(0, cfg.vocab_size, args.chunk)))
     reqs = []

@@ -4,6 +4,7 @@
   prefill.py       chunked-prefill planning (chunk budget, ragged batches)
   prefix_cache.py  token-prefix reuse of prefilled KV/SSM slot state
   scheduler.py     SLO classes, FIFO/priority admission, SOL capacity model
+  spec.py          speculative-decoding drafters (n-gram, draft model)
   streaming.py     per-token events, callbacks, iterator API
   telemetry.py     TTFT / per-token latency percentiles, utilization
   replica.py       restartable engine replica: breaker, validation, faults
@@ -23,18 +24,23 @@ from .router import (RateLimiter, Router, RouterRejected, Ticket,
 from .scheduler import (SLO_CLASSES, EngineView, FIFOScheduler, SLOClass,
                         SOLCapacityModel, SOLScheduler, get_slo,
                         make_scheduler)
+from .spec import (AdversarialDrafter, DEFAULT_SPEC_ACCEPT,
+                   DraftModelDrafter, Drafter, NGramDrafter, build_drafter,
+                   parse_spec, spec_disabled)
 from .streaming import StreamEvent, StreamMux, collect_streams, stream_tokens
 from .telemetry import ServeTelemetry, fleet_summary, percentile
 
 __all__ = [
-    "ChunkedPrefillPlanner", "CircuitBreaker", "EngineReplica",
+    "AdversarialDrafter", "ChunkedPrefillPlanner", "CircuitBreaker",
+    "DEFAULT_SPEC_ACCEPT", "DraftModelDrafter", "Drafter", "EngineReplica",
     "EngineView", "FIFOScheduler", "FaultEvent", "FaultInjector",
+    "NGramDrafter",
     "PrefillPlan", "PrefixCache", "RateLimiter", "ReplicaFault",
     "ReplicaState", "Request", "Router", "RouterRejected", "SLOClass",
     "SLO_CLASSES", "SOLCapacityModel", "SOLScheduler", "ServeEngine",
     "ServeTelemetry", "SlotState", "StreamEvent", "StreamMux", "Ticket",
-    "TokenBucket", "build_replicated_router", "collect_streams",
-    "extract_slot", "fleet_summary", "get_slo", "insert_slot",
-    "make_scheduler", "percentile", "resolve_tuned_decode_cfg",
-    "stream_tokens",
+    "TokenBucket", "build_drafter", "build_replicated_router",
+    "collect_streams", "extract_slot", "fleet_summary", "get_slo",
+    "insert_slot", "make_scheduler", "parse_spec", "percentile",
+    "resolve_tuned_decode_cfg", "spec_disabled", "stream_tokens",
 ]

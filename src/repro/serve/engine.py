@@ -26,7 +26,7 @@ import dataclasses
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +38,11 @@ from ..core.obs.trace import default_drift, get_tracer
 from ..core.sol.hardware import canon_dtype
 from ..models.model import Model
 from .prefill import ChunkedPrefillPlanner, SlotState
-from .prefix_cache import PrefixCache, extract_slot, insert_slot
+from .prefix_cache import PrefixCache, _slot_axis, extract_slot, insert_slot
 from .scheduler import (EngineView, FIFOScheduler, SOLCapacityModel,
                         make_scheduler)
+from .spec import (DEFAULT_SPEC_ACCEPT, build_drafter, parse_spec,
+                   spec_disabled)
 from .streaming import StreamEvent, StreamMux
 from .telemetry import ServeTelemetry
 
@@ -48,7 +50,8 @@ from .telemetry import ServeTelemetry
 def resolve_tuned_decode_cfg(model: Model, max_len: int,
                              fused_decode: Optional[bool] = None,
                              weight_dtype: Optional[str] = None,
-                             tp_shards: Optional[int] = None):
+                             tp_shards: Optional[int] = None,
+                             spec_decode: Optional[str] = None):
     """Tuned decode-path config overrides resolved once at engine build.
 
     Consults the persistent autotuning cache for the engine's actual
@@ -81,6 +84,17 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int,
     argument forces past the veto but raises when the host has fewer
     devices; a config-driven request on a too-small host falls back to 1
     (recorded in the overrides).
+
+    Speculative decoding resolves with the OPPOSITE asymmetry to quant and
+    sharding: it is output-lossless by construction (accept = greedy-argmax
+    prefix, reject = exact rollback), so a measured ``spec:decode_block``
+    record can turn it ON as well as off — ``{"spec": "off"}`` is the
+    measured acceptance-rate veto, a non-"off" record adopts (drafter, k)
+    even when the config left it off.  An explicit ``spec_decode`` argument
+    forces past the veto.  Structural gates beat everything: the
+    ``REPRO_SPEC=off`` escape hatch, families without a greedy decode path
+    (audio/vlm), and sliding windows smaller than ``max_len`` (the KV ring
+    wraps, so a position rewind cannot restore overwritten rows).
     """
     from repro.kernels.quant import quant_disabled
 
@@ -136,6 +150,25 @@ def resolve_tuned_decode_cfg(model: Model, max_len: int,
                 fused_decode = verdict
     if bool(fused_decode) != cfg.fused_decode:
         overrides["fused_decode"] = bool(fused_decode)
+    spec_req = spec_decode if spec_decode is not None else cfg.spec_decode
+    resolved_spec = parse_spec(spec_req)
+    if spec_disabled() \
+            or cfg.family not in ("dense", "moe", "ssm", "hybrid") \
+            or (cfg.sliding_window and cfg.sliding_window < max_len):
+        resolved_spec = None            # structural gates beat everything
+    elif spec_decode is None:
+        verdict = tune.tuned_spec("decode_block",
+                                  (cfg.d_model, cfg.d_ff), dtype_key)
+        if verdict is not None:
+            if verdict.get("spec") == "off":
+                resolved_spec = None    # measured veto: acceptance too low
+            elif verdict.get("k"):
+                # lossless lever: a measured record may turn spec ON
+                resolved_spec = (str(verdict["spec"]), int(verdict["k"]))
+    spec_str = "off" if resolved_spec is None \
+        else f"{resolved_spec[0]}:{resolved_spec[1]}"
+    if spec_str != cfg.spec_decode:
+        overrides["spec_decode"] = spec_str
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     return cfg, overrides
@@ -174,6 +207,66 @@ def _reset_slot_positions(cache, slot: int):
     return jax.tree_util.tree_map_with_path(reset, cache)
 
 
+@jax.jit
+def _rewind_jit(cache, slots, deltas):
+    def rewind(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "pos":
+            return leaf.at[..., slots].add(-deltas.astype(leaf.dtype))
+        return leaf
+    return jax.tree_util.tree_map_with_path(rewind, cache)
+
+
+def _rewind_slot_positions(cache, rewinds: Sequence[Tuple[int, int]],
+                           max_batch: int):
+    """Roll slots' cache positions back (prefix-mode speculative
+    rejection) — one jitted scatter-add per step, however many slots
+    rejected.  Sound because the non-windowed KV path writes rows at
+    absolute positions and masks validity by ``slot_idx < pos``: the
+    rewound rows go stale immediately and are overwritten bit-for-bit at
+    the same absolute positions by the next feed.  The index arrays are
+    padded to ``max_batch`` (delta 0 = no-op) so every step reuses one
+    compiled shape instead of re-compiling per rejection count."""
+    slots = np.zeros(max_batch, np.int32)
+    deltas = np.zeros(max_batch, np.int32)
+    for j, (s, d) in enumerate(rewinds):
+        slots[j], deltas[j] = s, d
+    return _rewind_jit(cache, jnp.asarray(slots), jnp.asarray(deltas))
+
+
+@jax.jit
+def _restore_jit(new_cache, old_cache, slots):
+    def merge(path, new_leaf, old_leaf):
+        ax = _slot_axis(path, new_leaf)
+        idx = [slice(None)] * new_leaf.ndim
+        idx[ax] = slots
+        return new_leaf.at[tuple(idx)].set(old_leaf[tuple(idx)])
+    return jax.tree_util.tree_map_with_path(merge, new_cache, old_cache)
+
+
+def _restore_slots(new_cache, old_cache, restores: Sequence[int],
+                   max_batch: int):
+    """Copy slots' state from ``old_cache`` into ``new_cache`` (replay-mode
+    speculative rejection: SSM/conv state is overwritten in place by the
+    forward, so a rejected verify step restores the whole slot from the
+    retained pre-step cache) — one jitted gather/scatter per step.  Padded
+    to ``max_batch`` with duplicates of the first rejected slot (a repeated
+    same-value set is a no-op) for shape stability."""
+    sl = np.full(max_batch, restores[0], np.int32)
+    sl[:len(restores)] = list(restores)
+    return _restore_jit(new_cache, old_cache, jnp.asarray(sl))
+
+
+@partial(jax.jit, static_argnames=("vocab",))
+def _greedy_rows(logits, *, vocab: int):
+    """Greedy argmax over every logits row — the verification oracle.
+
+    Same slice and reduction as ``_sample_batch``'s greedy branch (same
+    values, same first-max tie rule), so spec acceptance is compared
+    against exactly what plain greedy decode would have sampled."""
+    return jnp.argmax(logits[..., :vocab], axis=-1).astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("vocab",))
 def _sample_batch(logits, last_idx, temps, key, *, vocab: int):
     """Sample every slot's next token in one device call.
@@ -207,6 +300,8 @@ class ServeEngine:
                  fused_decode: Optional[bool] = None,
                  weight_dtype: Optional[str] = None,
                  tp_shards: Optional[int] = None,
+                 spec_decode: Optional[str] = None,
+                 drafter=None,
                  telemetry: Optional[ServeTelemetry] = None,
                  request_timeout_steps: Optional[int] = None):
         # the integrity gate watches the same drift detector every
@@ -220,7 +315,8 @@ class ServeEngine:
         # safe defaults (and bumps repro_integrity_quarantined)
         tuned_cfg, self.tuned_overrides = resolve_tuned_decode_cfg(
             model, max_len, fused_decode=fused_decode,
-            weight_dtype=weight_dtype, tp_shards=tp_shards)
+            weight_dtype=weight_dtype, tp_shards=tp_shards,
+            spec_decode=spec_decode)
         if self.tuned_overrides:
             model = dataclasses.replace(model, cfg=tuned_cfg)
         self.model = model
@@ -278,6 +374,50 @@ class ServeEngine:
                 self.sol_capacity = SOLCapacityModel(model.cfg)
             except Exception:
                 self.sol_capacity = None
+        # speculative decoding: resolved spec_decode (via the cfg override
+        # machinery above) becomes a drafter + fixed-width verify feed
+        self.spec = parse_spec(model.cfg.spec_decode)
+        self.spec_k = self.spec[1] if self.spec else 0
+        # rejection strategy: recurrent state (SSM/conv) is overwritten in
+        # place by the forward, so those families restore the whole slot
+        # from the retained pre-step cache; pure-KV families rewind pos
+        self.spec_mode = "replay" if model.cfg.ssm_state else "prefix"
+        # fixed verify-row width, kept constant so the jitted step compiles
+        # for a bounded width set.  Prefix mode commits partially, so the
+        # pending-verified backlog is always exactly 1 token (row = 1 + k);
+        # replay rollback re-queues a whole step's emissions, so its
+        # backlog can reach k + 2
+        if not self.spec:
+            self.spec_width = 0
+        elif self.spec_mode == "prefix":
+            self.spec_width = self.spec_k + 1
+        else:
+            self.spec_width = 2 * (self.spec_k + 1)
+        self.drafter = drafter
+        if self.drafter is None and self.spec is not None:
+            self.drafter = build_drafter(self.spec[0],
+                                         vocab=model.cfg.vocab_size)
+        # a drafter claiming its tokens need no verification is the planted
+        # gaming mode: the engine honors the claim (that IS the attack) and
+        # the integrity gate's greedy-oracle check quarantines the config
+        self.spec_trusted = bool(getattr(self.drafter, "self_verifying",
+                                         False))
+        accept_hint = DEFAULT_SPEC_ACCEPT
+        if self.spec is not None:
+            rec = tune.tuned_spec(
+                "decode_block", (model.cfg.d_model, model.cfg.d_ff),
+                canon_dtype(model.cfg.compute_dtype))
+            if rec is not None and rec.get("accept_rate") is not None:
+                accept_hint = float(rec["accept_rate"])
+        from ..core.sol.roofline import spec_expected_tokens
+
+        self.expected_tokens_per_step = spec_expected_tokens(
+            self.spec_k, accept_hint) if self.spec else 1.0
+        if self.sol_capacity is not None:
+            # admission budgets and Retry-After estimates price a step at
+            # its expected emitted tokens, not 1
+            self.sol_capacity.expected_tokens_per_step = \
+                self.expected_tokens_per_step
         self.mux = StreamMux()
         self.step_count = 0
         # first _step_fn call triggers the XLA jit compile; when tracing
@@ -294,6 +434,9 @@ class ServeEngine:
             "decode_dispatches": 0,
             "weight_bytes_per_step": self.weight_bytes_per_step,
             "wire_bytes_per_step": self.wire_bytes_per_step,
+            "spec_steps": 0, "spec_draft_tokens": 0,
+            "spec_accepted_tokens": 0, "spec_examined_tokens": 0,
+            "spec_rollbacks": 0,
         }
 
     # ------------------------------------------------------------------
@@ -455,6 +598,133 @@ class ServeEngine:
         return False
 
     # ------------------------------------------------------------------
+    def _spec_feeds(self) -> Optional[Dict[int, List[int]]]:
+        """Draft tokens per started slot for this step's verify feed.
+
+        A slot participates when the drafter proposed something, or when a
+        replay rollback left more than one pending-verified token (the
+        no-draft recovery feed — the same acceptance walk then trivially
+        full-commits and emits one token).  Greedy requests only: the
+        accept rule compares against argmax, so temperature sampling keeps
+        the plain decode path.
+        """
+        feeds: Dict[int, List[int]] = {}
+        for i, s in enumerate(self.slots):
+            if s is None or not s.started or s.feed:
+                continue
+            req = s.req
+            if req.temperature > 0:
+                continue
+            if not s.verified:
+                s.verified = [int(req.out_tokens[-1])]
+            nv = len(s.verified)
+            remaining = req.max_new_tokens - len(req.out_tokens)
+            # a verify step emits up to k+1 tokens and feeds nv+k rows:
+            # clamp k so neither the request budget, the fixed row width,
+            # nor the slot's cache capacity can overflow
+            k_eff = min(self.spec_k, remaining - 1,
+                        self.spec_width - nv,
+                        self.max_len - s.pos - nv)
+            drafts: List[int] = []
+            if k_eff >= 1:
+                context = list(req.prompt) + list(req.out_tokens)
+                drafts = [int(t) for t in
+                          self.drafter.propose(context, k_eff)][:k_eff]
+            if drafts or nv > 1:
+                feeds[i] = drafts
+        return feeds or None
+
+    def _resolve_spec_rows(self, plan, logits,
+                           old_cache) -> List[StreamEvent]:
+        """Accept/reject each spec row against the greedy-argmax oracle.
+
+        Accepts the longest drafted prefix matching greedy argmax plus the
+        bonus token from the verify forward — every emitted token is
+        exactly what plain greedy decode would have produced, so outputs
+        are bitwise-equal by construction.  Rejected tokens roll back via
+        position rewind (prefix mode) or whole-slot restore (replay mode).
+        """
+        events: List[StreamEvent] = []
+        rewinds: List[Tuple[int, int]] = []
+        restores: List[int] = []
+        g = np.asarray(_greedy_rows(logits,
+                                    vocab=self.model.cfg.vocab_size))
+        for i, nv, drafts in plan.spec_rows:
+            s = self.slots[i]
+            req = s.req
+            if self.spec_trusted and drafts:
+                # adversarial trust path: the drafter claimed its tokens
+                # need no verification and the engine honors the claim —
+                # a perfect "acceptance rate" built from unverified tokens.
+                # The integrity gate's oracle check (spec output vs greedy
+                # output) is what catches this, not the engine.
+                a = len(drafts)
+                emitted = list(drafts) + [int(g[i, nv - 1 + a])]
+                examined = a
+            else:
+                a, emitted = 0, []
+                for j, d in enumerate(drafts):
+                    tok = int(g[i, nv - 1 + j])
+                    emitted.append(tok)
+                    if d == tok:
+                        a += 1
+                    else:
+                        break
+                if a == len(drafts):
+                    # all drafts accepted: the forward's last row is a free
+                    # extra token (the "bonus" — it conditions only on
+                    # accepted tokens, so it is exact)
+                    emitted.append(int(g[i, nv - 1 + len(drafts)]))
+                # tokens the walk actually examined: the accepted run plus
+                # the first rejection (later drafts are unconditioned, so
+                # they carry no evidence about the per-token accept prob) —
+                # accepted/examined is the MLE of the geometric model's p
+                examined = a + (1 if a < len(drafts) else 0)
+            self.metrics["spec_steps"] += 1
+            self.metrics["spec_draft_tokens"] += len(drafts)
+            self.metrics["spec_accepted_tokens"] += a
+            self.metrics["spec_examined_tokens"] += examined
+            if self.spec_mode == "prefix":
+                delta = len(drafts) - a
+                if delta:
+                    rewinds.append((i, delta))
+                    self.metrics["spec_rollbacks"] += 1
+                s.pos += nv + a
+                s.verified = [emitted[-1]]
+            elif a == len(drafts):
+                s.pos += nv + len(drafts)     # replay, full accept
+                s.verified = [emitted[-1]]
+            else:
+                # replay, rejection: restore the whole slot and re-queue
+                # this step's emissions as pending-verified tokens
+                restores.append(i)
+                self.metrics["spec_rollbacks"] += 1
+                s.verified = list(s.verified) + emitted
+            for tok in emitted:
+                req.out_tokens.append(tok)
+                self.metrics["tokens_generated"] += 1
+                self.telemetry.on_token(req.rid, self.step_count)
+                final = len(req.out_tokens) >= req.max_new_tokens
+                events.append(StreamEvent(
+                    rid=req.rid, token=tok,
+                    index=len(req.out_tokens) - 1,
+                    step=self.step_count, final=final))
+                if final:
+                    req.done = True
+                    self.slots[i] = None    # release slot immediately
+                    self.metrics["requests_done"] += 1
+                    self.telemetry.on_finish(req.rid, self.step_count)
+                    break
+        # rollbacks batched: one cache traversal per step, however many
+        # slots rejected (per-slot traversals dominated host time)
+        if rewinds:
+            self.cache = _rewind_slot_positions(self.cache, rewinds,
+                                                self.max_batch)
+        if restores:
+            self.cache = _restore_slots(self.cache, old_cache, restores,
+                                        self.max_batch)
+        return events
+
     def _run_step(self, view, plan):
         """Invoke the jitted step; the first call (the XLA compile) gets
         its own ``compile``-category span when tracing is on."""
@@ -492,9 +762,16 @@ class ServeEngine:
             return []
         view = self._view()
         budget = self.scheduler.prefill_budget(view)
-        plan = self.planner.plan(self.slots, budget=budget)
+        spec_feeds = self._spec_feeds() if self.spec is not None else None
+        plan = self.planner.plan(self.slots, budget=budget,
+                                 spec_feeds=spec_feeds,
+                                 spec_width=self.spec_width)
         if not plan.any_work:
             return []
+        # replay-mode rejection restores whole slots from the pre-step
+        # cache; prefix mode only rewinds positions, so nothing is retained
+        old_cache = self.cache \
+            if plan.spec_rows and self.spec_mode == "replay" else None
         logits, self.cache = self._run_step(view, plan)
         self.step_count += 1
         self.metrics["steps"] += 1
@@ -531,6 +808,7 @@ class ServeEngine:
                 s = self.slots[i]
                 req = s.req
                 req.out_tokens.append(int(toks[i]))
+                s.verified = [int(toks[i])]
                 self.metrics["tokens_generated"] += 1
                 self.telemetry.on_token(req.rid, self.step_count)
                 final = len(req.out_tokens) >= req.max_new_tokens
@@ -544,6 +822,14 @@ class ServeEngine:
                     self.metrics["requests_done"] += 1
                     self.telemetry.on_finish(req.rid, self.step_count)
 
+        step_drafted = step_accepted = 0
+        if plan.spec_rows:
+            drafted0 = self.metrics["spec_draft_tokens"]
+            accepted0 = self.metrics["spec_accepted_tokens"]
+            events.extend(self._resolve_spec_rows(plan, logits, old_cache))
+            step_drafted = self.metrics["spec_draft_tokens"] - drafted0
+            step_accepted = self.metrics["spec_accepted_tokens"] - accepted0
+
         active = sum(1 for s in self.slots if s is not None)
         dt = time.perf_counter() - t0
         self.telemetry.on_step(
@@ -551,7 +837,9 @@ class ServeEngine:
             num_slots=self.max_batch, seconds=dt,
             dispatches=self.step_dispatches,
             weight_bytes=self.weight_bytes_per_step,
-            wire_bytes=self.wire_bytes_per_step)
+            wire_bytes=self.wire_bytes_per_step,
+            emitted_tokens=len(events),
+            spec_drafted=step_drafted, spec_accepted=step_accepted)
         r = None
         if self.sol_capacity is not None:
             r = self.sol_capacity.step_roofline(
@@ -572,7 +860,7 @@ class ServeEngine:
                         queue_depth=self.scheduler.pending(),
                         prefill_tokens=plan.prefill_tokens,
                         prefill_chunks=len(plan.consumed),
-                        tokens=len(plan.sample_rows),
+                        tokens=len(events),
                         dispatches=self.step_dispatches,
                         weight_bytes=self.weight_bytes_per_step,
                         wire_bytes=self.wire_bytes_per_step)

@@ -224,6 +224,19 @@ def update_fleet_gauges(router: Router, registry=None) -> None:
             continue
         registry.gauge(f"repro_fleet_{key}",
                        f"fleet_summary()['{key}']").set(float(value))
+    # headline speculative-decoding series (stable names, independent of
+    # the repro_fleet_* mirroring): emitted tokens per engine step and the
+    # measured draft acceptance ratio the tuner's veto keys on
+    tps = summary.get("tokens_per_step", 0.0)
+    if isinstance(tps, (int, float)) and tps == tps:
+        registry.gauge("repro_tokens_per_step",
+                       "tokens emitted per engine step (> 1 when "
+                       "speculative decoding is winning)").set(float(tps))
+    ratio = summary.get("spec_accept_ratio", 0.0)
+    if isinstance(ratio, (int, float)) and ratio == ratio:
+        registry.gauge("repro_spec_accept_ratio",
+                       "accepted / drafted speculative tokens").set(
+            float(ratio))
     registry.gauge("repro_drift_ops_drifting",
                    "ops with sustained predicted-vs-measured drift").set(
         float(len(default_drift().drifting_ops())))

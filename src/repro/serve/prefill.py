@@ -33,6 +33,10 @@ class SlotState:
     prompt_pos: int = 0               # prompt tokens ingested (<= len prompt)
     started: bool = False             # past prefill, sampling
     admit_step: int = 0               # engine step the slot was claimed at
+    # emitted tokens not yet fed to the cache (speculative decoding: 1 for
+    # a plain decode step, more after a replay-mode rollback re-queued the
+    # rejected step's emissions)
+    verified: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -48,10 +52,15 @@ class PrefillPlan:
     sample_rows: List[Tuple[int, int]] = field(default_factory=list)
     # slot -> prompt tokens consumed this step (for prefix snapshots)
     consumed: Dict[int, int] = field(default_factory=dict)
+    # speculative rows: (slot, n_verified, drafts) — the engine walks the
+    # greedy argmax over these rows after the call to accept/reject
+    spec_rows: List[Tuple[int, int, List[int]]] = field(default_factory=list)
+    spec_tokens: int = 0              # verified + draft tokens fed this step
 
     @property
     def any_work(self) -> bool:
-        return bool(self.sample_rows) or self.prefill_tokens > 0
+        return bool(self.sample_rows) or bool(self.spec_rows) \
+            or self.prefill_tokens > 0
 
 
 class ChunkedPrefillPlanner:
@@ -66,13 +75,22 @@ class ChunkedPrefillPlanner:
         self.mode = mode
 
     def plan(self, slots: List[Optional[SlotState]],
-             budget: Optional[int] = None) -> PrefillPlan:
+             budget: Optional[int] = None,
+             spec_feeds: Optional[Dict[int, List[int]]] = None,
+             spec_width: int = 0) -> PrefillPlan:
         """Consume up to ``budget`` prompt tokens (None = unlimited) across
-        prefilling slots; mutates the slots' feeds/positions."""
+        prefilling slots; mutates the slots' feeds/positions.
+
+        ``spec_feeds`` maps started slots to this step's draft tokens: such
+        a slot's row carries its pending-verified tokens plus the drafts
+        (``spec_width`` keeps the row width jit-stable), and its position
+        accounting is deferred to the engine's accept/reject walk."""
         n = len(slots)
         chunk = self.chunk_size if self.mode == "chunked" else 1
         prefilling = any(s is not None and s.feed for s in slots)
         width = chunk if prefilling else 1
+        if spec_feeds:
+            width = max(width, spec_width)
         tokens = np.zeros((n, width), np.int32)
         counts = np.zeros((n,), np.int32)
         plan = PrefillPlan(tokens=tokens, counts=counts, width=width,
@@ -102,6 +120,17 @@ class ChunkedPrefillPlanner:
                     # sampled from this same forward's last valid row
                     s.started = True
                     plan.sample_rows.append((i, take - 1))
+            elif s.started and spec_feeds is not None and i in spec_feeds:
+                drafts = list(spec_feeds[i])
+                row = list(s.verified) + drafts
+                m = len(row)
+                tokens[i, :m] = row
+                counts[i] = m
+                # s.pos is NOT advanced here: the engine commits exactly
+                # the accepted prefix after the verification walk
+                plan.spec_tokens += m
+                plan.decode_tokens += 1
+                plan.spec_rows.append((i, len(s.verified), drafts))
             elif s.started:
                 tokens[i, 0] = s.req.out_tokens[-1]
                 counts[i] = 1

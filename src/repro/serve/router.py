@@ -467,10 +467,16 @@ def build_replicated_router(model, params, *, replicas: int = 2,
         EngineReplica(i, make_engine, breaker_threshold=breaker_threshold,
                       injector=injector)
         for i in range(replicas)]
+    # replicas are homogeneous, so the first engine's resolved spec-decode
+    # expectation (tuned acceptance hint -> E(k, p)) prices the whole fleet
+    expected_tps = float(getattr(fleet_replicas[0].engine,
+                                 "expected_tokens_per_step", 1.0))
     capacity = SOLCapacityModel(fleet_replicas[0].engine.model.cfg,
-                                efficiency=efficiency)
+                                efficiency=efficiency,
+                                expected_tokens_per_step=expected_tps)
     fleet = FleetCapacityModel(capacity,
-                               max_queue_per_replica=max_queue_per_replica)
+                               max_queue_per_replica=max_queue_per_replica,
+                               expected_tokens_per_step=expected_tps)
     supervisor = ReplicaSupervisor(
         [r.replica_id for r in fleet_replicas],
         supervisor_cfg if supervisor_cfg is not None

@@ -87,7 +87,8 @@ class SOLCapacityModel:
     DEFAULT_EFFICIENCY = 0.5
 
     def __init__(self, cfg: ModelConfig, *, chip=None,
-                 efficiency: Optional[float] = None):
+                 efficiency: Optional[float] = None,
+                 expected_tokens_per_step: float = 1.0):
         self.cfg = cfg
         self.chip = chip or DEFAULT_CHIP
         self.dtype = canon_dtype(cfg.compute_dtype)
@@ -96,6 +97,11 @@ class SOLCapacityModel:
         self.active_params = cfg.param_count(active_only=True)
         self.efficiency = (efficiency if efficiency is not None
                            else self._calibrated_efficiency())
+        # speculative decoding emits E(k, accept_rate) tokens per step, so
+        # a per-TOKEN latency budget buys E steps' worth of wall-clock; the
+        # engine overwrites this from its tuned acceptance-rate hint
+        self.expected_tokens_per_step = max(float(expected_tokens_per_step),
+                                            1.0)
 
     def _calibrated_efficiency(self) -> float:
         """Fraction of SOL this device class actually achieves, from the
@@ -262,8 +268,15 @@ class SOLScheduler(FIFOScheduler):
         self.max_defer_steps = max_defer_steps
 
     def _itl_budget(self, view: EngineView) -> float:
-        return min((get_slo(s).itl_target_s for s in view.decode_slos),
-                   default=math.inf)
+        """Per-STEP wall-clock budget from the strictest per-token ITL
+        target: a spec-decode step emits ``expected_tokens_per_step``
+        tokens, so it may take that many token-intervals and still meet
+        the SLO — without this term the scheduler undercounts spec-decode
+        capacity and defers admissions it could serve."""
+        per_token = min((get_slo(s).itl_target_s for s in view.decode_slos),
+                        default=math.inf)
+        return per_token * getattr(self.capacity,
+                                   "expected_tokens_per_step", 1.0)
 
     def next_admissions(self, view: EngineView) -> List[QueueEntry]:
         if not self._queue or not view.free_slots:

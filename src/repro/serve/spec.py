@@ -1,0 +1,236 @@
+"""Speculative decoding drafters and config plumbing.
+
+Decode is memory-bound on weight bytes: one forward over ``k + 1`` tokens
+costs roughly the same HBM traffic as a single-token step, so if a cheap
+drafter can guess the next ``k`` tokens with acceptance rate ``p``, the
+engine emits ``E(k, p) = (1 - p^(k+1)) / (1 - p)`` tokens per verify step
+for ~1x weight traffic.  ``core.sol.roofline.spec_decode_roofline`` prices
+this before any measurement — the paper's speed-of-light discipline applied
+to the decoding *algorithm* instead of a kernel.
+
+The default drafter is the n-gram / prompt-lookup self-drafter (no second
+model): find the longest suffix of the generated context that reoccurred
+earlier, and propose the tokens that followed it.  Repetitive workloads
+(code, templated documents, greedy-argmax cycles) accept nearly everything;
+free-form text accepts little — which is exactly why the tuner measures
+acceptance and records a ``{"spec": "off"}`` veto when it does not pay.
+
+Correctness contract: the engine accepts the longest drafted prefix that
+matches greedy argmax token-for-token and rolls back all rejected state, so
+outputs are bitwise-equal to plain greedy decode *by construction*.  A
+drafter that claims its tokens need no verification (``self_verifying``)
+is a benchmark-gaming mode; the integrity gate's oracle check catches the
+output divergence and quarantines the config (see ``gate_spec_claim``).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+__all__ = [
+    "DEFAULT_SPEC_ACCEPT",
+    "SPEC_DRAFTERS",
+    "spec_disabled",
+    "parse_spec",
+    "Drafter",
+    "NGramDrafter",
+    "DraftModelDrafter",
+    "AdversarialDrafter",
+    "build_drafter",
+]
+
+# Acceptance-rate prior used for SOL estimates before any measurement has
+# been recorded for a model (tuned records carry the measured rate).
+DEFAULT_SPEC_ACCEPT = 0.5
+
+SPEC_DRAFTERS = ("ngram", "draft_model")
+
+
+def spec_disabled() -> bool:
+    """Global escape hatch: ``REPRO_SPEC=off|0|false`` forces spec off."""
+    return os.environ.get("REPRO_SPEC", "").lower() in ("off", "0", "false")
+
+
+def parse_spec(value) -> Optional[Tuple[str, int]]:
+    """Parse a ``spec_decode`` knob into ``(drafter, k)`` or ``None``.
+
+    Accepted forms: ``"off"`` / ``""`` / ``None`` -> None; ``"4"`` or an
+    int ``k`` -> ``("ngram", k)``; ``"ngram:4"`` / ``"draft_model:4"`` ->
+    ``(drafter, k)``.  Raises ``ValueError`` on anything else so a typo'd
+    config fails loudly instead of silently serving greedy.
+    """
+    if value is None:
+        return None
+    if isinstance(value, int):
+        if value <= 0:
+            return None
+        return ("ngram", value)
+    s = str(value).strip().lower()
+    if s in ("", "off", "none", "0", "false"):
+        return None
+    if ":" in s:
+        name, _, ks = s.partition(":")
+    else:
+        name, ks = "ngram", s
+    if name not in SPEC_DRAFTERS:
+        raise ValueError(
+            f"unknown spec drafter {name!r} (expected one of {SPEC_DRAFTERS})")
+    try:
+        k = int(ks)
+    except ValueError:
+        raise ValueError(f"bad spec_decode value {value!r}: k must be an int")
+    if k <= 0:
+        return None
+    return (name, k)
+
+
+class Drafter:
+    """Interface: propose up to ``k`` draft tokens given the full context.
+
+    ``self_verifying`` is the adversarial trust flag: an honest drafter
+    never sets it.  The engine treats ``self_verifying=True`` as "skip the
+    argmax comparison and accept every draft" — the planted gaming mode the
+    integrity gate must catch via the greedy-oracle check.
+    """
+
+    name = "base"
+    self_verifying = False
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {}
+
+
+@dataclass
+class NGramDrafter(Drafter):
+    """Prompt-lookup self-drafter: longest-suffix n-gram continuation.
+
+    Searches the context for the most recent earlier occurrence of the
+    longest trailing n-gram (``max_ngram`` down to 1) and proposes the
+    tokens that followed it.  When the continuation runs off the end of
+    the context — the match implies the sequence is periodic with period
+    ``p = (L - n) - start`` — the proposal is extended periodically
+    (``out[i] = out[i - p]``), which is exactly right for the greedy-argmax
+    cycles tiny models fall into and harmless otherwise (mismatches are
+    rejected by verification).
+    """
+
+    max_ngram: int = 3
+    # confidence gate: draft only off matches of at least this many tokens
+    # (1 = always draft when any suffix repeats; raise it to skip drafting
+    # in low-repetition regions at the cost of missing short-period cycles)
+    min_ngram: int = 1
+    name: str = "ngram"
+    proposed: int = field(default=0, repr=False)
+    calls: int = field(default=0, repr=False)
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        self.calls += 1
+        L = len(context)
+        if L < 2 or k <= 0:
+            return []
+        import numpy as np
+
+        ctx = np.asarray(context, dtype=np.int64)
+        lo = max(1, self.min_ngram)
+        for n in range(min(self.max_ngram, L - 1), lo - 1, -1):
+            # vectorized scan: candidate starts 0..L-n-1, match where every
+            # shifted view equals the trailing n-gram (n <= max_ngram vector
+            # ops instead of a python loop over the whole context)
+            ok = np.ones(L - n, dtype=bool)
+            for j in range(n):
+                ok &= ctx[j:j + (L - n)] == ctx[L - n + j]
+            starts = np.nonzero(ok)[0]
+            if len(starts):
+                start = int(starts[-1])   # most recent earlier occurrence
+                p = (L - n) - start
+                out: List[int] = []
+                for i in range(k):
+                    src = L - p + i
+                    out.append(int(ctx[src]) if src < L else out[i - p])
+                self.proposed += len(out)
+                return out
+        return []
+
+    def stats(self) -> dict:
+        return {"drafter": self.name, "calls": self.calls,
+                "proposed": self.proposed}
+
+
+@dataclass
+class DraftModelDrafter(Drafter):
+    """Small draft-model drafter: greedy k-token rollout of a cheap model.
+
+    Runs ``draft_model.prefill`` over the last ``window`` context tokens,
+    then extends greedily with ``decode_step``.  The draft model shares the
+    target's tokenizer/vocab; its quality only affects acceptance rate,
+    never correctness (verification is against the target's greedy argmax).
+    """
+
+    model: object = None          # models.model.Model (duck-typed)
+    params: object = None
+    window: int = 64
+    name: str = "draft_model"
+    proposed: int = field(default=0, repr=False)
+    calls: int = field(default=0, repr=False)
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        self.calls += 1
+        if self.model is None or k <= 0 or not len(context):
+            return []
+        import jax.numpy as jnp
+        vocab = self.model.cfg.vocab_size
+        ctx = [t for t in context][-self.window:]
+        max_len = len(ctx) + k
+        tokens = jnp.asarray([ctx], dtype=jnp.int32)
+        logits, cache = self.model.prefill(self.params, tokens, max_len)
+        out: List[int] = []
+        for _ in range(k):
+            nxt = int(jnp.argmax(logits[0, :vocab]))
+            out.append(nxt)
+            step = jnp.asarray([[nxt]], dtype=jnp.int32)
+            logits, cache = self.model.decode_step(self.params, cache, step)
+            logits = logits[:, -1, :] if logits.ndim == 3 else logits
+        self.proposed += len(out)
+        return out
+
+    def stats(self) -> dict:
+        return {"drafter": self.name, "calls": self.calls,
+                "proposed": self.proposed}
+
+
+@dataclass
+class AdversarialDrafter(Drafter):
+    """Planted gaming mode: wrong drafts + a claim they need no verifying.
+
+    Proposes deterministic garbage and sets ``self_verifying`` so a naive
+    engine emits unverified tokens and books a perfect acceptance rate.
+    Exists so tests and the integrity drill can assert the oracle check
+    (spec output vs greedy output) quarantines the config rather than
+    letting the fake speedup into the tuning cache.
+    """
+
+    offset: int = 7
+    vocab: int = 512
+    name: str = "adversarial"
+    self_verifying: bool = True
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        last = context[-1] if len(context) else 0
+        return [(int(last) + self.offset * (i + 1)) % self.vocab
+                for i in range(k)]
+
+
+def build_drafter(name: str, *, model=None, params=None,
+                  vocab: int = 512) -> Drafter:
+    if name == "ngram":
+        return NGramDrafter()
+    if name == "draft_model":
+        return DraftModelDrafter(model=model, params=params)
+    if name == "adversarial":
+        return AdversarialDrafter(vocab=vocab)
+    raise ValueError(f"unknown drafter {name!r}")

@@ -6,6 +6,13 @@ returns the ``StreamEvent``s it produced, ``engine.stream(...)`` is a
 generator that drives steps and yields events as they happen, and a
 ``StreamMux`` fans events out to per-request callbacks (the serving-layer
 analogue of an SSE connection per client).
+
+Events are strictly per TOKEN, never per step: a speculative verify step
+emits up to ``k + 1`` accepted tokens at once, which arrive as ``k + 1``
+consecutive events sharing one ``step`` value with contiguous ``index``
+values.  Consumers that need latency accounting should use the telemetry
+layer's per-token timestamps (``RequestTrace.token_times``), which treat a
+same-step burst as genuine ~0s inter-token gaps.
 """
 
 from __future__ import annotations

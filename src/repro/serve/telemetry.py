@@ -55,6 +55,10 @@ class RequestTrace:
     truncated: bool = False
     timed_out: bool = False
     cancelled: bool = False
+    # wall-clock timestamp of EVERY emitted token: a speculative verify
+    # step emits up to k+1 tokens at once, so per-step timing would
+    # overstate ITL — percentiles pool the consecutive gaps instead
+    token_times: List[float] = field(default_factory=list)
 
     @property
     def ttft_steps(self) -> Optional[int]:
@@ -75,6 +79,14 @@ class RequestTrace:
             return None
         return (self.finish_time - self.first_token_time) \
             / (self.n_tokens - 1)
+
+    @property
+    def itl_gaps(self) -> List[float]:
+        """Consecutive per-token gaps — the true ITL samples.  Tokens
+        emitted by one verify step share a timestamp (a client sees them
+        arrive together), so their gaps are genuine ~0s."""
+        return [b - a for a, b in zip(self.token_times,
+                                      self.token_times[1:])]
 
 
 class ServeTelemetry:
@@ -99,6 +111,12 @@ class ServeTelemetry:
         # per-step SOL-predicted interconnect traffic of the TP decode
         # path (0 when unsharded) — sharding.plan.ShardPlan prices it
         self.wire_bytes_total = 0
+        # speculative decoding: emitted tokens per step (> steps when spec
+        # is winning) and the measured draft acceptance counters that the
+        # tuner's veto and the SOL capacity model both consume
+        self.emitted_total = 0
+        self.spec_drafted_total = 0
+        self.spec_accepted_total = 0
 
     # ---- request lifecycle ------------------------------------------------
     def _trace(self, rid: int) -> RequestTrace:
@@ -124,9 +142,11 @@ class ServeTelemetry:
     def on_token(self, rid: int, step: int) -> None:
         t = self._trace(rid)
         t.n_tokens += 1
+        now = self._clock()
+        t.token_times.append(now)
         if t.first_token_step < 0:
             t.first_token_step = step
-            t.first_token_time = self._clock()
+            t.first_token_time = now
 
     def on_finish(self, rid: int, step: int, *,
                   truncated: bool = False, timed_out: bool = False,
@@ -147,7 +167,8 @@ class ServeTelemetry:
     def on_step(self, *, queue_depth: int, active_slots: int,
                 num_slots: int, seconds: float,
                 dispatches: int = 0, weight_bytes: int = 0,
-                wire_bytes: int = 0) -> None:
+                wire_bytes: int = 0, emitted_tokens: int = 0,
+                spec_drafted: int = 0, spec_accepted: int = 0) -> None:
         self.steps += 1
         self.num_slots = num_slots
         self.queue_depth_samples.append(queue_depth)
@@ -156,6 +177,9 @@ class ServeTelemetry:
         self.dispatch_total += dispatches
         self.weight_bytes_total += weight_bytes
         self.wire_bytes_total += wire_bytes
+        self.emitted_total += emitted_tokens
+        self.spec_drafted_total += spec_drafted
+        self.spec_accepted_total += spec_accepted
 
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -164,8 +188,10 @@ class ServeTelemetry:
                       if t.ttft_steps is not None]
         ttft_s = [t.ttft_seconds for t in done
                   if t.ttft_seconds is not None]
-        itl = [t.mean_itl_seconds for t in done
-               if t.mean_itl_seconds is not None]
+        # pooled consecutive per-token gaps, not per-request means: a
+        # multi-token verify step emits a same-timestamp burst whose ~0s
+        # gaps are real, and per-step timing would overstate the tail
+        itl = [g for t in done for g in t.itl_gaps]
         total_tokens = sum(t.n_tokens for t in self.traces.values())
         total_time = sum(self.step_seconds)
         util = (sum(self.active_slot_samples)
@@ -204,6 +230,13 @@ class ServeTelemetry:
                                       if self.steps else 0.0),
             "wire_bytes_per_step": (self.wire_bytes_total / self.steps
                                     if self.steps else 0.0),
+            "tokens_per_step": (self.emitted_total / self.steps
+                                if self.steps else 0.0),
+            "spec_drafted": self.spec_drafted_total,
+            "spec_accepted": self.spec_accepted_total,
+            "spec_accept_ratio": (self.spec_accepted_total
+                                  / self.spec_drafted_total
+                                  if self.spec_drafted_total else 0.0),
             "queue_depth_mean": (sum(self.queue_depth_samples)
                                  / len(self.queue_depth_samples)
                                  if self.queue_depth_samples else 0.0),
@@ -232,10 +265,13 @@ def fleet_summary(telemetries: List["ServeTelemetry"]) -> Dict[str, object]:
     ttft_steps = [float(t.ttft_steps) for t in done
                   if t.ttft_steps is not None]
     ttft_s = [t.ttft_seconds for t in done if t.ttft_seconds is not None]
-    itl = [t.mean_itl_seconds for t in done
-           if t.mean_itl_seconds is not None]
+    itl = [g for t in done for g in t.itl_gaps]
     total_tokens = sum(t.n_tokens for t in traces)
     total_time = sum(sum(tel.step_seconds) for tel in telemetries)
+    total_steps = sum(tel.steps for tel in telemetries)
+    emitted = sum(tel.emitted_total for tel in telemetries)
+    drafted = sum(tel.spec_drafted_total for tel in telemetries)
+    accepted = sum(tel.spec_accepted_total for tel in telemetries)
     return {
         "replicas": len(telemetries),
         "requests": len(traces),
@@ -245,10 +281,12 @@ def fleet_summary(telemetries: List["ServeTelemetry"]) -> Dict[str, object]:
         "truncated": sum(1 for t in traces if t.truncated),
         "timed_out": sum(1 for t in traces if t.timed_out),
         "cancelled": sum(1 for t in traces if t.cancelled),
-        "steps": sum(tel.steps for tel in telemetries),
+        "steps": total_steps,
         "tokens": total_tokens,
         "throughput_tok_s": (total_tokens / total_time
                              if total_time > 0 else 0.0),
+        "tokens_per_step": emitted / total_steps if total_steps else 0.0,
+        "spec_accept_ratio": accepted / drafted if drafted else 0.0,
         "ttft_steps_p50": percentile(ttft_steps, 50),
         "ttft_steps_p95": percentile(ttft_steps, 95),
         "ttft_s_p50": percentile(ttft_s, 50),

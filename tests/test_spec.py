@@ -1,0 +1,524 @@
+"""Speculative multi-token decoding: drafters, SOL costing, the tune
+axis, engine correctness (bitwise-equal outputs + exact rollback), the
+integrity gate's greedy-oracle defence, and the telemetry/capacity
+plumbing that prices variable tokens-per-step.
+
+The correctness contract under test: the engine accepts the longest
+drafted prefix matching greedy argmax token-for-token and rolls back all
+rejected state, so outputs are bitwise-equal to plain greedy decode.  At
+draft depth ``k <= 4`` that equality holds exactly on every family here;
+wider verify rows can flip near-tie argmaxes via float reassociation
+(see the README caveat), which is why the suite pins ``k = 4``.
+"""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_arch  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.serve import Request, ServeEngine  # noqa: E402
+from repro.serve.spec import (AdversarialDrafter, NGramDrafter,  # noqa: E402
+                              build_drafter, parse_spec)
+
+ARCH_BY_FAMILY = {
+    "dense": "qwen2-0.5b",
+    "ssm": "mamba2-1.3b",
+    "hybrid": "zamba2-2.7b",
+}
+
+_MODELS = {}
+
+
+def family_model(family):
+    if family not in _MODELS:
+        cfg = get_arch(ARCH_BY_FAMILY[family]).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODELS[family] = (model, params)
+    return _MODELS[family]
+
+
+def motif_requests(vocab, n=2, max_new=24, seed0=517):
+    """Periodic prompts (4-token motif x 8): the drafter locks on from
+    the first decode step, so both accept and commit paths run hot."""
+    reqs = []
+    for j in range(n):
+        rng = np.random.default_rng(seed0 + j)
+        motif = list(map(int, rng.integers(1, vocab, 4)))
+        reqs.append(Request(rid=j, prompt=motif * 8, max_new_tokens=max_new))
+    return reqs
+
+
+def random_requests(vocab, n=2, max_new=16, seed=3):
+    """Free-form prompts: low acceptance, so rejection/rollback runs."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=100 + j,
+                    prompt=list(map(int, rng.integers(1, vocab, 8))),
+                    max_new_tokens=max_new)
+            for j in range(n)]
+
+
+class TestParseSpec:
+    def test_accepted_forms(self):
+        assert parse_spec(None) is None
+        assert parse_spec("off") is None
+        assert parse_spec("") is None
+        assert parse_spec(0) is None
+        assert parse_spec(4) == ("ngram", 4)
+        assert parse_spec("4") == ("ngram", 4)
+        assert parse_spec("ngram:2") == ("ngram", 2)
+        assert parse_spec("draft_model:3") == ("draft_model", 3)
+
+    def test_bad_values_fail_loudly(self):
+        with pytest.raises(ValueError):
+            parse_spec("telepathy:4")
+        with pytest.raises(ValueError):
+            parse_spec("ngram:lots")
+
+
+class TestSOLCosting:
+    def test_expected_tokens_envelope(self):
+        from repro.core.sol.roofline import spec_expected_tokens
+        assert spec_expected_tokens(4, 0.0) == 1.0
+        assert spec_expected_tokens(4, 1.0) == 5.0
+        assert spec_expected_tokens(0, 0.9) == 1.0
+        # E(k, p) = sum_{i=0..k} p^i, strictly increasing in both args
+        assert spec_expected_tokens(4, 0.5) == pytest.approx(
+            sum(0.5 ** i for i in range(5)))
+        assert spec_expected_tokens(4, 0.6) > spec_expected_tokens(4, 0.5)
+        assert spec_expected_tokens(6, 0.5) > spec_expected_tokens(4, 0.5)
+
+    def test_roofline_speedup_memory_bound(self):
+        from repro.core.sol.roofline import spec_decode_roofline
+        # decode shape: weights dominate, verify ~ greedy, so speedup
+        # tracks E(k, p) at high acceptance and collapses at p ~ 0
+        est = spec_decode_roofline(4, 0.95, flops_per_token=2e6,
+                                   weight_bytes=1e6)
+        assert est.speedup > 2.0
+        assert est.verify.t_sol < 2 * est.greedy.t_sol
+        dud = spec_decode_roofline(4, 0.01, flops_per_token=2e6,
+                                   weight_bytes=1e6)
+        assert dud.speedup < 1.2
+
+    def test_candidates_default_first(self):
+        from repro.core import tune
+        cands = tune.spec_candidates("decode_block")
+        assert cands[0].as_dict() == {"spec": "off"}
+        rest = [c.as_dict() for c in cands[1:]]
+        # draft_model is opt-in (needs a second param set), not enumerated
+        assert {d["spec"] for d in rest} == {"ngram"}
+        assert all(d["k"] > 0 for d in rest)
+
+    def test_prune_spec_keeps_off_drops_low_acceptance(self):
+        from repro.core import tune
+        cands = tune.spec_candidates("decode_block")
+        kept = tune.prune_spec(cands, accept_rate=0.9,
+                               flops_per_token=2e6, weight_bytes=1e6)
+        assert kept[0][0].as_dict() == {"spec": "off"}
+        assert len(kept) > 1                 # high acceptance: spec pays
+        dead = tune.prune_spec(cands, accept_rate=0.0,
+                               flops_per_token=2e6, weight_bytes=1e6)
+        assert [c.as_dict() for c, _ in dead] == [{"spec": "off"}]
+
+
+class TestNGramDrafter:
+    def test_longest_suffix_continuation(self):
+        d = NGramDrafter()
+        #          0  1  2  3  4  5  6  7
+        ctx = [5, 8, 9, 2, 5, 8, 9, 4]
+        # trailing 1-gram "4" never reoccurred earlier -> fall through to
+        # nothing at n=3..1?  no: n is the MATCH length against the tail;
+        # tail (9, 4) has no earlier occurrence, tail (4,) neither -> []
+        assert d.propose(ctx, 3) == []
+        ctx = [5, 8, 9, 2, 5, 8, 9]
+        # tail (5, 8, 9) reoccurred at 0; continuation was 2, then 5, 8
+        assert d.propose(ctx, 3) == [2, 5, 8]
+
+    def test_periodic_extension_past_context_end(self):
+        d = NGramDrafter()
+        ctx = [7, 3, 7, 3, 7, 3]
+        # period 2: the proposal extends the cycle beyond the context
+        assert d.propose(ctx, 5) == [7, 3, 7, 3, 7]
+
+    def test_min_ngram_gates_short_matches(self):
+        ctx = [5, 8, 9, 2, 9]           # only a 1-gram match (the 9)
+        assert NGramDrafter().propose(ctx, 2) == [2, 9]
+        assert NGramDrafter(min_ngram=2).propose(ctx, 2) == []
+
+    def test_stats_count_calls_and_proposals(self):
+        d = NGramDrafter()
+        d.propose([1, 2, 1], 4)
+        d.propose([3], 4)               # too short: no proposal
+        s = d.stats()
+        assert s["calls"] == 2 and s["proposed"] == 4
+
+    def test_build_drafter_names(self):
+        assert build_drafter("ngram").name == "ngram"
+        assert build_drafter("adversarial", vocab=16).self_verifying
+        with pytest.raises(ValueError):
+            build_drafter("nope")
+
+
+class _OracleDrafter(NGramDrafter):
+    """Proposes the TRUE greedy continuation (precomputed per prompt),
+    optionally corrupting every ``wrong_every``-th call — a deterministic
+    way to drive the accept/commit path on families whose free-running
+    output is aperiodic (the n-gram drafter cannot predict a chaotic
+    random-init SSM)."""
+
+    def __init__(self, continuations, wrong_every=0):
+        super().__init__()
+        # {prompt tuple: full greedy out_tokens}
+        self.continuations = {tuple(k): list(v)
+                              for k, v in continuations.items()}
+        self.wrong_every = wrong_every
+
+    def propose(self, context, k):
+        self.calls += 1
+        ctx = [int(t) for t in context]
+        for prompt, out in self.continuations.items():
+            n = len(prompt)
+            if tuple(ctx[:n]) == prompt and ctx[n:] == out[:len(ctx) - n]:
+                done = len(ctx) - n
+                drafts = out[done:done + k]
+                if self.wrong_every and self.calls % self.wrong_every == 0:
+                    drafts = [(t + 1) % 499 for t in drafts]
+                self.proposed += len(drafts)
+                return drafts
+        return []
+
+
+class TestSpecBitwiseEquality:
+    def test_dense_matches_greedy_on_repetitive_workload(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        a = motif_requests(vocab)
+        b = copy.deepcopy(a)
+        eng_s = ServeEngine(model, params, max_batch=2, max_len=72,
+                            spec_decode="ngram:4")
+        eng_s.run(a)
+        eng_g = ServeEngine(model, params, max_batch=2, max_len=72,
+                            spec_decode="off")
+        eng_g.run(b)
+        assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+        assert eng_s.metrics["spec_accepted_tokens"] > 0
+        assert eng_s.metrics["steps"] < eng_g.metrics["steps"]
+        assert eng_s.spec_mode == "prefix"
+
+    @pytest.mark.parametrize("family", ["ssm", "hybrid"])
+    @pytest.mark.parametrize("wrong_every", [0, 3])
+    def test_replay_families_accept_with_oracle_drafter(self, family,
+                                                        wrong_every):
+        """Replay-mode commit (and, with ``wrong_every``, the mixed
+        accept-then-reject path) must preserve bitwise equality while
+        accepting tokens and saving steps."""
+        model, params = family_model(family)
+        vocab = model.cfg.vocab_size
+        b = motif_requests(vocab)
+        eng_g = ServeEngine(model, params, max_batch=2, max_len=72,
+                            spec_decode="off")
+        eng_g.run(b)
+        oracle = _OracleDrafter({tuple(r.prompt): r.out_tokens for r in b},
+                                wrong_every=wrong_every)
+        a = motif_requests(vocab)
+        eng_s = ServeEngine(model, params, max_batch=2, max_len=72,
+                            spec_decode="ngram:4", drafter=oracle)
+        assert eng_s.spec_mode == "replay"
+        eng_s.run(a)
+        assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+        assert eng_s.metrics["spec_accepted_tokens"] > 0
+        assert eng_s.metrics["steps"] < eng_g.metrics["steps"]
+        if wrong_every:
+            assert eng_s.metrics["spec_rollbacks"] > 0
+
+    @pytest.mark.parametrize("family", ["dense", "ssm"])
+    def test_matches_greedy_with_rejections(self, family):
+        """Free-form prompts: most drafts are wrong, so the rollback path
+        (not just the accept path) must preserve greedy equality."""
+        model, params = family_model(family)
+        vocab = model.cfg.vocab_size
+        a = random_requests(vocab, max_new=40)
+        b = copy.deepcopy(a)
+        eng_s = ServeEngine(model, params, max_batch=2, max_len=64,
+                            spec_decode="ngram:4")
+        eng_s.run(a)
+        ServeEngine(model, params, max_batch=2, max_len=64,
+                    spec_decode="off").run(b)
+        assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+        assert eng_s.metrics["spec_rollbacks"] > 0
+
+
+class _WrongDrafter(NGramDrafter):
+    """Proposes confidently and is always wrong: every draft is rejected,
+    so every drafting step exercises a full rollback."""
+
+    def __init__(self, vocab):
+        super().__init__()
+        self.vocab = vocab
+
+    def propose(self, context, k):
+        last = int(context[-1]) if len(context) else 0
+        return [(last + 1 + i) % self.vocab for i in range(k)]
+
+
+class TestRollbackRestoresState:
+    @pytest.mark.parametrize("family", ["dense", "ssm"])
+    def test_all_rejected_still_bitwise_and_slots_reusable(self, family):
+        model, params = family_model(family)
+        vocab = model.cfg.vocab_size
+        a = motif_requests(vocab, max_new=12)
+        b = copy.deepcopy(a)
+        eng_s = ServeEngine(model, params, max_batch=2, max_len=60,
+                            spec_decode="ngram:4",
+                            drafter=_WrongDrafter(vocab))
+        eng_s.run(a)
+        eng_g = ServeEngine(model, params, max_batch=2, max_len=60,
+                            spec_decode="off")
+        eng_g.run(b)
+        assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+        assert eng_s.metrics["spec_accepted_tokens"] == 0
+        assert eng_s.metrics["spec_rollbacks"] > 0
+        # the rolled-back cache must leave NO residue: a second wave on
+        # the same engines (reusing the slots) stays bitwise-equal too
+        a2 = random_requests(vocab, seed=9)
+        b2 = copy.deepcopy(a2)
+        eng_s.run(a2)
+        eng_g.run(b2)
+        assert [r.out_tokens for r in a2] == [r.out_tokens for r in b2]
+
+    def test_prefix_rewind_restores_positions(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        eng_s = ServeEngine(model, params, max_batch=2, max_len=60,
+                            spec_decode="ngram:4",
+                            drafter=_WrongDrafter(vocab))
+        eng_s.run(motif_requests(vocab, max_new=12))
+        eng_g = ServeEngine(model, params, max_batch=2, max_len=60,
+                            spec_decode="off")
+        eng_g.run(motif_requests(vocab, max_new=12))
+
+        def pos_leaves(cache):
+            out = []
+            jax.tree_util.tree_map_with_path(
+                lambda p, leaf: out.append(np.asarray(leaf))
+                if str(getattr(p[-1], "key", p[-1])) == "pos" else None,
+                cache)
+            return out
+
+        for ps, pg in zip(pos_leaves(eng_s.cache), pos_leaves(eng_g.cache)):
+            np.testing.assert_array_equal(ps, pg)
+
+
+class TestSpecTuneAxis:
+    dims = property(lambda self: (family_model("dense")[0].cfg.d_model,
+                                  family_model("dense")[0].cfg.d_ff))
+    dtype = property(
+        lambda self: family_model("dense")[0].cfg.compute_dtype)
+
+    def _engine(self, spec_decode=None, **kw):
+        model, params = family_model("dense")
+        return ServeEngine(model, params, max_batch=2, max_len=48,
+                           spec_decode=spec_decode, **kw)
+
+    def test_off_by_default_when_unmeasured(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_SPEC", raising=False)
+        from repro.core import tune
+        assert tune.tuned_spec("decode_block", self.dims, self.dtype) is None
+        assert self._engine().spec is None
+
+    def test_measured_record_turns_spec_on(self, tmp_path, monkeypatch):
+        """The lever is lossless, so unlike quant/shard a measured record
+        may flip the default ON, not only veto it."""
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_SPEC", raising=False)
+        from repro.core import tune
+        tune.record_spec_measurement("decode_block", self.dims,
+                                     self.dtype,
+                                     spec_best="ngram", k=4,
+                                     accept_rate=0.9)
+        eng = self._engine()
+        assert eng.spec == ("ngram", 4)
+        # the tuned acceptance rate prices expected tokens per step
+        assert eng.expected_tokens_per_step == pytest.approx(
+            sum(0.9 ** i for i in range(5)))
+
+    def test_veto_flips_off_but_explicit_forces(self, tmp_path,
+                                                monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_SPEC", raising=False)
+        from repro.core import tune
+        tune.record_spec_measurement("decode_block", self.dims,
+                                     self.dtype,
+                                     spec_best="off", accept_rate=0.05)
+        assert self._engine().spec is None
+        forced = self._engine(spec_decode="ngram:4")
+        assert forced.spec == ("ngram", 4)
+        assert forced.model.cfg.spec_decode == "ngram:4"
+
+    def test_escape_hatch_beats_everything(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.setenv("REPRO_SPEC", "off")
+        from repro.core import tune
+        tune.record_spec_measurement("decode_block", self.dims,
+                                     self.dtype,
+                                     spec_best="ngram", k=4,
+                                     accept_rate=0.9)
+        assert tune.tuned_spec("decode_block", self.dims, self.dtype) is None
+        assert self._engine().spec is None
+        assert self._engine(spec_decode="ngram:4").spec is None
+
+    def test_sliding_window_structural_gate(self, tmp_path, monkeypatch):
+        """A windowed KV ring evicts entries on write, so drafted tokens
+        cannot be rolled back — the structural gate beats an explicit
+        request."""
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_SPEC", raising=False)
+        cfg = dataclasses.replace(get_arch("qwen2-0.5b").reduced(),
+                                  sliding_window=8)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                          spec_decode="ngram:4")
+        assert eng.spec is None
+
+
+class TestAdversarialDrafterQuarantine:
+    def test_self_verifying_drafter_diverges_and_is_quarantined(
+            self, tmp_path, monkeypatch):
+        """The planted gaming mode end-to-end: a drafter that claims its
+        tokens need no verification books a perfect acceptance rate, but
+        the greedy-oracle check quarantines the recorded config and the
+        tuner stops serving it."""
+        monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path))
+        monkeypatch.delenv("REPRO_SPEC", raising=False)
+        monkeypatch.delenv("REPRO_INTEGRITY", raising=False)
+        from repro.core import tune
+        from repro.core.integrity import (QUARANTINE, gate_spec_claim,
+                                          global_ledger, ledger_key)
+
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        a = motif_requests(vocab, max_new=12)
+        b = copy.deepcopy(a)
+        eng = ServeEngine(model, params, max_batch=2, max_len=60,
+                          spec_decode="ngram:4",
+                          drafter=AdversarialDrafter(vocab=vocab))
+        assert eng.spec_trusted
+        eng.run(a)
+        ServeEngine(model, params, max_batch=2, max_len=60,
+                    spec_decode="off").run(b)
+        spec_toks = [t for r in a for t in r.out_tokens]
+        greedy_toks = [t for r in b for t in r.out_tokens]
+        assert spec_toks != greedy_toks, \
+            "the adversarial drafter must actually corrupt outputs"
+
+        # the attack recorded its fake verdict into the tuning cache
+        dims = (model.cfg.d_model, model.cfg.d_ff)
+        dtype = model.cfg.compute_dtype
+        tune.record_spec_measurement("decode_block", dims, dtype,
+                                     spec_best="ngram", k=4,
+                                     accept_rate=1.0, speedup=5.0)
+        best = tune.lookup("spec:decode_block", dims, dtype)
+        assert best is not None
+
+        verdict = gate_spec_claim("decode_block", spec_tokens=spec_toks,
+                                  greedy_tokens=greedy_toks, config=best,
+                                  accept_rate=1.0)
+        assert verdict.decision == QUARANTINE
+        assert "oracle_mismatch" in verdict.reason_codes
+        assert "diverges_at" in verdict.checks[0].evidence
+
+        global_ledger().quarantine(
+            ledger_key("spec:decode_block", dims, dtype), best, verdict)
+        assert tune.tuned_spec("decode_block", dims, dtype) is None
+
+    def test_gate_accepts_honest_claim(self):
+        from repro.core.integrity import ACCEPT, gate_spec_claim
+        toks = [1, 2, 3, 4]
+        v = gate_spec_claim("decode_block", spec_tokens=toks,
+                            greedy_tokens=list(toks), accept_rate=0.8)
+        assert v.decision == ACCEPT
+
+
+class TestSpecTelemetry:
+    def test_tokens_per_step_and_accept_ratio(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        eng = ServeEngine(model, params, max_batch=2, max_len=72,
+                          spec_decode="ngram:4")
+        reqs = motif_requests(vocab)
+        eng.run(reqs)
+        summ = eng.telemetry.summary()
+        assert summ["tokens_per_step"] > 1.0
+        assert 0.0 < summ["spec_accept_ratio"] <= 1.0
+        assert summ["spec_accepted"] == eng.metrics["spec_accepted_tokens"]
+
+    def test_per_token_timestamps_cover_burst_emissions(self):
+        """A multi-token verify step must stamp EVERY emitted token, so
+        ITL gaps include the ~0s intra-burst gaps (per-step timing would
+        overstate the tail)."""
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        eng = ServeEngine(model, params, max_batch=2, max_len=72,
+                          spec_decode="ngram:4")
+        reqs = motif_requests(vocab)
+        eng.run(reqs)
+        for r in reqs:
+            trace = eng.telemetry.traces[r.rid]
+            assert len(trace.token_times) == len(r.out_tokens)
+            assert len(trace.itl_gaps) == len(r.out_tokens) - 1
+            assert all(g >= 0 for g in trace.itl_gaps)
+
+    def test_gateway_spec_gauges(self):
+        from repro.core.obs.metrics import MetricsRegistry
+        from repro.serve import build_replicated_router
+        from repro.serve.gateway import update_fleet_gauges
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        router = build_replicated_router(model, params, replicas=1,
+                                         max_batch=2, max_len=72,
+                                         spec_decode="ngram:4")
+        reqs = motif_requests(vocab)
+        tickets = [router.submit(r.prompt,
+                                 max_new_tokens=r.max_new_tokens)
+                   for r in reqs]
+        router.run_until_complete(tickets, max_ticks=10000)
+        reg = MetricsRegistry()
+        update_fleet_gauges(router, reg)
+        text = reg.render_prometheus()
+        assert "repro_tokens_per_step" in text
+        assert "repro_spec_accept_ratio" in text
+        tps = [ln for ln in text.splitlines()
+               if ln.startswith("repro_tokens_per_step")][0]
+        assert float(tps.split()[-1]) > 1.0
+
+
+class TestCapacityPricing:
+    def test_sol_scheduler_itl_budget_scales(self):
+        from repro.serve import EngineView, SOLCapacityModel, SOLScheduler
+        cfg = get_arch("qwen2-0.5b").reduced()
+        view = EngineView(step=0, free_slots=1, decode_positions=[16],
+                          decode_slos=["interactive"], prefill_backlog=0)
+        base = SOLScheduler(SOLCapacityModel(cfg))
+        spec = SOLScheduler(SOLCapacityModel(
+            cfg, expected_tokens_per_step=4.0))
+        assert spec._itl_budget(view) == pytest.approx(
+            4.0 * base._itl_budget(view))
+
+    def test_fleet_drain_scales_with_expected_tokens(self):
+        from repro.core.sol.fleet import FleetCapacityModel, ReplicaLoad
+        from repro.serve import SOLCapacityModel
+        cfg = get_arch("qwen2-0.5b").reduced()
+        cap = SOLCapacityModel(cfg)
+        load = ReplicaLoad(replica_id=0, free_slots=0, queue_depth=2,
+                           decode_positions=[8, 8], prefill_backlog=0)
+        greedy = FleetCapacityModel(cap)
+        spec = FleetCapacityModel(cap, expected_tokens_per_step=4.0)
+        assert spec.drain_estimate_s(load) == pytest.approx(
+            greedy.drain_estimate_s(load) / 4.0)
