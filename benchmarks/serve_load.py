@@ -24,6 +24,7 @@ Assertions (exit non-zero on violation; CI runs ``--smoke``):
 
     PYTHONPATH=src python benchmarks/serve_load.py --smoke
     PYTHONPATH=src python benchmarks/serve_load.py --spec-only
+    PYTHONPATH=src python benchmarks/serve_load.py --paged-only
 """
 
 import argparse
@@ -274,6 +275,190 @@ def bench_spec(cfg, model, params, *, max_batch):
     return out
 
 
+def bench_paged(args):
+    """Block-paged KV/SSM cache: the HBM-capacity lever measured end to
+    end.
+
+    What is asserted (the paged contract):
+      * CAPACITY — at equal simulated HBM (paged pool bytes == the dense
+        engine's KV allocation) the paged engine runs >= 4x the concurrent
+        requests on a short-context workload: dense pins max_len rows per
+        slot, paged pins pages for tokens actually in flight.
+      * BITWISE — per-request outputs are identical to the dense engine on
+        a mixed-context workload for every family (dense / ssm / hybrid):
+        pages gather into the same rows the dense kernel reads, so the
+        math never changes.
+      * SOL AUDIT — ``SOLCapacityModel.predicted_pool_bytes`` over the
+        requests' final contexts lands within 20% of the pool's measured
+        peak bytes (exact-dtype page formulas, no fudge factors).
+      * ZERO-COPY PREFIX — a shared-prefix burst hits the prefix cache by
+        page-table splice: hits > 0 with ``host_copies == 0``.
+      * PRICED REJECTION — a request that cannot fit the pool is refused
+        at the router with reason ``pool_exhausted`` and a bytes-priced
+        ``Retry-After`` > 0 (deficit / SOL byte-free rate).
+    """
+    from repro.serve import SOLCapacityModel
+
+    page = 8
+    max_len = 64
+    chunk = 8
+    families = {"dense": args.arch, "ssm": "mamba2-1.3b",
+                "hybrid": "zamba2-2.7b"}
+    out = {"page_size": page, "families": {}}
+
+    def mixed_workload(cfg, n_short=5, n_long=3, seed=0):
+        rng = np.random.default_rng(seed)
+
+        def toks(n):
+            return list(map(int, rng.integers(1, cfg.vocab_size, n)))
+
+        reqs = [Request(rid=i, prompt=toks(6), max_new_tokens=6)
+                for i in range(n_short)]
+        reqs += [Request(rid=n_short + i, prompt=toks(20), max_new_tokens=4)
+                 for i in range(n_long)]
+        return reqs
+
+    for family, arch in families.items():
+        cfg_f = get_arch(arch).reduced()
+        model_f = build_model(cfg_f)
+        params_f = model_f.init(jax.random.PRNGKey(0))
+        reqs = mixed_workload(cfg_f)
+        a = copy.deepcopy(reqs)
+        b = copy.deepcopy(reqs)
+        ServeEngine(model_f, params_f, max_batch=8, max_len=max_len,
+                    chunk_size=chunk).run(a)
+        eng = ServeEngine(model_f, params_f, max_batch=8, max_len=max_len,
+                          chunk_size=chunk, page_size=page)
+        assert eng.paged, f"{family}: paged engine did not enable paging"
+        eng.run(b)
+        mism = [ra.rid for ra, rb in zip(a, b)
+                if ra.out_tokens != rb.out_tokens]
+        assert not mism, \
+            f"{family}: paged outputs diverge from dense for rids {mism}"
+
+        # SOL audit on the same run: every request was concurrently
+        # resident at its final context at some point near the end, so
+        # the predicted pool bytes of the final contexts must bracket the
+        # measured peak within 20%
+        cap_f = SOLCapacityModel(cfg_f, efficiency=0.5)
+        contexts = [len(r.prompt) + len(r.out_tokens) for r in b]
+        predicted = cap_f.predicted_pool_bytes(contexts, page)
+        measured = eng.pool.peak_used_bytes
+        err = abs(predicted - measured) / max(measured, 1)
+        print(f"paged [{family:6s}]: bitwise-equal ({len(b)} requests), "
+              f"SOL pool bytes {predicted} vs measured peak {measured} "
+              f"({100 * err:.1f}% off)")
+        assert err <= 0.20, \
+            f"{family}: SOL pool-bytes prediction {predicted} is more " \
+            f"than 20% from measured peak {measured}"
+        out["families"][family] = {
+            "requests": len(b), "bitwise_equal": True,
+            "pool_bytes_sol": int(predicted),
+            "pool_bytes_peak_measured": int(measured),
+            "pool_bytes_err_pct": round(100 * err, 2),
+        }
+
+    # ---- capacity at equal simulated HBM (attention family) -------------
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dense_slots = 2
+    pool_pages = dense_slots * max_len // page   # same KV bytes as dense
+    n_conc = 16
+    rng = np.random.default_rng(1)
+    conc = [Request(rid=i,
+                    prompt=list(map(int, rng.integers(1, cfg.vocab_size,
+                                                      6))),
+                    max_new_tokens=6)
+            for i in range(n_conc)]
+    eng_d = ServeEngine(model, params, max_batch=dense_slots,
+                        max_len=max_len, chunk_size=chunk)
+    eng_d.run(copy.deepcopy(conc))
+    eng_p = ServeEngine(model, params, max_batch=n_conc, max_len=max_len,
+                        chunk_size=chunk, page_size=page,
+                        pool_pages=pool_pages)
+    dense_kv = eng_d.cache["layers"]["k"].nbytes \
+        + eng_d.cache["layers"]["v"].nbytes
+    assert eng_p.pool.total_bytes == dense_kv, \
+        "simulated HBM budgets must match"
+    eng_p.run(copy.deepcopy(conc))
+    peak_d = max(eng_d.telemetry.active_slot_samples)
+    peak_p = max(eng_p.telemetry.active_slot_samples)
+    print(f"paged capacity: {peak_p} concurrent requests vs dense "
+          f"{peak_d} at equal HBM ({eng_p.pool.total_bytes} bytes: "
+          f"{pool_pages} pages of {page} tokens vs {dense_slots} dense "
+          f"slots x {max_len} rows) -> {peak_p / peak_d:.1f}x")
+    assert peak_p >= 4 * peak_d, \
+        f"paged engine must admit >= 4x concurrent requests at equal " \
+        f"HBM (got {peak_p} vs dense {peak_d})"
+
+    # ---- zero-copy prefix sharing ---------------------------------------
+    rng = np.random.default_rng(2)
+    system = list(map(int, rng.integers(1, cfg.vocab_size, 2 * chunk)))
+    burst = [Request(rid=i,
+                     prompt=system + list(map(int, rng.integers(
+                         1, cfg.vocab_size, 3))),
+                     max_new_tokens=4)
+             for i in range(4)]
+    eng_pc = ServeEngine(model, params, max_batch=4, max_len=max_len,
+                         chunk_size=chunk, page_size=page,
+                         prefix_cache=PrefixCache(block=chunk))
+    on = copy.deepcopy(burst)
+    eng_pc.run(on)
+    off = copy.deepcopy(burst)
+    ServeEngine(model, params, max_batch=4, max_len=max_len,
+                chunk_size=chunk, page_size=page).run(off)
+    pc_stats = eng_pc.prefix_cache.stats()
+    assert eng_pc.metrics["prefix_hits"] > 0, \
+        f"shared-prefix burst produced no paged prefix hits: {pc_stats}"
+    assert pc_stats["host_copies"] == 0, \
+        f"paged prefix sharing must copy nothing to the host: {pc_stats}"
+    mism = [ra.rid for ra, rb in zip(off, on)
+            if ra.out_tokens != rb.out_tokens]
+    assert not mism, f"paged prefix cache changed outputs for rids {mism}"
+    print(f"paged prefix: {eng_pc.metrics['prefix_hits']} splice hits, "
+          f"{pc_stats['host_copies']} host copies, "
+          f"{eng_pc.metrics['prefix_tokens_reused']} tokens reused, "
+          f"outputs bit-identical to cache-off")
+
+    # ---- bytes-priced pool rejection ------------------------------------
+    from repro.serve import RouterRejected
+    router = build_replicated_router(
+        model, params, replicas=1, max_batch=4, max_len=max_len,
+        chunk_size=chunk, prefix_cache=False, page_size=page, pool_pages=4)
+    big = list(map(int, np.random.default_rng(3).integers(
+        1, cfg.vocab_size, 20)))
+    try:
+        router.submit(big, max_new_tokens=20)
+        raise AssertionError(
+            "a request larger than the page pool must be refused")
+    except RouterRejected as rej:
+        assert rej.reason == "pool_exhausted", rej.reason
+        assert rej.retry_after_s > 0, "Retry-After must be bytes-priced"
+        print(f"paged rejection: pool of 4 pages refuses a 5-page request"
+              f" with reason={rej.reason} retry_after="
+              f"{rej.retry_after_s:.3f}s")
+        rejection = {"reason": rej.reason,
+                     "retry_after_s": round(rej.retry_after_s, 4)}
+
+    out.update({
+        "capacity": {
+            "hbm_bytes": int(eng_p.pool.total_bytes),
+            "dense_slots": dense_slots,
+            "dense_peak_concurrency": int(peak_d),
+            "paged_peak_concurrency": int(peak_p),
+            "concurrency_ratio": round(peak_p / peak_d, 2),
+        },
+        "prefix": {
+            "hits": int(eng_pc.metrics["prefix_hits"]),
+            "host_copies": int(pc_stats["host_copies"]),
+            "tokens_reused": int(eng_pc.metrics["prefix_tokens_reused"]),
+        },
+        "rejection": rejection,
+    })
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -284,7 +469,17 @@ def main():
     ap.add_argument("--spec-only", action="store_true",
                     help="run only the speculative-decoding section "
                          "(CI spec-smoke mode)")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run only the block-paged-cache section "
+                         "(CI paged-smoke mode)")
     args = ap.parse_args()
+
+    if args.paged_only:
+        paged = bench_paged(args)
+        write_bench_json("paged", paged)
+        print("wrote BENCH_paged.json")
+        print("serve_load --paged-only: all assertions passed")
+        return
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)

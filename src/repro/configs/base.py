@@ -127,6 +127,21 @@ class ModelConfig:
     #                                  sliding windows, temperature > 0
     #                                  requests) always force it off, and
     #                                  REPRO_SPEC=off is the escape hatch.
+    page_size: int = 0               # block-paged decode cache: tokens per
+    #                                  KV page (0 = dense per-slot cache).
+    #                                  The engine allocates a global page
+    #                                  pool + int32 page table instead of
+    #                                  max_batch*max_len dense rows, so HBM
+    #                                  scales with TOKENS IN FLIGHT, not
+    #                                  worst-case context — 16-64 is the
+    #                                  sweet spot (smaller = less padding
+    #                                  waste, larger = smaller tables).
+    #                                  Outputs are bitwise-equal to dense
+    #                                  (pages gather to the same rows the
+    #                                  dense kernel reads); structural gates
+    #                                  (wrapping sliding windows, enc-dec
+    #                                  families) force it off, and
+    #                                  REPRO_PAGED=off is the escape hatch.
 
     # ---- derived -------------------------------------------------------
     @property

@@ -34,6 +34,12 @@ class ReplicaLoad:
     queue_depth: int = 0
     decode_positions: Tuple[int, ...] = ()
     prefill_backlog: int = 0
+    # block-paged cache pool (all 0 when the replica runs dense)
+    pages_free: int = 0
+    pages_reclaimable: int = 0
+    pages_total: int = 0
+    page_size: int = 0
+    state_pages_free: int = 0
 
 
 @dataclass(frozen=True)
@@ -114,6 +120,55 @@ class FleetCapacityModel:
                 best_id, best_score = load.replica_id, score
         return best_id
 
+    def page_demand(self, load: ReplicaLoad, prompt_tokens: int,
+                    max_new_tokens: int) -> Tuple[int, int]:
+        """(kv_pages, state_pages) the request would pin on this replica
+        at its maximum context.  (0, 0) when the replica runs dense."""
+        if not load.page_size or not load.pages_total:
+            return 0, 0
+        kv = self.capacity.page_demand(prompt_tokens + max_new_tokens,
+                                       load.page_size)
+        st = 1 if self.capacity.state_page_bytes() else 0
+        return kv, st
+
+    def pool_fits(self, load: ReplicaLoad, prompt_tokens: int,
+                  max_new_tokens: int) -> bool:
+        """HBM-capacity admission term: the request's worst-case page
+        demand must fit the replica's free + reclaimable pages.  Dense
+        replicas (no pool) always fit — their ceiling is slots."""
+        kv, st = self.page_demand(load, prompt_tokens, max_new_tokens)
+        return (kv <= load.pages_free + load.pages_reclaimable
+                and st <= load.state_pages_free)
+
+    def pool_deficit_bytes(self, load: ReplicaLoad, prompt_tokens: int,
+                           max_new_tokens: int) -> int:
+        """How many bytes short the replica's pool is of this request."""
+        kv, st = self.page_demand(load, prompt_tokens, max_new_tokens)
+        short_kv = max(0, kv - (load.pages_free + load.pages_reclaimable))
+        short_st = max(0, st - load.state_pages_free)
+        return int(short_kv * self.capacity.kv_page_bytes(load.page_size)
+                   + short_st * self.capacity.state_page_bytes())
+
+    def pool_retry_after_s(self, load: ReplicaLoad, prompt_tokens: int,
+                           max_new_tokens: int) -> float:
+        """Bytes-priced Retry-After: the deficit divided by the SOL rate
+        at which the pool frees bytes.  A finishing request releases its
+        share of the in-use pool, and requests finish about once per SOL
+        drain interval — so the free rate is (bytes in use / active
+        requests) / drain_estimate_s."""
+        deficit = self.pool_deficit_bytes(load, prompt_tokens,
+                                          max_new_tokens)
+        if deficit <= 0:
+            return 0.0
+        used_pages = max(load.pages_total - load.pages_free, 1)
+        in_use = used_pages * max(
+            self.capacity.kv_page_bytes(load.page_size),
+            self.capacity.state_page_bytes(), 1)
+        active = max(load.num_slots - load.free_slots, 1)
+        free_rate = (in_use / active) / max(
+            self.drain_estimate_s(load), 1e-9)
+        return min(max(deficit / max(free_rate, 1e-9), 0.01), 60.0)
+
     def drain_estimate_s(self, load: ReplicaLoad) -> float:
         """SOL estimate of the time until this replica frees one queue
         entry: one typical request's worth of loaded steps, divided by the
@@ -122,14 +177,21 @@ class FleetCapacityModel:
         return t * self.avg_request_steps / self.expected_tokens_per_step
 
     def verdict(self, loads: Sequence[ReplicaLoad], *,
-                prompt_tokens: int = 0,
+                prompt_tokens: int = 0, max_new_tokens: int = 0,
                 itl_budget_s: float = math.inf) -> FleetVerdict:
-        """Admit / saturated decision for one request.
+        """Admit / saturated / pool-exhausted decision for one request.
 
         Saturated when no replica can take it: every queue is at
         ``max_queue_per_replica``, or every replica with queue room is both
         slot-full and out of ITL headroom.  The Retry-After is the minimum
         over replicas of the SOL drain estimate.
+
+        A paged replica additionally needs the request's worst-case HBM
+        page demand to fit its pool (free + reclaimable prefix pages).
+        When compute capacity exists but no pool does, the verdict is
+        ``pool_exhausted`` and the Retry-After is BYTES-priced: the pool
+        deficit divided by the SOL-estimated byte-free rate — the client
+        learns how long until enough memory, not a magic constant.
         """
         if not loads:
             return FleetVerdict(False, reason="no_replicas",
@@ -140,9 +202,18 @@ class FleetCapacityModel:
             retry = min(self.drain_estimate_s(l) for l in loads)
             return FleetVerdict(False, reason="queue_full",
                                 retry_after_s=retry)
+        compute_ok = []
         for load in open_loads:
             if load.free_slots > 0 or \
                     self.headroom(load, itl_budget_s=itl_budget_s) > 0:
-                return FleetVerdict(True)
+                if self.pool_fits(load, prompt_tokens, max_new_tokens):
+                    return FleetVerdict(True)
+                compute_ok.append(load)
+        if compute_ok:
+            retry = min(self.pool_retry_after_s(l, prompt_tokens,
+                                                max_new_tokens)
+                        for l in compute_ok)
+            return FleetVerdict(False, reason="pool_exhausted",
+                                retry_after_s=retry)
         retry = min(self.drain_estimate_s(l) for l in open_loads)
         return FleetVerdict(False, reason="saturated", retry_after_s=retry)

@@ -73,6 +73,16 @@ def main():
                          "(\"ngram:4\" spells the drafter out), \"off\" "
                          "disables it; unset defers to the config + tuned "
                          "acceptance verdict (REPRO_SPEC=off overrides)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="block-paged decode cache: tokens per KV page "
+                         "(HBM scales with tokens in flight, not "
+                         "max_batch*max_context; outputs stay bitwise-"
+                         "equal to dense); unset defers to the config, 0 "
+                         "forces dense (REPRO_PAGED=off overrides)")
+    ap.add_argument("--max-context", type=int, default=None,
+                    help="per-request context ceiling (prompt + new "
+                         "tokens); with --page-size this bounds pages a "
+                         "request can pin, not a dense allocation")
     ap.add_argument("--tp-shards", type=int, default=None,
                     help="tensor-parallel shards for the decode path "
                          "(needs that many devices; on CPU set XLA_FLAGS="
@@ -108,12 +118,13 @@ def main():
                       for slo in SLO_CLASSES}
         router = build_replicated_router(
             model, params, replicas=args.replicas, max_batch=4,
-            max_len=64 if args.smoke else 256, chunk_size=args.chunk,
+            max_len=args.max_context or (64 if args.smoke else 256),
+            chunk_size=args.chunk,
             scheduler=args.scheduler, prefix_cache=args.prefix_cache,
             rate_limits=limits, max_queue_per_replica=args.max_queue,
             request_timeout_steps=args.deadline_steps,
             weight_dtype=args.weight_dtype, tp_shards=args.tp_shards,
-            spec_decode=args.spec_decode)
+            spec_decode=args.spec_decode, page_size=args.page_size)
         print(f"gateway: {args.replicas} replicas on "
               f"http://{args.host}:{args.port}  "
               f"(POST /v1/generate, WS /v1/stream, /healthz, /metrics, "
@@ -124,12 +135,13 @@ def main():
         return
 
     engine = ServeEngine(
-        model, params, max_batch=4, max_len=64,
+        model, params, max_batch=4, max_len=args.max_context or 64,
         prefill_mode=args.prefill, chunk_size=args.chunk,
         scheduler=args.scheduler,
         weight_dtype=args.weight_dtype,
         tp_shards=args.tp_shards,
         spec_decode=args.spec_decode,
+        page_size=args.page_size,
         prefix_cache=PrefixCache(block=args.chunk) if args.prefix_cache
         else None)
     if engine.model.cfg.weight_dtype != "none":
@@ -140,6 +152,14 @@ def main():
         print(f"tp_shards={engine.model.cfg.tp_shards} "
               f"({engine.wire_bytes_per_step / 1e3:.1f} KB SOL-predicted "
               f"interconnect traffic per decode step)")
+    if engine.paged:
+        st = engine.pool.stats()
+        print(f"page_size={engine.page_size} "
+              f"({st['pages_total']} KV pages + "
+              f"{st['state_pages_total']} state pages, "
+              f"{st['pool_total_bytes'] / 1e3:.1f} KB pool; HBM priced "
+              f"per token in flight, admission rejects with a bytes-"
+              f"priced Retry-After when the pool binds)")
     if engine.spec is not None:
         print(f"spec_decode={engine.model.cfg.spec_decode} "
               f"(E[tokens/step]={engine.expected_tokens_per_step:.2f} at "

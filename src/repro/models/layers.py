@@ -241,7 +241,8 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
                     kv_cache: Optional[Dict] = None,
                     xattn_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
                     flash_threshold: int = 2048, chunk_kv: int = 512,
-                    token_counts: Optional[jax.Array] = None):
+                    token_counts: Optional[jax.Array] = None,
+                    page_table: Optional[jax.Array] = None):
     """Self- or cross-attention with optional KV cache.
 
     kv_cache: {"k": (B, Smax, n_kv, D), "v": ..., "pos": scalar} for decode.
@@ -250,6 +251,12 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
         sq new tokens contributes only its first token_counts[b] tokens to
         the cache; the rest are padding (masked from attention, never
         written).  Requires kv_cache.
+    page_table: (B, max_pages) int32 physical-page indices into a block-
+        paged kv_cache {"k"/"v": (n_pages, page, n_kv, D)}; index == n_pages
+        marks an unmapped page.  The pool is gathered to the per-slot dense
+        view so the attention math is byte-identical to the dense cache,
+        and only the new chunk scatters back to its physical pages.
+        Requires token_counts; rolling-window caches stay dense.
     Returns (out, new_cache).
     """
     b, sq, _ = x.shape
@@ -282,7 +289,34 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
         q_abs = pos[:, None] + jnp.arange(sq)[None, :]          # (B, sq)
         q = rope(q, q_abs, rope_theta)
         k = rope(k, q_abs, rope_theta)
-        s_max = kv_cache["k"].shape[1]
+        if page_table is not None:
+            if window:
+                raise NotImplementedError(
+                    "paged KV caches do not compose with rolling windows; "
+                    "the engine keeps sliding-window models dense")
+            # paged: gather each slot's logical view from the global pool.
+            # Unmapped pages (sentinel index n_pages) gather as zeros; those
+            # columns sit at masked positions so they contribute exactly 0
+            # after the NEG_INF softmax, keeping outputs bitwise-equal to
+            # the dense cache.
+            n_pages, pg = kv_cache["k"].shape[0], kv_cache["k"].shape[1]
+            max_pages = page_table.shape[1]
+            s_max = max_pages * pg
+            j = jnp.arange(s_max)
+            phys = page_table[:, j // pg] * pg + (j % pg)        # (B, s_max)
+            flat_k = kv_cache["k"].reshape(
+                (n_pages * pg,) + kv_cache["k"].shape[2:])
+            flat_v = kv_cache["v"].reshape(
+                (n_pages * pg,) + kv_cache["v"].shape[2:])
+            cache_k = jnp.take(flat_k, phys.reshape(-1), axis=0, mode="fill",
+                               fill_value=0).reshape(
+                                   (b, s_max) + flat_k.shape[1:])
+            cache_v = jnp.take(flat_v, phys.reshape(-1), axis=0, mode="fill",
+                               fill_value=0).reshape(
+                                   (b, s_max) + flat_v.shape[1:])
+        else:
+            cache_k, cache_v = kv_cache["k"], kv_cache["v"]
+            s_max = cache_k.shape[1]
         slot_idx = jnp.arange(s_max)
         if window:
             p_prev = pos - 1          # newest absolute position cached
@@ -305,10 +339,10 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
                 & (i_idx[None, :, None] - i_idx[None, None, :] < window)
         n_rep = n_heads // n_kv
         kk = jnp.concatenate(
-            [_repeat_kv(kv_cache["k"].astype(COMPUTE_DTYPE), n_rep),
+            [_repeat_kv(cache_k.astype(COMPUTE_DTYPE), n_rep),
              _repeat_kv(k, n_rep)], axis=1)
         vv = jnp.concatenate(
-            [_repeat_kv(kv_cache["v"].astype(COMPUTE_DTYPE), n_rep),
+            [_repeat_kv(cache_v.astype(COMPUTE_DTYPE), n_rep),
              _repeat_kv(v, n_rep)], axis=1)
         valid = jnp.concatenate([valid_old, valid_new], axis=2)
         scale = 1.0 / math.sqrt(head_dim)
@@ -319,14 +353,30 @@ def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
         out = jnp.einsum("bhqk,bkhd->bqhd", p, vv,
                          preferred_element_type=jnp.float32).astype(q.dtype)
         valid_q = i_idx[None, :] < counts[:, None]               # (B, sq)
-        write_idx = jnp.where(
-            valid_q, (q_abs % s_max) if window else q_abs, s_max)
-        b_idx = jnp.arange(b)[:, None]
-        ck = kv_cache["k"].at[b_idx, write_idx].set(
-            k.astype(kv_cache["k"].dtype), mode="drop")
-        cv = kv_cache["v"].at[b_idx, write_idx].set(
-            v.astype(kv_cache["v"].dtype), mode="drop")
-        new_cache = {"k": ck, "v": cv, "pos": pos + counts}
+        if page_table is not None:
+            # scatter only the new chunk to its physical pages; padding rows
+            # route to the sentinel slot n_pages * page and are dropped
+            wp = jnp.take_along_axis(
+                page_table, jnp.clip(q_abs // pg, 0, max_pages - 1), axis=1)
+            phys_w = jnp.where(valid_q, wp * pg + (q_abs % pg), n_pages * pg)
+            nk = flat_k.at[phys_w.reshape(-1)].set(
+                k.astype(flat_k.dtype).reshape((-1,) + flat_k.shape[1:]),
+                mode="drop")
+            nv = flat_v.at[phys_w.reshape(-1)].set(
+                v.astype(flat_v.dtype).reshape((-1,) + flat_v.shape[1:]),
+                mode="drop")
+            new_cache = {"k": nk.reshape(kv_cache["k"].shape),
+                         "v": nv.reshape(kv_cache["v"].shape),
+                         "pos": pos + counts}
+        else:
+            write_idx = jnp.where(
+                valid_q, (q_abs % s_max) if window else q_abs, s_max)
+            b_idx = jnp.arange(b)[:, None]
+            ck = kv_cache["k"].at[b_idx, write_idx].set(
+                k.astype(kv_cache["k"].dtype), mode="drop")
+            cv = kv_cache["v"].at[b_idx, write_idx].set(
+                v.astype(kv_cache["v"].dtype), mode="drop")
+            new_cache = {"k": ck, "v": cv, "pos": pos + counts}
     elif kv_cache is not None:
         pos = kv_cache["pos"]                   # (B,) per-slot positions
         if pos.ndim == 0:

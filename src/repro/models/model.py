@@ -31,7 +31,8 @@ from .layers import (COMPUTE_DTYPE, attention_apply, attention_init,
                      rmsnorm, rmsnorm_init, weight_einsum, _dense_init,
                      _proj)
 from .moe import moe_apply, moe_init
-from .ssm import mamba2_apply, mamba2_init, mamba2_init_state
+from .ssm import (gather_state_pages, mamba2_apply, mamba2_init,
+                  mamba2_init_state, scatter_state_pages)
 
 
 # ---------------------------------------------------------------------------
@@ -57,7 +58,7 @@ def _tf_layer_init(rng, cfg: ModelConfig, cross: bool = False) -> Dict:
 
 def _tf_layer_apply(params, x, cfg: ModelConfig, *, causal=True,
                     kv_cache=None, xattn_kv=None, positions=None,
-                    token_counts=None):
+                    token_counts=None, page_table=None):
     aux = jnp.zeros((), jnp.float32)
     h, new_cache = attention_apply(
         params["attn"], rmsnorm(params["norm1"], x, cfg.norm_eps),
@@ -65,7 +66,8 @@ def _tf_layer_apply(params, x, cfg: ModelConfig, *, causal=True,
         head_dim=cfg.resolved_head_dim, causal=causal,
         window=cfg.sliding_window, rope_theta=cfg.rope_theta,
         kv_cache=kv_cache, xattn_kv=xattn_kv, positions=positions,
-        chunk_kv=cfg.attn_chunk_kv, token_counts=token_counts)
+        chunk_kv=cfg.attn_chunk_kv, token_counts=token_counts,
+        page_table=page_table)
     if "moe" in params:
         x = x + h
         z = rmsnorm(params["norm2"], x, cfg.norm_eps)
@@ -426,6 +428,49 @@ class Model:
             return c
         raise KeyError(cfg.family)
 
+    def init_paged_cache(self, batch: int, *, n_pages: int, page_size: int,
+                         n_state_pages: int = 0) -> Dict:
+        """Block-paged decode cache: one GLOBAL pool instead of per-slot
+        regions.  KV pages hold ``page_size`` tokens x layer x kv-head;
+        SSM conv/SSD state is a single page per slot.  Per-slot logical
+        views are materialized inside ``prefill_step_paged`` by gathering
+        through the host-maintained page tables, so HBM scales with live
+        tokens rather than ``batch * max_len``.  Supported for the
+        families whose cache is pure KV/SSM state (dense/moe/ssm/hybrid);
+        encoder caches (audio/vlm) and rolling windows stay dense.
+        """
+        cfg = self.cfg
+        hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+
+        def kv_pages(n):
+            return {
+                "k": jnp.zeros((n, n_pages, page_size, kv, hd),
+                               COMPUTE_DTYPE),
+                "v": jnp.zeros((n, n_pages, page_size, kv, hd),
+                               COMPUTE_DTYPE),
+                "pos": jnp.zeros((n, batch), jnp.int32),
+            }
+
+        def state_pages(n):
+            states = [mamba2_init_state(
+                n_state_pages, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, conv_kernel=cfg.conv_kernel)
+                for _ in range(n)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+        if cfg.family in ("dense", "moe"):
+            return {"pages": kv_pages(cfg.num_layers)}
+        if cfg.family == "ssm":
+            return {"state_pages": state_pages(cfg.num_layers)}
+        if cfg.family == "hybrid":
+            g = cfg.num_layers // cfg.shared_attn_every
+            stacked = state_pages(cfg.num_layers)
+            stacked = jax.tree.map(
+                lambda a: a.reshape((g, cfg.shared_attn_every) + a.shape[1:]),
+                stacked)
+            return {"state_pages": stacked, "pages": kv_pages(g)}
+        raise KeyError(f"family {cfg.family!r} has no paged cache layout")
+
     # ---------------- decode step -----------------------------------------
     def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array,
                     extras: Optional[Dict] = None):
@@ -621,6 +666,76 @@ class Model:
             new_cache["self"] = new_self
         else:
             raise KeyError(cfg.family)
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self.logits_of(params, x), new_cache
+
+    # ---------------- paged chunked prefill --------------------------------
+    def prefill_step_paged(self, params: Dict, cache: Dict,
+                           tokens: jax.Array, counts: jax.Array,
+                           page_table: jax.Array, state_table: jax.Array):
+        """``prefill_step`` against an ``init_paged_cache`` pool.
+
+        page_table: (B, max_pages) int32 KV page indices (n_pages ==
+        unmapped); state_table: (B,) int32 SSM state-page indices
+        (n_state_pages == unmapped).  Unused tables for a family are
+        passed as dummies so the jitted signature is uniform.  Shapes are
+        fixed, so prefill chunks, decode (a 1-token chunk), and spec
+        verification all share ONE compilation, exactly like the dense
+        step; the gathered views make the math byte-identical to it.
+        """
+        cfg = self.cfg
+        b, c = tokens.shape
+        counts = counts.astype(jnp.int32)
+        page_table = page_table.astype(jnp.int32)
+        state_table = state_table.astype(jnp.int32)
+        token_mask = jnp.arange(c)[None, :] < counts[:, None]
+        x = params["embed"].astype(COMPUTE_DTYPE)[tokens]
+
+        if cfg.family in ("dense", "moe"):
+            def body(x, xs):
+                lp, lc = xs
+                y, nc, _ = _tf_layer_apply(lp, x, cfg, causal=True,
+                                           kv_cache=lc, token_counts=counts,
+                                           page_table=page_table)
+                return y, nc
+            x, new_pages = jax.lax.scan(
+                body, x, (params["layers"], cache["pages"]))
+            new_cache = {"pages": new_pages}
+        elif cfg.family == "ssm":
+            def body(x, xs):
+                lp, st = xs
+                y, ns = _ssm_layer_apply(
+                    lp, x, cfg, state=gather_state_pages(st, state_table),
+                    token_mask=token_mask)
+                return y, scatter_state_pages(st, state_table, ns)
+            x, new_states = jax.lax.scan(
+                body, x, (params["layers"], cache["state_pages"]))
+            new_cache = {"state_pages": new_states}
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def group(x, xs):
+                gp, gstate, gkv = xs
+
+                def inner(x, ys):
+                    lp, st = ys
+                    y, ns = _ssm_layer_apply(
+                        lp, x, cfg,
+                        state=gather_state_pages(st, state_table),
+                        token_mask=token_mask)
+                    return y, scatter_state_pages(st, state_table, ns)
+                x, new_gstate = jax.lax.scan(inner, x, (gp, gstate))
+                y, nkv, _ = _tf_layer_apply(shared, x, cfg, causal=True,
+                                            kv_cache=gkv, token_counts=counts,
+                                            page_table=page_table)
+                return y, (new_gstate, nkv)
+            x, (new_ssm, new_shared) = jax.lax.scan(
+                group, x, (params["ssm_layers"], cache["state_pages"],
+                           cache["pages"]))
+            new_cache = {"state_pages": new_ssm, "pages": new_shared}
+        else:
+            raise KeyError(f"family {cfg.family!r} has no paged prefill")
 
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         return self.logits_of(params, x), new_cache

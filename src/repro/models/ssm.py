@@ -271,3 +271,28 @@ def mamba2_init_state(cfg_b: int, *, d_inner: int, d_state: int,
                           COMPUTE_DTYPE),
         "ssd": jnp.zeros((cfg_b, h, d_state, head_dim), jnp.float32),
     }
+
+
+# ---------------------------------------------------------------------------
+# block-paged state storage
+# ---------------------------------------------------------------------------
+# SSM state is position-independent and fixed-size, so a slot's conv/SSD
+# state is a SINGLE page in the global state pool: leaves are
+# ``mamba2_init_state(n_state_pages, ...)`` with the page index where the
+# batch index would be.  ``state_table`` (B,) int32 maps slot -> page;
+# index == n_state_pages is the unmapped sentinel (gathers zeros, scatter
+# dropped).  The gathered view feeds ``mamba2_apply`` unchanged, keeping
+# the cell math byte-identical to the dense per-slot state.
+
+def gather_state_pages(pages: Dict, state_table) -> Dict:
+    """(n_state_pages, ...) pool leaves -> (B, ...) per-slot state."""
+    return jax.tree.map(
+        lambda a: jnp.take(a, state_table, axis=0, mode="fill",
+                           fill_value=0), pages)
+
+
+def scatter_state_pages(pages: Dict, state_table, new_state: Dict) -> Dict:
+    """Write per-slot state back to its pool pages (sentinel rows drop)."""
+    return jax.tree.map(
+        lambda a, n: a.at[state_table].set(n.astype(a.dtype), mode="drop"),
+        pages, new_state)

@@ -5,6 +5,7 @@
   prefix_cache.py  token-prefix reuse of prefilled KV/SSM slot state
   scheduler.py     SLO classes, FIFO/priority admission, SOL capacity model
   spec.py          speculative-decoding drafters (n-gram, draft model)
+  paging.py        block-paged KV/SSM page pool + page-table device ops
   streaming.py     per-token events, callbacks, iterator API
   telemetry.py     TTFT / per-token latency percentiles, utilization
   replica.py       restartable engine replica: breaker, validation, faults
@@ -15,6 +16,7 @@
 
 from .engine import Request, ServeEngine, resolve_tuned_decode_cfg
 from .faults import FaultEvent, FaultInjector
+from .paging import PagePool, paged_disabled
 from .prefill import ChunkedPrefillPlanner, PrefillPlan, SlotState
 from .prefix_cache import PrefixCache, extract_slot, insert_slot
 from .replica import (CircuitBreaker, EngineReplica, ReplicaFault,
@@ -34,13 +36,14 @@ __all__ = [
     "AdversarialDrafter", "ChunkedPrefillPlanner", "CircuitBreaker",
     "DEFAULT_SPEC_ACCEPT", "DraftModelDrafter", "Drafter", "EngineReplica",
     "EngineView", "FIFOScheduler", "FaultEvent", "FaultInjector",
-    "NGramDrafter",
+    "NGramDrafter", "PagePool",
     "PrefillPlan", "PrefixCache", "RateLimiter", "ReplicaFault",
     "ReplicaState", "Request", "Router", "RouterRejected", "SLOClass",
     "SLO_CLASSES", "SOLCapacityModel", "SOLScheduler", "ServeEngine",
     "ServeTelemetry", "SlotState", "StreamEvent", "StreamMux", "Ticket",
     "TokenBucket", "build_drafter", "build_replicated_router",
     "collect_streams", "extract_slot", "fleet_summary", "get_slo",
-    "insert_slot", "make_scheduler", "parse_spec", "percentile",
+    "insert_slot", "make_scheduler", "paged_disabled", "parse_spec",
+    "percentile",
     "resolve_tuned_decode_cfg", "spec_disabled", "stream_tokens",
 ]

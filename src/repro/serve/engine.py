@@ -37,6 +37,8 @@ from ..core.dsl.compiler import default_fuse_mode
 from ..core.obs.trace import default_drift, get_tracer
 from ..core.sol.hardware import canon_dtype
 from ..models.model import Model
+from .paging import (PagePool, copy_state_page, cow_pages, paged_disabled,
+                     paged_restore, set_pos, zero_state_page)
 from .prefill import ChunkedPrefillPlanner, SlotState
 from .prefix_cache import PrefixCache, _slot_axis, extract_slot, insert_slot
 from .scheduler import (EngineView, FIFOScheduler, SOLCapacityModel,
@@ -303,7 +305,10 @@ class ServeEngine:
                  spec_decode: Optional[str] = None,
                  drafter=None,
                  telemetry: Optional[ServeTelemetry] = None,
-                 request_timeout_steps: Optional[int] = None):
+                 request_timeout_steps: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None,
+                 state_pages: Optional[int] = None):
         # the integrity gate watches the same drift detector every
         # engine.step observation feeds: a sustained beats-physics window
         # becomes a recorded quarantine verdict, not just a gauge
@@ -327,7 +332,58 @@ class ServeEngine:
         self.weight_bytes_per_step = model.decode_weight_bytes(self.params)
         self.max_batch = max_batch
         self.max_len = max_len
-        self.cache = model.init_cache(max_batch, max_len)
+        # block-paged cache: one global page pool + per-slot page tables
+        # instead of a max_len region per slot, so concurrency is bounded
+        # by TOKENS IN FLIGHT, not slots x max_len.  Structural gates: the
+        # REPRO_PAGED=off escape hatch, families without a paged step
+        # path, and sliding windows (the KV ring already bounds HBM and
+        # its wrap-around indexing is position-relative, not paged)
+        cfg = model.cfg
+        if page_size is None:
+            page_size = getattr(cfg, "page_size", 0) or 0
+        if paged_disabled() \
+                or cfg.family not in ("dense", "moe", "ssm", "hybrid") \
+                or (cfg.sliding_window and cfg.sliding_window < max_len):
+            page_size = 0
+        self.page_size = int(page_size)
+        self.paged = self.page_size > 0
+        self.pool: Optional[PagePool] = None
+        if self.paged:
+            max_pages = -(-max_len // self.page_size)
+            has_kv = cfg.family in ("dense", "moe", "hybrid")
+            has_state = bool(cfg.ssm_state)
+            n_pages = int(pool_pages) if pool_pages is not None \
+                else max_batch * max_pages
+            n_pages = n_pages if has_kv else 0
+            n_state = 0
+            if has_state:
+                # headroom over one-per-slot so prefix entries can freeze
+                # donor state without starving live work
+                n_state = int(state_pages) if state_pages is not None \
+                    else max_batch + 4
+            self.cache = model.init_paged_cache(
+                max_batch, n_pages=max(n_pages, 1),
+                page_size=self.page_size, n_state_pages=max(n_state, 1))
+            # measured bytes of one page, straight off the device arrays —
+            # the ground truth the SOL pool prediction is audited against
+            kv_nb = st_nb = 0
+            if has_kv:
+                kv_nb = sum(int(self.cache["pages"][k].nbytes)
+                            for k in ("k", "v")) // max(n_pages, 1)
+            if has_state:
+                st_nb = sum(int(leaf.nbytes) for leaf in
+                            jax.tree.leaves(self.cache["state_pages"])
+                            ) // max(n_state, 1)
+            self.pool = PagePool(
+                n_pages=n_pages, page_size=self.page_size,
+                n_slots=max_batch, max_pages=max_pages,
+                n_state_pages=n_state, page_nbytes=kv_nb,
+                state_page_nbytes=st_nb)
+            self._has_kv_pages = has_kv
+            self._has_state_pages = has_state
+        else:
+            self.cache = model.init_cache(max_batch, max_len)
+            self._has_kv_pages = self._has_state_pages = False
         # tensor-parallel decode: place params + cache per the ShardPlan;
         # GSPMD partitions prefill_step along them, inserting the
         # collectives the SOL model prices as wire_bytes_per_step
@@ -345,7 +401,11 @@ class ServeEngine:
                 plan.decode_wire_bytes(model.cfg, batch=max_batch))
         self.slots: List[Optional[SlotState]] = [None] * max_batch
         self._rng = jax.random.PRNGKey(seed)
-        self._step_fn = jax.jit(model.prefill_step)
+        # one jitted step either way; the paged step takes the page tables
+        # as ordinary (fixed-shape) arguments, so prefill chunks, decode,
+        # and spec verification still share a single compilation
+        self._step_fn = jax.jit(model.prefill_step_paged if self.paged
+                                else model.prefill_step)
         # a chunk must fit the KV ring: a sliding-window cache holds
         # min(max_len, window) rows, and two tokens of one chunk must never
         # scatter to the same ring slot
@@ -438,6 +498,11 @@ class ServeEngine:
             "spec_accepted_tokens": 0, "spec_examined_tokens": 0,
             "spec_rollbacks": 0,
         }
+        if self.paged:
+            self.metrics["pages_total"] = self.pool.n_pages
+            self.metrics["pages_free"] = self.pool.pages_free
+            self.metrics["pages_shared"] = 0
+            self.metrics["pool_used_bytes"] = self.pool.used_bytes
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -457,13 +522,27 @@ class ServeEngine:
                 decode_slos.append(s.req.slo)
             else:
                 backlog += len(s.feed)
-        return EngineView(
+        view = EngineView(
             free_slots=sum(1 for s in self.slots if s is None),
             num_slots=self.max_batch,
             decode_positions=decode_positions,
             decode_slos=decode_slos,
             prefill_backlog=backlog,
             step=self.step_count)
+        if self.paged:
+            # pages_free is the admission-meaningful number: free minus
+            # every outstanding reservation; reclaimable = prefix-entry
+            # pages no live slot uses (evictable before rejecting work)
+            reclaim = 0
+            if self.prefix_cache is not None:
+                reclaim = self.prefix_cache.reclaimable_pages(self.pool)
+            view = dataclasses.replace(
+                view, pages_free=self.pool.available(),
+                pages_reclaimable=reclaim,
+                pages_total=self.pool.n_pages,
+                page_size=self.page_size,
+                state_pages_free=self.pool.state_pages_free)
+        return view
 
     # ------------------------------------------------------------------
     def submit(self, req: Request, slo: Optional[str] = None) -> None:
@@ -494,7 +573,36 @@ class ServeEngine:
         self._place(req, i)
         return True
 
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot.  Dense: just drop the SlotState (stale rows are
+        masked by pos, which placement resets).  Paged: host-only page-
+        table clear + refcount decrement — no cache-pytree traversal, no
+        device work (the old full-pytree scan per free was the dominant
+        host cost at high request churn)."""
+        self.slots[slot] = None
+        if self.paged:
+            self.pool.clear_slot(slot)
+
+    def _page_need(self, req: Request) -> Tuple[int, int]:
+        """Worst-case (kv_pages, state_pages) this request can ever hold:
+        prompt + max_new + the spec-decode overshoot margin (a verify row
+        writes drafts beyond the budget before rollback), capped at
+        max_len, plus one COW page when prefix sharing can make the slot
+        diverge inside a shared page.  Reserved at admission so a step
+        can never exhaust the pool mid-flight."""
+        toks = min(len(req.prompt) + req.max_new_tokens + self.spec_width,
+                   self.max_len)
+        kv = 0
+        if self._has_kv_pages:
+            kv = -(-toks // self.page_size)
+            if self.prefix_cache is not None:
+                kv += 1
+        return kv, 1 if self._has_state_pages else 0
+
     def _place(self, req: Request, slot: int) -> None:
+        if self.paged:
+            self._place_paged(req, slot)
+            return
         self.cache = _reset_slot_positions(self.cache, slot)
         feed = list(req.prompt)
         pos = 0
@@ -516,6 +624,43 @@ class ServeEngine:
         self.telemetry.on_admit(req.rid, self.step_count,
                                 prefix_tokens_reused=reused)
 
+    def _place_paged(self, req: Request, slot: int) -> None:
+        """Paged placement: reserve the request's worst-case page demand,
+        then splice shared prefix pages by refcount — a hit is a page-
+        table edit plus (for recurrent families) one device state-page
+        copy, never a host round-trip in either direction."""
+        pool = self.pool
+        pool.clear_slot(slot)       # free slots are already clear; cheap
+        kv_need, _st = self._page_need(req)
+        pool.reserve_slot(slot, kv_need)
+        if self._has_state_pages:
+            sp = pool.alloc_state(slot)
+            self.cache = zero_state_page(self.cache, sp)
+        feed = list(req.prompt)
+        pos = 0
+        reused = 0
+        if self.prefix_cache is not None:
+            n, entry = self.prefix_cache.match(req.prompt, pool=pool)
+            self.telemetry.on_prefix_lookup(hit=n > 0)
+            if n:
+                pool.splice(slot, entry.page_ids, n)
+                if self._has_state_pages and entry.state_page is not None:
+                    self.cache = copy_state_page(
+                        self.cache, int(pool.state_table[slot]),
+                        int(entry.state_page))
+                feed = list(req.prompt[n:])
+                pos = n
+                reused = n
+                self.metrics["prefix_hits"] += 1
+                self.metrics["prefix_tokens_reused"] += n
+        self.cache = set_pos(self.cache, slot, pos)
+        self.slots[slot] = SlotState(req=req, feed=feed, pos=pos,
+                                     prompt_pos=pos,
+                                     admit_step=self.step_count)
+        self.metrics["prefill_tokens"] += len(feed)
+        self.telemetry.on_admit(req.rid, self.step_count,
+                                prefix_tokens_reused=reused)
+
     def _should_defer(self, req: Request) -> bool:
         """Prefix-aware admission: hold a request back while another slot
         is mid-prefill over a (chunk-aligned) prefix they share — the
@@ -526,7 +671,7 @@ class ServeEngine:
         pc = self.prefix_cache
         if pc is None:
             return False
-        have = pc.peek_len(req.prompt)
+        have = pc.peek_len(req.prompt, pool=self.pool)
         for s in self.slots:
             if s is None or s.started:
                 continue
@@ -541,11 +686,28 @@ class ServeEngine:
                 return True
         return False
 
+    def _pool_admittable(self, req: Request) -> bool:
+        """Paged admission gate: the request's worst-case page reservation
+        must fit.  When it does not, refcount-idle prefix pages (held only
+        by cache entries, no live slot) are evicted FIRST — stored
+        prefixes are a speedup, never a reason to reject work."""
+        if not self.paged:
+            return True
+        kv_need, st_need = self._page_need(req)
+        if self.pool.can_admit(kv_need, st_need):
+            return True
+        if self.prefix_cache is not None:
+            self.prefix_cache.evict_pool_pages(
+                self.pool, kv_need - self.pool.available(),
+                need_state=st_need - self.pool.state_pages_free)
+        return self.pool.can_admit(kv_need, st_need)
+
     def _admit(self) -> None:
         deferred = []
         for entry in self.scheduler.next_admissions(self._view()):
             i = self._free_slot()
-            if i is None or self._should_defer(entry.req):
+            if i is None or self._should_defer(entry.req) \
+                    or not self._pool_admittable(entry.req):
                 deferred.append(entry)
                 continue
             self._place(entry.req, i)
@@ -573,7 +735,7 @@ class ServeEngine:
                 continue
             if self.step_count - s.admit_step >= deadline:
                 s.req.timed_out = True
-                self.slots[i] = None
+                self._release_slot(i)
                 self.metrics["timed_out"] += 1
                 self.telemetry.on_finish(s.req.rid, self.step_count,
                                          timed_out=True)
@@ -584,7 +746,7 @@ class ServeEngine:
         for i, s in enumerate(self.slots):
             if s is not None and s.req.rid == rid:
                 s.req.cancelled = True
-                self.slots[i] = None
+                self._release_slot(i)
                 self.metrics["cancelled"] += 1
                 self.telemetry.on_finish(rid, self.step_count,
                                          cancelled=True)
@@ -711,7 +873,7 @@ class ServeEngine:
                     step=self.step_count, final=final))
                 if final:
                     req.done = True
-                    self.slots[i] = None    # release slot immediately
+                    self._release_slot(i)   # release slot immediately
                     self.metrics["requests_done"] += 1
                     self.telemetry.on_finish(req.rid, self.step_count)
                     break
@@ -721,15 +883,98 @@ class ServeEngine:
             self.cache = _rewind_slot_positions(self.cache, rewinds,
                                                 self.max_batch)
         if restores:
-            self.cache = _restore_slots(self.cache, old_cache, restores,
-                                        self.max_batch)
+            if self.paged:
+                self.cache = self._paged_restore_slots(old_cache, restores)
+            else:
+                self.cache = _restore_slots(self.cache, old_cache,
+                                            restores, self.max_batch)
+        if self.paged and self._has_kv_pages:
+            # rejected tokens' pages go back to the pool instead of
+            # sitting stale in the slot (stale rows below the committed
+            # position are masked; pages wholly past it are pure waste)
+            for i, _delta in rewinds:
+                if self.slots[i] is not None:
+                    self.pool.unmap_from(i, self.slots[i].pos)
+            for i in restores:
+                if self.slots[i] is not None:
+                    self.pool.unmap_from(i, self.slots[i].pos)
         return events
+
+    def _paged_restore_slots(self, old_cache, restores: Sequence[int]):
+        """Replay-mode rejection on a paged cache: restore the rejected
+        slots' positions and state pages from the retained pre-step
+        pytree (KV pages self-heal — see ``paged_restore``).  Index
+        arrays are padded with sentinels for shape stability."""
+        sl = np.full(self.max_batch, self.max_batch, np.int32)
+        st = np.full(self.max_batch, self.pool.n_state_pages, np.int32)
+        for j, i in enumerate(restores):
+            sl[j] = i
+            if self._has_state_pages:
+                st[j] = int(self.pool.state_table[i])
+        return paged_restore(self.cache, old_cache, jnp.asarray(sl),
+                             jnp.asarray(st))
+
+    def _put_paged_prefix(self, slot: int, prefix) -> None:
+        """Share a slot's prefix pages into the cache by refcount: incref
+        the covering pages and (for recurrent families) freeze the donor's
+        state into a spare state page — no host copy in either direction.
+        Skipped when no spare state page exists (a cache fill must never
+        starve live work; KV refs are released again)."""
+        pages = self.pool.share_prefix(slot, len(prefix)) \
+            if self._has_kv_pages else ()
+        sp = None
+        if self._has_state_pages:
+            sp = self.pool.alloc_entry_state()
+            if sp is None:
+                self.pool.release_shared(pages)
+                return
+            self.cache = copy_state_page(
+                self.cache, sp, int(self.pool.state_table[slot]))
+        self.prefix_cache.put_paged(prefix, pool=self.pool,
+                                    page_ids=pages, state_page=sp)
+
+    def _prepare_pages(self, plan) -> None:
+        """Map (and copy-on-write) the pages this step's writes land in.
+
+        The planner has already advanced positions for prefill/decode rows
+        (write range [pos - count, pos)) but not for spec rows (write
+        range [pos, pos + count)).  Shared pages in a write range get a
+        private copy first — one batched ``cow_pages`` call per step —
+        then the slot's table is extended from the free list against its
+        admission reservation.  Runs BEFORE the replay-mode pre-step
+        cache is retained, so a rollback restores post-COW content."""
+        if not self._has_kv_pages:
+            return
+        spec_slots = {i for i, _nv, _drafts in plan.spec_rows}
+        cow: List[Tuple[int, int]] = []
+        for i in range(self.max_batch):
+            s = self.slots[i]
+            c = int(plan.counts[i])
+            if s is None or c <= 0:
+                continue
+            if i in spec_slots:
+                start, end = s.pos, s.pos + c
+            else:
+                start, end = s.pos - c, s.pos
+            for j, _page in self.pool.cow_targets(i, start, end):
+                cow.append(self.pool.remap_cow(i, j))
+            self.pool.ensure_mapped(i, end)
+        if cow:
+            dst = np.full(self.max_batch, self.pool.n_pages, np.int32)
+            src = np.full(self.max_batch, self.pool.n_pages, np.int32)
+            for j, (d, sr) in enumerate(cow):
+                dst[j], src[j] = d, sr
+            self.cache = cow_pages(self.cache, jnp.asarray(dst),
+                                   jnp.asarray(src))
 
     def _run_step(self, view, plan):
         """Invoke the jitted step; the first call (the XLA compile) gets
         its own ``compile``-category span when tracing is on."""
         args = (self.params, self.cache, jnp.asarray(plan.tokens),
                 jnp.asarray(plan.counts))
+        if self.paged:
+            args += (jnp.asarray(self.pool.table),
+                     jnp.asarray(self.pool.state_table))
         if self._jit_warm:
             return self._step_fn(*args)
         self._jit_warm = True
@@ -768,6 +1013,8 @@ class ServeEngine:
                                  spec_width=self.spec_width)
         if not plan.any_work:
             return []
+        if self.paged:
+            self._prepare_pages(plan)
         # replay-mode rejection restores whole slots from the pre-step
         # cache; prefix mode only rewinds positions, so nothing is retained
         old_cache = self.cache \
@@ -790,8 +1037,11 @@ class ServeEngine:
                 prefix = s.req.prompt[:s.prompt_pos]
                 if s.prompt_pos % self.prefix_cache.block == 0 \
                         and self.prefix_cache.wants(prefix):
-                    self.prefix_cache.put(prefix,
-                                          extract_slot(self.cache, i))
+                    if self.paged:
+                        self._put_paged_prefix(i, prefix)
+                    else:
+                        self.prefix_cache.put(prefix,
+                                              extract_slot(self.cache, i))
 
         events: List[StreamEvent] = []
         if plan.sample_rows:
@@ -818,7 +1068,7 @@ class ServeEngine:
                     step=self.step_count, final=final))
                 if final:
                     req.done = True
-                    self.slots[i] = None        # release slot immediately
+                    self._release_slot(i)       # release slot immediately
                     self.metrics["requests_done"] += 1
                     self.telemetry.on_finish(req.rid, self.step_count)
 
@@ -832,6 +1082,12 @@ class ServeEngine:
 
         active = sum(1 for s in self.slots if s is not None)
         dt = time.perf_counter() - t0
+        if self.paged:
+            ps = self.pool.stats()
+            self.metrics["pages_total"] = ps["pages_total"]
+            self.metrics["pages_free"] = ps["pages_free"]
+            self.metrics["pages_shared"] = ps["pages_shared"]
+            self.metrics["pool_used_bytes"] = ps["pool_used_bytes"]
         self.telemetry.on_step(
             queue_depth=self.scheduler.pending(), active_slots=active,
             num_slots=self.max_batch, seconds=dt,
@@ -839,7 +1095,11 @@ class ServeEngine:
             weight_bytes=self.weight_bytes_per_step,
             wire_bytes=self.wire_bytes_per_step,
             emitted_tokens=len(events),
-            spec_drafted=step_drafted, spec_accepted=step_accepted)
+            spec_drafted=step_drafted, spec_accepted=step_accepted,
+            pages_total=self.metrics.get("pages_total", 0),
+            pages_free=self.metrics.get("pages_free", 0),
+            pages_shared=self.metrics.get("pages_shared", 0),
+            pool_used_bytes=self.metrics.get("pool_used_bytes", 0))
         r = None
         if self.sol_capacity is not None:
             r = self.sol_capacity.step_roofline(

@@ -237,6 +237,18 @@ def update_fleet_gauges(router: Router, registry=None) -> None:
         registry.gauge("repro_spec_accept_ratio",
                        "accepted / drafted speculative tokens").set(
             float(ratio))
+    # headline paged-pool series: current HBM pool occupancy and how many
+    # pages prefix sharing is currently deduplicating across slots
+    used = summary.get("hbm_pool_used_bytes", 0)
+    if isinstance(used, (int, float)) and used == used:
+        registry.gauge("repro_hbm_pool_used_bytes",
+                       "bytes of the paged KV/state pool currently "
+                       "mapped across the fleet").set(float(used))
+    shared = summary.get("prefix_pages_shared", 0)
+    if isinstance(shared, (int, float)) and shared == shared:
+        registry.gauge("repro_prefix_pages_shared",
+                       "pool pages referenced by more than one slot or "
+                       "prefix entry (refcount > 1)").set(float(shared))
     registry.gauge("repro_drift_ops_drifting",
                    "ops with sustained predicted-vs-measured drift").set(
         float(len(default_drift().drifting_ops())))

@@ -1,0 +1,403 @@
+"""Block-paged decode-cache management: the host-side page pool and the
+jitted device page operations the engine drives it with.
+
+The dense engine gives every slot a ``max_len``-sized cache region at
+build, so max concurrency is frozen and long contexts strand HBM.  Paged
+storage replaces that with ONE global pool:
+
+* KV pages hold ``page_size`` tokens x layer x kv-head; a slot's logical
+  sequence is its row of the ``(slots, max_pages)`` int32 page table
+  (``n_pages`` = the unmapped sentinel).  SSM conv/SSD state is
+  position-independent, so it is a single page per slot in a separate
+  state pool.
+* The pool is HOST state (numpy): mapping, refcounts, and reservations
+  are bookkeeping; only page *content* lives on device.  The tables are
+  uploaded as ordinary arguments of the one jitted
+  ``model.prefill_step_paged`` — fixed shapes, so prefill chunks, decode,
+  and spec verification share a single compilation.
+* Pages are refcounted so the prefix cache can share them: a prefix hit
+  is a page-table splice (incref), and the first divergent append into a
+  shared page triggers copy-on-write via ``cow_pages``.
+* Admission is reservation-based: a request reserves its worst-case page
+  demand (prompt + max_new + spec margin + a COW page) before it takes a
+  slot, so a step can never run out of pages mid-flight.  ``available()``
+  is what the SOL scheduler and the fleet capacity model price in bytes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_disabled() -> bool:
+    """``REPRO_PAGED=off`` escape hatch: force the dense per-slot cache."""
+    import os
+    return os.environ.get("REPRO_PAGED", "").lower() in ("off", "0", "false")
+
+
+# ---------------------------------------------------------------------------
+# jitted device page operations
+# ---------------------------------------------------------------------------
+# All of these key on LEAF NAMES, mirroring ``prefix_cache._slot_axis``:
+# paged KV leaves are (stack..., n_pages, page, kv, hd) with the page axis
+# where the dense layout keeps the slot axis, so the same ndim arithmetic
+# addresses pages.  Index arguments are traced (not static) and padded to
+# fixed sizes with the sentinel (= axis size, dropped by mode="drop"), so
+# every call shape-stably reuses one compilation.
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", path[-1]))
+
+
+def _page_axis(name: str, leaf) -> Optional[int]:
+    if name == "pos":
+        return None
+    if name == "conv":
+        return leaf.ndim - 3
+    if name in ("k", "v", "ssd"):
+        return leaf.ndim - 4
+    return None
+
+
+@jax.jit
+def set_pos(cache, slot, value):
+    """Set every ``pos`` entry for ``slot`` (placement: 0 or prefix len)."""
+    def fix(path, leaf):
+        if _leaf_name(path) == "pos":
+            return leaf.at[..., slot].set(
+                jnp.asarray(value).astype(leaf.dtype))
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+@jax.jit
+def zero_state_page(cache, idx):
+    """Zero one state page (fresh allocation: stale SSM state is live-read,
+    unlike masked KV rows, so a recycled page must be scrubbed)."""
+    def fix(path, leaf):
+        ax = _page_axis(_leaf_name(path), leaf)
+        if ax is None or _leaf_name(path) not in ("conv", "ssd"):
+            return leaf
+        moved = jnp.moveaxis(leaf, ax, 0)
+        moved = moved.at[idx].set(jnp.zeros(moved.shape[1:], leaf.dtype),
+                                  mode="drop")
+        return jnp.moveaxis(moved, 0, ax)
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+@jax.jit
+def copy_state_page(cache, dst, src):
+    """Device-to-device state-page copy (prefix put: the donor keeps
+    mutating its state, so the entry gets its own frozen page; prefix
+    hit: the entry's page seeds the new slot's page)."""
+    def fix(path, leaf):
+        ax = _page_axis(_leaf_name(path), leaf)
+        if ax is None or _leaf_name(path) not in ("conv", "ssd"):
+            return leaf
+        moved = jnp.moveaxis(leaf, ax, 0)
+        row = moved[jnp.clip(src, 0, moved.shape[0] - 1)]
+        moved = moved.at[dst].set(row, mode="drop")
+        return jnp.moveaxis(moved, 0, ax)
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+@jax.jit
+def cow_pages(cache, dst_ids, src_ids):
+    """Copy-on-write KV page copies, batched: pages[dst] = pages[src] for
+    every (dst, src) pair (sentinel pairs drop).  One call per step
+    regardless of how many slots diverge from shared prefix pages."""
+    def fix(path, leaf):
+        name = _leaf_name(path)
+        if name not in ("k", "v"):
+            return leaf
+        ax = _page_axis(name, leaf)
+        moved = jnp.moveaxis(leaf, ax, 0)
+        rows = moved[jnp.clip(src_ids, 0, moved.shape[0] - 1)]
+        moved = moved.at[dst_ids].set(rows, mode="drop")
+        return jnp.moveaxis(moved, 0, ax)
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+@jax.jit
+def paged_restore(new_cache, old_cache, slot_idx, state_idx):
+    """Replay-mode speculative rollback for a paged cache: restore the
+    rejected slots' ``pos`` rows and state pages from the retained
+    pre-step pytree.  KV pages need no restore — rows at or past the
+    restored position go stale under the ``slot_idx < pos`` validity mask
+    and are rewritten bit-for-bit at the same physical rows by the
+    re-queued feed (same tokens, same absolute positions).  Index arrays
+    are padded with their axis-size sentinel (dropped), so one
+    compilation serves every rejection pattern."""
+    def fix(path, new_leaf, old_leaf):
+        name = _leaf_name(path)
+        if name == "pos":
+            ax, idx = new_leaf.ndim - 1, slot_idx
+        elif name in ("conv", "ssd"):
+            ax, idx = _page_axis(name, new_leaf), state_idx
+        else:
+            return new_leaf
+        moved = jnp.moveaxis(new_leaf, ax, 0)
+        old_moved = jnp.moveaxis(old_leaf, ax, 0)
+        rows = old_moved[jnp.clip(idx, 0, moved.shape[0] - 1)]
+        moved = moved.at[idx].set(rows, mode="drop")
+        return jnp.moveaxis(moved, 0, ax)
+    return jax.tree_util.tree_map_with_path(fix, new_cache, old_cache)
+
+
+# ---------------------------------------------------------------------------
+# host-side pool
+# ---------------------------------------------------------------------------
+
+class PagePool:
+    """Host bookkeeping for the global KV-page and state-page pools.
+
+    ``table`` is the (slots, max_pages) int32 page table the jitted step
+    gathers through (``n_pages`` = unmapped); ``state_table`` is (slots,)
+    (``n_state_pages`` = unmapped).  A slot's pages are mapped densely in
+    logical order, so page j covers tokens [j * page_size, (j+1) *
+    page_size).  ``refcount`` > 1 marks prefix-shared pages (COW on
+    write).  ``page_nbytes``/``state_page_nbytes`` are the MEASURED bytes
+    of one page, summed from the actual device arrays by the engine —
+    the number the SOL prediction is audited against.
+    """
+
+    def __init__(self, *, n_pages: int, page_size: int, n_slots: int,
+                 max_pages: int, n_state_pages: int = 0,
+                 page_nbytes: int = 0, state_page_nbytes: int = 0):
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.n_slots = int(n_slots)
+        self.max_pages = int(max_pages)
+        self.n_state_pages = int(n_state_pages)
+        self.page_nbytes = int(page_nbytes)
+        self.state_page_nbytes = int(state_page_nbytes)
+        self.table = np.full((n_slots, max_pages), n_pages, np.int32)
+        self.state_table = np.full((n_slots,), n_state_pages, np.int32)
+        self.refcount = np.zeros(max(n_pages, 1), np.int32)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._state_free: List[int] = list(range(n_state_pages - 1, -1, -1))
+        # per-slot pages reserved at admission but not yet mapped
+        self._reserved = np.zeros(n_slots, np.int64)
+        self.peak_used_bytes = 0
+        self._touch()
+
+    # ---- accounting ---------------------------------------------------
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def state_pages_free(self) -> int:
+        return len(self._state_free)
+
+    @property
+    def pages_shared(self) -> int:
+        """Pages referenced by more than one owner (slot or prefix entry)."""
+        return int(np.count_nonzero(self.refcount > 1))
+
+    def available(self) -> int:
+        """Pages an admission decision may still promise: free minus every
+        outstanding reservation (a mid-flight step can therefore never
+        find the free list empty)."""
+        return len(self._free) - int(self._reserved.sum())
+
+    @property
+    def used_bytes(self) -> int:
+        kv = (self.n_pages - len(self._free)) * self.page_nbytes
+        st = ((self.n_state_pages - len(self._state_free))
+              * self.state_page_nbytes)
+        return int(kv + st)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.n_pages * self.page_nbytes
+                   + self.n_state_pages * self.state_page_nbytes)
+
+    def _touch(self) -> None:
+        self.peak_used_bytes = max(self.peak_used_bytes, self.used_bytes)
+
+    def mapped_count(self, slot: int) -> int:
+        return int(np.count_nonzero(self.table[slot] != self.n_pages))
+
+    # ---- reservations (admission) -------------------------------------
+    def can_admit(self, kv_pages: int, state_pages: int = 0) -> bool:
+        return (self.available() >= kv_pages
+                and len(self._state_free) >= state_pages)
+
+    def reserve_slot(self, slot: int, kv_pages: int) -> None:
+        self._reserved[slot] = max(int(kv_pages), 0)
+
+    # ---- mapping ------------------------------------------------------
+    def ensure_mapped(self, slot: int, upto_tokens: int) -> int:
+        """Map pages so the slot covers ``upto_tokens`` tokens; returns how
+        many pages were newly mapped (drawn from the slot's reservation)."""
+        need = -(-int(upto_tokens) // self.page_size)  # ceil
+        if need > self.max_pages:
+            raise ValueError(
+                f"slot {slot}: {upto_tokens} tokens exceed "
+                f"{self.max_pages} pages of {self.page_size}")
+        mapped = self.mapped_count(slot)
+        added = 0
+        for j in range(mapped, need):
+            if not self._free:
+                raise RuntimeError(
+                    "page pool exhausted mid-step: reservation accounting "
+                    "is broken (admission must gate on available())")
+            page = self._free.pop()
+            self.table[slot, j] = page
+            self.refcount[page] = 1
+            added += 1
+        if added:
+            self._reserved[slot] = max(0, int(self._reserved[slot]) - added)
+            self._touch()
+        return added
+
+    def _free_page(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] <= 0:
+            self.refcount[page] = 0
+            self._free.append(int(page))
+
+    def unmap_from(self, slot: int, token_pos: int) -> List[int]:
+        """Unmap every page wholly at or past ``token_pos`` (speculative
+        rollback: rejected tokens' pages return to the pool instead of
+        sitting stale in the slot).  The freed count re-credits the slot's
+        reservation so later growth is still guaranteed.  Returns the
+        unmapped page ids."""
+        first = -(-int(token_pos) // self.page_size)  # ceil: keep partials
+        return self._unmap_tail(slot, first)
+
+    def unmap_tail_pages(self, slot: int, keep_pages: int) -> List[int]:
+        """Unmap every page at table index >= ``keep_pages``."""
+        return self._unmap_tail(slot, int(keep_pages))
+
+    def _unmap_tail(self, slot: int, first: int) -> List[int]:
+        freed = []
+        for j in range(first, self.max_pages):
+            page = int(self.table[slot, j])
+            if page == self.n_pages:
+                continue
+            self.table[slot, j] = self.n_pages
+            self._free_page(page)
+            freed.append(page)
+        if freed:
+            self._reserved[slot] = int(self._reserved[slot]) + len(freed)
+        return freed
+
+    def clear_slot(self, slot: int) -> None:
+        """Free a slot: page-table clear + refcount decrement, state page
+        back to its pool, reservation released.  Host-only — no device
+        work and no cache-pytree traversal."""
+        for j in range(self.max_pages):
+            page = int(self.table[slot, j])
+            if page != self.n_pages:
+                self.table[slot, j] = self.n_pages
+                self._free_page(page)
+        sp = int(self.state_table[slot])
+        if sp != self.n_state_pages:
+            self.state_table[slot] = self.n_state_pages
+            self._state_free.append(sp)
+        self._reserved[slot] = 0
+
+    # ---- state pages --------------------------------------------------
+    def alloc_state(self, slot: int) -> int:
+        if not self._state_free:
+            raise RuntimeError("state-page pool exhausted: admission must "
+                               "gate on state_pages_free")
+        page = self._state_free.pop()
+        self.state_table[slot] = page
+        self._touch()
+        return page
+
+    def alloc_entry_state(self) -> Optional[int]:
+        """A state page for a prefix-cache entry; None when the pool has no
+        spare (a cache fill must never starve live work)."""
+        if not self._state_free:
+            return None
+        page = self._state_free.pop()
+        self._touch()
+        return page
+
+    def free_entry_state(self, page: int) -> None:
+        self._state_free.append(int(page))
+
+    # ---- prefix sharing ----------------------------------------------
+    def share_prefix(self, slot: int, n_tokens: int) -> Tuple[int, ...]:
+        """Incref and return the pages covering the slot's first
+        ``n_tokens`` tokens (a prefix-cache put)."""
+        n = -(-int(n_tokens) // self.page_size)
+        pages = []
+        for j in range(n):
+            page = int(self.table[slot, j])
+            if page == self.n_pages:
+                raise ValueError(f"slot {slot}: page {j} unmapped at put")
+            self.refcount[page] += 1
+            pages.append(page)
+        return tuple(pages)
+
+    def release_shared(self, pages: Sequence[int]) -> None:
+        """Drop a prefix entry's references (eviction / dedup)."""
+        for page in pages:
+            self._free_page(int(page))
+
+    def splice(self, slot: int, pages: Sequence[int],
+               n_tokens: int) -> None:
+        """Prefix hit: map the entry's pages into the slot's table (incref
+        — zero copies of any kind).  Fully-covered shared pages release
+        the slot's reservation for them; a partial last page keeps one
+        reserved page as its copy-on-write margin."""
+        for j, page in enumerate(pages):
+            self.table[slot, j] = int(page)
+            self.refcount[int(page)] += 1
+        full = max(0, (len(pages) if int(n_tokens) % self.page_size == 0
+                       else len(pages) - 1))
+        self._reserved[slot] = max(0, int(self._reserved[slot]) - full)
+        self._touch()
+
+    def cow_targets(self, slot: int, start_token: int,
+                    end_token: int) -> List[Tuple[int, int]]:
+        """(table_index, shared_page) pairs the slot is about to write that
+        are refcount-shared — each needs a private copy first."""
+        if end_token <= start_token:
+            return []
+        first = int(start_token) // self.page_size
+        last = (int(end_token) - 1) // self.page_size
+        out = []
+        for j in range(first, min(last + 1, self.max_pages)):
+            page = int(self.table[slot, j])
+            if page != self.n_pages and self.refcount[page] > 1:
+                out.append((j, page))
+        return out
+
+    def remap_cow(self, slot: int, table_index: int) -> Tuple[int, int]:
+        """Allocate a private page for a shared one; returns (dst, src).
+        The caller device-copies src -> dst (``cow_pages``) and the old
+        page keeps its other owners."""
+        if not self._free:
+            raise RuntimeError("page pool exhausted during copy-on-write: "
+                               "admission must reserve a COW margin")
+        src = int(self.table[slot, table_index])
+        dst = self._free.pop()
+        self.refcount[dst] = 1
+        self.table[slot, table_index] = dst
+        self._free_page(src)       # drop this slot's ref; sharers keep it
+        self._reserved[slot] = max(0, int(self._reserved[slot]) - 1)
+        self._touch()
+        return dst, src
+
+    # ---- telemetry ----------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "pages_total": self.n_pages,
+            "pages_free": len(self._free),
+            "pages_shared": self.pages_shared,
+            "state_pages_total": self.n_state_pages,
+            "state_pages_free": len(self._state_free),
+            "pool_used_bytes": self.used_bytes,
+            "pool_total_bytes": self.total_bytes,
+            "pool_peak_used_bytes": self.peak_used_bytes,
+        }

@@ -3,23 +3,35 @@ share a token prefix (system prompts, few-shot preambles).
 
 Semantics
 ---------
-* Entries are keyed by the exact token tuple they cover and stored as a
-  host-side (numpy) snapshot of one slot's cache leaves (KV rows + per-slot
-  position for attention, conv + SSD state for SSM/hybrid).
-* Snapshots are only taken at *chunk-aligned* prompt offsets (the engine
+* Entries are keyed by the exact token tuple they cover.  A DENSE entry
+  stores a host-side (numpy) snapshot of one slot's cache leaves (KV rows
+  + per-slot position for attention, conv + SSD state for SSM/hybrid).
+  A PAGED entry stores no tensor data at all: it holds refcounted page
+  ids into a ``PagePool`` (plus one state page for recurrent families),
+  so a hit is a page-table splice — zero host copies in either direction.
+* Entries are only taken at *chunk-aligned* prompt offsets (the engine
   passes ``block`` = its prefill chunk size).  Combined with resuming in
   the same chunk size, a cache hit replays the exact same chunk partition
   the request would have computed itself, so outputs are bit-identical
   with the cache on or off.
 * ``match`` returns the longest stored key that is a *proper* prefix of the
   prompt (at least one prompt token must remain, so the engine always has a
-  real last-token logit row to sample from).
-* LRU eviction by entry count and total bytes.
+  real last-token logit row to sample from).  Dense and paged entries live
+  in one LRU but never cross-match: ``match(prompt)`` sees dense entries,
+  ``match(prompt, pool=...)`` sees that pool's paged entries (a snapshot
+  cannot be spliced and pages from a dead replica's pool must never hit).
+* LRU eviction by entry count and total bytes; per-entry bytes are
+  memoized at put() time (recomputing a tree-sum per eviction scaled with
+  snapshot size, not entry count).  Evicting a paged entry decrefs its
+  pages back to the pool, which is also available on demand via
+  ``evict_pool_pages`` — admission reclaims refcount-idle prefix pages
+  before it ever rejects work for pool pressure.
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -66,15 +78,43 @@ def _snapshot_bytes(snapshot) -> int:
     return sum(int(np.asarray(x).nbytes) for x in jax.tree.leaves(snapshot))
 
 
+@dataclass
+class _Entry:
+    """One cached prefix: a dense host snapshot OR a set of shared pages.
+
+    ``nbytes`` is memoized here at construction so LRU byte accounting
+    never re-walks the snapshot pytree.
+    """
+    length: int
+    nbytes: int
+    snap: Optional[Dict] = None            # dense entries
+    pool: Optional[object] = None          # paged entries
+    page_ids: Tuple[int, ...] = field(default_factory=tuple)
+    state_page: Optional[int] = None
+
+    @property
+    def paged(self) -> bool:
+        return self.pool is not None
+
+    def release(self) -> None:
+        """Return a paged entry's references to its pool (eviction)."""
+        if self.pool is None:
+            return
+        self.pool.release_shared(self.page_ids)
+        if self.state_page is not None:
+            self.pool.free_entry_state(self.state_page)
+
+
 class PrefixCache:
-    """LRU token-prefix -> slot-state-snapshot store."""
+    """LRU token-prefix -> slot-state store (dense snapshots or shared
+    pool pages)."""
 
     def __init__(self, max_entries: int = 64,
                  max_bytes: Optional[int] = None, block: int = 1):
         self.max_entries = max_entries
         self.max_bytes = max_bytes
         self.block = max(1, block)
-        self._store: "OrderedDict[Tuple[int, ...], Dict]" = OrderedDict()
+        self._store: "OrderedDict[Tuple[int, ...], _Entry]" = OrderedDict()
         self._interest: Dict[Tuple[int, ...], int] = {}
         self._bytes = 0
         self.hits = 0
@@ -82,6 +122,9 @@ class PrefixCache:
         self.insertions = 0
         self.evictions = 0
         self.tokens_reused = 0
+        # device->host snapshot transfers actually performed; the paged
+        # path must keep this at zero (asserted by the paged benchmark)
+        self.host_copies = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -118,31 +161,71 @@ class PrefixCache:
             self._store.move_to_end(key)
             return False
         snap_np = jax.tree.map(np.asarray, jax.device_get(snapshot))
-        self._store[key] = snap_np
-        self._bytes += _snapshot_bytes(snap_np)
+        self.host_copies += 1
+        self._store[key] = _Entry(length=len(key),
+                                  nbytes=_snapshot_bytes(snap_np),
+                                  snap=snap_np)
+        self._bytes += self._store[key].nbytes
         self.insertions += 1
         self._evict()
         return True
 
-    def peek_len(self, prompt) -> int:
+    def put_paged(self, tokens, *, pool, page_ids,
+                  state_page: Optional[int] = None) -> bool:
+        """Store a prefix as refcounted pool pages (no tensor copies).
+
+        The caller has already incref'd ``page_ids`` (``pool.share_prefix``)
+        and device-copied the donor's state into ``state_page`` when the
+        family is recurrent; on dedup or rejection this releases them.
+        """
+        key = tuple(int(t) for t in tokens)
+        entry = _Entry(
+            length=len(key),
+            nbytes=(len(page_ids) * pool.page_nbytes
+                    + (pool.state_page_nbytes if state_page is not None
+                       else 0)),
+            pool=pool, page_ids=tuple(int(p) for p in page_ids),
+            state_page=state_page)
+        if not key or len(key) % self.block != 0 or key in self._store:
+            entry.release()
+            if key in self._store:
+                self._store.move_to_end(key)
+            return False
+        self._store[key] = entry
+        self._bytes += entry.nbytes
+        self.insertions += 1
+        self._evict()
+        return True
+
+    # ------------------------------------------------------------------
+    def _visible(self, entry: _Entry, pool) -> bool:
+        """Dense callers see dense entries; a paged engine sees only its
+        own pool's entries (a restarted replica's dead pool never hits)."""
+        return entry.pool is pool
+
+    def peek_len(self, prompt, pool=None) -> int:
         """Length of the longest stored proper prefix of ``prompt`` without
         touching stats or LRU order (used by prefix-aware admission)."""
         p = tuple(int(t) for t in prompt)
         best = 0
-        for key in self._store:
-            if best < len(key) < len(p) and p[:len(key)] == key:
+        for key, entry in self._store.items():
+            if self._visible(entry, pool) \
+                    and best < len(key) < len(p) and p[:len(key)] == key:
                 best = len(key)
         return best
 
-    def match(self, prompt) -> Tuple[int, Optional[Dict]]:
+    def match(self, prompt, pool=None):
         """Longest stored proper prefix of ``prompt``.
 
-        Returns (n_tokens_matched, snapshot) or (0, None).
+        Dense form (``pool=None``) returns (n_tokens_matched, snapshot) or
+        (0, None); paged form returns (n, entry) where the entry carries
+        ``page_ids``/``state_page`` for the engine to splice.
         """
         p = tuple(int(t) for t in prompt)
         best_key = None
-        for key in self._store:
-            if len(key) < len(p) and len(key) > len(best_key or ()) \
+        for key, entry in self._store.items():
+            if self._visible(entry, pool) \
+                    and len(key) < len(p) and len(key) > len(best_key or ()) \
                     and p[:len(key)] == key:
                 best_key = key
         if best_key is None:
@@ -151,18 +234,65 @@ class PrefixCache:
         self._store.move_to_end(best_key)
         self.hits += 1
         self.tokens_reused += len(best_key)
-        return len(best_key), self._store[best_key]
+        entry = self._store[best_key]
+        return len(best_key), (entry if entry.paged else entry.snap)
+
+    # ------------------------------------------------------------------
+    def reclaimable_pages(self, pool) -> int:
+        """KV pages held ONLY by this pool's prefix entries (refcount 1 =
+        no live slot uses them) — what eviction could hand back before
+        admission has to reject for pool pressure."""
+        pages = set()
+        for entry in self._store.values():
+            if entry.pool is not pool:
+                continue
+            for page in entry.page_ids:
+                if pool.refcount[page] == 1:
+                    pages.add(page)
+        return len(pages)
+
+    def evict_pool_pages(self, pool, need_pages: int,
+                         need_state: int = 0) -> int:
+        """Evict this pool's paged entries (LRU-first) until ``need_pages``
+        KV pages (and ``need_state`` state pages) came free or none are
+        left.  Returns KV pages freed."""
+        before = pool.pages_free
+        before_st = pool.state_pages_free
+        keys = [k for k, e in self._store.items() if e.pool is pool]
+        for key in keys:
+            if (pool.pages_free - before >= need_pages
+                    and pool.state_pages_free - before_st >= need_state):
+                break
+            entry = self._store.pop(key)
+            self._bytes -= entry.nbytes
+            entry.release()
+            self.evictions += 1
+        return pool.pages_free - before
+
+    def drop_pool(self, pool) -> int:
+        """Remove every entry of ``pool`` (replica restart: the new engine
+        gets a new pool, so the old pool's pages can never be spliced)."""
+        keys = [k for k, e in self._store.items() if e.pool is pool]
+        for key in keys:
+            entry = self._store.pop(key)
+            self._bytes -= entry.nbytes
+            entry.release()
+            self.evictions += 1
+        return len(keys)
 
     def _evict(self) -> None:
         while len(self._store) > self.max_entries or (
                 self.max_bytes is not None and self._bytes > self.max_bytes
                 and len(self._store) > 1):
-            _, snap = self._store.popitem(last=False)
-            self._bytes -= _snapshot_bytes(snap)
+            _, entry = self._store.popitem(last=False)
+            self._bytes -= entry.nbytes
+            entry.release()
             self.evictions += 1
 
     def stats(self) -> Dict[str, int]:
+        paged = sum(1 for e in self._store.values() if e.paged)
         return {"entries": len(self._store), "bytes": self._bytes,
                 "hits": self.hits, "misses": self.misses,
                 "insertions": self.insertions, "evictions": self.evictions,
-                "tokens_reused": self.tokens_reused}
+                "tokens_reused": self.tokens_reused,
+                "host_copies": self.host_copies, "paged_entries": paged}

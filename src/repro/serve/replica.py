@@ -92,7 +92,12 @@ class EngineReplica:
             num_slots=view.num_slots,
             queue_depth=self.engine.scheduler.pending(),
             decode_positions=tuple(view.decode_positions),
-            prefill_backlog=view.prefill_backlog)
+            prefill_backlog=view.prefill_backlog,
+            pages_free=view.pages_free,
+            pages_reclaimable=view.pages_reclaimable,
+            pages_total=view.pages_total,
+            page_size=view.page_size,
+            state_pages_free=view.state_pages_free)
 
     def has_work(self) -> bool:
         return self.engine.has_work()
@@ -149,6 +154,13 @@ class EngineReplica:
         the old crash), close the breaker, and rejoin the routing set."""
         if self.injector is not None:
             self.injector.revive(self.replica_id, tick)
+        # a paged engine's prefix entries reference ITS pool; the rebuilt
+        # engine gets a new pool, so the dead pool's entries must leave
+        # the shared cache (dense snapshot entries survive — host numpy
+        # is the warm handoff)
+        pc = self.engine.prefix_cache
+        if pc is not None and getattr(self.engine, "pool", None) is not None:
+            pc.drop_pool(self.engine.pool)
         with get_tracer().span("replica.restart", cat="gateway",
                                replica_id=self.replica_id, tick=tick,
                                generation=self.generation + 1):

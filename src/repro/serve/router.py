@@ -195,6 +195,7 @@ class Router:
         loads = self._loads()
         verdict = self.fleet.verdict(
             loads, prompt_tokens=len(prompt),
+            max_new_tokens=int(max_new_tokens),
             itl_budget_s=get_slo(slo).itl_target_s)
         if not verdict.admit:
             self.counters["rejected_saturated"] += 1

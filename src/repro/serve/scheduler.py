@@ -67,6 +67,14 @@ class EngineView:
     decode_slos: List[str] = field(default_factory=list)
     prefill_backlog: int = 0          # prompt tokens still to ingest
     step: int = 0
+    # block-paged cache pool (all 0 when the engine runs dense): free is
+    # net of outstanding reservations; reclaimable counts prefix-entry
+    # pages no live slot references (evictable before rejecting work)
+    pages_free: int = 0
+    pages_reclaimable: int = 0
+    pages_total: int = 0
+    page_size: int = 0
+    state_pages_free: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +151,51 @@ class SOLCapacityModel:
             kv += 2 * cfg.num_layers * cfg.ssm_heads * cfg.ssm_state \
                 * cfg.ssm_head_dim * 4          # fp32 SSD state
         return float(kv)
+
+    # -- paged-pool HBM pricing --------------------------------------------
+    def kv_page_bytes(self, page_size: int) -> int:
+        """Exact storage bytes of ONE KV page across the attention stack
+        (k + v, ``page_size`` tokens, every kv head, every attention
+        layer) — matches the device arrays bit-for-bit so the predicted
+        pool footprint can be audited against measured bytes.  0 for
+        attention-free families (their pool holds only state pages)."""
+        cfg = self.cfg
+        if not cfg.uses_attention:
+            return 0
+        n_attn = cfg.num_layers
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            n_attn = cfg.num_layers // cfg.shared_attn_every
+        return int(2 * n_attn * page_size * cfg.num_kv_heads
+                   * cfg.resolved_head_dim * self._dtype_bytes)
+
+    def state_page_bytes(self) -> int:
+        """Exact storage bytes of ONE state page: per layer, the conv
+        window over the concatenated (x, B, C) stream in compute dtype
+        plus the fp32 SSD state."""
+        cfg = self.cfg
+        if not cfg.ssm_state:
+            return 0
+        conv = ((cfg.conv_kernel - 1) * (cfg.d_inner + 2 * cfg.ssm_state)
+                * self._dtype_bytes)
+        ssd = cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4
+        return int(cfg.num_layers * (conv + ssd))
+
+    def page_demand(self, context_tokens: int, page_size: int) -> int:
+        """KV pages a context of ``context_tokens`` occupies (0 for
+        attention-free families)."""
+        if not self.kv_page_bytes(page_size):
+            return 0
+        return -(-int(context_tokens) // max(int(page_size), 1))
+
+    def predicted_pool_bytes(self, contexts: List[int],
+                             page_size: int) -> int:
+        """SOL prediction of the pool bytes a set of concurrent contexts
+        pins: page-granular KV plus one state page per context."""
+        kv = sum(self.page_demand(c, page_size) for c in contexts) \
+            * self.kv_page_bytes(page_size)
+        st = (len(contexts) * self.state_page_bytes()
+              if self.cfg.ssm_state else 0)
+        return int(kv + st)
 
     def step_roofline(self, *, decode_positions: List[int],
                       prefill_tokens: int = 0,
@@ -286,18 +339,34 @@ class SOLScheduler(FIFOScheduler):
         budget_s = self._itl_budget(view)
         decode_positions = list(view.decode_positions)
         backlog = view.prefill_backlog
+        # HBM-capacity term: admissions are priced in pool pages as well
+        # as step seconds.  Reclaimable prefix pages count as available
+        # (the engine evicts them before placing), and each admission
+        # debits the running total so one step never over-commits the pool
+        pages_left = view.pages_free + view.pages_reclaimable
+        state_left = view.state_pages_free
         out: List[QueueEntry] = []
         for entry in ordered:
             if len(out) >= view.free_slots:
                 break
             prompt = len(getattr(entry.req, "prompt", ()))
             aged = (view.step - entry.submit_step) >= self.max_defer_steps
+            if view.page_size:
+                max_new = int(getattr(entry.req, "max_new_tokens", 0))
+                kv_need = self.capacity.page_demand(prompt + max_new,
+                                                    view.page_size)
+                st_need = 1 if self.capacity.state_page_bytes() else 0
+                if kv_need > pages_left or st_need > state_left:
+                    continue        # HBM-bound: ageing cannot mint pages
             chunk = min(self.chunk_size, prompt + backlog)
             t = self.capacity.step_seconds(
                 decode_positions=decode_positions, prefill_tokens=chunk)
             if aged or t <= budget_s:
                 out.append(entry)
                 backlog += prompt
+                if view.page_size:
+                    pages_left -= kv_need
+                    state_left -= st_need
         for entry in out:
             self._queue.remove(entry)
         return out

@@ -117,6 +117,13 @@ class ServeTelemetry:
         self.emitted_total = 0
         self.spec_drafted_total = 0
         self.spec_accepted_total = 0
+        # block-paged cache pool gauges (last step's sample, not a sum:
+        # pool occupancy is a level, and the gateway republishes the
+        # current level).  All 0 on a dense engine.
+        self.pool_pages_total = 0
+        self.pool_pages_free = 0
+        self.pool_pages_shared = 0
+        self.pool_used_bytes = 0
 
     # ---- request lifecycle ------------------------------------------------
     def _trace(self, rid: int) -> RequestTrace:
@@ -168,7 +175,9 @@ class ServeTelemetry:
                 num_slots: int, seconds: float,
                 dispatches: int = 0, weight_bytes: int = 0,
                 wire_bytes: int = 0, emitted_tokens: int = 0,
-                spec_drafted: int = 0, spec_accepted: int = 0) -> None:
+                spec_drafted: int = 0, spec_accepted: int = 0,
+                pages_total: int = 0, pages_free: int = 0,
+                pages_shared: int = 0, pool_used_bytes: int = 0) -> None:
         self.steps += 1
         self.num_slots = num_slots
         self.queue_depth_samples.append(queue_depth)
@@ -180,6 +189,10 @@ class ServeTelemetry:
         self.emitted_total += emitted_tokens
         self.spec_drafted_total += spec_drafted
         self.spec_accepted_total += spec_accepted
+        self.pool_pages_total = pages_total
+        self.pool_pages_free = pages_free
+        self.pool_pages_shared = pages_shared
+        self.pool_used_bytes = pool_used_bytes
 
     # ---- summary ----------------------------------------------------------
     def summary(self) -> Dict[str, object]:
@@ -249,6 +262,10 @@ class ServeTelemetry:
                                 if self.prefix_lookups else 0.0),
             "prefix_tokens_reused": sum(t.prefix_tokens_reused
                                         for t in self.traces.values()),
+            "pool_pages_total": self.pool_pages_total,
+            "pool_pages_free": self.pool_pages_free,
+            "pool_pages_shared": self.pool_pages_shared,
+            "pool_used_bytes": self.pool_used_bytes,
         }
 
 
@@ -295,4 +312,16 @@ def fleet_summary(telemetries: List["ServeTelemetry"]) -> Dict[str, object]:
         "itl_s_p95": percentile(itl, 95),
         "prefix_hits": sum(tel.prefix_hits for tel in telemetries),
         "prefix_lookups": sum(tel.prefix_lookups for tel in telemetries),
+        # paged-pool levels summed across replicas (each telemetry keeps
+        # its engine's LAST sample, so the sum is the fleet's current
+        # occupancy, not a history total)
+        "pool_pages_total": sum(tel.pool_pages_total
+                                for tel in telemetries),
+        "pool_pages_free": sum(tel.pool_pages_free for tel in telemetries),
+        "pool_pages_shared": sum(tel.pool_pages_shared
+                                 for tel in telemetries),
+        "hbm_pool_used_bytes": sum(tel.pool_used_bytes
+                                   for tel in telemetries),
+        "prefix_pages_shared": sum(tel.pool_pages_shared
+                                   for tel in telemetries),
     }

@@ -105,4 +105,7 @@ class ShardPlan:
             "dp": self.dp,
             "devices": self.num_devices,
             "fsdp": self.fsdp,
+            # paged pool leaves keep their page axis replicated and shard
+            # only trailing head/state dims over 'model' (rules.cache_spec)
+            "paged_cache": "page axis replicated, heads TP-sharded",
         }

@@ -137,6 +137,18 @@ def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
     leaf_name = path.rsplit("/", 1)[-1]
     if leaf_name == "pos":
         return P(*spec)
+    # block-paged pool leaves (under "pages"/"state_pages"): the page axis
+    # replaces batch and is NOT data-sharded — pages are assigned to slots
+    # dynamically, so any fixed page->shard mapping would put most gathers
+    # cross-shard.  TP still shards the trailing head/state dims, which is
+    # slot-independent and composes with the page table untouched.
+    if {"pages", "state_pages"} & set(path.split("/")):
+        if model_n > 1:
+            for i in range(ndim - 1, max(ndim - 3, 0), -1):
+                if shape[i] % model_n == 0 and shape[i] >= model_n:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
     b_dim: Optional[int] = None
     if leaf_name == "conv":
         b_dim = ndim - 3

@@ -1,0 +1,394 @@
+"""Block-paged KV/SSM cache: pool mechanics (reservations, refcounts,
+COW), prefix sharing by page-table splice, refcount-idle eviction before
+rejection, the bytes-priced ``pool_exhausted`` admission verdict, spec
+rollback page unmapping, and the host-only slot free (a poisoned pool
+must never leak into outputs)."""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core.sol.fleet import (FleetCapacityModel,  # noqa: E402
+                                  ReplicaLoad)
+from repro.models.model import build_model  # noqa: E402
+from repro.serve import (PagePool, PrefixCache, Request,  # noqa: E402
+                         RouterRejected, ServeEngine, SOLCapacityModel,
+                         build_replicated_router, fleet_summary)
+from repro.serve.spec import NGramDrafter  # noqa: E402
+
+ARCH_BY_FAMILY = {
+    "dense": "qwen2-0.5b",
+    "ssm": "mamba2-1.3b",
+    "hybrid": "zamba2-2.7b",
+}
+
+_MODELS = {}
+
+
+def family_model(family):
+    if family not in _MODELS:
+        cfg = get_arch(ARCH_BY_FAMILY[family]).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODELS[family] = (model, params)
+    return _MODELS[family]
+
+
+def make_requests(vocab, n=4, prompt_len=6, max_new=5, seed=0, rid0=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=list(map(int, rng.integers(1, vocab,
+                                                      prompt_len))),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+class _WrongDrafter(NGramDrafter):
+    """Always-wrong proposals: every drafting step is a full rollback."""
+
+    def __init__(self, vocab):
+        super().__init__()
+        self.vocab = vocab
+
+    def propose(self, context, k):
+        last = int(context[-1]) if len(context) else 0
+        return [(last + 1 + i) % self.vocab for i in range(k)]
+
+
+# ---------------------------------------------------------------------------
+# pool mechanics (host-side, no model)
+# ---------------------------------------------------------------------------
+
+class TestPagePool:
+    def _pool(self, **kw):
+        kw.setdefault("n_pages", 8)
+        kw.setdefault("page_size", 4)
+        kw.setdefault("n_slots", 2)
+        kw.setdefault("max_pages", 4)
+        kw.setdefault("page_nbytes", 100)
+        return PagePool(**kw)
+
+    def test_reservation_guards_admission(self):
+        pool = self._pool()
+        assert pool.can_admit(8)
+        pool.reserve_slot(0, 3)
+        # 3 of the 8 free pages are promised: only 5 remain admittable
+        assert pool.available() == 5
+        assert not pool.can_admit(6)
+        # mapping draws DOWN the reservation, not double-counting
+        pool.ensure_mapped(0, 9)         # 3 pages of 4 tokens
+        assert pool.mapped_count(0) == 3
+        assert pool.available() == 5
+        pool.clear_slot(0)
+        assert pool.available() == 8
+
+    def test_mid_step_exhaustion_is_a_loud_error(self):
+        pool = self._pool(n_pages=2)
+        pool.ensure_mapped(0, 8)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.ensure_mapped(1, 4)
+
+    def test_unmap_from_keeps_partial_pages(self):
+        pool = self._pool()
+        pool.reserve_slot(0, 4)
+        pool.ensure_mapped(0, 16)
+        # position 6 is inside page 1: pages 2..3 free, 0..1 stay
+        freed = pool.unmap_from(0, 6)
+        assert len(freed) == 2 and pool.mapped_count(0) == 2
+        # the freed pages re-credit the reservation for later growth
+        assert pool.available() == 8 - 4
+        pool.ensure_mapped(0, 16)
+        assert pool.mapped_count(0) == 4
+
+    def test_share_splice_refcounts_and_cow(self):
+        pool = self._pool()
+        pool.ensure_mapped(0, 6)                  # 2 pages, partial 2nd
+        entry_pages = pool.share_prefix(0, 6)
+        assert [int(pool.refcount[p]) for p in entry_pages] == [2, 2]
+        pool.clear_slot(0)                        # entry keeps them alive
+        assert [int(pool.refcount[p]) for p in entry_pages] == [1, 1]
+        assert pool.pages_free == 6
+
+        # a hit splices the entry's pages into slot 1 (refcount 2 again);
+        # the partial last page keeps one reserved page as COW margin
+        pool.reserve_slot(1, 3)
+        pool.splice(1, entry_pages, 6)
+        assert pool.pages_shared == 2
+        assert int(pool._reserved[1]) == 2        # 1 full page released
+        # writing into the partial shared page triggers exactly one COW
+        targets = pool.cow_targets(1, 6, 8)
+        assert [j for j, _ in targets] == [1]
+        dst, src = pool.remap_cow(1, 1)
+        assert dst != src and int(pool.refcount[src]) == 1
+        assert int(pool.table[1, 1]) == dst
+        # the entry's copy is untouched; no further COW needed
+        assert pool.cow_targets(1, 6, 8) == []
+
+    def test_clear_slot_is_host_only_bookkeeping(self):
+        pool = self._pool(n_state_pages=2, state_page_nbytes=10)
+        pool.ensure_mapped(0, 16)
+        pool.alloc_state(0)
+        assert pool.used_bytes == 4 * 100 + 10
+        pool.clear_slot(0)
+        assert pool.pages_free == 8 and pool.state_pages_free == 2
+        assert pool.used_bytes == 0
+        assert pool.peak_used_bytes == 410
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: splice + COW under a live engine
+# ---------------------------------------------------------------------------
+
+class TestPagedPrefixSharing:
+    def test_splice_cow_and_entry_refcounts(self):
+        """Three requests share a 12-token prefix; page_size 8 makes the
+        entry's 2nd page PARTIAL, so every adopter COWs it on its first
+        append.  The entry's copy must survive every adoption (later hits
+        still bit-identical), with zero host copies throughout."""
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        rng = np.random.default_rng(42)
+        system = list(map(int, rng.integers(1, vocab, 12)))
+        reqs = [Request(rid=i,
+                        prompt=system + list(map(int,
+                                                 rng.integers(1, vocab, 3))),
+                        max_new_tokens=4)
+                for i in range(3)]
+        with_cache = copy.deepcopy(reqs)
+        without = copy.deepcopy(reqs)
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          chunk_size=4, prefix_cache=True, page_size=8)
+        assert eng.paged
+        eng.run(with_cache)
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    chunk_size=4).run(without)
+        assert [r.out_tokens for r in with_cache] == \
+            [r.out_tokens for r in without]
+        pc = eng.prefix_cache
+        assert eng.metrics["prefix_hits"] > 0
+        assert pc.stats()["host_copies"] == 0
+        # slots are all free, so refcounts are exactly the entry
+        # references (nested prefix entries may share underlying pages)
+        pool = eng.pool
+        holders = {}
+        for entry in pc._store.values():
+            assert entry.paged
+            for page in entry.page_ids:
+                holders[page] = holders.get(page, 0) + 1
+        assert holders, "paged entries should have been put"
+        for page in range(pool.n_pages):
+            assert int(pool.refcount[page]) == holders.get(page, 0)
+        assert pc.reclaimable_pages(pool) > 0
+
+    def test_shared_refcount_while_adopter_is_live(self):
+        """Mid-flight, a spliced page is held by the entry AND the slot:
+        refcount 2 -> pages_shared > 0 in the engine's step metrics."""
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        rng = np.random.default_rng(7)
+        system = list(map(int, rng.integers(1, vocab, 16)))
+        reqs = [Request(rid=i,
+                        prompt=system + list(map(int,
+                                                 rng.integers(1, vocab, 2))),
+                        max_new_tokens=8)
+                for i in range(2)]
+        eng = ServeEngine(model, params, max_batch=2, max_len=48,
+                          chunk_size=8, prefix_cache=True, page_size=8)
+        shared_seen = 0
+        for _ in eng.stream(reqs):
+            shared_seen = max(shared_seen, eng.metrics["pages_shared"])
+        assert shared_seen > 0
+
+
+# ---------------------------------------------------------------------------
+# admission: eviction before rejection, priced verdicts
+# ---------------------------------------------------------------------------
+
+class TestPoolAdmission:
+    def test_refcount_idle_prefix_pages_evict_before_rejection(self):
+        """A request whose page demand exceeds the free pool must reclaim
+        refcount-idle prefix pages (evicting entries) instead of being
+        deferred forever."""
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        rng = np.random.default_rng(0)
+        system = list(map(int, rng.integers(1, vocab, 16)))
+        warm = [Request(rid=i,
+                        prompt=system + list(map(int,
+                                                 rng.integers(1, vocab, 2))),
+                        max_new_tokens=2)
+                for i in range(2)]
+        eng = ServeEngine(model, params, max_batch=1, max_len=32,
+                          chunk_size=8, prefix_cache=True, page_size=8,
+                          pool_pages=6)
+        eng.run(warm)
+        pc = eng.prefix_cache
+        assert len(pc) > 0 and pc.reclaimable_pages(eng.pool) > 0
+        free_before = eng.pool.pages_free
+        # worst-case demand: 4 pages + 1 COW margin > the free pool
+        big = Request(rid=9, prompt=list(map(int,
+                                             rng.integers(1, vocab, 26))),
+                      max_new_tokens=6)
+        assert free_before < 5
+        eng.run([big])
+        assert big.done
+        assert pc.evictions > 0, \
+            "admission must evict idle prefix pages before deferring"
+
+    def test_fleet_verdict_prices_pool_exhaustion_in_bytes(self):
+        cfg = get_arch("qwen2-0.5b").reduced()
+        cap = SOLCapacityModel(cfg, efficiency=0.5)
+        fleet = FleetCapacityModel(cap)
+        load = ReplicaLoad(replica_id=0, free_slots=2, num_slots=4,
+                           queue_depth=0, decode_positions=(8, 8),
+                           pages_free=2, pages_reclaimable=0,
+                           pages_total=16, page_size=8,
+                           state_pages_free=0)
+        verdict = fleet.verdict([load], prompt_tokens=20,
+                                max_new_tokens=20)
+        assert not verdict.admit
+        assert verdict.reason == "pool_exhausted"
+        assert verdict.retry_after_s > 0
+        # the deficit is priced in exact page bytes
+        deficit = fleet.pool_deficit_bytes(load, 20, 20)
+        assert deficit == 3 * cap.kv_page_bytes(8)
+        # reclaimable prefix pages count as capacity: same demand admits
+        load2 = dataclasses.replace(load, pages_reclaimable=3)
+        assert fleet.verdict([load2], prompt_tokens=20,
+                             max_new_tokens=20).admit
+        # dense replicas (no pool) never hit the pool term
+        load3 = dataclasses.replace(load, pages_total=0, page_size=0)
+        assert fleet.verdict([load3], prompt_tokens=20,
+                             max_new_tokens=20).admit
+
+    def test_router_rejects_with_priced_retry_after(self):
+        model, params = family_model("dense")
+        router = build_replicated_router(
+            model, params, replicas=1, max_batch=4, max_len=64,
+            chunk_size=8, prefix_cache=False, page_size=8, pool_pages=4)
+        big = list(range(1, 21))
+        with pytest.raises(RouterRejected) as exc:
+            router.submit(big, max_new_tokens=20)
+        assert exc.value.reason == "pool_exhausted"
+        assert exc.value.retry_after_s > 0
+        # a request that fits the 4-page pool is admitted normally
+        ticket = router.submit(big[:8], max_new_tokens=4)
+        router.run_until_complete([ticket], max_ticks=10000)
+        assert ticket.status == "done"
+
+
+# ---------------------------------------------------------------------------
+# speculative rollback returns pages
+# ---------------------------------------------------------------------------
+
+class TestSpecRollbackUnmapsPages:
+    @pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+    def test_all_rejected_unmaps_and_stays_bitwise(self, family):
+        model, params = family_model(family)
+        vocab = model.cfg.vocab_size
+        a = make_requests(vocab, n=2, prompt_len=8, max_new=10, seed=3)
+        b = copy.deepcopy(a)
+        eng_s = ServeEngine(model, params, max_batch=2, max_len=48,
+                            spec_decode="ngram:4",
+                            drafter=_WrongDrafter(vocab), page_size=8)
+        assert eng_s.paged
+        eng_s.run(a)
+        ServeEngine(model, params, max_batch=2, max_len=48,
+                    spec_decode="off").run(b)
+        assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+        assert eng_s.metrics["spec_rollbacks"] > 0
+        # every page and state page came back: nothing leaked across the
+        # draft/reject cycles or the final slot release
+        pool = eng_s.pool
+        assert pool.pages_free == pool.n_pages
+        assert pool.state_pages_free == pool.n_state_pages
+        assert pool.available() == pool.n_pages
+
+
+# ---------------------------------------------------------------------------
+# host-only free: a poisoned pool must never reach outputs
+# ---------------------------------------------------------------------------
+
+class TestPoisonedPool:
+    @pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+    def test_freed_page_garbage_never_leaks(self, family):
+        """Freeing a slot is page-table bookkeeping only — the page
+        CONTENT is left stale.  Overwrite every pool page with large
+        finite garbage between waves; wave 2 must still be bit-identical
+        to a fresh engine (validity masks + alloc-time state zeroing are
+        what correctness rests on, never zeroed-on-free memory)."""
+        model, params = family_model(family)
+        vocab = model.cfg.vocab_size
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          chunk_size=4, page_size=8)
+        assert eng.paged
+        eng.run(make_requests(vocab, seed=1))
+
+        def poison(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if name == "pos":
+                return leaf
+            return jnp.full_like(leaf, 1e9)
+
+        eng.cache = jax.tree_util.tree_map_with_path(poison, eng.cache)
+        wave = make_requests(vocab, seed=2, rid0=10)
+        fresh = copy.deepcopy(wave)
+        eng.run(wave)
+        ServeEngine(model, params, max_batch=2, max_len=32,
+                    chunk_size=4, page_size=8).run(fresh)
+        assert [r.out_tokens for r in wave] == \
+            [r.out_tokens for r in fresh]
+
+
+# ---------------------------------------------------------------------------
+# telemetry, gates, escape hatch
+# ---------------------------------------------------------------------------
+
+class TestPagedPlumbing:
+    def test_pool_gauges_flow_to_metrics_and_fleet_summary(self):
+        model, params = family_model("dense")
+        vocab = model.cfg.vocab_size
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          page_size=8)
+        eng.run(make_requests(vocab, n=2))
+        assert eng.metrics["pages_total"] == eng.pool.n_pages
+        summ = eng.telemetry.summary()
+        assert summ["pool_pages_total"] == eng.pool.n_pages
+        assert summ["pool_pages_free"] == eng.pool.pages_free
+        fleet = fleet_summary([eng.telemetry])
+        assert fleet["pool_pages_total"] == eng.pool.n_pages
+        assert "hbm_pool_used_bytes" in fleet
+        assert "prefix_pages_shared" in fleet
+
+    def test_escape_hatch_and_structural_gates(self, monkeypatch):
+        model, params = family_model("dense")
+        monkeypatch.setenv("REPRO_PAGED", "off")
+        eng = ServeEngine(model, params, max_batch=2, max_len=32,
+                          page_size=8)
+        assert not eng.paged and eng.pool is None
+        monkeypatch.delenv("REPRO_PAGED")
+        # a wrapping sliding window keeps the dense ring cache
+        cfg = dataclasses.replace(get_arch("qwen2-0.5b").reduced(),
+                                  sliding_window=8)
+        wmodel = build_model(cfg)
+        wparams = wmodel.init(jax.random.PRNGKey(0))
+        weng = ServeEngine(wmodel, wparams, max_batch=2, max_len=32,
+                           page_size=8)
+        assert not weng.paged
+
+    def test_cfg_page_size_enables_paging(self):
+        cfg = dataclasses.replace(get_arch("qwen2-0.5b").reduced(),
+                                  page_size=8)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, max_batch=2, max_len=32)
+        assert eng.paged and eng.page_size == 8
+        # an explicit 0 forces dense past the config
+        assert not ServeEngine(model, params, max_batch=2, max_len=32,
+                               page_size=0).paged
